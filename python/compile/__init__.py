@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX/Pallas model + AOT lowering to HLO text.
+
+Nothing in this package is imported at runtime — the rust coordinator only
+consumes the HLO artifacts this package emits (`make artifacts`).
+"""

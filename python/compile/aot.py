@@ -1,0 +1,125 @@
+"""AOT pipeline: lower the L2 model (with L1 Pallas kernels inside) to HLO
+text artifacts consumed by the rust runtime.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out ../artifacts
+Emits:  <out>/<name>.hlo.txt per artifact + <out>/manifest.tsv
+
+The manifest is the contract with rust (`runtime::manifest`): one line per
+artifact, tab-separated `kind  name  file  key=value ...`.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+# The "synthesized bitstreams": fixed-capacity variants. win_m is the default
+# hot-path variant; win_s keeps tests fast; win_l exercises capacity
+# selection. Paper values (K0=4096, URAM depth 12,288) are scaled down for
+# CPU-interpret artifact size; the cycle model uses the paper values.
+WINDOW_VARIANTS = [
+    model.Variant("win_s", nnz_cap=256, k0=128, m_tile=128, n0=8),
+    model.Variant("win_m", nnz_cap=2048, k0=512, m_tile=512, n0=8),
+    model.Variant("win_l", nnz_cap=8192, k0=1024, m_tile=1024, n0=8),
+]
+
+FUSED_NWIN = 8
+DENSE_TILE = (128, 128, 8)  # (M_T, K_T, N_T)
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowered -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(fn, specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def build_all(out_dir: str) -> list[str]:
+    """Lower every artifact, write HLO text + manifest. Returns manifest lines."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+
+    def emit(kind, name, fn, specs, **params):
+        fname = f"{name}.hlo.txt"
+        text = lower_artifact(fn, specs)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        kv = "\t".join(f"{k}={v}" for k, v in sorted(params.items()))
+        manifest.append(f"{kind}\t{name}\t{fname}\t{kv}")
+        print(f"  [aot] {kind:12s} {name:12s} -> {fname} ({len(text)} chars)")
+
+    for v in WINDOW_VARIANTS:
+        emit(
+            "spmm_window",
+            v.name,
+            model.make_window_fn(v),
+            model.window_specs(v),
+            nnz_cap=v.nnz_cap,
+            k0=v.k0,
+            m_tile=v.m_tile,
+            n0=v.n0,
+        )
+        emit(
+            "comp_c",
+            f"comp_{v.name}",
+            model.make_comp_fn(v),
+            model.comp_specs(v),
+            m_tile=v.m_tile,
+            n0=v.n0,
+        )
+
+    # Fused tile artifact on the default variant (hot path: 1 PJRT call/tile).
+    vm = WINDOW_VARIANTS[1]
+    emit(
+        "spmm_fused",
+        f"fused_{vm.name}",
+        model.make_fused_fn(vm, FUSED_NWIN),
+        model.fused_specs(vm, FUSED_NWIN),
+        nnz_cap=vm.nnz_cap,
+        k0=vm.k0,
+        m_tile=vm.m_tile,
+        n0=vm.n0,
+        nwin=FUSED_NWIN,
+    )
+
+    m_t, k_t, n_t = DENSE_TILE
+    emit(
+        "dense_tile",
+        "dense_128",
+        model.make_dense_fn(m_t, k_t, n_t),
+        model.dense_specs(m_t, k_t, n_t),
+        m_t=m_t,
+        k_t=k_t,
+        n_t=n_t,
+    )
+
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifact dir")
+    args = parser.parse_args()
+    lines = build_all(args.out)
+    print(f"[aot] wrote {len(lines)} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp reference oracles."""
+
+from .comp_c import comp_c
+from .dense_tile import dense_tile
+from .spmm_window import spmm_window
+
+__all__ = ["comp_c", "dense_tile", "spmm_window"]

@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: the Comp-C stage, C_out = alpha * C_AB + beta * C_in.
+
+Paper §3.1.1: "A Comp C module performs the element-wise computation of
+C_out = C_alphaAB + beta * C_in". The paper processes it with a parallel
+factor of F_C x N0 = 16 x 8 = 128 lanes; here the whole tile is one VPU
+vector op, and the F_C factor enters the cycle model (perfmodel), not the
+numerics.
+
+alpha and beta are passed as (1,1) arrays so ONE compiled artifact serves
+every (alpha, beta) pair — the HFlex contract (scalars are runtime inputs,
+never compile-time constants).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _comp_c_kernel(c_ab_ref, c_in_ref, alpha_ref, beta_ref, o_ref):
+    alpha = alpha_ref[0, 0]
+    beta = beta_ref[0, 0]
+    o_ref[...] = alpha * c_ab_ref[...] + beta * c_in_ref[...]
+
+
+@jax.jit
+def comp_c(c_ab, c_in, alpha, beta):
+    """Element-wise combine.
+
+    Args:
+      c_ab: float32[M_TILE, N0] accumulated A@B tile.
+      c_in: float32[M_TILE, N0] streamed-in original C tile.
+      alpha, beta: float32[1, 1] runtime scalars.
+
+    Returns:
+      float32[M_TILE, N0] output tile.
+    """
+    return pl.pallas_call(
+        _comp_c_kernel,
+        out_shape=jax.ShapeDtypeStruct(c_ab.shape, jnp.float32),
+        interpret=True,
+    )(c_ab, c_in, alpha, beta)

@@ -1,0 +1,40 @@
+"""L1 Pallas kernel: dense tile matmul — the MXU-path baseline.
+
+Two roles:
+  1. the "decompose into fixed-size dense kernels" baseline the paper argues
+     against in §2.4 (the 4096x4096 AutoSA-style kernel with 0.15 ms launch
+     overhead per tile) — our perfmodel uses its cycle count;
+  2. the MXU half of the hardware-adaptation story: dense tiles DO map to
+     the systolic array, so this kernel is written MXU-style
+     (jnp.dot with preferred_element_type) while spmm_window uses VPU lanes.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dense_tile_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@jax.jit
+def dense_tile(a_tile, b_tile):
+    """o = a_tile @ b_tile for fixed-shape dense tiles.
+
+    Args:
+      a_tile: float32[M_T, K_T]
+      b_tile: float32[K_T, N_T]
+
+    Returns:
+      float32[M_T, N_T]
+    """
+    m_t, _ = a_tile.shape
+    _, n_t = b_tile.shape
+    return pl.pallas_call(
+        _dense_tile_kernel,
+        out_shape=jax.ShapeDtypeStruct((m_t, n_t), jnp.float32),
+        interpret=True,
+    )(a_tile, b_tile)

@@ -1,0 +1,52 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth every Pallas kernel (and, transitively, every HLO
+artifact executed from rust) is validated against. They use only dense jnp
+ops / scatter-adds, no Pallas, so a bug cannot be shared between kernel and
+oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_spmm_window(rows, cols, vals, b_win, c_acc):
+    """Accumulate one scheduled-nonzero window into the C tile.
+
+    Mirrors the Sextans PE inner loop (paper Eq. 5): for each non-zero
+    a[r, c] = v, do  C[r, 0:N0] += v * B[c, 0:N0].
+
+    Padding contract: padded slots carry val == 0.0 (row/col arbitrary but
+    in-range), so they contribute exactly 0.
+
+    Args:
+      rows: int32[NNZ]   compressed row indices into the C tile.
+      cols: int32[NNZ]   compressed column indices into the B window.
+      vals: float32[NNZ] non-zero values (0.0 for padding).
+      b_win: float32[K0, N0] dense B window.
+      c_acc: float32[M_TILE, N0] accumulator (C scratchpad analogue).
+
+    Returns:
+      float32[M_TILE, N0] updated accumulator.
+    """
+    contrib = vals[:, None] * b_win[cols]
+    return c_acc.at[rows].add(contrib)
+
+
+def ref_comp_c(c_ab, c_in, alpha, beta):
+    """The Comp-C stage: C_out = alpha * C_AB + beta * C_in (element-wise)."""
+    return alpha * c_ab + beta * c_in
+
+
+def ref_dense_tile(a_tile, b_tile):
+    """Dense tile matmul (MXU analogue) used by the dense baseline path."""
+    return jnp.dot(a_tile, b_tile, preferred_element_type=jnp.float32)
+
+
+def ref_spmm_full(rows, cols, vals, m, b, c, alpha, beta):
+    """Full SpMM oracle: C = alpha * A @ B + beta * C with COO A.
+
+    Used by pytest to validate window-decomposed execution end-to-end.
+    """
+    ab = jnp.zeros((m, b.shape[1]), dtype=jnp.float32)
+    ab = ab.at[rows].add(vals[:, None] * b[cols])
+    return alpha * ab + beta * c

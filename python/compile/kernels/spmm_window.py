@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: the Sextans PE inner loop over one scheduled window.
+
+One grid step consumes the whole scheduled non-zero list of a window
+(NNZ_CAP slots, zero-padded) and updates the C-tile scratchpad:
+
+    for t in 0..NNZ_CAP:                  # one non-zero per "cycle" (II=1)
+        r, c, v = rows[t], cols[t], vals[t]
+        C[r, 0:N0] += v * B[c, 0:N0]      # N0 lanes = the paper's 8 PUs
+
+Hardware adaptation (paper §FPGA -> TPU, see DESIGN.md §Hardware-Adaptation):
+  * the B window lives in VMEM (BRAM analogue) — `pallas_call` copies it
+    HBM->VMEM once per window, which *is* the paper's "stream a B window,
+    then compute" schedule (paper §3.5 (1));
+  * the C tile is an output-stationary VMEM accumulator (URAM analogue);
+  * the N0-wide vector update uses VPU lanes in place of the 8 PUs;
+  * the MXU is deliberately NOT used here: scheduled gather/scatter SpMM is
+    not a systolic fit (it is used in dense_tile.py instead).
+
+The kernel is sequential over non-zeros by construction — exactly like the
+paper's II=1 pipeline, where inter-nonzero parallelism exists only across
+PEs (grid/batch dimension handled by the rust coordinator). The out-of-order
+schedule produced by `sextans::sched` guarantees that consecutive slots never
+target the same row within the RAW distance D, which is what makes the
+sequential loop legal to pipeline on real hardware.
+
+MUST be lowered with interpret=True: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmm_window_kernel(rows_ref, cols_ref, vals_ref, b_ref, c_ref, o_ref):
+    """Pallas kernel body. o_ref aliases the updated C tile."""
+    # Load the incoming accumulator once (URAM preload).
+    o_ref[...] = c_ref[...]
+
+    nnz_cap = rows_ref.shape[0]
+    n0 = b_ref.shape[1]
+
+    def body(t, _):
+        r = rows_ref[t]
+        c = cols_ref[t]
+        v = vals_ref[t]
+        # Gather N0 B elements (step 2 in paper Fig. 4): one BRAM read,
+        # broadcast to the N0 PUs.
+        b_row = pl.load(b_ref, (pl.dslice(c, 1), pl.dslice(0, n0)))
+        # Read-modify-write the C scratchpad row (steps 3-6 in Fig. 4).
+        c_row = pl.load(o_ref, (pl.dslice(r, 1), pl.dslice(0, n0)))
+        pl.store(o_ref, (pl.dslice(r, 1), pl.dslice(0, n0)), c_row + v * b_row)
+        return 0
+
+    jax.lax.fori_loop(0, nnz_cap, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("m_tile",))
+def spmm_window(rows, cols, vals, b_win, c_acc, *, m_tile=None):
+    """Run one scheduled window through the PE datapath.
+
+    Args:
+      rows: int32[NNZ_CAP] compressed row indices (padding: val == 0).
+      cols: int32[NNZ_CAP] compressed col indices into the B window.
+      vals: float32[NNZ_CAP] values.
+      b_win: float32[K0, N0] dense B window (VMEM/BRAM analogue).
+      c_acc: float32[M_TILE, N0] C scratchpad tile.
+      m_tile: unused static hint (shapes carry all information).
+
+    Returns:
+      float32[M_TILE, N0] updated C tile.
+    """
+    del m_tile
+    return pl.pallas_call(
+        _spmm_window_kernel,
+        out_shape=jax.ShapeDtypeStruct(c_acc.shape, jnp.float32),
+        interpret=True,
+    )(rows, cols, vals, b_win, c_acc)

@@ -1,0 +1,170 @@
+"""L2: the window-level SpMM compute graph in JAX, composing the L1 kernels.
+
+The Sextans dataflow (paper Eq. 1-4) decomposes C = alpha*A@B + beta*C into
+(i, j, p) windows. The rust coordinator (L3) owns the outer i/j/p loops,
+scheduling, and streaming; this module owns the per-tile compute graph:
+
+  * `make_window_fn`  — one (p, j) window: scheduled non-zeros x B window
+                        accumulated into the C-tile scratchpad (L1 kernel).
+  * `make_comp_fn`    — the Comp-C combine C_out = alpha*C_AB + beta*C_in.
+  * `make_fused_fn`   — one (i, p) C tile end-to-end: lax.scan over NWIN
+                        K-windows calling the L1 kernel, then Comp-C. This
+                        is the artifact the hot path prefers (one PJRT call
+                        per C tile instead of K/K0 + 1 calls).
+  * `make_dense_fn`   — dense tile matmul (MXU path / fixed-size-kernel
+                        baseline of paper §2.4).
+
+Every function here is shape-monomorphic per `Variant` — the AOT analogue of
+a synthesized bitstream. HFlex holds because the *contents* (non-zeros, Q,
+alpha, beta) are runtime inputs.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.comp_c import _comp_c_kernel
+from .kernels.spmm_window import _spmm_window_kernel
+from .kernels.dense_tile import _dense_tile_kernel
+from jax.experimental import pallas as pl
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """A fixed-capacity hardware variant (one AOT artifact family).
+
+    Attributes:
+      name: short id used in artifact filenames and the rust variant cache.
+      nnz_cap: scheduled-slot capacity per window (padded with val=0.0).
+      k0: B window depth (paper: 4096; scaled for CPU-interpret artifacts).
+      m_tile: C scratchpad rows per PE tile (paper URAM depth: 12,288).
+      n0: PU lane count (paper: 8).
+    """
+
+    name: str
+    nnz_cap: int
+    k0: int
+    m_tile: int
+    n0: int
+
+
+def _window_call(variant, rows, cols, vals, b_win, c_acc):
+    return pl.pallas_call(
+        _spmm_window_kernel,
+        out_shape=jax.ShapeDtypeStruct((variant.m_tile, variant.n0), jnp.float32),
+        interpret=True,
+    )(rows, cols, vals, b_win, c_acc)
+
+
+def _comp_call(c_ab, c_in, alpha, beta):
+    return pl.pallas_call(
+        _comp_c_kernel,
+        out_shape=jax.ShapeDtypeStruct(c_ab.shape, jnp.float32),
+        interpret=True,
+    )(c_ab, c_in, alpha, beta)
+
+
+def make_window_fn(variant):
+    """One scheduled window through the PE datapath. Returns a 1-tuple."""
+
+    def fn(rows, cols, vals, b_win, c_acc):
+        return (_window_call(variant, rows, cols, vals, b_win, c_acc),)
+
+    return fn
+
+
+def make_comp_fn(variant):
+    """Comp-C combine for one tile. Returns a 1-tuple."""
+    del variant
+
+    def fn(c_ab, c_in, alpha, beta):
+        return (_comp_call(c_ab, c_in, alpha, beta),)
+
+    return fn
+
+
+def make_fused_fn(variant, nwin):
+    """One (i, p) C tile: scan over `nwin` K-windows + Comp-C.
+
+    The scan carry is the C scratchpad — output-stationary, exactly the
+    paper's URAM accumulator that persists across the j loop (Eq. 3).
+    Surplus windows must be padded with val=0.0 slots (harmless adds),
+    mirroring how the real accelerator idles PEs on short windows.
+    """
+
+    def fn(rows, cols, vals, b_wins, c_in, alpha, beta):
+        # rows/cols: i32[nwin, nnz_cap]; vals: f32[nwin, nnz_cap]
+        # b_wins: f32[nwin, k0, n0]; c_in: f32[m_tile, n0]
+        c0 = jnp.zeros((variant.m_tile, variant.n0), dtype=jnp.float32)
+
+        def step(c_acc, xs):
+            r, c, v, b = xs
+            return _window_call(variant, r, c, v, b, c_acc), None
+
+        c_ab, _ = jax.lax.scan(step, c0, (rows, cols, vals, b_wins), length=nwin)
+        return (_comp_call(c_ab, c_in, alpha, beta),)
+
+    return fn
+
+
+def make_dense_fn(m_t, k_t, n_t):
+    """Dense tile matmul (MXU path). Returns a 1-tuple."""
+
+    def fn(a_tile, b_tile):
+        return (
+            pl.pallas_call(
+                _dense_tile_kernel,
+                out_shape=jax.ShapeDtypeStruct(
+                    (a_tile.shape[0], b_tile.shape[1]), jnp.float32
+                ),
+                interpret=True,
+            )(a_tile, b_tile),
+        )
+
+    return fn
+
+
+def window_specs(variant):
+    """ShapeDtypeStructs for make_window_fn inputs."""
+    i32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    f32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.float32)
+    return (
+        i32((variant.nnz_cap,)),
+        i32((variant.nnz_cap,)),
+        f32((variant.nnz_cap,)),
+        f32((variant.k0, variant.n0)),
+        f32((variant.m_tile, variant.n0)),
+    )
+
+
+def comp_specs(variant):
+    """ShapeDtypeStructs for make_comp_fn inputs."""
+    f32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.float32)
+    return (
+        f32((variant.m_tile, variant.n0)),
+        f32((variant.m_tile, variant.n0)),
+        f32((1, 1)),
+        f32((1, 1)),
+    )
+
+
+def fused_specs(variant, nwin):
+    """ShapeDtypeStructs for make_fused_fn inputs."""
+    i32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    f32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.float32)
+    return (
+        i32((nwin, variant.nnz_cap)),
+        i32((nwin, variant.nnz_cap)),
+        f32((nwin, variant.nnz_cap)),
+        f32((nwin, variant.k0, variant.n0)),
+        f32((variant.m_tile, variant.n0)),
+        f32((1, 1)),
+        f32((1, 1)),
+    )
+
+
+def dense_specs(m_t, k_t, n_t):
+    f32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.float32)
+    return (f32((m_t, k_t)), f32((k_t, n_t)))

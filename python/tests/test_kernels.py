@@ -1,0 +1,212 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE numeric signal for the whole stack: the rust runtime
+executes exactly these kernels (AOT-lowered), so allclose here + HLO
+round-trip integration tests on the rust side = end-to-end correctness.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import comp_c, dense_tile, spmm_window
+from compile.kernels.ref import (
+    ref_comp_c,
+    ref_dense_tile,
+    ref_spmm_window,
+)
+
+RNG = np.random.default_rng(1234)
+
+
+def random_window(nnz, k0, m, n0, pad_from=None, seed=0):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, m, nnz).astype(np.int32)
+    cols = rng.integers(0, k0, nnz).astype(np.int32)
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    if pad_from is not None:
+        vals[pad_from:] = 0.0
+    b = rng.standard_normal((k0, n0)).astype(np.float32)
+    c = rng.standard_normal((m, n0)).astype(np.float32)
+    return (
+        jnp.array(rows),
+        jnp.array(cols),
+        jnp.array(vals),
+        jnp.array(b),
+        jnp.array(c),
+    )
+
+
+def assert_window_matches(rows, cols, vals, b, c, rtol=1e-4, atol=1e-4):
+    out = spmm_window(rows, cols, vals, b, c)
+    ref = ref_spmm_window(rows, cols, vals, b, c)
+    np.testing.assert_allclose(out, ref, rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------- spmm_window
+
+
+@pytest.mark.parametrize(
+    "nnz,k0,m,n0",
+    [
+        (1, 1, 1, 8),
+        (16, 8, 4, 8),
+        (64, 32, 16, 8),
+        (256, 128, 128, 8),
+        (100, 64, 32, 4),
+        (32, 16, 8, 16),
+    ],
+)
+def test_window_matches_ref(nnz, k0, m, n0):
+    assert_window_matches(*random_window(nnz, k0, m, n0, seed=nnz))
+
+
+def test_window_all_padding():
+    rows, cols, vals, b, c = random_window(32, 16, 8, 8, pad_from=0, seed=7)
+    out = spmm_window(rows, cols, vals, b, c)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(c))
+
+
+def test_window_padding_invariance():
+    """Appending zero-valued slots never changes the result."""
+    rows, cols, vals, b, c = random_window(48, 32, 16, 8, seed=11)
+    base = spmm_window(rows, cols, vals, b, c)
+    pad = 16
+    rows_p = jnp.concatenate([rows, jnp.zeros(pad, jnp.int32)])
+    cols_p = jnp.concatenate([cols, jnp.zeros(pad, jnp.int32)])
+    vals_p = jnp.concatenate([vals, jnp.zeros(pad, jnp.float32)])
+    padded = spmm_window(rows_p, cols_p, vals_p, b, c)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(padded))
+
+
+def test_window_raw_conflict_same_row():
+    """Every non-zero hits the SAME C row — the worst RAW case the paper's
+    OoO scheduler exists to handle. Numerics must still be exact-ish."""
+    nnz, k0, m, n0 = 64, 32, 8, 8
+    rng = np.random.default_rng(3)
+    rows = jnp.full((nnz,), 5, jnp.int32)
+    cols = jnp.array(rng.integers(0, k0, nnz), dtype=jnp.int32)
+    vals = jnp.array(rng.standard_normal(nnz), dtype=jnp.float32)
+    b = jnp.array(rng.standard_normal((k0, n0)), dtype=jnp.float32)
+    c = jnp.zeros((m, n0), jnp.float32)
+    out = spmm_window(rows, cols, vals, b, c)
+    # Sequential accumulation: row 5 = sum of val_t * B[col_t].
+    expect = np.zeros((m, n0), np.float32)
+    for t in range(nnz):
+        expect[5] += float(vals[t]) * np.asarray(b[int(cols[t])])
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-4, atol=1e-5)
+
+
+def test_window_permutation_invariance_allclose():
+    """Out-of-order scheduling permutes the non-zero stream; results must
+    agree up to FP reassociation."""
+    rows, cols, vals, b, c = random_window(96, 32, 16, 8, seed=13)
+    perm = np.random.default_rng(5).permutation(96)
+    base = spmm_window(rows, cols, vals, b, c)
+    shuf = spmm_window(rows[perm], cols[perm], vals[perm], b, c)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(shuf), rtol=1e-4, atol=1e-4)
+
+
+def test_window_accumulates_into_nonzero_c():
+    rows, cols, vals, b, c = random_window(32, 16, 8, 8, seed=17)
+    out = spmm_window(rows, cols, vals, b, c)
+    out_zero = spmm_window(rows, cols, vals, b, jnp.zeros_like(c))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(out_zero) + np.asarray(c), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nnz=st.integers(1, 128),
+    k0=st.integers(1, 64),
+    m=st.integers(1, 64),
+    n0=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_window_hypothesis(nnz, k0, m, n0, seed):
+    assert_window_matches(*random_window(nnz, k0, m, n0, seed=seed))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), dup_row=st.integers(0, 7))
+def test_window_hypothesis_heavy_duplicates(seed, dup_row):
+    """Skewed row distribution (power-law-ish worst case)."""
+    nnz, k0, m, n0 = 64, 16, 8, 8
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, m, nnz).astype(np.int32)
+    rows[rng.random(nnz) < 0.7] = dup_row
+    cols = rng.integers(0, k0, nnz).astype(np.int32)
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    b = rng.standard_normal((k0, n0)).astype(np.float32)
+    c = rng.standard_normal((m, n0)).astype(np.float32)
+    assert_window_matches(
+        jnp.array(rows), jnp.array(cols), jnp.array(vals), jnp.array(b), jnp.array(c)
+    )
+
+
+# --------------------------------------------------------------------- comp_c
+
+
+@pytest.mark.parametrize(
+    "alpha,beta",
+    [(1.0, 0.0), (0.0, 1.0), (2.5, -0.5), (0.0, 0.0), (-1.0, 3.0)],
+)
+def test_comp_c_matches_ref(alpha, beta):
+    rng = np.random.default_rng(21)
+    c_ab = jnp.array(rng.standard_normal((32, 8)), dtype=jnp.float32)
+    c_in = jnp.array(rng.standard_normal((32, 8)), dtype=jnp.float32)
+    out = comp_c(c_ab, c_in, jnp.full((1, 1), alpha), jnp.full((1, 1), beta))
+    np.testing.assert_allclose(
+        np.asarray(out), ref_comp_c(np.asarray(c_ab), np.asarray(c_in), alpha, beta),
+        rtol=1e-5, atol=1e-7,  # XLA may contract a*x+b*y into FMAs
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 128),
+    n0=st.sampled_from([1, 4, 8]),
+    alpha=st.floats(-1e3, 1e3, width=32),
+    beta=st.floats(-1e3, 1e3, width=32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_comp_c_hypothesis(m, n0, alpha, beta, seed):
+    rng = np.random.default_rng(seed)
+    c_ab = jnp.array(rng.standard_normal((m, n0)), dtype=jnp.float32)
+    c_in = jnp.array(rng.standard_normal((m, n0)), dtype=jnp.float32)
+    out = comp_c(c_ab, c_in, jnp.full((1, 1), alpha), jnp.full((1, 1), beta))
+    ref = ref_comp_c(np.asarray(c_ab), np.asarray(c_in), np.float32(alpha), np.float32(beta))
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5, atol=1e-3)
+
+
+# ----------------------------------------------------------------- dense_tile
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (8, 16, 8), (64, 128, 8), (128, 128, 8)])
+def test_dense_tile_matches_ref(m, k, n):
+    rng = np.random.default_rng(m * 1000 + k)
+    a = jnp.array(rng.standard_normal((m, k)), dtype=jnp.float32)
+    b = jnp.array(rng.standard_normal((k, n)), dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(dense_tile(a, b)), np.asarray(ref_dense_tile(a, b)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_tile_hypothesis(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.array(rng.standard_normal((m, k)), dtype=jnp.float32)
+    b = jnp.array(rng.standard_normal((k, n)), dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(dense_tile(a, b)), np.asarray(ref_dense_tile(a, b)),
+        rtol=1e-3, atol=1e-3,
+    )

@@ -1,0 +1,133 @@
+"""L2 model tests: the fused tile graph vs the full-SpMM oracle.
+
+Builds the same window decomposition the rust coordinator performs (partition
+B rows into K0 windows, compress indices, pad to NNZ_CAP) in numpy, runs the
+fused scan artifact function, and checks against ref_spmm_full.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import ref_spmm_full
+
+V = model.Variant("test", nnz_cap=64, k0=16, m_tile=32, n0=8)
+NWIN = 4  # K = NWIN * k0
+
+
+def decompose(rows, cols, vals, variant, nwin):
+    """Window decomposition mirroring sextans::sched::partition (rust)."""
+    w_rows = np.zeros((nwin, variant.nnz_cap), np.int32)
+    w_cols = np.zeros((nwin, variant.nnz_cap), np.int32)
+    w_vals = np.zeros((nwin, variant.nnz_cap), np.float32)
+    fill = [0] * nwin
+    for r, c, v in zip(rows, cols, vals):
+        j = c // variant.k0
+        t = fill[j]
+        assert t < variant.nnz_cap, "window overflow in test data"
+        w_rows[j, t] = r
+        w_cols[j, t] = c % variant.k0  # compressed column index
+        w_vals[j, t] = v
+        fill[j] += 1
+    return w_rows, w_cols, w_vals
+
+
+def run_fused(rows, cols, vals, b, c_in, alpha, beta):
+    w_rows, w_cols, w_vals = decompose(rows, cols, vals, V, NWIN)
+    b_wins = b.reshape(NWIN, V.k0, V.n0)
+    fn = model.make_fused_fn(V, NWIN)
+    (out,) = jax.jit(fn)(
+        jnp.array(w_rows),
+        jnp.array(w_cols),
+        jnp.array(w_vals),
+        jnp.array(b_wins),
+        jnp.array(c_in),
+        jnp.full((1, 1), alpha, jnp.float32),
+        jnp.full((1, 1), beta, jnp.float32),
+    )
+    return np.asarray(out)
+
+
+def random_problem(nnz, seed):
+    rng = np.random.default_rng(seed)
+    k = NWIN * V.k0
+    rows = rng.integers(0, V.m_tile, nnz).astype(np.int32)
+    cols = rng.integers(0, k, nnz).astype(np.int32)
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    b = rng.standard_normal((k, V.n0)).astype(np.float32)
+    c = rng.standard_normal((V.m_tile, V.n0)).astype(np.float32)
+    return rows, cols, vals, b, c
+
+
+@pytest.mark.parametrize("nnz,alpha,beta", [(50, 1.0, 0.0), (120, 2.0, -1.5), (8, 0.5, 1.0)])
+def test_fused_matches_full_oracle(nnz, alpha, beta):
+    rows, cols, vals, b, c = random_problem(nnz, seed=nnz)
+    got = run_fused(rows, cols, vals, b, c, alpha, beta)
+    ref = ref_spmm_full(
+        jnp.array(rows), jnp.array(cols), jnp.array(vals), V.m_tile,
+        jnp.array(b), jnp.array(c), alpha, beta,
+    )
+    np.testing.assert_allclose(got, np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_fused_equals_sequential_windows():
+    """The scan composition must equal window-by-window calls + comp_c."""
+    rows, cols, vals, b, c = random_problem(80, seed=99)
+    w_rows, w_cols, w_vals = decompose(rows, cols, vals, V, NWIN)
+    b_wins = b.reshape(NWIN, V.k0, V.n0)
+
+    win_fn = jax.jit(model.make_window_fn(V))
+    comp_fn = jax.jit(model.make_comp_fn(V))
+    acc = jnp.zeros((V.m_tile, V.n0), jnp.float32)
+    for j in range(NWIN):
+        (acc,) = win_fn(
+            jnp.array(w_rows[j]), jnp.array(w_cols[j]), jnp.array(w_vals[j]),
+            jnp.array(b_wins[j]), acc,
+        )
+    (seq,) = comp_fn(
+        acc, jnp.array(c), jnp.full((1, 1), 2.0, jnp.float32),
+        jnp.full((1, 1), 0.5, jnp.float32),
+    )
+    fused = run_fused(rows, cols, vals, b, c, 2.0, 0.5)
+    np.testing.assert_allclose(fused, np.asarray(seq), rtol=1e-5, atol=1e-5)
+
+
+def test_empty_problem_is_beta_c():
+    rows, cols, vals, b, c = random_problem(1, seed=5)
+    vals[:] = 0.0
+    got = run_fused(rows, cols, vals, b, c, 3.0, 0.25)
+    np.testing.assert_allclose(got, 0.25 * c, rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(nnz=st.integers(1, 200), seed=st.integers(0, 2**31 - 1),
+       alpha=st.floats(-4, 4, width=32), beta=st.floats(-4, 4, width=32))
+def test_fused_hypothesis(nnz, seed, alpha, beta):
+    from hypothesis import assume
+
+    rows, cols, vals, b, c = random_problem(nnz, seed=seed)
+    # Skip draws where one window would exceed the variant's slot capacity
+    # (the rust coordinator chunks in that case; the test kernel does not).
+    counts = np.bincount(cols // V.k0, minlength=NWIN)
+    assume(int(counts.max()) <= V.nnz_cap)
+    got = run_fused(rows, cols, vals, b, c, alpha, beta)
+    ref = ref_spmm_full(
+        jnp.array(rows), jnp.array(cols), jnp.array(vals), V.m_tile,
+        jnp.array(b), jnp.array(c), np.float32(alpha), np.float32(beta),
+    )
+    np.testing.assert_allclose(got, np.asarray(ref), rtol=1e-3, atol=1e-3)
+
+
+def test_specs_match_variant_shapes():
+    specs = model.window_specs(V)
+    assert specs[0].shape == (V.nnz_cap,)
+    assert specs[3].shape == (V.k0, V.n0)
+    assert specs[4].shape == (V.m_tile, V.n0)
+    fspecs = model.fused_specs(V, NWIN)
+    assert fspecs[0].shape == (NWIN, V.nnz_cap)
+    assert fspecs[3].shape == (NWIN, V.k0, V.n0)
+    cspecs = model.comp_specs(V)
+    assert cspecs[2].shape == (1, 1)

@@ -1,0 +1,51 @@
+//! Table 1 bench: wall-clock of generating the breakdown (preprocessing in
+//! all three schedule modes on crystm03 + the four simulator configs), and
+//! the report itself for inspection.
+
+use std::time::Duration;
+
+use sextans::arch::AcceleratorConfig;
+use sextans::bench_util::{bench, black_box, section};
+use sextans::report::experiments;
+use sextans::sched::preprocess::{preprocess_mode, ScheduleMode};
+use sextans::sparse::catalog;
+
+fn main() {
+    let coo = catalog::crystm03_like().build();
+    let cfg = AcceleratorConfig::sextans_u280();
+    println!(
+        "crystm03-like: {}x{}, nnz {}",
+        coo.m,
+        coo.k,
+        coo.nnz()
+    );
+
+    section("preprocessing per schedule mode");
+    for (label, mode) in [
+        ("ooo", ScheduleMode::OutOfOrder),
+        ("inorder-colmajor", ScheduleMode::InOrderColMajor),
+        ("inorder-rowmajor", ScheduleMode::InOrderRowMajor),
+    ] {
+        bench(
+            &format!("preprocess/crystm03/{label}"),
+            1,
+            3,
+            Duration::from_millis(500),
+            || {
+                black_box(preprocess_mode(
+                    black_box(&coo),
+                    cfg.p(),
+                    cfg.k0,
+                    cfg.d,
+                    mode,
+                ));
+            },
+        );
+    }
+
+    section("table 1 end-to-end");
+    bench("experiments::table1", 0, 2, Duration::from_millis(100), || {
+        black_box(experiments::table1());
+    });
+    println!("\n{}", experiments::table1());
+}

@@ -1,0 +1,79 @@
+//! PJRT runtime benchmarks: artifact compile time, per-kernel dispatch
+//! latency, and the full windowed SpMM through XLA executables.
+//!
+//! Skips (exit 0 with a notice) if `artifacts/` is missing — run
+//! `make artifacts` first.
+
+use std::time::{Duration, Instant};
+
+use sextans::bench_util::{bench, black_box, section};
+use sextans::runtime::{manifest, Engine};
+use sextans::sparse::{gen, rng::Rng};
+
+fn main() {
+    if !manifest::default_dir().join("manifest.tsv").exists() {
+        println!("bench_runtime: artifacts/ missing — run `make artifacts`; skipping");
+        return;
+    }
+
+    section("engine load + compile (all artifacts)");
+    let t0 = Instant::now();
+    let engine = Engine::load_default().expect("engine load");
+    println!(
+        "engine::load (compile {} window variants + comp/fused/dense): {:.2} s",
+        engine.variants().len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    let mut rng = Rng::new(0x9A);
+    let variants = engine.variants();
+    let v = variants[0]; // smallest (win_s)
+
+    section("single-kernel dispatch");
+    let rows: Vec<i32> = (0..v.nnz_cap).map(|_| rng.index(v.m_tile) as i32).collect();
+    let cols: Vec<i32> = (0..v.nnz_cap).map(|_| rng.index(v.k0) as i32).collect();
+    let vals: Vec<f32> = (0..v.nnz_cap).map(|_| rng.normal()).collect();
+    let b: Vec<f32> = (0..v.k0 * v.n0).map(|_| rng.normal()).collect();
+    let c: Vec<f32> = vec![0.0; v.m_tile * v.n0];
+    let r = bench(
+        &format!("run_window/{}nnz k0={}", v.nnz_cap, v.k0),
+        2,
+        8,
+        Duration::from_millis(500),
+        || {
+            black_box(engine.run_window(v, &rows, &cols, &vals, &b, &c).unwrap());
+        },
+    );
+    println!(
+        "    -> {:.2} Mnnz/s through the XLA interpret pipeline",
+        r.throughput(v.nnz_cap as f64) / 1e6
+    );
+
+    bench("run_comp/m_tile", 2, 8, Duration::from_millis(300), || {
+        black_box(
+            engine
+                .run_comp(v.m_tile, v.n0, &c, &c, 2.0, 0.5)
+                .unwrap(),
+        );
+    });
+
+    section("full SpMM via Engine::spmm");
+    let coo = gen::random_uniform(512, 1024, 0.02, &mut rng);
+    let (pv, image) = engine.plan(&coo, 8, 10).expect("plan");
+    let n = 16;
+    let bb: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+    let cc: Vec<f32> = vec![0.0; coo.m * n];
+    let r = bench(
+        &format!("spmm/512x1024 nnz={} N={n} (variant k0={})", coo.nnz(), pv.k0),
+        0,
+        3,
+        Duration::from_millis(100),
+        || {
+            black_box(engine.spmm(pv, &image, &bb, &cc, n, 1.0, 0.0).unwrap());
+        },
+    );
+    println!(
+        "    -> {:.3} Mnnz/s end-to-end (interpret-mode HLO; the silicon\n       projection for the same image comes from `sextans run`)",
+        r.throughput(coo.nnz() as f64) / 1e6
+    );
+}

@@ -1,0 +1,97 @@
+//! Scheduler benchmarks: preprocessing throughput (nnz/s) across matrix
+//! structures — the host-side cost the paper amortizes offline. Target
+//! (DESIGN.md §6): ≥ 10M nnz/s end-to-end preprocessing.
+
+use std::time::Duration;
+
+use sextans::arch::AcceleratorConfig;
+use sextans::bench_util::{bench, black_box, section};
+use sextans::sched::ooo::{cycles_inorder, schedule_ooo, Scratch};
+use sextans::sched::{partition, preprocess};
+use sextans::sparse::{gen, rng::Rng};
+
+fn main() {
+    let cfg = AcceleratorConfig::sextans_u280();
+    let mut rng = Rng::new(0xBE7C);
+
+    section("ooo scheduler core (single window list)");
+    for (label, rows, nnz) in [
+        ("uniform 4k rows, 64k nnz", 4096usize, 65_536usize),
+        ("hot 256 rows, 64k nnz", 256, 65_536),
+        ("tiny 16 rows, 4k nnz", 16, 4096),
+    ] {
+        let bin: Vec<_> = (0..nnz)
+            .map(|i| sextans::sched::Nz {
+                row: rng.index(rows) as u32,
+                col: (i % 4096) as u16,
+                val: 1.0,
+            })
+            .collect();
+        let mut scratch = Scratch::default();
+        let r = bench(
+            &format!("schedule_ooo/{label}"),
+            2,
+            8,
+            Duration::from_millis(400),
+            || {
+                black_box(schedule_ooo(black_box(&bin), cfg.d, rows, &mut scratch));
+            },
+        );
+        println!("    -> {:.2} Mnnz/s", r.throughput(nnz as f64) / 1e6);
+        bench(
+            &format!("cycles_inorder/{label}"),
+            2,
+            8,
+            Duration::from_millis(200),
+            || {
+                black_box(cycles_inorder(black_box(&bin), cfg.d, rows));
+            },
+        );
+    }
+
+    section("partition (Eq. 2-4)");
+    let coo = gen::random_uniform(65_536, 65_536, 0.001, &mut rng);
+    let nnz = coo.nnz();
+    let r = bench(
+        "partition/64k x 64k, 4.3M nnz",
+        1,
+        4,
+        Duration::from_millis(500),
+        || {
+            black_box(partition(black_box(&coo), cfg.p(), cfg.k0));
+        },
+    );
+    println!("    -> {:.2} Mnnz/s", r.throughput(nnz as f64) / 1e6);
+
+    section("end-to-end preprocessing (partition + schedule + encode + Q)");
+    for (label, m, density) in [
+        ("8k^2 uniform 0.01", 8192usize, 0.01f64),
+        ("64k^2 uniform 0.001", 65_536, 0.001),
+    ] {
+        let coo = gen::random_uniform(m, m, density, &mut rng);
+        let nnz = coo.nnz();
+        let r = bench(
+            &format!("preprocess/{label} ({nnz} nnz)"),
+            1,
+            4,
+            Duration::from_millis(800),
+            || {
+                black_box(preprocess(black_box(&coo), cfg.p(), cfg.k0, cfg.d));
+            },
+        );
+        println!("    -> {:.2} Mnnz/s", r.throughput(nnz as f64) / 1e6);
+    }
+
+    let coo = gen::rmat(32_768, 1 << 18, 0.45, 0.2, 0.2, &mut rng);
+    let nnz = coo.nnz();
+    let r = bench(
+        &format!("preprocess/rmat 32k ({nnz} nnz)"),
+        1,
+        4,
+        Duration::from_millis(800),
+        || {
+            black_box(preprocess(black_box(&coo), cfg.p(), cfg.k0, cfg.d));
+        },
+    );
+    println!("    -> {:.2} Mnnz/s", r.throughput(nnz as f64) / 1e6);
+}

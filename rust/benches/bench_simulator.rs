@@ -1,0 +1,62 @@
+//! Simulator benchmarks: cycle-model evaluation and functional-execution
+//! throughput. The cycle model must be fast enough that the 1,400-SpMM
+//! sweep is dominated by preprocessing, not simulation.
+
+use std::time::Duration;
+
+use sextans::arch::{functional, simulate, AcceleratorConfig};
+use sextans::bench_util::{bench, black_box, section};
+use sextans::sched::preprocess;
+use sextans::sparse::{gen, rng::Rng};
+
+fn main() {
+    let cfg = AcceleratorConfig::sextans_u280();
+    let mut rng = Rng::new(0x51A1);
+
+    section("cycle-level simulate()");
+    for (label, m, density, n) in [
+        ("8k^2 1%, N=8", 8192usize, 0.01f64, 8usize),
+        ("8k^2 1%, N=512", 8192, 0.01, 512),
+        ("64k^2 0.1%, N=64", 65_536, 0.001, 64),
+    ] {
+        let coo = gen::random_uniform(m, m, density, &mut rng);
+        let sm = preprocess(&coo, cfg.p(), cfg.k0, cfg.d);
+        bench(
+            &format!("simulate/{label}"),
+            2,
+            16,
+            Duration::from_millis(300),
+            || {
+                black_box(simulate(black_box(&sm), &cfg, n));
+            },
+        );
+    }
+
+    section("functional execute() (exact FP32 datapath)");
+    for (label, m, density, n) in [
+        ("2k^2 1%, N=8", 2048usize, 0.01f64, 8usize),
+        ("8k^2 0.5%, N=8", 8192, 0.005, 8),
+        ("8k^2 0.5%, N=64", 8192, 0.005, 64),
+    ] {
+        let coo = gen::random_uniform(m, m, density, &mut rng);
+        let sm = preprocess(&coo, cfg.p(), cfg.k0, cfg.d);
+        let b: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let mut c = vec![0f32; m * n];
+        let nnz = coo.nnz();
+        let r = bench(
+            &format!("functional/{label} ({nnz} nnz)"),
+            1,
+            8,
+            Duration::from_millis(400),
+            || {
+                functional::execute(black_box(&sm), black_box(&b), &mut c, n, 1.0, 0.0);
+                black_box(&c);
+            },
+        );
+        println!(
+            "    -> {:.2} Mnnz/s, {:.2} GFLOP/s host-functional",
+            r.throughput(nnz as f64) / 1e6,
+            r.throughput((2 * nnz * n) as f64) / 1e9
+        );
+    }
+}

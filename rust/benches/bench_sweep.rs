@@ -1,0 +1,49 @@
+//! Sweep bench: wall-clock of the per-figure pipeline on a catalog slice,
+//! plus the headline geomeans it produces (Fig. 7-10 content check).
+
+use std::time::Duration;
+
+use sextans::bench_util::{bench, black_box, section};
+use sextans::report::experiments;
+use sextans::report::{run_sweep, SweepOptions};
+use sextans::sparse::catalog::Scale;
+
+fn main() {
+    section("sweep slices");
+    for (label, max) in [("20 matrices", 20usize), ("60 matrices", 60)] {
+        bench(
+            &format!("run_sweep/{label} x 7 N x 4 platforms"),
+            0,
+            2,
+            Duration::from_millis(100),
+            || {
+                black_box(run_sweep(&SweepOptions {
+                    scale: Scale::Ci,
+                    max_matrices: Some(max),
+                    ..Default::default()
+                }));
+            },
+        );
+    }
+
+    section("figure transforms");
+    // Stride 3 samples all six families (a plain prefix would be
+    // SNAP-only and skew the headline geomeans printed below).
+    let points = run_sweep(&SweepOptions {
+        scale: Scale::Ci,
+        stride: 3,
+        ..Default::default()
+    });
+    bench("fig7+headline", 1, 4, Duration::from_millis(200), || {
+        black_box(experiments::fig7(black_box(&points)));
+    });
+    bench("fig8 (peak+cdf)", 1, 4, Duration::from_millis(200), || {
+        black_box(experiments::fig8(black_box(&points)));
+    });
+    bench("fig9+fig10", 1, 4, Duration::from_millis(200), || {
+        black_box(experiments::fig9(black_box(&points)));
+        black_box(experiments::fig10(black_box(&points)));
+    });
+
+    println!("\n{}", experiments::headline(&points));
+}

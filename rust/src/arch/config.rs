@@ -1,0 +1,197 @@
+//! Accelerator configuration — the "synthesis-time" constants of §3.1/§3.2
+//! and Table 3. An [`AcceleratorConfig`] is immutable once built: the HFlex
+//! contract (§3.4) is that *problems* change, configurations do not.
+
+/// HBM channel assignment (paper §3.1.1): "1 HBM channel to pointers Q,
+/// 4 channels to matrix B, 8 to matrix A, 8 to C_in, and 8 to C_out."
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HbmAssignment {
+    /// Channels carrying the Q pointer stream.
+    pub q: usize,
+    /// Channels streaming B windows.
+    pub b: usize,
+    /// Channels streaming scheduled A slots.
+    pub a: usize,
+    /// Channels streaming C_in.
+    pub c_in: usize,
+    /// Channels streaming C_out.
+    pub c_out: usize,
+}
+
+impl HbmAssignment {
+    /// Total channels consumed (U280 exposes 32 pseudo-channels; the paper
+    /// uses 29 — M-AXI limits, §4.2.3).
+    pub fn total(&self) -> usize {
+        self.q + self.b + self.a + self.c_in + self.c_out
+    }
+}
+
+/// Full accelerator configuration. Defaults mirror the U280 prototype.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AcceleratorConfig {
+    /// Human-readable platform name (Table 3 row).
+    pub name: &'static str,
+    /// Processing-engine groups (paper: 8).
+    pub pegs: usize,
+    /// PEs per group (paper: 8) — total P = pegs * pes_per_peg.
+    pub pes_per_peg: usize,
+    /// PUs per PE = dense lanes shared per non-zero (paper N0 = 8).
+    pub n0: usize,
+    /// B window size K0 (paper: 4096).
+    pub k0: usize,
+    /// C scratchpad depth per PE (paper: 12,288 URAM entries).
+    pub c_depth: usize,
+    /// RAW dependency distance D of the FP accumulator (paper: "7 to 10
+    /// cycles depending on specific FPGAs"; U280 float add ≈ 10).
+    pub d: usize,
+    /// Pipeline depth for one A element ("the latency for processing one A
+    /// element is 15 cycles on a Xilinx U280", §3.5(3)).
+    pub pipeline_depth: usize,
+    /// BRAM partition factor for the B buffer (paper F_B = 4; dual-ported,
+    /// so 2*F_B elements land per cycle, Eq. 7).
+    pub f_b: usize,
+    /// Comp-C parallel factor (paper F_C = 16, Eq. 9).
+    pub f_c: usize,
+    /// Inter-PE FIFO depth (paper §3.5(4): 8).
+    pub fifo_depth: usize,
+    /// Clock frequency in MHz (Sextans: 189; Sextans-P: 350).
+    pub freq_mhz: f64,
+    /// Total HBM bandwidth in GB/s (U280: 460; Sextans-P: 900).
+    pub hbm_gbps: f64,
+    /// Channel assignment.
+    pub channels: HbmAssignment,
+    /// Total pseudo-channels on the board (bandwidth per channel =
+    /// hbm_gbps / board_channels).
+    pub board_channels: usize,
+    /// Fixed per-invocation setup cycles (C-scratchpad arming, control;
+    /// amortized on large problems, visible below ~1e6 FLOP — §4.2.1).
+    pub setup_cycles: u64,
+    /// Board power in watts (Table 3; measured via xbutil for U280).
+    pub power_w: f64,
+}
+
+impl AcceleratorConfig {
+    /// The U280 FPGA prototype (Table 3 row "SEXTANS").
+    pub fn sextans_u280() -> Self {
+        AcceleratorConfig {
+            name: "Sextans",
+            pegs: 8,
+            pes_per_peg: 8,
+            n0: 8,
+            k0: 4096,
+            c_depth: 12_288,
+            d: 10,
+            pipeline_depth: 15,
+            f_b: 4,
+            f_c: 16,
+            fifo_depth: 8,
+            freq_mhz: 189.0,
+            hbm_gbps: 460.0,
+            channels: HbmAssignment { q: 1, b: 4, a: 8, c_in: 8, c_out: 8 },
+            board_channels: 32,
+            setup_cycles: 4_000,
+            power_w: 52.0,
+        }
+    }
+
+    /// The projected prototype (Table 3 row "SEXTANS-P"): V100-class
+    /// bandwidth (900 GB/s) and AutoBridge-class frequency (350 MHz).
+    pub fn sextans_p() -> Self {
+        AcceleratorConfig {
+            name: "Sextans-P",
+            freq_mhz: 350.0,
+            hbm_gbps: 900.0,
+            power_w: 96.0, // P = C·V²·f scaling of the measured 52 W (§4.1)
+            ..Self::sextans_u280()
+        }
+    }
+
+    /// Total PE count P.
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.pegs * self.pes_per_peg
+    }
+
+    /// Bytes per cycle delivered by one HBM pseudo-channel.
+    pub fn channel_bytes_per_cycle(&self) -> f64 {
+        let per_channel_gbps = self.hbm_gbps / self.board_channels as f64;
+        per_channel_gbps * 1e9 / (self.freq_mhz * 1e6)
+    }
+
+    /// Cycles to stream `bytes` over `nch` channels (bandwidth-bound).
+    pub fn stream_cycles(&self, bytes: u64, nch: usize) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        let rate = self.channel_bytes_per_cycle() * nch as f64;
+        (bytes as f64 / rate).ceil() as u64
+    }
+
+    /// Seconds for a cycle count at this clock.
+    pub fn seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.freq_mhz * 1e6)
+    }
+
+    /// Datapath roof in GFLOP/s: P PEs × N0 PUs × 2 FLOP per cycle.
+    /// U280: 64·8·2·189 MHz = 193.5; Table 3's *achieved* peak of 181.1
+    /// (93.6% of roof) sits just under it — the gap is Comp-C tail,
+    /// fill/drain and B-stream exposure on the best-case matrix.
+    pub fn datapath_roof_gflops(&self) -> f64 {
+        (self.p() * self.n0 * 2) as f64 * self.freq_mhz / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u280_matches_paper_constants() {
+        let c = AcceleratorConfig::sextans_u280();
+        assert_eq!(c.p(), 64);
+        assert_eq!(c.channels.total(), 29);
+        assert_eq!(c.k0, 4096);
+        assert_eq!(c.c_depth, 12_288);
+        // Table 3's achieved peak (181.1 GFLOP/s) must sit just under the
+        // datapath roof: consistency check on the constants.
+        let roof = c.datapath_roof_gflops();
+        assert!(roof >= 181.1 && 181.1 >= 0.90 * roof, "roof = {roof}");
+    }
+
+    #[test]
+    fn sextans_p_matches_paper_constants() {
+        let c = AcceleratorConfig::sextans_p();
+        assert_eq!(c.freq_mhz, 350.0);
+        assert_eq!(c.hbm_gbps, 900.0);
+        // Table 3: achieved peak 343.6 GFLOP/s under the 350 MHz roof
+        // 64·8·2·350 = 358.4 (95.9%).
+        let roof = c.datapath_roof_gflops();
+        assert!(roof >= 343.6 && 343.6 >= 0.90 * roof, "roof = {roof}");
+    }
+
+    #[test]
+    fn channel_rate_u280() {
+        let c = AcceleratorConfig::sextans_u280();
+        // 460/32 = 14.375 GB/s per channel (paper §2.3) at 189 MHz ≈ 76 B/cyc.
+        let bpc = c.channel_bytes_per_cycle();
+        assert!((bpc - 76.06).abs() < 0.5, "bytes/cycle = {bpc}");
+    }
+
+    #[test]
+    fn stream_cycles_rounds_up() {
+        let c = AcceleratorConfig::sextans_u280();
+        assert_eq!(c.stream_cycles(0, 4), 0);
+        assert!(c.stream_cycles(1, 1) >= 1);
+        let one_kb = c.stream_cycles(1024, 1);
+        let four_ch = c.stream_cycles(1024, 4);
+        assert!(four_ch <= one_kb.div_ceil(4) + 1);
+    }
+
+    #[test]
+    fn config_is_cloneable_and_comparable() {
+        let a = AcceleratorConfig::sextans_u280();
+        let b = a.clone();
+        assert_eq!(a, b);
+        assert_ne!(AcceleratorConfig::sextans_p(), a);
+    }
+}

@@ -1,0 +1,158 @@
+//! Functional simulator: exact FP32 execution of a preprocessed matrix
+//! through the PE datapath order.
+//!
+//! Numerics follow the hardware exactly: each PE consumes its scheduled
+//! slot stream in issue order, bubbles multiply-accumulate 0.0, and the
+//! Comp-C stage applies `C_out = α·C_AB + β·C_in` element-wise. Because FP
+//! addition is non-associative, results differ from a naive row-major CSR
+//! SpMM only by reassociation — the integration tests assert allclose, and
+//! the PJRT path (same slot order) matches this simulator bit-for-bit
+//! modulo XLA's FMA contraction.
+
+use crate::sched::{decode, ScheduledMatrix};
+
+/// Execute `C = alpha * A @ B + beta * C` where A is the scheduled image.
+///
+/// * `b` — dense B, row-major `k x n`.
+/// * `c` — dense C in/out, row-major `m x n`.
+///
+/// Panics on shape mismatch (programming error, not data error).
+pub fn execute(sm: &ScheduledMatrix, b: &[f32], c: &mut [f32], n: usize, alpha: f32, beta: f32) {
+    assert_eq!(b.len(), sm.k * n, "B must be k x n");
+    assert_eq!(c.len(), sm.m * n, "C must be m x n");
+
+    // C_AB accumulator — the union of all PE scratchpads across i-slices.
+    let mut ab = vec![0f32; sm.m * n];
+
+    for (pe, stream) in sm.streams.iter().enumerate() {
+        for j in 0..sm.num_windows {
+            let col_base = j * sm.k0;
+            for &word in &stream.encoded[stream.q.window_range(j)] {
+                let nz = decode(word);
+                if nz.val == 0.0 {
+                    continue; // bubble (or explicit zero: same arithmetic)
+                }
+                let gr = nz.row as usize * sm.p + pe;
+                let gc = col_base + nz.col as usize;
+                debug_assert!(gr < sm.m && gc < sm.k);
+                let brow = &b[gc * n..gc * n + n];
+                let crow = &mut ab[gr * n..gr * n + n];
+                for q in 0..n {
+                    crow[q] += nz.val * brow[q];
+                }
+            }
+        }
+    }
+
+    // Comp-C stage (Eq. 1 third phase).
+    for i in 0..c.len() {
+        c[i] = alpha * ab[i] + beta * c[i];
+    }
+}
+
+/// Convenience: allocate and return C_out (C_in = zeros, beta irrelevant).
+pub fn execute_ab(sm: &ScheduledMatrix, b: &[f32], n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; sm.m * n];
+    execute(sm, b, &mut c, n, 1.0, 0.0);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::sched::preprocess;
+    use crate::sched::preprocess::{preprocess_mode, ScheduleMode};
+    use crate::sparse::{gen, rng::Rng, Coo};
+
+    #[test]
+    fn identity_matrix_passthrough() {
+        let mut rng = Rng::new(1);
+        let eye = gen::diagonal(16, &mut rng);
+        // Replace random diagonal values with 1.0 for a true identity.
+        let eye = Coo::new(16, 16, eye.rows, eye.cols, vec![1.0; 16]).unwrap();
+        let sm = preprocess(&eye, 4, 8, 6);
+        let b: Vec<f32> = (0..16 * 3).map(|i| i as f32).collect();
+        let got = execute_ab(&sm, &b, 3);
+        assert_eq!(got, b);
+    }
+
+    #[test]
+    fn matches_coo_reference_small() {
+        let mut rng = Rng::new(2);
+        let a = gen::random_uniform(24, 40, 0.15, &mut rng);
+        let sm = preprocess(&a, 4, 16, 8);
+        let n = 4;
+        let b: Vec<f32> = (0..40 * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..24 * n).map(|_| rng.normal()).collect();
+        let mut want = c0.clone();
+        a.spmm_reference(&b, &mut want, n, 1.5, -0.25);
+        let mut got = c0;
+        execute(&sm, &b, &mut got, n, 1.5, -0.25);
+        prop::assert_allclose(&got, &want, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn schedule_mode_does_not_change_numerics() {
+        let mut rng = Rng::new(3);
+        let a = gen::power_law_rows(60, 50, 600, 1.2, &mut rng);
+        let n = 8;
+        let b: Vec<f32> = (0..50 * n).map(|_| rng.normal()).collect();
+        let base = execute_ab(&preprocess(&a, 8, 16, 10), &b, n);
+        for mode in [ScheduleMode::InOrderColMajor, ScheduleMode::InOrderRowMajor] {
+            let alt = execute_ab(&preprocess_mode(&a, 8, 16, 10, mode), &b, n);
+            prop::assert_allclose(&base, &alt, 1e-4, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn alpha_beta_composition() {
+        let mut rng = Rng::new(4);
+        let a = gen::random_uniform(10, 10, 0.3, &mut rng);
+        let sm = preprocess(&a, 2, 4, 4);
+        let b: Vec<f32> = (0..10 * 2).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..10 * 2).map(|_| rng.normal()).collect();
+        // alpha=0 kills A@B; beta=1 preserves C.
+        let mut c = c0.clone();
+        execute(&sm, &b, &mut c, 2, 0.0, 1.0);
+        assert_eq!(c, c0);
+        // beta=0 zeroes C_in contribution.
+        let mut c1 = c0.clone();
+        execute(&sm, &b, &mut c1, 2, 1.0, 0.0);
+        let ab = execute_ab(&sm, &b, 2);
+        assert_eq!(c1, ab);
+    }
+
+    #[test]
+    fn functional_matches_reference_property() {
+        prop::check("functional_vs_reference", 0xF0C, 24, |rng| {
+            let m = 1 + rng.index(64);
+            let k = 1 + rng.index(64);
+            let n = 1 + rng.index(10);
+            let a = gen::random_uniform(m, k, 0.05 + rng.f64() * 0.2, rng);
+            let p = 1 + rng.index(8);
+            let k0 = 1 + rng.index(32);
+            let d = 1 + rng.index(12);
+            let sm = preprocess(&a, p, k0, d);
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+            let c0: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+            let alpha = rng.range_f32(-2.0, 2.0);
+            let beta = rng.range_f32(-2.0, 2.0);
+            let mut want = c0.clone();
+            a.spmm_reference(&b, &mut want, n, alpha, beta);
+            let mut got = c0;
+            execute(&sm, &b, &mut got, n, alpha, beta);
+            prop::assert_allclose(&got, &want, 2e-4, 2e-4)
+        });
+    }
+
+    #[test]
+    fn empty_matrix_gives_beta_c() {
+        let a = Coo::empty(4, 4);
+        let sm = preprocess(&a, 2, 2, 4);
+        let b = vec![1.0; 8];
+        let mut c = vec![2.0; 8];
+        execute(&sm, &b, &mut c, 2, 5.0, 0.5);
+        assert_eq!(c, vec![1.0; 8]);
+    }
+}

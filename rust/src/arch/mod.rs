@@ -1,0 +1,11 @@
+//! The accelerator model: configuration (§3.1), functional execution
+//! (§3.2 datapath semantics), cycle-level streaming simulation (§3.5/§4.1),
+//! and the FPGA resource model (§3.6.2 / Table 4).
+
+pub mod config;
+pub mod functional;
+pub mod resources;
+pub mod simulator;
+
+pub use config::AcceleratorConfig;
+pub use simulator::{simulate, simulate_unchecked, SimReport};

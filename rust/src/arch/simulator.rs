@@ -1,0 +1,281 @@
+//! Cycle-level streaming simulator (paper §3.1, §3.5 and the §4.1 in-house
+//! simulator: "we model the computing time and memory accessing time and
+//! record the larger one as the processing time at each stage").
+//!
+//! The accelerator is a pipeline of stages per (i, j) iteration of
+//! Algorithm 1:
+//!
+//! ```text
+//!   Read Ptr ─┐
+//!   Read A  ──┤                      ┌─ Collect C ─ Comp C ─ Write C
+//!   Read B  ──┴─► PEG 0..7 (PEs) ────┘        ▲
+//!               (FIFO chain broadcast)     Read C_in
+//! ```
+//!
+//! Double buffering overlaps window `j+1`'s B stream with window `j`'s PE
+//! region, and the C tail (Collect/Comp/Write + Read C_in) overlaps the next
+//! i-slice's ramp; each group contributes `max(stage times)` — the streaming
+//! model of §4.1 — plus explicit fill/drain terms.
+
+use super::config::AcceleratorConfig;
+use crate::sched::ScheduledMatrix;
+
+/// Where a simulated run spent its cycles (per i-slice, before the N/N0
+/// multiplier).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageBreakdown {
+    /// C scratchpad initialization (Algorithm 1 line 2).
+    pub init_c: u64,
+    /// B window streaming that could NOT be hidden behind PE compute.
+    pub stream_b_exposed: u64,
+    /// PE region (the II=1 pipeline; includes bubbles).
+    pub pe: u64,
+    /// A-stream bandwidth stall (scheduled slots arriving slower than
+    /// 1/cycle/PE — only possible on bandwidth-starved configs).
+    pub a_stall: u64,
+    /// Comp-C + C_in/C_out streaming tail.
+    pub tail: u64,
+    /// Pipeline fill/drain + FIFO-chain skew.
+    pub fill: u64,
+}
+
+impl StageBreakdown {
+    /// Sum of all components.
+    pub fn total(&self) -> u64 {
+        self.init_c + self.stream_b_exposed + self.pe + self.a_stall + self.tail + self.fill
+    }
+}
+
+/// Result of simulating one SpMM on one accelerator config.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// Total cycles including setup.
+    pub cycles: u64,
+    /// Wall-clock seconds at the config's frequency.
+    pub seconds: f64,
+    /// Problem size in FLOP (2·NNZ·N + 3·M·N, §4.2.1).
+    pub flops: u64,
+    /// Achieved throughput in GFLOP/s.
+    pub gflops: f64,
+    /// Off-chip traffic in bytes (A slots + B + C_in + C_out + Q).
+    pub hbm_bytes: u64,
+    /// Per-i-slice stage breakdown (diagnostics / ablations).
+    pub breakdown: StageBreakdown,
+    /// Number of i-slices (N / N0, ceil).
+    pub n_slices: u64,
+}
+
+/// Problem size in FLOP as the paper counts it (§4.2.1): 2 FLOP per
+/// non-zero per B column for A×B, plus `alpha*AB + beta*C` element-wise
+/// (2 mul + 1 add per C element).
+pub fn problem_flops(nnz: usize, m: usize, n: usize) -> u64 {
+    2 * nnz as u64 * n as u64 + 3 * m as u64 * n as u64
+}
+
+/// Simulate one SpMM (`C = αA×B + βC` with B of width `n`) on `cfg`.
+///
+/// The scheduled image must have been preprocessed with `p == cfg.p()` and
+/// `k0 == cfg.k0` (enforced by assert — the HFlex runtime guarantees it).
+pub fn simulate(sm: &ScheduledMatrix, cfg: &AcceleratorConfig, n: usize) -> SimReport {
+    assert_eq!(sm.p, cfg.p(), "image scheduled for wrong PE count");
+    assert_eq!(sm.k0, cfg.k0, "image scheduled for wrong window size");
+    simulate_unchecked(sm, cfg, n)
+}
+
+/// Simulation core without the config-match guard (used by ablations that
+/// deliberately run variant configs, e.g. Table 1's P=1 / N0=1 points).
+pub fn simulate_unchecked(sm: &ScheduledMatrix, cfg: &AcceleratorConfig, n: usize) -> SimReport {
+    let n = n.max(1);
+    let n_slices = n.div_ceil(cfg.n0) as u64;
+    let rows_per_pe = sm.rows_per_pe() as u64;
+    let bpc = cfg.channel_bytes_per_cycle();
+
+    let mut bd = StageBreakdown::default();
+
+    // --- Line 2: C scratchpad init, all PEs parallel, F_B-style write width.
+    bd.init_c = rows_per_pe;
+
+    // --- Window loop (Eq. 3): stream B ‖ PE region, double-buffered.
+    // B window bytes: actual window width × N0 lanes × 4 B, over the B
+    // channel group (the last window of a K not divisible by K0 is short).
+    let window_width = |j: usize| -> u64 {
+        let base = j * sm.k0;
+        sm.k0.min(sm.k.saturating_sub(base)) as u64
+    };
+
+    let mut pe_cycles_total = 0u64;
+    let mut a_stall_total = 0u64;
+    let mut exposed_b_total = 0u64;
+    let mut prev_pe_region = 0u64; // for double-buffer overlap
+    let mut b_bytes_total = 0u64;
+
+    for (j, ws) in sm.window_stats.iter().enumerate() {
+        let b_window_bytes = window_width(j) * (cfg.n0 * 4) as u64;
+        b_bytes_total += b_window_bytes;
+        let t_stream_b_bw = cfg.stream_cycles(b_window_bytes, cfg.channels.b);
+        // On-chip write port bound (Eq. 7): width / (2·F_B).
+        let t_stream_b_port = window_width(j).div_ceil(2 * cfg.f_b as u64);
+        let t_stream_b = t_stream_b_bw.max(t_stream_b_port);
+        // A-stream feed rate: each of the `a` channels feeds P / a PEs at
+        // 8 B/slot; stall only if demand exceeds supply.
+        let pes_per_a_channel = (sm.p as f64 / cfg.channels.a as f64).max(1.0);
+        let demand_bytes_per_cycle = pes_per_a_channel * 8.0;
+        let a_slowdown = (demand_bytes_per_cycle / bpc).max(1.0);
+        let t_pe = (ws.max_cycles as f64 * a_slowdown).ceil() as u64;
+        a_stall_total += t_pe - ws.max_cycles;
+
+        // Double buffering: window j's B stream overlaps window j-1's PE
+        // region (and, across slices, window 0's stream overlaps the
+        // previous slice's tail — its cost appears once, in setup).
+        let exposed = if j == 0 {
+            if n_slices == 1 {
+                t_stream_b
+            } else {
+                0 // prefetched during the previous slice's tail
+            }
+        } else {
+            t_stream_b.saturating_sub(prev_pe_region)
+        };
+        exposed_b_total += exposed;
+        pe_cycles_total += t_pe;
+        prev_pe_region = t_pe;
+    }
+    bd.pe = pe_cycles_total;
+    bd.a_stall = a_stall_total;
+    bd.stream_b_exposed = exposed_b_total;
+
+    // --- Line 13 tail: Comp C (Eq. 9: M / F_C) ‖ C_in read ‖ C_out write.
+    // The Collect/Comp/Write chain is FIFO-coupled to the PEs (§3.5(4),
+    // "HLS schedules some steps of (7) to be processed concurrently"), so
+    // slice i's tail overlaps slice i+1's init/stream/PE ramp; only the
+    // portion exceeding the next slice's core is exposed (plus one full
+    // drain at the very end).
+    let t_comp_c = (sm.m as u64).div_ceil(cfg.f_c as u64);
+    let c_slice_bytes = (sm.m * cfg.n0 * 4) as u64;
+    let t_c_in = cfg.stream_cycles(c_slice_bytes, cfg.channels.c_in);
+    let t_c_out = cfg.stream_cycles(c_slice_bytes, cfg.channels.c_out);
+    let t_tail = t_comp_c.max(t_c_in).max(t_c_out);
+
+    // --- Fill/drain: PE pipeline depth per window + FIFO chain skew across
+    // PEGs (chain-based broadcast, §3.1.1; depth-8 FIFOs tolerate 8 cycles
+    // of skew per hop).
+    let fifo_skew = (cfg.pegs as u64).saturating_sub(1) * cfg.fifo_depth as u64;
+    bd.fill = sm.num_windows as u64 * cfg.pipeline_depth as u64 + fifo_skew;
+
+    let per_slice_core = bd.init_c + bd.stream_b_exposed + bd.pe + bd.a_stall + bd.fill;
+    bd.tail = t_tail.saturating_sub(per_slice_core); // exposed tail per slice
+    let per_slice = bd.total();
+    let cycles = cfg.setup_cycles + per_slice * n_slices + t_tail;
+
+    // --- Off-chip traffic (Fig. 9's numerator is the *algorithmic* bytes;
+    // this is the *actual* streamed bytes including bubbles and repeats).
+    let a_bytes = sm.a_stream_bytes(); // re-streamed every i-slice
+    let q_bytes: u64 = sm
+        .streams
+        .iter()
+        .map(|s| (s.q.entries().len() * 4) as u64)
+        .sum();
+    let b_bytes = b_bytes_total;
+    let c_bytes = 2 * c_slice_bytes;
+    let hbm_bytes = (a_bytes + q_bytes + b_bytes + c_bytes) * n_slices;
+
+    let seconds = cfg.seconds(cycles);
+    let flops = problem_flops(sm.nnz, sm.m, n);
+    SimReport {
+        cycles,
+        seconds,
+        flops,
+        gflops: flops as f64 / seconds / 1e9,
+        hbm_bytes,
+        breakdown: bd,
+        n_slices,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::analytical;
+    use crate::sched::preprocess;
+    use crate::sparse::{gen, rng::Rng};
+
+    fn image(m: usize, k: usize, density: f64, seed: u64) -> ScheduledMatrix {
+        let mut rng = Rng::new(seed);
+        let coo = gen::random_uniform(m, k, density, &mut rng);
+        let cfg = AcceleratorConfig::sextans_u280();
+        preprocess(&coo, cfg.p(), cfg.k0, cfg.d)
+    }
+
+    #[test]
+    fn more_columns_cost_more_slices() {
+        let cfg = AcceleratorConfig::sextans_u280();
+        let sm = image(2048, 2048, 0.01, 1);
+        let r8 = simulate(&sm, &cfg, 8);
+        let r512 = simulate(&sm, &cfg, 512);
+        assert_eq!(r8.n_slices, 1);
+        assert_eq!(r512.n_slices, 64);
+        // Setup cycles amortize, so the ratio lands between ~10x and 64x.
+        assert!(r512.cycles > r8.cycles * 10);
+        assert!(r512.cycles < r8.cycles * 64);
+    }
+
+    #[test]
+    fn throughput_saturates_with_problem_size() {
+        // Paper Fig. 7a: throughput rises with problem size then saturates
+        // below peak.
+        let cfg = AcceleratorConfig::sextans_u280();
+        let small = simulate(&image(256, 256, 0.02, 2), &cfg, 8);
+        let large = simulate(&image(32_768, 32_768, 0.002, 3), &cfg, 512);
+        assert!(large.gflops > 4.0 * small.gflops);
+        assert!(large.gflops < cfg.datapath_roof_gflops());
+    }
+
+    #[test]
+    fn cycles_close_to_analytical_model() {
+        // §3.6.1's closed form should track the simulator within ~2x on
+        // well-balanced uniform matrices (the closed form ignores bubbles,
+        // imbalance, fill and setup).
+        let cfg = AcceleratorConfig::sextans_u280();
+        let sm = image(8192, 8192, 0.004, 4);
+        let sim = simulate(&sm, &cfg, 128);
+        let ana = analytical::cycles(&cfg, sm.m, sm.k, sm.nnz, 128);
+        let ratio = sim.cycles as f64 / ana as f64;
+        assert!((0.8..2.5).contains(&ratio), "sim/analytical = {ratio}");
+    }
+
+    #[test]
+    fn sextans_p_is_faster_than_u280() {
+        let sm = image(8192, 8192, 0.004, 5);
+        let u280 = simulate(&sm, &AcceleratorConfig::sextans_u280(), 128);
+        let p = simulate(&sm, &AcceleratorConfig::sextans_p(), 128);
+        assert!(p.seconds < u280.seconds, "{} !< {}", p.seconds, u280.seconds);
+    }
+
+    #[test]
+    fn breakdown_sums_to_slice_cycles() {
+        let cfg = AcceleratorConfig::sextans_u280();
+        let sm = image(1024, 1024, 0.01, 6);
+        let r = simulate(&sm, &cfg, 64);
+        // cycles = setup + per-slice breakdown × slices + final tail drain.
+        let core = cfg.setup_cycles + r.breakdown.total() * r.n_slices;
+        assert!(r.cycles >= core, "{} < {core}", r.cycles);
+        // Final drain is bounded by one Comp-C pass.
+        let max_tail = (sm.m as u64).div_ceil(cfg.f_c as u64)
+            + cfg.stream_cycles((sm.m * cfg.n0 * 4) as u64, 1);
+        assert!(r.cycles <= core + max_tail, "{} > {core} + {max_tail}", r.cycles);
+    }
+
+    #[test]
+    fn flops_formula() {
+        assert_eq!(problem_flops(100, 10, 8), 2 * 100 * 8 + 3 * 10 * 8);
+    }
+
+    #[test]
+    fn hbm_bytes_scale_with_slices() {
+        let cfg = AcceleratorConfig::sextans_u280();
+        let sm = image(1024, 1024, 0.01, 7);
+        let r1 = simulate(&sm, &cfg, 8);
+        let r4 = simulate(&sm, &cfg, 32);
+        assert_eq!(r4.hbm_bytes, 4 * r1.hbm_bytes);
+    }
+}

@@ -1,0 +1,133 @@
+//! Wall-clock benchmark harness (offline substitute for `criterion`).
+//!
+//! Warmup + timed iterations, reporting median and MAD. Benches are
+//! `[[bench]] harness = false` binaries that call [`bench`] and print
+//! criterion-style lines; `cargo bench` runs them.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's statistics (nanoseconds).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Benchmark id.
+    pub name: String,
+    /// Timed iterations.
+    pub iters: usize,
+    /// Median per-iteration time.
+    pub median_ns: f64,
+    /// Median absolute deviation.
+    pub mad_ns: f64,
+    /// Mean per-iteration time.
+    pub mean_ns: f64,
+}
+
+impl BenchResult {
+    /// items/second for a per-iteration item count.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns / 1e9)
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` with `warmup` untimed then at least `min_iters` timed iterations
+/// (or until `min_time` elapses), and print a summary line.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize, min_time: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed() < min_time {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if samples.len() >= 10_000 {
+            break; // enough statistics for anything
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    let result = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        median_ns: median,
+        mad_ns: mad,
+        mean_ns: mean,
+    };
+    println!(
+        "{:<48} median {:>12}  (±{:>10}, mean {:>12}, {} iters)",
+        result.name,
+        fmt_ns(result.median_ns),
+        fmt_ns(result.mad_ns),
+        fmt_ns(result.mean_ns),
+        result.iters
+    );
+    result
+}
+
+/// Convenience wrapper with crate defaults (3 warmups, 10 iters, 300 ms).
+pub fn bench_default<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, 3, 10, Duration::from_millis(300), f)
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Prevent the optimizer from discarding a value (std::hint wrapper).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let r = bench("noop", 1, 5, Duration::from_millis(1), || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters >= 5);
+        assert!(r.median_ns >= 0.0);
+        assert!(r.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn throughput_computes_items_per_second() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            median_ns: 1e6, // 1 ms
+            mad_ns: 0.0,
+            mean_ns: 1e6,
+        };
+        assert!((r.throughput(1000.0) - 1e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e3).contains("µs"));
+        assert!(fmt_ns(5e6).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

@@ -1,0 +1,111 @@
+//! Minimal CLI argument parser (offline substitute for `clap`).
+//!
+//! Grammar: `sextans <command> [--key value]... [--flag]... [positional]...`
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    /// First non-flag token.
+    pub command: String,
+    /// `--key value` pairs and bare `--flag`s (value `"true"`).
+    pub options: HashMap<String, String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Cli {
+        let mut cli = Cli::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare `--flag`.
+                if let Some((k, v)) = key.split_once('=') {
+                    cli.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    cli.options.insert(key.to_string(), v);
+                } else {
+                    cli.options.insert(key.to_string(), "true".to_string());
+                }
+            } else if cli.command.is_empty() {
+                cli.command = arg;
+            } else {
+                cli.positional.push(arg);
+            }
+        }
+        cli
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Cli {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Boolean flag (present, or `--key true`).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// usize option with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// f32 option with default.
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// u64 option with default.
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_command_and_options() {
+        let c = parse("repro --all --out results table1");
+        assert_eq!(c.command, "repro");
+        assert!(c.flag("all"));
+        assert_eq!(c.get("out"), Some("results"));
+        assert_eq!(c.positional, vec!["table1"]);
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let c = parse("run --n=64 --alpha=1.5");
+        assert_eq!(c.get_usize("n", 0), 64);
+        assert!((c.get_f32("alpha", 0.0) - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = parse("run");
+        assert_eq!(c.get_usize("n", 8), 8);
+        assert!(!c.flag("verbose"));
+    }
+
+    #[test]
+    fn flag_before_value_option() {
+        let c = parse("x --verbose --seed 42");
+        assert!(c.flag("verbose"));
+        assert_eq!(c.get_u64("seed", 0), 42);
+    }
+}

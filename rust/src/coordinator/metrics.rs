@@ -1,0 +1,136 @@
+//! Serving metrics: per-request latency recording and summary statistics.
+
+use std::time::Duration;
+
+/// One served request's timing.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestTiming {
+    /// Time from submit to dispatch (queue + batching delay).
+    pub queue: Duration,
+    /// Executor time.
+    pub exec: Duration,
+    /// Problem size in FLOP.
+    pub flops: u64,
+}
+
+impl RequestTiming {
+    /// End-to-end latency.
+    pub fn total(&self) -> Duration {
+        self.queue + self.exec
+    }
+}
+
+/// Accumulates request timings; thread-safe via external Mutex.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    timings: Vec<RequestTiming>,
+    batches: usize,
+    batched_requests: usize,
+}
+
+impl Recorder {
+    /// Record one request.
+    pub fn record(&mut self, t: RequestTiming) {
+        self.timings.push(t);
+    }
+
+    /// Record a dispatched batch of `n` requests.
+    pub fn record_batch(&mut self, n: usize) {
+        self.batches += 1;
+        self.batched_requests += n;
+    }
+
+    /// Summarize.
+    pub fn summary(&self) -> Summary {
+        let mut totals: Vec<f64> =
+            self.timings.iter().map(|t| t.total().as_secs_f64()).collect();
+        totals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if totals.is_empty() {
+                return 0.0;
+            }
+            let idx = ((totals.len() as f64 - 1.0) * p).round() as usize;
+            totals[idx]
+        };
+        let total_flops: u64 = self.timings.iter().map(|t| t.flops).sum();
+        let wall: f64 = totals.iter().sum();
+        Summary {
+            requests: self.timings.len(),
+            batches: self.batches,
+            mean_batch: if self.batches == 0 {
+                0.0
+            } else {
+                self.batched_requests as f64 / self.batches as f64
+            },
+            p50_s: pct(0.50),
+            p95_s: pct(0.95),
+            p99_s: pct(0.99),
+            total_flops,
+            sum_latency_s: wall,
+        }
+    }
+}
+
+/// Aggregated serving statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    /// Requests served.
+    pub requests: usize,
+    /// Batches dispatched.
+    pub batches: usize,
+    /// Mean requests per batch.
+    pub mean_batch: f64,
+    /// Median end-to-end latency (s).
+    pub p50_s: f64,
+    /// 95th percentile latency (s).
+    pub p95_s: f64,
+    /// 99th percentile latency (s).
+    pub p99_s: f64,
+    /// Total FLOPs served.
+    pub total_flops: u64,
+    /// Sum of request latencies (s).
+    pub sum_latency_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(ms: u64, flops: u64) -> RequestTiming {
+        RequestTiming {
+            queue: Duration::from_millis(ms / 2),
+            exec: Duration::from_millis(ms - ms / 2),
+            flops,
+        }
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let mut r = Recorder::default();
+        for ms in [1u64, 2, 3, 4, 5, 6, 7, 8, 9, 100] {
+            r.record(t(ms, 10));
+        }
+        let s = r.summary();
+        assert_eq!(s.requests, 10);
+        assert!((s.p50_s - 0.005).abs() < 0.0015, "{}", s.p50_s);
+        assert!(s.p99_s >= 0.09);
+        assert_eq!(s.total_flops, 100);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let mut r = Recorder::default();
+        r.record_batch(3);
+        r.record_batch(1);
+        let s = r.summary();
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_recorder_summary_is_zero() {
+        let s = Recorder::default().summary();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.p50_s, 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! L3 serving coordinator: request router, dynamic batcher, worker pool,
+//! serving metrics — the systems wrapper that turns the HFlex accelerator
+//! into a service.
+
+pub mod metrics;
+pub mod server;
+
+pub use server::{
+    BatchPolicy, Executor, FunctionalExecutor, ImageHandle, Server, SpmmRequest, SpmmResponse,
+};

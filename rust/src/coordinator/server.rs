@@ -1,0 +1,501 @@
+//! The SpMM serving coordinator: request queue → dynamic batcher → worker
+//! pool, in the style of an inference router (vLLM-like), specialized to
+//! the HFlex contract.
+//!
+//! **Dynamic batching** exploits SpMM's structure: two requests against the
+//! same preprocessed A image with matching (α, β) are *column-concatenated*
+//! into a single SpMM with N = N₁ + N₂ — the accelerator's per-window costs
+//! (B stream, C init, pointers) amortize across the batch exactly as the
+//! paper's N/N0 loop amortizes them across columns. The batcher groups by
+//! image identity within a bounded window, dispatches merged jobs to
+//! workers, and splits C back per request.
+//!
+//! Workers are std::thread with an [`Executor`] built inside the thread
+//! (PJRT clients are not Send; the factory pattern keeps them thread-local).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::metrics::{Recorder, RequestTiming, Summary};
+use crate::arch::simulator::problem_flops;
+use crate::sched::ScheduledMatrix;
+
+/// A preprocessed matrix registered with the server (shared across
+/// requests — the "model weights" of the serving analogy).
+#[derive(Clone)]
+pub struct ImageHandle {
+    /// Unique id assigned at registration.
+    pub id: u64,
+    /// The scheduled image.
+    pub image: Arc<ScheduledMatrix>,
+}
+
+/// One SpMM request: `C = alpha * A @ B + beta * C`.
+pub struct SpmmRequest {
+    /// Which registered matrix.
+    pub image: ImageHandle,
+    /// Dense B, row-major K × n.
+    pub b: Vec<f32>,
+    /// Dense C_in, row-major M × n.
+    pub c: Vec<f32>,
+    /// Columns.
+    pub n: usize,
+    /// Scalar α.
+    pub alpha: f32,
+    /// Scalar β.
+    pub beta: f32,
+}
+
+/// Completed response.
+pub struct SpmmResponse {
+    /// C_out, row-major M × n.
+    pub c: Vec<f32>,
+    /// Timing.
+    pub timing: RequestTiming,
+}
+
+/// A batch-merged job handed to workers.
+pub struct MergedJob {
+    image: Arc<ScheduledMatrix>,
+    alpha: f32,
+    beta: f32,
+    b_cat: Vec<f32>,
+    c_cat: Vec<f32>,
+    n_total: usize,
+    segments: Vec<Segment>,
+}
+
+struct Segment {
+    n: usize,
+    col_off: usize,
+    submitted: Instant,
+    respond: Sender<SpmmResponse>,
+}
+
+/// Pluggable execution backend. Implementations are built per worker
+/// thread via the factory passed to [`Server::start`].
+pub trait Executor {
+    /// Backend name (diagnostics).
+    fn name(&self) -> &'static str;
+    /// Execute `C = alpha*A@B + beta*C` over the merged buffers.
+    fn execute(
+        &mut self,
+        image: &ScheduledMatrix,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<()>;
+}
+
+/// Functional-simulator backend (exact FP32 datapath numerics).
+pub struct FunctionalExecutor;
+
+impl Executor for FunctionalExecutor {
+    fn name(&self) -> &'static str {
+        "functional"
+    }
+
+    fn execute(
+        &mut self,
+        image: &ScheduledMatrix,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<()> {
+        crate::arch::functional::execute(image, b, c, n, alpha, beta);
+        Ok(())
+    }
+}
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max total columns per merged job (paper sweeps N up to 512).
+    pub max_columns: usize,
+    /// How long the batcher waits to fill a batch.
+    pub window: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_columns: 512, window: Duration::from_millis(2) }
+    }
+}
+
+enum Msg {
+    Request(SpmmRequest, Sender<SpmmResponse>, Instant),
+    Shutdown,
+}
+
+/// The serving coordinator.
+pub struct Server {
+    tx: Sender<Msg>,
+    batcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    recorder: Arc<Mutex<Recorder>>,
+    next_image_id: AtomicU64,
+}
+
+impl Server {
+    /// Start with `n_workers` threads, an executor factory (called once per
+    /// worker thread), and a batching policy.
+    pub fn start<F>(n_workers: usize, policy: BatchPolicy, factory: F) -> Server
+    where
+        F: Fn(usize) -> Box<dyn Executor> + Send + Sync + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (job_tx, job_rx) = mpsc::channel::<MergedJob>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let recorder = Arc::new(Mutex::new(Recorder::default()));
+
+        let batcher = {
+            let recorder = Arc::clone(&recorder);
+            std::thread::spawn(move || batcher_loop(rx, job_tx, policy, recorder))
+        };
+
+        let factory = Arc::new(factory);
+        let workers = (0..n_workers.max(1))
+            .map(|w| {
+                let job_rx = Arc::clone(&job_rx);
+                let recorder = Arc::clone(&recorder);
+                let factory = Arc::clone(&factory);
+                std::thread::spawn(move || {
+                    let mut exec = factory(w);
+                    worker_loop(&mut *exec, job_rx, recorder);
+                })
+            })
+            .collect();
+
+        Server {
+            tx,
+            batcher: Some(batcher),
+            workers,
+            recorder,
+            next_image_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Register a preprocessed matrix for serving.
+    pub fn register(&self, image: Arc<ScheduledMatrix>) -> ImageHandle {
+        ImageHandle { id: self.next_image_id.fetch_add(1, Ordering::Relaxed), image }
+    }
+
+    /// Submit a request; returns the response channel.
+    pub fn submit(&self, req: SpmmRequest) -> Receiver<SpmmResponse> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Request(req, tx, Instant::now()))
+            .expect("server stopped");
+        rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn call(&self, req: SpmmRequest) -> SpmmResponse {
+        self.submit(req).recv().expect("worker dropped response")
+    }
+
+    /// Drain and stop; returns the serving summary.
+    pub fn shutdown(mut self) -> Summary {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let summary = self.recorder.lock().unwrap().summary();
+        summary
+    }
+}
+
+fn batcher_loop(
+    rx: Receiver<Msg>,
+    job_tx: Sender<MergedJob>,
+    policy: BatchPolicy,
+    recorder: Arc<Mutex<Recorder>>,
+) {
+    // Pending requests grouped by (image id, alpha bits, beta bits).
+    type Key = (u64, u32, u32);
+    let mut pending: HashMap<Key, Vec<(SpmmRequest, Sender<SpmmResponse>, Instant)>> =
+        HashMap::new();
+    let mut deadline: Option<Instant> = None;
+
+    let flush = |group: Vec<(SpmmRequest, Sender<SpmmResponse>, Instant)>,
+                 job_tx: &Sender<MergedJob>,
+                 recorder: &Arc<Mutex<Recorder>>| {
+        if group.is_empty() {
+            return;
+        }
+        recorder.lock().unwrap().record_batch(group.len());
+        let image = Arc::clone(&group[0].0.image.image);
+        let (alpha, beta) = (group[0].0.alpha, group[0].0.beta);
+        let m = image.m;
+        let k = image.k;
+        let n_total: usize = group.iter().map(|(r, _, _)| r.n).sum();
+        // Column-concatenate B and C (row-major interleave).
+        let mut b_cat = vec![0f32; k * n_total];
+        let mut c_cat = vec![0f32; m * n_total];
+        let mut col = 0usize;
+        let mut segments = Vec::with_capacity(group.len());
+        for (req, respond, submitted) in group {
+            for row in 0..k {
+                b_cat[row * n_total + col..row * n_total + col + req.n]
+                    .copy_from_slice(&req.b[row * req.n..(row + 1) * req.n]);
+            }
+            for row in 0..m {
+                c_cat[row * n_total + col..row * n_total + col + req.n]
+                    .copy_from_slice(&req.c[row * req.n..(row + 1) * req.n]);
+            }
+            segments.push(Segment { n: req.n, col_off: col, submitted, respond });
+            col += req.n;
+        }
+        let _ = job_tx.send(MergedJob {
+            image,
+            alpha,
+            beta,
+            b_cat,
+            c_cat,
+            n_total,
+            segments,
+        });
+    };
+
+    loop {
+        let timeout = deadline
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Request(req, respond, submitted)) => {
+                let key = (req.image.id, req.alpha.to_bits(), req.beta.to_bits());
+                let group = pending.entry(key).or_default();
+                group.push((req, respond, submitted));
+                let cols: usize = group.iter().map(|(r, _, _)| r.n).sum();
+                if cols >= policy.max_columns {
+                    let group = pending.remove(&key).unwrap();
+                    flush(group, &job_tx, &recorder);
+                }
+                if deadline.is_none() && !pending.is_empty() {
+                    deadline = Some(Instant::now() + policy.window);
+                }
+            }
+            Ok(Msg::Shutdown) => {
+                for (_, group) in pending.drain() {
+                    flush(group, &job_tx, &recorder);
+                }
+                break; // dropping job_tx stops workers
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                for (_, group) in pending.drain() {
+                    flush(group, &job_tx, &recorder);
+                }
+                deadline = None;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                for (_, group) in pending.drain() {
+                    flush(group, &job_tx, &recorder);
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    exec: &mut dyn Executor,
+    job_rx: Arc<Mutex<Receiver<MergedJob>>>,
+    recorder: Arc<Mutex<Recorder>>,
+) {
+    loop {
+        let job = {
+            let rx = job_rx.lock().unwrap();
+            rx.recv()
+        };
+        let Ok(mut job) = job else { break };
+        let start = Instant::now();
+        let ok = exec
+            .execute(
+                &job.image,
+                &job.b_cat,
+                &mut job.c_cat,
+                job.n_total,
+                job.alpha,
+                job.beta,
+            )
+            .is_ok();
+        let exec_time = start.elapsed();
+        let m = job.image.m;
+        let nnz = job.image.nnz;
+        for seg in job.segments {
+            let mut c = vec![0f32; m * seg.n];
+            if ok {
+                for row in 0..m {
+                    c[row * seg.n..(row + 1) * seg.n].copy_from_slice(
+                        &job.c_cat
+                            [row * job.n_total + seg.col_off..row * job.n_total + seg.col_off + seg.n],
+                    );
+                }
+            }
+            let timing = RequestTiming {
+                queue: start.duration_since(seg.submitted),
+                exec: exec_time,
+                flops: problem_flops(nnz, m, seg.n),
+            };
+            recorder.lock().unwrap().record(timing);
+            let _ = seg.respond.send(SpmmResponse { c, timing });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::sched::preprocess;
+    use crate::sparse::{gen, rng::Rng};
+
+    fn make_image(seed: u64) -> (crate::sparse::Coo, Arc<ScheduledMatrix>) {
+        let mut rng = Rng::new(seed);
+        let coo = gen::random_uniform(48, 40, 0.15, &mut rng);
+        let sm = Arc::new(preprocess(&coo, 4, 16, 8));
+        (coo, sm)
+    }
+
+    fn start_functional(workers: usize) -> Server {
+        Server::start(workers, BatchPolicy::default(), |_| Box::new(FunctionalExecutor))
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let (coo, sm) = make_image(1);
+        let server = start_functional(1);
+        let handle = server.register(sm);
+        let mut rng = Rng::new(2);
+        let n = 4;
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        let c: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let mut want = c.clone();
+        coo.spmm_reference(&b, &mut want, n, 1.5, 0.5);
+        let resp = server.call(SpmmRequest {
+            image: handle,
+            b,
+            c,
+            n,
+            alpha: 1.5,
+            beta: 0.5,
+        });
+        prop::assert_allclose(&resp.c, &want, 1e-4, 1e-4).unwrap();
+        let summary = server.shutdown();
+        assert_eq!(summary.requests, 1);
+    }
+
+    #[test]
+    fn batched_requests_are_column_exact() {
+        let (coo, sm) = make_image(3);
+        let server = Server::start(
+            1,
+            BatchPolicy { max_columns: 64, window: Duration::from_millis(20) },
+            |_| Box::new(FunctionalExecutor),
+        );
+        let handle = server.register(sm);
+        let mut rng = Rng::new(4);
+        let mut rxs = Vec::new();
+        let mut wants = Vec::new();
+        for _ in 0..5 {
+            let n = 1 + rng.index(4);
+            let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+            let c: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+            let mut want = c.clone();
+            coo.spmm_reference(&b, &mut want, n, 2.0, -1.0);
+            wants.push(want);
+            rxs.push(server.submit(SpmmRequest {
+                image: handle.clone(),
+                b,
+                c,
+                n,
+                alpha: 2.0,
+                beta: -1.0,
+            }));
+        }
+        for (rx, want) in rxs.into_iter().zip(wants) {
+            let resp = rx.recv().unwrap();
+            prop::assert_allclose(&resp.c, &want, 1e-4, 1e-4).unwrap();
+        }
+        let summary = server.shutdown();
+        assert_eq!(summary.requests, 5);
+        // The 20 ms window should have merged several requests per batch.
+        assert!(summary.batches < 5, "batches = {}", summary.batches);
+        assert!(summary.mean_batch > 1.0);
+    }
+
+    #[test]
+    fn different_alpha_beta_never_merge() {
+        let (_, sm) = make_image(5);
+        let server = Server::start(
+            1,
+            BatchPolicy { max_columns: 512, window: Duration::from_millis(10) },
+            |_| Box::new(FunctionalExecutor),
+        );
+        let handle = server.register(sm.clone());
+        let k = sm.k;
+        let m = sm.m;
+        let mk = |alpha: f32| SpmmRequest {
+            image: handle.clone(),
+            b: vec![1.0; k * 2],
+            c: vec![0.0; m * 2],
+            n: 2,
+            alpha,
+            beta: 0.0,
+        };
+        let r1 = server.submit(mk(1.0));
+        let r2 = server.submit(mk(2.0));
+        let a = r1.recv().unwrap();
+        let b = r2.recv().unwrap();
+        // alpha=2 result must be exactly 2x alpha=1 result.
+        for (x, y) in a.c.iter().zip(b.c.iter()) {
+            assert!((2.0 * x - y).abs() < 1e-4);
+        }
+        let summary = server.shutdown();
+        assert_eq!(summary.batches, 2, "distinct scalars must not merge");
+    }
+
+    #[test]
+    fn multi_worker_many_requests() {
+        let (coo, sm) = make_image(7);
+        let server = start_functional(3);
+        let handle = server.register(sm);
+        let mut rng = Rng::new(8);
+        let n = 2;
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        let mut want = vec![0f32; coo.m * n];
+        coo.spmm_reference(&b, &mut want, n, 1.0, 0.0);
+        let rxs: Vec<_> = (0..20)
+            .map(|_| {
+                server.submit(SpmmRequest {
+                    image: handle.clone(),
+                    b: b.clone(),
+                    c: vec![0.0; coo.m * n],
+                    n,
+                    alpha: 1.0,
+                    beta: 0.0,
+                })
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            prop::assert_allclose(&resp.c, &want, 1e-4, 1e-4).unwrap();
+        }
+        let s = server.shutdown();
+        assert_eq!(s.requests, 20);
+        assert!(s.p50_s >= 0.0);
+    }
+}

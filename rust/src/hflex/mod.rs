@@ -1,0 +1,387 @@
+//! HFlex — hardware flexibility (paper §3.4): one "synthesized" accelerator
+//! executes arbitrary SpMMs, with only memory pointers and scalars varying
+//! per problem.
+//!
+//! The contract is enforced by construction:
+//!
+//! * [`HFlexAccelerator::synthesize`] consumes an [`AcceleratorConfig`] —
+//!   after that the configuration is immutable (no public mutators), like a
+//!   bitstream after place-and-route.
+//! * [`HFlexAccelerator::invoke`] accepts any [`SpmmProblem`]; the only
+//!   inputs that change between invocations are the Algorithm 1 parameters:
+//!   matrix pointers (A's scheduled image, B, C), the Q pointer lists
+//!   (inside the image), and the scalars M, K, N, α, β.
+//! * An image preprocessed for a *different* configuration is rejected with
+//!   [`HFlexError::WrongConfiguration`] — the analogue of needing a new
+//!   synthesis/place/route run, which HFlex exists to avoid.
+
+use crate::arch::{functional, simulate, AcceleratorConfig, SimReport};
+use crate::sched::{preprocess, ScheduledMatrix};
+use crate::sparse::Coo;
+
+/// Why an invocation was refused.
+#[derive(Debug, PartialEq)]
+pub enum HFlexError {
+    /// Image was scheduled for a different accelerator configuration.
+    WrongConfiguration {
+        /// What the image was built for (p, k0, d).
+        image: (usize, usize, usize),
+        /// What this accelerator is (p, k0, d).
+        accel: (usize, usize, usize),
+    },
+    /// Matrix exceeds the C-scratchpad capacity (M > c_depth × P): the
+    /// paper's 5 GB memory-budget exclusion analogue.
+    ScratchpadOverflow {
+        /// Rows required per PE.
+        rows_per_pe: usize,
+        /// URAM depth available per PE.
+        c_depth: usize,
+    },
+    /// B/C buffer shape mismatch with (M, K, N).
+    ShapeMismatch(String),
+}
+
+impl std::fmt::Display for HFlexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HFlexError::WrongConfiguration { image, accel } => write!(
+                f,
+                "image scheduled for (P, K0, D) = {image:?} but accelerator is {accel:?}; \
+                 HFlex avoids re-synthesis only for matching preprocessing"
+            ),
+            HFlexError::ScratchpadOverflow { rows_per_pe, c_depth } => write!(
+                f,
+                "C scratchpad overflow: {rows_per_pe} rows/PE > URAM depth {c_depth}"
+            ),
+            HFlexError::ShapeMismatch(s) => write!(f, "shape mismatch: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for HFlexError {}
+
+/// One SpMM problem: `C = alpha * A @ B + beta * C`. The HFlex parameter
+/// set of Algorithm 1 — pointers + scalars, nothing hardware-shaped.
+#[derive(Debug)]
+pub struct SpmmProblem<'a> {
+    /// Preprocessed A (carries M, K, Q and the scheduled non-zeros).
+    pub a: &'a ScheduledMatrix,
+    /// Dense B, row-major K × N.
+    pub b: &'a [f32],
+    /// Dense C in/out, row-major M × N.
+    pub c: &'a mut [f32],
+    /// Columns of B / C.
+    pub n: usize,
+    /// Scalar α.
+    pub alpha: f32,
+    /// Scalar β.
+    pub beta: f32,
+}
+
+/// Result of one invocation.
+#[derive(Clone, Debug)]
+pub struct InvokeReport {
+    /// Cycle-level timing of the run.
+    pub sim: SimReport,
+}
+
+/// A "synthesized" Sextans accelerator.
+#[derive(Debug)]
+pub struct HFlexAccelerator {
+    cfg: AcceleratorConfig,
+}
+
+impl HFlexAccelerator {
+    /// One-time synthesis (the hours-long place-and-route the paper's flow
+    /// replaces with... this constructor).
+    pub fn synthesize(cfg: AcceleratorConfig) -> Self {
+        HFlexAccelerator { cfg }
+    }
+
+    /// The immutable configuration.
+    pub fn config(&self) -> &AcceleratorConfig {
+        &self.cfg
+    }
+
+    /// Host-side preprocessing (§3.3's "C++ wrapper"): partition + OoO
+    /// schedule + encode for THIS accelerator's (P, K0, D).
+    pub fn preprocess(&self, a: &Coo) -> Result<ScheduledMatrix, HFlexError> {
+        let sm = preprocess(a, self.cfg.p(), self.cfg.k0, self.cfg.d);
+        if sm.rows_per_pe() > self.cfg.c_depth {
+            return Err(HFlexError::ScratchpadOverflow {
+                rows_per_pe: sm.rows_per_pe(),
+                c_depth: self.cfg.c_depth,
+            });
+        }
+        Ok(sm)
+    }
+
+    /// Execute one SpMM: functional result written into `problem.c`,
+    /// cycle-accurate timing returned. No re-synthesis, ever.
+    pub fn invoke(&self, problem: SpmmProblem<'_>) -> Result<InvokeReport, HFlexError> {
+        let sm = problem.a;
+        let accel = (self.cfg.p(), self.cfg.k0, self.cfg.d);
+        let image = (sm.p, sm.k0, sm.d);
+        if accel != image {
+            return Err(HFlexError::WrongConfiguration { image, accel });
+        }
+        if sm.rows_per_pe() > self.cfg.c_depth {
+            return Err(HFlexError::ScratchpadOverflow {
+                rows_per_pe: sm.rows_per_pe(),
+                c_depth: self.cfg.c_depth,
+            });
+        }
+        if problem.b.len() != sm.k * problem.n {
+            return Err(HFlexError::ShapeMismatch(format!(
+                "B has {} elements, expected K*N = {}",
+                problem.b.len(),
+                sm.k * problem.n
+            )));
+        }
+        if problem.c.len() != sm.m * problem.n {
+            return Err(HFlexError::ShapeMismatch(format!(
+                "C has {} elements, expected M*N = {}",
+                problem.c.len(),
+                sm.m * problem.n
+            )));
+        }
+        functional::execute(sm, problem.b, problem.c, problem.n, problem.alpha, problem.beta);
+        let sim = simulate(sm, &self.cfg, problem.n);
+        Ok(InvokeReport { sim })
+    }
+}
+
+/// A matrix too tall for the C scratchpad, split into sequential row
+/// blocks (extension over the paper, which *excludes* such matrices from
+/// its evaluation: each block fits `c_depth × P` rows and is processed as
+/// an independent SpMM over the same B — correctness is exact because C
+/// rows partition cleanly across blocks).
+#[derive(Clone, Debug)]
+pub struct TiledImage {
+    /// (first global row, scheduled image of the block) per block.
+    pub blocks: Vec<(usize, ScheduledMatrix)>,
+    /// Total rows (M).
+    pub m: usize,
+    /// Columns (K).
+    pub k: usize,
+}
+
+impl HFlexAccelerator {
+    /// Preprocess with automatic row-block tiling: always succeeds, even
+    /// for M > c_depth × P (the paper's 5 GB/scratchpad exclusions).
+    pub fn preprocess_tiled(&self, a: &Coo) -> TiledImage {
+        let block_rows = self.cfg.c_depth * self.cfg.p();
+        if a.m <= block_rows {
+            return TiledImage {
+                blocks: vec![(0, preprocess(a, self.cfg.p(), self.cfg.k0, self.cfg.d))],
+                m: a.m,
+                k: a.k,
+            };
+        }
+        let nblocks = a.m.div_ceil(block_rows);
+        // Bucket non-zeros by row block, shifting rows to block-local.
+        let mut rows: Vec<Vec<u32>> = vec![Vec::new(); nblocks];
+        let mut cols: Vec<Vec<u32>> = vec![Vec::new(); nblocks];
+        let mut vals: Vec<Vec<f32>> = vec![Vec::new(); nblocks];
+        for i in 0..a.nnz() {
+            let blk = a.rows[i] as usize / block_rows;
+            rows[blk].push(a.rows[i] - (blk * block_rows) as u32);
+            cols[blk].push(a.cols[i]);
+            vals[blk].push(a.vals[i]);
+        }
+        let blocks = (0..nblocks)
+            .map(|blk| {
+                let off = blk * block_rows;
+                let m_blk = block_rows.min(a.m - off);
+                let coo = Coo {
+                    m: m_blk,
+                    k: a.k,
+                    rows: std::mem::take(&mut rows[blk]),
+                    cols: std::mem::take(&mut cols[blk]),
+                    vals: std::mem::take(&mut vals[blk]),
+                };
+                (off, preprocess(&coo, self.cfg.p(), self.cfg.k0, self.cfg.d))
+            })
+            .collect();
+        TiledImage { blocks, m: a.m, k: a.k }
+    }
+
+    /// Execute a tiled SpMM: blocks run sequentially on the accelerator
+    /// (B is re-streamed per block, exactly what the hardware would do);
+    /// cycle counts accumulate across blocks.
+    pub fn invoke_tiled(
+        &self,
+        image: &TiledImage,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<u64, HFlexError> {
+        if b.len() != image.k * n {
+            return Err(HFlexError::ShapeMismatch("B".into()));
+        }
+        if c.len() != image.m * n {
+            return Err(HFlexError::ShapeMismatch("C".into()));
+        }
+        let mut total_cycles = 0u64;
+        for (off, sm) in &image.blocks {
+            // C rows of this block are contiguous in row-major C.
+            let c_block = &mut c[off * n..(off + sm.m) * n];
+            let report = self.invoke(SpmmProblem {
+                a: sm,
+                b,
+                c: c_block,
+                n,
+                alpha,
+                beta,
+            })?;
+            total_cycles += report.sim.cycles;
+        }
+        Ok(total_cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::sparse::{gen, rng::Rng};
+
+    fn accel() -> HFlexAccelerator {
+        HFlexAccelerator::synthesize(AcceleratorConfig::sextans_u280())
+    }
+
+    fn problem_data(k: usize, m: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let b = (0..k * n).map(|_| rng.normal()).collect();
+        let c = (0..m * n).map(|_| rng.normal()).collect();
+        (b, c)
+    }
+
+    #[test]
+    fn one_accelerator_many_problem_shapes() {
+        // The HFlex headline: the SAME synthesized accelerator runs SpMMs of
+        // wildly different (M, K, N, nnz) with zero reconfiguration.
+        let acc = accel();
+        let mut rng = Rng::new(1);
+        for (m, k, n) in [(64, 64, 8), (1000, 300, 16), (77, 4100, 64), (5, 5, 8)] {
+            let a = gen::random_uniform(m, k, 0.1, &mut rng);
+            let sm = acc.preprocess(&a).unwrap();
+            let (b, mut c) = problem_data(k, m, n, 2);
+            let mut want = c.clone();
+            a.spmm_reference(&b, &mut want, n, 2.0, 0.5);
+            let report = acc
+                .invoke(SpmmProblem { a: &sm, b: &b, c: &mut c, n, alpha: 2.0, beta: 0.5 })
+                .unwrap();
+            prop::assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
+            assert!(report.sim.cycles > 0);
+        }
+    }
+
+    #[test]
+    fn rejects_image_from_other_configuration() {
+        let acc = accel();
+        let mut rng = Rng::new(3);
+        let a = gen::random_uniform(64, 64, 0.1, &mut rng);
+        // Preprocess for a DIFFERENT window size.
+        let foreign = preprocess(&a, acc.config().p(), 1024, acc.config().d);
+        let (b, mut c) = problem_data(64, 64, 8, 4);
+        let err = acc
+            .invoke(SpmmProblem { a: &foreign, b: &b, c: &mut c, n: 8, alpha: 1.0, beta: 0.0 })
+            .unwrap_err();
+        assert!(matches!(err, HFlexError::WrongConfiguration { .. }));
+        assert!(err.to_string().contains("re-synthesis"));
+    }
+
+    #[test]
+    fn rejects_scratchpad_overflow() {
+        // M > c_depth * P: 64 PEs * 12,288 = 786,432 rows max.
+        let acc = accel();
+        let huge = Coo::empty(800_000, 16);
+        let err = acc.preprocess(&huge).unwrap_err();
+        assert!(matches!(err, HFlexError::ScratchpadOverflow { .. }));
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let acc = accel();
+        let mut rng = Rng::new(5);
+        let a = gen::random_uniform(16, 16, 0.2, &mut rng);
+        let sm = acc.preprocess(&a).unwrap();
+        let (b, mut c) = problem_data(16, 16, 8, 6);
+        let err = acc
+            .invoke(SpmmProblem { a: &sm, b: &b[..10], c: &mut c, n: 8, alpha: 1.0, beta: 0.0 })
+            .unwrap_err();
+        assert!(matches!(err, HFlexError::ShapeMismatch(_)));
+    }
+
+    use crate::sparse::Coo;
+
+    fn tiny_accel() -> HFlexAccelerator {
+        // Shrunken scratchpad to exercise tiling with small matrices.
+        let mut cfg = AcceleratorConfig::sextans_u280();
+        cfg.pegs = 2;
+        cfg.pes_per_peg = 2; // P = 4
+        cfg.c_depth = 16; // block = 64 rows
+        cfg.k0 = 32;
+        HFlexAccelerator::synthesize(cfg)
+    }
+
+    #[test]
+    fn tiled_matches_reference_over_blocks() {
+        let acc = tiny_accel();
+        let mut rng = Rng::new(7);
+        let a = gen::random_uniform(200, 70, 0.1, &mut rng); // 4 blocks
+        let image = acc.preprocess_tiled(&a);
+        assert_eq!(image.blocks.len(), 4);
+        let n = 5;
+        let (b, mut c) = problem_data(70, 200, n, 8);
+        let mut want = c.clone();
+        a.spmm_reference(&b, &mut want, n, 1.5, -0.5);
+        let cycles = acc
+            .invoke_tiled(&image, &b, &mut c, n, 1.5, -0.5)
+            .unwrap();
+        prop::assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
+        assert!(cycles > 0);
+    }
+
+    #[test]
+    fn tiled_single_block_when_it_fits() {
+        let acc = tiny_accel();
+        let mut rng = Rng::new(9);
+        let a = gen::random_uniform(60, 40, 0.1, &mut rng);
+        let image = acc.preprocess_tiled(&a);
+        assert_eq!(image.blocks.len(), 1);
+    }
+
+    #[test]
+    fn tiled_every_block_fits_scratchpad() {
+        let acc = tiny_accel();
+        let mut rng = Rng::new(11);
+        let a = gen::random_uniform(300, 50, 0.05, &mut rng);
+        let image = acc.preprocess_tiled(&a);
+        for (_, sm) in &image.blocks {
+            assert!(sm.rows_per_pe() <= acc.config().c_depth);
+        }
+        // Every non-zero lands in exactly one block.
+        let total: usize = image.blocks.iter().map(|(_, sm)| sm.nnz).sum();
+        assert_eq!(total, a.nnz());
+    }
+
+    #[test]
+    fn tiled_beats_plain_preprocess_rejection() {
+        // The plain path refuses what the tiled path handles.
+        let acc = tiny_accel();
+        let mut rng = Rng::new(13);
+        let a = gen::random_uniform(200, 30, 0.08, &mut rng);
+        assert!(matches!(
+            acc.preprocess(&a),
+            Err(HFlexError::ScratchpadOverflow { .. })
+        ));
+        let image = acc.preprocess_tiled(&a);
+        let n = 2;
+        let (b, mut c) = problem_data(30, 200, n, 14);
+        acc.invoke_tiled(&image, &b, &mut c, n, 1.0, 0.0).unwrap();
+    }
+}

@@ -1,0 +1,47 @@
+//! # Sextans — general-purpose SpMM streaming accelerator (FPGA '22 reproduction)
+//!
+//! This crate reproduces *Sextans: A Streaming Accelerator for General-Purpose
+//! Sparse-Matrix Dense-Matrix Multiplication* (Song et al., FPGA '22) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: matrix
+//!   partitioning (Eq. 2–4), PE-aware out-of-order non-zero scheduling
+//!   (§3.3), the HFlex pointer-list runtime (§3.4), a cycle-level streaming
+//!   simulator of the accelerator (§3.1–3.2, §4.1), analytical and GPU
+//!   baseline performance models (§3.6, §4), and the full benchmark harness
+//!   regenerating every table and figure of the evaluation.
+//! * **L2 (python/compile/model.py)** — the window-level SpMM compute graph
+//!   in JAX, AOT-lowered to HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the PE inner loop
+//!   and the Comp-C stage, executed from Rust via the PJRT CPU client
+//!   ([`runtime`]).
+//!
+//! Python never runs on the request path: `make artifacts` runs once, and
+//! the Rust binary is self-contained afterwards.
+//!
+//! ## Module map
+//!
+//! | module | paper section | role |
+//! |---|---|---|
+//! | [`sparse`] | §2.1, Table 2 | COO/CSR formats, MatrixMarket I/O, synthetic matrix generators, the 200-matrix catalog |
+//! | [`sched`] | §3.3, §3.4, Fig. 5 | window partitioning, OoO non-zero scheduling, 64-bit encoding, Q pointer list |
+//! | [`arch`] | §3.1, §3.2, §3.5, §3.6.2 | cycle-level streaming simulator, functional simulator, resource model |
+//! | [`perfmodel`] | §3.6.1, §4.1 | Eq. 6–10 closed form, GPU baselines, platform constants, energy |
+//! | [`hflex`] | §3.4 | the HFlex runtime contract: one fixed accelerator, arbitrary SpMMs |
+//! | [`runtime`] | — | PJRT client wrapping the AOT HLO artifacts |
+//! | [`coordinator`] | — | SpMM request server: batching, worker pool, metrics |
+//! | [`metrics`] | §4.2 | GFLOP/s, bandwidth utilization, energy efficiency, geomean/CDF |
+//! | [`report`] | §4.2, §4.3 | experiment drivers regenerating Tables 1–5 and Figures 7–10 |
+
+pub mod arch;
+pub mod bench_util;
+pub mod cli;
+pub mod coordinator;
+pub mod hflex;
+pub mod metrics;
+pub mod perfmodel;
+pub mod prop;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod sparse;

@@ -1,0 +1,256 @@
+//! Sextans CLI — the leader entrypoint.
+//!
+//! ```text
+//! sextans repro [--all | <exp-id>] [--out DIR] [--full] [--max-matrices N]
+//! sextans run   --m M --k K [--n N] [--density D] [--alpha A] [--beta B] [--xla]
+//! sextans gen   --m M --k K --density D --out file.mtx [--seed S]
+//! sextans serve [--requests R] [--workers W]
+//! sextans info
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use sextans::arch::{resources, simulate, AcceleratorConfig};
+use sextans::cli::Cli;
+use sextans::coordinator::{BatchPolicy, FunctionalExecutor, Server, SpmmRequest};
+use sextans::hflex::{HFlexAccelerator, SpmmProblem};
+use sextans::perfmodel::Platform;
+use sextans::report::{self, experiments};
+use sextans::sched::preprocess;
+use sextans::sparse::catalog::Scale;
+use sextans::sparse::{gen, mm_io, rng::Rng, Coo};
+
+fn main() {
+    let cli = Cli::from_env();
+    let result = match cli.command.as_str() {
+        "repro" => cmd_repro(&cli),
+        "run" => cmd_run(&cli),
+        "gen" => cmd_gen(&cli),
+        "serve" => cmd_serve(&cli),
+        "info" | "" => cmd_info(),
+        other => {
+            eprintln!("unknown command {other:?}");
+            eprintln!("commands: repro, run, gen, serve, info");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// `repro`: regenerate paper tables/figures into --out (default `results`).
+fn cmd_repro(cli: &Cli) -> Result<()> {
+    let out = PathBuf::from(cli.get("out").unwrap_or("results"));
+    let scale = if cli.flag("full") { Scale::Full } else { Scale::Ci };
+    let max_matrices = cli.get("max-matrices").and_then(|s| s.parse().ok());
+
+    if cli.flag("all") || cli.positional.is_empty() {
+        let text = experiments::run_all(&out, scale, max_matrices)?;
+        println!("{text}");
+        println!("[repro] reports written to {}", out.display());
+        return Ok(());
+    }
+    for exp in &cli.positional {
+        let text = match exp.as_str() {
+            "table1" => experiments::table1(),
+            "table2" => experiments::table2(scale),
+            "table4" => experiments::table4(),
+            "fig6" => experiments::fig6(),
+            "motivation" => experiments::motivation_decompose(Scale::Full),
+            "ablation-d" => experiments::ablation_d(),
+            "ablation-window" => experiments::ablation_window(),
+            "table3" | "table5" | "fig7" | "fig8" | "fig9" | "fig10" | "headline" => {
+                let points = report::run_sweep(&report::SweepOptions {
+                    scale,
+                    max_matrices,
+                    verbose: true,
+                    ..Default::default()
+                });
+                match exp.as_str() {
+                    "table3" => experiments::table3(&points),
+                    "table5" => experiments::table5(&points),
+                    "fig7" => experiments::fig7(&points),
+                    "fig8" => experiments::fig8(&points),
+                    "fig9" => experiments::fig9(&points),
+                    "fig10" => experiments::fig10(&points),
+                    _ => experiments::headline(&points),
+                }
+            }
+            other => bail!("unknown experiment {other:?} (see DESIGN.md §4)"),
+        };
+        println!("{text}");
+    }
+    Ok(())
+}
+
+/// `run`: one SpMM end to end (random or .mtx matrix) on the HFlex
+/// accelerator; `--xla` additionally cross-checks through the PJRT engine.
+fn cmd_run(cli: &Cli) -> Result<()> {
+    let m = cli.get_usize("m", 4096);
+    let k = cli.get_usize("k", 4096);
+    let n = cli.get_usize("n", 64);
+    let density = cli.get_f32("density", 0.002) as f64;
+    let alpha = cli.get_f32("alpha", 1.0);
+    let beta = cli.get_f32("beta", 0.0);
+    let seed = cli.get_u64("seed", 7);
+
+    let coo = match cli.get("matrix") {
+        Some(path) => mm_io::read_matrix_market(Path::new(path))?,
+        None => gen::random_uniform(m, k, density, &mut Rng::new(seed)),
+    };
+    println!(
+        "matrix: {}x{}, nnz {}, density {:.3e}",
+        coo.m,
+        coo.k,
+        coo.nnz(),
+        coo.density()
+    );
+
+    let accel = HFlexAccelerator::synthesize(AcceleratorConfig::sextans_u280());
+    let image = accel.preprocess(&coo)?;
+    println!(
+        "preprocessed: {} windows, {} slots ({} bubbles), effective II {:.4}",
+        image.num_windows,
+        image.total_slots(),
+        image.total_bubbles(),
+        image.effective_ii()
+    );
+
+    let mut rng = Rng::new(seed ^ 0xB0B);
+    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+    let mut c: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+    let c_in = c.clone();
+    let report = accel.invoke(SpmmProblem { a: &image, b: &b, c: &mut c, n, alpha, beta })?;
+    let sim = &report.sim;
+    println!(
+        "simulated: {} cycles = {:.3} ms @ {} MHz -> {:.2} GFLOP/s",
+        sim.cycles,
+        sim.seconds * 1e3,
+        accel.config().freq_mhz,
+        sim.gflops
+    );
+
+    // GPU baselines for context.
+    let stats = sextans::perfmodel::MatrixStats {
+        m: coo.m,
+        k: coo.k,
+        nnz: coo.nnz(),
+        max_row_nnz: coo.max_row_nnz(),
+    };
+    for p in [Platform::K80, Platform::V100] {
+        let t = p.gpu_model().unwrap().seconds(&stats, n);
+        println!(
+            "baseline {}: {:.3} ms ({:.2}x vs Sextans)",
+            p.spec().name,
+            t * 1e3,
+            t / sim.seconds
+        );
+    }
+
+    if cli.flag("xla") {
+        let engine = sextans::runtime::Engine::load_default()?;
+        let p = cli.get_usize("xla-pes", 8);
+        let (variant, xla_image) = engine.plan(&coo, p, accel.config().d)?;
+        let got = engine.spmm(variant, &xla_image, &b, &c_in, n, alpha, beta)?;
+        let max_err = got
+            .iter()
+            .zip(c.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        println!("xla cross-check (variant k0={}, {} PEs): max |err| = {max_err:.3e}",
+            variant.k0, p);
+        if !(max_err < 1e-2) {
+            bail!("XLA path diverged from functional simulator");
+        }
+    }
+    Ok(())
+}
+
+/// `gen`: write a synthetic matrix as MatrixMarket.
+fn cmd_gen(cli: &Cli) -> Result<()> {
+    let m = cli.get_usize("m", 1024);
+    let k = cli.get_usize("k", 1024);
+    let density = cli.get_f32("density", 0.01) as f64;
+    let seed = cli.get_u64("seed", 1);
+    let out = cli.get("out").unwrap_or("matrix.mtx");
+    let kind = cli.get("kind").unwrap_or("uniform");
+    let mut rng = Rng::new(seed);
+    let coo: Coo = match kind {
+        "uniform" => gen::random_uniform(m, k, density, &mut rng),
+        "rmat" => gen::rmat(m, (m as f64 * k as f64 * density) as usize, 0.57, 0.19, 0.19, &mut rng),
+        "banded" => gen::banded(m, 16, ((k as f64 * density) as usize).max(1), &mut rng),
+        other => bail!("unknown kind {other:?} (uniform|rmat|banded)"),
+    };
+    mm_io::write_matrix_market(Path::new(out), &coo)?;
+    println!("wrote {} ({}x{}, nnz {})", out, coo.m, coo.k, coo.nnz());
+    Ok(())
+}
+
+/// `serve`: demo serving loop on the functional executor.
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    let requests = cli.get_usize("requests", 64);
+    let workers = cli.get_usize("workers", 2);
+    let mut rng = Rng::new(cli.get_u64("seed", 3));
+    let coo = gen::rmat(4096, 40_000, 0.57, 0.19, 0.19, &mut rng);
+    let cfg = AcceleratorConfig::sextans_u280();
+    let image = Arc::new(preprocess(&coo, cfg.p(), cfg.k0, cfg.d));
+    println!("serving matrix {}x{} nnz {}", coo.m, coo.k, coo.nnz());
+
+    let server = Server::start(workers, BatchPolicy::default(), |_| Box::new(FunctionalExecutor));
+    let handle = server.register(image);
+    let mut rxs = Vec::new();
+    for i in 0..requests {
+        let n = [4usize, 8, 16][i % 3];
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        rxs.push(server.submit(SpmmRequest {
+            image: handle.clone(),
+            b,
+            c: vec![0.0; coo.m * n],
+            n,
+            alpha: 1.0,
+            beta: 0.0,
+        }));
+    }
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let s = server.shutdown();
+    println!(
+        "served {} requests in {} batches (mean batch {:.1}); p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms",
+        s.requests,
+        s.batches,
+        s.mean_batch,
+        s.p50_s * 1e3,
+        s.p95_s * 1e3,
+        s.p99_s * 1e3
+    );
+    Ok(())
+}
+
+/// `info`: platform and configuration summary.
+fn cmd_info() -> Result<()> {
+    let cfg = AcceleratorConfig::sextans_u280();
+    println!("Sextans reproduction — FPGA '22 (Song et al.)");
+    println!(
+        "U280 config: {} PEGs x {} PEs x {} PUs, K0={}, C depth={}, D={}, {} MHz, {} GB/s",
+        cfg.pegs, cfg.pes_per_peg, cfg.n0, cfg.k0, cfg.c_depth, cfg.d, cfg.freq_mhz, cfg.hbm_gbps
+    );
+    println!("datapath roof: {:.1} GFLOP/s", cfg.datapath_roof_gflops());
+    let r = resources::estimate(&cfg);
+    println!("estimated resources: BRAM {}, DSP {}, URAM {}", r.bram, r.dsp, r.uram);
+    let mut demo_rng = Rng::new(1);
+    let coo = gen::random_uniform(1024, 1024, 0.01, &mut demo_rng);
+    let sm = preprocess(&coo, cfg.p(), cfg.k0, cfg.d);
+    let rep = simulate(&sm, &cfg, 64);
+    println!(
+        "demo SpMM (1024^2, 1% dense, N=64): {} cycles, {:.2} GFLOP/s",
+        rep.cycles, rep.gflops
+    );
+    println!("run `sextans repro --all` to regenerate the paper's tables and figures");
+    Ok(())
+}

@@ -1,0 +1,211 @@
+//! Evaluation metrics (paper §4.2): throughput, memory-bandwidth
+//! utilization, energy efficiency, geomean and CDF summaries.
+
+use crate::perfmodel::Platform;
+
+/// Geometric mean. Ignores non-positive entries (they would be undefined);
+/// returns 0.0 for an empty input.
+pub fn geomean(xs: &[f64]) -> f64 {
+    let logs: Vec<f64> = xs.iter().filter(|&&x| x > 0.0).map(|x| x.ln()).collect();
+    if logs.is_empty() {
+        return 0.0;
+    }
+    (logs.iter().sum::<f64>() / logs.len() as f64).exp()
+}
+
+/// Empirical CDF: sorted (value, fraction ≤ value) pairs (Fig. 8b).
+pub fn cdf(xs: &[f64]) -> Vec<(f64, f64)> {
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len() as f64;
+    sorted
+        .into_iter()
+        .enumerate()
+        .map(|(i, v)| (v, (i + 1) as f64 / n))
+        .collect()
+}
+
+/// Running max over problem size (Fig. 8a "peak throughput" transform):
+/// input (size, value) pairs, output sorted by size with cumulative max.
+pub fn running_peak(points: &[(f64, f64)]) -> Vec<(f64, f64)> {
+    let mut sorted: Vec<(f64, f64)> = points.to_vec();
+    sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut peak = f64::MIN;
+    sorted
+        .into_iter()
+        .map(|(s, v)| {
+            peak = peak.max(v);
+            (s, peak)
+        })
+        .collect()
+}
+
+/// Memory-bandwidth utilization, paper §4.2.3 (Fig. 9):
+/// `4·(NNZ + N·(2M + K)) / t / Bdw` — the *algorithmic* bytes over the
+/// platform's max bandwidth. Explicitly NOT an occupancy rate: an
+/// inefficient design can occupy 100% of its bandwidth doing nothing.
+pub fn bandwidth_utilization(
+    nnz: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    seconds: f64,
+    bandwidth_gbps: f64,
+) -> f64 {
+    let bytes = 4.0 * (nnz as f64 + n as f64 * (2.0 * m as f64 + k as f64));
+    bytes / seconds / (bandwidth_gbps * 1e9)
+}
+
+/// One sweep data point: a (matrix, N, platform) cell of the 1,400-SpMM
+/// evaluation.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// Matrix name (catalog id).
+    pub matrix: String,
+    /// Platform.
+    pub platform: Platform,
+    /// B/C column count.
+    pub n: usize,
+    /// Problem size in FLOP (Fig. 7 X-axis).
+    pub flops: u64,
+    /// Execution time, seconds (Fig. 7b Y-axis).
+    pub seconds: f64,
+    /// Throughput GFLOP/s (Fig. 7a Y-axis).
+    pub gflops: f64,
+    /// Bandwidth utilization in [0, 1] (Fig. 9).
+    pub bw_util: f64,
+    /// Energy efficiency FLOP/J (Fig. 10).
+    pub flop_per_joule: f64,
+}
+
+/// Per-platform summary over a sweep (drives the headline numbers).
+#[derive(Clone, Debug)]
+pub struct PlatformSummary {
+    /// Platform.
+    pub platform: Platform,
+    /// Geomean throughput (GFLOP/s).
+    pub geomean_gflops: f64,
+    /// Max achieved throughput (Table 3 "Peak Th.").
+    pub peak_gflops: f64,
+    /// Geomean bandwidth utilization.
+    pub geomean_bw_util: f64,
+    /// Max bandwidth utilization.
+    pub max_bw_util: f64,
+    /// Geomean energy efficiency (FLOP/J).
+    pub geomean_flop_per_joule: f64,
+    /// Max energy efficiency (FLOP/J).
+    pub max_flop_per_joule: f64,
+}
+
+/// Summarize one platform's points.
+pub fn summarize(platform: Platform, points: &[SweepPoint]) -> PlatformSummary {
+    let sel: Vec<&SweepPoint> = points.iter().filter(|p| p.platform == platform).collect();
+    let gf: Vec<f64> = sel.iter().map(|p| p.gflops).collect();
+    let bw: Vec<f64> = sel.iter().map(|p| p.bw_util).collect();
+    let ej: Vec<f64> = sel.iter().map(|p| p.flop_per_joule).collect();
+    PlatformSummary {
+        platform,
+        geomean_gflops: geomean(&gf),
+        peak_gflops: gf.iter().cloned().fold(0.0, f64::max),
+        geomean_bw_util: geomean(&bw),
+        max_bw_util: bw.iter().cloned().fold(0.0, f64::max),
+        geomean_flop_per_joule: geomean(&ej),
+        max_flop_per_joule: ej.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+/// Geomean speedup of `platform` over `baseline` on matched (matrix, N)
+/// cells — the paper's headline statistic ("2.50x geomean over K80").
+pub fn geomean_speedup(points: &[SweepPoint], platform: Platform, baseline: Platform) -> f64 {
+    use std::collections::HashMap;
+    let mut base: HashMap<(&str, usize), f64> = HashMap::new();
+    for p in points.iter().filter(|p| p.platform == baseline) {
+        base.insert((p.matrix.as_str(), p.n), p.seconds);
+    }
+    let ratios: Vec<f64> = points
+        .iter()
+        .filter(|p| p.platform == platform)
+        .filter_map(|p| base.get(&(p.matrix.as_str(), p.n)).map(|tb| tb / p.seconds))
+        .collect();
+    geomean(&ratios)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+        // Non-positive values are skipped, not poison.
+        assert!((geomean(&[0.0, 4.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_is_monotone_and_ends_at_one() {
+        let c = cdf(&[3.0, 1.0, 2.0, 2.0]);
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.last().unwrap().1, 1.0);
+        for w in c.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn running_peak_is_cumulative_max() {
+        let p = running_peak(&[(1.0, 5.0), (3.0, 2.0), (2.0, 7.0)]);
+        assert_eq!(p, vec![(1.0, 5.0), (2.0, 7.0), (3.0, 7.0)]);
+    }
+
+    #[test]
+    fn bandwidth_utilization_formula() {
+        // 4*(100 + 8*(2*10+20)) bytes in 1 s on 1 GB/s.
+        let u = bandwidth_utilization(100, 10, 20, 8, 1.0, 1e-9 * 1.0);
+        let bytes = 4.0 * (100.0 + 8.0 * 40.0);
+        assert!((u - bytes).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speedup_uses_matched_cells() {
+        let mk = |platform, matrix: &str, seconds| SweepPoint {
+            matrix: matrix.into(),
+            platform,
+            n: 8,
+            flops: 1,
+            seconds,
+            gflops: 1.0,
+            bw_util: 0.1,
+            flop_per_joule: 1.0,
+        };
+        let pts = vec![
+            mk(Platform::K80, "a", 2.0),
+            mk(Platform::Sextans, "a", 1.0),
+            mk(Platform::K80, "b", 8.0),
+            mk(Platform::Sextans, "b", 1.0),
+        ];
+        let s = geomean_speedup(&pts, Platform::Sextans, Platform::K80);
+        assert!((s - 4.0).abs() < 1e-12); // geomean(2, 8) = 4
+    }
+
+    #[test]
+    fn summarize_splits_platforms() {
+        let mk = |platform, gflops| SweepPoint {
+            matrix: "m".into(),
+            platform,
+            n: 8,
+            flops: 1,
+            seconds: 1.0,
+            gflops,
+            bw_util: 0.02,
+            flop_per_joule: 1e8,
+        };
+        let pts = vec![mk(Platform::K80, 10.0), mk(Platform::V100, 100.0)];
+        let k80 = summarize(Platform::K80, &pts);
+        assert_eq!(k80.peak_gflops, 10.0);
+        let v100 = summarize(Platform::V100, &pts);
+        assert_eq!(v100.peak_gflops, 100.0);
+    }
+}

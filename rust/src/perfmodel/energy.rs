@@ -1,0 +1,42 @@
+//! Energy model (paper §4.2.4, Fig. 10): efficiency = p / (t · Power),
+//! with platform powers from Table 3 (U280 measured by `xbutil`, GPUs by
+//! `nvidia-smi`, Sextans-P projected by P = C·V²·f frequency scaling).
+
+use super::platforms::Platform;
+
+/// Energy consumed by one SpMM execution, joules.
+pub fn energy_joules(platform: Platform, seconds: f64) -> f64 {
+    seconds * platform.spec().power_w
+}
+
+/// Energy efficiency in FLOP/J (the paper's Fig. 10 Y-axis).
+pub fn flop_per_joule(platform: Platform, flops: u64, seconds: f64) -> f64 {
+    flops as f64 / energy_joules(platform, seconds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_is_time_times_power() {
+        let e = energy_joules(Platform::Sextans, 2.0);
+        assert!((e - 104.0).abs() < 1e-9); // 52 W * 2 s
+    }
+
+    #[test]
+    fn efficiency_ordering_matches_power_ratio_at_equal_time() {
+        // At equal runtime, Sextans (52 W) is 130/52 = 2.5x more efficient
+        // than K80 per FLOP.
+        let f = 1_000_000u64;
+        let sx = flop_per_joule(Platform::Sextans, f, 1.0);
+        let k80 = flop_per_joule(Platform::K80, f, 1.0);
+        assert!((sx / k80 - 130.0 / 52.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sextans_p_power_projection() {
+        // §4.1: measured 52 W scaled by frequency increase to 96 W.
+        assert_eq!(Platform::SextansP.spec().power_w, 96.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Performance models: the §3.6.1 closed form, the GPU baselines, the four
+//! Table 3 platforms, and the energy model.
+
+pub mod analytical;
+pub mod energy;
+pub mod gpu;
+pub mod platforms;
+
+pub use gpu::{GpuModel, MatrixStats};
+pub use platforms::Platform;

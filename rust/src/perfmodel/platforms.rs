@@ -1,0 +1,197 @@
+//! The four evaluation platforms (paper Table 3) behind one interface.
+//!
+//! | platform | Tech | Freq | Bdw | On-chip | Power | Peak SpMM |
+//! |---|---|---|---|---|---|---|
+//! | Tesla K80  | 28 nm | 562 MHz | 480 GB/s | 24.5 MB | 130 W | 127.8 GF/s |
+//! | Sextans    | 16 nm | 189 MHz | 460 GB/s | 22.7 MB |  52 W | 181.1 GF/s |
+//! | Tesla V100 | 12 nm | 1.297 GHz | 900 GB/s | 33.5 MB | 287 W | 688.0 GF/s |
+//! | Sextans-P  | 16 nm | 350 MHz | 900 GB/s | 24.5 MB |  96 W | 343.6 GF/s |
+
+use crate::arch::{simulate, AcceleratorConfig, SimReport};
+use crate::sched::ScheduledMatrix;
+
+use super::gpu::{GpuModel, MatrixStats};
+
+/// Platform identifier (Table 3 rows, in the paper's order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Platform {
+    /// NVIDIA Tesla K80 (cuSPARSE csrmm model).
+    K80,
+    /// Sextans U280 prototype (cycle-level simulator).
+    Sextans,
+    /// NVIDIA Tesla V100 (cuSPARSE csrmm model).
+    V100,
+    /// Sextans-P projection (simulator at 350 MHz / 900 GB/s).
+    SextansP,
+}
+
+/// All four, in presentation order.
+pub const ALL: [Platform; 4] = [
+    Platform::K80,
+    Platform::Sextans,
+    Platform::V100,
+    Platform::SextansP,
+];
+
+/// Static platform metadata (Table 3 columns).
+#[derive(Clone, Debug)]
+pub struct PlatformSpec {
+    /// Display name.
+    pub name: &'static str,
+    /// Process node (nm).
+    pub tech_nm: u32,
+    /// Clock (MHz).
+    pub freq_mhz: f64,
+    /// Memory bandwidth (GB/s).
+    pub bandwidth_gbps: f64,
+    /// On-chip memory (MB).
+    pub onchip_mb: f64,
+    /// Power (W).
+    pub power_w: f64,
+    /// Peak SpMM throughput (GFLOP/s).
+    pub peak_gflops: f64,
+}
+
+impl Platform {
+    /// Table 3 metadata.
+    pub fn spec(&self) -> PlatformSpec {
+        match self {
+            Platform::K80 => PlatformSpec {
+                name: "Tesla K80",
+                tech_nm: 28,
+                freq_mhz: 562.0,
+                bandwidth_gbps: 480.0,
+                onchip_mb: 24.5,
+                power_w: 130.0,
+                peak_gflops: 127.8,
+            },
+            Platform::Sextans => PlatformSpec {
+                name: "SEXTANS",
+                tech_nm: 16,
+                freq_mhz: 189.0,
+                bandwidth_gbps: 460.0,
+                onchip_mb: 22.7,
+                power_w: 52.0,
+                peak_gflops: 181.1,
+            },
+            Platform::V100 => PlatformSpec {
+                name: "Tesla V100",
+                tech_nm: 12,
+                freq_mhz: 1297.0,
+                bandwidth_gbps: 900.0,
+                onchip_mb: 33.5,
+                power_w: 287.0,
+                peak_gflops: 688.0,
+            },
+            Platform::SextansP => PlatformSpec {
+                name: "SEXTANS-P",
+                tech_nm: 16,
+                freq_mhz: 350.0,
+                bandwidth_gbps: 900.0,
+                onchip_mb: 24.5,
+                power_w: 96.0,
+                peak_gflops: 343.6,
+            },
+        }
+    }
+
+    /// Is this one of the two FPGA/simulator rows?
+    pub fn is_sextans(&self) -> bool {
+        matches!(self, Platform::Sextans | Platform::SextansP)
+    }
+
+    /// Accelerator config for the Sextans rows.
+    pub fn accel_config(&self) -> Option<AcceleratorConfig> {
+        match self {
+            Platform::Sextans => Some(AcceleratorConfig::sextans_u280()),
+            Platform::SextansP => Some(AcceleratorConfig::sextans_p()),
+            _ => None,
+        }
+    }
+
+    /// GPU model for the GPU rows.
+    pub fn gpu_model(&self) -> Option<GpuModel> {
+        match self {
+            Platform::K80 => Some(GpuModel::k80()),
+            Platform::V100 => Some(GpuModel::v100()),
+            _ => None,
+        }
+    }
+
+    /// Execution time of one SpMM. Sextans rows need the scheduled image;
+    /// GPU rows need only the statistics.
+    pub fn seconds(&self, image: Option<&ScheduledMatrix>, stats: &MatrixStats, n: usize) -> f64 {
+        match (self.accel_config(), self.gpu_model()) {
+            (Some(cfg), _) => {
+                let sm = image.expect("Sextans platforms need a scheduled image");
+                simulate(sm, &cfg, n).seconds
+            }
+            (_, Some(gpu)) => gpu.seconds(stats, n),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Full simulator report (Sextans rows only).
+    pub fn sim_report(&self, image: &ScheduledMatrix, n: usize) -> Option<SimReport> {
+        self.accel_config().map(|cfg| simulate(image, &cfg, n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::preprocess;
+    use crate::sparse::{gen, rng::Rng};
+
+    #[test]
+    fn table3_rows_are_faithful() {
+        let k80 = Platform::K80.spec();
+        assert_eq!((k80.tech_nm, k80.power_w as u32), (28, 130));
+        let sx = Platform::Sextans.spec();
+        assert_eq!((sx.freq_mhz as u32, sx.bandwidth_gbps as u32), (189, 460));
+        let v100 = Platform::V100.spec();
+        assert_eq!(v100.peak_gflops, 688.0);
+        let sxp = Platform::SextansP.spec();
+        assert_eq!((sxp.freq_mhz as u32, sxp.bandwidth_gbps as u32), (350, 900));
+    }
+
+    #[test]
+    fn all_four_platforms_run_one_spmm() {
+        let mut rng = Rng::new(1);
+        let coo = gen::random_uniform(2048, 2048, 0.005, &mut rng);
+        let cfg = AcceleratorConfig::sextans_u280();
+        let image = preprocess(&coo, cfg.p(), cfg.k0, cfg.d);
+        let stats = MatrixStats {
+            m: coo.m,
+            k: coo.k,
+            nnz: coo.nnz(),
+            max_row_nnz: coo.max_row_nnz(),
+        };
+        for p in ALL {
+            let t = p.seconds(Some(&image), &stats, 64);
+            assert!(t > 0.0 && t < 1.0, "{:?}: {t}", p);
+        }
+    }
+
+    #[test]
+    fn sextans_config_matches_spec() {
+        for p in [Platform::Sextans, Platform::SextansP] {
+            let cfg = p.accel_config().unwrap();
+            let spec = p.spec();
+            assert_eq!(cfg.freq_mhz, spec.freq_mhz);
+            assert_eq!(cfg.hbm_gbps, spec.bandwidth_gbps);
+            assert_eq!(cfg.power_w, spec.power_w);
+        }
+    }
+
+    #[test]
+    fn gpu_models_match_spec() {
+        for p in [Platform::K80, Platform::V100] {
+            let gpu = p.gpu_model().unwrap();
+            let spec = p.spec();
+            assert_eq!(gpu.peak_spmm_gflops, spec.peak_gflops);
+            assert_eq!(gpu.mem_bw_gbps, spec.bandwidth_gbps);
+            assert_eq!(gpu.power_w, spec.power_w);
+        }
+    }
+}

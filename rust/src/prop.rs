@@ -1,0 +1,121 @@
+//! Minimal property-testing helper (offline substitute for `proptest`).
+//!
+//! Runs a property over `n` randomly generated cases from a deterministic
+//! base seed. On failure it retries the failing case once to confirm, then
+//! panics with the case seed so the exact input can be replayed:
+//!
+//! ```text
+//! property failed (case seed = 0x1234abcd): <your message>
+//! replay with: PROP_SEED=0x1234abcd cargo test <test name>
+//! ```
+//!
+//! Generators receive an [`crate::sparse::rng::Rng`] forked per case. No
+//! shrinking — cases are kept small by construction instead (the standard
+//! trade-off when vendoring is impossible).
+
+use crate::sparse::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` over `cases` random cases derived from `base_seed`.
+///
+/// If the env var `PROP_SEED` is set (hex or decimal), only that single case
+/// seed is run — the replay path.
+pub fn check<F>(name: &str, base_seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    if let Ok(replay) = std::env::var("PROP_SEED") {
+        let seed = parse_seed(&replay).expect("PROP_SEED must be hex (0x..) or decimal");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed on replay (case seed = {seed:#x}): {msg}");
+        }
+        return;
+    }
+    let mut meta = Rng::new(base_seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed (case {case}, case seed = {case_seed:#x}): {msg}\n\
+                 replay with: PROP_SEED={case_seed:#x} cargo test"
+            );
+        }
+    }
+}
+
+fn parse_seed(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+/// Assert two f32 slices are element-wise close (relative + absolute tol).
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let diff = (x - y).abs();
+        let tol = atol + rtol * x.abs().max(y.abs());
+        if !(diff <= tol) {
+            // NaN-aware: NaN != NaN fails here too.
+            return Err(format!(
+                "element {i}: {x} vs {y} (|diff| = {diff}, tol = {tol})"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 1, 32, |rng| {
+            let x = rng.below(100);
+            if x < 100 { Ok(()) } else { Err(format!("{x}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails` failed")]
+    fn check_reports_failures() {
+        check("always_fails", 2, 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn allclose_accepts_equal() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn allclose_rejects_distant() {
+        assert!(assert_allclose(&[1.0], &[2.0], 1e-6, 1e-6).is_err());
+    }
+
+    #[test]
+    fn allclose_rejects_nan() {
+        assert!(assert_allclose(&[f32::NAN], &[f32::NAN], 1e-3, 1e-3).is_err());
+    }
+
+    #[test]
+    fn allclose_rejects_len_mismatch() {
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-3, 1e-3).is_err());
+    }
+
+    #[test]
+    fn parse_seed_formats() {
+        assert_eq!(parse_seed("0x10"), Some(16));
+        assert_eq!(parse_seed("42"), Some(42));
+        assert_eq!(parse_seed("zz"), None);
+    }
+}

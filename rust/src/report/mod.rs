@@ -1,0 +1,75 @@
+//! Report generation: the evaluation sweep and per-table/figure drivers.
+
+pub mod experiments;
+pub mod sweep;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use sweep::{run_sweep, SweepOptions};
+
+/// Render an aligned text table.
+pub fn format_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut s = String::new();
+    let sep: String = widths
+        .iter()
+        .map(|w| "-".repeat(w + 2))
+        .collect::<Vec<_>>()
+        .join("+");
+    s.push_str(&format!("+{sep}+\n"));
+    let hdr: Vec<String> = headers
+        .iter()
+        .enumerate()
+        .map(|(i, h)| format!(" {:<width$} ", h, width = widths[i]))
+        .collect();
+    s.push_str(&format!("|{}|\n", hdr.join("|")));
+    s.push_str(&format!("+{sep}+\n"));
+    for row in rows {
+        let cells: Vec<String> = (0..ncols)
+            .map(|i| {
+                let empty = String::new();
+                let c = row.get(i).unwrap_or(&empty);
+                format!(" {:<width$} ", c, width = widths[i])
+            })
+            .collect();
+        s.push_str(&format!("|{}|\n", cells.join("|")));
+    }
+    s.push_str(&format!("+{sep}+\n"));
+    s
+}
+
+/// Write a report file.
+pub fn write_file(dir: &Path, name: &str, content: &str) -> Result<()> {
+    let path = dir.join(name);
+    std::fs::write(&path, content).with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns_columns() {
+        let t = format_table(
+            &["A", "Bee"],
+            &[vec!["xx".into(), "y".into()], vec!["1".into(), "22222".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(t.contains("Bee"));
+    }
+
+    #[test]
+    fn short_rows_are_padded() {
+        let t = format_table(&["A", "B"], &[vec!["only".into()]]);
+        assert!(t.contains("only"));
+    }
+}

@@ -1,0 +1,140 @@
+//! The 1,400-SpMM evaluation sweep (paper §4.1): 200 matrices × 7 N values
+//! × 4 platforms, producing the [`SweepPoint`]s every figure consumes.
+
+use crate::arch::AcceleratorConfig;
+use crate::metrics::{bandwidth_utilization, SweepPoint};
+use crate::perfmodel::energy::flop_per_joule;
+use crate::perfmodel::MatrixStats;
+use crate::sched::preprocess;
+use crate::sparse::catalog::{self, Scale, N_VALUES};
+
+use crate::arch::simulator::problem_flops;
+
+/// Sweep configuration.
+#[derive(Clone, Debug)]
+pub struct SweepOptions {
+    /// Catalog scale (Ci caps matrix sizes; Full is the headline run).
+    pub scale: Scale,
+    /// N values to sweep (default: the paper's 8..512).
+    pub n_values: Vec<usize>,
+    /// Optional cap on matrix count (smoke tests).
+    pub max_matrices: Option<usize>,
+    /// Take every `stride`-th matrix (1 = all): keeps reduced sweeps
+    /// representative across families instead of SNAP-heavy prefixes.
+    pub stride: usize,
+    /// Print progress to stderr.
+    pub verbose: bool,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            scale: Scale::Ci,
+            n_values: N_VALUES.to_vec(),
+            max_matrices: None,
+            stride: 1,
+            verbose: false,
+        }
+    }
+}
+
+/// Run the full sweep. The A image is preprocessed ONCE per matrix (the
+/// U280 and Sextans-P rows share P/K0/D, and GPUs only need statistics).
+pub fn run_sweep(opts: &SweepOptions) -> Vec<SweepPoint> {
+    let specs = catalog::catalog(opts.scale);
+    let stride = opts.stride.max(1);
+    let strided: Vec<&catalog::MatrixSpec> = specs.iter().step_by(stride).collect();
+    let count = opts.max_matrices.unwrap_or(strided.len()).min(strided.len());
+    let cfg = AcceleratorConfig::sextans_u280();
+    let mut points = Vec::with_capacity(count * opts.n_values.len() * 4);
+
+    for (idx, &spec) in strided.iter().take(count).enumerate() {
+        let coo = spec.build();
+        if opts.verbose && idx % 20 == 0 {
+            eprintln!(
+                "[sweep] {idx}/{count} {} ({}x{}, nnz {})",
+                spec.name,
+                coo.m,
+                coo.k,
+                coo.nnz()
+            );
+        }
+        let stats = MatrixStats {
+            m: coo.m,
+            k: coo.k,
+            nnz: coo.nnz(),
+            max_row_nnz: coo.max_row_nnz(),
+        };
+        let image = preprocess(&coo, cfg.p(), cfg.k0, cfg.d);
+        for &n in &opts.n_values {
+            let flops = problem_flops(stats.nnz, stats.m, n);
+            for platform in crate::perfmodel::platforms::ALL {
+                let seconds = platform.seconds(Some(&image), &stats, n);
+                let spec_p = platform.spec();
+                points.push(SweepPoint {
+                    matrix: spec.name.clone(),
+                    platform,
+                    n,
+                    flops,
+                    seconds,
+                    gflops: flops as f64 / seconds / 1e9,
+                    bw_util: bandwidth_utilization(
+                        stats.nnz,
+                        stats.m,
+                        stats.k,
+                        n,
+                        seconds,
+                        spec_p.bandwidth_gbps,
+                    ),
+                    flop_per_joule: flop_per_joule(platform, flops, seconds),
+                });
+            }
+        }
+    }
+    points
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::Platform;
+
+    fn small_sweep() -> Vec<SweepPoint> {
+        run_sweep(&SweepOptions {
+            scale: Scale::Ci,
+            n_values: vec![8, 64],
+            max_matrices: Some(6),
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn sweep_covers_all_cells() {
+        let pts = small_sweep();
+        assert_eq!(pts.len(), 6 * 2 * 4);
+    }
+
+    #[test]
+    fn all_points_have_positive_time_and_throughput() {
+        for p in small_sweep() {
+            assert!(p.seconds > 0.0, "{p:?}");
+            assert!(p.gflops > 0.0, "{p:?}");
+            assert!(p.bw_util > 0.0 && p.bw_util < 1.0, "{p:?}");
+            assert!(p.flop_per_joule > 0.0);
+        }
+    }
+
+    #[test]
+    fn flops_scale_linearly_with_n() {
+        let pts = small_sweep();
+        let a = pts
+            .iter()
+            .find(|p| p.n == 8 && p.platform == Platform::Sextans)
+            .unwrap();
+        let b = pts
+            .iter()
+            .find(|p| p.matrix == a.matrix && p.n == 64 && p.platform == Platform::Sextans)
+            .unwrap();
+        assert_eq!(b.flops, a.flops * 8);
+    }
+}

@@ -1,0 +1,364 @@
+//! PJRT execution engine: loads the AOT HLO artifacts and runs SpMM through
+//! the L1 Pallas kernels on the CPU PJRT client.
+//!
+//! Compilation happens once per artifact at [`Engine::load`] — the runtime
+//! analogue of place-and-route. After that, every SpMM is served by the
+//! fixed executables (HFlex: only buffer contents change). HLO *text* is the
+//! interchange format (see `python/compile/aot.py` and /opt/xla-example).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{self, ArtifactSpec};
+use crate::sched::{decode, preprocess, ScheduledMatrix};
+use crate::sparse::Coo;
+
+/// A fixed-capacity window variant ("bitstream") the engine can execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Variant {
+    /// Scheduled-slot capacity per kernel call.
+    pub nnz_cap: usize,
+    /// B window depth.
+    pub k0: usize,
+    /// C tile rows.
+    pub m_tile: usize,
+    /// Lane count.
+    pub n0: usize,
+}
+
+struct Compiled {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The engine: PJRT client + compiled executables, keyed by artifact name.
+pub struct Engine {
+    #[allow(dead_code)] // owns the PJRT runtime the executables run on
+    client: xla::PjRtClient,
+    windows: Vec<(Variant, Compiled)>,
+    comps: HashMap<usize, Compiled>, // m_tile -> comp_c executable
+    fused: Option<(Variant, usize, Compiled)>,
+    dense: Option<Compiled>,
+}
+
+impl Engine {
+    /// Load from the default artifacts dir (`$SEXTANS_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn load_default() -> Result<Engine> {
+        Self::load(&manifest::default_dir())
+    }
+
+    /// Load and compile every artifact in `dir`.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let specs = manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        let mut windows = Vec::new();
+        let mut comps = HashMap::new();
+        let mut fused = None;
+        let mut dense = None;
+        for spec in specs {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .map_err(wrap_xla)
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(wrap_xla)?;
+            let compiled = Compiled { spec: spec.clone(), exe };
+            match spec.kind.as_str() {
+                "spmm_window" => {
+                    let v = Variant {
+                        nnz_cap: spec.param("nnz_cap")?,
+                        k0: spec.param("k0")?,
+                        m_tile: spec.param("m_tile")?,
+                        n0: spec.param("n0")?,
+                    };
+                    windows.push((v, compiled));
+                }
+                "comp_c" => {
+                    comps.insert(spec.param("m_tile")?, compiled);
+                }
+                "spmm_fused" => {
+                    let v = Variant {
+                        nnz_cap: spec.param("nnz_cap")?,
+                        k0: spec.param("k0")?,
+                        m_tile: spec.param("m_tile")?,
+                        n0: spec.param("n0")?,
+                    };
+                    let nwin = spec.param("nwin")?;
+                    fused = Some((v, nwin, compiled));
+                }
+                "dense_tile" => dense = Some(compiled),
+                other => bail!("unknown artifact kind {other:?}"),
+            }
+        }
+        if windows.is_empty() {
+            bail!("no spmm_window artifacts in manifest");
+        }
+        // Smallest-capacity-first ordering for variant selection.
+        windows.sort_by_key(|(v, _)| (v.m_tile, v.nnz_cap));
+        Ok(Engine { client, windows, comps, fused, dense })
+    }
+
+    /// Available window variants (capacity-sorted).
+    pub fn variants(&self) -> Vec<Variant> {
+        self.windows.iter().map(|(v, _)| *v).collect()
+    }
+
+    /// Pick the smallest variant able to hold `rows_per_pe` C rows. The
+    /// image must then be preprocessed with the variant's `k0`.
+    pub fn select_variant(&self, rows_per_pe: usize) -> Result<Variant> {
+        self.windows
+            .iter()
+            .map(|(v, _)| *v)
+            .find(|v| v.m_tile >= rows_per_pe)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no variant fits {rows_per_pe} rows/PE (largest m_tile = {})",
+                    self.windows.last().map(|(v, _)| v.m_tile).unwrap_or(0)
+                )
+            })
+    }
+
+    /// Preprocess a matrix for execution on this engine with `p` PEs and
+    /// RAW distance `d`: selects a variant and schedules for its K0.
+    pub fn plan(&self, a: &Coo, p: usize, d: usize) -> Result<(Variant, ScheduledMatrix)> {
+        let rows_per_pe = a.m.div_ceil(p);
+        let v = self.select_variant(rows_per_pe)?;
+        Ok((v, preprocess(a, p, v.k0, d)))
+    }
+
+    fn window_exe(&self, v: Variant) -> Result<&Compiled> {
+        self.windows
+            .iter()
+            .find(|(w, _)| *w == v)
+            .map(|(_, c)| c)
+            .ok_or_else(|| anyhow!("variant {v:?} not loaded"))
+    }
+
+    /// Execute one window kernel call: C tile += scheduled slots × B window.
+    /// All buffers must match the variant's shapes exactly.
+    pub fn run_window(
+        &self,
+        v: Variant,
+        rows: &[i32],
+        cols: &[i32],
+        vals: &[f32],
+        b_win: &[f32],
+        c_acc: &[f32],
+    ) -> Result<Vec<f32>> {
+        debug_assert_eq!(rows.len(), v.nnz_cap);
+        debug_assert_eq!(b_win.len(), v.k0 * v.n0);
+        debug_assert_eq!(c_acc.len(), v.m_tile * v.n0);
+        let compiled = self.window_exe(v)?;
+        let args = [
+            xla::Literal::vec1(rows),
+            xla::Literal::vec1(cols),
+            xla::Literal::vec1(vals),
+            xla::Literal::vec1(b_win)
+                .reshape(&[v.k0 as i64, v.n0 as i64])
+                .map_err(wrap_xla)?,
+            xla::Literal::vec1(c_acc)
+                .reshape(&[v.m_tile as i64, v.n0 as i64])
+                .map_err(wrap_xla)?,
+        ];
+        run1(&compiled.exe, &args)
+    }
+
+    /// Execute the Comp-C kernel: `alpha * c_ab + beta * c_in`.
+    pub fn run_comp(
+        &self,
+        m_tile: usize,
+        n0: usize,
+        c_ab: &[f32],
+        c_in: &[f32],
+        alpha: f32,
+        beta: f32,
+    ) -> Result<Vec<f32>> {
+        let compiled = self
+            .comps
+            .get(&m_tile)
+            .ok_or_else(|| anyhow!("no comp_c artifact for m_tile={m_tile}"))?;
+        let args = [
+            xla::Literal::vec1(c_ab)
+                .reshape(&[m_tile as i64, n0 as i64])
+                .map_err(wrap_xla)?,
+            xla::Literal::vec1(c_in)
+                .reshape(&[m_tile as i64, n0 as i64])
+                .map_err(wrap_xla)?,
+            xla::Literal::vec1(&[alpha]).reshape(&[1, 1]).map_err(wrap_xla)?,
+            xla::Literal::vec1(&[beta]).reshape(&[1, 1]).map_err(wrap_xla)?,
+        ];
+        run1(&compiled.exe, &args)
+    }
+
+    /// Fused-tile variant, if loaded: (variant, nwin).
+    pub fn fused_variant(&self) -> Option<(Variant, usize)> {
+        self.fused.as_ref().map(|(v, nwin, _)| (*v, *nwin))
+    }
+
+    /// Execute the fused tile artifact (scan over nwin windows + Comp-C).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_fused(
+        &self,
+        rows: &[i32],
+        cols: &[i32],
+        vals: &[f32],
+        b_wins: &[f32],
+        c_in: &[f32],
+        alpha: f32,
+        beta: f32,
+    ) -> Result<Vec<f32>> {
+        let (v, nwin, compiled) = self
+            .fused
+            .as_ref()
+            .ok_or_else(|| anyhow!("no fused artifact loaded"))?;
+        let (v, nwin) = (*v, *nwin);
+        debug_assert_eq!(rows.len(), nwin * v.nnz_cap);
+        let args = [
+            xla::Literal::vec1(rows)
+                .reshape(&[nwin as i64, v.nnz_cap as i64])
+                .map_err(wrap_xla)?,
+            xla::Literal::vec1(cols)
+                .reshape(&[nwin as i64, v.nnz_cap as i64])
+                .map_err(wrap_xla)?,
+            xla::Literal::vec1(vals)
+                .reshape(&[nwin as i64, v.nnz_cap as i64])
+                .map_err(wrap_xla)?,
+            xla::Literal::vec1(b_wins)
+                .reshape(&[nwin as i64, v.k0 as i64, v.n0 as i64])
+                .map_err(wrap_xla)?,
+            xla::Literal::vec1(c_in)
+                .reshape(&[v.m_tile as i64, v.n0 as i64])
+                .map_err(wrap_xla)?,
+            xla::Literal::vec1(&[alpha]).reshape(&[1, 1]).map_err(wrap_xla)?,
+            xla::Literal::vec1(&[beta]).reshape(&[1, 1]).map_err(wrap_xla)?,
+        ];
+        run1(&compiled.exe, &args)
+    }
+
+    /// Execute the dense tile matmul artifact (MXU path), if loaded.
+    pub fn run_dense(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let compiled = self.dense.as_ref().ok_or_else(|| anyhow!("no dense artifact"))?;
+        let m_t = compiled.spec.param("m_t")?;
+        let k_t = compiled.spec.param("k_t")?;
+        let n_t = compiled.spec.param("n_t")?;
+        debug_assert_eq!(a.len(), m_t * k_t);
+        debug_assert_eq!(b.len(), k_t * n_t);
+        let args = [
+            xla::Literal::vec1(a)
+                .reshape(&[m_t as i64, k_t as i64])
+                .map_err(wrap_xla)?,
+            xla::Literal::vec1(b)
+                .reshape(&[k_t as i64, n_t as i64])
+                .map_err(wrap_xla)?,
+        ];
+        run1(&compiled.exe, &args)
+    }
+
+    /// Full SpMM `C = alpha*A@B + beta*C` through the PJRT kernels: the
+    /// whole request-path compute runs inside XLA executables; rust only
+    /// marshals windows — exactly the L3/L1 split of the architecture.
+    ///
+    /// The image must have been produced by [`Engine::plan`] (its `k0` must
+    /// equal the chosen variant's and every PE tile must fit `m_tile`).
+    pub fn spmm(
+        &self,
+        v: Variant,
+        sm: &ScheduledMatrix,
+        b: &[f32],
+        c_in: &[f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<Vec<f32>> {
+        if sm.k0 != v.k0 {
+            bail!("image k0 {} != variant k0 {} (use Engine::plan)", sm.k0, v.k0);
+        }
+        let rows_per_pe = sm.rows_per_pe();
+        if rows_per_pe > v.m_tile {
+            bail!("{rows_per_pe} rows/PE exceeds variant m_tile {}", v.m_tile);
+        }
+        if b.len() != sm.k * n || c_in.len() != sm.m * n {
+            bail!("B/C shape mismatch");
+        }
+        let n_slices = n.div_ceil(v.n0);
+        let mut c_out = vec![0f32; sm.m * n];
+
+        // Reusable padded buffers.
+        let mut rows_buf = vec![0i32; v.nnz_cap];
+        let mut cols_buf = vec![0i32; v.nnz_cap];
+        let mut vals_buf = vec![0f32; v.nnz_cap];
+        let mut b_win = vec![0f32; v.k0 * v.n0];
+
+        for slice in 0..n_slices {
+            let q0 = slice * v.n0;
+            let qw = v.n0.min(n - q0);
+            for (pe, stream) in sm.streams.iter().enumerate() {
+                let mut c_tile = vec![0f32; v.m_tile * v.n0];
+                for j in 0..sm.num_windows {
+                    // Stream the B window for (j, slice) with zero padding.
+                    b_win.iter_mut().for_each(|x| *x = 0.0);
+                    let kbase = j * v.k0;
+                    let kw = v.k0.min(sm.k - kbase.min(sm.k));
+                    for kk in 0..kw {
+                        let src = &b[(kbase + kk) * n + q0..(kbase + kk) * n + q0 + qw];
+                        b_win[kk * v.n0..kk * v.n0 + qw].copy_from_slice(src);
+                    }
+                    // Feed scheduled slots in nnz_cap chunks (fixed shape).
+                    let slots = &stream.encoded[stream.q.window_range(j)];
+                    for chunk in slots.chunks(v.nnz_cap) {
+                        rows_buf.iter_mut().for_each(|x| *x = 0);
+                        cols_buf.iter_mut().for_each(|x| *x = 0);
+                        vals_buf.iter_mut().for_each(|x| *x = 0.0);
+                        for (t, &word) in chunk.iter().enumerate() {
+                            let nz = decode(word);
+                            rows_buf[t] = nz.row as i32;
+                            cols_buf[t] = nz.col as i32;
+                            vals_buf[t] = nz.val;
+                        }
+                        c_tile = self.run_window(
+                            v, &rows_buf, &cols_buf, &vals_buf, &b_win, &c_tile,
+                        )?;
+                    }
+                }
+                // Comp-C for this PE's rows, then scatter to C_out.
+                let mut c_in_tile = vec![0f32; v.m_tile * v.n0];
+                for t in 0..rows_per_pe {
+                    let gr = t * sm.p + pe;
+                    if gr >= sm.m {
+                        break;
+                    }
+                    c_in_tile[t * v.n0..t * v.n0 + qw]
+                        .copy_from_slice(&c_in[gr * n + q0..gr * n + q0 + qw]);
+                }
+                let combined =
+                    self.run_comp(v.m_tile, v.n0, &c_tile, &c_in_tile, alpha, beta)?;
+                for t in 0..rows_per_pe {
+                    let gr = t * sm.p + pe;
+                    if gr >= sm.m {
+                        break;
+                    }
+                    c_out[gr * n + q0..gr * n + q0 + qw]
+                        .copy_from_slice(&combined[t * v.n0..t * v.n0 + qw]);
+                }
+            }
+        }
+        Ok(c_out)
+    }
+}
+
+fn run1(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<f32>> {
+    let result = exe.execute::<xla::Literal>(args).map_err(wrap_xla)?;
+    let lit = result[0][0].to_literal_sync().map_err(wrap_xla)?;
+    // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+    let out = lit.to_tuple1().map_err(wrap_xla)?;
+    out.to_vec::<f32>().map_err(wrap_xla)
+}
+
+fn wrap_xla(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}

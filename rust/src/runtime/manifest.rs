@@ -1,0 +1,115 @@
+//! Artifact manifest parsing — the contract with `python/compile/aot.py`.
+//!
+//! `artifacts/manifest.tsv` has one line per AOT artifact:
+//! `kind \t name \t file \t key=value \t key=value ...`
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One artifact entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    /// Artifact kind: `spmm_window`, `comp_c`, `spmm_fused`, `dense_tile`.
+    pub kind: String,
+    /// Unique name (e.g. `win_m`).
+    pub name: String,
+    /// HLO text filename, relative to the artifacts dir.
+    pub file: String,
+    /// Integer parameters (nnz_cap, k0, m_tile, n0, nwin, ...).
+    pub params: HashMap<String, usize>,
+}
+
+impl ArtifactSpec {
+    /// Required parameter lookup.
+    pub fn param(&self, key: &str) -> Result<usize> {
+        self.params
+            .get(key)
+            .copied()
+            .with_context(|| format!("artifact {} missing param {key}", self.name))
+    }
+}
+
+/// Parse manifest text.
+pub fn parse(text: &str) -> Result<Vec<ArtifactSpec>> {
+    let mut specs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split('\t').collect();
+        if fields.len() < 3 {
+            bail!("manifest line {}: expected >= 3 tab fields", lineno + 1);
+        }
+        let mut params = HashMap::new();
+        for kv in &fields[3..] {
+            let (k, v) = kv
+                .split_once('=')
+                .with_context(|| format!("manifest line {}: bad param {kv:?}", lineno + 1))?;
+            params.insert(
+                k.to_string(),
+                v.parse::<usize>()
+                    .with_context(|| format!("manifest line {}: non-integer {kv:?}", lineno + 1))?,
+            );
+        }
+        specs.push(ArtifactSpec {
+            kind: fields[0].to_string(),
+            name: fields[1].to_string(),
+            file: fields[2].to_string(),
+            params,
+        });
+    }
+    if specs.is_empty() {
+        bail!("empty manifest");
+    }
+    Ok(specs)
+}
+
+/// Load and parse `<dir>/manifest.tsv`.
+pub fn load(dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let path = dir.join("manifest.tsv");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+    parse(&text)
+}
+
+/// Artifacts directory: `$SEXTANS_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("SEXTANS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "spmm_window\twin_s\twin_s.hlo.txt\tk0=128\tm_tile=128\tn0=8\tnnz_cap=256\n\
+comp_c\tcomp_win_s\tcomp_win_s.hlo.txt\tm_tile=128\tn0=8\n";
+
+    #[test]
+    fn parses_kinds_names_params() {
+        let specs = parse(SAMPLE).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].kind, "spmm_window");
+        assert_eq!(specs[0].param("nnz_cap").unwrap(), 256);
+        assert_eq!(specs[1].param("m_tile").unwrap(), 128);
+        assert!(specs[1].param("nnz_cap").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("").is_err());
+        assert!(parse("just-one-field\n").is_err());
+        assert!(parse("a\tb\tc\tnot_kv\n").is_err());
+        assert!(parse("a\tb\tc\tk=notnum\n").is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let text = format!("# header\n\n{SAMPLE}");
+        assert_eq!(parse(&text).unwrap().len(), 2);
+    }
+}

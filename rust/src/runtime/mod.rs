@@ -1,0 +1,8 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute the L1
+//! Pallas kernels from the rust request path. Python never runs here.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Variant};
+pub use manifest::ArtifactSpec;

@@ -1,0 +1,131 @@
+//! 64-bit non-zero encoding (paper §3.2, Fig. 4 step 1).
+//!
+//! "One non-zero originally consumes 96 bits ... we encode the row index,
+//! column index, and value of the non-zero in a 64-bit element a-64b":
+//!
+//! ```text
+//!   bits [63:46] — 18-bit compressed row index  (C scratchpad depth 12,288 needs 14;
+//!                                                18 leaves headroom, paper's choice)
+//!   bits [45:32] — 14-bit compressed col index  (B window depth 4,096 needs 12)
+//!   bits [31: 0] — FP32 value bit pattern
+//! ```
+//!
+//! Bubbles travel in-band as [`BUBBLE`] (row 0, col 0, value +0.0): the PE
+//! multiplies by 0.0 and accumulates harmlessly, exactly how a real
+//! pipeline slot idles without a stall signal.
+
+use super::partition::Nz;
+
+/// Row field width (bits).
+pub const ROW_BITS: u32 = 18;
+/// Column field width (bits).
+pub const COL_BITS: u32 = 14;
+/// Max encodable compressed row index.
+pub const MAX_ROW: u32 = (1 << ROW_BITS) - 1;
+/// Max encodable compressed column index.
+pub const MAX_COL: u16 = ((1u32 << COL_BITS) - 1) as u16;
+
+/// The in-band bubble: value +0.0 at (0, 0) — a no-op accumulate.
+pub const BUBBLE: u64 = 0;
+
+/// Pack a non-zero. Panics (debug) if indices exceed field widths; the
+/// partitioner guarantees they cannot for paper-config accelerators
+/// (rows/PE ≤ 12,288 < 2^18, K0 = 4,096 ≤ 2^14).
+#[inline]
+pub fn encode(nz: Nz) -> u64 {
+    debug_assert!(nz.row <= MAX_ROW, "row {} exceeds {ROW_BITS} bits", nz.row);
+    debug_assert!(nz.col <= MAX_COL, "col {} exceeds {COL_BITS} bits", nz.col);
+    ((nz.row as u64) << 46) | ((nz.col as u64) << 32) | nz.val.to_bits() as u64
+}
+
+/// Encode a schedule slot (bubble -> [`BUBBLE`]).
+#[inline]
+pub fn encode_slot(slot: Option<Nz>) -> u64 {
+    match slot {
+        Some(nz) => encode(nz),
+        None => BUBBLE,
+    }
+}
+
+/// Unpack. A [`BUBBLE`] decodes to `Nz { row: 0, col: 0, val: 0.0 }`, which
+/// is also what the PE datapath wants (multiply-accumulate of zero).
+#[inline]
+pub fn decode(word: u64) -> Nz {
+    Nz {
+        row: (word >> 46) as u32 & MAX_ROW,
+        col: ((word >> 32) as u16) & MAX_COL,
+        val: f32::from_bits(word as u32),
+    }
+}
+
+/// True if the word is an idle slot (+0.0 value — note -0.0 or a true zero
+/// value is also a no-op arithmetically, so this is a fast-path hint, not a
+/// semantic discriminator).
+#[inline]
+pub fn is_bubble(word: u64) -> bool {
+    word as u32 == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn roundtrip_simple() {
+        let nz = Nz { row: 1234, col: 567, val: -3.25 };
+        assert_eq!(decode(encode(nz)), nz);
+    }
+
+    #[test]
+    fn roundtrip_extremes() {
+        for (row, col) in [(0, 0), (MAX_ROW, MAX_COL), (0, MAX_COL), (MAX_ROW, 0)] {
+            for val in [0.0f32, -0.0, 1.0, f32::MIN_POSITIVE, f32::MAX, -f32::MAX] {
+                let nz = Nz { row, col, val };
+                let d = decode(encode(nz));
+                assert_eq!((d.row, d.col), (row, col));
+                assert_eq!(d.val.to_bits(), val.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn bubble_is_harmless_zero() {
+        let d = decode(BUBBLE);
+        assert_eq!((d.row, d.col), (0, 0));
+        assert_eq!(d.val, 0.0);
+        assert!(is_bubble(BUBBLE));
+        assert!(!is_bubble(encode(Nz { row: 0, col: 0, val: 1.0 })));
+    }
+
+    #[test]
+    fn encode_slot_maps_none_to_bubble() {
+        assert_eq!(encode_slot(None), BUBBLE);
+        let nz = Nz { row: 3, col: 4, val: 2.0 };
+        assert_eq!(encode_slot(Some(nz)), encode(nz));
+    }
+
+    #[test]
+    fn fields_do_not_overlap_property() {
+        prop::check("encode_roundtrip", 0xE6C, 64, |rng| {
+            let nz = Nz {
+                row: rng.below(1 << 18) as u32,
+                col: rng.below(1 << 14) as u16,
+                val: f32::from_bits(rng.next_u64() as u32),
+            };
+            let d = decode(encode(nz));
+            if (d.row, d.col) != (nz.row, nz.col) || d.val.to_bits() != nz.val.to_bits() {
+                return Err(format!("{nz:?} -> {d:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn paper_width_budget_holds() {
+        // Paper §3.2: URAM depth 12,288 (needs 14 bits < 18 available),
+        // window size 4,096 (needs 12 bits < 14 available).
+        assert!(12_288u32 <= MAX_ROW);
+        assert!(4_096u16 <= MAX_COL + 1);
+    }
+}

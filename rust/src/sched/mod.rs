@@ -1,0 +1,19 @@
+//! Preprocessing pipeline: partitioning (Eq. 2–4), PE-aware out-of-order
+//! non-zero scheduling (§3.3, Fig. 5), 64-bit encoding (§3.2), and the
+//! HFlex pointer list Q (§3.4).
+//!
+//! The paper ships this as "a host C++ wrapper for users"; here it is the
+//! `sextans::sched` module, invoked once per matrix (build path), producing
+//! a [`preprocess::ScheduledMatrix`] the accelerator (simulator or PJRT
+//! engine) consumes without further host work.
+
+pub mod encode;
+pub mod ooo;
+pub mod partition;
+pub mod pointer;
+pub mod preprocess;
+
+pub use encode::{decode, encode, BUBBLE};
+pub use ooo::{schedule_ooo, Schedule};
+pub use partition::{partition, Nz, WindowedMatrix};
+pub use preprocess::{preprocess, PeStream, ScheduledMatrix};

@@ -1,0 +1,363 @@
+//! PE-aware out-of-order non-zero scheduling (paper §3.3, Fig. 5).
+//!
+//! The floating-point accumulator on the target platform has a RAW
+//! dependency distance `D` (7–10 cycles on Xilinx FPGAs; the paper's worked
+//! example uses D=4): a non-zero writing row `r` must not issue within `D`
+//! cycles of the previous non-zero that wrote row `r`, or HLS schedules a
+//! large II. The scheduler reorders the column-major non-zero stream
+//! Tomasulo-style: each non-zero issues at the **earliest free cycle ≥
+//! last_issue[row] + D**, so later non-conflicting elements fill the bubbles
+//! earlier conflicts created, and the pipeline runs at II=1.
+//!
+//! This greedy rule reproduces the paper's Fig. 5 walkthrough cycle-for-cycle
+//! (see `fig5_worked_example` below) including the 15-cycle column-major and
+//! 28-cycle row-major in-order baselines.
+
+use std::collections::BTreeSet;
+
+use super::partition::Nz;
+
+/// A scheduled window: `slots[c]` is the non-zero issued at cycle `c`, or
+/// `None` for a pipeline bubble.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    /// One slot per cycle.
+    pub slots: Vec<Option<Nz>>,
+    /// Real non-zeros (== input length).
+    pub nnz: usize,
+}
+
+impl Schedule {
+    /// Total cycles consumed by this window's PE region (slot count).
+    #[inline]
+    pub fn cycles(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Bubble (idle) slots.
+    pub fn bubbles(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    /// Effective initiation interval = cycles / nnz (1.0 == perfect II=1).
+    pub fn effective_ii(&self) -> f64 {
+        if self.nnz == 0 {
+            return 1.0;
+        }
+        self.cycles() as f64 / self.nnz as f64
+    }
+}
+
+/// Scratch buffers reused across windows (hot-path allocation control).
+#[derive(Default)]
+pub struct Scratch {
+    last_issue: Vec<i64>,
+    touched: Vec<u32>,
+}
+
+/// Out-of-order schedule of a column-major non-zero stream under RAW
+/// distance `d`. `rows_hint` bounds the compressed row index space (pass
+/// `rows_per_pe`; it sizes the per-row issue table).
+pub fn schedule_ooo(nzs: &[Nz], d: usize, rows_hint: usize, scratch: &mut Scratch) -> Schedule {
+    let d = d.max(1);
+    if nzs.is_empty() {
+        return Schedule::default();
+    }
+    // Per-row last issue cycle, -inf encoded as -(d as i64) so row-first
+    // issues are unconstrained.
+    let need = rows_hint.max(nzs.iter().map(|n| n.row as usize + 1).max().unwrap_or(1));
+    if scratch.last_issue.len() < need {
+        scratch.last_issue.resize(need, i64::MIN / 2);
+    }
+    for &r in &scratch.touched {
+        scratch.last_issue[r as usize] = i64::MIN / 2;
+    }
+    scratch.touched.clear();
+
+    let mut slots: Vec<Option<Nz>> = Vec::with_capacity(nzs.len() + d);
+    // Free slots strictly below `slots.len()`; the tail is implicitly free.
+    let mut holes: BTreeSet<usize> = BTreeSet::new();
+
+    for &nz in nzs {
+        let row = nz.row as usize;
+        let earliest = scratch.last_issue[row].saturating_add(d as i64).max(0) as usize;
+        // First free cycle >= earliest: a hole, or the tail.
+        let cycle = match holes.range(earliest..).next().copied() {
+            Some(h) => {
+                holes.remove(&h);
+                h
+            }
+            None => {
+                let tail = slots.len().max(earliest);
+                // Cycles between the old tail and the chosen one are bubbles
+                // (eligible for later fills).
+                for b in slots.len()..tail {
+                    holes.insert(b);
+                    slots.push(None);
+                }
+                slots.push(None);
+                tail
+            }
+        };
+        slots[cycle] = Some(nz);
+        if scratch.last_issue[row] == i64::MIN / 2 {
+            scratch.touched.push(nz.row);
+        }
+        scratch.last_issue[row] = cycle as i64;
+    }
+
+    Schedule { slots, nnz: nzs.len() }
+}
+
+/// Cycle count of **in-order column-major** issue (no reordering): each
+/// element stalls until `max(prev_cycle + 1, last_issue[row] + d)`.
+/// This is the "non-zero based parallelization without OoO" baseline the
+/// paper's Fig. 5 caption quotes as 15 cycles.
+pub fn cycles_inorder(nzs: &[Nz], d: usize, rows_hint: usize) -> usize {
+    let d = d.max(1) as i64;
+    if nzs.is_empty() {
+        return 0;
+    }
+    let need = rows_hint.max(nzs.iter().map(|n| n.row as usize + 1).max().unwrap_or(1));
+    let mut last = vec![i64::MIN / 2; need];
+    let mut cycle: i64 = -1;
+    for nz in nzs {
+        let row = nz.row as usize;
+        cycle = (cycle + 1).max(last[row] + d);
+        last[row] = cycle;
+    }
+    (cycle + 1) as usize
+}
+
+/// Cycle count of **in-order row-major** issue (CSR streaming, the paper's
+/// Table 1 baseline): same stall rule over a row-major-sorted copy. The
+/// Fig. 5 caption quotes 28 cycles for the worked example.
+pub fn cycles_inorder_rowmajor(nzs: &[Nz], d: usize, rows_hint: usize) -> usize {
+    let mut sorted = nzs.to_vec();
+    sorted.sort_by_key(|n| (n.row, n.col));
+    cycles_inorder(&sorted, d, rows_hint)
+}
+
+/// Verify a schedule respects the RAW distance and is a permutation of the
+/// input. Returns a human-readable violation if any. (Test/debug aid; the
+/// property tests drive it.)
+pub fn validate(schedule: &Schedule, input: &[Nz], d: usize) -> Result<(), String> {
+    let d = d.max(1);
+    // Permutation check (multiset equality on bit patterns).
+    let key = |n: &Nz| (n.row, n.col, n.val.to_bits());
+    let mut a: Vec<_> = input.iter().map(key).collect();
+    let mut b: Vec<_> = schedule.slots.iter().flatten().map(key).collect();
+    a.sort_unstable();
+    b.sort_unstable();
+    if a != b {
+        return Err("scheduled slots are not a permutation of the input".into());
+    }
+    if schedule.nnz != input.len() {
+        return Err(format!("nnz {} != input {}", schedule.nnz, input.len()));
+    }
+    // RAW check.
+    let mut last: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+    for (c, slot) in schedule.slots.iter().enumerate() {
+        if let Some(nz) = slot {
+            if let Some(&prev) = last.get(&nz.row) {
+                if c - prev < d {
+                    return Err(format!(
+                        "RAW violation: row {} issued at cycles {prev} and {c} (D={d})",
+                        nz.row
+                    ));
+                }
+            }
+            last.insert(nz.row, c);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    fn nz(row: u32, col: u16) -> Nz {
+        Nz { row, col, val: 1.0 }
+    }
+
+    /// Paper Fig. 5 (a)–(h): the worked example, D = 4.
+    /// Column-major input: (0,0) (2,0) (3,0) (1,1) (2,1) (0,2) (2,2) (3,2)
+    /// (0,3) (3,3). Expected issue cycles: 0 1 2 3 5 4 9 6 8 10, one bubble
+    /// at cycle 7, 11 total slots.
+    #[test]
+    fn fig5_worked_example() {
+        let input = vec![
+            nz(0, 0),
+            nz(2, 0),
+            nz(3, 0),
+            nz(1, 1),
+            nz(2, 1),
+            nz(0, 2),
+            nz(2, 2),
+            nz(3, 2),
+            nz(0, 3),
+            nz(3, 3),
+        ];
+        let s = schedule_ooo(&input, 4, 4, &mut Scratch::default());
+        let cycle_of = |row: u32, col: u16| {
+            s.slots
+                .iter()
+                .position(|x| matches!(x, Some(n) if n.row == row && n.col == col))
+                .unwrap()
+        };
+        assert_eq!(cycle_of(0, 0), 0);
+        assert_eq!(cycle_of(2, 0), 1);
+        assert_eq!(cycle_of(3, 0), 2);
+        assert_eq!(cycle_of(1, 1), 3);
+        assert_eq!(cycle_of(2, 1), 5, "yellow (2,1) must defer to cycle 5");
+        assert_eq!(cycle_of(0, 2), 4, "blue (0,2) must fill the bubble at 4");
+        assert_eq!(cycle_of(2, 2), 9);
+        assert_eq!(cycle_of(3, 2), 6);
+        assert_eq!(cycle_of(0, 3), 8);
+        assert_eq!(cycle_of(3, 3), 10);
+        assert_eq!(s.cycles(), 11, "OoO schedule takes 11 cycles");
+        assert_eq!(s.bubbles(), 1, "one bubble (cycle 7)");
+        assert!(s.slots[7].is_none());
+
+        // Fig. 5 caption: in-order baselines take 15 (column-major) and 28
+        // (row-major) cycles.
+        assert_eq!(cycles_inorder(&input, 4, 4), 15);
+        assert_eq!(cycles_inorder_rowmajor(&input, 4, 4), 28);
+    }
+
+    #[test]
+    fn empty_input_empty_schedule() {
+        let s = schedule_ooo(&[], 8, 0, &mut Scratch::default());
+        assert_eq!(s.cycles(), 0);
+        assert_eq!(cycles_inorder(&[], 8, 0), 0);
+    }
+
+    #[test]
+    fn single_element_single_cycle() {
+        let s = schedule_ooo(&[nz(5, 3)], 8, 6, &mut Scratch::default());
+        assert_eq!(s.cycles(), 1);
+        assert_eq!(s.bubbles(), 0);
+    }
+
+    #[test]
+    fn conflict_free_stream_is_ii1_dense() {
+        // All distinct rows: no bubbles possible.
+        let input: Vec<Nz> = (0..64).map(|i| nz(i, 0)).collect();
+        let s = schedule_ooo(&input, 8, 64, &mut Scratch::default());
+        assert_eq!(s.cycles(), 64);
+        assert_eq!(s.bubbles(), 0);
+        assert!((s.effective_ii() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn worst_case_same_row_spreads_by_d() {
+        let input: Vec<Nz> = (0..8).map(|i| nz(0, i)).collect();
+        let s = schedule_ooo(&input, 5, 1, &mut Scratch::default());
+        assert_eq!(s.cycles(), 7 * 5 + 1); // issues at 0,5,10,...,35
+        assert_eq!(s.bubbles(), 36 - 8);
+        validate(&s, &input, 5).unwrap();
+    }
+
+    #[test]
+    fn d1_means_no_constraint() {
+        let input: Vec<Nz> = (0..32).map(|i| nz(i % 3, i as u16)).collect();
+        let s = schedule_ooo(&input, 1, 3, &mut Scratch::default());
+        assert_eq!(s.cycles(), 32);
+        assert_eq!(s.bubbles(), 0);
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean_across_windows() {
+        let mut scratch = Scratch::default();
+        let a: Vec<Nz> = (0..16).map(|i| nz(i % 4, i as u16)).collect();
+        let s1 = schedule_ooo(&a, 4, 4, &mut scratch);
+        let s1b = schedule_ooo(&a, 4, 4, &mut scratch);
+        assert_eq!(s1.slots.len(), s1b.slots.len());
+        // Same input, same scratch -> identical schedule.
+        for (x, y) in s1.slots.iter().zip(s1b.slots.iter()) {
+            assert_eq!(x.is_none(), y.is_none());
+        }
+    }
+
+    #[test]
+    fn ooo_never_slower_than_inorder_property() {
+        prop::check("ooo_beats_inorder", 0x000, 64, |rng| {
+            let n = 1 + rng.index(256);
+            let rows = 1 + rng.index(32);
+            let d = 1 + rng.index(12);
+            let input: Vec<Nz> = (0..n)
+                .map(|i| Nz {
+                    row: rng.index(rows) as u32,
+                    col: (i % 1024) as u16,
+                    val: rng.normal(),
+                })
+                .collect();
+            let s = schedule_ooo(&input, d, rows, &mut Scratch::default());
+            let inorder = cycles_inorder(&input, d, rows);
+            if s.cycles() > inorder {
+                return Err(format!("OoO {} > in-order {}", s.cycles(), inorder));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn schedule_is_valid_permutation_respecting_raw_property() {
+        prop::check("ooo_valid", 0x001, 64, |rng| {
+            let n = rng.index(300);
+            let rows = 1 + rng.index(40);
+            let d = 1 + rng.index(10);
+            let input: Vec<Nz> = (0..n)
+                .map(|i| Nz {
+                    row: rng.index(rows) as u32,
+                    col: (i % 512) as u16,
+                    val: rng.normal(),
+                })
+                .collect();
+            let s = schedule_ooo(&input, d, rows, &mut Scratch::default());
+            validate(&s, &input, d)
+        });
+    }
+
+    #[test]
+    fn lower_bound_cycles_property() {
+        // cycles >= nnz always; cycles >= (max_row_count - 1) * d + 1.
+        prop::check("ooo_lower_bound", 0x002, 64, |rng| {
+            let n = 1 + rng.index(300);
+            let rows = 1 + rng.index(16);
+            let d = 1 + rng.index(10);
+            let input: Vec<Nz> = (0..n)
+                .map(|i| Nz {
+                    row: rng.index(rows) as u32,
+                    col: (i % 512) as u16,
+                    val: 1.0,
+                })
+                .collect();
+            let s = schedule_ooo(&input, d, rows, &mut Scratch::default());
+            let mut counts = vec![0usize; rows];
+            for nz in &input {
+                counts[nz.row as usize] += 1;
+            }
+            let maxc = *counts.iter().max().unwrap();
+            let lb = n.max((maxc - 1) * d + 1);
+            if s.cycles() < lb {
+                return Err(format!("cycles {} below lower bound {lb}", s.cycles()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn validate_catches_violations() {
+        let input = vec![nz(0, 0), nz(0, 1)];
+        let bad = Schedule {
+            slots: vec![Some(nz(0, 0)), Some(nz(0, 1))],
+            nnz: 2,
+        };
+        assert!(validate(&bad, &input, 4).is_err());
+        let not_perm = Schedule { slots: vec![Some(nz(1, 0))], nnz: 1 };
+        assert!(validate(&not_perm, &input[..1], 4).is_err());
+    }
+}

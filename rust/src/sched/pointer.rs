@@ -1,0 +1,132 @@
+//! The HFlex iteration pointer list Q (paper §3.4, Fig. 5 (k)-(l)).
+//!
+//! "We store the scheduled non-zero lists of all A submatrices linearly in
+//! a memory space. We use an iteration pointer list Q to record the starting
+//! index of each scheduled non-zero list. In the processing, entries of Q
+//! serve as the loop iteration number" — so one synthesized accelerator
+//! executes any SpMM: the loop bounds arrive as data, not as hardware.
+//!
+//! Q has `K/K0 + 1` entries; `Q[0] == 0`; window `j`'s scheduled list
+//! occupies `stream[Q[j] .. Q[j+1]]`.
+
+use anyhow::{bail, Result};
+
+/// Pointer list over a linear scheduled-slot stream.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PointerList {
+    starts: Vec<u32>,
+}
+
+impl PointerList {
+    /// Build from per-window scheduled lengths.
+    pub fn from_lengths(lengths: &[usize]) -> PointerList {
+        let mut starts = Vec::with_capacity(lengths.len() + 1);
+        let mut acc = 0u32;
+        starts.push(0);
+        for &l in lengths {
+            acc += l as u32;
+            starts.push(acc);
+        }
+        PointerList { starts }
+    }
+
+    /// Validate an externally supplied Q against a stream length
+    /// (monotonicity, Q[0] == 0, final entry == stream length).
+    pub fn validate(starts: &[u32], stream_len: usize) -> Result<PointerList> {
+        if starts.is_empty() {
+            bail!("Q must have at least one entry");
+        }
+        if starts[0] != 0 {
+            bail!("Q[0] must be 0, got {}", starts[0]);
+        }
+        if starts.windows(2).any(|w| w[0] > w[1]) {
+            bail!("Q must be monotone non-decreasing");
+        }
+        if *starts.last().unwrap() as usize != stream_len {
+            bail!(
+                "Q end {} != stream length {stream_len}",
+                starts.last().unwrap()
+            );
+        }
+        Ok(PointerList { starts: starts.to_vec() })
+    }
+
+    /// Number of windows (= len - 1).
+    #[inline]
+    pub fn num_windows(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    /// Slot range of window `j`.
+    #[inline]
+    pub fn window_range(&self, j: usize) -> std::ops::Range<usize> {
+        self.starts[j] as usize..self.starts[j + 1] as usize
+    }
+
+    /// Scheduled length of window `j` — the PE's loop iteration count
+    /// (Algorithm 1 line 6: `for (Q_i <= r < Q_{i+1})`).
+    #[inline]
+    pub fn window_len(&self, j: usize) -> usize {
+        (self.starts[j + 1] - self.starts[j]) as usize
+    }
+
+    /// Raw entries (what the hardware actually receives).
+    pub fn entries(&self) -> &[u32] {
+        &self.starts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    /// Fig. 5 (l): first window's 11 slots at 0..10, next submatrix's 6
+    /// slots at 11..16, so Q = [0, 11, 17].
+    #[test]
+    fn fig5_pointer_example() {
+        let q = PointerList::from_lengths(&[11, 6]);
+        assert_eq!(q.entries(), &[0, 11, 17]);
+        assert_eq!(q.window_range(0), 0..11);
+        assert_eq!(q.window_range(1), 11..17);
+        assert_eq!(q.num_windows(), 2);
+    }
+
+    #[test]
+    fn empty_windows_allowed() {
+        let q = PointerList::from_lengths(&[0, 5, 0]);
+        assert_eq!(q.window_len(0), 0);
+        assert_eq!(q.window_len(1), 5);
+        assert_eq!(q.window_len(2), 0);
+    }
+
+    #[test]
+    fn validate_accepts_good() {
+        assert!(PointerList::validate(&[0, 3, 3, 7], 7).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        assert!(PointerList::validate(&[], 0).is_err());
+        assert!(PointerList::validate(&[1, 2], 2).is_err()); // Q[0] != 0
+        assert!(PointerList::validate(&[0, 5, 3], 3).is_err()); // not monotone
+        assert!(PointerList::validate(&[0, 3], 7).is_err()); // wrong end
+    }
+
+    #[test]
+    fn from_lengths_roundtrip_property() {
+        prop::check("pointer_roundtrip", 0x97, 64, |rng| {
+            let n = 1 + rng.index(40);
+            let lengths: Vec<usize> = (0..n).map(|_| rng.index(100)).collect();
+            let q = PointerList::from_lengths(&lengths);
+            let total: usize = lengths.iter().sum();
+            PointerList::validate(q.entries(), total).map_err(|e| e.to_string())?;
+            for (j, &l) in lengths.iter().enumerate() {
+                if q.window_len(j) != l {
+                    return Err(format!("window {j}: {} != {l}", q.window_len(j)));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,366 @@
+//! End-to-end preprocessing: COO matrix → per-PE encoded scheduled streams
+//! with pointer lists — the memory image the accelerator consumes.
+//!
+//! This is the host-side "C++ wrapper" of paper §3.3, run once per matrix
+//! (build path, not request path). It also collects the per-window cycle
+//! statistics every performance model downstream consumes, including the
+//! in-order baselines needed for the Table 1 breakdown.
+
+use super::encode::encode_slot;
+use super::ooo::{self, Scratch};
+use super::partition::{partition, Nz};
+use super::pointer::PointerList;
+use crate::sparse::Coo;
+
+/// Scheduling discipline (Table 1 ablation axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleMode {
+    /// Out-of-order PE-aware scheduling (the paper's contribution): II=1.
+    OutOfOrder,
+    /// In-order column-major (non-zero parallelization without OoO).
+    InOrderColMajor,
+    /// In-order row-major (CSR streaming — the Table 1 "Baseline").
+    InOrderRowMajor,
+}
+
+/// One PE's linear memory image: encoded scheduled slots + pointer list Q.
+#[derive(Clone, Debug, Default)]
+pub struct PeStream {
+    /// 64-bit encoded slots of all windows, concatenated (Fig. 5 (l)).
+    pub encoded: Vec<u64>,
+    /// Q pointer list: window j occupies `encoded[q[j]..q[j+1]]`.
+    pub q: PointerList,
+    /// Real non-zeros in this stream (excludes bubbles).
+    pub nnz: usize,
+}
+
+/// Per-window aggregate statistics across PEs.
+#[derive(Clone, Debug, Default)]
+pub struct WindowStats {
+    /// Max scheduled cycles over PEs (the PE-region latency for this window,
+    /// Algorithm 1 lines 5–11 — PEs run in parallel, slowest dominates).
+    pub max_cycles: u64,
+    /// Sum of real non-zeros over PEs.
+    pub nnz: u64,
+    /// Sum of bubbles over PEs.
+    pub bubbles: u64,
+    /// Max *in-order column-major* cycles over PEs (ablation baseline).
+    pub max_cycles_inorder: u64,
+    /// Max *in-order row-major* cycles over PEs (ablation baseline).
+    pub max_cycles_rowmajor: u64,
+}
+
+/// A fully preprocessed matrix: what the host hands the accelerator
+/// (pointers + scalars — the HFlex contract of §3.4).
+#[derive(Clone, Debug)]
+pub struct ScheduledMatrix {
+    /// Rows of A.
+    pub m: usize,
+    /// Cols of A.
+    pub k: usize,
+    /// PE count the image was scheduled for.
+    pub p: usize,
+    /// Window size K0.
+    pub k0: usize,
+    /// RAW distance D the image was scheduled for.
+    pub d: usize,
+    /// Number of K-windows.
+    pub num_windows: usize,
+    /// One stream per PE.
+    pub streams: Vec<PeStream>,
+    /// Per-window stats (cycle model inputs).
+    pub window_stats: Vec<WindowStats>,
+    /// Total real non-zeros.
+    pub nnz: usize,
+}
+
+impl ScheduledMatrix {
+    /// Rows per PE C-scratchpad (ceil(M / P)).
+    pub fn rows_per_pe(&self) -> usize {
+        self.m.div_ceil(self.p)
+    }
+
+    /// Total scheduled slots across PEs and windows (bubbles included) —
+    /// the A-stream memory footprint in 8-byte words.
+    pub fn total_slots(&self) -> u64 {
+        self.streams.iter().map(|s| s.encoded.len() as u64).sum()
+    }
+
+    /// Total bubbles across all streams.
+    pub fn total_bubbles(&self) -> u64 {
+        self.window_stats.iter().map(|w| w.bubbles).sum()
+    }
+
+    /// Whole-matrix effective II: per-window slowest-PE cycles summed,
+    /// normalized by perfectly balanced nnz/P (1.0 is ideal).
+    pub fn effective_ii(&self) -> f64 {
+        let cyc: u64 = self.window_stats.iter().map(|w| w.max_cycles).sum();
+        if self.nnz == 0 {
+            return 1.0;
+        }
+        cyc as f64 / (self.nnz as f64 / self.p as f64)
+    }
+
+    /// A-stream bytes (8 B per scheduled slot; paper §3.2).
+    pub fn a_stream_bytes(&self) -> u64 {
+        self.total_slots() * 8
+    }
+}
+
+/// Preprocess with the paper's OoO scheduling. Skips the in-order baseline
+/// cycle statistics (only the Table 1 ablation needs them — they cost ~40%
+/// of preprocessing; see EXPERIMENTS.md §Perf): `max_cycles_inorder` /
+/// `max_cycles_rowmajor` are 0 in the result. Use [`preprocess_mode`] when
+/// baselines matter.
+pub fn preprocess(coo: &Coo, p: usize, k0: usize, d: usize) -> ScheduledMatrix {
+    preprocess_impl(coo, p, k0, d, ScheduleMode::OutOfOrder, false)
+}
+
+/// Preprocess under a chosen scheduling discipline (Table 1 ablations).
+///
+/// For in-order modes the emitted stream is the same non-zeros in (possibly
+/// stalled) issue order with explicit bubbles, so the functional result is
+/// identical; only cycle counts differ.
+pub fn preprocess_mode(
+    coo: &Coo,
+    p: usize,
+    k0: usize,
+    d: usize,
+    mode: ScheduleMode,
+) -> ScheduledMatrix {
+    preprocess_impl(coo, p, k0, d, mode, true)
+}
+
+fn preprocess_impl(
+    coo: &Coo,
+    p: usize,
+    k0: usize,
+    d: usize,
+    mode: ScheduleMode,
+    baselines: bool,
+) -> ScheduledMatrix {
+    let w = partition(coo, p, k0);
+    let rows_hint = w.rows_per_pe();
+    let mut encoded: Vec<Vec<u64>> = vec![Vec::new(); p];
+    let mut lengths: Vec<Vec<usize>> = vec![Vec::with_capacity(w.num_windows); p];
+    let mut stream_nnz = vec![0usize; p];
+    let mut window_stats = Vec::with_capacity(w.num_windows);
+    let mut scratch = Scratch::default();
+
+    for j in 0..w.num_windows {
+        let mut stats = WindowStats::default();
+        for pe in 0..p {
+            let bin = &w.windows[j][pe];
+            // Baseline cycle counts cost a second pass (plus a clone+sort
+            // for row-major), so they are opt-in (Table 1 / ablations).
+            if baselines {
+                let inorder = ooo::cycles_inorder(bin, d, rows_hint) as u64;
+                let rowmajor = ooo::cycles_inorder_rowmajor(bin, d, rows_hint) as u64;
+                stats.max_cycles_inorder = stats.max_cycles_inorder.max(inorder);
+                stats.max_cycles_rowmajor = stats.max_cycles_rowmajor.max(rowmajor);
+            }
+
+            let slots: Vec<Option<Nz>> = match mode {
+                ScheduleMode::OutOfOrder => {
+                    ooo::schedule_ooo(bin, d, rows_hint, &mut scratch).slots
+                }
+                ScheduleMode::InOrderColMajor => {
+                    let cycles = ooo::cycles_inorder(bin, d, rows_hint);
+                    inorder_slots(bin, d, cycles)
+                }
+                ScheduleMode::InOrderRowMajor => {
+                    let mut sorted = bin.clone();
+                    sorted.sort_by_key(|n| (n.row, n.col));
+                    let cycles = ooo::cycles_inorder(&sorted, d, rows_hint);
+                    inorder_slots(&sorted, d, cycles)
+                }
+            };
+            stats.max_cycles = stats.max_cycles.max(slots.len() as u64);
+            stats.nnz += bin.len() as u64;
+            stats.bubbles += (slots.len() - bin.len()) as u64;
+            stream_nnz[pe] += bin.len();
+            lengths[pe].push(slots.len());
+            encoded[pe].extend(slots.into_iter().map(encode_slot));
+        }
+        window_stats.push(stats);
+    }
+
+    let streams = encoded
+        .into_iter()
+        .zip(lengths.iter())
+        .zip(stream_nnz.iter())
+        .map(|((enc, lens), &nnz)| PeStream {
+            q: PointerList::from_lengths(lens),
+            encoded: enc,
+            nnz,
+        })
+        .collect();
+
+    ScheduledMatrix {
+        m: coo.m,
+        k: coo.k,
+        p,
+        k0,
+        d,
+        num_windows: w.num_windows,
+        streams,
+        window_stats,
+        nnz: coo.nnz(),
+    }
+}
+
+/// Expand an in-order stream into explicit slots with stall bubbles.
+fn inorder_slots(bin: &[Nz], d: usize, total_cycles: usize) -> Vec<Option<Nz>> {
+    let d = d.max(1) as i64;
+    let mut slots: Vec<Option<Nz>> = vec![None; total_cycles];
+    let mut last: std::collections::HashMap<u32, i64> = std::collections::HashMap::new();
+    let mut cycle: i64 = -1;
+    for &nz in bin {
+        let prev = last.get(&nz.row).copied().unwrap_or(i64::MIN / 2);
+        cycle = (cycle + 1).max(prev + d);
+        slots[cycle as usize] = Some(nz);
+        last.insert(nz.row, cycle);
+    }
+    slots
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::sched::decode;
+    use crate::sparse::{gen, rng::Rng};
+
+    fn toy() -> Coo {
+        let mut rng = Rng::new(42);
+        gen::random_uniform(64, 96, 0.1, &mut rng)
+    }
+
+    #[test]
+    fn streams_and_q_are_consistent() {
+        let coo = toy();
+        let s = preprocess(&coo, 4, 32, 6);
+        assert_eq!(s.streams.len(), 4);
+        assert_eq!(s.num_windows, 3);
+        for stream in &s.streams {
+            assert_eq!(stream.q.num_windows(), s.num_windows);
+            assert_eq!(
+                stream.q.entries().last().copied().unwrap() as usize,
+                stream.encoded.len()
+            );
+        }
+    }
+
+    #[test]
+    fn every_nonzero_survives_encoding() {
+        let coo = toy();
+        let s = preprocess(&coo, 4, 32, 6);
+        let total: usize = s
+            .streams
+            .iter()
+            .map(|st| st.encoded.iter().filter(|&&w| decode(w).val != 0.0).count())
+            .sum();
+        assert_eq!(total, coo.nnz());
+        assert_eq!(s.nnz, coo.nnz());
+    }
+
+    #[test]
+    fn raw_distance_holds_within_every_window() {
+        let coo = toy();
+        let d = 7;
+        let s = preprocess(&coo, 4, 32, d);
+        for stream in &s.streams {
+            for j in 0..s.num_windows {
+                let mut last: std::collections::HashMap<u32, usize> = Default::default();
+                for (c, &word) in stream.encoded[stream.q.window_range(j)].iter().enumerate() {
+                    let nz = decode(word);
+                    if nz.val == 0.0 {
+                        continue;
+                    }
+                    if let Some(&prev) = last.get(&nz.row) {
+                        assert!(c - prev >= d, "RAW violation in window {j}");
+                    }
+                    last.insert(nz.row, c);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn window_stats_sum_matches_nnz() {
+        let coo = toy();
+        let s = preprocess(&coo, 8, 16, 5);
+        let sum: u64 = s.window_stats.iter().map(|ws| ws.nnz).sum();
+        assert_eq!(sum as usize, coo.nnz());
+    }
+
+    #[test]
+    fn ooo_mode_never_slower_than_inorder_modes() {
+        let coo = toy();
+        let s = preprocess_mode(&coo, 4, 32, 8, ScheduleMode::OutOfOrder);
+        for ws in &s.window_stats {
+            assert!(ws.max_cycles <= ws.max_cycles_inorder);
+            assert!(ws.max_cycles_inorder <= ws.max_cycles_rowmajor + ws.max_cycles_inorder);
+        }
+    }
+
+    #[test]
+    fn inorder_modes_produce_matching_cycle_counts() {
+        let coo = toy();
+        let a = preprocess_mode(&coo, 4, 32, 8, ScheduleMode::InOrderColMajor);
+        for (j, ws) in a.window_stats.iter().enumerate() {
+            let longest = a
+                .streams
+                .iter()
+                .map(|st| st.q.window_len(j) as u64)
+                .max()
+                .unwrap();
+            assert_eq!(ws.max_cycles, longest);
+            assert_eq!(ws.max_cycles, ws.max_cycles_inorder);
+        }
+    }
+
+    #[test]
+    fn effective_ii_close_to_one_for_balanced_matrix() {
+        let mut rng = Rng::new(9);
+        // Dense-ish uniform matrix, few conflicts at D=1.
+        let coo = gen::random_uniform(512, 512, 0.05, &mut rng);
+        let s = preprocess(&coo, 8, 512, 1);
+        // With D=1 there are no bubbles; II reflects only imbalance.
+        assert_eq!(s.total_bubbles(), 0);
+        assert!(s.effective_ii() < 1.6, "ii = {}", s.effective_ii());
+    }
+
+    #[test]
+    fn preprocess_properties() {
+        prop::check("preprocess_invariants", 0x9E9, 24, |rng| {
+            let m = 1 + rng.index(128);
+            let k = 1 + rng.index(128);
+            let coo = gen::random_uniform(m, k, 0.05 + rng.f64() * 0.15, rng);
+            let p = 1 + rng.index(8);
+            let k0 = 1 + rng.index(64);
+            let d = 1 + rng.index(10);
+            let s = preprocess(&coo, p, k0, d);
+            // Invariant: slot totals = nnz + bubbles.
+            let slots = s.total_slots();
+            let bubbles = s.total_bubbles();
+            if slots != s.nnz as u64 + bubbles {
+                return Err(format!("slots {slots} != nnz {} + bubbles {bubbles}", s.nnz));
+            }
+            // Invariant: every window's stats.max_cycles equals the longest
+            // per-PE window length.
+            for j in 0..s.num_windows {
+                let longest = s
+                    .streams
+                    .iter()
+                    .map(|st| st.q.window_len(j) as u64)
+                    .max()
+                    .unwrap_or(0);
+                if longest != s.window_stats[j].max_cycles {
+                    return Err(format!("window {j}: {longest} != stats"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,344 @@
+//! The 200-matrix evaluation catalog (paper Table 2 analogue).
+//!
+//! 50 "SNAP-like" power-law graphs + 150 "SuiteSparse-like" matrices across
+//! five structural families, with deterministic seeds. Statistic ranges
+//! mirror Table 2: row/col 5–513,351, NNZ 10–~2×10⁷ (the paper's absolute
+//! max of 3.7×10⁷ is represented by the `scale` knob: `Scale::Full`
+//! includes the multi-million-nnz tail, `Scale::Ci` caps sizes so the whole
+//! 1,400-SpMM sweep runs in CI time — the *distribution shape* is identical).
+
+use super::coo::Coo;
+use super::gen;
+use super::rng::Rng;
+
+/// Matrix family, mirroring the provenance split in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// SNAP-style social/web graph (R-MAT power law).
+    SnapRmat,
+    /// SuiteSparse FEM/structural (banded).
+    SsBanded,
+    /// SuiteSparse circuit (diagonal-dominant).
+    SsCircuit,
+    /// SuiteSparse random/optimization (uniform).
+    SsUniform,
+    /// SuiteSparse supernodal/block.
+    SsBlock,
+    /// Bipartite recommender-ish (Zipf rows).
+    SsPowerRows,
+}
+
+impl Family {
+    /// Provenance label used in reports.
+    pub fn source(&self) -> &'static str {
+        match self {
+            Family::SnapRmat => "SNAP",
+            _ => "SuiteSparse",
+        }
+    }
+}
+
+/// A catalog entry: everything needed to regenerate the matrix.
+#[derive(Clone, Debug)]
+pub struct MatrixSpec {
+    /// Unique, stable name (used in reports and caches).
+    pub name: String,
+    /// Structural family.
+    pub family: Family,
+    /// Rows.
+    pub m: usize,
+    /// Columns.
+    pub k: usize,
+    /// Target non-zeros (generators may merge a few duplicates).
+    pub nnz: usize,
+    /// Deterministic seed.
+    pub seed: u64,
+}
+
+impl MatrixSpec {
+    /// Materialize the matrix.
+    pub fn build(&self) -> Coo {
+        let mut rng = Rng::new(self.seed);
+        match self.family {
+            // Quadrant weights chosen so max-degree/nnz matches real SNAP
+            // graphs (~0.1-0.5%): Graph500's (0.57, 0.19, 0.19) produces a
+            // far heavier head at these scales.
+            Family::SnapRmat => gen::rmat(self.m, self.nnz, 0.45, 0.20, 0.20, &mut rng),
+            Family::SsBanded => {
+                let row_nnz = (self.nnz / self.m).max(1);
+                let band = (row_nnz * 2).max(2);
+                gen::banded(self.m, band, row_nnz, &mut rng)
+            }
+            Family::SsCircuit => {
+                let off = (self.nnz / self.m).saturating_sub(1);
+                gen::diagonal_dominant(self.m, off, &mut rng)
+            }
+            Family::SsUniform => gen::random_with_nnz(self.m, self.k, self.nnz, &mut rng),
+            Family::SsBlock => {
+                let bs = 16usize.min(self.m.max(1));
+                let nblocks = (self.m / bs).max(1);
+                let density =
+                    (self.nnz as f64 / (nblocks as f64 * (bs * bs) as f64)).min(1.0);
+                gen::block_diag(nblocks, bs, density, &mut rng)
+            }
+            // s = 0.8 keeps the Zipf head at a few percent of nnz, matching
+            // SuiteSparse's recommender/optimization matrices.
+            Family::SsPowerRows => gen::power_law_rows(self.m, self.k, self.nnz, 0.8, &mut rng),
+        }
+    }
+}
+
+/// Catalog scale: `Ci` caps per-matrix nnz for fast sweeps, `Full` includes
+/// the multi-million-nnz tail of Table 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// nnz capped at ~400k per matrix: full 1,400-SpMM sweep in ~a minute.
+    Ci,
+    /// nnz up to ~2×10⁷ (headline runs; minutes).
+    Full,
+}
+
+/// The N values of the sweep (paper Table 2: N = 8..512).
+pub const N_VALUES: [usize; 7] = [8, 16, 32, 64, 128, 256, 512];
+
+/// Log-interpolate x in [0,1] between lo and hi.
+fn logspace(lo: f64, hi: f64, x: f64) -> f64 {
+    (lo.ln() + (hi.ln() - lo.ln()) * x).exp()
+}
+
+/// Build the 200-matrix catalog (50 SNAP-like + 150 SuiteSparse-like).
+pub fn catalog(scale: Scale) -> Vec<MatrixSpec> {
+    let (max_nnz, max_n) = match scale {
+        Scale::Ci => (400_000usize, 120_000usize),
+        Scale::Full => (20_000_000usize, 513_351usize),
+    };
+    let mut specs = Vec::with_capacity(200);
+
+    // --- 50 SNAP-like graphs: n from ~1,005 to ~456,626, avg degree 4-40.
+    for i in 0..50 {
+        let x = i as f64 / 49.0;
+        let n = logspace(1_005.0, (456_626.0f64).min(max_n as f64), x).round() as usize;
+        let degree = 4.0 + 36.0 * ((i * 7) % 50) as f64 / 50.0;
+        let nnz = ((n as f64 * degree) as usize).clamp(32, max_nnz);
+        specs.push(MatrixSpec {
+            name: format!("snap_rmat_{i:02}"),
+            family: Family::SnapRmat,
+            m: n,
+            k: n,
+            nnz,
+            seed: 0x5EAF_0000 + i as u64,
+        });
+    }
+
+    // --- 150 SuiteSparse-like across 5 families (30 each) + edge cases.
+    let families = [
+        Family::SsBanded,
+        Family::SsCircuit,
+        Family::SsUniform,
+        Family::SsBlock,
+        Family::SsPowerRows,
+    ];
+    for (fi, fam) in families.iter().enumerate() {
+        for i in 0..30 {
+            let x = i as f64 / 29.0;
+            let n = logspace(64.0, (300_000.0f64).min(max_n as f64), x).round() as usize;
+            let per_row = match fam {
+                Family::SsBanded => 8 + (i % 24),
+                Family::SsCircuit => 2 + (i % 8),
+                Family::SsUniform => 4 + (i % 16),
+                Family::SsBlock => 8,
+                Family::SsPowerRows => 6 + (i % 20),
+                Family::SnapRmat => unreachable!(),
+            };
+            let nnz = (n * per_row).clamp(10, max_nnz);
+            let k = if *fam == Family::SsPowerRows || *fam == Family::SsUniform {
+                // rectangular cases
+                (n as f64 * logspace(0.5, 2.0, ((i * 13) % 30) as f64 / 29.0)).round() as usize
+            } else {
+                n
+            }
+            .max(5);
+            specs.push(MatrixSpec {
+                name: format!("ss_{}_{i:02}", family_tag(*fam)),
+                family: *fam,
+                m: n,
+                k,
+                nnz,
+                seed: 0x55AA_0000 + ((fi as u64) << 8) + i as u64,
+            });
+        }
+    }
+
+    // Replace the first few SuiteSparse entries with named edge cases so the
+    // catalog spans Table 2's extremes exactly (5 rows, 10 nnz, density 0.4).
+    specs[50] = MatrixSpec {
+        name: "ss_edge_tiny".into(),
+        family: Family::SsUniform,
+        m: 5,
+        k: 5,
+        nnz: 10,
+        seed: 0xED6E_0001,
+    };
+    specs[80] = MatrixSpec {
+        name: "ss_edge_dense".into(),
+        family: Family::SsUniform,
+        m: 64,
+        k: 64,
+        nnz: (64.0 * 64.0 * 0.4) as usize,
+        seed: 0xED6E_0002,
+    };
+    // crystm03 stand-in (Table 1 breakdown workload): FEM banded,
+    // 24,696 x 24,696 with 583,770 nnz (~23.6 nnz/row).
+    specs[51] = crystm03_like();
+
+    assert_eq!(specs.len(), 200);
+    specs
+}
+
+/// The Table 1 workload: a crystm03-shaped banded FEM matrix.
+pub fn crystm03_like() -> MatrixSpec {
+    MatrixSpec {
+        name: "crystm03_like".into(),
+        family: Family::SsBanded,
+        m: 24_696,
+        k: 24_696,
+        nnz: 583_770,
+        seed: 0xC45731,
+    }
+}
+
+fn family_tag(f: Family) -> &'static str {
+    match f {
+        Family::SnapRmat => "rmat",
+        Family::SsBanded => "banded",
+        Family::SsCircuit => "circuit",
+        Family::SsUniform => "uniform",
+        Family::SsBlock => "block",
+        Family::SsPowerRows => "powrows",
+    }
+}
+
+/// Catalog-wide statistics (regenerates Table 2).
+#[derive(Debug, Clone)]
+pub struct CatalogStats {
+    /// Total matrix count.
+    pub matrices: usize,
+    /// Total SpMM count (matrices × N values).
+    pub spmms: usize,
+    /// (min, max) of rows/cols.
+    pub dim_range: (usize, usize),
+    /// (min, max) of nnz targets.
+    pub nnz_range: (usize, usize),
+    /// (min, max) of density.
+    pub density_range: (f64, f64),
+}
+
+/// Compute Table 2 statistics from specs (no materialization needed).
+pub fn stats(specs: &[MatrixSpec]) -> CatalogStats {
+    let mut dim_lo = usize::MAX;
+    let mut dim_hi = 0;
+    let mut nnz_lo = usize::MAX;
+    let mut nnz_hi = 0;
+    let mut d_lo = f64::MAX;
+    let mut d_hi = 0f64;
+    for s in specs {
+        dim_lo = dim_lo.min(s.m).min(s.k);
+        dim_hi = dim_hi.max(s.m).max(s.k);
+        nnz_lo = nnz_lo.min(s.nnz);
+        nnz_hi = nnz_hi.max(s.nnz);
+        let d = s.nnz as f64 / (s.m as f64 * s.k as f64);
+        d_lo = d_lo.min(d);
+        d_hi = d_hi.max(d);
+    }
+    CatalogStats {
+        matrices: specs.len(),
+        spmms: specs.len() * N_VALUES.len(),
+        dim_range: (dim_lo, dim_hi),
+        nnz_range: (nnz_lo, nnz_hi),
+        density_range: (d_lo, d_hi),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_has_200_specs_1400_spmms() {
+        let c = catalog(Scale::Ci);
+        let st = stats(&c);
+        assert_eq!(st.matrices, 200);
+        assert_eq!(st.spmms, 1400);
+    }
+
+    #[test]
+    fn fifty_snap_150_suitesparse() {
+        let c = catalog(Scale::Ci);
+        let snap = c.iter().filter(|s| s.family.source() == "SNAP").count();
+        assert_eq!(snap, 50);
+        assert_eq!(c.len() - snap, 150);
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let c = catalog(Scale::Full);
+        let mut names: Vec<&str> = c.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 200);
+    }
+
+    #[test]
+    fn table2_ranges_covered() {
+        let c = catalog(Scale::Full);
+        let st = stats(&c);
+        assert_eq!(st.dim_range.0, 5);
+        assert!(st.dim_range.1 >= 400_000, "{}", st.dim_range.1);
+        assert_eq!(st.nnz_range.0, 10);
+        assert!(st.nnz_range.1 >= 10_000_000);
+        assert!(st.density_range.0 < 1e-4);
+        assert!(st.density_range.1 >= 0.39);
+    }
+
+    #[test]
+    fn specs_build_to_matching_shapes() {
+        let c = catalog(Scale::Ci);
+        // Spot-check a few small ones from each family.
+        for s in c.iter().filter(|s| s.m <= 2000).take(12) {
+            let m = s.build();
+            assert_eq!(m.m, s.m, "{}", s.name);
+            assert_eq!(m.k, s.k, "{}", s.name);
+            assert!(m.nnz() > 0, "{}", s.name);
+            // Generators may merge duplicates: allow slack on nnz.
+            assert!(
+                m.nnz() <= s.nnz + s.m,
+                "{}: nnz {} vs target {}",
+                s.name,
+                m.nnz(),
+                s.nnz
+            );
+        }
+    }
+
+    #[test]
+    fn crystm03_like_matches_paper_dims() {
+        let spec = crystm03_like();
+        assert_eq!(spec.m, 24_696);
+        assert_eq!(spec.nnz, 583_770);
+        let m = spec.build();
+        assert!(m.nnz() > 500_000);
+    }
+
+    #[test]
+    fn catalog_is_deterministic() {
+        let a = catalog(Scale::Ci);
+        let b = catalog(Scale::Ci);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.seed, y.seed);
+        }
+        let ma = a[0].build();
+        let mb = b[0].build();
+        assert_eq!(ma, mb);
+    }
+}

@@ -1,0 +1,252 @@
+//! Coordinate-list (COO) sparse matrix — the interchange format of the crate.
+//!
+//! The paper (§4.2.3) notes COO costs 12 bytes/non-zero (row, col, val at
+//! 4 bytes each); Sextans' preprocessed format compresses this to 8 bytes
+//! (see [`crate::sched::encode`]).
+
+use anyhow::{bail, Result};
+
+/// Sparse matrix in COO form. Entries are not required to be sorted, but
+/// duplicates are disallowed by the constructors that check.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Coo {
+    /// Number of rows (M).
+    pub m: usize,
+    /// Number of columns (K).
+    pub k: usize,
+    /// Row index per non-zero.
+    pub rows: Vec<u32>,
+    /// Column index per non-zero.
+    pub cols: Vec<u32>,
+    /// Value per non-zero.
+    pub vals: Vec<f32>,
+}
+
+impl Coo {
+    /// Build and validate bounds (O(nnz)). Does not check duplicates.
+    pub fn new(m: usize, k: usize, rows: Vec<u32>, cols: Vec<u32>, vals: Vec<f32>) -> Result<Self> {
+        if rows.len() != cols.len() || rows.len() != vals.len() {
+            bail!(
+                "COO triplet length mismatch: rows={} cols={} vals={}",
+                rows.len(),
+                cols.len(),
+                vals.len()
+            );
+        }
+        if let Some(&r) = rows.iter().max() {
+            if r as usize >= m {
+                bail!("row index {r} out of bounds for m={m}");
+            }
+        }
+        if let Some(&c) = cols.iter().max() {
+            if c as usize >= k {
+                bail!("col index {c} out of bounds for k={k}");
+            }
+        }
+        Ok(Coo { m, k, rows, cols, vals })
+    }
+
+    /// Empty matrix of the given shape.
+    pub fn empty(m: usize, k: usize) -> Self {
+        Coo { m, k, rows: vec![], cols: vec![], vals: vec![] }
+    }
+
+    /// Number of stored non-zeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Density = nnz / (m * k).
+    pub fn density(&self) -> f64 {
+        if self.m == 0 || self.k == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.m as f64 * self.k as f64)
+    }
+
+    /// Sort entries row-major (row, then col). Stable w.r.t. duplicates.
+    pub fn sort_row_major(&mut self) {
+        let mut idx: Vec<usize> = (0..self.nnz()).collect();
+        idx.sort_by_key(|&i| (self.rows[i], self.cols[i]));
+        self.permute(&idx);
+    }
+
+    /// Sort entries column-major (col, then row) — the order the Sextans
+    /// scheduler consumes (outer-product-like processing, Eq. 5).
+    pub fn sort_col_major(&mut self) {
+        let mut idx: Vec<usize> = (0..self.nnz()).collect();
+        idx.sort_by_key(|&i| (self.cols[i], self.rows[i]));
+        self.permute(&idx);
+    }
+
+    fn permute(&mut self, idx: &[usize]) {
+        self.rows = idx.iter().map(|&i| self.rows[i]).collect();
+        self.cols = idx.iter().map(|&i| self.cols[i]).collect();
+        self.vals = idx.iter().map(|&i| self.vals[i]).collect();
+    }
+
+    /// Sum duplicate (row, col) entries. Result is row-major sorted.
+    pub fn sum_duplicates(&mut self) {
+        if self.nnz() == 0 {
+            return;
+        }
+        self.sort_row_major();
+        let mut w = 0usize;
+        for r in 1..self.nnz() {
+            if self.rows[r] == self.rows[w] && self.cols[r] == self.cols[w] {
+                self.vals[w] += self.vals[r];
+            } else {
+                w += 1;
+                self.rows[w] = self.rows[r];
+                self.cols[w] = self.cols[r];
+                self.vals[w] = self.vals[r];
+            }
+        }
+        self.rows.truncate(w + 1);
+        self.cols.truncate(w + 1);
+        self.vals.truncate(w + 1);
+    }
+
+    /// Drop explicit zeros.
+    pub fn prune_zeros(&mut self) {
+        let keep: Vec<usize> = (0..self.nnz()).filter(|&i| self.vals[i] != 0.0).collect();
+        self.permute(&keep);
+    }
+
+    /// Transpose (O(nnz), swaps m/k and row/col).
+    pub fn transpose(&self) -> Coo {
+        Coo {
+            m: self.k,
+            k: self.m,
+            rows: self.cols.clone(),
+            cols: self.rows.clone(),
+            vals: self.vals.clone(),
+        }
+    }
+
+    /// Dense `C = alpha * A @ B + beta * C` reference (row-major B, C with
+    /// `n` columns). The naive oracle everything else is checked against.
+    pub fn spmm_reference(&self, b: &[f32], c: &mut [f32], n: usize, alpha: f32, beta: f32) {
+        assert_eq!(b.len(), self.k * n, "B shape mismatch");
+        assert_eq!(c.len(), self.m * n, "C shape mismatch");
+        let mut ab = vec![0f32; self.m * n];
+        for i in 0..self.nnz() {
+            let (r, cl, v) = (self.rows[i] as usize, self.cols[i] as usize, self.vals[i]);
+            let brow = &b[cl * n..cl * n + n];
+            let crow = &mut ab[r * n..r * n + n];
+            for q in 0..n {
+                crow[q] += v * brow[q];
+            }
+        }
+        for i in 0..c.len() {
+            c[i] = alpha * ab[i] + beta * c[i];
+        }
+    }
+
+    /// Max non-zeros in any single row (load-imbalance statistic, Fig. 1).
+    pub fn max_row_nnz(&self) -> usize {
+        let mut counts = vec![0usize; self.m];
+        for &r in &self.rows {
+            counts[r as usize] += 1;
+        }
+        counts.into_iter().max().unwrap_or(0)
+    }
+
+    /// Per-row non-zero counts.
+    pub fn row_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.m];
+        for &r in &self.rows {
+            counts[r as usize] += 1;
+        }
+        counts
+    }
+
+    /// Memory footprint of the COO representation in bytes (12 B/nnz).
+    pub fn footprint_bytes(&self) -> usize {
+        self.nnz() * 12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Coo {
+        // [[1, 0, 2], [0, 3, 0]]
+        Coo::new(2, 3, vec![0, 0, 1], vec![0, 2, 1], vec![1.0, 2.0, 3.0]).unwrap()
+    }
+
+    #[test]
+    fn new_validates_bounds() {
+        assert!(Coo::new(2, 2, vec![2], vec![0], vec![1.0]).is_err());
+        assert!(Coo::new(2, 2, vec![0], vec![2], vec![1.0]).is_err());
+        assert!(Coo::new(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn nnz_and_density() {
+        let a = small();
+        assert_eq!(a.nnz(), 3);
+        assert!((a.density() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spmm_reference_identity() {
+        // A = I2 (as 2x2), B = [[1,2],[3,4]]
+        let a = Coo::new(2, 2, vec![0, 1], vec![0, 1], vec![1.0, 1.0]).unwrap();
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        let mut c = vec![0.0; 4];
+        a.spmm_reference(&b, &mut c, 2, 1.0, 0.0);
+        assert_eq!(c, b);
+    }
+
+    #[test]
+    fn spmm_reference_alpha_beta() {
+        let a = small();
+        let b = vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]; // 3x2
+        let mut c = vec![10.0, 10.0, 10.0, 10.0]; // 2x2
+        // A@B = [[1*1+2*1, 2*1],[3*0, 3*1]] = [[3,2],[0,3]]
+        a.spmm_reference(&b, &mut c, 2, 2.0, 0.5);
+        assert_eq!(c, vec![11.0, 9.0, 5.0, 11.0]);
+    }
+
+    #[test]
+    fn sort_col_major_orders_by_column() {
+        let mut a = small();
+        a.sort_col_major();
+        assert_eq!(a.cols, vec![0, 1, 2]);
+        assert_eq!(a.vals, vec![1.0, 3.0, 2.0]);
+    }
+
+    #[test]
+    fn sum_duplicates_merges() {
+        let mut a =
+            Coo::new(2, 2, vec![0, 0, 1], vec![1, 1, 0], vec![1.0, 2.0, 5.0]).unwrap();
+        a.sum_duplicates();
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.vals, vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn prune_zeros_drops_explicit_zeros() {
+        let mut a = Coo::new(1, 3, vec![0, 0, 0], vec![0, 1, 2], vec![1.0, 0.0, 2.0]).unwrap();
+        a.prune_zeros();
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.cols, vec![0, 2]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = small();
+        let t = a.transpose().transpose();
+        assert_eq!(a, t);
+    }
+
+    #[test]
+    fn row_stats() {
+        let a = small();
+        assert_eq!(a.max_row_nnz(), 2);
+        assert_eq!(a.row_counts(), vec![2, 1]);
+    }
+}

@@ -1,0 +1,206 @@
+//! Compressed Sparse Row (CSR) — the format GPUs (cuSPARSE `csrmm`) consume
+//! and the input format of Sextans preprocessing's row-major baseline.
+
+use anyhow::{bail, Result};
+
+use super::coo::Coo;
+
+/// CSR sparse matrix. `indptr.len() == m + 1`; row `r`'s entries live at
+/// `indices[indptr[r]..indptr[r+1]]` (column indices, ascending within a
+/// row after [`Csr::from_coo`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    /// Number of rows (M).
+    pub m: usize,
+    /// Number of columns (K).
+    pub k: usize,
+    /// Row pointers, length m + 1.
+    pub indptr: Vec<usize>,
+    /// Column index per non-zero.
+    pub indices: Vec<u32>,
+    /// Value per non-zero.
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from raw parts, validating the invariants.
+    pub fn new(
+        m: usize,
+        k: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        vals: Vec<f32>,
+    ) -> Result<Self> {
+        if indptr.len() != m + 1 {
+            bail!("indptr length {} != m+1 = {}", indptr.len(), m + 1);
+        }
+        if indptr[0] != 0 || *indptr.last().unwrap() != indices.len() {
+            bail!("indptr endpoints invalid");
+        }
+        if indptr.windows(2).any(|w| w[0] > w[1]) {
+            bail!("indptr not monotone");
+        }
+        if indices.len() != vals.len() {
+            bail!("indices/vals length mismatch");
+        }
+        if indices.iter().any(|&c| c as usize >= k) {
+            bail!("column index out of bounds for k={k}");
+        }
+        Ok(Csr { m, k, indptr, indices, vals })
+    }
+
+    /// Convert from COO (O(nnz), counting sort by row; columns sorted within
+    /// each row; duplicates preserved).
+    pub fn from_coo(coo: &Coo) -> Csr {
+        let nnz = coo.nnz();
+        let mut indptr = vec![0usize; coo.m + 1];
+        for &r in &coo.rows {
+            indptr[r as usize + 1] += 1;
+        }
+        for i in 0..coo.m {
+            indptr[i + 1] += indptr[i];
+        }
+        let mut indices = vec![0u32; nnz];
+        let mut vals = vec![0f32; nnz];
+        let mut cursor = indptr.clone();
+        for i in 0..nnz {
+            let r = coo.rows[i] as usize;
+            indices[cursor[r]] = coo.cols[i];
+            vals[cursor[r]] = coo.vals[i];
+            cursor[r] += 1;
+        }
+        // Sort columns within each row (insertion-friendly sizes expected).
+        let mut csr = Csr { m: coo.m, k: coo.k, indptr, indices, vals };
+        for r in 0..csr.m {
+            let (s, e) = (csr.indptr[r], csr.indptr[r + 1]);
+            let mut pairs: Vec<(u32, f32)> = csr.indices[s..e]
+                .iter()
+                .copied()
+                .zip(csr.vals[s..e].iter().copied())
+                .collect();
+            pairs.sort_by_key(|p| p.0);
+            for (j, (c, v)) in pairs.into_iter().enumerate() {
+                csr.indices[s + j] = c;
+                csr.vals[s + j] = v;
+            }
+        }
+        csr
+    }
+
+    /// Convert back to row-major-sorted COO.
+    pub fn to_coo(&self) -> Coo {
+        let nnz = self.vals.len();
+        let mut rows = Vec::with_capacity(nnz);
+        for r in 0..self.m {
+            for _ in self.indptr[r]..self.indptr[r + 1] {
+                rows.push(r as u32);
+            }
+        }
+        Coo {
+            m: self.m,
+            k: self.k,
+            rows,
+            cols: self.indices.clone(),
+            vals: self.vals.clone(),
+        }
+    }
+
+    /// Number of stored non-zeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Non-zeros in row `r`.
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.indptr[r + 1] - self.indptr[r]
+    }
+
+    /// `C = alpha * A @ B + beta * C` with row-major dense B (k x n), C (m x n).
+    /// This is the cuSPARSE-csrmm-shaped reference used by the GPU model's
+    /// functional check.
+    pub fn spmm_reference(&self, b: &[f32], c: &mut [f32], n: usize, alpha: f32, beta: f32) {
+        assert_eq!(b.len(), self.k * n);
+        assert_eq!(c.len(), self.m * n);
+        for r in 0..self.m {
+            let mut acc = vec![0f32; n];
+            for idx in self.indptr[r]..self.indptr[r + 1] {
+                let col = self.indices[idx] as usize;
+                let v = self.vals[idx];
+                let brow = &b[col * n..col * n + n];
+                for q in 0..n {
+                    acc[q] += v * brow[q];
+                }
+            }
+            let crow = &mut c[r * n..r * n + n];
+            for q in 0..n {
+                crow[q] = alpha * acc[q] + beta * crow[q];
+            }
+        }
+    }
+
+    /// CSR memory footprint in bytes (paper §4.2.3: 8 B/nnz + 4 B/row-ptr).
+    pub fn footprint_bytes(&self) -> usize {
+        self.nnz() * 8 + (self.m + 1) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::sparse::gen;
+
+    fn small_coo() -> Coo {
+        Coo::new(3, 3, vec![2, 0, 0], vec![1, 2, 0], vec![5.0, 2.0, 1.0]).unwrap()
+    }
+
+    #[test]
+    fn from_coo_sorts_rows_and_cols() {
+        let csr = Csr::from_coo(&small_coo());
+        assert_eq!(csr.indptr, vec![0, 2, 2, 3]);
+        assert_eq!(csr.indices, vec![0, 2, 1]);
+        assert_eq!(csr.vals, vec![1.0, 2.0, 5.0]);
+    }
+
+    #[test]
+    fn new_validates() {
+        assert!(Csr::new(1, 1, vec![0], vec![], vec![]).is_err()); // short indptr
+        assert!(Csr::new(1, 1, vec![0, 2], vec![0], vec![1.0]).is_err()); // endpoint
+        assert!(Csr::new(1, 1, vec![0, 1], vec![1], vec![1.0]).is_err()); // col oob
+    }
+
+    #[test]
+    fn roundtrip_coo_csr_coo() {
+        let mut a = small_coo();
+        a.sort_row_major();
+        let rt = Csr::from_coo(&a).to_coo();
+        assert_eq!(a, rt);
+    }
+
+    #[test]
+    fn csr_and_coo_spmm_agree_property() {
+        prop::check("csr_coo_spmm_agree", 0xC5A, 32, |rng| {
+            let m = 1 + rng.index(40);
+            let k = 1 + rng.index(40);
+            let n = 1 + rng.index(8);
+            let a = gen::random_uniform(m, k, 0.2, rng);
+            let csr = Csr::from_coo(&a);
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+            let c0: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+            let (mut c1, mut c2) = (c0.clone(), c0);
+            a.spmm_reference(&b, &mut c1, n, 1.5, -0.5);
+            csr.spmm_reference(&b, &mut c2, n, 1.5, -0.5);
+            prop::assert_allclose(&c1, &c2, 1e-5, 1e-5)
+        });
+    }
+
+    #[test]
+    fn row_nnz_counts() {
+        let csr = Csr::from_coo(&small_coo());
+        assert_eq!(csr.row_nnz(0), 2);
+        assert_eq!(csr.row_nnz(1), 0);
+        assert_eq!(csr.row_nnz(2), 1);
+    }
+}

@@ -1,0 +1,368 @@
+//! Synthetic sparse-matrix generators.
+//!
+//! The paper evaluates on 50 SNAP graphs + 150 SuiteSparse matrices
+//! (Table 2: row/col 5–513,351, NNZ 10–37,464,962, density 5.97e-6–0.4).
+//! Offline we synthesize matrices with matching *statistics* — what drives
+//! Sextans (and GPU) performance is (M, K, NNZ, row-degree distribution,
+//! column locality), all of which these generators control:
+//!
+//! * [`rmat`] — recursive-matrix power-law graphs (SNAP-like: social
+//!   networks, web graphs). Heavy-tailed row degrees = the worst case for
+//!   row-based parallelization (paper Fig. 1).
+//! * [`banded`] — FEM/structural matrices (SuiteSparse mechanics, e.g.
+//!   crystm03 of Table 1): narrow column windows, high locality.
+//! * [`random_uniform`] — Erdős–Rényi fill, the balanced case.
+//! * [`diagonal_dominant`] — circuit-like: strong diagonal + random fill.
+//! * [`block_diag`] — multi-physics / supernodal block structure.
+//! * [`power_law_rows`] — Zipf row degrees with uniform columns (bipartite
+//!   recommender-style data).
+
+use super::coo::Coo;
+use super::rng::Rng;
+
+/// Uniform (Erdős–Rényi) matrix with expected density `density`.
+/// Exact nnz = round(m * k * density), sampled without replacement when the
+/// matrix is small enough, by rejection otherwise.
+pub fn random_uniform(m: usize, k: usize, density: f64, rng: &mut Rng) -> Coo {
+    let total = (m as f64 * k as f64 * density).round() as usize;
+    random_with_nnz(m, k, total.min(m * k), rng)
+}
+
+/// Uniform matrix with an exact non-zero count (duplicate-free).
+pub fn random_with_nnz(m: usize, k: usize, nnz: usize, rng: &mut Rng) -> Coo {
+    assert!(m > 0 && k > 0, "empty shape");
+    let cells = (m as u64).saturating_mul(k as u64);
+    let nnz = nnz.min(cells.min(usize::MAX as u64) as usize);
+    let mut rows = Vec::with_capacity(nnz);
+    let mut cols = Vec::with_capacity(nnz);
+    let mut vals = Vec::with_capacity(nnz);
+    if (nnz as u64) * 3 >= cells {
+        // Dense-ish: reservoir-sample cell indices without replacement.
+        let mut picked: Vec<u64> = (0..cells).collect();
+        rng.shuffle(&mut picked);
+        picked.truncate(nnz);
+        for cell in picked {
+            rows.push((cell / k as u64) as u32);
+            cols.push((cell % k as u64) as u32);
+            vals.push(nonzero_val(rng));
+        }
+    } else {
+        // Sparse: rejection-sample distinct cells.
+        let mut seen = std::collections::HashSet::with_capacity(nnz * 2);
+        while rows.len() < nnz {
+            let cell = rng.below(cells);
+            if seen.insert(cell) {
+                rows.push((cell / k as u64) as u32);
+                cols.push((cell % k as u64) as u32);
+                vals.push(nonzero_val(rng));
+            }
+        }
+    }
+    Coo { m, k, rows, cols, vals }
+}
+
+/// R-MAT recursive power-law graph (Chakrabarti et al.), the standard
+/// SNAP-like generator. `(a, b, c, d)` are the quadrant probabilities; the
+/// Graph500 defaults (0.57, 0.19, 0.19, 0.05) give realistic skew.
+/// Duplicates are merged, so the final nnz may be slightly below `nnz`.
+pub fn rmat(n: usize, nnz: usize, a: f64, b: f64, c: f64, rng: &mut Rng) -> Coo {
+    assert!(n > 0);
+    let scale = (n as f64).log2().ceil() as u32;
+    let side = 1usize << scale;
+    // Vertex-id permutation (as in Graph500): raw R-MAT correlates hotness
+    // with the *bit pattern* of the index — hot rows all share low bits,
+    // which would alias pathologically with any `row mod P` partitioning.
+    // Real graph datasets have arbitrary node ids; shuffling restores that.
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut perm);
+    let mut rows = Vec::with_capacity(nnz);
+    let mut cols = Vec::with_capacity(nnz);
+    let mut vals = Vec::with_capacity(nnz);
+    let mut attempts = 0usize;
+    while rows.len() < nnz && attempts < nnz * 4 {
+        attempts += 1;
+        let (mut r, mut cl) = (0usize, 0usize);
+        let mut half = side >> 1;
+        while half > 0 {
+            let p = rng.f64();
+            if p < a {
+                // top-left
+            } else if p < a + b {
+                cl += half;
+            } else if p < a + b + c {
+                r += half;
+            } else {
+                r += half;
+                cl += half;
+            }
+            half >>= 1;
+        }
+        if r < n && cl < n {
+            rows.push(perm[r]);
+            cols.push(perm[cl]);
+            vals.push(nonzero_val(rng));
+        }
+    }
+    let mut coo = Coo { m: n, k: n, rows, cols, vals };
+    coo.sum_duplicates();
+    coo
+}
+
+/// Banded matrix: each row has ~`row_nnz` entries within `|i - j| <= band`.
+/// Models FEM/structural SuiteSparse matrices (crystm03 et al.).
+pub fn banded(n: usize, band: usize, row_nnz: usize, rng: &mut Rng) -> Coo {
+    assert!(n > 0);
+    let band = band.max(1).min(n - 1).max(1);
+    let mut rows = Vec::new();
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    for i in 0..n {
+        let lo = i.saturating_sub(band);
+        let hi = (i + band + 1).min(n);
+        let width = hi - lo;
+        let want = row_nnz.min(width);
+        // Sample `want` distinct offsets in [lo, hi).
+        let mut offs: Vec<usize> = (lo..hi).collect();
+        rng.shuffle(&mut offs);
+        offs.truncate(want);
+        offs.sort_unstable();
+        for j in offs {
+            rows.push(i as u32);
+            cols.push(j as u32);
+            vals.push(nonzero_val(rng));
+        }
+    }
+    Coo { m: n, k: n, rows, cols, vals }
+}
+
+/// Circuit-like: full diagonal plus `offdiag_per_row` random off-diagonals.
+pub fn diagonal_dominant(n: usize, offdiag_per_row: usize, rng: &mut Rng) -> Coo {
+    let mut rows = Vec::new();
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    for i in 0..n {
+        rows.push(i as u32);
+        cols.push(i as u32);
+        vals.push(rng.range_f32(1.0, 4.0)); // dominant diagonal
+        for _ in 0..offdiag_per_row {
+            let j = rng.index(n);
+            if j != i {
+                rows.push(i as u32);
+                cols.push(j as u32);
+                vals.push(nonzero_val(rng) * 0.1);
+            }
+        }
+    }
+    let mut coo = Coo { m: n, k: n, rows, cols, vals };
+    coo.sum_duplicates();
+    coo
+}
+
+/// Block-diagonal with `nblocks` dense-ish blocks of size `bs` and density
+/// `block_density` inside each block.
+pub fn block_diag(nblocks: usize, bs: usize, block_density: f64, rng: &mut Rng) -> Coo {
+    let n = nblocks * bs;
+    let mut rows = Vec::new();
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    for blk in 0..nblocks {
+        let base = blk * bs;
+        for i in 0..bs {
+            for j in 0..bs {
+                if rng.chance(block_density) {
+                    rows.push((base + i) as u32);
+                    cols.push((base + j) as u32);
+                    vals.push(nonzero_val(rng));
+                }
+            }
+        }
+    }
+    Coo { m: n, k: n, rows, cols, vals }
+}
+
+/// Zipf row degrees (exponent `s`), uniform column targets. `m` rows and
+/// `k` columns may differ (bipartite data).
+pub fn power_law_rows(m: usize, k: usize, nnz: usize, s: f64, rng: &mut Rng) -> Coo {
+    assert!(m > 0 && k > 0);
+    // Degree weights w_i = (i+1)^-s over a random row permutation.
+    let mut weights: Vec<f64> = (0..m).map(|i| ((i + 1) as f64).powf(-s)).collect();
+    let mut perm: Vec<usize> = (0..m).collect();
+    rng.shuffle(&mut perm);
+    let total: f64 = weights.iter().sum();
+    for w in weights.iter_mut() {
+        *w /= total;
+    }
+    let mut rows = Vec::with_capacity(nnz);
+    let mut cols = Vec::with_capacity(nnz);
+    let mut vals = Vec::with_capacity(nnz);
+    // Cumulative degree targets, then fill row by row to hit exact nnz.
+    // Cap any single row at 0.5% of nnz (min 16): matches real datasets,
+    // where even recommender heads stay well below a percent of all
+    // interactions (an uncapped Zipf head at small m is a degenerate case).
+    let cap = (nnz / 200).max(16);
+    let mut remaining = nnz;
+    for (i, &w) in weights.iter().enumerate() {
+        let want = if i + 1 == m {
+            remaining.min(cap)
+        } else {
+            ((nnz as f64 * w).round() as usize).min(remaining).min(cap)
+        };
+        let r = perm[i] as u32;
+        for _ in 0..want {
+            rows.push(r);
+            cols.push(rng.index(k) as u32);
+            vals.push(nonzero_val(rng));
+        }
+        remaining -= want;
+        if remaining == 0 {
+            break;
+        }
+    }
+    let mut coo = Coo { m, k, rows, cols, vals };
+    coo.sum_duplicates();
+    coo
+}
+
+/// Identity-like diagonal matrix (edge case exerciser).
+pub fn diagonal(n: usize, rng: &mut Rng) -> Coo {
+    let mut coo = Coo::empty(n, n);
+    for i in 0..n {
+        coo.rows.push(i as u32);
+        coo.cols.push(i as u32);
+        coo.vals.push(nonzero_val(rng));
+    }
+    coo
+}
+
+#[inline]
+fn nonzero_val(rng: &mut Rng) -> f32 {
+    // Normal values, re-drawn away from exact zero so pruning never fires.
+    loop {
+        let v = rng.normal();
+        if v != 0.0 {
+            return v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn random_uniform_hits_target_nnz() {
+        let mut rng = Rng::new(1);
+        let a = random_with_nnz(50, 60, 300, &mut rng);
+        assert_eq!(a.nnz(), 300);
+        assert_eq!((a.m, a.k), (50, 60));
+    }
+
+    #[test]
+    fn random_uniform_no_duplicates() {
+        let mut rng = Rng::new(2);
+        let a = random_with_nnz(30, 30, 400, &mut rng);
+        let mut cells: Vec<(u32, u32)> =
+            a.rows.iter().zip(a.cols.iter()).map(|(&r, &c)| (r, c)).collect();
+        cells.sort_unstable();
+        cells.dedup();
+        assert_eq!(cells.len(), a.nnz());
+    }
+
+    #[test]
+    fn random_saturates_at_full() {
+        let mut rng = Rng::new(3);
+        let a = random_with_nnz(4, 4, 100, &mut rng);
+        assert_eq!(a.nnz(), 16);
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let mut rng = Rng::new(4);
+        let a = rmat(1024, 8192, 0.57, 0.19, 0.19, &mut rng);
+        assert!(a.nnz() > 4000, "nnz {}", a.nnz());
+        let counts = a.row_counts();
+        let mean = a.nnz() as f64 / 1024.0;
+        let max = *counts.iter().max().unwrap() as f64;
+        assert!(max > 4.0 * mean, "rmat should be heavy-tailed: max {max} mean {mean}");
+    }
+
+    #[test]
+    fn banded_respects_band() {
+        let mut rng = Rng::new(5);
+        let a = banded(100, 5, 4, &mut rng);
+        for i in 0..a.nnz() {
+            let d = (a.rows[i] as i64 - a.cols[i] as i64).abs();
+            assert!(d <= 5, "entry outside band: {d}");
+        }
+        assert_eq!(a.nnz(), 400);
+    }
+
+    #[test]
+    fn diagonal_dominant_has_full_diagonal() {
+        let mut rng = Rng::new(6);
+        let a = diagonal_dominant(64, 3, &mut rng);
+        let mut diag = vec![false; 64];
+        for i in 0..a.nnz() {
+            if a.rows[i] == a.cols[i] {
+                diag[a.rows[i] as usize] = true;
+            }
+        }
+        assert!(diag.iter().all(|&d| d));
+    }
+
+    #[test]
+    fn block_diag_stays_in_blocks() {
+        let mut rng = Rng::new(7);
+        let a = block_diag(4, 8, 0.5, &mut rng);
+        for i in 0..a.nnz() {
+            assert_eq!(a.rows[i] as usize / 8, a.cols[i] as usize / 8);
+        }
+    }
+
+    #[test]
+    fn power_law_nnz_and_skew() {
+        let mut rng = Rng::new(8);
+        let a = power_law_rows(5000, 4000, 50_000, 1.1, &mut rng);
+        // Zipf heads collide and the per-row cap truncates; allow slack.
+        assert!(a.nnz() <= 50_000 && a.nnz() > 25_000, "nnz {}", a.nnz());
+        let max = a.max_row_nnz() as f64;
+        let mean = a.nnz() as f64 / 5000.0;
+        assert!(max > 5.0 * mean, "power-law should be skewed: {max} vs {mean}");
+        // ...but the head must stay capped (0.5% of target nnz).
+        assert!(a.max_row_nnz() <= (50_000 / 200).max(16));
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = rmat(256, 1000, 0.57, 0.19, 0.19, &mut Rng::new(99));
+        let b = rmat(256, 1000, 0.57, 0.19, 0.19, &mut Rng::new(99));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn all_generators_in_bounds_property() {
+        prop::check("gen_bounds", 0x6E4, 24, |rng| {
+            let m = 2 + rng.index(128);
+            let k = 2 + rng.index(128);
+            let which = rng.index(6);
+            let a = match which {
+                0 => random_uniform(m, k, 0.05 + rng.f64() * 0.2, rng),
+                1 => rmat(m.max(4), m * 4, 0.57, 0.19, 0.19, rng),
+                2 => banded(m, 1 + rng.index(8), 1 + rng.index(6), rng),
+                3 => diagonal_dominant(m, rng.index(4), rng),
+                4 => block_diag(1 + m / 16, 8, 0.3, rng),
+                _ => power_law_rows(m, k, m * 3, 1.0 + rng.f64(), rng),
+            };
+            for i in 0..a.nnz() {
+                if a.rows[i] as usize >= a.m || a.cols[i] as usize >= a.k {
+                    return Err(format!("gen {which}: entry oob"));
+                }
+                if a.vals[i] == 0.0 {
+                    return Err(format!("gen {which}: explicit zero"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

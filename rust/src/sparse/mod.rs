@@ -1,0 +1,12 @@
+//! Sparse-matrix substrate: formats, I/O, generators, and the evaluation
+//! catalog (paper §2.1, §4.1, Table 2).
+
+pub mod catalog;
+pub mod coo;
+pub mod csr;
+pub mod gen;
+pub mod mm_io;
+pub mod rng;
+
+pub use coo::Coo;
+pub use csr::Csr;

@@ -1,0 +1,116 @@
+//! Integration: HFlex accelerator + serving coordinator working together —
+//! one synthesized accelerator serving a heterogeneous request mix, with
+//! failure injection (bad shapes, foreign images) leaving the service
+//! healthy.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sextans::arch::AcceleratorConfig;
+use sextans::coordinator::{BatchPolicy, FunctionalExecutor, Server, SpmmRequest};
+use sextans::hflex::{HFlexAccelerator, HFlexError, SpmmProblem};
+use sextans::prop::assert_allclose;
+use sextans::sched::preprocess;
+use sextans::sparse::{gen, rng::Rng};
+
+#[test]
+fn hflex_end_to_end_mixed_shapes_and_scalars() {
+    let accel = HFlexAccelerator::synthesize(AcceleratorConfig::sextans_u280());
+    let mut rng = Rng::new(100);
+    // Mixed structures: uniform, banded, power-law, rmat — all on the same
+    // accelerator, with varied (alpha, beta).
+    let cases: Vec<(sextans::sparse::Coo, usize, f32, f32)> = vec![
+        (gen::random_uniform(128, 256, 0.05, &mut rng), 8, 1.0, 0.0),
+        (gen::banded(300, 6, 5, &mut rng), 16, 2.0, -1.0),
+        (gen::power_law_rows(200, 150, 2_000, 0.8, &mut rng), 4, 0.5, 0.5),
+        (gen::rmat(256, 2_048, 0.45, 0.2, 0.2, &mut rng), 32, -1.0, 2.0),
+    ];
+    for (coo, n, alpha, beta) in cases {
+        let image = accel.preprocess(&coo).unwrap();
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        let mut c: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let mut want = c.clone();
+        coo.spmm_reference(&b, &mut want, n, alpha, beta);
+        let rep = accel
+            .invoke(SpmmProblem { a: &image, b: &b, c: &mut c, n, alpha, beta })
+            .unwrap();
+        assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
+        assert!(rep.sim.cycles > 0);
+        assert!(rep.sim.gflops > 0.0);
+    }
+}
+
+#[test]
+fn server_survives_heterogeneous_load() {
+    let cfg = AcceleratorConfig::sextans_u280();
+    let mut rng = Rng::new(200);
+    let m1 = gen::random_uniform(100, 80, 0.1, &mut rng);
+    let m2 = gen::banded(150, 4, 3, &mut rng);
+    let i1 = Arc::new(preprocess(&m1, cfg.p(), cfg.k0, cfg.d));
+    let i2 = Arc::new(preprocess(&m2, cfg.p(), cfg.k0, cfg.d));
+
+    let server = Server::start(
+        2,
+        BatchPolicy { max_columns: 64, window: Duration::from_millis(2) },
+        |_| Box::new(FunctionalExecutor),
+    );
+    let h1 = server.register(i1);
+    let h2 = server.register(i2);
+
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    for i in 0..30 {
+        let (h, coo) = if i % 2 == 0 { (h1.clone(), &m1) } else { (h2.clone(), &m2) };
+        let n = 1 + (i % 5);
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        let c: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let mut want = c.clone();
+        coo.spmm_reference(&b, &mut want, n, 1.0, 1.0);
+        expected.push(want);
+        rxs.push(server.submit(SpmmRequest { image: h, b, c, n, alpha: 1.0, beta: 1.0 }));
+    }
+    for (rx, want) in rxs.into_iter().zip(expected) {
+        let resp = rx.recv().unwrap();
+        assert_allclose(&resp.c, &want, 2e-4, 2e-4).unwrap();
+    }
+    let s = server.shutdown();
+    assert_eq!(s.requests, 30);
+}
+
+#[test]
+fn failure_injection_wrong_config_is_rejected_cleanly() {
+    let accel = HFlexAccelerator::synthesize(AcceleratorConfig::sextans_u280());
+    let mut rng = Rng::new(300);
+    let coo = gen::random_uniform(64, 64, 0.1, &mut rng);
+    // Image for a hypothetical different accelerator generation.
+    let foreign = preprocess(&coo, 32, 2048, 6);
+    let b = vec![0f32; 64 * 8];
+    let mut c = vec![0f32; 64 * 8];
+    let err = accel
+        .invoke(SpmmProblem { a: &foreign, b: &b, c: &mut c, n: 8, alpha: 1.0, beta: 0.0 })
+        .unwrap_err();
+    assert!(matches!(err, HFlexError::WrongConfiguration { .. }));
+    // The accelerator still works afterwards.
+    let good = accel.preprocess(&coo).unwrap();
+    accel
+        .invoke(SpmmProblem { a: &good, b: &b, c: &mut c, n: 8, alpha: 1.0, beta: 0.0 })
+        .unwrap();
+}
+
+#[test]
+fn simulated_timing_is_monotone_in_n() {
+    let accel = HFlexAccelerator::synthesize(AcceleratorConfig::sextans_u280());
+    let mut rng = Rng::new(400);
+    let coo = gen::random_uniform(2048, 2048, 0.01, &mut rng);
+    let image = accel.preprocess(&coo).unwrap();
+    let mut prev = 0u64;
+    for n in [8usize, 64, 512] {
+        let b = vec![0f32; coo.k * n];
+        let mut c = vec![0f32; coo.m * n];
+        let rep = accel
+            .invoke(SpmmProblem { a: &image, b: &b, c: &mut c, n, alpha: 1.0, beta: 0.0 })
+            .unwrap();
+        assert!(rep.sim.cycles > prev, "cycles must grow with N");
+        prev = rep.sim.cycles;
+    }
+}

@@ -1,0 +1,153 @@
+//! Integration: the paper's evaluation *shape* must hold on a reduced
+//! sweep. These are the claims DESIGN.md §4 commits to reproducing — who
+//! wins, by roughly what factor, and where the crossovers fall.
+
+use sextans::metrics::{geomean_speedup, summarize};
+use sextans::perfmodel::Platform;
+use sextans::report::{run_sweep, SweepOptions};
+use sextans::sparse::catalog::Scale;
+
+fn sweep() -> &'static [sextans::metrics::SweepPoint] {
+    use std::sync::OnceLock;
+    static PTS: OnceLock<Vec<sextans::metrics::SweepPoint>> = OnceLock::new();
+    PTS.get_or_init(|| {
+        run_sweep(&SweepOptions {
+            scale: Scale::Ci,
+            n_values: vec![8, 64, 512],
+            max_matrices: None,
+            stride: 3, // ~67 matrices spread over all six families
+            verbose: false,
+        })
+    })
+}
+
+#[test]
+fn sextans_beats_k80_geomean() {
+    // Paper headline: 2.50x geomean. Accept the 1.5-4x band on the
+    // reduced sweep.
+    let s = geomean_speedup(sweep(), Platform::Sextans, Platform::K80);
+    assert!((1.5..4.0).contains(&s), "Sextans/K80 geomean = {s}");
+}
+
+#[test]
+fn sextans_p_beats_v100_geomean() {
+    // Paper: 1.14x. Accept 1.0-2.0.
+    let s = geomean_speedup(sweep(), Platform::SextansP, Platform::V100);
+    assert!((1.0..2.0).contains(&s), "Sextans-P/V100 geomean = {s}");
+}
+
+#[test]
+fn v100_beats_sextans_geomean_but_not_sextans_p() {
+    let v100 = geomean_speedup(sweep(), Platform::V100, Platform::K80);
+    let sx = geomean_speedup(sweep(), Platform::Sextans, Platform::K80);
+    let sxp = geomean_speedup(sweep(), Platform::SextansP, Platform::K80);
+    assert!(v100 > sx, "V100 ({v100}) must beat Sextans ({sx}) overall");
+    assert!(sxp > v100 * 0.95, "Sextans-P ({sxp}) must match/beat V100 ({v100})");
+}
+
+#[test]
+fn v100_wins_at_large_problems() {
+    // Paper Fig. 7: "the saturated throughput of V100 is higher than that
+    // of Sextans-P" — at the largest problems V100 must win.
+    let pts = sweep();
+    let mut big: Vec<&sextans::metrics::SweepPoint> =
+        pts.iter().filter(|p| p.n == 512).collect();
+    big.sort_by_key(|p| std::cmp::Reverse(p.flops));
+    let top_flops = big.first().map(|p| p.flops).unwrap();
+    let at_top = |platform| {
+        big.iter()
+            .find(|p| p.platform == platform && p.flops >= top_flops / 2)
+            .map(|p| p.gflops)
+            .unwrap()
+    };
+    assert!(at_top(Platform::V100) > at_top(Platform::SextansP));
+}
+
+#[test]
+fn sextans_wins_at_small_problems() {
+    // Paper §4.2.1: "for problem size less than 1e6 FLOP, Sextans performs
+    // better than both K80 and V100" (runtime overhead amplification).
+    let pts = sweep();
+    let small: Vec<&sextans::metrics::SweepPoint> =
+        pts.iter().filter(|p| p.flops < 1_000_000).collect();
+    assert!(!small.is_empty(), "reduced sweep must include small problems");
+    let geo = |platform| {
+        let xs: Vec<f64> = small
+            .iter()
+            .filter(|p| p.platform == platform)
+            .map(|p| p.gflops)
+            .collect();
+        sextans::metrics::geomean(&xs)
+    };
+    let sx = geo(Platform::Sextans);
+    assert!(sx > geo(Platform::K80), "small problems: Sextans must beat K80");
+    assert!(sx > geo(Platform::V100), "small problems: Sextans must beat V100");
+}
+
+#[test]
+fn peak_throughput_ordering_matches_table3() {
+    // V100 > Sextans-P > Sextans > K80 at the peak (Table 3).
+    let peaks: Vec<f64> = [Platform::K80, Platform::Sextans, Platform::SextansP, Platform::V100]
+        .iter()
+        .map(|p| summarize(*p, sweep()).peak_gflops)
+        .collect();
+    assert!(peaks[1] > peaks[0], "Sextans peak must beat K80: {peaks:?}");
+    assert!(peaks[2] > peaks[1], "Sextans-P peak must beat Sextans: {peaks:?}");
+    assert!(peaks[3] > peaks[2], "V100 peak must beat Sextans-P: {peaks:?}");
+}
+
+#[test]
+fn sextans_saturates_earlier_than_v100() {
+    // Paper Fig. 8a: Sextans reaches its peak at ~8e7 FLOP, GPUs at ~1e9.
+    // On the CI-scale catalog the K80's curve is truncated (its compute
+    // roof is low enough to saturate in-range), so the robust comparison
+    // is against V100, whose saturation point is far beyond CI scale.
+    let pts = sweep();
+    let saturation_size = |platform| {
+        let series: Vec<(f64, f64)> = pts
+            .iter()
+            .filter(|p| p.platform == platform)
+            .map(|p| (p.flops as f64, p.gflops))
+            .collect();
+        let peaks = sextans::metrics::running_peak(&series);
+        let final_peak = peaks.last().unwrap().1;
+        peaks
+            .iter()
+            .find(|(_, v)| *v >= 0.9 * final_peak)
+            .map(|(s, _)| *s)
+            .unwrap()
+    };
+    let sx = saturation_size(Platform::Sextans);
+    let v100 = saturation_size(Platform::V100);
+    assert!(sx < v100, "Sextans saturates at {sx:.2e}, V100 at {v100:.2e}");
+}
+
+#[test]
+fn energy_efficiency_shape() {
+    // Paper Fig. 10: normalized to K80, Sextans ~6.25x, V100 ~1.95x,
+    // Sextans-P ~6.70x. Check ordering + rough bands.
+    let pts = sweep();
+    let k80 = summarize(Platform::K80, pts).geomean_flop_per_joule;
+    let sx = summarize(Platform::Sextans, pts).geomean_flop_per_joule / k80;
+    let v100 = summarize(Platform::V100, pts).geomean_flop_per_joule / k80;
+    let sxp = summarize(Platform::SextansP, pts).geomean_flop_per_joule / k80;
+    assert!(sx > v100, "Sextans ({sx:.2}) must be greener than V100 ({v100:.2})");
+    assert!(sxp > v100, "Sextans-P must be greener than V100");
+    assert!((3.0..12.0).contains(&sx), "Sextans/K80 energy = {sx:.2} (paper 6.25)");
+    assert!((1.0..4.0).contains(&v100), "V100/K80 energy = {v100:.2} (paper 1.95)");
+}
+
+#[test]
+fn bandwidth_utilization_bands() {
+    // Paper Fig. 9 geomeans: K80 1.47%, Sextans 3.85%, V100 3.39%,
+    // Sextans-P 3.88%. Check Sextans > K80 by ~2-4x and all in the
+    // few-percent regime.
+    let pts = sweep();
+    let k80 = summarize(Platform::K80, pts).geomean_bw_util;
+    let sx = summarize(Platform::Sextans, pts).geomean_bw_util;
+    assert!(sx / k80 > 1.5, "Sextans bw-util must beat K80: {} vs {}", sx, k80);
+    for p in [Platform::K80, Platform::Sextans, Platform::V100, Platform::SextansP] {
+        let u = summarize(p, pts).geomean_bw_util;
+        assert!((0.001..0.25).contains(&u), "{:?} geomean bw util = {u}", p);
+    }
+}

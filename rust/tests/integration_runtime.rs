@@ -1,0 +1,198 @@
+//! Integration: the PJRT runtime executing AOT Pallas kernels vs the
+//! functional simulator and the naive oracle — the end-to-end numeric
+//! contract of the three-layer stack.
+//!
+//! Requires `artifacts/` (`make artifacts`). PJRT handles are not Send, so
+//! each test thread builds its own Engine (a few hundred ms of compiles).
+
+use sextans::arch::functional;
+use sextans::prop::assert_allclose;
+use sextans::runtime::{manifest, Engine};
+use sextans::sparse::{gen, rng::Rng, Coo};
+
+fn engine() -> Option<Engine> {
+    if manifest::default_dir().join("manifest.tsv").exists() {
+        Some(Engine::load_default().expect("engine load"))
+    } else {
+        eprintln!("artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+macro_rules! require_engine {
+    () => {
+        match engine() {
+            Some(e) => e,
+            None => return, // environment without artifacts: skip
+        }
+    };
+}
+
+#[test]
+fn manifest_lists_expected_artifact_kinds() {
+    let e = &require_engine!();
+    assert!(e.variants().len() >= 3, "expected >= 3 window variants");
+    assert!(e.fused_variant().is_some());
+}
+
+#[test]
+fn window_kernel_matches_functional_scatter() {
+    let e = &require_engine!();
+    let v = e.variants()[0];
+    let mut rng = Rng::new(1);
+    let rows: Vec<i32> = (0..v.nnz_cap).map(|_| rng.index(v.m_tile) as i32).collect();
+    let cols: Vec<i32> = (0..v.nnz_cap).map(|_| rng.index(v.k0) as i32).collect();
+    let mut vals: Vec<f32> = (0..v.nnz_cap).map(|_| rng.normal()).collect();
+    // Pad the tail: padding contract is val == 0.
+    for t in v.nnz_cap - 32..v.nnz_cap {
+        vals[t] = 0.0;
+    }
+    let b: Vec<f32> = (0..v.k0 * v.n0).map(|_| rng.normal()).collect();
+    let c: Vec<f32> = (0..v.m_tile * v.n0).map(|_| rng.normal()).collect();
+
+    let got = e.run_window(v, &rows, &cols, &vals, &b, &c).unwrap();
+
+    // Host-side sequential scatter in identical order.
+    let mut want = c.clone();
+    for t in 0..v.nnz_cap {
+        let (r, cl, val) = (rows[t] as usize, cols[t] as usize, vals[t]);
+        for q in 0..v.n0 {
+            want[r * v.n0 + q] += val * b[cl * v.n0 + q];
+        }
+    }
+    assert_allclose(&got, &want, 1e-4, 1e-4).unwrap();
+}
+
+#[test]
+fn comp_kernel_is_axpby() {
+    let e = &require_engine!();
+    let v = e.variants()[0];
+    let mut rng = Rng::new(2);
+    let c_ab: Vec<f32> = (0..v.m_tile * v.n0).map(|_| rng.normal()).collect();
+    let c_in: Vec<f32> = (0..v.m_tile * v.n0).map(|_| rng.normal()).collect();
+    let got = e.run_comp(v.m_tile, v.n0, &c_ab, &c_in, 2.5, -0.5).unwrap();
+    let want: Vec<f32> = c_ab
+        .iter()
+        .zip(&c_in)
+        .map(|(a, b)| 2.5 * a - 0.5 * b)
+        .collect();
+    assert_allclose(&got, &want, 1e-5, 1e-5).unwrap();
+}
+
+#[test]
+fn full_spmm_matches_functional_simulator() {
+    let e = &require_engine!();
+    let mut rng = Rng::new(3);
+    let coo = gen::random_uniform(300, 900, 0.02, &mut rng);
+    let (v, image) = e.plan(&coo, 4, 10).unwrap();
+    let n = 11; // deliberately not a multiple of N0
+    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+    let c_in: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+
+    let got = e.spmm(v, &image, &b, &c_in, n, 1.5, -0.25).unwrap();
+
+    let mut want = c_in.clone();
+    functional::execute(&image, &b, &mut want, n, 1.5, -0.25);
+    assert_allclose(&got, &want, 1e-4, 1e-4).unwrap();
+
+    // And against the naive COO oracle (independent of the image).
+    let mut oracle = c_in;
+    coo.spmm_reference(&b, &mut oracle, n, 1.5, -0.25);
+    assert_allclose(&got, &oracle, 1e-3, 1e-3).unwrap();
+}
+
+#[test]
+fn spmm_hflex_contract_same_engine_many_shapes() {
+    let e = &require_engine!();
+    let mut rng = Rng::new(4);
+    for (m, k, n) in [(64usize, 64usize, 8usize), (200, 500, 4), (500, 120, 24)] {
+        let coo = gen::random_uniform(m, k, 0.05, &mut rng);
+        let (v, image) = e.plan(&coo, 4, 10).unwrap();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let c_in = vec![0f32; m * n];
+        let got = e.spmm(v, &image, &b, &c_in, n, 1.0, 0.0).unwrap();
+        let mut want = vec![0f32; m * n];
+        coo.spmm_reference(&b, &mut want, n, 1.0, 0.0);
+        assert_allclose(&got, &want, 1e-3, 1e-3).unwrap();
+    }
+}
+
+#[test]
+fn spmm_rejects_mismatched_image() {
+    let e = &require_engine!();
+    let coo = Coo::empty(64, 64);
+    let (v, _) = e.plan(&coo, 4, 10).unwrap();
+    // Preprocess with a non-variant window size.
+    let bad = sextans::sched::preprocess(&coo, 4, v.k0 + 1, 10);
+    let b = vec![0f32; 64 * 8];
+    let c = vec![0f32; 64 * 8];
+    assert!(e.spmm(v, &bad, &b, &c, 8, 1.0, 0.0).is_err());
+}
+
+#[test]
+fn fused_artifact_matches_window_composition() {
+    let e = &require_engine!();
+    let Some((v, nwin)) = e.fused_variant() else { return };
+    let mut rng = Rng::new(5);
+    let nnz = 600usize;
+    let mut rows = vec![0i32; nwin * v.nnz_cap];
+    let mut cols = vec![0i32; nwin * v.nnz_cap];
+    let mut vals = vec![0f32; nwin * v.nnz_cap];
+    let mut fill = vec![0usize; nwin];
+    for _ in 0..nnz {
+        let w = rng.index(nwin);
+        if fill[w] >= v.nnz_cap {
+            continue;
+        }
+        let t = w * v.nnz_cap + fill[w];
+        rows[t] = rng.index(v.m_tile) as i32;
+        cols[t] = rng.index(v.k0) as i32;
+        vals[t] = rng.normal();
+        fill[w] += 1;
+    }
+    let b_wins: Vec<f32> = (0..nwin * v.k0 * v.n0).map(|_| rng.normal()).collect();
+    let c_in: Vec<f32> = (0..v.m_tile * v.n0).map(|_| rng.normal()).collect();
+    let (alpha, beta) = (1.25f32, 0.75f32);
+
+    let fused = e
+        .run_fused(&rows, &cols, &vals, &b_wins, &c_in, alpha, beta)
+        .unwrap();
+
+    // Window-by-window + comp composition.
+    let mut acc = vec![0f32; v.m_tile * v.n0];
+    for w in 0..nwin {
+        let s = w * v.nnz_cap;
+        acc = e
+            .run_window(
+                v,
+                &rows[s..s + v.nnz_cap],
+                &cols[s..s + v.nnz_cap],
+                &vals[s..s + v.nnz_cap],
+                &b_wins[w * v.k0 * v.n0..(w + 1) * v.k0 * v.n0],
+                &acc,
+            )
+            .unwrap();
+    }
+    let want = e.run_comp(v.m_tile, v.n0, &acc, &c_in, alpha, beta).unwrap();
+    assert_allclose(&fused, &want, 1e-4, 1e-4).unwrap();
+}
+
+#[test]
+fn dense_tile_matches_host_matmul() {
+    let e = &require_engine!();
+    let mut rng = Rng::new(6);
+    let (m_t, k_t, n_t) = (128usize, 128usize, 8usize);
+    let a: Vec<f32> = (0..m_t * k_t).map(|_| rng.normal()).collect();
+    let b: Vec<f32> = (0..k_t * n_t).map(|_| rng.normal()).collect();
+    let got = e.run_dense(&a, &b).unwrap();
+    let mut want = vec![0f32; m_t * n_t];
+    for i in 0..m_t {
+        for l in 0..k_t {
+            let av = a[i * k_t + l];
+            for j in 0..n_t {
+                want[i * n_t + j] += av * b[l * n_t + j];
+            }
+        }
+    }
+    assert_allclose(&got, &want, 1e-3, 1e-3).unwrap();
+}
