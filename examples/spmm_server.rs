@@ -14,7 +14,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use sextans::arch::AcceleratorConfig;
-use sextans::coordinator::{BatchPolicy, FunctionalExecutor, Server, SpmmRequest};
+use sextans::coordinator::{BatchPolicy, Server, SpmmRequest};
 use sextans::sched::preprocess;
 use sextans::sparse::{gen, rng::Rng};
 
@@ -36,11 +36,14 @@ fn main() {
     let fem_img = Arc::new(preprocess(&fem, cfg.p(), cfg.k0, cfg.d));
     println!("preprocessing (both): {:.2} s", t0.elapsed().as_secs_f64());
 
-    let server = Server::start(
+    // Workers pick their engine by registry name; swap "native" for
+    // "functional" or "pjrt" to change the execution path.
+    let server = Server::start_backend(
         2,
         BatchPolicy { max_columns: 256, window: std::time::Duration::from_millis(3) },
-        |_| Box::new(FunctionalExecutor),
-    );
+        "native",
+    )
+    .expect("backend spec");
     let h_social = server.register(social_img);
     let h_fem = server.register(fem_img);
 
@@ -78,6 +81,9 @@ fn main() {
         "batching: {} batches, mean {:.1} requests/batch",
         s.batches, s.mean_batch
     );
+    for (name, count) in &s.backends {
+        println!("backend {name}: {count} requests");
+    }
     println!(
         "latency: p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms",
         s.p50_s * 1e3,

@@ -1,0 +1,81 @@
+//! Backend benchmarks: native engine (1/2/4/8 threads) vs the functional
+//! simulator on synthetic catalog shapes, in GFLOP/s of served SpMM.
+//!
+//! The acceptance bar for the native engine is to beat the functional
+//! backend at >= 4 threads on every shape (it should already win at 1
+//! thread thanks to the 8-lane chunked inner loop).
+
+use std::time::Duration;
+
+use sextans::arch::simulator::problem_flops;
+use sextans::backend::{FunctionalBackend, NativeBackend, SpmmBackend};
+use sextans::bench_util::{bench, black_box, section};
+use sextans::sched::preprocess;
+use sextans::sparse::catalog::{catalog, crystm03_like, MatrixSpec, Scale};
+use sextans::sparse::rng::Rng;
+
+fn pick(specs: &[MatrixSpec], name_prefix: &str) -> Option<MatrixSpec> {
+    specs.iter().find(|s| s.name.starts_with(name_prefix)).cloned()
+}
+
+fn main() {
+    let specs = catalog(Scale::Ci);
+    // A graph, a banded FEM matrix, and the Table 1 crystm03 stand-in.
+    let shapes: Vec<MatrixSpec> = [
+        pick(&specs, "snap_rmat_25"),
+        pick(&specs, "ss_banded_15"),
+        Some(crystm03_like()),
+    ]
+    .into_iter()
+    .flatten()
+    .collect();
+
+    let n = 16usize;
+    let mut rng = Rng::new(0xBE);
+    for spec in shapes {
+        let coo = spec.build();
+        // Paper-shaped image: 64 PEs, K0 = 4096, D = 10.
+        let sm = preprocess(&coo, 64, 4096, 10);
+        let flops = problem_flops(coo.nnz(), coo.m, n) as f64;
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let mut c = c0.clone();
+
+        section(&format!(
+            "{} ({}x{}, nnz {}, N={n})",
+            spec.name,
+            coo.m,
+            coo.k,
+            coo.nnz()
+        ));
+
+        let mut functional = FunctionalBackend;
+        let r = bench("backend/functional", 1, 6, Duration::from_millis(400), || {
+            c.copy_from_slice(&c0);
+            functional.execute(&sm, &b, &mut c, n, 1.0, 0.5).unwrap();
+            black_box(&c);
+        });
+        let base_gflops = r.throughput(flops) / 1e9;
+        println!("    -> {base_gflops:.2} GFLOP/s");
+
+        for threads in [1usize, 2, 4, 8] {
+            let mut native = NativeBackend::new(threads);
+            let r = bench(
+                &format!("backend/native:{threads}"),
+                1,
+                6,
+                Duration::from_millis(400),
+                || {
+                    c.copy_from_slice(&c0);
+                    native.execute(&sm, &b, &mut c, n, 1.0, 0.5).unwrap();
+                    black_box(&c);
+                },
+            );
+            let gflops = r.throughput(flops) / 1e9;
+            println!(
+                "    -> {gflops:.2} GFLOP/s ({:.2}x vs functional)",
+                gflops / base_gflops
+            );
+        }
+    }
+}

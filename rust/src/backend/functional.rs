@@ -1,0 +1,74 @@
+//! The functional-simulator backend: [`crate::arch::functional::execute`]
+//! behind the [`SpmmBackend`] trait — serial, dependency-free, and the
+//! reference semantics every other backend is tested against.
+
+use super::{check_shapes, BackendError, Capability, SpmmBackend};
+use crate::arch::functional;
+use crate::sched::ScheduledMatrix;
+
+/// Serial functional-simulator backend (exact FP32 datapath numerics).
+pub struct FunctionalBackend;
+
+impl SpmmBackend for FunctionalBackend {
+    fn name(&self) -> &'static str {
+        "functional"
+    }
+
+    fn capability(&self) -> Capability {
+        Capability {
+            threads: 1,
+            simd_lanes: 1,
+            requires_artifacts: false,
+            deterministic: true,
+        }
+    }
+
+    fn execute(
+        &mut self,
+        sm: &ScheduledMatrix,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<(), BackendError> {
+        check_shapes(sm, b, c, n)?;
+        functional::execute(sm, b, c, n, alpha, beta);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::sched::preprocess;
+    use crate::sparse::{gen, rng::Rng};
+
+    #[test]
+    fn adapter_matches_direct_call() {
+        let mut rng = Rng::new(1);
+        let a = gen::random_uniform(30, 25, 0.2, &mut rng);
+        let sm = preprocess(&a, 4, 8, 5);
+        let n = 3;
+        let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..a.m * n).map(|_| rng.normal()).collect();
+        let mut got = c0.clone();
+        FunctionalBackend.execute(&sm, &b, &mut got, n, 1.5, 0.5).unwrap();
+        let mut want = c0;
+        functional::execute(&sm, &b, &mut want, n, 1.5, 0.5);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn rejects_bad_shapes_instead_of_panicking() {
+        let mut rng = Rng::new(2);
+        let a = gen::random_uniform(8, 8, 0.3, &mut rng);
+        let sm = preprocess(&a, 2, 4, 3);
+        let b = vec![0.0; 5];
+        let mut c = vec![0.0; 16];
+        let err = FunctionalBackend.execute(&sm, &b, &mut c, 2, 1.0, 0.0).unwrap_err();
+        assert!(matches!(err, BackendError::Shape(_)));
+        prop::assert_allclose(&c, &vec![0.0; 16], 0.0, 0.0).unwrap();
+    }
+}

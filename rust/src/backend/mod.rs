@@ -1,0 +1,309 @@
+//! Pluggable SpMM execution backends — the HFlex contract (§3.4) made
+//! portable: a preprocessed [`ScheduledMatrix`] image is itself the
+//! executable format, and anything that can consume it (a native CPU
+//! engine, the functional simulator, the PJRT/XLA kernel path, one day a
+//! real bitstream) is interchangeable behind [`SpmmBackend`].
+//!
+//! * [`native::NativeBackend`] — multi-threaded host engine, PE-parallel
+//!   across the image's P streams with an 8-lane (N0-shaped) inner loop.
+//!   The default: correct, fast, and dependency-free.
+//! * [`functional::FunctionalBackend`] — the cycle-exact functional
+//!   simulator ([`crate::arch::functional`]); the always-available
+//!   reference semantics.
+//! * [`pjrt::PjrtBackend`] — adapter over [`crate::runtime::Engine`]
+//!   (AOT Pallas kernels via PJRT); requires the `pjrt` cargo feature and
+//!   compiled artifacts, and reports unavailability otherwise.
+//!
+//! Backends are selected by name through [`create`] (`"native"`,
+//! `"native:4"`, `"functional"`, `"pjrt"`), so servers and CLIs stay
+//! backend-agnostic.
+
+pub mod functional;
+pub mod native;
+pub mod pjrt;
+
+pub use functional::FunctionalBackend;
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
+
+use crate::sched::ScheduledMatrix;
+
+/// Why a backend refused or failed an execution.
+#[derive(Debug, PartialEq)]
+pub enum BackendError {
+    /// No backend registered under the requested name.
+    Unknown(String),
+    /// The spec string parsed, but its argument is invalid.
+    InvalidSpec(String),
+    /// The backend cannot run in this environment (missing feature,
+    /// missing artifacts, ...).
+    Unavailable(String),
+    /// B/C buffer shapes do not match the image and N.
+    Shape(String),
+    /// The backend started but failed mid-execution.
+    Execution(String),
+}
+
+impl std::fmt::Display for BackendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendError::Unknown(s) => write!(
+                f,
+                "unknown backend {s:?} (expected one of: {})",
+                names().join(", ")
+            ),
+            BackendError::InvalidSpec(s) => write!(f, "invalid backend spec: {s}"),
+            BackendError::Unavailable(s) => write!(f, "backend unavailable: {s}"),
+            BackendError::Shape(s) => write!(f, "shape mismatch: {s}"),
+            BackendError::Execution(s) => write!(f, "execution failed: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+/// What a backend can do — reported, not probed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Capability {
+    /// Worker threads used on the hot path (1 = serial).
+    pub threads: usize,
+    /// Inner-loop vector width the implementation is shaped around.
+    pub simd_lanes: usize,
+    /// Needs AOT artifacts / external runtime to execute.
+    pub requires_artifacts: bool,
+    /// Same image + inputs always produce bit-identical output.
+    pub deterministic: bool,
+}
+
+/// One SpMM execution engine consuming scheduled images.
+///
+/// Implementations are constructed per worker thread (see
+/// [`crate::coordinator::Server::start`]); the trait deliberately has no
+/// `Send` bound because PJRT client handles are thread-local.
+pub trait SpmmBackend {
+    /// Stable registry name (also recorded in serving metrics).
+    fn name(&self) -> &'static str;
+
+    /// Capability / identity report.
+    fn capability(&self) -> Capability;
+
+    /// Execute `C = alpha * A @ B + beta * C` where A is the scheduled
+    /// image, `b` is row-major `k x n` and `c` is row-major `m x n`.
+    fn execute(
+        &mut self,
+        image: &ScheduledMatrix,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<(), BackendError>;
+}
+
+impl std::fmt::Debug for dyn SpmmBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SpmmBackend({})", self.name())
+    }
+}
+
+impl std::fmt::Debug for dyn SpmmBackend + Send {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SpmmBackend({})", self.name())
+    }
+}
+
+/// Validate B/C buffer shapes against the image (shared by backends).
+pub(crate) fn check_shapes(
+    sm: &ScheduledMatrix,
+    b: &[f32],
+    c: &[f32],
+    n: usize,
+) -> Result<(), BackendError> {
+    if b.len() != sm.k * n {
+        return Err(BackendError::Shape(format!(
+            "B has {} elements, expected K*N = {}",
+            b.len(),
+            sm.k * n
+        )));
+    }
+    if c.len() != sm.m * n {
+        return Err(BackendError::Shape(format!(
+            "C has {} elements, expected M*N = {}",
+            c.len(),
+            sm.m * n
+        )));
+    }
+    Ok(())
+}
+
+/// A registry row: name, availability in this build, one-line description.
+#[derive(Clone, Copy, Debug)]
+pub struct BackendInfo {
+    /// Registry name accepted by [`create`].
+    pub name: &'static str,
+    /// Whether [`create`]d instances can actually execute in this build.
+    pub available: bool,
+    /// Human-readable summary.
+    pub description: &'static str,
+}
+
+/// The registered backends, in preference order.
+pub fn registry() -> Vec<BackendInfo> {
+    vec![
+        BackendInfo {
+            name: "native",
+            available: true,
+            description: "multi-threaded host engine over scheduled images (default; \
+                          accepts native:<threads>)",
+        },
+        BackendInfo {
+            name: "functional",
+            available: true,
+            description: "serial functional simulator (reference semantics)",
+        },
+        BackendInfo {
+            name: "pjrt",
+            available: cfg!(feature = "pjrt"),
+            description: "AOT Pallas kernels via PJRT/XLA (needs `pjrt` feature + artifacts)",
+        },
+    ]
+}
+
+/// Registered backend names.
+pub fn names() -> Vec<&'static str> {
+    registry().iter().map(|b| b.name).collect()
+}
+
+fn split_spec(spec: &str) -> (&str, Option<&str>) {
+    match spec.split_once(':') {
+        Some((n, a)) => (n, Some(a)),
+        None => (spec, None),
+    }
+}
+
+fn parse_native_threads(arg: Option<&str>) -> Result<usize, BackendError> {
+    match arg {
+        None => Ok(0),
+        Some(a) => a.parse::<usize>().map_err(|_| {
+            BackendError::InvalidSpec(format!("native:<threads> needs an integer, got {a:?}"))
+        }),
+    }
+}
+
+fn no_arg(name: &str, arg: Option<&str>) -> Result<(), BackendError> {
+    match arg {
+        None => Ok(()),
+        Some(a) => Err(BackendError::InvalidSpec(format!(
+            "{name} takes no argument, got {a:?}"
+        ))),
+    }
+}
+
+/// Construct a backend from a spec string: `"native"`, `"native:<threads>"`,
+/// `"functional"`, or `"pjrt"`.
+pub fn create(spec: &str) -> Result<Box<dyn SpmmBackend>, BackendError> {
+    let (name, arg) = split_spec(spec);
+    match name {
+        "native" => Ok(Box::new(NativeBackend::new(parse_native_threads(arg)?))),
+        "functional" => {
+            no_arg("functional", arg)?;
+            Ok(Box::new(FunctionalBackend))
+        }
+        "pjrt" => {
+            no_arg("pjrt", arg)?;
+            Ok(Box::new(PjrtBackend::new()))
+        }
+        other => Err(BackendError::Unknown(other.to_string())),
+    }
+}
+
+/// Like [`create`], but returns a `Send` backend, suitable for owning
+/// inside thread-mobile structures ([`crate::hflex::HFlexAccelerator`]).
+/// With the `pjrt` feature enabled the PJRT engine's handles are
+/// thread-local, so `"pjrt"` is refused here — construct it inside its
+/// executing thread instead (the coordinator's worker factories do).
+pub fn create_send(spec: &str) -> Result<Box<dyn SpmmBackend + Send>, BackendError> {
+    let (name, arg) = split_spec(spec);
+    match name {
+        "native" => Ok(Box::new(NativeBackend::new(parse_native_threads(arg)?))),
+        "functional" => {
+            no_arg("functional", arg)?;
+            Ok(Box::new(FunctionalBackend))
+        }
+        "pjrt" => {
+            no_arg("pjrt", arg)?;
+            create_send_pjrt()
+        }
+        other => Err(BackendError::Unknown(other.to_string())),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn create_send_pjrt() -> Result<Box<dyn SpmmBackend + Send>, BackendError> {
+    // Without the feature the adapter holds no client handles and is Send.
+    Ok(Box::new(PjrtBackend::new()))
+}
+
+#[cfg(feature = "pjrt")]
+fn create_send_pjrt() -> Result<Box<dyn SpmmBackend + Send>, BackendError> {
+    Err(BackendError::Unavailable(
+        "pjrt engine handles are thread-local; construct PjrtBackend inside its executing \
+         thread (Server::start_backend does)"
+            .into(),
+    ))
+}
+
+/// The default backend: native, auto-sized thread pool.
+pub fn default_backend() -> Box<dyn SpmmBackend + Send> {
+    Box::new(NativeBackend::new(0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_three_backends() {
+        let names: Vec<_> = registry().iter().map(|b| b.name).collect();
+        assert_eq!(names, vec!["native", "functional", "pjrt"]);
+        // native and functional always execute; pjrt tracks the feature.
+        assert!(registry()[0].available && registry()[1].available);
+        assert_eq!(registry()[2].available, cfg!(feature = "pjrt"));
+    }
+
+    #[test]
+    fn create_by_name() {
+        assert_eq!(create("native").unwrap().name(), "native");
+        assert_eq!(create("native:4").unwrap().name(), "native");
+        assert_eq!(create("functional").unwrap().name(), "functional");
+        assert_eq!(create("pjrt").unwrap().name(), "pjrt");
+    }
+
+    #[test]
+    fn create_rejects_bad_specs() {
+        assert!(matches!(create("fpga"), Err(BackendError::Unknown(_))));
+        assert!(matches!(create("native:x"), Err(BackendError::InvalidSpec(_))));
+        assert!(matches!(create("functional:2"), Err(BackendError::InvalidSpec(_))));
+        let msg = create("fpga").unwrap_err().to_string();
+        assert!(msg.contains("native") && msg.contains("pjrt"), "{msg}");
+    }
+
+    #[test]
+    fn create_send_constructs_send_backends() {
+        assert_eq!(create_send("native:2").unwrap().name(), "native");
+        assert_eq!(create_send("functional").unwrap().name(), "functional");
+        if cfg!(feature = "pjrt") {
+            assert!(matches!(create_send("pjrt"), Err(BackendError::Unavailable(_))));
+        } else {
+            assert_eq!(create_send("pjrt").unwrap().name(), "pjrt");
+        }
+    }
+
+    #[test]
+    fn default_backend_is_native() {
+        let b = default_backend();
+        assert_eq!(b.name(), "native");
+        assert!(b.capability().threads >= 1);
+        assert_eq!(b.capability().simd_lanes, 8);
+    }
+}

@@ -1,0 +1,312 @@
+//! Native multi-threaded SpMM engine over scheduled images.
+//!
+//! The paper's hardware runs P PEs in parallel, each consuming its own
+//! scheduled slot stream and owning the output rows `r ≡ pe (mod P)` in its
+//! C scratchpad. That row partition is exactly what makes a host
+//! parallelization safe: this backend assigns the P streams round-robin to
+//! worker threads (`std::thread::scope`), each worker accumulates a PE's
+//! rows into a reusable private scratch tile (the scratchpad analogue), and
+//! the Comp-C stage writes each PE's disjoint row set straight into C.
+//!
+//! Numerics are bit-identical to [`crate::arch::functional::execute`]: per
+//! output element, the accumulation order is the PE's slot issue order in
+//! both implementations, and the final `alpha * C_AB + beta * C_in` is the
+//! same expression. The inner loop is chunked to [`LANES`] = 8 columns —
+//! the paper's N0 = 8 SIMD float lanes — which vectorizes cleanly without
+//! changing the per-element order of adds.
+//!
+//! Hot-path allocation is zero after warm-up: each worker's scratch tile
+//! lives in the backend and only grows (never shrinks) across requests.
+
+use super::{check_shapes, BackendError, Capability, SpmmBackend};
+use crate::sched::{decode, ScheduledMatrix};
+
+/// Inner-loop chunk width — the paper's N0 (8 PUs per PE).
+pub const LANES: usize = 8;
+
+/// Multi-threaded native backend.
+pub struct NativeBackend {
+    /// Resolved worker-thread count (>= 1).
+    threads: usize,
+    /// Per-worker C_AB scratch tiles (`rows_per_pe * n`), reused across
+    /// requests and across the PEs a worker owns.
+    scratch: Vec<Vec<f32>>,
+}
+
+impl NativeBackend {
+    /// `threads == 0` auto-sizes to the machine's available parallelism.
+    pub fn new(threads: usize) -> NativeBackend {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        NativeBackend { threads, scratch: Vec::new() }
+    }
+
+    /// The resolved worker-thread count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+/// `y[..] += a * x[..]`, chunked to [`LANES`] so LLVM vectorizes the body.
+/// Element order is unchanged (each output lane is independent).
+#[inline]
+fn axpy(y: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(y.len(), x.len());
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (yl, xl) in (&mut yc).zip(&mut xc) {
+        for l in 0..LANES {
+            yl[l] += a * xl[l];
+        }
+    }
+    for (yl, xl) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *yl += a * xl;
+    }
+}
+
+/// Raw C pointer wrapper so scoped workers can write disjoint rows of the
+/// shared output. Safety rests on the PE row partition: global row
+/// `t * P + pe` is touched only by the worker owning `pe`, and each `pe`
+/// is owned by exactly one worker.
+#[derive(Clone, Copy)]
+struct CPtr(*mut f32);
+
+unsafe impl Send for CPtr {}
+unsafe impl Sync for CPtr {}
+
+/// Process every PE in `pe0, pe0 + stride, ...`: accumulate its stream into
+/// `ab` (cleared per PE), then Comp-C its rows of the shared C buffer.
+#[allow(clippy::too_many_arguments)]
+fn run_pes(
+    sm: &ScheduledMatrix,
+    b: &[f32],
+    c: CPtr,
+    n: usize,
+    alpha: f32,
+    beta: f32,
+    ab: &mut [f32],
+    pe0: usize,
+    stride: usize,
+) {
+    let rows_per_pe = sm.rows_per_pe();
+    let mut pe = pe0;
+    while pe < sm.p {
+        ab.fill(0.0);
+        let stream = &sm.streams[pe];
+        for j in 0..sm.num_windows {
+            let col_base = j * sm.k0;
+            for &word in &stream.encoded[stream.q.window_range(j)] {
+                let nz = decode(word);
+                if nz.val == 0.0 {
+                    continue; // bubble (or explicit zero: same arithmetic)
+                }
+                let r = nz.row as usize;
+                let gc = col_base + nz.col as usize;
+                debug_assert!(r < rows_per_pe && gc < sm.k);
+                axpy(&mut ab[r * n..r * n + n], &b[gc * n..gc * n + n], nz.val);
+            }
+        }
+        // Comp-C for this PE's (disjoint) rows of the shared C.
+        for t in 0..rows_per_pe {
+            let gr = t * sm.p + pe;
+            if gr >= sm.m {
+                break;
+            }
+            let ab_row = &ab[t * n..t * n + n];
+            for q in 0..n {
+                // SAFETY: rows `gr ≡ pe (mod P)` are written only by the
+                // worker owning `pe` (see CPtr), and `gr < m` so the index
+                // is in bounds of the `m * n` buffer.
+                unsafe {
+                    let slot = c.0.add(gr * n + q);
+                    *slot = alpha * ab_row[q] + beta * *slot;
+                }
+            }
+        }
+        pe += stride;
+    }
+}
+
+impl SpmmBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn capability(&self) -> Capability {
+        Capability {
+            threads: self.threads,
+            simd_lanes: LANES,
+            requires_artifacts: false,
+            deterministic: true,
+        }
+    }
+
+    fn execute(
+        &mut self,
+        sm: &ScheduledMatrix,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<(), BackendError> {
+        check_shapes(sm, b, c, n)?;
+        if sm.p == 0 || sm.m == 0 {
+            return Ok(());
+        }
+        let workers = self.threads.min(sm.p).max(1);
+        if self.scratch.len() < workers {
+            self.scratch.resize_with(workers, Vec::new);
+        }
+        let tile = sm.rows_per_pe() * n;
+        for buf in &mut self.scratch[..workers] {
+            if buf.len() < tile {
+                buf.resize(tile, 0.0);
+            }
+        }
+        let cptr = CPtr(c.as_mut_ptr());
+        if workers == 1 {
+            run_pes(sm, b, cptr, n, alpha, beta, &mut self.scratch[0][..tile], 0, 1);
+            return Ok(());
+        }
+        std::thread::scope(|s| {
+            for (w, buf) in self.scratch[..workers].iter_mut().enumerate() {
+                let worker_c = cptr;
+                s.spawn(move || {
+                    run_pes(sm, b, worker_c, n, alpha, beta, &mut buf[..tile], w, workers);
+                });
+            }
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::functional;
+    use crate::prop;
+    use crate::sched::preprocess;
+    use crate::sparse::{gen, rng::Rng, Coo};
+
+    fn run_native(
+        threads: usize,
+        sm: &ScheduledMatrix,
+        b: &[f32],
+        c0: &[f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Vec<f32> {
+        let mut backend = NativeBackend::new(threads);
+        let mut c = c0.to_vec();
+        backend.execute(sm, b, &mut c, n, alpha, beta).unwrap();
+        c
+    }
+
+    #[test]
+    fn matches_functional_bitwise() {
+        let mut rng = Rng::new(1);
+        let a = gen::random_uniform(96, 80, 0.12, &mut rng);
+        let sm = preprocess(&a, 8, 16, 6);
+        let n = 11; // deliberately not a multiple of LANES
+        let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..a.m * n).map(|_| rng.normal()).collect();
+        let mut want = c0.clone();
+        functional::execute(&sm, &b, &mut want, n, 1.5, -0.25);
+        for threads in [1, 2, 4, 8] {
+            let got = run_native(threads, &sm, &b, &c0, n, 1.5, -0.25);
+            assert_eq!(got, want, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        let mut rng = Rng::new(2);
+        let a = gen::power_law_rows(150, 120, 2_000, 1.0, &mut rng);
+        let sm = preprocess(&a, 16, 32, 10);
+        let n = 8;
+        let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..a.m * n).map(|_| rng.normal()).collect();
+        let base = run_native(1, &sm, &b, &c0, n, 2.0, 0.5);
+        for threads in [2, 3, 5, 16, 64] {
+            assert_eq!(run_native(threads, &sm, &b, &c0, n, 2.0, 0.5), base);
+        }
+    }
+
+    #[test]
+    fn scratch_is_reused_across_requests() {
+        let mut rng = Rng::new(3);
+        let a = gen::random_uniform(40, 40, 0.2, &mut rng);
+        let sm = preprocess(&a, 4, 16, 4);
+        let n = 4;
+        let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
+        let mut backend = NativeBackend::new(2);
+        let mut first = vec![0f32; a.m * n];
+        backend.execute(&sm, &b, &mut first, n, 1.0, 0.0).unwrap();
+        // Second request with dirty scratch must produce identical output.
+        let mut second = vec![0f32; a.m * n];
+        backend.execute(&sm, &b, &mut second, n, 1.0, 0.0).unwrap();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn empty_matrix_is_pure_comp_c() {
+        let a = Coo::empty(6, 6);
+        let sm = preprocess(&a, 4, 4, 2);
+        let b = vec![1.0; 12];
+        let mut c = vec![2.0; 12];
+        NativeBackend::new(4).execute(&sm, &b, &mut c, 2, 9.0, 0.5).unwrap();
+        assert_eq!(c, vec![1.0; 12]);
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let a = Coo::empty(4, 4);
+        let sm = preprocess(&a, 2, 2, 2);
+        let b = vec![0.0; 7]; // not k * n
+        let mut c = vec![0.0; 8];
+        let err = NativeBackend::new(1).execute(&sm, &b, &mut c, 2, 1.0, 0.0).unwrap_err();
+        assert!(matches!(err, BackendError::Shape(_)));
+    }
+
+    #[test]
+    fn more_threads_than_pes_is_fine() {
+        let mut rng = Rng::new(4);
+        let a = gen::random_uniform(10, 10, 0.3, &mut rng);
+        let sm = preprocess(&a, 2, 4, 3);
+        let n = 3;
+        let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
+        let c0 = vec![0f32; a.m * n];
+        let got = run_native(32, &sm, &b, &c0, n, 1.0, 0.0);
+        let mut want = vec![0f32; a.m * n];
+        a.spmm_reference(&b, &mut want, n, 1.0, 0.0);
+        prop::assert_allclose(&got, &want, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn native_matches_reference_property() {
+        prop::check("native_vs_reference", 0x7A71, 24, |rng| {
+            let m = 1 + rng.index(80);
+            let k = 1 + rng.index(80);
+            let n = 1 + rng.index(12);
+            let a = gen::random_uniform(m, k, 0.05 + rng.f64() * 0.2, rng);
+            let p = 1 + rng.index(8);
+            let k0 = 1 + rng.index(32);
+            let d = 1 + rng.index(10);
+            let sm = preprocess(&a, p, k0, d);
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+            let c0: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+            let alpha = rng.range_f32(-2.0, 2.0);
+            let beta = rng.range_f32(-2.0, 2.0);
+            let threads = 1 + rng.index(6);
+            let mut want = c0.clone();
+            a.spmm_reference(&b, &mut want, n, alpha, beta);
+            let got = run_native(threads, &sm, &b, &c0, n, alpha, beta);
+            prop::assert_allclose(&got, &want, 2e-4, 2e-4)
+        });
+    }
+}

@@ -11,6 +11,9 @@ pub struct RequestTiming {
     pub exec: Duration,
     /// Problem size in FLOP.
     pub flops: u64,
+    /// Name of the backend that executed the request (mixed-backend
+    /// deployments stay attributable).
+    pub backend: &'static str,
 }
 
 impl RequestTiming {
@@ -54,6 +57,14 @@ impl Recorder {
         };
         let total_flops: u64 = self.timings.iter().map(|t| t.flops).sum();
         let wall: f64 = totals.iter().sum();
+        let mut backends: Vec<(&'static str, usize)> = Vec::new();
+        for t in &self.timings {
+            match backends.iter_mut().find(|(name, _)| *name == t.backend) {
+                Some((_, count)) => *count += 1,
+                None => backends.push((t.backend, 1)),
+            }
+        }
+        backends.sort_by_key(|(name, _)| *name);
         Summary {
             requests: self.timings.len(),
             batches: self.batches,
@@ -67,12 +78,13 @@ impl Recorder {
             p99_s: pct(0.99),
             total_flops,
             sum_latency_s: wall,
+            backends,
         }
     }
 }
 
 /// Aggregated serving statistics.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct Summary {
     /// Requests served.
     pub requests: usize,
@@ -90,6 +102,8 @@ pub struct Summary {
     pub total_flops: u64,
     /// Sum of request latencies (s).
     pub sum_latency_s: f64,
+    /// Requests served per backend name, sorted by name.
+    pub backends: Vec<(&'static str, usize)>,
 }
 
 #[cfg(test)]
@@ -97,10 +111,15 @@ mod tests {
     use super::*;
 
     fn t(ms: u64, flops: u64) -> RequestTiming {
+        tb(ms, flops, "test")
+    }
+
+    fn tb(ms: u64, flops: u64, backend: &'static str) -> RequestTiming {
         RequestTiming {
             queue: Duration::from_millis(ms / 2),
             exec: Duration::from_millis(ms - ms / 2),
             flops,
+            backend,
         }
     }
 
@@ -132,5 +151,16 @@ mod tests {
         let s = Recorder::default().summary();
         assert_eq!(s.requests, 0);
         assert_eq!(s.p50_s, 0.0);
+        assert!(s.backends.is_empty());
+    }
+
+    #[test]
+    fn backend_attribution_counts_per_name() {
+        let mut r = Recorder::default();
+        r.record(tb(1, 10, "native"));
+        r.record(tb(2, 10, "functional"));
+        r.record(tb(3, 10, "native"));
+        let s = r.summary();
+        assert_eq!(s.backends, vec![("functional", 1), ("native", 2)]);
     }
 }

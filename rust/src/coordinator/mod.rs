@@ -1,10 +1,14 @@
 //! L3 serving coordinator: request router, dynamic batcher, worker pool,
 //! serving metrics — the systems wrapper that turns the HFlex accelerator
 //! into a service.
+//!
+//! Execution is pluggable: workers run any [`crate::backend::SpmmBackend`]
+//! (native multi-threaded engine by default), constructed per worker thread
+//! either via a factory closure ([`Server::start`]) or by registry name
+//! ([`Server::start_backend`]).
 
 pub mod metrics;
 pub mod server;
 
-pub use server::{
-    BatchPolicy, Executor, FunctionalExecutor, ImageHandle, Server, SpmmRequest, SpmmResponse,
-};
+pub use crate::backend::SpmmBackend;
+pub use server::{BatchPolicy, ImageHandle, Server, SpmmRequest, SpmmResponse};

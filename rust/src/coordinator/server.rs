@@ -10,8 +10,11 @@
 //! image identity within a bounded window, dispatches merged jobs to
 //! workers, and splits C back per request.
 //!
-//! Workers are std::thread with an [`Executor`] built inside the thread
+//! Workers are std::thread with a [`SpmmBackend`] built inside the thread
 //! (PJRT clients are not Send; the factory pattern keeps them thread-local).
+//! [`Server::start_backend`] builds the factory from a registry spec string
+//! (`"native"`, `"native:4"`, `"functional"`, `"pjrt"`), so deployments pick
+//! engines by name; every request records which backend executed it.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -20,10 +23,9 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-
 use super::metrics::{Recorder, RequestTiming, Summary};
 use crate::arch::simulator::problem_flops;
+use crate::backend::{self, BackendError, SpmmBackend};
 use crate::sched::ScheduledMatrix;
 
 /// A preprocessed matrix registered with the server (shared across
@@ -54,10 +56,12 @@ pub struct SpmmRequest {
 
 /// Completed response.
 pub struct SpmmResponse {
-    /// C_out, row-major M × n.
+    /// C_out, row-major M × n (zero-filled when `error` is set).
     pub c: Vec<f32>,
     /// Timing.
     pub timing: RequestTiming,
+    /// Why the backend failed, if it did; `c` is then not a result.
+    pub error: Option<String>,
 }
 
 /// A batch-merged job handed to workers.
@@ -76,45 +80,6 @@ struct Segment {
     col_off: usize,
     submitted: Instant,
     respond: Sender<SpmmResponse>,
-}
-
-/// Pluggable execution backend. Implementations are built per worker
-/// thread via the factory passed to [`Server::start`].
-pub trait Executor {
-    /// Backend name (diagnostics).
-    fn name(&self) -> &'static str;
-    /// Execute `C = alpha*A@B + beta*C` over the merged buffers.
-    fn execute(
-        &mut self,
-        image: &ScheduledMatrix,
-        b: &[f32],
-        c: &mut [f32],
-        n: usize,
-        alpha: f32,
-        beta: f32,
-    ) -> Result<()>;
-}
-
-/// Functional-simulator backend (exact FP32 datapath numerics).
-pub struct FunctionalExecutor;
-
-impl Executor for FunctionalExecutor {
-    fn name(&self) -> &'static str {
-        "functional"
-    }
-
-    fn execute(
-        &mut self,
-        image: &ScheduledMatrix,
-        b: &[f32],
-        c: &mut [f32],
-        n: usize,
-        alpha: f32,
-        beta: f32,
-    ) -> Result<()> {
-        crate::arch::functional::execute(image, b, c, n, alpha, beta);
-        Ok(())
-    }
 }
 
 /// Batching policy knobs.
@@ -147,11 +112,11 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start with `n_workers` threads, an executor factory (called once per
+    /// Start with `n_workers` threads, a backend factory (called once per
     /// worker thread), and a batching policy.
     pub fn start<F>(n_workers: usize, policy: BatchPolicy, factory: F) -> Server
     where
-        F: Fn(usize) -> Box<dyn Executor> + Send + Sync + 'static,
+        F: Fn(usize) -> Box<dyn SpmmBackend> + Send + Sync + 'static,
     {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (job_tx, job_rx) = mpsc::channel::<MergedJob>();
@@ -183,6 +148,42 @@ impl Server {
             recorder,
             next_image_id: AtomicU64::new(1),
         }
+    }
+
+    /// Start with backends built by name from the [`crate::backend`]
+    /// registry (`"native"`, `"native:<threads>"`, `"functional"`,
+    /// `"pjrt"`). The spec is parsed and its availability in this build is
+    /// checked eagerly (an unavailable backend — e.g. `pjrt` without the
+    /// feature — is refused here rather than failing every request); each
+    /// worker thread then constructs its own instance. A bare `"native"`
+    /// spec divides the machine's cores across the worker threads so
+    /// concurrent merged jobs do not oversubscribe the CPU.
+    pub fn start_backend(
+        n_workers: usize,
+        policy: BatchPolicy,
+        spec: &str,
+    ) -> Result<Server, BackendError> {
+        backend::create(spec)?; // parse + argument validation
+        let base = spec.split(':').next().unwrap_or(spec);
+        match backend::registry().iter().find(|b| b.name == base) {
+            Some(info) if !info.available => {
+                return Err(BackendError::Unavailable(format!(
+                    "backend {base:?} cannot execute in this build ({})",
+                    info.description
+                )));
+            }
+            _ => {}
+        }
+        let spec = if spec == "native" {
+            let cores =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            format!("native:{}", cores.div_ceil(n_workers.max(1)).max(1))
+        } else {
+            spec.to_string()
+        };
+        Ok(Server::start(n_workers, policy, move |_| {
+            backend::create(&spec).expect("backend spec validated at startup")
+        }))
     }
 
     /// Register a preprocessed matrix for serving.
@@ -311,10 +312,11 @@ fn batcher_loop(
 }
 
 fn worker_loop(
-    exec: &mut dyn Executor,
+    exec: &mut dyn SpmmBackend,
     job_rx: Arc<Mutex<Receiver<MergedJob>>>,
     recorder: Arc<Mutex<Recorder>>,
 ) {
+    let backend_name = exec.name();
     loop {
         let job = {
             let rx = job_rx.lock().unwrap();
@@ -322,7 +324,7 @@ fn worker_loop(
         };
         let Ok(mut job) = job else { break };
         let start = Instant::now();
-        let ok = exec
+        let error = exec
             .execute(
                 &job.image,
                 &job.b_cat,
@@ -331,13 +333,14 @@ fn worker_loop(
                 job.alpha,
                 job.beta,
             )
-            .is_ok();
+            .err()
+            .map(|e| e.to_string());
         let exec_time = start.elapsed();
         let m = job.image.m;
         let nnz = job.image.nnz;
         for seg in job.segments {
             let mut c = vec![0f32; m * seg.n];
-            if ok {
+            if error.is_none() {
                 for row in 0..m {
                     c[row * seg.n..(row + 1) * seg.n].copy_from_slice(
                         &job.c_cat
@@ -349,9 +352,10 @@ fn worker_loop(
                 queue: start.duration_since(seg.submitted),
                 exec: exec_time,
                 flops: problem_flops(nnz, m, seg.n),
+                backend: backend_name,
             };
             recorder.lock().unwrap().record(timing);
-            let _ = seg.respond.send(SpmmResponse { c, timing });
+            let _ = seg.respond.send(SpmmResponse { c, timing, error: error.clone() });
         }
     }
 }
@@ -359,9 +363,40 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::{Capability, FunctionalBackend};
     use crate::prop;
     use crate::sched::preprocess;
     use crate::sparse::{gen, rng::Rng};
+
+    /// Injects an execution failure on every request.
+    struct FailingBackend;
+
+    impl SpmmBackend for FailingBackend {
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+
+        fn capability(&self) -> Capability {
+            Capability {
+                threads: 1,
+                simd_lanes: 1,
+                requires_artifacts: false,
+                deterministic: true,
+            }
+        }
+
+        fn execute(
+            &mut self,
+            _image: &ScheduledMatrix,
+            _b: &[f32],
+            _c: &mut [f32],
+            _n: usize,
+            _alpha: f32,
+            _beta: f32,
+        ) -> Result<(), BackendError> {
+            Err(BackendError::Execution("injected failure".into()))
+        }
+    }
 
     fn make_image(seed: u64) -> (crate::sparse::Coo, Arc<ScheduledMatrix>) {
         let mut rng = Rng::new(seed);
@@ -371,7 +406,7 @@ mod tests {
     }
 
     fn start_functional(workers: usize) -> Server {
-        Server::start(workers, BatchPolicy::default(), |_| Box::new(FunctionalExecutor))
+        Server::start(workers, BatchPolicy::default(), |_| Box::new(FunctionalBackend))
     }
 
     #[test]
@@ -393,9 +428,29 @@ mod tests {
             alpha: 1.5,
             beta: 0.5,
         });
+        assert!(resp.error.is_none());
         prop::assert_allclose(&resp.c, &want, 1e-4, 1e-4).unwrap();
         let summary = server.shutdown();
         assert_eq!(summary.requests, 1);
+    }
+
+    #[test]
+    fn backend_failure_is_reported_not_silent() {
+        let (_, sm) = make_image(9);
+        let server = Server::start(1, BatchPolicy::default(), |_| Box::new(FailingBackend));
+        let handle = server.register(sm.clone());
+        let resp = server.call(SpmmRequest {
+            image: handle,
+            b: vec![0.0; sm.k * 2],
+            c: vec![0.0; sm.m * 2],
+            n: 2,
+            alpha: 1.0,
+            beta: 0.0,
+        });
+        let err = resp.error.expect("failure must be surfaced");
+        assert!(err.contains("injected failure"), "{err}");
+        assert_eq!(resp.timing.backend, "failing");
+        server.shutdown();
     }
 
     #[test]
@@ -404,7 +459,7 @@ mod tests {
         let server = Server::start(
             1,
             BatchPolicy { max_columns: 64, window: Duration::from_millis(20) },
-            |_| Box::new(FunctionalExecutor),
+            |_| Box::new(FunctionalBackend),
         );
         let handle = server.register(sm);
         let mut rng = Rng::new(4);
@@ -443,7 +498,7 @@ mod tests {
         let server = Server::start(
             1,
             BatchPolicy { max_columns: 512, window: Duration::from_millis(10) },
-            |_| Box::new(FunctionalExecutor),
+            |_| Box::new(FunctionalBackend),
         );
         let handle = server.register(sm.clone());
         let k = sm.k;

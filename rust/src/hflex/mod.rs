@@ -15,7 +15,10 @@
 //!   [`HFlexError::WrongConfiguration`] — the analogue of needing a new
 //!   synthesis/place/route run, which HFlex exists to avoid.
 
-use crate::arch::{functional, simulate, AcceleratorConfig, SimReport};
+use std::sync::Mutex;
+
+use crate::arch::{simulate, AcceleratorConfig, SimReport};
+use crate::backend::{self, SpmmBackend};
 use crate::sched::{preprocess, ScheduledMatrix};
 use crate::sparse::Coo;
 
@@ -39,6 +42,8 @@ pub enum HFlexError {
     },
     /// B/C buffer shape mismatch with (M, K, N).
     ShapeMismatch(String),
+    /// The execution backend refused or failed the run.
+    Backend(String),
 }
 
 impl std::fmt::Display for HFlexError {
@@ -54,6 +59,7 @@ impl std::fmt::Display for HFlexError {
                 "C scratchpad overflow: {rows_per_pe} rows/PE > URAM depth {c_depth}"
             ),
             HFlexError::ShapeMismatch(s) => write!(f, "shape mismatch: {s}"),
+            HFlexError::Backend(s) => write!(f, "backend error: {s}"),
         }
     }
 }
@@ -83,24 +89,54 @@ pub struct SpmmProblem<'a> {
 pub struct InvokeReport {
     /// Cycle-level timing of the run.
     pub sim: SimReport,
+    /// Name of the backend that produced the functional result.
+    pub backend: &'static str,
 }
 
-/// A "synthesized" Sextans accelerator.
-#[derive(Debug)]
+/// A "synthesized" Sextans accelerator: an immutable configuration plus the
+/// execution backend that stands in for the silicon.
 pub struct HFlexAccelerator {
     cfg: AcceleratorConfig,
+    // `+ Send` keeps the accelerator itself Send + Sync (shareable across
+    // threads like the seed's plain-config struct); executions serialize
+    // through the lock, matching one physical accelerator.
+    backend: Mutex<Box<dyn SpmmBackend + Send>>,
+}
+
+impl std::fmt::Debug for HFlexAccelerator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HFlexAccelerator")
+            .field("cfg", &self.cfg)
+            .field("backend", &self.backend_name())
+            .finish()
+    }
 }
 
 impl HFlexAccelerator {
     /// One-time synthesis (the hours-long place-and-route the paper's flow
-    /// replaces with... this constructor).
+    /// replaces with... this constructor). Executes on the default
+    /// [`backend::default_backend`] (native, auto-threaded).
     pub fn synthesize(cfg: AcceleratorConfig) -> Self {
-        HFlexAccelerator { cfg }
+        Self::synthesize_with_backend(cfg, backend::default_backend())
+    }
+
+    /// Synthesis with an explicit execution backend (see
+    /// [`backend::create_send`] for name-based construction).
+    pub fn synthesize_with_backend(
+        cfg: AcceleratorConfig,
+        backend: Box<dyn SpmmBackend + Send>,
+    ) -> Self {
+        HFlexAccelerator { cfg, backend: Mutex::new(backend) }
     }
 
     /// The immutable configuration.
     pub fn config(&self) -> &AcceleratorConfig {
         &self.cfg
+    }
+
+    /// Name of the execution backend.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.lock().unwrap().name()
     }
 
     /// Host-side preprocessing (§3.3's "C++ wrapper"): partition + OoO
@@ -116,8 +152,9 @@ impl HFlexAccelerator {
         Ok(sm)
     }
 
-    /// Execute one SpMM: functional result written into `problem.c`,
-    /// cycle-accurate timing returned. No re-synthesis, ever.
+    /// Execute one SpMM through the configured backend: the functional
+    /// result is written into `problem.c`, cycle-accurate timing of what
+    /// the silicon would do is returned. No re-synthesis, ever.
     pub fn invoke(&self, problem: SpmmProblem<'_>) -> Result<InvokeReport, HFlexError> {
         let sm = problem.a;
         let accel = (self.cfg.p(), self.cfg.k0, self.cfg.d);
@@ -145,9 +182,15 @@ impl HFlexAccelerator {
                 sm.m * problem.n
             )));
         }
-        functional::execute(sm, problem.b, problem.c, problem.n, problem.alpha, problem.beta);
+        let backend_name = {
+            let mut be = self.backend.lock().unwrap();
+            let name = be.name();
+            be.execute(sm, problem.b, problem.c, problem.n, problem.alpha, problem.beta)
+                .map_err(|e| HFlexError::Backend(e.to_string()))?;
+            name
+        };
         let sim = simulate(sm, &self.cfg, problem.n);
-        Ok(InvokeReport { sim })
+        Ok(InvokeReport { sim, backend: backend_name })
     }
 }
 
@@ -277,6 +320,48 @@ mod tests {
             prop::assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
             assert!(report.sim.cycles > 0);
         }
+    }
+
+    #[test]
+    fn accelerator_is_send_and_sync() {
+        // The accelerator must stay shareable across threads (pre-backend
+        // behavior): Mutex<Box<dyn SpmmBackend + Send>> keeps Send + Sync.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<HFlexAccelerator>();
+    }
+
+    #[test]
+    fn default_backend_is_native_and_reported() {
+        let acc = accel();
+        assert_eq!(acc.backend_name(), "native");
+        let mut rng = Rng::new(21);
+        let a = gen::random_uniform(32, 32, 0.2, &mut rng);
+        let sm = acc.preprocess(&a).unwrap();
+        let (b, mut c) = problem_data(32, 32, 4, 22);
+        let report = acc
+            .invoke(SpmmProblem { a: &sm, b: &b, c: &mut c, n: 4, alpha: 1.0, beta: 0.0 })
+            .unwrap();
+        assert_eq!(report.backend, "native");
+    }
+
+    #[test]
+    fn explicit_backend_selection() {
+        let acc = HFlexAccelerator::synthesize_with_backend(
+            AcceleratorConfig::sextans_u280(),
+            crate::backend::create_send("functional").unwrap(),
+        );
+        assert_eq!(acc.backend_name(), "functional");
+        let mut rng = Rng::new(23);
+        let a = gen::random_uniform(40, 30, 0.15, &mut rng);
+        let sm = acc.preprocess(&a).unwrap();
+        let (b, mut c) = problem_data(30, 40, 3, 24);
+        let mut want = c.clone();
+        a.spmm_reference(&b, &mut want, 3, 1.0, 1.0);
+        let report = acc
+            .invoke(SpmmProblem { a: &sm, b: &b, c: &mut c, n: 3, alpha: 1.0, beta: 1.0 })
+            .unwrap();
+        assert_eq!(report.backend, "functional");
+        prop::assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
     }
 
     #[test]

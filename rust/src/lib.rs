@@ -14,7 +14,11 @@
 //!   in JAX, AOT-lowered to HLO text artifacts.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the PE inner loop
 //!   and the Comp-C stage, executed from Rust via the PJRT CPU client
-//!   ([`runtime`]).
+//!   ([`runtime`], behind the optional `pjrt` cargo feature).
+//!
+//! Execution is pluggable ([`backend`]): the default native multi-threaded
+//! engine consumes scheduled images directly, so the whole serving stack
+//! builds, tests, and benches with no Python artifacts present.
 //!
 //! Python never runs on the request path: `make artifacts` runs once, and
 //! the Rust binary is self-contained afterwards.
@@ -28,12 +32,14 @@
 //! | [`arch`] | §3.1, §3.2, §3.5, §3.6.2 | cycle-level streaming simulator, functional simulator, resource model |
 //! | [`perfmodel`] | §3.6.1, §4.1 | Eq. 6–10 closed form, GPU baselines, platform constants, energy |
 //! | [`hflex`] | §3.4 | the HFlex runtime contract: one fixed accelerator, arbitrary SpMMs |
-//! | [`runtime`] | — | PJRT client wrapping the AOT HLO artifacts |
-//! | [`coordinator`] | — | SpMM request server: batching, worker pool, metrics |
+//! | [`backend`] | §3.4, §4.2 | pluggable [`backend::SpmmBackend`] execution engines: native multi-threaded CPU, functional reference, PJRT adapter — selected by name |
+//! | [`runtime`] | — | PJRT client wrapping the AOT HLO artifacts (stubbed without the `pjrt` feature) |
+//! | [`coordinator`] | — | SpMM request server: batching, worker pool, per-backend metrics |
 //! | [`metrics`] | §4.2 | GFLOP/s, bandwidth utilization, energy efficiency, geomean/CDF |
 //! | [`report`] | §4.2, §4.3 | experiment drivers regenerating Tables 1–5 and Figures 7–10 |
 
 pub mod arch;
+pub mod backend;
 pub mod bench_util;
 pub mod cli;
 pub mod coordinator;

@@ -2,11 +2,16 @@
 //!
 //! ```text
 //! sextans repro [--all | <exp-id>] [--out DIR] [--full] [--max-matrices N]
-//! sextans run   --m M --k K [--n N] [--density D] [--alpha A] [--beta B] [--xla]
+//! sextans run   --m M --k K [--n N] [--density D] [--alpha A] [--beta B]
+//!               [--backend native|native:<threads>|functional|pjrt] [--xla]
 //! sextans gen   --m M --k K --density D --out file.mtx [--seed S]
-//! sextans serve [--requests R] [--workers W]
+//! sextans serve [--requests R] [--workers W] [--backend NAME]
 //! sextans info
 //! ```
+//!
+//! `--backend` picks the execution engine by registry name (default:
+//! `native`, the multi-threaded host engine; see `sextans info` for the
+//! full list).
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -14,8 +19,9 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use sextans::arch::{resources, simulate, AcceleratorConfig};
+use sextans::backend;
 use sextans::cli::Cli;
-use sextans::coordinator::{BatchPolicy, FunctionalExecutor, Server, SpmmRequest};
+use sextans::coordinator::{BatchPolicy, Server, SpmmRequest};
 use sextans::hflex::{HFlexAccelerator, SpmmProblem};
 use sextans::perfmodel::Platform;
 use sextans::report::{self, experiments};
@@ -111,7 +117,12 @@ fn cmd_run(cli: &Cli) -> Result<()> {
         coo.density()
     );
 
-    let accel = HFlexAccelerator::synthesize(AcceleratorConfig::sextans_u280());
+    let backend_spec = cli.get("backend").unwrap_or("native");
+    let accel = HFlexAccelerator::synthesize_with_backend(
+        AcceleratorConfig::sextans_u280(),
+        backend::create_send(backend_spec)?,
+    );
+    println!("backend: {} (spec {backend_spec:?})", accel.backend_name());
     let image = accel.preprocess(&coo)?;
     println!(
         "preprocessed: {} windows, {} slots ({} bubbles), effective II {:.4}",
@@ -191,17 +202,23 @@ fn cmd_gen(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
-/// `serve`: demo serving loop on the functional executor.
+/// `serve`: demo serving loop on a registry-selected backend.
 fn cmd_serve(cli: &Cli) -> Result<()> {
     let requests = cli.get_usize("requests", 64);
     let workers = cli.get_usize("workers", 2);
+    let backend_spec = cli.get("backend").unwrap_or("native");
     let mut rng = Rng::new(cli.get_u64("seed", 3));
     let coo = gen::rmat(4096, 40_000, 0.57, 0.19, 0.19, &mut rng);
     let cfg = AcceleratorConfig::sextans_u280();
     let image = Arc::new(preprocess(&coo, cfg.p(), cfg.k0, cfg.d));
-    println!("serving matrix {}x{} nnz {}", coo.m, coo.k, coo.nnz());
+    println!(
+        "serving matrix {}x{} nnz {} on backend {backend_spec:?}",
+        coo.m,
+        coo.k,
+        coo.nnz()
+    );
 
-    let server = Server::start(workers, BatchPolicy::default(), |_| Box::new(FunctionalExecutor));
+    let server = Server::start_backend(workers, BatchPolicy::default(), backend_spec)?;
     let handle = server.register(image);
     let mut rxs = Vec::new();
     for i in 0..requests {
@@ -229,6 +246,9 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         s.p95_s * 1e3,
         s.p99_s * 1e3
     );
+    for (name, count) in &s.backends {
+        println!("  backend {name}: {count} requests");
+    }
     Ok(())
 }
 
@@ -243,6 +263,11 @@ fn cmd_info() -> Result<()> {
     println!("datapath roof: {:.1} GFLOP/s", cfg.datapath_roof_gflops());
     let r = resources::estimate(&cfg);
     println!("estimated resources: BRAM {}, DSP {}, URAM {}", r.bram, r.dsp, r.uram);
+    println!("execution backends (select with --backend):");
+    for info in backend::registry() {
+        let avail = if info.available { "available" } else { "unavailable in this build" };
+        println!("  {:<12} {} [{avail}]", info.name, info.description);
+    }
     let mut demo_rng = Rng::new(1);
     let coo = gen::random_uniform(1024, 1024, 0.01, &mut demo_rng);
     let sm = preprocess(&coo, cfg.p(), cfg.k0, cfg.d);

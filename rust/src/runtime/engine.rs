@@ -5,6 +5,9 @@
 //! analogue of place-and-route. After that, every SpMM is served by the
 //! fixed executables (HFlex: only buffer contents change). HLO *text* is the
 //! interchange format (see `python/compile/aot.py` and /opt/xla-example).
+//!
+//! Only compiled with the `pjrt` cargo feature (needs the `xla` crate);
+//! see `engine_stub.rs` for the default build.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -12,21 +15,9 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::manifest::{self, ArtifactSpec};
+use super::Variant;
 use crate::sched::{decode, preprocess, ScheduledMatrix};
 use crate::sparse::Coo;
-
-/// A fixed-capacity window variant ("bitstream") the engine can execute.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct Variant {
-    /// Scheduled-slot capacity per kernel call.
-    pub nnz_cap: usize,
-    /// B window depth.
-    pub k0: usize,
-    /// C tile rows.
-    pub m_tile: usize,
-    /// Lane count.
-    pub n0: usize,
-}
 
 struct Compiled {
     spec: ArtifactSpec,

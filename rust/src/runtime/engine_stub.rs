@@ -1,0 +1,127 @@
+//! Stub engine, compiled when the `pjrt` cargo feature is off.
+//!
+//! Keeps the full [`Engine`] API surface so every consumer (the `pjrt`
+//! execution backend, `sextans run --xla`, examples, benches) type-checks
+//! without the `xla` crate; `load` always fails, and because [`Engine`] is
+//! uninhabited the remaining methods are statically unreachable.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::Variant;
+use crate::sched::ScheduledMatrix;
+use crate::sparse::Coo;
+
+/// Uninhabited stand-in for the PJRT engine.
+#[derive(Debug)]
+pub enum Engine {}
+
+impl Engine {
+    /// Always fails: the build has no PJRT support.
+    pub fn load_default() -> Result<Engine> {
+        Self::load(Path::new("artifacts"))
+    }
+
+    /// Always fails: the build has no PJRT support.
+    pub fn load(_dir: &Path) -> Result<Engine> {
+        bail!(
+            "PJRT engine unavailable: built without the `pjrt` cargo feature \
+             (enable it, add the `xla` dependency, and run `make artifacts`)"
+        )
+    }
+
+    /// Unreachable (no `Engine` value can exist).
+    pub fn variants(&self) -> Vec<Variant> {
+        match *self {}
+    }
+
+    /// Unreachable (no `Engine` value can exist).
+    pub fn select_variant(&self, _rows_per_pe: usize) -> Result<Variant> {
+        match *self {}
+    }
+
+    /// Unreachable (no `Engine` value can exist).
+    pub fn plan(&self, _a: &Coo, _p: usize, _d: usize) -> Result<(Variant, ScheduledMatrix)> {
+        match *self {}
+    }
+
+    /// Unreachable (no `Engine` value can exist).
+    pub fn run_window(
+        &self,
+        _v: Variant,
+        _rows: &[i32],
+        _cols: &[i32],
+        _vals: &[f32],
+        _b_win: &[f32],
+        _c_acc: &[f32],
+    ) -> Result<Vec<f32>> {
+        match *self {}
+    }
+
+    /// Unreachable (no `Engine` value can exist).
+    pub fn run_comp(
+        &self,
+        _m_tile: usize,
+        _n0: usize,
+        _c_ab: &[f32],
+        _c_in: &[f32],
+        _alpha: f32,
+        _beta: f32,
+    ) -> Result<Vec<f32>> {
+        match *self {}
+    }
+
+    /// Unreachable (no `Engine` value can exist).
+    pub fn fused_variant(&self) -> Option<(Variant, usize)> {
+        match *self {}
+    }
+
+    /// Unreachable (no `Engine` value can exist).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_fused(
+        &self,
+        _rows: &[i32],
+        _cols: &[i32],
+        _vals: &[f32],
+        _b_wins: &[f32],
+        _c_in: &[f32],
+        _alpha: f32,
+        _beta: f32,
+    ) -> Result<Vec<f32>> {
+        match *self {}
+    }
+
+    /// Unreachable (no `Engine` value can exist).
+    pub fn run_dense(&self, _a: &[f32], _b: &[f32]) -> Result<Vec<f32>> {
+        match *self {}
+    }
+
+    /// Unreachable (no `Engine` value can exist).
+    #[allow(clippy::too_many_arguments)]
+    pub fn spmm(
+        &self,
+        _v: Variant,
+        _sm: &ScheduledMatrix,
+        _b: &[f32],
+        _c_in: &[f32],
+        _n: usize,
+        _alpha: f32,
+        _beta: f32,
+    ) -> Result<Vec<f32>> {
+        match *self {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = Engine::load_default().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err:#}");
+        let err = Engine::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("unavailable"), "{err:#}");
+    }
+}

@@ -1,8 +1,33 @@
 //! PJRT runtime: load AOT HLO-text artifacts, compile once, execute the L1
 //! Pallas kernels from the rust request path. Python never runs here.
+//!
+//! The real engine needs the `xla` bindings crate and is therefore gated
+//! behind the `pjrt` cargo feature. Without it (the default in artifact-free
+//! environments), [`Engine`] is an API-identical stub whose `load` reports
+//! unavailability — callers (the `pjrt` execution backend, examples, tests)
+//! degrade gracefully instead of failing to build.
 
-pub mod engine;
 pub mod manifest;
 
-pub use engine::{Engine, Variant};
+#[cfg(feature = "pjrt")]
+pub mod engine;
+
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
+pub mod engine;
+
+pub use engine::Engine;
 pub use manifest::ArtifactSpec;
+
+/// A fixed-capacity window variant ("bitstream") the engine can execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Variant {
+    /// Scheduled-slot capacity per kernel call.
+    pub nnz_cap: usize,
+    /// B window depth.
+    pub k0: usize,
+    /// C tile rows.
+    pub m_tile: usize,
+    /// Lane count.
+    pub n0: usize,
+}

@@ -7,7 +7,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use sextans::arch::AcceleratorConfig;
-use sextans::coordinator::{BatchPolicy, FunctionalExecutor, Server, SpmmRequest};
+use sextans::backend::FunctionalBackend;
+use sextans::coordinator::{BatchPolicy, Server, SpmmRequest};
 use sextans::hflex::{HFlexAccelerator, HFlexError, SpmmProblem};
 use sextans::prop::assert_allclose;
 use sextans::sched::preprocess;
@@ -52,7 +53,7 @@ fn server_survives_heterogeneous_load() {
     let server = Server::start(
         2,
         BatchPolicy { max_columns: 64, window: Duration::from_millis(2) },
-        |_| Box::new(FunctionalExecutor),
+        |_| Box::new(FunctionalBackend),
     );
     let h1 = server.register(i1);
     let h2 = server.register(i2);
