@@ -1,0 +1,66 @@
+//! Shard benchmarks: GFLOP/s of the sharded executor at S = 1/2/4/8 shards
+//! vs the unsharded native backend, on a skewed (power-law rows) matrix —
+//! the workload where nnz-balanced sharding has to prove itself. Also
+//! reports the greedy planner's shard imbalance ratio per S.
+
+use std::time::Duration;
+
+use sextans::arch::simulator::problem_flops;
+use sextans::backend::{NativeBackend, SpmmBackend};
+use sextans::bench_util::{bench, black_box, section};
+use sextans::sched::preprocess;
+use sextans::shard::{ShardExecutor, ShardedMatrix};
+use sextans::sparse::{gen, rng::Rng};
+
+fn main() {
+    let mut rng = Rng::new(0x5A);
+    // Power-law rows: the head rows carry orders of magnitude more work
+    // than the tail — exactly what greedy nnz bin-packing must flatten.
+    let coo = gen::power_law_rows(8192, 8192, 400_000, 1.1, &mut rng);
+    let (p, k0, d) = (64usize, 4096usize, 10usize);
+    let n = 64usize;
+    let flops = problem_flops(coo.nnz(), coo.m, n) as f64;
+    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+    let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+    let mut c = c0.clone();
+
+    section(&format!(
+        "shard sweep ({}x{}, nnz {}, N={n}, power-law rows)",
+        coo.m,
+        coo.k,
+        coo.nnz()
+    ));
+
+    // Baseline: the unsharded native backend, auto-threaded.
+    let sm = preprocess(&coo, p, k0, d);
+    let mut native = NativeBackend::new(0);
+    let r = bench("shard/unsharded-native", 1, 6, Duration::from_millis(400), || {
+        c.copy_from_slice(&c0);
+        native.execute(&sm, &b, &mut c, n, 1.0, 0.5).unwrap();
+        black_box(&c);
+    });
+    let base_gflops = r.throughput(flops) / 1e9;
+    println!("    -> {base_gflops:.2} GFLOP/s (baseline)");
+
+    for s in [1usize, 2, 4, 8] {
+        let sharded = ShardedMatrix::build(&coo, s, p, k0, d);
+        let mut exec = ShardExecutor::from_spec("native", s).expect("native pool");
+        let r = bench(
+            &format!("shard/sharded:{s}:native"),
+            1,
+            6,
+            Duration::from_millis(400),
+            || {
+                c.copy_from_slice(&c0);
+                exec.execute(&sharded, &b, &mut c, n, 1.0, 0.5).unwrap();
+                black_box(&c);
+            },
+        );
+        let gflops = r.throughput(flops) / 1e9;
+        println!(
+            "    -> {gflops:.2} GFLOP/s ({:.2}x vs unsharded), nnz imbalance {:.3}",
+            gflops / base_gflops,
+            sharded.imbalance()
+        );
+    }
+}

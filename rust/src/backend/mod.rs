@@ -13,10 +13,16 @@
 //! * [`pjrt::PjrtBackend`] — adapter over [`crate::runtime::Engine`]
 //!   (AOT Pallas kernels via PJRT); requires the `pjrt` cargo feature and
 //!   compiled artifacts, and reports unavailability otherwise.
+//! * [`crate::shard::ShardedBackend`] — composite: row-shards the matrix
+//!   across S parallel instances of any inner backend
+//!   (`"sharded:<S>:<inner>"`, e.g. `"sharded:4:native"`).
 //!
 //! Backends are selected by name through [`create`] (`"native"`,
-//! `"native:4"`, `"functional"`, `"pjrt"`), so servers and CLIs stay
-//! backend-agnostic.
+//! `"native:4"`, `"native-blocked"`, `"functional"`, `"pjrt"`,
+//! `"sharded:4:native"`), so servers and CLIs stay backend-agnostic.
+//! [`apply_thread_budget`] rewrites auto-threaded specs to fit a global
+//! core budget, so stacked parallelism (server workers × shards × engine
+//! threads) never oversubscribes the machine.
 
 pub mod functional;
 pub mod native;
@@ -98,6 +104,14 @@ pub trait SpmmBackend {
         alpha: f32,
         beta: f32,
     ) -> Result<(), BackendError>;
+
+    /// Shard-level statistics of the most recent successful `execute`, for
+    /// backends that shard (see [`crate::shard`]). Non-sharding engines
+    /// keep the default `None`; the serving coordinator polls this after
+    /// every job to feed shard metrics into its summary.
+    fn shard_stats(&self) -> Option<crate::shard::ShardRunStats> {
+        None
+    }
 }
 
 impl std::fmt::Debug for dyn SpmmBackend {
@@ -157,6 +171,12 @@ pub fn registry() -> Vec<BackendInfo> {
                           accepts native:<threads>)",
         },
         BackendInfo {
+            name: "native-blocked",
+            available: true,
+            description: "native engine with a column-blocked inner loop for wide N \
+                          (accepts native-blocked:<threads>)",
+        },
+        BackendInfo {
             name: "functional",
             available: true,
             description: "serial functional simulator (reference semantics)",
@@ -165,6 +185,12 @@ pub fn registry() -> Vec<BackendInfo> {
             name: "pjrt",
             available: cfg!(feature = "pjrt"),
             description: "AOT Pallas kernels via PJRT/XLA (needs `pjrt` feature + artifacts)",
+        },
+        BackendInfo {
+            name: "sharded",
+            available: true,
+            description: "row-sharded composite running S shards in parallel over an \
+                          inner backend (sharded:<S>:<inner>, default sharded:2:native)",
         },
     ]
 }
@@ -199,12 +225,80 @@ fn no_arg(name: &str, arg: Option<&str>) -> Result<(), BackendError> {
     }
 }
 
+/// Parse a `sharded` argument: `<S>` or `<S>:<inner spec>` (inner defaults
+/// to `"native"`; a bare `"sharded"` means 2 shards).
+fn parse_sharded(arg: Option<&str>) -> Result<(usize, String), BackendError> {
+    let Some(arg) = arg else {
+        return Ok((2, "native".to_string()));
+    };
+    let (s_str, inner) = match arg.split_once(':') {
+        Some((s, i)) => (s, i.to_string()),
+        None => (arg, "native".to_string()),
+    };
+    let s = s_str.parse::<usize>().map_err(|_| {
+        BackendError::InvalidSpec(format!(
+            "sharded:<S>[:<inner>] needs an integer shard count, got {s_str:?}"
+        ))
+    })?;
+    if s == 0 {
+        return Err(BackendError::InvalidSpec("sharded:<S> needs S >= 1".into()));
+    }
+    Ok((s, inner))
+}
+
+/// Check that the spec's engine can execute in this build. For `sharded`
+/// the *inner* engine is what executes, so the check recurses into it —
+/// `"sharded:2:pjrt"` is refused in a pjrt-less build just like `"pjrt"`.
+/// Unknown or malformed specs pass: [`create`] rejects those with a better
+/// error.
+pub fn check_available(spec: &str) -> Result<(), BackendError> {
+    let (name, arg) = split_spec(spec);
+    if name == "sharded" {
+        return match parse_sharded(arg) {
+            Ok((_, inner)) => check_available(&inner),
+            Err(_) => Ok(()),
+        };
+    }
+    match registry().iter().find(|b| b.name == name) {
+        Some(info) if !info.available => Err(BackendError::Unavailable(format!(
+            "backend {name:?} cannot execute in this build ({})",
+            info.description
+        ))),
+        _ => Ok(()),
+    }
+}
+
+/// Rewrite a spec so its total worker-thread appetite fits `budget` cores.
+/// Only *auto-sized* specs are touched (`"native"` / `"native-blocked"`
+/// without an explicit thread count, recursively inside `"sharded"`);
+/// explicit thread counts are an operator decision and pass through. This
+/// is what keeps server workers × shards × engine lanes from
+/// oversubscribing the machine: the coordinator divides cores per worker,
+/// the sharded composite divides its share per shard.
+pub fn apply_thread_budget(spec: &str, budget: usize) -> String {
+    let budget = budget.max(1);
+    let (name, arg) = split_spec(spec);
+    match name {
+        "native" | "native-blocked" if arg.is_none() => format!("{name}:{budget}"),
+        "sharded" => {
+            let Ok((s, inner)) = parse_sharded(arg) else {
+                return spec.to_string();
+            };
+            format!("sharded:{s}:{}", apply_thread_budget(&inner, (budget / s).max(1)))
+        }
+        _ => spec.to_string(),
+    }
+}
+
 /// Construct a backend from a spec string: `"native"`, `"native:<threads>"`,
-/// `"functional"`, or `"pjrt"`.
+/// `"native-blocked"`, `"functional"`, `"pjrt"`, or `"sharded:<S>:<inner>"`.
 pub fn create(spec: &str) -> Result<Box<dyn SpmmBackend>, BackendError> {
     let (name, arg) = split_spec(spec);
     match name {
         "native" => Ok(Box::new(NativeBackend::new(parse_native_threads(arg)?))),
+        "native-blocked" => {
+            Ok(Box::new(NativeBackend::blocked(parse_native_threads(arg)?)))
+        }
         "functional" => {
             no_arg("functional", arg)?;
             Ok(Box::new(FunctionalBackend))
@@ -212,6 +306,10 @@ pub fn create(spec: &str) -> Result<Box<dyn SpmmBackend>, BackendError> {
         "pjrt" => {
             no_arg("pjrt", arg)?;
             Ok(Box::new(PjrtBackend::new()))
+        }
+        "sharded" => {
+            let (s, inner) = parse_sharded(arg)?;
+            Ok(Box::new(crate::shard::ShardedBackend::from_spec(s, &inner)?))
         }
         other => Err(BackendError::Unknown(other.to_string())),
     }
@@ -221,11 +319,16 @@ pub fn create(spec: &str) -> Result<Box<dyn SpmmBackend>, BackendError> {
 /// inside thread-mobile structures ([`crate::hflex::HFlexAccelerator`]).
 /// With the `pjrt` feature enabled the PJRT engine's handles are
 /// thread-local, so `"pjrt"` is refused here — construct it inside its
-/// executing thread instead (the coordinator's worker factories do).
+/// executing thread instead (the coordinator's worker factories do). The
+/// same restriction applies to `"sharded:<S>:pjrt"`, whose inner engines
+/// are built through this function.
 pub fn create_send(spec: &str) -> Result<Box<dyn SpmmBackend + Send>, BackendError> {
     let (name, arg) = split_spec(spec);
     match name {
         "native" => Ok(Box::new(NativeBackend::new(parse_native_threads(arg)?))),
+        "native-blocked" => {
+            Ok(Box::new(NativeBackend::blocked(parse_native_threads(arg)?)))
+        }
         "functional" => {
             no_arg("functional", arg)?;
             Ok(Box::new(FunctionalBackend))
@@ -233,6 +336,10 @@ pub fn create_send(spec: &str) -> Result<Box<dyn SpmmBackend + Send>, BackendErr
         "pjrt" => {
             no_arg("pjrt", arg)?;
             create_send_pjrt()
+        }
+        "sharded" => {
+            let (s, inner) = parse_sharded(arg)?;
+            Ok(Box::new(crate::shard::ShardedBackend::from_spec(s, &inner)?))
         }
         other => Err(BackendError::Unknown(other.to_string())),
     }
@@ -263,20 +370,34 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_has_three_backends() {
+    fn registry_lists_all_backends() {
         let names: Vec<_> = registry().iter().map(|b| b.name).collect();
-        assert_eq!(names, vec!["native", "functional", "pjrt"]);
-        // native and functional always execute; pjrt tracks the feature.
-        assert!(registry()[0].available && registry()[1].available);
-        assert_eq!(registry()[2].available, cfg!(feature = "pjrt"));
+        assert_eq!(
+            names,
+            vec!["native", "native-blocked", "functional", "pjrt", "sharded"]
+        );
+        // Everything but pjrt executes in every build; pjrt tracks the feature.
+        for info in registry() {
+            if info.name == "pjrt" {
+                assert_eq!(info.available, cfg!(feature = "pjrt"));
+            } else {
+                assert!(info.available, "{} must be available", info.name);
+            }
+        }
     }
 
     #[test]
     fn create_by_name() {
         assert_eq!(create("native").unwrap().name(), "native");
         assert_eq!(create("native:4").unwrap().name(), "native");
+        assert_eq!(create("native-blocked").unwrap().name(), "native-blocked");
+        assert_eq!(create("native-blocked:2").unwrap().name(), "native-blocked");
         assert_eq!(create("functional").unwrap().name(), "functional");
         assert_eq!(create("pjrt").unwrap().name(), "pjrt");
+        assert_eq!(create("sharded").unwrap().name(), "sharded");
+        assert_eq!(create("sharded:3").unwrap().name(), "sharded");
+        assert_eq!(create("sharded:2:functional").unwrap().name(), "sharded");
+        assert_eq!(create("sharded:2:native:1").unwrap().name(), "sharded");
     }
 
     #[test]
@@ -284,8 +405,47 @@ mod tests {
         assert!(matches!(create("fpga"), Err(BackendError::Unknown(_))));
         assert!(matches!(create("native:x"), Err(BackendError::InvalidSpec(_))));
         assert!(matches!(create("functional:2"), Err(BackendError::InvalidSpec(_))));
+        assert!(matches!(create("sharded:0"), Err(BackendError::InvalidSpec(_))));
+        assert!(matches!(create("sharded:x:native"), Err(BackendError::InvalidSpec(_))));
+        assert!(matches!(
+            create("sharded:2:sharded:2:native"),
+            Err(BackendError::InvalidSpec(_))
+        ));
         let msg = create("fpga").unwrap_err().to_string();
         assert!(msg.contains("native") && msg.contains("pjrt"), "{msg}");
+        assert!(msg.contains("sharded"), "{msg}");
+    }
+
+    #[test]
+    fn thread_budget_rewrites_auto_specs_only() {
+        assert_eq!(apply_thread_budget("native", 8), "native:8");
+        assert_eq!(apply_thread_budget("native-blocked", 6), "native-blocked:6");
+        assert_eq!(apply_thread_budget("native:3", 8), "native:3");
+        assert_eq!(apply_thread_budget("functional", 8), "functional");
+        assert_eq!(apply_thread_budget("pjrt", 8), "pjrt");
+        // Sharded divides its budget across shards, floored at 1 thread.
+        assert_eq!(apply_thread_budget("sharded:4:native", 8), "sharded:4:native:2");
+        assert_eq!(apply_thread_budget("sharded:8:native", 4), "sharded:8:native:1");
+        assert_eq!(apply_thread_budget("sharded:2:native:5", 8), "sharded:2:native:5");
+        assert_eq!(apply_thread_budget("sharded:2", 8), "sharded:2:native:4");
+        assert_eq!(apply_thread_budget("sharded", 8), "sharded:2:native:4");
+        // Budget is clamped to at least one core.
+        assert_eq!(apply_thread_budget("native", 0), "native:1");
+        // Malformed specs pass through untouched (create() rejects them).
+        assert_eq!(apply_thread_budget("sharded:x:native", 8), "sharded:x:native");
+    }
+
+    #[test]
+    fn availability_check_sees_through_sharded() {
+        assert!(check_available("native").is_ok());
+        assert!(check_available("sharded:4:native:2").is_ok());
+        assert!(check_available("sharded").is_ok()); // default inner = native
+        // Malformed / unknown specs defer to create()'s richer errors.
+        assert!(check_available("sharded:x:native").is_ok());
+        assert!(check_available("warpdrive").is_ok());
+        let pjrt_ok = cfg!(feature = "pjrt");
+        assert_eq!(check_available("pjrt").is_ok(), pjrt_ok);
+        assert_eq!(check_available("sharded:2:pjrt").is_ok(), pjrt_ok);
     }
 
     #[test]

@@ -17,6 +17,16 @@
 //!
 //! Hot-path allocation is zero after warm-up: each worker's scratch tile
 //! lives in the backend and only grows (never shrinks) across requests.
+//!
+//! **Column blocking** ([`NativeBackend::blocked`], registry name
+//! `"native-blocked"`): for N well beyond [`COL_BLOCK`], the B window rows
+//! and C tile of one request stop fitting in cache, so the blocked variant
+//! sweeps the same streams once per [`COL_BLOCK`]-wide column slice. It
+//! re-decodes the A stream per slice (8 B/nnz, streams linearly) in
+//! exchange for keeping the random-access B/C working set cache-resident —
+//! the host mirror of the paper's N/N0 outer loop (Eq. 2). Per output
+//! element the accumulation order is unchanged, so `native-blocked` is
+//! bit-identical to `native`.
 
 use super::{check_shapes, BackendError, Capability, SpmmBackend};
 use crate::sched::{decode, ScheduledMatrix};
@@ -24,29 +34,52 @@ use crate::sched::{decode, ScheduledMatrix};
 /// Inner-loop chunk width — the paper's N0 (8 PUs per PE).
 pub const LANES: usize = 8;
 
+/// Column-block width of the `native-blocked` variant (8 LANES-wide
+/// chunks; sized so one B window row slice + C tile stays L1/L2-resident).
+pub const COL_BLOCK: usize = 64;
+
 /// Multi-threaded native backend.
 pub struct NativeBackend {
     /// Resolved worker-thread count (>= 1).
     threads: usize,
-    /// Per-worker C_AB scratch tiles (`rows_per_pe * n`), reused across
-    /// requests and across the PEs a worker owns.
+    /// Column-block width; 0 = unblocked (the plain `native` engine).
+    block_n: usize,
+    /// Per-worker C_AB scratch tiles (`rows_per_pe * block width`), reused
+    /// across requests and across the PEs a worker owns.
     scratch: Vec<Vec<f32>>,
 }
 
 impl NativeBackend {
     /// `threads == 0` auto-sizes to the machine's available parallelism.
     pub fn new(threads: usize) -> NativeBackend {
+        Self::with_block(threads, 0)
+    }
+
+    /// The `native-blocked` variant: sweeps columns in [`COL_BLOCK`]-wide
+    /// slices for wide-N workloads. Same numerics, different cache story.
+    pub fn blocked(threads: usize) -> NativeBackend {
+        Self::with_block(threads, COL_BLOCK)
+    }
+
+    /// Explicit column-block width (`0` = unblocked); exposed for tuning
+    /// experiments and the bench harness.
+    pub fn with_block(threads: usize, block_n: usize) -> NativeBackend {
         let threads = if threads == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             threads
         };
-        NativeBackend { threads, scratch: Vec::new() }
+        NativeBackend { threads, block_n, scratch: Vec::new() }
     }
 
     /// The resolved worker-thread count.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Column-block width (0 = unblocked).
+    pub fn block_width(&self) -> usize {
+        self.block_n
     }
 }
 
@@ -77,8 +110,11 @@ struct CPtr(*mut f32);
 unsafe impl Send for CPtr {}
 unsafe impl Sync for CPtr {}
 
-/// Process every PE in `pe0, pe0 + stride, ...`: accumulate its stream into
-/// `ab` (cleared per PE), then Comp-C its rows of the shared C buffer.
+/// Process every PE in `pe0, pe0 + stride, ...` for the column slice
+/// `[col0, col0 + cols)` of B/C: accumulate the PE's stream into `ab`
+/// (a `rows_per_pe x cols` tile, cleared per PE), then Comp-C its rows of
+/// the shared C buffer. The unblocked engine passes one full-width slice;
+/// the blocked engine calls once per [`COL_BLOCK`]-wide slice.
 #[allow(clippy::too_many_arguments)]
 fn run_pes(
     sm: &ScheduledMatrix,
@@ -90,8 +126,12 @@ fn run_pes(
     ab: &mut [f32],
     pe0: usize,
     stride: usize,
+    col0: usize,
+    cols: usize,
 ) {
     let rows_per_pe = sm.rows_per_pe();
+    debug_assert_eq!(ab.len(), rows_per_pe * cols);
+    debug_assert!(col0 + cols <= n);
     let mut pe = pe0;
     while pe < sm.p {
         ab.fill(0.0);
@@ -106,7 +146,11 @@ fn run_pes(
                 let r = nz.row as usize;
                 let gc = col_base + nz.col as usize;
                 debug_assert!(r < rows_per_pe && gc < sm.k);
-                axpy(&mut ab[r * n..r * n + n], &b[gc * n..gc * n + n], nz.val);
+                axpy(
+                    &mut ab[r * cols..(r + 1) * cols],
+                    &b[gc * n + col0..gc * n + col0 + cols],
+                    nz.val,
+                );
             }
         }
         // Comp-C for this PE's (disjoint) rows of the shared C.
@@ -115,14 +159,15 @@ fn run_pes(
             if gr >= sm.m {
                 break;
             }
-            let ab_row = &ab[t * n..t * n + n];
-            for q in 0..n {
+            let ab_row = &ab[t * cols..(t + 1) * cols];
+            for (q, &v) in ab_row.iter().enumerate() {
                 // SAFETY: rows `gr ≡ pe (mod P)` are written only by the
-                // worker owning `pe` (see CPtr), and `gr < m` so the index
-                // is in bounds of the `m * n` buffer.
+                // worker owning `pe` (see CPtr), and `gr < m`,
+                // `col0 + q < n`, so the index is in bounds of the `m * n`
+                // buffer.
                 unsafe {
-                    let slot = c.0.add(gr * n + q);
-                    *slot = alpha * ab_row[q] + beta * *slot;
+                    let slot = c.0.add(gr * n + col0 + q);
+                    *slot = alpha * v + beta * *slot;
                 }
             }
         }
@@ -132,7 +177,11 @@ fn run_pes(
 
 impl SpmmBackend for NativeBackend {
     fn name(&self) -> &'static str {
-        "native"
+        if self.block_n == 0 {
+            "native"
+        } else {
+            "native-blocked"
+        }
     }
 
     fn capability(&self) -> Capability {
@@ -154,14 +203,17 @@ impl SpmmBackend for NativeBackend {
         beta: f32,
     ) -> Result<(), BackendError> {
         check_shapes(sm, b, c, n)?;
-        if sm.p == 0 || sm.m == 0 {
+        if sm.p == 0 || sm.m == 0 || n == 0 {
             return Ok(());
         }
         let workers = self.threads.min(sm.p).max(1);
         if self.scratch.len() < workers {
             self.scratch.resize_with(workers, Vec::new);
         }
-        let tile = sm.rows_per_pe() * n;
+        // Block width: full N when unblocked, else COL_BLOCK-capped slices.
+        let block = if self.block_n == 0 { n } else { self.block_n.min(n) };
+        let rows_per_pe = sm.rows_per_pe();
+        let tile = rows_per_pe * block;
         for buf in &mut self.scratch[..workers] {
             if buf.len() < tile {
                 buf.resize(tile, 0.0);
@@ -169,14 +221,33 @@ impl SpmmBackend for NativeBackend {
         }
         let cptr = CPtr(c.as_mut_ptr());
         if workers == 1 {
-            run_pes(sm, b, cptr, n, alpha, beta, &mut self.scratch[0][..tile], 0, 1);
+            let buf = &mut self.scratch[0];
+            let mut col0 = 0;
+            while col0 < n {
+                let cols = block.min(n - col0);
+                run_pes(
+                    sm, b, cptr, n, alpha, beta,
+                    &mut buf[..rows_per_pe * cols],
+                    0, 1, col0, cols,
+                );
+                col0 += cols;
+            }
             return Ok(());
         }
         std::thread::scope(|s| {
             for (w, buf) in self.scratch[..workers].iter_mut().enumerate() {
                 let worker_c = cptr;
                 s.spawn(move || {
-                    run_pes(sm, b, worker_c, n, alpha, beta, &mut buf[..tile], w, workers);
+                    let mut col0 = 0;
+                    while col0 < n {
+                        let cols = block.min(n - col0);
+                        run_pes(
+                            sm, b, worker_c, n, alpha, beta,
+                            &mut buf[..rows_per_pe * cols],
+                            w, workers, col0, cols,
+                        );
+                        col0 += cols;
+                    }
                 });
             }
         });
@@ -285,6 +356,49 @@ mod tests {
         let mut want = vec![0f32; a.m * n];
         a.spmm_reference(&b, &mut want, n, 1.0, 0.0);
         prop::assert_allclose(&got, &want, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn blocked_is_bit_identical_to_native() {
+        // Column blocking reorders nothing per output element, so the
+        // blocked engine must match the plain one bitwise — including N
+        // that is smaller than, equal to, and far beyond COL_BLOCK, and N
+        // not a multiple of the block width.
+        let mut rng = Rng::new(11);
+        let a = gen::power_law_rows(120, 100, 1_800, 1.0, &mut rng);
+        let sm = preprocess(&a, 8, 32, 6);
+        for n in [1usize, 11, COL_BLOCK, COL_BLOCK + 1, 3 * COL_BLOCK + 7] {
+            let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
+            let c0: Vec<f32> = (0..a.m * n).map(|_| rng.normal()).collect();
+            for threads in [1usize, 4] {
+                let plain = run_native(threads, &sm, &b, &c0, n, 1.5, -0.25);
+                let mut blocked = NativeBackend::blocked(threads);
+                let mut c = c0.clone();
+                blocked.execute(&sm, &b, &mut c, n, 1.5, -0.25).unwrap();
+                assert_eq!(c, plain, "n = {n}, threads = {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_identity_and_scratch_reuse() {
+        let mut rng = Rng::new(12);
+        let a = gen::random_uniform(50, 40, 0.15, &mut rng);
+        let sm = preprocess(&a, 4, 16, 5);
+        let n = 150; // several blocks
+        let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
+        let mut backend = NativeBackend::blocked(2);
+        assert_eq!(backend.name(), "native-blocked");
+        assert_eq!(backend.block_width(), COL_BLOCK);
+        let mut first = vec![0f32; a.m * n];
+        backend.execute(&sm, &b, &mut first, n, 1.0, 0.0).unwrap();
+        // Dirty scratch from the first request must not leak into the next.
+        let mut second = vec![0f32; a.m * n];
+        backend.execute(&sm, &b, &mut second, n, 1.0, 0.0).unwrap();
+        assert_eq!(first, second);
+        let mut want = vec![0f32; a.m * n];
+        a.spmm_reference(&b, &mut want, n, 1.0, 0.0);
+        prop::assert_allclose(&first, &want, 2e-4, 2e-4).unwrap();
     }
 
     #[test]

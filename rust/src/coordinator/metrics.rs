@@ -1,6 +1,9 @@
-//! Serving metrics: per-request latency recording and summary statistics.
+//! Serving metrics: per-request latency recording, shard-level load
+//! statistics (when a sharded backend executes), and summary statistics.
 
 use std::time::Duration;
+
+use crate::shard::ShardRunStats;
 
 /// One served request's timing.
 #[derive(Clone, Copy, Debug)]
@@ -29,6 +32,11 @@ pub struct Recorder {
     timings: Vec<RequestTiming>,
     batches: usize,
     batched_requests: usize,
+    shard_execs: usize,
+    shard_count_sum: usize,
+    shard_imbalance_sum: f64,
+    shard_imbalance_max: f64,
+    shard_slowest_s_sum: f64,
 }
 
 impl Recorder {
@@ -41,6 +49,18 @@ impl Recorder {
     pub fn record_batch(&mut self, n: usize) {
         self.batches += 1;
         self.batched_requests += n;
+    }
+
+    /// Record one sharded execution's shard-level stats (per-shard nnz and
+    /// latency roll up into imbalance and makespan aggregates).
+    pub fn record_shards(&mut self, stats: &ShardRunStats) {
+        self.shard_execs += 1;
+        self.shard_count_sum += stats.shards;
+        self.shard_imbalance_sum += stats.imbalance;
+        if stats.imbalance > self.shard_imbalance_max {
+            self.shard_imbalance_max = stats.imbalance;
+        }
+        self.shard_slowest_s_sum += stats.slowest().as_secs_f64();
     }
 
     /// Summarize.
@@ -79,6 +99,23 @@ impl Recorder {
             total_flops,
             sum_latency_s: wall,
             backends,
+            shard_execs: self.shard_execs,
+            mean_shards: if self.shard_execs == 0 {
+                0.0
+            } else {
+                self.shard_count_sum as f64 / self.shard_execs as f64
+            },
+            mean_shard_imbalance: if self.shard_execs == 0 {
+                0.0
+            } else {
+                self.shard_imbalance_sum / self.shard_execs as f64
+            },
+            max_shard_imbalance: self.shard_imbalance_max,
+            mean_shard_makespan_s: if self.shard_execs == 0 {
+                0.0
+            } else {
+                self.shard_slowest_s_sum / self.shard_execs as f64
+            },
         }
     }
 }
@@ -104,6 +141,16 @@ pub struct Summary {
     pub sum_latency_s: f64,
     /// Requests served per backend name, sorted by name.
     pub backends: Vec<(&'static str, usize)>,
+    /// Sharded executions observed (0 when no sharded backend served).
+    pub shard_execs: usize,
+    /// Mean shard count per sharded execution.
+    pub mean_shards: f64,
+    /// Mean max/mean shard-nnz imbalance across sharded executions.
+    pub mean_shard_imbalance: f64,
+    /// Worst shard-nnz imbalance observed.
+    pub max_shard_imbalance: f64,
+    /// Mean slowest-shard (makespan) latency per sharded execution (s).
+    pub mean_shard_makespan_s: f64,
 }
 
 #[cfg(test)]
@@ -152,6 +199,31 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.p50_s, 0.0);
         assert!(s.backends.is_empty());
+        assert_eq!(s.shard_execs, 0);
+        assert_eq!(s.mean_shard_imbalance, 0.0);
+    }
+
+    #[test]
+    fn shard_accounting_aggregates() {
+        let mut r = Recorder::default();
+        r.record_shards(&ShardRunStats {
+            shards: 4,
+            shard_nnz: vec![10, 10, 10, 10],
+            shard_latency: vec![Duration::from_millis(2); 4],
+            imbalance: 1.1,
+        });
+        r.record_shards(&ShardRunStats {
+            shards: 2,
+            shard_nnz: vec![30, 10],
+            shard_latency: vec![Duration::from_millis(6), Duration::from_millis(1)],
+            imbalance: 1.5,
+        });
+        let s = r.summary();
+        assert_eq!(s.shard_execs, 2);
+        assert!((s.mean_shards - 3.0).abs() < 1e-12);
+        assert!((s.mean_shard_imbalance - 1.3).abs() < 1e-12);
+        assert!((s.max_shard_imbalance - 1.5).abs() < 1e-12);
+        assert!((s.mean_shard_makespan_s - 0.004).abs() < 1e-9);
     }
 
     #[test]

@@ -151,36 +151,25 @@ impl Server {
     }
 
     /// Start with backends built by name from the [`crate::backend`]
-    /// registry (`"native"`, `"native:<threads>"`, `"functional"`,
-    /// `"pjrt"`). The spec is parsed and its availability in this build is
-    /// checked eagerly (an unavailable backend — e.g. `pjrt` without the
-    /// feature — is refused here rather than failing every request); each
-    /// worker thread then constructs its own instance. A bare `"native"`
-    /// spec divides the machine's cores across the worker threads so
-    /// concurrent merged jobs do not oversubscribe the CPU.
+    /// registry (`"native"`, `"native:<threads>"`, `"native-blocked"`,
+    /// `"functional"`, `"pjrt"`, `"sharded:<S>:<inner>"`). The spec is
+    /// parsed and its availability in this build is checked eagerly (an
+    /// unavailable backend — e.g. `pjrt` without the feature — is refused
+    /// here rather than failing every request); each worker thread then
+    /// constructs its own instance. Auto-threaded specs are rewritten
+    /// through [`backend::apply_thread_budget`] with this machine's cores
+    /// divided across the worker threads, so workers × shards × engine
+    /// threads never oversubscribes the CPU.
     pub fn start_backend(
         n_workers: usize,
         policy: BatchPolicy,
         spec: &str,
     ) -> Result<Server, BackendError> {
         backend::create(spec)?; // parse + argument validation
-        let base = spec.split(':').next().unwrap_or(spec);
-        match backend::registry().iter().find(|b| b.name == base) {
-            Some(info) if !info.available => {
-                return Err(BackendError::Unavailable(format!(
-                    "backend {base:?} cannot execute in this build ({})",
-                    info.description
-                )));
-            }
-            _ => {}
-        }
-        let spec = if spec == "native" {
-            let cores =
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-            format!("native:{}", cores.div_ceil(n_workers.max(1)).max(1))
-        } else {
-            spec.to_string()
-        };
+        backend::check_available(spec)?; // sees through sharded:<S>:<inner>
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let spec =
+            backend::apply_thread_budget(spec, cores.div_ceil(n_workers.max(1)).max(1));
         Ok(Server::start(n_workers, policy, move |_| {
             backend::create(&spec).expect("backend spec validated at startup")
         }))
@@ -336,6 +325,13 @@ fn worker_loop(
             .err()
             .map(|e| e.to_string());
         let exec_time = start.elapsed();
+        // Sharded backends expose per-shard stats for the job just run;
+        // fold them into the serving summary (imbalance, makespan).
+        if error.is_none() {
+            if let Some(stats) = exec.shard_stats() {
+                recorder.lock().unwrap().record_shards(&stats);
+            }
+        }
         let m = job.image.m;
         let nnz = job.image.nnz;
         for seg in job.segments {
@@ -521,6 +517,58 @@ mod tests {
         }
         let summary = server.shutdown();
         assert_eq!(summary.batches, 2, "distinct scalars must not merge");
+    }
+
+    #[test]
+    fn sharded_backend_serves_and_reports_shard_metrics() {
+        let (coo, sm) = make_image(21);
+        let server = Server::start_backend(1, BatchPolicy::default(), "sharded:3:native:1")
+            .unwrap();
+        let handle = server.register(sm);
+        let mut rng = Rng::new(22);
+        let n = 3;
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        let c: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let mut want = c.clone();
+        coo.spmm_reference(&b, &mut want, n, 1.5, 0.5);
+        let resp = server.call(SpmmRequest { image: handle, b, c, n, alpha: 1.5, beta: 0.5 });
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        prop::assert_allclose(&resp.c, &want, 2e-4, 2e-4).unwrap();
+        assert_eq!(resp.timing.backend, "sharded");
+        let summary = server.shutdown();
+        assert_eq!(summary.requests, 1);
+        assert_eq!(summary.shard_execs, 1);
+        assert!((summary.mean_shards - 3.0).abs() < 1e-12);
+        assert!(summary.mean_shard_imbalance >= 1.0);
+    }
+
+    #[test]
+    fn failing_shard_surfaces_with_shard_identified() {
+        use crate::shard::{ShardExecutor, ShardedBackend};
+        let (_, sm) = make_image(23);
+        // Shard 1 of 2 always fails; the response must name it, never
+        // silently zero its rows.
+        let server = Server::start(1, BatchPolicy::default(), |_| {
+            Box::new(ShardedBackend::from_executor(ShardExecutor::from_backends(vec![
+                Box::new(FunctionalBackend),
+                Box::new(FailingBackend),
+            ])))
+        });
+        let handle = server.register(sm.clone());
+        let resp = server.call(SpmmRequest {
+            image: handle,
+            b: vec![0.5; sm.k * 2],
+            c: vec![0.5; sm.m * 2],
+            n: 2,
+            alpha: 1.0,
+            beta: 0.0,
+        });
+        let err = resp.error.expect("shard failure must surface");
+        assert!(err.contains("shard 1 of 2"), "{err}");
+        assert!(err.contains("injected failure"), "{err}");
+        assert_eq!(resp.timing.backend, "sharded");
+        let summary = server.shutdown();
+        assert_eq!(summary.shard_execs, 0, "failed runs must not count as sharded execs");
     }
 
     #[test]

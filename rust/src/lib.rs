@@ -32,9 +32,10 @@
 //! | [`arch`] | §3.1, §3.2, §3.5, §3.6.2 | cycle-level streaming simulator, functional simulator, resource model |
 //! | [`perfmodel`] | §3.6.1, §4.1 | Eq. 6–10 closed form, GPU baselines, platform constants, energy |
 //! | [`hflex`] | §3.4 | the HFlex runtime contract: one fixed accelerator, arbitrary SpMMs |
-//! | [`backend`] | §3.4, §4.2 | pluggable [`backend::SpmmBackend`] execution engines: native multi-threaded CPU, functional reference, PJRT adapter — selected by name |
+//! | [`backend`] | §3.4, §4.2 | pluggable [`backend::SpmmBackend`] execution engines: native multi-threaded CPU (plain + column-blocked), functional reference, PJRT adapter, sharded composite — selected by name |
+//! | [`shard`] | §3.3 scaled up | sharded multi-accelerator execution: nnz-balanced row partitioning, parallel [`shard::ShardExecutor`], `sharded:<S>:<inner>` composite backend |
 //! | [`runtime`] | — | PJRT client wrapping the AOT HLO artifacts (stubbed without the `pjrt` feature) |
-//! | [`coordinator`] | — | SpMM request server: batching, worker pool, per-backend metrics |
+//! | [`coordinator`] | — | SpMM request server: batching, worker pool, per-backend and shard-level metrics |
 //! | [`metrics`] | §4.2 | GFLOP/s, bandwidth utilization, energy efficiency, geomean/CDF |
 //! | [`report`] | §4.2, §4.3 | experiment drivers regenerating Tables 1–5 and Figures 7–10 |
 
@@ -50,4 +51,5 @@ pub mod prop;
 pub mod report;
 pub mod runtime;
 pub mod sched;
+pub mod shard;
 pub mod sparse;

@@ -3,15 +3,19 @@
 //! ```text
 //! sextans repro [--all | <exp-id>] [--out DIR] [--full] [--max-matrices N]
 //! sextans run   --m M --k K [--n N] [--density D] [--alpha A] [--beta B]
-//!               [--backend native|native:<threads>|functional|pjrt] [--xla]
+//!               [--backend NAME] [--shards S] [--xla]
 //! sextans gen   --m M --k K --density D --out file.mtx [--seed S]
-//! sextans serve [--requests R] [--workers W] [--backend NAME]
+//! sextans serve [--requests R] [--workers W] [--backend NAME] [--shards S]
 //! sextans info
 //! ```
 //!
 //! `--backend` picks the execution engine by registry name (default:
 //! `native`, the multi-threaded host engine; see `sextans info` for the
-//! full list).
+//! full list). `--shards S` (S > 1) spreads each SpMM across S parallel
+//! accelerator instances of that backend — `run` drives the
+//! [`sextans::shard`] API directly and prints per-shard load and latency;
+//! `serve` wraps the spec as `sharded:<S>:<backend>` so the coordinator
+//! picks it up from the registry.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -26,6 +30,7 @@ use sextans::hflex::{HFlexAccelerator, SpmmProblem};
 use sextans::perfmodel::Platform;
 use sextans::report::{self, experiments};
 use sextans::sched::preprocess;
+use sextans::shard::{ShardExecutor, ShardedMatrix};
 use sextans::sparse::catalog::Scale;
 use sextans::sparse::{gen, mm_io, rng::Rng, Coo};
 
@@ -118,8 +123,73 @@ fn cmd_run(cli: &Cli) -> Result<()> {
     );
 
     let backend_spec = cli.get("backend").unwrap_or("native");
+    let shards = cli.get_usize("shards", 1);
+    let cfg = AcceleratorConfig::sextans_u280();
+
+    let mut rng = Rng::new(seed ^ 0xB0B);
+    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+    let mut c: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+
+    if shards > 1 {
+        if cli.flag("xla") {
+            bail!("--xla cross-checks the single-accelerator engine; run it without --shards");
+        }
+        // Sharded path: S parallel accelerator instances, row-partitioned.
+        let t0 = std::time::Instant::now();
+        let sharded = ShardedMatrix::build(&coo, shards, cfg.p(), cfg.k0, cfg.d);
+        println!(
+            "sharded: {} shards in {:.2} ms, nnz imbalance {:.3}",
+            sharded.num_shards(),
+            t0.elapsed().as_secs_f64() * 1e3,
+            sharded.imbalance()
+        );
+        let mut exec = ShardExecutor::from_spec(backend_spec, shards)?;
+        println!("backend: {shards} x {backend_spec:?} (thread-budgeted)");
+        let stats = exec.execute(&sharded, &b, &mut c, n, alpha, beta)?;
+        // Per-shard simulated cycles: the pool's makespan is the slowest
+        // shard (shards run on independent accelerators).
+        let mut makespan_cycles = 0u64;
+        for (i, shard) in sharded.shards.iter().enumerate() {
+            let rep = simulate(&shard.image, &cfg, n);
+            makespan_cycles = makespan_cycles.max(rep.cycles);
+            println!(
+                "  shard {i}: {} rows, {} nnz, host {:.3} ms, simulated {} cycles",
+                shard.global_rows.len(),
+                shard.image.nnz,
+                stats.shard_latency[i].as_secs_f64() * 1e3,
+                rep.cycles
+            );
+        }
+        let pool_seconds = makespan_cycles as f64 / (cfg.freq_mhz * 1e6);
+        println!(
+            "pool makespan: {} cycles = {:.3} ms @ {} MHz (slowest shard); host makespan {:.3} ms",
+            makespan_cycles,
+            pool_seconds * 1e3,
+            cfg.freq_mhz,
+            stats.slowest().as_secs_f64() * 1e3
+        );
+        let mstats = sextans::perfmodel::MatrixStats {
+            m: coo.m,
+            k: coo.k,
+            nnz: coo.nnz(),
+            max_row_nnz: coo.max_row_nnz(),
+        };
+        for p in [Platform::K80, Platform::V100] {
+            let t = p.gpu_model().unwrap().seconds(&mstats, n);
+            println!(
+                "baseline {}: {:.3} ms ({:.2}x vs {}-shard Sextans pool)",
+                p.spec().name,
+                t * 1e3,
+                t / pool_seconds,
+                shards
+            );
+        }
+        return Ok(());
+    }
+
+    let c_in = c.clone();
     let accel = HFlexAccelerator::synthesize_with_backend(
-        AcceleratorConfig::sextans_u280(),
+        cfg,
         backend::create_send(backend_spec)?,
     );
     println!("backend: {} (spec {backend_spec:?})", accel.backend_name());
@@ -132,10 +202,6 @@ fn cmd_run(cli: &Cli) -> Result<()> {
         image.effective_ii()
     );
 
-    let mut rng = Rng::new(seed ^ 0xB0B);
-    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
-    let mut c: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
-    let c_in = c.clone();
     let report = accel.invoke(SpmmProblem { a: &image, b: &b, c: &mut c, n, alpha, beta })?;
     let sim = &report.sim;
     println!(
@@ -202,11 +268,19 @@ fn cmd_gen(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
-/// `serve`: demo serving loop on a registry-selected backend.
+/// `serve`: demo serving loop on a registry-selected backend; `--shards S`
+/// wraps the backend as a `sharded:<S>:<inner>` composite.
 fn cmd_serve(cli: &Cli) -> Result<()> {
     let requests = cli.get_usize("requests", 64);
     let workers = cli.get_usize("workers", 2);
-    let backend_spec = cli.get("backend").unwrap_or("native");
+    let shards = cli.get_usize("shards", 1);
+    let base_spec = cli.get("backend").unwrap_or("native").to_string();
+    let backend_spec = if shards > 1 {
+        format!("sharded:{shards}:{base_spec}")
+    } else {
+        base_spec
+    };
+    let backend_spec = backend_spec.as_str();
     let mut rng = Rng::new(cli.get_u64("seed", 3));
     let coo = gen::rmat(4096, 40_000, 0.57, 0.19, 0.19, &mut rng);
     let cfg = AcceleratorConfig::sextans_u280();
@@ -248,6 +322,17 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     );
     for (name, count) in &s.backends {
         println!("  backend {name}: {count} requests");
+    }
+    if s.shard_execs > 0 {
+        println!(
+            "  shards: {} sharded executions, mean {:.1} shards, nnz imbalance mean {:.3} / \
+             max {:.3}, mean shard makespan {:.2} ms",
+            s.shard_execs,
+            s.mean_shards,
+            s.mean_shard_imbalance,
+            s.max_shard_imbalance,
+            s.mean_shard_makespan_s * 1e3
+        );
     }
     Ok(())
 }

@@ -1,0 +1,252 @@
+//! The `"sharded:<S>:<inner>"` composite backend: sharding behind the
+//! plain [`SpmmBackend`] contract, so every registry consumer (the HFlex
+//! accelerator, the serving coordinator, the CLI) gains multi-accelerator
+//! execution from a spec string alone.
+//!
+//! The backend contract hands over a *preprocessed image*, not raw COO, so
+//! the composite inverts preprocessing once ([`reconstruct_coo`]), builds a
+//! [`ShardedMatrix`] for the same (P, K0, D), and caches it keyed by a
+//! content fingerprint of the image. The cache holds the
+//! [`CACHE_ENTRIES`] most recently used matrices, so a worker serving
+//! several registered models (the coordinator's normal multi-model case)
+//! still pays only an O(slots) hash per request, not a re-shard.
+//! Shard-level timings of the latest run are exposed through
+//! [`SpmmBackend::shard_stats`] so serving metrics can aggregate them.
+
+use super::executor::ShardExecutor;
+use super::plan::{reconstruct_coo, ShardedMatrix};
+use super::{ShardError, ShardRunStats};
+use crate::backend::{check_shapes, BackendError, Capability, SpmmBackend};
+use crate::sched::ScheduledMatrix;
+
+/// Sharded images kept per backend instance, most recently used first.
+/// Sized for a worker serving a handful of registered matrices; beyond
+/// this the oldest re-shard is rebuilt on next use.
+pub const CACHE_ENTRIES: usize = 8;
+
+/// Composite backend running S row-shards in parallel over inner engines.
+pub struct ShardedBackend {
+    shards: usize,
+    executor: ShardExecutor,
+    /// Recently sharded images, MRU-first, keyed by content fingerprint.
+    cache: Vec<(u64, ShardedMatrix)>,
+    /// Stats of the most recent successful execution.
+    last_stats: Option<ShardRunStats>,
+}
+
+impl ShardedBackend {
+    /// Build from a shard count and an inner registry spec (see
+    /// [`ShardExecutor::from_spec`] for thread budgeting and nesting rules).
+    pub fn from_spec(shards: usize, inner_spec: &str) -> Result<ShardedBackend, BackendError> {
+        if shards == 0 {
+            return Err(BackendError::InvalidSpec(
+                "sharded:<S> needs S >= 1".into(),
+            ));
+        }
+        let executor = ShardExecutor::from_spec(inner_spec, shards)?;
+        Ok(ShardedBackend { shards, executor, cache: Vec::new(), last_stats: None })
+    }
+
+    /// Build around an explicit executor (tests, heterogeneous pools). The
+    /// shard count is the executor's backend count.
+    pub fn from_executor(executor: ShardExecutor) -> ShardedBackend {
+        ShardedBackend {
+            shards: executor.num_shards(),
+            executor,
+            cache: Vec::new(),
+            last_stats: None,
+        }
+    }
+
+    /// Configured shard count.
+    pub fn num_shards(&self) -> usize {
+        self.shards
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(FNV_PRIME)
+}
+
+/// Content fingerprint of a scheduled image: dimensions, every stream's Q
+/// pointer list, and every encoded word (FNV-1a over u64s). Q matters: the
+/// encoded words store *window-local* columns, so the same word sequence
+/// under different window boundaries is a different matrix. One linear
+/// pass per request — a deliberate correctness-over-speed trade (pointer
+/// identity could be recycled across deregistered models); if the hash
+/// ever shows up in profiles, precompute it once on `ScheduledMatrix` at
+/// preprocess time and compare stored values here.
+fn fingerprint(sm: &ScheduledMatrix) -> u64 {
+    let mut h = FNV_OFFSET;
+    for dim in [sm.m, sm.k, sm.p, sm.k0, sm.d, sm.num_windows, sm.nnz] {
+        h = fnv(h, dim as u64);
+    }
+    for stream in &sm.streams {
+        h = fnv(h, stream.encoded.len() as u64);
+        for &start in stream.q.entries() {
+            h = fnv(h, start as u64);
+        }
+        for &word in &stream.encoded {
+            h = fnv(h, word);
+        }
+    }
+    h
+}
+
+impl SpmmBackend for ShardedBackend {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn capability(&self) -> Capability {
+        let inners = self.executor.backends();
+        Capability {
+            threads: inners.iter().map(|b| b.capability().threads).sum::<usize>().max(1),
+            simd_lanes: inners.first().map(|b| b.capability().simd_lanes).unwrap_or(1),
+            requires_artifacts: inners.iter().any(|b| b.capability().requires_artifacts),
+            deterministic: inners.iter().all(|b| b.capability().deterministic),
+        }
+    }
+
+    fn execute(
+        &mut self,
+        sm: &ScheduledMatrix,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<(), BackendError> {
+        check_shapes(sm, b, c, n)?;
+        self.last_stats = None;
+        let fp = fingerprint(sm);
+        match self.cache.iter().position(|(cached, _)| *cached == fp) {
+            Some(0) => {}
+            Some(i) => {
+                // MRU: bubble the hit to the front.
+                let entry = self.cache.remove(i);
+                self.cache.insert(0, entry);
+            }
+            None => {
+                let coo = reconstruct_coo(sm);
+                let sharded = ShardedMatrix::build(&coo, self.shards, sm.p, sm.k0, sm.d);
+                self.cache.insert(0, (fp, sharded));
+                self.cache.truncate(CACHE_ENTRIES);
+            }
+        }
+        let sharded = &self.cache[0].1;
+        let stats = self
+            .executor
+            .execute(sharded, b, c, n, alpha, beta)
+            .map_err(|e| match e {
+                ShardError::Shape(s) => BackendError::Shape(s),
+                err @ ShardError::ShardFailed { .. } => BackendError::Execution(err.to_string()),
+            })?;
+        self.last_stats = Some(stats);
+        Ok(())
+    }
+
+    fn shard_stats(&self) -> Option<ShardRunStats> {
+        self.last_stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{self, FunctionalBackend};
+    use crate::prop;
+    use crate::sched::preprocess;
+    use crate::sparse::{gen, rng::Rng};
+
+    fn image(seed: u64) -> (crate::sparse::Coo, ScheduledMatrix) {
+        let mut rng = Rng::new(seed);
+        let coo = gen::power_law_rows(120, 90, 1_500, 1.0, &mut rng);
+        let sm = preprocess(&coo, 4, 32, 6);
+        (coo, sm)
+    }
+
+    #[test]
+    fn composite_matches_functional() {
+        let (coo, sm) = image(1);
+        let n = 5;
+        let mut rng = Rng::new(2);
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let mut want = c0.clone();
+        FunctionalBackend.execute(&sm, &b, &mut want, n, 2.0, -0.5).unwrap();
+        for s in [1usize, 3, 8] {
+            let mut be = ShardedBackend::from_spec(s, "native:1").unwrap();
+            let mut c = c0.clone();
+            be.execute(&sm, &b, &mut c, n, 2.0, -0.5).unwrap();
+            prop::assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
+            let stats = be.shard_stats().expect("stats after success");
+            assert_eq!(stats.shards, s);
+        }
+    }
+
+    #[test]
+    fn cache_keeps_multiple_images_mru_first() {
+        let (coo, sm) = image(3);
+        let (_, sm2) = image(4);
+        let mut be = ShardedBackend::from_spec(2, "functional").unwrap();
+        let n = 2;
+        let b = vec![1.0f32; coo.k * n];
+        let mut c = vec![0.0f32; coo.m * n];
+        be.execute(&sm, &b, &mut c, n, 1.0, 0.0).unwrap();
+        assert_eq!(be.cache.len(), 1);
+        let fp1 = be.cache[0].0;
+        be.execute(&sm, &b, &mut c, n, 1.0, 0.0).unwrap();
+        assert_eq!(be.cache.len(), 1, "repeat must hit, not append");
+        // A second image is cached alongside the first (multi-model
+        // serving must not thrash), and becomes the MRU entry.
+        let b2 = vec![1.0f32; sm2.k * n];
+        let mut c2 = vec![0.0f32; sm2.m * n];
+        be.execute(&sm2, &b2, &mut c2, n, 1.0, 0.0).unwrap();
+        assert_eq!(be.cache.len(), 2);
+        assert_ne!(be.cache[0].0, fp1, "new image must be MRU");
+        // Re-running the first image bubbles it back to the front without
+        // evicting the second.
+        be.execute(&sm, &b, &mut c, n, 1.0, 0.0).unwrap();
+        assert_eq!(be.cache.len(), 2);
+        assert_eq!(be.cache[0].0, fp1);
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        let be = backend::create("sharded:3:native:1").unwrap();
+        assert_eq!(be.name(), "sharded");
+        assert!(be.capability().threads >= 3);
+        let send = backend::create_send("sharded:2:functional").unwrap();
+        assert_eq!(send.name(), "sharded");
+    }
+
+    #[test]
+    fn fingerprints_differ_across_images() {
+        let (_, a) = image(5);
+        let (_, b) = image(6);
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+        assert_eq!(fingerprint(&a), fingerprint(&a.clone()));
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_window_boundaries() {
+        // Same encoded words, different Q: a non-zero at global col 3
+        // (window 0) vs col 11 (window 1, local col 3 under k0 = 8)
+        // produces identical slot words whose meaning differs only through
+        // the pointer list. The fingerprint must tell them apart or the
+        // cache would silently serve the wrong matrix.
+        use crate::sparse::Coo;
+        let a = Coo::new(1, 16, vec![0], vec![3], vec![2.5]).unwrap();
+        let b = Coo::new(1, 16, vec![0], vec![11], vec![2.5]).unwrap();
+        let ia = preprocess(&a, 1, 8, 1);
+        let ib = preprocess(&b, 1, 8, 1);
+        assert_eq!(ia.streams[0].encoded, ib.streams[0].encoded);
+        assert_ne!(ia.streams[0].q, ib.streams[0].q);
+        assert_ne!(fingerprint(&ia), fingerprint(&ib));
+    }
+}

@@ -1,0 +1,329 @@
+//! Parallel shard execution: one inner [`SpmmBackend`] instance per shard,
+//! all shards running concurrently, row-disjoint C blocks gathered back.
+//!
+//! Each shard stands in for one accelerator card of a pool: it receives the
+//! full B (broadcast), computes its own rows of C into a private block, and
+//! the host scatters the blocks back — exact, because the shard plan
+//! partitions rows. The scoped-thread fan-out mirrors the deployment the
+//! ROADMAP aims at (S independent accelerators), so per-shard wall-clock
+//! latencies in [`ShardRunStats`] are the real makespan decomposition.
+
+use std::time::Instant;
+
+use super::{ShardError, ShardRunStats, ShardedMatrix};
+use crate::backend::{self, BackendError, SpmmBackend};
+
+/// Executes a [`ShardedMatrix`] over a pool of inner backends (one per
+/// shard, so shards never serialize behind a shared engine).
+pub struct ShardExecutor {
+    inners: Vec<Box<dyn SpmmBackend + Send>>,
+    /// Per-shard C gather blocks, grow-only across calls (hot-path
+    /// allocation stays zero after warm-up, matching the native engine's
+    /// scratch discipline).
+    locals: Vec<Vec<f32>>,
+}
+
+impl std::fmt::Debug for ShardExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ShardExecutor({} x ", self.inners.len())?;
+        match self.inners.first() {
+            Some(b) => write!(f, "{})", b.name()),
+            None => write!(f, "none)"),
+        }
+    }
+}
+
+impl ShardExecutor {
+    /// Build `s` inner backends from a registry spec (`"native"`,
+    /// `"native:2"`, `"functional"`, ...). A bare auto-threaded spec is
+    /// first divided by `s` through [`backend::apply_thread_budget`] so the
+    /// pool as a whole never oversubscribes the machine. Nested `"sharded"`
+    /// inners are refused.
+    pub fn from_spec(inner_spec: &str, s: usize) -> Result<ShardExecutor, BackendError> {
+        if s == 0 {
+            return Err(BackendError::InvalidSpec("shard count must be >= 1".into()));
+        }
+        if inner_spec == "sharded" || inner_spec.starts_with("sharded:") {
+            return Err(BackendError::InvalidSpec(
+                "sharded cannot nest inside sharded".into(),
+            ));
+        }
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let spec = backend::apply_thread_budget(inner_spec, (cores / s).max(1));
+        let inners = (0..s)
+            .map(|_| backend::create_send(&spec))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(ShardExecutor { inners, locals: Vec::new() })
+    }
+
+    /// Build from explicit backends (tests, heterogeneous pools).
+    pub fn from_backends(inners: Vec<Box<dyn SpmmBackend + Send>>) -> ShardExecutor {
+        ShardExecutor { inners, locals: Vec::new() }
+    }
+
+    /// Number of shards this executor can run (= inner backend count).
+    pub fn num_shards(&self) -> usize {
+        self.inners.len()
+    }
+
+    /// The inner backends (capability inspection).
+    pub fn backends(&self) -> &[Box<dyn SpmmBackend + Send>] {
+        &self.inners
+    }
+
+    /// Execute `C = alpha * A @ B + beta * C` across all shards in
+    /// parallel. On success C holds every row; on failure C is untouched
+    /// and the error names the failing shard.
+    pub fn execute(
+        &mut self,
+        sm: &ShardedMatrix,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<ShardRunStats, ShardError> {
+        if self.inners.len() != sm.shards.len() {
+            return Err(ShardError::Shape(format!(
+                "executor has {} backends but the matrix has {} shards",
+                self.inners.len(),
+                sm.shards.len()
+            )));
+        }
+        if b.len() != sm.k * n {
+            return Err(ShardError::Shape(format!(
+                "B has {} elements, expected K*N = {}",
+                b.len(),
+                sm.k * n
+            )));
+        }
+        if c.len() != sm.m * n {
+            return Err(ShardError::Shape(format!(
+                "C has {} elements, expected M*N = {}",
+                c.len(),
+                sm.m * n
+            )));
+        }
+
+        // Gather: seed each shard's private C block with its global rows
+        // (the beta * C_in term lives in the block). Blocks are grow-only
+        // executor scratch; every element is overwritten by the gather, so
+        // stale contents from earlier calls cannot leak.
+        if self.locals.len() < sm.shards.len() {
+            self.locals.resize_with(sm.shards.len(), Vec::new);
+        }
+        for (shard, buf) in sm.shards.iter().zip(self.locals.iter_mut()) {
+            let need = shard.global_rows.len() * n;
+            if buf.len() < need {
+                buf.resize(need, 0.0);
+            }
+            for (li, &gr) in shard.global_rows.iter().enumerate() {
+                let gr = gr as usize;
+                buf[li * n..(li + 1) * n].copy_from_slice(&c[gr * n..(gr + 1) * n]);
+            }
+        }
+
+        // Parallel shard execution: one scoped thread per shard, each
+        // driving its own inner backend on its own C block.
+        let inners = &mut self.inners;
+        let locals = &mut self.locals;
+        let outcomes: Vec<(Result<(), BackendError>, std::time::Duration)> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = inners
+                    .iter_mut()
+                    .zip(sm.shards.iter())
+                    .zip(locals.iter_mut())
+                    .map(|((inner, shard), buf)| {
+                        scope.spawn(move || {
+                            let need = shard.global_rows.len() * n;
+                            let t0 = Instant::now();
+                            let r =
+                                inner.execute(&shard.image, b, &mut buf[..need], n, alpha, beta);
+                            (r, t0.elapsed())
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard worker panicked"))
+                    .collect()
+            });
+
+        for (shard, (outcome, _)) in outcomes.iter().enumerate() {
+            if let Err(e) = outcome {
+                return Err(ShardError::ShardFailed {
+                    shard,
+                    shards: outcomes.len(),
+                    message: e.to_string(),
+                });
+            }
+        }
+
+        // Scatter: every shard succeeded, so write the row-disjoint blocks
+        // back (partial results never reach C).
+        for (shard, buf) in sm.shards.iter().zip(self.locals.iter()) {
+            for (li, &gr) in shard.global_rows.iter().enumerate() {
+                let gr = gr as usize;
+                c[gr * n..(gr + 1) * n].copy_from_slice(&buf[li * n..(li + 1) * n]);
+            }
+        }
+
+        Ok(ShardRunStats {
+            shards: sm.shards.len(),
+            shard_nnz: sm.shards.iter().map(|s| s.image.nnz).collect(),
+            shard_latency: outcomes.into_iter().map(|(_, d)| d).collect(),
+            imbalance: sm.imbalance(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{Capability, FunctionalBackend};
+    use crate::prop;
+    use crate::sched::ScheduledMatrix;
+    use crate::sparse::{gen, rng::Rng, Coo};
+
+    /// Fails every execution — for partial-failure surfacing tests.
+    struct FailingBackend;
+
+    impl SpmmBackend for FailingBackend {
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+
+        fn capability(&self) -> Capability {
+            Capability {
+                threads: 1,
+                simd_lanes: 1,
+                requires_artifacts: false,
+                deterministic: true,
+            }
+        }
+
+        fn execute(
+            &mut self,
+            _image: &ScheduledMatrix,
+            _b: &[f32],
+            _c: &mut [f32],
+            _n: usize,
+            _alpha: f32,
+            _beta: f32,
+        ) -> Result<(), BackendError> {
+            Err(BackendError::Execution("injected shard failure".into()))
+        }
+    }
+
+    fn functional_pool(s: usize) -> ShardExecutor {
+        ShardExecutor::from_backends(
+            (0..s).map(|_| Box::new(FunctionalBackend) as Box<dyn SpmmBackend + Send>).collect(),
+        )
+    }
+
+    #[test]
+    fn sharded_matches_reference() {
+        let mut rng = Rng::new(1);
+        let coo = gen::power_law_rows(150, 80, 2_000, 1.1, &mut rng);
+        let n = 7;
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let mut want = c0.clone();
+        coo.spmm_reference(&b, &mut want, n, 1.5, -0.5);
+        for s in [1usize, 2, 5] {
+            let sharded = ShardedMatrix::build(&coo, s, 4, 16, 6);
+            let mut exec = functional_pool(s);
+            let mut c = c0.clone();
+            let stats = exec.execute(&sharded, &b, &mut c, n, 1.5, -0.5).unwrap();
+            assert_eq!(stats.shards, s);
+            assert_eq!(stats.shard_nnz.iter().sum::<usize>(), coo.nnz());
+            prop::assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn failing_shard_is_identified_and_c_untouched() {
+        let mut rng = Rng::new(2);
+        let coo = gen::random_uniform(40, 30, 0.2, &mut rng);
+        let sharded = ShardedMatrix::build(&coo, 3, 2, 8, 4);
+        let mut exec = ShardExecutor::from_backends(vec![
+            Box::new(FunctionalBackend),
+            Box::new(FailingBackend),
+            Box::new(FunctionalBackend),
+        ]);
+        let n = 3;
+        let b = vec![1.0f32; coo.k * n];
+        let c0: Vec<f32> = (0..coo.m * n).map(|i| i as f32).collect();
+        let mut c = c0.clone();
+        let err = exec.execute(&sharded, &b, &mut c, n, 1.0, 0.0).unwrap_err();
+        match err {
+            ShardError::ShardFailed { shard, shards, ref message } => {
+                assert_eq!(shard, 1);
+                assert_eq!(shards, 3);
+                assert!(message.contains("injected shard failure"), "{message}");
+            }
+            other => panic!("wrong error: {other:?}"),
+        }
+        // No partial scatter: C must be exactly the input.
+        assert_eq!(c, c0);
+    }
+
+    #[test]
+    fn shape_mismatches_are_rejected() {
+        let coo = Coo::empty(4, 4);
+        let sharded = ShardedMatrix::build(&coo, 2, 2, 4, 2);
+        let mut exec = functional_pool(2);
+        let mut c = vec![0f32; 8];
+        // Wrong B length.
+        assert!(matches!(
+            exec.execute(&sharded, &[0.0; 7], &mut c, 2, 1.0, 0.0),
+            Err(ShardError::Shape(_))
+        ));
+        // Executor / shard count mismatch.
+        let mut small = functional_pool(3);
+        assert!(matches!(
+            small.execute(&sharded, &[0.0; 8], &mut c, 2, 1.0, 0.0),
+            Err(ShardError::Shape(_))
+        ));
+    }
+
+    #[test]
+    fn empty_rows_still_get_beta_scaling() {
+        // Rows with no non-zeros must still compute C = beta * C.
+        let coo = Coo::new(6, 4, vec![2], vec![1], vec![3.0]).unwrap();
+        let sharded = ShardedMatrix::build(&coo, 3, 2, 4, 2);
+        let mut exec = functional_pool(3);
+        let n = 2;
+        let b = vec![1.0f32; coo.k * n];
+        let mut c = vec![2.0f32; coo.m * n];
+        exec.execute(&sharded, &b, &mut c, n, 1.0, 0.5).unwrap();
+        for (i, &v) in c.iter().enumerate() {
+            let row = i / n;
+            let want = if row == 2 { 3.0 + 1.0 } else { 1.0 };
+            assert!((v - want).abs() < 1e-6, "row {row}: {v} != {want}");
+        }
+    }
+
+    #[test]
+    fn from_spec_builds_budgeted_pool() {
+        let exec = ShardExecutor::from_spec("native", 4).unwrap();
+        assert_eq!(exec.num_shards(), 4);
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let per_shard = (cores / 4).max(1);
+        for be in exec.backends() {
+            assert_eq!(be.capability().threads, per_shard);
+        }
+    }
+
+    #[test]
+    fn from_spec_rejects_nesting_and_zero_shards() {
+        assert!(matches!(
+            ShardExecutor::from_spec("sharded:2:native", 2),
+            Err(BackendError::InvalidSpec(_))
+        ));
+        assert!(matches!(
+            ShardExecutor::from_spec("native", 0),
+            Err(BackendError::InvalidSpec(_))
+        ));
+    }
+}

@@ -1,0 +1,132 @@
+//! Sharded multi-accelerator execution: one SpMM spread across a *pool*
+//! of accelerator instances.
+//!
+//! Sextans balances load **within** one accelerator by interleaving rows
+//! `r mod P` across PEs (§3.3); Serpens (arXiv:2111.12555) scales the same
+//! idea **across** HBM channels. This module lifts it one level further:
+//! the A matrix is row-partitioned into `S` nnz-balanced shards (greedy
+//! bin-packing over row non-zero counts — [`plan_shards`]), each shard is
+//! preprocessed into its own [`crate::sched::ScheduledMatrix`], and all
+//! shards execute in parallel over any registered
+//! [`crate::backend::SpmmBackend`], one instance per shard. Because the
+//! shards partition the rows of C, the gather step is a disjoint row
+//! scatter — exact, no reduction needed (B is broadcast to every shard,
+//! exactly how a multi-card deployment would replicate the dense operand).
+//!
+//! Three entry points:
+//!
+//! * [`ShardedMatrix`] + [`ShardExecutor`] — the direct API: build once,
+//!   execute many times, get [`ShardRunStats`] per run.
+//! * The `"sharded:<S>:<inner>"` composite backend
+//!   ([`ShardedBackend`], registered in [`crate::backend::registry`]) — any
+//!   consumer of the registry (the HFlex accelerator, the serving
+//!   coordinator) gains sharding by spec string alone.
+//! * `--shards S` on `sextans run` / `sextans serve`.
+//!
+//! Failure of any shard surfaces as [`ShardError::ShardFailed`] naming the
+//! shard — never as silently zeroed rows of C.
+
+pub mod backend;
+pub mod executor;
+pub mod plan;
+
+pub use backend::ShardedBackend;
+pub use executor::ShardExecutor;
+pub use plan::{plan_shards, reconstruct_coo, Shard, ShardPlan, ShardedMatrix};
+
+use std::time::Duration;
+
+/// Why a sharded execution was refused or failed.
+#[derive(Debug)]
+pub enum ShardError {
+    /// B/C buffer shapes (or executor/shard-count pairing) are inconsistent.
+    Shape(String),
+    /// One shard's inner backend failed; the others' results are discarded
+    /// so a partial failure can never masquerade as zero rows.
+    ShardFailed {
+        /// Index of the failing shard (0-based).
+        shard: usize,
+        /// Total shard count.
+        shards: usize,
+        /// The inner backend's error message.
+        message: String,
+    },
+}
+
+impl std::fmt::Display for ShardError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardError::Shape(s) => write!(f, "shard shape mismatch: {s}"),
+            ShardError::ShardFailed { shard, shards, message } => {
+                write!(f, "shard {shard} of {shards} failed: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShardError {}
+
+/// Shard-level statistics from one sharded execution — the inter-shard
+/// analogue of the paper's per-PE load-balance metrics.
+#[derive(Clone, Debug)]
+pub struct ShardRunStats {
+    /// Number of shards executed.
+    pub shards: usize,
+    /// Real non-zeros per shard.
+    pub shard_nnz: Vec<usize>,
+    /// Wall-clock execution time per shard (parallel, so the slowest shard
+    /// is the makespan).
+    pub shard_latency: Vec<Duration>,
+    /// max-shard / mean-shard nnz ratio (1.0 = perfectly balanced).
+    pub imbalance: f64,
+}
+
+impl ShardRunStats {
+    /// The makespan: latency of the slowest shard.
+    pub fn slowest(&self) -> Duration {
+        self.shard_latency.iter().copied().max().unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_error_names_the_failing_shard() {
+        let e = ShardError::ShardFailed {
+            shard: 2,
+            shards: 4,
+            message: "execution failed: boom".into(),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("shard 2 of 4"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn run_stats_slowest_is_max() {
+        let stats = ShardRunStats {
+            shards: 3,
+            shard_nnz: vec![10, 20, 30],
+            shard_latency: vec![
+                Duration::from_millis(3),
+                Duration::from_millis(9),
+                Duration::from_millis(1),
+            ],
+            imbalance: 1.5,
+        };
+        assert_eq!(stats.slowest(), Duration::from_millis(9));
+    }
+
+    #[test]
+    fn empty_stats_slowest_is_zero() {
+        let stats = ShardRunStats {
+            shards: 0,
+            shard_nnz: vec![],
+            shard_latency: vec![],
+            imbalance: 1.0,
+        };
+        assert_eq!(stats.slowest(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,326 @@
+//! Shard planning: greedy nnz-balanced row partitioning, plus the
+//! preprocessed [`ShardedMatrix`] the executor consumes.
+//!
+//! The partitioning is the inter-accelerator analogue of the paper's Eq. 4
+//! `row mod P` PE interleave: where mod-P balances *statistically* (cheap
+//! enough for hardware), the host-side shard planner can afford an explicit
+//! greedy bin-packing (longest-processing-time order) over per-row non-zero
+//! counts, which bounds the heaviest shard at `mean + max_row_nnz` — tight
+//! even on power-law matrices. Empty rows carry no work but do occupy
+//! C-scratchpad capacity, so they are leveled across shards by row count.
+
+use std::cmp::Reverse;
+
+use crate::sched::partition::{global_col, global_row};
+use crate::sched::{decode, preprocess, ScheduledMatrix};
+use crate::sparse::Coo;
+
+/// A row-to-shard assignment with its load statistics.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Number of shards S.
+    pub shards: usize,
+    /// `assignment[row]` = shard owning that global row.
+    pub assignment: Vec<u32>,
+    /// Global rows of each shard, ascending.
+    pub shard_rows: Vec<Vec<u32>>,
+    /// Non-zeros per shard.
+    pub shard_nnz: Vec<usize>,
+}
+
+impl ShardPlan {
+    /// max-shard / mean-shard nnz ratio (1.0 = perfect balance; defined as
+    /// 1.0 for an empty matrix).
+    pub fn imbalance(&self) -> f64 {
+        let total: usize = self.shard_nnz.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / self.shards as f64;
+        let max = *self.shard_nnz.iter().max().unwrap() as f64;
+        max / mean
+    }
+}
+
+/// Partition the rows of `coo` into `s` nnz-balanced shards.
+///
+/// Non-empty rows are placed in longest-processing-time order (heaviest row
+/// first, onto the currently lightest shard); empty rows are then leveled
+/// across shards by row count so every shard's C block (and scratchpad
+/// footprint) stays comparable. Deterministic: ties break on the lowest row
+/// index and lowest shard index.
+pub fn plan_shards(coo: &Coo, s: usize) -> ShardPlan {
+    assert!(s > 0, "shard count must be >= 1");
+    let counts = coo.row_counts();
+    let mut assignment = vec![0u32; coo.m];
+    let mut shard_nnz = vec![0usize; s];
+    let mut shard_rows_len = vec![0usize; s];
+
+    let mut heavy: Vec<usize> = (0..coo.m).filter(|&r| counts[r] > 0).collect();
+    heavy.sort_by_key(|&r| (Reverse(counts[r]), r));
+    for &r in &heavy {
+        // O(S) min scan; S is small (a pool of accelerators, not of PEs).
+        let dest = (0..s)
+            .min_by_key(|&i| (shard_nnz[i], shard_rows_len[i]))
+            .unwrap();
+        assignment[r] = dest as u32;
+        shard_nnz[dest] += counts[r];
+        shard_rows_len[dest] += 1;
+    }
+    for (r, &cnt) in counts.iter().enumerate() {
+        if cnt > 0 {
+            continue;
+        }
+        let dest = (0..s).min_by_key(|&i| shard_rows_len[i]).unwrap();
+        assignment[r] = dest as u32;
+        shard_rows_len[dest] += 1;
+    }
+
+    let mut shard_rows: Vec<Vec<u32>> =
+        shard_rows_len.iter().map(|&l| Vec::with_capacity(l)).collect();
+    for (r, &sh) in assignment.iter().enumerate() {
+        shard_rows[sh as usize].push(r as u32);
+    }
+    ShardPlan { shards: s, assignment, shard_rows, shard_nnz }
+}
+
+/// One shard: the global rows it owns (ascending — local row `i` of the
+/// shard is global row `global_rows[i]`) and its preprocessed image.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    /// Ascending global row indices of this shard.
+    pub global_rows: Vec<u32>,
+    /// The shard's scheduled image (local row space, full K).
+    pub image: ScheduledMatrix,
+}
+
+/// A matrix row-partitioned into S shards, each preprocessed for the same
+/// accelerator configuration (P, K0, D) — ready for [`super::ShardExecutor`].
+/// The plan's row lists are moved into the shards (not duplicated); the
+/// plan-level load statistic survives as [`ShardedMatrix::imbalance`].
+#[derive(Clone, Debug)]
+pub struct ShardedMatrix {
+    /// Total rows (M) across shards.
+    pub m: usize,
+    /// Columns (K) — every shard sees the full K (B is broadcast).
+    pub k: usize,
+    /// max-shard / mean-shard nnz ratio of the build-time plan.
+    imbalance: f64,
+    /// The preprocessed shards, one per planned shard.
+    pub shards: Vec<Shard>,
+}
+
+impl ShardedMatrix {
+    /// Plan + preprocess: partition `coo` into `s` shards and schedule each
+    /// for a (p, k0, d) accelerator. Build-path cost, paid once per matrix.
+    pub fn build(coo: &Coo, s: usize, p: usize, k0: usize, d: usize) -> ShardedMatrix {
+        let mut plan = plan_shards(coo, s);
+        let imbalance = plan.imbalance();
+        // Local row index of each global row = its rank within the shard
+        // (shard_rows is ascending, so ranks follow enumeration order).
+        let mut local_of = vec![0u32; coo.m];
+        for rows in &plan.shard_rows {
+            for (local, &gr) in rows.iter().enumerate() {
+                local_of[gr as usize] = local as u32;
+            }
+        }
+        let mut rows_v: Vec<Vec<u32>> = vec![Vec::new(); s];
+        let mut cols_v: Vec<Vec<u32>> = vec![Vec::new(); s];
+        let mut vals_v: Vec<Vec<f32>> = vec![Vec::new(); s];
+        for i in 0..coo.nnz() {
+            let gr = coo.rows[i] as usize;
+            let sh = plan.assignment[gr] as usize;
+            rows_v[sh].push(local_of[gr]);
+            cols_v[sh].push(coo.cols[i]);
+            vals_v[sh].push(coo.vals[i]);
+        }
+        let shards = (0..s)
+            .map(|sh| {
+                // Move (not clone) the plan's row list into the shard — one
+                // source of truth for the row mapping.
+                let global_rows = std::mem::take(&mut plan.shard_rows[sh]);
+                let local = Coo {
+                    m: global_rows.len(),
+                    k: coo.k,
+                    rows: std::mem::take(&mut rows_v[sh]),
+                    cols: std::mem::take(&mut cols_v[sh]),
+                    vals: std::mem::take(&mut vals_v[sh]),
+                };
+                Shard { global_rows, image: preprocess(&local, p, k0, d) }
+            })
+            .collect();
+        ShardedMatrix { m: coo.m, k: coo.k, imbalance, shards }
+    }
+
+    /// Number of shards.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total real non-zeros across shards.
+    pub fn nnz(&self) -> usize {
+        self.shards.iter().map(|s| s.image.nnz).sum()
+    }
+
+    /// max-shard / mean-shard nnz imbalance ratio of the build-time plan.
+    pub fn imbalance(&self) -> f64 {
+        self.imbalance
+    }
+}
+
+/// Invert preprocessing: recover the COO triplets from a scheduled image
+/// (bubbles — and explicit zeros, which are arithmetically inert — are
+/// dropped). This is what lets the `"sharded:<S>:<inner>"` composite
+/// backend re-shard an image it receives through the [`crate::backend`]
+/// contract, which hands over preprocessed images rather than raw COO.
+pub fn reconstruct_coo(sm: &ScheduledMatrix) -> Coo {
+    let mut rows = Vec::with_capacity(sm.nnz);
+    let mut cols = Vec::with_capacity(sm.nnz);
+    let mut vals = Vec::with_capacity(sm.nnz);
+    for (pe, stream) in sm.streams.iter().enumerate() {
+        for j in 0..sm.num_windows {
+            for &word in &stream.encoded[stream.q.window_range(j)] {
+                let nz = decode(word);
+                if nz.val == 0.0 {
+                    continue;
+                }
+                rows.push(global_row(&nz, pe, sm.p) as u32);
+                cols.push(global_col(&nz, j, sm.k0) as u32);
+                vals.push(nz.val);
+            }
+        }
+    }
+    Coo { m: sm.m, k: sm.k, rows, cols, vals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::sparse::{gen, rng::Rng};
+
+    #[test]
+    fn plan_partitions_every_row_exactly_once() {
+        let mut rng = Rng::new(1);
+        let coo = gen::random_uniform(100, 50, 0.1, &mut rng);
+        for s in [1usize, 2, 3, 7] {
+            let plan = plan_shards(&coo, s);
+            let total_rows: usize = plan.shard_rows.iter().map(|r| r.len()).sum();
+            assert_eq!(total_rows, coo.m);
+            for (sh, rows) in plan.shard_rows.iter().enumerate() {
+                for &r in rows {
+                    assert_eq!(plan.assignment[r as usize] as usize, sh);
+                }
+                assert!(rows.windows(2).all(|w| w[0] < w[1]), "rows must ascend");
+            }
+            let total_nnz: usize = plan.shard_nnz.iter().sum();
+            assert_eq!(total_nnz, coo.nnz());
+        }
+    }
+
+    #[test]
+    fn greedy_balances_power_law_within_bound() {
+        // The acceptance bar: <= 1.25 imbalance on power-law row skew.
+        let mut rng = Rng::new(2);
+        let coo = gen::power_law_rows(2048, 1024, 32_768, 1.1, &mut rng);
+        for s in [2usize, 4, 8] {
+            let plan = plan_shards(&coo, s);
+            let imb = plan.imbalance();
+            assert!(imb <= 1.25, "S={s}: imbalance {imb}");
+        }
+    }
+
+    #[test]
+    fn empty_rows_are_leveled_by_row_count() {
+        // 1 non-empty row, 99 empty ones, 4 shards: every shard ends up
+        // with 25 rows even though one holds all the non-zeros.
+        let coo = Coo::new(100, 10, vec![7, 7, 7], vec![0, 1, 2], vec![1.0; 3]).unwrap();
+        let plan = plan_shards(&coo, 4);
+        for rows in &plan.shard_rows {
+            assert_eq!(rows.len(), 25);
+        }
+        assert_eq!(plan.shard_nnz.iter().sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn single_shard_is_identity_partition() {
+        let mut rng = Rng::new(3);
+        let coo = gen::random_uniform(40, 40, 0.2, &mut rng);
+        let plan = plan_shards(&coo, 1);
+        assert_eq!(plan.shard_rows[0], (0..40u32).collect::<Vec<_>>());
+        assert_eq!(plan.shard_nnz[0], coo.nnz());
+        assert!((plan.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_shards_than_rows_leaves_some_empty() {
+        let coo = Coo::new(3, 4, vec![0, 1, 2], vec![0, 1, 2], vec![1.0; 3]).unwrap();
+        let sharded = ShardedMatrix::build(&coo, 8, 2, 4, 2);
+        assert_eq!(sharded.num_shards(), 8);
+        assert_eq!(sharded.nnz(), 3);
+        let total_rows: usize = sharded.shards.iter().map(|s| s.global_rows.len()).sum();
+        assert_eq!(total_rows, 3);
+        // Empty shards have empty images but stay executable (m = 0).
+        assert!(sharded.shards.iter().any(|s| s.image.m == 0));
+    }
+
+    #[test]
+    fn empty_matrix_plans_cleanly() {
+        let coo = Coo::empty(10, 10);
+        let plan = plan_shards(&coo, 3);
+        assert!((plan.imbalance() - 1.0).abs() < 1e-12);
+        let sharded = ShardedMatrix::build(&coo, 3, 2, 4, 2);
+        assert_eq!(sharded.nnz(), 0);
+        assert_eq!(sharded.m, 10);
+    }
+
+    #[test]
+    fn build_covers_every_nonzero_exactly_once() {
+        prop::check("sharded_build_covers", 0x5A4D, 24, |rng| {
+            let m = 1 + rng.index(120);
+            let k = 1 + rng.index(80);
+            let coo = gen::random_uniform(m, k, rng.f64() * 0.2, rng);
+            let s = 1 + rng.index(8);
+            let sharded = ShardedMatrix::build(&coo, s, 1 + rng.index(4), 1 + rng.index(32), 1 + rng.index(8));
+            if sharded.nnz() != coo.nnz() {
+                return Err(format!("{} of {} nnz covered", sharded.nnz(), coo.nnz()));
+            }
+            // Round-trip each shard's entries to global coordinates and
+            // compare with the input as multisets.
+            let mut got: Vec<(u32, u32, u32)> = Vec::new();
+            for shard in &sharded.shards {
+                let local = reconstruct_coo(&shard.image);
+                for i in 0..local.nnz() {
+                    let gr = shard.global_rows[local.rows[i] as usize];
+                    got.push((gr, local.cols[i], local.vals[i].to_bits()));
+                }
+            }
+            got.sort_unstable();
+            let mut want: Vec<(u32, u32, u32)> = (0..coo.nnz())
+                .map(|i| (coo.rows[i], coo.cols[i], coo.vals[i].to_bits()))
+                .collect();
+            want.sort_unstable();
+            if got != want {
+                return Err("shard round-trip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reconstruct_inverts_preprocess() {
+        let mut rng = Rng::new(9);
+        let coo = gen::power_law_rows(90, 70, 900, 1.0, &mut rng);
+        let sm = preprocess(&coo, 4, 16, 6);
+        let rt = reconstruct_coo(&sm);
+        assert_eq!((rt.m, rt.k, rt.nnz()), (coo.m, coo.k, coo.nnz()));
+        let key = |c: &Coo| {
+            let mut v: Vec<(u32, u32, u32)> = (0..c.nnz())
+                .map(|i| (c.rows[i], c.cols[i], c.vals[i].to_bits()))
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(key(&rt), key(&coo));
+    }
+}

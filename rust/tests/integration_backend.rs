@@ -96,7 +96,10 @@ fn agreement_with_empty_rows_and_multi_window_matrix() {
 #[test]
 fn registry_constructs_all_backends_by_name() {
     let names: Vec<&str> = backend::registry().iter().map(|b| b.name).collect();
-    assert_eq!(names, ["native", "functional", "pjrt"]);
+    assert_eq!(
+        names,
+        ["native", "native-blocked", "functional", "pjrt", "sharded"]
+    );
     for name in names {
         assert_eq!(backend::create(name).unwrap().name(), name);
     }
@@ -153,6 +156,12 @@ fn server_refuses_unavailable_backend_at_startup() {
         return; // pjrt-enabled build: nothing to assert here
     }
     let err = Server::start_backend(1, BatchPolicy::default(), "pjrt")
+        .map(|_| ())
+        .unwrap_err();
+    assert!(matches!(err, BackendError::Unavailable(_)), "{err}");
+    // Wrapping the unavailable engine in a sharded composite must not
+    // smuggle it past the startup gate.
+    let err = Server::start_backend(1, BatchPolicy::default(), "sharded:2:pjrt")
         .map(|_| ())
         .unwrap_err();
     assert!(matches!(err, BackendError::Unavailable(_)), "{err}");

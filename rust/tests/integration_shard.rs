@@ -1,0 +1,176 @@
+//! Integration: the sharded multi-accelerator execution subsystem.
+//!
+//! The acceptance contract — `sharded:<S>:native` == `functional` == CSR
+//! reference for random COO matrices (empty rows, skewed rows, multi-window
+//! K) across alpha/beta and S ∈ {1, 2, 3, 8}; greedy shard planning stays
+//! within a 1.25 nnz-imbalance bound on power-law matrices; and the serving
+//! coordinator carries shard metrics end to end.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sextans::backend::{self, FunctionalBackend, SpmmBackend};
+use sextans::coordinator::{BatchPolicy, Server, SpmmRequest};
+use sextans::prop::{self, assert_allclose};
+use sextans::sched::preprocess;
+use sextans::shard::{plan_shards, ShardedMatrix};
+use sextans::sparse::{gen, rng::Rng, Coo, Csr};
+
+/// Run one backend over a fresh copy of `c0` and return the result.
+fn run(
+    backend: &mut dyn SpmmBackend,
+    sm: &sextans::sched::ScheduledMatrix,
+    b: &[f32],
+    c0: &[f32],
+    n: usize,
+    alpha: f32,
+    beta: f32,
+) -> Vec<f32> {
+    let mut c = c0.to_vec();
+    backend.execute(sm, b, &mut c, n, alpha, beta).unwrap();
+    c
+}
+
+#[test]
+fn sharded_equals_functional_equals_csr_reference_property() {
+    prop::check("sharded_three_way_agreement", 0x5AD0, 12, |rng| {
+        // Small K0 so most matrices span several B windows; the skewed
+        // generator half the time gives heavy-tailed rows; zero-density
+        // draws give fully empty rows.
+        let m = 1 + rng.index(90);
+        let k = 1 + rng.index(120);
+        let n = 1 + rng.index(10);
+        let a = if rng.chance(0.5) {
+            gen::random_uniform(m, k, rng.f64() * 0.25, rng)
+        } else {
+            gen::power_law_rows(m, k, 1 + rng.index(4 * m), 1.1, rng)
+        };
+        let p = 1 + rng.index(8);
+        let k0 = 1 + rng.index(24);
+        let d = 1 + rng.index(10);
+        let sm = preprocess(&a, p, k0, d);
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let csr = Csr::from_coo(&a);
+        for s in [1usize, 2, 3, 8] {
+            let mut sharded = backend::create(&format!("sharded:{s}:native:1")).unwrap();
+            for (alpha, beta) in [(0.0f32, 1.0f32), (1.0, 0.0), (2.5, 2.5), (1.0, -0.5)] {
+                let got = run(&mut *sharded, &sm, &b, &c0, n, alpha, beta);
+                let functional = run(&mut FunctionalBackend, &sm, &b, &c0, n, alpha, beta);
+                assert_allclose(&got, &functional, 2e-4, 2e-4).map_err(|e| {
+                    format!("sharded:{s} vs functional at alpha={alpha}, beta={beta}: {e}")
+                })?;
+                let mut reference = c0.clone();
+                csr.spmm_reference(&b, &mut reference, n, alpha, beta);
+                assert_allclose(&got, &reference, 2e-4, 2e-4).map_err(|e| {
+                    format!("sharded:{s} vs CSR at alpha={alpha}, beta={beta}: {e}")
+                })?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn greedy_planning_beats_imbalance_bound_on_power_law() {
+    // Acceptance bar: max-shard / mean-shard nnz <= 1.25 on power-law rows.
+    let mut rng = Rng::new(0xBA1);
+    for (m, k, nnz, zipf) in
+        [(2048usize, 1024usize, 32_768usize, 1.1f64), (1024, 2048, 16_384, 1.3), (4096, 512, 65_536, 1.0)]
+    {
+        let a = gen::power_law_rows(m, k, nnz, zipf, &mut rng);
+        for s in [2usize, 3, 4, 8] {
+            let plan = plan_shards(&a, s);
+            let imb = plan.imbalance();
+            assert!(
+                imb <= 1.25,
+                "m={m} nnz={nnz} zipf={zipf} S={s}: imbalance {imb:.3}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_matrix_partitions_rows_and_nnz_exactly() {
+    let mut rng = Rng::new(0x51AB);
+    let a = gen::power_law_rows(300, 200, 5_000, 1.2, &mut rng);
+    let sharded = ShardedMatrix::build(&a, 4, 8, 32, 8);
+    assert_eq!(sharded.num_shards(), 4);
+    assert_eq!(sharded.nnz(), a.nnz());
+    let mut seen = vec![false; a.m];
+    for shard in &sharded.shards {
+        for &gr in &shard.global_rows {
+            assert!(!seen[gr as usize], "row {gr} in two shards");
+            seen[gr as usize] = true;
+        }
+        assert_eq!(shard.image.m, shard.global_rows.len());
+        assert_eq!(shard.image.k, a.k);
+    }
+    assert!(seen.into_iter().all(|x| x), "every row must land in a shard");
+}
+
+#[test]
+fn coordinator_serves_sharded_backend_with_metrics() {
+    let mut rng = Rng::new(0xC0DE);
+    let coo = gen::power_law_rows(200, 150, 4_000, 1.1, &mut rng);
+    let image = Arc::new(preprocess(&coo, 8, 32, 10));
+    let server = Server::start_backend(
+        2,
+        BatchPolicy { max_columns: 64, window: Duration::from_millis(2) },
+        "sharded:4:native:1",
+    )
+    .unwrap();
+    let handle = server.register(image);
+    let n = 6;
+    let mut rxs = Vec::new();
+    let mut wants = Vec::new();
+    for _ in 0..6 {
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let mut want = c0.clone();
+        coo.spmm_reference(&b, &mut want, n, 1.25, -0.75);
+        wants.push(want);
+        rxs.push(server.submit(SpmmRequest {
+            image: handle.clone(),
+            b,
+            c: c0,
+            n,
+            alpha: 1.25,
+            beta: -0.75,
+        }));
+    }
+    for (rx, want) in rxs.into_iter().zip(wants) {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_allclose(&resp.c, &want, 2e-4, 2e-4).unwrap();
+        assert_eq!(resp.timing.backend, "sharded");
+    }
+    let summary = server.shutdown();
+    assert_eq!(summary.requests, 6);
+    assert!(summary.shard_execs >= 1, "shard metrics must flow into the summary");
+    assert!((summary.mean_shards - 4.0).abs() < 1e-12);
+    assert!(summary.mean_shard_imbalance >= 1.0);
+    assert!(summary.max_shard_imbalance >= summary.mean_shard_imbalance);
+    assert_eq!(summary.backends, vec![("sharded", 6)]);
+}
+
+#[test]
+fn sharded_handles_degenerate_shapes() {
+    // More shards than rows, a single row, and an empty matrix — through
+    // the composite backend.
+    for (m, k, nnz_rows) in [(3usize, 5usize, vec![0u32, 1, 2]), (1, 4, vec![0]), (5, 5, vec![])] {
+        let cols: Vec<u32> = nnz_rows.iter().map(|&r| r % k as u32).collect();
+        let vals = vec![2.0f32; nnz_rows.len()];
+        let a = Coo::new(m, k, nnz_rows, cols, vals).unwrap();
+        let sm = preprocess(&a, 2, 4, 3);
+        let n = 3;
+        let b = vec![1.0f32; k * n];
+        let c0 = vec![1.0f32; m * n];
+        let mut want = c0.clone();
+        a.spmm_reference(&b, &mut want, n, 1.0, 2.0);
+        let mut be = backend::create("sharded:8:native:1").unwrap();
+        let mut c = c0;
+        be.execute(&sm, &b, &mut c, n, 1.0, 2.0).unwrap();
+        assert_allclose(&c, &want, 1e-5, 1e-5).unwrap();
+    }
+}
