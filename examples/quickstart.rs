@@ -30,13 +30,14 @@ fn main() -> anyhow::Result<()> {
         ("tall skinny", 50_000, 512, 0.01, 8),
     ] {
         let a = gen::random_uniform(m, k, density, &mut rng);
-        // Host preprocessing (once per matrix): partition + OoO schedule.
-        let image = accel.preprocess(&a)?;
+        // Load (once per matrix): partition + OoO schedule + make the
+        // image resident on the execution backend.
+        let loaded = accel.load(&a)?;
 
         let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
         let mut c: Vec<f32> = vec![0.0; m * n];
         let report = accel.invoke(SpmmProblem {
-            a: &image,
+            a: &loaded,
             b: &b,
             c: &mut c,
             n,
@@ -51,11 +52,13 @@ fn main() -> anyhow::Result<()> {
             k,
             a.nnz()
         );
+        let image = loaded.image();
         println!(
-            "  schedule: II = {:.4}, {} bubbles / {} slots",
+            "  schedule: II = {:.4}, {} bubbles / {} slots; loaded in {:.2} ms",
             image.effective_ii(),
             image.total_bubbles(),
-            image.total_slots()
+            image.total_slots(),
+            loaded.prepare_cost().wall.as_secs_f64() * 1e3
         );
         println!(
             "  simulated: {:.3} ms, {:.2} GFLOP/s (roof {:.1})",

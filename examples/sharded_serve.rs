@@ -94,6 +94,16 @@ fn main() {
         s.max_shard_imbalance,
         s.mean_shard_makespan_s * 1e3
     );
+    println!(
+        "prepare: {} shard-pool builds ({} cache hits, hit rate {:.0}%), mean {:.2} ms, \
+         {:.2} MiB resident",
+        s.prepares,
+        s.prepare_hits,
+        s.prepare_hit_rate * 100.0,
+        s.mean_prepare_s * 1e3,
+        s.prepared_bytes as f64 / (1024.0 * 1024.0)
+    );
     assert!(s.shard_execs > 0, "sharded backend must report shard stats");
+    assert!(s.prepares <= 2, "one registered matrix: at most one prepare per worker");
     println!("\nsharded_serve OK");
 }

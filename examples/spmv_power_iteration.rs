@@ -51,7 +51,9 @@ fn main() -> anyhow::Result<()> {
     println!("transition matrix: {}x{}, nnz {}", p.m, p.k, p.nnz());
 
     let accel = HFlexAccelerator::synthesize(AcceleratorConfig::sextans_u280());
-    let image = accel.preprocess(&p)?;
+    // Load once: every iteration below reuses the same resident handle —
+    // the prepare/execute contract is exactly the power-iteration shape.
+    let image = accel.load(&p)?;
 
     // x: n_nodes x lanes block of rank vectors, uniformly initialized with
     // per-lane perturbations.

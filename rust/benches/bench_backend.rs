@@ -1,14 +1,18 @@
 //! Backend benchmarks: native engine (1/2/4/8 threads) vs the functional
 //! simulator on synthetic catalog shapes, in GFLOP/s of served SpMM.
 //!
-//! The acceptance bar for the native engine is to beat the functional
-//! backend at >= 4 threads on every shape (it should already win at 1
-//! thread thanks to the 8-lane chunked inner loop).
+//! All engines run through the prepare/execute contract: one prepared
+//! handle per (engine, matrix), timed over repeated executes — the
+//! steady-state serving shape. The acceptance bar for the native engine is
+//! to beat the functional backend at >= 4 threads on every shape (it
+//! should already win at 1 thread thanks to the 8-lane chunked inner
+//! loop).
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use sextans::arch::simulator::problem_flops;
-use sextans::backend::{FunctionalBackend, NativeBackend, SpmmBackend};
+use sextans::backend::{FunctionalBackend, NativeBackend, PreparedSpmm, SpmmBackend};
 use sextans::bench_util::{bench, black_box, section};
 use sextans::sched::preprocess;
 use sextans::sparse::catalog::{catalog, crystm03_like, MatrixSpec, Scale};
@@ -35,7 +39,7 @@ fn main() {
     for spec in shapes {
         let coo = spec.build();
         // Paper-shaped image: 64 PEs, K0 = 4096, D = 10.
-        let sm = preprocess(&coo, 64, 4096, 10);
+        let sm = Arc::new(preprocess(&coo, 64, 4096, 10));
         let flops = problem_flops(coo.nnz(), coo.m, n) as f64;
         let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
         let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
@@ -49,17 +53,17 @@ fn main() {
             coo.nnz()
         ));
 
-        let mut functional = FunctionalBackend;
+        let mut functional = FunctionalBackend.prepare(Arc::clone(&sm)).unwrap();
         let r = bench("backend/functional", 1, 6, Duration::from_millis(400), || {
             c.copy_from_slice(&c0);
-            functional.execute(&sm, &b, &mut c, n, 1.0, 0.5).unwrap();
+            functional.execute(&b, &mut c, n, 1.0, 0.5).unwrap();
             black_box(&c);
         });
         let base_gflops = r.throughput(flops) / 1e9;
         println!("    -> {base_gflops:.2} GFLOP/s");
 
         for threads in [1usize, 2, 4, 8] {
-            let mut native = NativeBackend::new(threads);
+            let mut native = NativeBackend::new(threads).prepare(Arc::clone(&sm)).unwrap();
             let r = bench(
                 &format!("backend/native:{threads}"),
                 1,
@@ -67,7 +71,7 @@ fn main() {
                 Duration::from_millis(400),
                 || {
                     c.copy_from_slice(&c0);
-                    native.execute(&sm, &b, &mut c, n, 1.0, 0.5).unwrap();
+                    native.execute(&b, &mut c, n, 1.0, 0.5).unwrap();
                     black_box(&c);
                 },
             );

@@ -1,0 +1,103 @@
+//! Prepare amortization curve: prepare-once-execute-k vs the old per-call
+//! path (prepare + execute on every request, which is what the stateless
+//! `execute` contract forced — for the sharded composite that meant a full
+//! re-shard per call) for k ∈ {1, 4, 16, 64} at S ∈ {1, 4}.
+//!
+//! Reports the one-time prepare cost (ms, resident MiB), the steady-state
+//! execute GFLOP/s of the resident handle, and the end-to-end speedup of
+//! the prepared path over per-call at each k — the curve should start near
+//! the prepare/execute cost ratio at k = 1 and asymptote to 1x of
+//! steady-state as k grows.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use sextans::arch::simulator::problem_flops;
+use sextans::backend::{self, PreparedSpmm, SpmmBackend};
+use sextans::bench_util::{black_box, section};
+use sextans::sched::preprocess;
+use sextans::sparse::{gen, rng::Rng};
+
+fn main() {
+    let mut rng = Rng::new(0xA3);
+    // A serving-shaped matrix: power-law rows, moderate size so the
+    // per-call path (which re-prepares every request) stays benchable.
+    let coo = gen::power_law_rows(4096, 4096, 200_000, 1.1, &mut rng);
+    let (p, k0, d) = (64usize, 4096usize, 10usize);
+    let n = 32usize;
+    let sm = Arc::new(preprocess(&coo, p, k0, d));
+    let flops = problem_flops(coo.nnz(), coo.m, n) as f64;
+    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+    let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+    let mut c = c0.clone();
+
+    section(&format!(
+        "prepare amortization ({}x{}, nnz {}, N={n})",
+        coo.m,
+        coo.k,
+        coo.nnz()
+    ));
+
+    for s in [1usize, 4] {
+        // sharded:1 still pays the full plan/re-shard on the old per-call
+        // path, so the S=1 row isolates the contract change itself.
+        let spec = format!("sharded:{s}:native");
+        let factory = backend::create(&spec).expect("spec");
+
+        // One-time prepare cost of the resident handle.
+        let t0 = Instant::now();
+        let mut handle = factory.prepare(Arc::clone(&sm)).expect("prepare");
+        let prepare_s = t0.elapsed().as_secs_f64();
+        let cost = handle.prepare_cost();
+        // Warm up scratch, then measure steady-state execute.
+        handle.execute(&b, &mut c, n, 1.0, 0.5).unwrap();
+        const STEADY_ITERS: usize = 5;
+        let t0 = Instant::now();
+        for _ in 0..STEADY_ITERS {
+            c.copy_from_slice(&c0);
+            handle.execute(&b, &mut c, n, 1.0, 0.5).unwrap();
+            black_box(&c);
+        }
+        let exec_s = t0.elapsed().as_secs_f64() / STEADY_ITERS as f64;
+        println!(
+            "{spec}: prepare {:.2} ms ({:.2} MiB resident), steady-state execute \
+             {:.2} ms = {:.2} GFLOP/s",
+            prepare_s * 1e3,
+            cost.resident_bytes as f64 / (1024.0 * 1024.0),
+            exec_s * 1e3,
+            flops / exec_s / 1e9
+        );
+
+        for k in [1usize, 4, 16, 64] {
+            // Old per-call path: every request pays prepare + execute
+            // (execute_once), exactly what the stateless contract did.
+            let t0 = Instant::now();
+            for _ in 0..k {
+                c.copy_from_slice(&c0);
+                factory.execute_once(&sm, &b, &mut c, n, 1.0, 0.5).unwrap();
+                black_box(&c);
+            }
+            let percall_s = t0.elapsed().as_secs_f64();
+
+            // New path: the handle is already resident; k pure executes.
+            let t0 = Instant::now();
+            for _ in 0..k {
+                c.copy_from_slice(&c0);
+                handle.execute(&b, &mut c, n, 1.0, 0.5).unwrap();
+                black_box(&c);
+            }
+            let prepared_s = t0.elapsed().as_secs_f64();
+            // Amortized view charges the one-time prepare against the run.
+            let amortized_s = prepare_s + prepared_s;
+            println!(
+                "  k={k:>3}: per-call {:>8.2} ms | prepared {:>8.2} ms \
+                 (+{:.2} ms prepare, amortized {:.2}x faster) | steady {:.2} GFLOP/s",
+                percall_s * 1e3,
+                prepared_s * 1e3,
+                prepare_s * 1e3,
+                percall_s / amortized_s,
+                (k as f64 * flops) / prepared_s / 1e9
+            );
+        }
+    }
+}

@@ -1,12 +1,17 @@
-//! Shard benchmarks: GFLOP/s of the sharded executor at S = 1/2/4/8 shards
-//! vs the unsharded native backend, on a skewed (power-law rows) matrix —
-//! the workload where nnz-balanced sharding has to prove itself. Also
-//! reports the greedy planner's shard imbalance ratio per S.
+//! Shard benchmarks: GFLOP/s of the resident shard pool at S = 1/2/4/8
+//! shards vs the unsharded native backend, on a skewed (power-law rows)
+//! matrix — the workload where nnz-balanced sharding has to prove itself.
+//! Also reports the greedy planner's shard imbalance ratio per S.
+//!
+//! Pools are prepared once per S ([`ShardExecutor::prepare`]); the timed
+//! loop is pure execute, i.e. the steady-state of the prepare/execute
+//! contract.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use sextans::arch::simulator::problem_flops;
-use sextans::backend::{NativeBackend, SpmmBackend};
+use sextans::backend::{NativeBackend, PreparedSpmm, SpmmBackend};
 use sextans::bench_util::{bench, black_box, section};
 use sextans::sched::preprocess;
 use sextans::shard::{ShardExecutor, ShardedMatrix};
@@ -31,12 +36,12 @@ fn main() {
         coo.nnz()
     ));
 
-    // Baseline: the unsharded native backend, auto-threaded.
-    let sm = preprocess(&coo, p, k0, d);
-    let mut native = NativeBackend::new(0);
+    // Baseline: the unsharded native backend, auto-threaded, prepared once.
+    let sm = Arc::new(preprocess(&coo, p, k0, d));
+    let mut native = NativeBackend::new(0).prepare(Arc::clone(&sm)).expect("native prepare");
     let r = bench("shard/unsharded-native", 1, 6, Duration::from_millis(400), || {
         c.copy_from_slice(&c0);
-        native.execute(&sm, &b, &mut c, n, 1.0, 0.5).unwrap();
+        native.execute(&b, &mut c, n, 1.0, 0.5).unwrap();
         black_box(&c);
     });
     let base_gflops = r.throughput(flops) / 1e9;
@@ -44,7 +49,8 @@ fn main() {
 
     for s in [1usize, 2, 4, 8] {
         let sharded = ShardedMatrix::build(&coo, s, p, k0, d);
-        let mut exec = ShardExecutor::from_spec("native", s).expect("native pool");
+        let mut exec = ShardExecutor::prepare(&sharded, "native").expect("native pool");
+        let pcost = exec.prepare_cost();
         let r = bench(
             &format!("shard/sharded:{s}:native"),
             1,
@@ -52,15 +58,18 @@ fn main() {
             Duration::from_millis(400),
             || {
                 c.copy_from_slice(&c0);
-                exec.execute(&sharded, &b, &mut c, n, 1.0, 0.5).unwrap();
+                exec.execute(&b, &mut c, n, 1.0, 0.5).unwrap();
                 black_box(&c);
             },
         );
         let gflops = r.throughput(flops) / 1e9;
         println!(
-            "    -> {gflops:.2} GFLOP/s ({:.2}x vs unsharded), nnz imbalance {:.3}",
+            "    -> {gflops:.2} GFLOP/s ({:.2}x vs unsharded), nnz imbalance {:.3}, \
+             pool prepare {:.1} ms / {:.1} MiB resident",
             gflops / base_gflops,
-            sharded.imbalance()
+            sharded.imbalance(),
+            pcost.wall.as_secs_f64() * 1e3,
+            pcost.resident_bytes as f64 / (1024.0 * 1024.0)
         );
     }
 }

@@ -1,8 +1,16 @@
 //! The functional-simulator backend: [`crate::arch::functional::execute`]
-//! behind the [`SpmmBackend`] trait — serial, dependency-free, and the
+//! behind the prepare/execute contract — serial, dependency-free, and the
 //! reference semantics every other backend is tested against.
+//!
+//! The prepared handle keeps nothing resident beyond the shared image
+//! (`resident_bytes = 0`): the simulator consumes the encoded streams
+//! directly, so prepare is effectively free. That makes this backend the
+//! baseline for amortization measurements too.
 
-use super::{check_shapes, BackendError, Capability, SpmmBackend};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::{check_shapes, BackendError, Capability, PrepareCost, PreparedSpmm, SpmmBackend};
 use crate::arch::functional;
 use crate::sched::ScheduledMatrix;
 
@@ -23,17 +31,53 @@ impl SpmmBackend for FunctionalBackend {
         }
     }
 
+    fn prepare(&self, image: Arc<ScheduledMatrix>) -> Result<Box<dyn PreparedSpmm>, BackendError> {
+        Ok(Box::new(PreparedFunctional::new(image)))
+    }
+
+    fn prepare_send(
+        &self,
+        image: Arc<ScheduledMatrix>,
+    ) -> Result<Box<dyn PreparedSpmm + Send>, BackendError> {
+        Ok(Box::new(PreparedFunctional::new(image)))
+    }
+}
+
+/// A matrix "resident" on the functional simulator — just the shared image.
+pub struct PreparedFunctional {
+    image: Arc<ScheduledMatrix>,
+    cost: PrepareCost,
+}
+
+impl PreparedFunctional {
+    fn new(image: Arc<ScheduledMatrix>) -> PreparedFunctional {
+        let t0 = Instant::now();
+        PreparedFunctional {
+            image,
+            cost: PrepareCost { wall: t0.elapsed(), resident_bytes: 0 },
+        }
+    }
+}
+
+impl PreparedSpmm for PreparedFunctional {
+    fn backend_name(&self) -> &'static str {
+        "functional"
+    }
+
+    fn prepare_cost(&self) -> PrepareCost {
+        self.cost
+    }
+
     fn execute(
         &mut self,
-        sm: &ScheduledMatrix,
         b: &[f32],
         c: &mut [f32],
         n: usize,
         alpha: f32,
         beta: f32,
     ) -> Result<(), BackendError> {
-        check_shapes(sm, b, c, n)?;
-        functional::execute(sm, b, c, n, alpha, beta);
+        check_shapes(&self.image, b, c, n)?;
+        functional::execute(&self.image, b, c, n, alpha, beta);
         Ok(())
     }
 }
@@ -49,25 +93,32 @@ mod tests {
     fn adapter_matches_direct_call() {
         let mut rng = Rng::new(1);
         let a = gen::random_uniform(30, 25, 0.2, &mut rng);
-        let sm = preprocess(&a, 4, 8, 5);
+        let sm = Arc::new(preprocess(&a, 4, 8, 5));
         let n = 3;
         let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
         let c0: Vec<f32> = (0..a.m * n).map(|_| rng.normal()).collect();
         let mut got = c0.clone();
-        FunctionalBackend.execute(&sm, &b, &mut got, n, 1.5, 0.5).unwrap();
+        let mut handle = FunctionalBackend.prepare(Arc::clone(&sm)).unwrap();
+        handle.execute(&b, &mut got, n, 1.5, 0.5).unwrap();
         let mut want = c0;
         functional::execute(&sm, &b, &mut want, n, 1.5, 0.5);
         assert_eq!(got, want);
+        assert_eq!(handle.backend_name(), "functional");
+        assert_eq!(handle.prepare_cost().resident_bytes, 0);
     }
 
     #[test]
     fn rejects_bad_shapes_instead_of_panicking() {
         let mut rng = Rng::new(2);
         let a = gen::random_uniform(8, 8, 0.3, &mut rng);
-        let sm = preprocess(&a, 2, 4, 3);
+        let sm = Arc::new(preprocess(&a, 2, 4, 3));
         let b = vec![0.0; 5];
         let mut c = vec![0.0; 16];
-        let err = FunctionalBackend.execute(&sm, &b, &mut c, 2, 1.0, 0.0).unwrap_err();
+        let err = FunctionalBackend
+            .prepare(sm)
+            .unwrap()
+            .execute(&b, &mut c, 2, 1.0, 0.0)
+            .unwrap_err();
         assert!(matches!(err, BackendError::Shape(_)));
         prop::assert_allclose(&c, &vec![0.0; 16], 0.0, 0.0).unwrap();
     }

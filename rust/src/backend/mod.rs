@@ -1,21 +1,30 @@
-//! Pluggable SpMM execution backends — the HFlex contract (§3.4) made
-//! portable: a preprocessed [`ScheduledMatrix`] image is itself the
-//! executable format, and anything that can consume it (a native CPU
-//! engine, the functional simulator, the PJRT/XLA kernel path, one day a
-//! real bitstream) is interchangeable behind [`SpmmBackend`].
+//! Pluggable SpMM execution backends with a **two-phase prepare/execute
+//! contract** — the HFlex promise (§3.4) made explicit in the API:
+//! preprocess A once, then run arbitrarily many SpMMs against it.
 //!
-//! * [`native::NativeBackend`] — multi-threaded host engine, PE-parallel
-//!   across the image's P streams with an 8-lane (N0-shaped) inner loop.
-//!   The default: correct, fast, and dependency-free.
-//! * [`functional::FunctionalBackend`] — the cycle-exact functional
-//!   simulator ([`crate::arch::functional`]); the always-available
-//!   reference semantics.
-//! * [`pjrt::PjrtBackend`] — adapter over [`crate::runtime::Engine`]
-//!   (AOT Pallas kernels via PJRT); requires the `pjrt` cargo feature and
-//!   compiled artifacts, and reports unavailability otherwise.
-//! * [`crate::shard::ShardedBackend`] — composite: row-shards the matrix
-//!   across S parallel instances of any inner backend
-//!   (`"sharded:<S>:<inner>"`, e.g. `"sharded:4:native"`).
+//! A [`SpmmBackend`] is a stateless *factory* selected by registry name; it
+//! does no work per request. All per-matrix state lives in the
+//! [`PreparedSpmm`] handle returned by [`SpmmBackend::prepare`]:
+//!
+//! * [`native::NativeBackend`] — multi-threaded host engine. Its handle
+//!   pre-decodes every PE stream (bubbles dropped, window-local columns
+//!   resolved to global) and pre-sizes the per-worker C-scratch tiles, so
+//!   steady-state execution is pure axpy + Comp-C.
+//! * [`functional::FunctionalBackend`] — the functional simulator
+//!   ([`crate::arch::functional`]); the always-available reference
+//!   semantics.
+//! * [`pjrt::PjrtBackend`] — adapter over [`crate::runtime::Engine`] (AOT
+//!   Pallas kernels via PJRT). The engine loads and the kernel variant is
+//!   selected at *prepare* time — the handle is where device residency
+//!   lives. Needs the `pjrt` + `xla` cargo features and compiled artifacts.
+//! * [`crate::shard::ShardedBackend`] — composite (`"sharded:<S>:<inner>"`):
+//!   its handle owns the shard plan, one preprocessed image per shard, and
+//!   one *prepared inner handle* per shard. Sharding happens exactly once
+//!   per prepared matrix — never per request.
+//!
+//! One-shot callers use the provided [`SpmmBackend::execute_once`] shim;
+//! everything that serves more than one request against the same A (the
+//! coordinator, the HFlex accelerator, the benches) holds a handle.
 //!
 //! Backends are selected by name through [`create`] (`"native"`,
 //! `"native:4"`, `"native-blocked"`, `"functional"`, `"pjrt"`,
@@ -32,9 +41,18 @@ pub use functional::FunctionalBackend;
 pub use native::NativeBackend;
 pub use pjrt::PjrtBackend;
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use crate::sched::ScheduledMatrix;
 
-/// Why a backend refused or failed an execution.
+/// True when the real PJRT engine is compiled in (`pjrt` + `xla` features;
+/// see `runtime`). With `pjrt` alone the engine is the API-identical stub,
+/// so that feature combination stays buildable in artifact-free
+/// environments (CI exercises it).
+pub const PJRT_REAL: bool = cfg!(all(feature = "pjrt", feature = "xla"));
+
+/// Why a backend refused or failed a prepare or an execution.
 #[derive(Debug, PartialEq)]
 pub enum BackendError {
     /// No backend registered under the requested name.
@@ -81,23 +99,38 @@ pub struct Capability {
     pub deterministic: bool,
 }
 
-/// One SpMM execution engine consuming scheduled images.
+/// What one [`SpmmBackend::prepare`] cost and what the handle keeps
+/// resident — the amortization report serving stacks aggregate (prepare
+/// once, execute many).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrepareCost {
+    /// Wall-clock time spent preparing the matrix.
+    pub wall: Duration,
+    /// Bytes of per-matrix state the handle keeps resident beyond the
+    /// shared [`ScheduledMatrix`] (decoded streams, shard images, scratch,
+    /// device buffers).
+    pub resident_bytes: u64,
+}
+
+/// A matrix-resident execution handle: one preprocessed A, arbitrarily many
+/// SpMMs. Handles own all per-matrix state (scratch, shard plans, device
+/// buffers), so nothing is rebuilt between calls — N and the scalars may
+/// change freely per call.
 ///
-/// Implementations are constructed per worker thread (see
-/// [`crate::coordinator::Server::start`]); the trait deliberately has no
-/// `Send` bound because PJRT client handles are thread-local.
-pub trait SpmmBackend {
-    /// Stable registry name (also recorded in serving metrics).
-    fn name(&self) -> &'static str;
+/// Handles are not required to be `Send` (the real PJRT engine's client is
+/// thread-local); use [`SpmmBackend::prepare_send`] when the handle must
+/// cross threads.
+pub trait PreparedSpmm {
+    /// Registry name of the engine that prepared this handle.
+    fn backend_name(&self) -> &'static str;
 
-    /// Capability / identity report.
-    fn capability(&self) -> Capability;
+    /// What prepare cost and what stays resident.
+    fn prepare_cost(&self) -> PrepareCost;
 
-    /// Execute `C = alpha * A @ B + beta * C` where A is the scheduled
-    /// image, `b` is row-major `k x n` and `c` is row-major `m x n`.
+    /// Execute `C = alpha * A @ B + beta * C` against the resident matrix,
+    /// where `b` is row-major `k x n` and `c` is row-major `m x n`.
     fn execute(
         &mut self,
-        image: &ScheduledMatrix,
         b: &[f32],
         c: &mut [f32],
         n: usize,
@@ -105,22 +138,103 @@ pub trait SpmmBackend {
         beta: f32,
     ) -> Result<(), BackendError>;
 
-    /// Shard-level statistics of the most recent successful `execute`, for
-    /// backends that shard (see [`crate::shard`]). Non-sharding engines
-    /// keep the default `None`; the serving coordinator polls this after
-    /// every job to feed shard metrics into its summary.
+    /// Execute several (B, C) pairs against the same resident matrix, all
+    /// with the same `n`, `alpha`, `beta` — the multi-B serving shape (one
+    /// sparse A, a stream of dense operands). The default runs the pairs
+    /// sequentially; engines may override to amortize further.
+    fn execute_batch(
+        &mut self,
+        jobs: &mut [(&[f32], &mut [f32])],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<(), BackendError> {
+        for (b, c) in jobs.iter_mut() {
+            self.execute(b, c, n, alpha, beta)?;
+        }
+        Ok(())
+    }
+
+    /// Shard-level statistics of the most recent successful [`execute`]
+    /// (see [`crate::shard`]). Non-sharding engines keep the default
+    /// `None`; the serving coordinator polls this after every job to feed
+    /// shard metrics into its summary.
+    ///
+    /// [`execute`]: PreparedSpmm::execute
     fn shard_stats(&self) -> Option<crate::shard::ShardRunStats> {
         None
     }
 }
 
-impl std::fmt::Debug for dyn SpmmBackend {
+impl std::fmt::Debug for dyn PreparedSpmm {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "SpmmBackend({})", self.name())
+        write!(f, "PreparedSpmm({})", self.backend_name())
     }
 }
 
-impl std::fmt::Debug for dyn SpmmBackend + Send {
+impl std::fmt::Debug for dyn PreparedSpmm + Send {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PreparedSpmm({})", self.backend_name())
+    }
+}
+
+/// One SpMM execution engine: a stateless, shareable factory that turns
+/// preprocessed images into matrix-resident [`PreparedSpmm`] handles.
+///
+/// Factories are `Send + Sync` (they hold configuration, never client
+/// handles or scratch); per-thread affinity concerns live entirely in the
+/// handles, which is why [`prepare`] and [`prepare_send`] are distinct.
+///
+/// [`prepare`]: SpmmBackend::prepare
+/// [`prepare_send`]: SpmmBackend::prepare_send
+pub trait SpmmBackend: Send + Sync {
+    /// Stable registry name (also recorded in serving metrics).
+    fn name(&self) -> &'static str;
+
+    /// Capability / identity report.
+    fn capability(&self) -> Capability;
+
+    /// Build a matrix-resident handle for `image`. This is the build path:
+    /// everything per-matrix (stream decoding, shard planning, engine
+    /// loading, scratch sizing) happens here, exactly once.
+    fn prepare(&self, image: Arc<ScheduledMatrix>) -> Result<Box<dyn PreparedSpmm>, BackendError>;
+
+    /// Like [`prepare`], but the handle may cross threads. Engines whose
+    /// handles are thread-local (the real PJRT engine) keep this default
+    /// refusal — prepare inside the executing thread instead (the serving
+    /// coordinator's workers do).
+    ///
+    /// [`prepare`]: SpmmBackend::prepare
+    fn prepare_send(
+        &self,
+        image: Arc<ScheduledMatrix>,
+    ) -> Result<Box<dyn PreparedSpmm + Send>, BackendError> {
+        let _ = image;
+        Err(BackendError::Unavailable(format!(
+            "backend {:?} prepares thread-local handles; call prepare() inside the \
+             executing thread",
+            self.name()
+        )))
+    }
+
+    /// One-shot shim: prepare + execute + drop, for callers that genuinely
+    /// run a single SpMM per matrix. Anything serving repeated requests
+    /// should hold the [`PreparedSpmm`] handle instead — that is the whole
+    /// point of the two-phase contract.
+    fn execute_once(
+        &self,
+        image: &Arc<ScheduledMatrix>,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<(), BackendError> {
+        self.prepare(Arc::clone(image))?.execute(b, c, n, alpha, beta)
+    }
+}
+
+impl std::fmt::Debug for dyn SpmmBackend {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "SpmmBackend({})", self.name())
     }
@@ -183,8 +297,9 @@ pub fn registry() -> Vec<BackendInfo> {
         },
         BackendInfo {
             name: "pjrt",
-            available: cfg!(feature = "pjrt"),
-            description: "AOT Pallas kernels via PJRT/XLA (needs `pjrt` feature + artifacts)",
+            available: PJRT_REAL,
+            description: "AOT Pallas kernels via PJRT/XLA (needs `pjrt`+`xla` features + \
+                          artifacts)",
         },
         BackendInfo {
             name: "sharded",
@@ -290,8 +405,11 @@ pub fn apply_thread_budget(spec: &str, budget: usize) -> String {
     }
 }
 
-/// Construct a backend from a spec string: `"native"`, `"native:<threads>"`,
-/// `"native-blocked"`, `"functional"`, `"pjrt"`, or `"sharded:<S>:<inner>"`.
+/// Construct a backend factory from a spec string: `"native"`,
+/// `"native:<threads>"`, `"native-blocked"`, `"functional"`, `"pjrt"`, or
+/// `"sharded:<S>:<inner>"`. Factories are cheap, stateless, and
+/// `Send + Sync`; the expensive per-matrix work happens in
+/// [`SpmmBackend::prepare`].
 pub fn create(spec: &str) -> Result<Box<dyn SpmmBackend>, BackendError> {
     let (name, arg) = split_spec(spec);
     match name {
@@ -315,59 +433,25 @@ pub fn create(spec: &str) -> Result<Box<dyn SpmmBackend>, BackendError> {
     }
 }
 
-/// Like [`create`], but returns a `Send` backend, suitable for owning
-/// inside thread-mobile structures ([`crate::hflex::HFlexAccelerator`]).
-/// With the `pjrt` feature enabled the PJRT engine's handles are
-/// thread-local, so `"pjrt"` is refused here — construct it inside its
-/// executing thread instead (the coordinator's worker factories do). The
-/// same restriction applies to `"sharded:<S>:pjrt"`, whose inner engines
-/// are built through this function.
-pub fn create_send(spec: &str) -> Result<Box<dyn SpmmBackend + Send>, BackendError> {
-    let (name, arg) = split_spec(spec);
-    match name {
-        "native" => Ok(Box::new(NativeBackend::new(parse_native_threads(arg)?))),
-        "native-blocked" => {
-            Ok(Box::new(NativeBackend::blocked(parse_native_threads(arg)?)))
-        }
-        "functional" => {
-            no_arg("functional", arg)?;
-            Ok(Box::new(FunctionalBackend))
-        }
-        "pjrt" => {
-            no_arg("pjrt", arg)?;
-            create_send_pjrt()
-        }
-        "sharded" => {
-            let (s, inner) = parse_sharded(arg)?;
-            Ok(Box::new(crate::shard::ShardedBackend::from_spec(s, &inner)?))
-        }
-        other => Err(BackendError::Unknown(other.to_string())),
-    }
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn create_send_pjrt() -> Result<Box<dyn SpmmBackend + Send>, BackendError> {
-    // Without the feature the adapter holds no client handles and is Send.
-    Ok(Box::new(PjrtBackend::new()))
-}
-
-#[cfg(feature = "pjrt")]
-fn create_send_pjrt() -> Result<Box<dyn SpmmBackend + Send>, BackendError> {
-    Err(BackendError::Unavailable(
-        "pjrt engine handles are thread-local; construct PjrtBackend inside its executing \
-         thread (Server::start_backend does)"
-            .into(),
-    ))
+/// Prepare a `Send` handle directly from a spec string — the one-call path
+/// for thread-mobile consumers ([`crate::hflex::HFlexAccelerator::load`]).
+pub fn prepare_send(
+    spec: &str,
+    image: Arc<ScheduledMatrix>,
+) -> Result<Box<dyn PreparedSpmm + Send>, BackendError> {
+    create(spec)?.prepare_send(image)
 }
 
 /// The default backend: native, auto-sized thread pool.
-pub fn default_backend() -> Box<dyn SpmmBackend + Send> {
+pub fn default_backend() -> Box<dyn SpmmBackend> {
     Box::new(NativeBackend::new(0))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sched::preprocess;
+    use crate::sparse::{gen, rng::Rng, Coo};
 
     #[test]
     fn registry_lists_all_backends() {
@@ -376,10 +460,11 @@ mod tests {
             names,
             vec!["native", "native-blocked", "functional", "pjrt", "sharded"]
         );
-        // Everything but pjrt executes in every build; pjrt tracks the feature.
+        // Everything but pjrt executes in every build; pjrt tracks the
+        // real-engine feature pair.
         for info in registry() {
             if info.name == "pjrt" {
-                assert_eq!(info.available, cfg!(feature = "pjrt"));
+                assert_eq!(info.available, PJRT_REAL);
             } else {
                 assert!(info.available, "{} must be available", info.name);
             }
@@ -443,20 +528,16 @@ mod tests {
         // Malformed / unknown specs defer to create()'s richer errors.
         assert!(check_available("sharded:x:native").is_ok());
         assert!(check_available("warpdrive").is_ok());
-        let pjrt_ok = cfg!(feature = "pjrt");
-        assert_eq!(check_available("pjrt").is_ok(), pjrt_ok);
-        assert_eq!(check_available("sharded:2:pjrt").is_ok(), pjrt_ok);
+        assert_eq!(check_available("pjrt").is_ok(), PJRT_REAL);
+        assert_eq!(check_available("sharded:2:pjrt").is_ok(), PJRT_REAL);
     }
 
     #[test]
-    fn create_send_constructs_send_backends() {
-        assert_eq!(create_send("native:2").unwrap().name(), "native");
-        assert_eq!(create_send("functional").unwrap().name(), "functional");
-        if cfg!(feature = "pjrt") {
-            assert!(matches!(create_send("pjrt"), Err(BackendError::Unavailable(_))));
-        } else {
-            assert_eq!(create_send("pjrt").unwrap().name(), "pjrt");
-        }
+    fn backends_are_send_sync_factories() {
+        fn assert_send_sync<T: Send + Sync + ?Sized>() {}
+        assert_send_sync::<dyn SpmmBackend>();
+        let b: Box<dyn SpmmBackend> = create("native:2").unwrap();
+        assert_eq!(b.name(), "native");
     }
 
     #[test]
@@ -465,5 +546,76 @@ mod tests {
         assert_eq!(b.name(), "native");
         assert!(b.capability().threads >= 1);
         assert_eq!(b.capability().simd_lanes, 8);
+    }
+
+    #[test]
+    fn execute_once_shim_matches_prepared_path() {
+        let mut rng = Rng::new(77);
+        let a = gen::random_uniform(40, 30, 0.2, &mut rng);
+        let image = Arc::new(preprocess(&a, 4, 16, 5));
+        let n = 3;
+        let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..a.m * n).map(|_| rng.normal()).collect();
+        let be = create("native:2").unwrap();
+        let mut once = c0.clone();
+        be.execute_once(&image, &b, &mut once, n, 1.5, -0.5).unwrap();
+        let mut handle = be.prepare(Arc::clone(&image)).unwrap();
+        let mut held = c0.clone();
+        handle.execute(&b, &mut held, n, 1.5, -0.5).unwrap();
+        assert_eq!(once, held);
+    }
+
+    #[test]
+    fn prepare_send_default_refuses_with_name() {
+        // A backend that keeps the default prepare_send must name itself in
+        // the refusal.
+        struct Local;
+        impl SpmmBackend for Local {
+            fn name(&self) -> &'static str {
+                "local-only"
+            }
+            fn capability(&self) -> Capability {
+                Capability {
+                    threads: 1,
+                    simd_lanes: 1,
+                    requires_artifacts: false,
+                    deterministic: true,
+                }
+            }
+            fn prepare(
+                &self,
+                _image: Arc<ScheduledMatrix>,
+            ) -> Result<Box<dyn PreparedSpmm>, BackendError> {
+                Err(BackendError::Unavailable("stub".into()))
+            }
+        }
+        let sm = Arc::new(preprocess(&Coo::empty(2, 2), 1, 2, 1));
+        let err = Local.prepare_send(sm).unwrap_err();
+        assert!(err.to_string().contains("local-only"), "{err}");
+    }
+
+    #[test]
+    fn execute_batch_default_loops_pairs() {
+        let mut rng = Rng::new(5);
+        let a = gen::random_uniform(24, 20, 0.25, &mut rng);
+        let image = Arc::new(preprocess(&a, 2, 8, 4));
+        let n = 2;
+        let mut handle = create("native:1").unwrap().prepare(Arc::clone(&image)).unwrap();
+        let bs: Vec<Vec<f32>> =
+            (0..3).map(|_| (0..a.k * n).map(|_| rng.normal()).collect()).collect();
+        let mut cs: Vec<Vec<f32>> = (0..3).map(|_| vec![0.0; a.m * n]).collect();
+        {
+            let mut jobs: Vec<(&[f32], &mut [f32])> = bs
+                .iter()
+                .map(|b| b.as_slice())
+                .zip(cs.iter_mut().map(|c| c.as_mut_slice()))
+                .collect();
+            handle.execute_batch(&mut jobs, n, 1.0, 0.0).unwrap();
+        }
+        for (b, c) in bs.iter().zip(&cs) {
+            let mut want = vec![0.0; a.m * n];
+            a.spmm_reference(b, &mut want, n, 1.0, 0.0);
+            crate::prop::assert_allclose(c, &want, 2e-4, 2e-4).unwrap();
+        }
     }
 }

@@ -1,34 +1,48 @@
-//! Native multi-threaded SpMM engine over scheduled images.
+//! Native multi-threaded SpMM engine over scheduled images, in two-phase
+//! prepare/execute form.
 //!
 //! The paper's hardware runs P PEs in parallel, each consuming its own
 //! scheduled slot stream and owning the output rows `r ≡ pe (mod P)` in its
 //! C scratchpad. That row partition is exactly what makes a host
-//! parallelization safe: this backend assigns the P streams round-robin to
-//! worker threads (`std::thread::scope`), each worker accumulates a PE's
-//! rows into a reusable private scratch tile (the scratchpad analogue), and
-//! the Comp-C stage writes each PE's disjoint row set straight into C.
+//! parallelization safe: the prepared handle assigns the P streams
+//! round-robin to worker threads (`std::thread::scope`), each worker
+//! accumulates a PE's rows into a reusable private scratch tile (the
+//! scratchpad analogue), and the Comp-C stage writes each PE's disjoint row
+//! set straight into C.
+//!
+//! **Prepare** ([`SpmmBackend::prepare`]) decodes every PE stream once:
+//! bubbles are dropped, window-local columns are resolved to global B rows,
+//! and the result is stored as flat `(row, col, val)` triples in slot-issue
+//! order. Steady-state execution therefore never touches the 64-bit
+//! encoding again — it is pure axpy + Comp-C over pre-sized scratch, which
+//! is the point of the A-resident serving contract.
 //!
 //! Numerics are bit-identical to [`crate::arch::functional::execute`]: per
 //! output element, the accumulation order is the PE's slot issue order in
-//! both implementations, and the final `alpha * C_AB + beta * C_in` is the
-//! same expression. The inner loop is chunked to [`LANES`] = 8 columns —
-//! the paper's N0 = 8 SIMD float lanes — which vectorizes cleanly without
-//! changing the per-element order of adds.
+//! both implementations (dropping bubbles removes only zero contributions),
+//! and the final `alpha * C_AB + beta * C_in` is the same expression. The
+//! inner loop is chunked to [`LANES`] = 8 columns — the paper's N0 = 8 SIMD
+//! float lanes — which vectorizes cleanly without changing the per-element
+//! order of adds.
 //!
 //! Hot-path allocation is zero after warm-up: each worker's scratch tile
-//! lives in the backend and only grows (never shrinks) across requests.
+//! lives in the handle and only grows (never shrinks) across requests; the
+//! blocked variant's tiles are fully pre-sized at prepare time.
 //!
 //! **Column blocking** ([`NativeBackend::blocked`], registry name
 //! `"native-blocked"`): for N well beyond [`COL_BLOCK`], the B window rows
 //! and C tile of one request stop fitting in cache, so the blocked variant
 //! sweeps the same streams once per [`COL_BLOCK`]-wide column slice. It
-//! re-decodes the A stream per slice (8 B/nnz, streams linearly) in
+//! re-reads the decoded A triples per slice (12 B/nnz, streams linearly) in
 //! exchange for keeping the random-access B/C working set cache-resident —
 //! the host mirror of the paper's N/N0 outer loop (Eq. 2). Per output
 //! element the accumulation order is unchanged, so `native-blocked` is
 //! bit-identical to `native`.
 
-use super::{check_shapes, BackendError, Capability, SpmmBackend};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::{check_shapes, BackendError, Capability, PrepareCost, PreparedSpmm, SpmmBackend};
 use crate::sched::{decode, ScheduledMatrix};
 
 /// Inner-loop chunk width — the paper's N0 (8 PUs per PE).
@@ -38,15 +52,14 @@ pub const LANES: usize = 8;
 /// chunks; sized so one B window row slice + C tile stays L1/L2-resident).
 pub const COL_BLOCK: usize = 64;
 
-/// Multi-threaded native backend.
+/// Multi-threaded native backend factory. Stateless: per-matrix state
+/// (decoded streams, scratch) lives in the [`PreparedNative`] handles it
+/// produces.
 pub struct NativeBackend {
     /// Resolved worker-thread count (>= 1).
     threads: usize,
     /// Column-block width; 0 = unblocked (the plain `native` engine).
     block_n: usize,
-    /// Per-worker C_AB scratch tiles (`rows_per_pe * block width`), reused
-    /// across requests and across the PEs a worker owns.
-    scratch: Vec<Vec<f32>>,
 }
 
 impl NativeBackend {
@@ -69,7 +82,7 @@ impl NativeBackend {
         } else {
             threads
         };
-        NativeBackend { threads, block_n, scratch: Vec::new() }
+        NativeBackend { threads, block_n }
     }
 
     /// The resolved worker-thread count.
@@ -80,6 +93,105 @@ impl NativeBackend {
     /// Column-block width (0 = unblocked).
     pub fn block_width(&self) -> usize {
         self.block_n
+    }
+
+    fn build(&self, image: Arc<ScheduledMatrix>) -> PreparedNative {
+        let t0 = Instant::now();
+        // Decode every PE stream once: drop bubbles, resolve window-local
+        // columns to global B rows, keep slot-issue order (the accumulation
+        // order contract).
+        let streams: Vec<Vec<(u32, u32, f32)>> = image
+            .streams
+            .iter()
+            .map(|stream| {
+                let mut out = Vec::with_capacity(stream.nnz);
+                for j in 0..image.num_windows {
+                    let col_base = (j * image.k0) as u32;
+                    for &word in &stream.encoded[stream.q.window_range(j)] {
+                        let nz = decode(word);
+                        if nz.val == 0.0 {
+                            continue; // bubble (or explicit zero: same arithmetic)
+                        }
+                        out.push((nz.row, col_base + nz.col, nz.val));
+                    }
+                }
+                out
+            })
+            .collect();
+        let workers = self.threads.min(image.p).max(1);
+        // Blocked tiles are fully pre-sized here (their width is fixed);
+        // unblocked tiles size themselves to N on first execute and are
+        // grow-only afterwards.
+        let scratch: Vec<Vec<f32>> = if self.block_n > 0 {
+            (0..workers).map(|_| vec![0.0; image.rows_per_pe() * self.block_n]).collect()
+        } else {
+            (0..workers).map(|_| Vec::new()).collect()
+        };
+        let triple_bytes = std::mem::size_of::<(u32, u32, f32)>() as u64;
+        let resident_bytes = streams.iter().map(|s| s.len() as u64 * triple_bytes).sum::<u64>()
+            + scratch.iter().map(|s| s.len() as u64 * 4).sum::<u64>();
+        PreparedNative {
+            image,
+            block_n: self.block_n,
+            workers,
+            streams,
+            scratch,
+            cost: PrepareCost { wall: t0.elapsed(), resident_bytes },
+        }
+    }
+}
+
+impl SpmmBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        if self.block_n == 0 {
+            "native"
+        } else {
+            "native-blocked"
+        }
+    }
+
+    fn capability(&self) -> Capability {
+        Capability {
+            threads: self.threads,
+            simd_lanes: LANES,
+            requires_artifacts: false,
+            deterministic: true,
+        }
+    }
+
+    fn prepare(&self, image: Arc<ScheduledMatrix>) -> Result<Box<dyn PreparedSpmm>, BackendError> {
+        Ok(Box::new(self.build(image)))
+    }
+
+    fn prepare_send(
+        &self,
+        image: Arc<ScheduledMatrix>,
+    ) -> Result<Box<dyn PreparedSpmm + Send>, BackendError> {
+        Ok(Box::new(self.build(image)))
+    }
+}
+
+/// A matrix resident on the native engine: decoded per-PE streams plus the
+/// per-worker scratch tiles, ready for any number of (B, n, alpha, beta).
+pub struct PreparedNative {
+    image: Arc<ScheduledMatrix>,
+    /// Column-block width; 0 = unblocked.
+    block_n: usize,
+    /// Worker-thread count (<= P, >= 1), fixed at prepare.
+    workers: usize,
+    /// Per-PE decoded slot streams in issue order: (local row, global col,
+    /// value); bubbles dropped.
+    streams: Vec<Vec<(u32, u32, f32)>>,
+    /// Per-worker C_AB scratch tiles (`rows_per_pe * block width`), reused
+    /// across requests and across the PEs a worker owns.
+    scratch: Vec<Vec<f32>>,
+    cost: PrepareCost,
+}
+
+impl PreparedNative {
+    /// The resident image.
+    pub fn image(&self) -> &Arc<ScheduledMatrix> {
+        &self.image
     }
 }
 
@@ -111,13 +223,14 @@ unsafe impl Send for CPtr {}
 unsafe impl Sync for CPtr {}
 
 /// Process every PE in `pe0, pe0 + stride, ...` for the column slice
-/// `[col0, col0 + cols)` of B/C: accumulate the PE's stream into `ab`
-/// (a `rows_per_pe x cols` tile, cleared per PE), then Comp-C its rows of
-/// the shared C buffer. The unblocked engine passes one full-width slice;
-/// the blocked engine calls once per [`COL_BLOCK`]-wide slice.
+/// `[col0, col0 + cols)` of B/C: accumulate the PE's decoded stream into
+/// `ab` (a `rows_per_pe x cols` tile, cleared per PE), then Comp-C its rows
+/// of the shared C buffer. The unblocked engine passes one full-width
+/// slice; the blocked engine calls once per [`COL_BLOCK`]-wide slice.
 #[allow(clippy::too_many_arguments)]
 fn run_pes(
     sm: &ScheduledMatrix,
+    streams: &[Vec<(u32, u32, f32)>],
     b: &[f32],
     c: CPtr,
     n: usize,
@@ -135,23 +248,15 @@ fn run_pes(
     let mut pe = pe0;
     while pe < sm.p {
         ab.fill(0.0);
-        let stream = &sm.streams[pe];
-        for j in 0..sm.num_windows {
-            let col_base = j * sm.k0;
-            for &word in &stream.encoded[stream.q.window_range(j)] {
-                let nz = decode(word);
-                if nz.val == 0.0 {
-                    continue; // bubble (or explicit zero: same arithmetic)
-                }
-                let r = nz.row as usize;
-                let gc = col_base + nz.col as usize;
-                debug_assert!(r < rows_per_pe && gc < sm.k);
-                axpy(
-                    &mut ab[r * cols..(r + 1) * cols],
-                    &b[gc * n + col0..gc * n + col0 + cols],
-                    nz.val,
-                );
-            }
+        for &(r, gc, val) in &streams[pe] {
+            let r = r as usize;
+            let gc = gc as usize;
+            debug_assert!(r < rows_per_pe && gc < sm.k);
+            axpy(
+                &mut ab[r * cols..(r + 1) * cols],
+                &b[gc * n + col0..gc * n + col0 + cols],
+                val,
+            );
         }
         // Comp-C for this PE's (disjoint) rows of the shared C.
         for t in 0..rows_per_pe {
@@ -175,8 +280,8 @@ fn run_pes(
     }
 }
 
-impl SpmmBackend for NativeBackend {
-    fn name(&self) -> &'static str {
+impl PreparedSpmm for PreparedNative {
+    fn backend_name(&self) -> &'static str {
         if self.block_n == 0 {
             "native"
         } else {
@@ -184,32 +289,24 @@ impl SpmmBackend for NativeBackend {
         }
     }
 
-    fn capability(&self) -> Capability {
-        Capability {
-            threads: self.threads,
-            simd_lanes: LANES,
-            requires_artifacts: false,
-            deterministic: true,
-        }
+    fn prepare_cost(&self) -> PrepareCost {
+        self.cost
     }
 
     fn execute(
         &mut self,
-        sm: &ScheduledMatrix,
         b: &[f32],
         c: &mut [f32],
         n: usize,
         alpha: f32,
         beta: f32,
     ) -> Result<(), BackendError> {
+        let sm: &ScheduledMatrix = &self.image;
         check_shapes(sm, b, c, n)?;
         if sm.p == 0 || sm.m == 0 || n == 0 {
             return Ok(());
         }
-        let workers = self.threads.min(sm.p).max(1);
-        if self.scratch.len() < workers {
-            self.scratch.resize_with(workers, Vec::new);
-        }
+        let workers = self.workers;
         // Block width: full N when unblocked, else COL_BLOCK-capped slices.
         let block = if self.block_n == 0 { n } else { self.block_n.min(n) };
         let rows_per_pe = sm.rows_per_pe();
@@ -219,6 +316,7 @@ impl SpmmBackend for NativeBackend {
                 buf.resize(tile, 0.0);
             }
         }
+        let streams: &[Vec<(u32, u32, f32)>] = &self.streams;
         let cptr = CPtr(c.as_mut_ptr());
         if workers == 1 {
             let buf = &mut self.scratch[0];
@@ -226,7 +324,7 @@ impl SpmmBackend for NativeBackend {
             while col0 < n {
                 let cols = block.min(n - col0);
                 run_pes(
-                    sm, b, cptr, n, alpha, beta,
+                    sm, streams, b, cptr, n, alpha, beta,
                     &mut buf[..rows_per_pe * cols],
                     0, 1, col0, cols,
                 );
@@ -242,7 +340,7 @@ impl SpmmBackend for NativeBackend {
                     while col0 < n {
                         let cols = block.min(n - col0);
                         run_pes(
-                            sm, b, worker_c, n, alpha, beta,
+                            sm, streams, b, worker_c, n, alpha, beta,
                             &mut buf[..rows_per_pe * cols],
                             w, workers, col0, cols,
                         );
@@ -265,16 +363,16 @@ mod tests {
 
     fn run_native(
         threads: usize,
-        sm: &ScheduledMatrix,
+        sm: &Arc<ScheduledMatrix>,
         b: &[f32],
         c0: &[f32],
         n: usize,
         alpha: f32,
         beta: f32,
     ) -> Vec<f32> {
-        let mut backend = NativeBackend::new(threads);
+        let mut handle = NativeBackend::new(threads).build(Arc::clone(sm));
         let mut c = c0.to_vec();
-        backend.execute(sm, b, &mut c, n, alpha, beta).unwrap();
+        handle.execute(b, &mut c, n, alpha, beta).unwrap();
         c
     }
 
@@ -282,7 +380,7 @@ mod tests {
     fn matches_functional_bitwise() {
         let mut rng = Rng::new(1);
         let a = gen::random_uniform(96, 80, 0.12, &mut rng);
-        let sm = preprocess(&a, 8, 16, 6);
+        let sm = Arc::new(preprocess(&a, 8, 16, 6));
         let n = 11; // deliberately not a multiple of LANES
         let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
         let c0: Vec<f32> = (0..a.m * n).map(|_| rng.normal()).collect();
@@ -298,7 +396,7 @@ mod tests {
     fn thread_count_does_not_change_bits() {
         let mut rng = Rng::new(2);
         let a = gen::power_law_rows(150, 120, 2_000, 1.0, &mut rng);
-        let sm = preprocess(&a, 16, 32, 10);
+        let sm = Arc::new(preprocess(&a, 16, 32, 10));
         let n = 8;
         let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
         let c0: Vec<f32> = (0..a.m * n).map(|_| rng.normal()).collect();
@@ -309,38 +407,61 @@ mod tests {
     }
 
     #[test]
-    fn scratch_is_reused_across_requests() {
+    fn one_handle_many_requests_reuses_scratch() {
         let mut rng = Rng::new(3);
         let a = gen::random_uniform(40, 40, 0.2, &mut rng);
-        let sm = preprocess(&a, 4, 16, 4);
+        let sm = Arc::new(preprocess(&a, 4, 16, 4));
         let n = 4;
         let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
-        let mut backend = NativeBackend::new(2);
+        let mut handle = NativeBackend::new(2).build(Arc::clone(&sm));
         let mut first = vec![0f32; a.m * n];
-        backend.execute(&sm, &b, &mut first, n, 1.0, 0.0).unwrap();
+        handle.execute(&b, &mut first, n, 1.0, 0.0).unwrap();
         // Second request with dirty scratch must produce identical output.
         let mut second = vec![0f32; a.m * n];
-        backend.execute(&sm, &b, &mut second, n, 1.0, 0.0).unwrap();
+        handle.execute(&b, &mut second, n, 1.0, 0.0).unwrap();
         assert_eq!(first, second);
+        // N may change across calls against the same handle.
+        let n2 = 9;
+        let b2: Vec<f32> = (0..a.k * n2).map(|_| rng.normal()).collect();
+        let mut wide = vec![0f32; a.m * n2];
+        handle.execute(&b2, &mut wide, n2, 1.0, 0.0).unwrap();
+        let mut want = vec![0f32; a.m * n2];
+        a.spmm_reference(&b2, &mut want, n2, 1.0, 0.0);
+        prop::assert_allclose(&wide, &want, 2e-4, 2e-4).unwrap();
+    }
+
+    #[test]
+    fn prepare_cost_reports_resident_streams() {
+        let mut rng = Rng::new(8);
+        let a = gen::random_uniform(60, 60, 0.1, &mut rng);
+        let sm = Arc::new(preprocess(&a, 4, 16, 4));
+        let handle = NativeBackend::new(2).build(Arc::clone(&sm));
+        let cost = handle.prepare_cost();
+        // 12 bytes per decoded non-zero at minimum.
+        assert!(cost.resident_bytes >= 12 * a.nnz() as u64, "{cost:?}");
+        // Blocked variant additionally pre-sizes its tiles.
+        let blocked = NativeBackend::blocked(2).build(Arc::clone(&sm));
+        assert!(blocked.prepare_cost().resident_bytes > cost.resident_bytes);
     }
 
     #[test]
     fn empty_matrix_is_pure_comp_c() {
         let a = Coo::empty(6, 6);
-        let sm = preprocess(&a, 4, 4, 2);
+        let sm = Arc::new(preprocess(&a, 4, 4, 2));
         let b = vec![1.0; 12];
         let mut c = vec![2.0; 12];
-        NativeBackend::new(4).execute(&sm, &b, &mut c, 2, 9.0, 0.5).unwrap();
+        NativeBackend::new(4).build(sm).execute(&b, &mut c, 2, 9.0, 0.5).unwrap();
         assert_eq!(c, vec![1.0; 12]);
     }
 
     #[test]
     fn rejects_shape_mismatch() {
         let a = Coo::empty(4, 4);
-        let sm = preprocess(&a, 2, 2, 2);
+        let sm = Arc::new(preprocess(&a, 2, 2, 2));
         let b = vec![0.0; 7]; // not k * n
         let mut c = vec![0.0; 8];
-        let err = NativeBackend::new(1).execute(&sm, &b, &mut c, 2, 1.0, 0.0).unwrap_err();
+        let err =
+            NativeBackend::new(1).build(sm).execute(&b, &mut c, 2, 1.0, 0.0).unwrap_err();
         assert!(matches!(err, BackendError::Shape(_)));
     }
 
@@ -348,7 +469,7 @@ mod tests {
     fn more_threads_than_pes_is_fine() {
         let mut rng = Rng::new(4);
         let a = gen::random_uniform(10, 10, 0.3, &mut rng);
-        let sm = preprocess(&a, 2, 4, 3);
+        let sm = Arc::new(preprocess(&a, 2, 4, 3));
         let n = 3;
         let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
         let c0 = vec![0f32; a.m * n];
@@ -366,15 +487,15 @@ mod tests {
         // not a multiple of the block width.
         let mut rng = Rng::new(11);
         let a = gen::power_law_rows(120, 100, 1_800, 1.0, &mut rng);
-        let sm = preprocess(&a, 8, 32, 6);
+        let sm = Arc::new(preprocess(&a, 8, 32, 6));
         for n in [1usize, 11, COL_BLOCK, COL_BLOCK + 1, 3 * COL_BLOCK + 7] {
             let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
             let c0: Vec<f32> = (0..a.m * n).map(|_| rng.normal()).collect();
             for threads in [1usize, 4] {
                 let plain = run_native(threads, &sm, &b, &c0, n, 1.5, -0.25);
-                let mut blocked = NativeBackend::blocked(threads);
+                let mut blocked = NativeBackend::blocked(threads).build(Arc::clone(&sm));
                 let mut c = c0.clone();
-                blocked.execute(&sm, &b, &mut c, n, 1.5, -0.25).unwrap();
+                blocked.execute(&b, &mut c, n, 1.5, -0.25).unwrap();
                 assert_eq!(c, plain, "n = {n}, threads = {threads}");
             }
         }
@@ -384,17 +505,19 @@ mod tests {
     fn blocked_identity_and_scratch_reuse() {
         let mut rng = Rng::new(12);
         let a = gen::random_uniform(50, 40, 0.15, &mut rng);
-        let sm = preprocess(&a, 4, 16, 5);
+        let sm = Arc::new(preprocess(&a, 4, 16, 5));
         let n = 150; // several blocks
         let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
-        let mut backend = NativeBackend::blocked(2);
+        let backend = NativeBackend::blocked(2);
         assert_eq!(backend.name(), "native-blocked");
         assert_eq!(backend.block_width(), COL_BLOCK);
+        let mut handle = backend.build(Arc::clone(&sm));
+        assert_eq!(handle.backend_name(), "native-blocked");
         let mut first = vec![0f32; a.m * n];
-        backend.execute(&sm, &b, &mut first, n, 1.0, 0.0).unwrap();
+        handle.execute(&b, &mut first, n, 1.0, 0.0).unwrap();
         // Dirty scratch from the first request must not leak into the next.
         let mut second = vec![0f32; a.m * n];
-        backend.execute(&sm, &b, &mut second, n, 1.0, 0.0).unwrap();
+        handle.execute(&b, &mut second, n, 1.0, 0.0).unwrap();
         assert_eq!(first, second);
         let mut want = vec![0f32; a.m * n];
         a.spmm_reference(&b, &mut want, n, 1.0, 0.0);
@@ -411,7 +534,7 @@ mod tests {
             let p = 1 + rng.index(8);
             let k0 = 1 + rng.index(32);
             let d = 1 + rng.index(10);
-            let sm = preprocess(&a, p, k0, d);
+            let sm = Arc::new(preprocess(&a, p, k0, d));
             let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
             let c0: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
             let alpha = rng.range_f32(-2.0, 2.0);

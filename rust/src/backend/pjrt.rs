@@ -1,39 +1,39 @@
 //! PJRT backend adapter: [`crate::runtime::Engine`] (AOT Pallas kernels
-//! executed by the PJRT CPU client) behind the [`SpmmBackend`] trait.
+//! executed by the PJRT CPU client) behind the prepare/execute contract.
 //!
-//! The engine is loaded lazily on first execution so that constructing the
-//! backend (registry listing, server startup) never requires artifacts.
-//! Without the `pjrt` cargo feature, `Engine::load` is a stub and every
-//! execution reports [`BackendError::Unavailable`] — the serving stack
-//! stays buildable and testable on a clean checkout.
+//! The engine loads — and the kernel variant matching the image's (K0,
+//! rows/PE) is selected — at **prepare** time: the [`PreparedPjrt`] handle
+//! is where device residency lives (today the compiled executables + chosen
+//! variant; staged HBM operand buffers land here next). Constructing the
+//! factory itself never touches artifacts, so registry listings and server
+//! startup stay artifact-free.
+//!
+//! Without the real engine (the `pjrt` + `xla` cargo features),
+//! `Engine::load` is a stub and every prepare reports
+//! [`BackendError::Unavailable`] — the serving stack stays buildable and
+//! testable on a clean checkout.
 //!
 //! Contract: the image must have been preprocessed with a window size K0
 //! matching one of the engine's compiled variants whose `m_tile` fits the
 //! image's rows/PE (i.e. via [`crate::runtime::Engine::plan`]).
 
-use super::{check_shapes, BackendError, Capability, SpmmBackend};
-use crate::runtime::Engine;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::{check_shapes, BackendError, Capability, PrepareCost, PreparedSpmm, SpmmBackend};
+use crate::runtime::{Engine, Variant};
 use crate::sched::ScheduledMatrix;
 
-/// Lazy-loading PJRT/XLA backend.
-pub struct PjrtBackend {
-    engine: Option<Engine>,
-}
+/// PJRT/XLA backend factory. Stateless; the engine loads per prepared
+/// matrix, inside the preparing thread (PJRT client handles are
+/// thread-local).
+pub struct PjrtBackend;
 
 impl PjrtBackend {
     /// Construct without loading anything; the engine loads (and compiles
-    /// all artifacts) on first [`SpmmBackend::execute`].
+    /// all artifacts) at [`SpmmBackend::prepare`].
     pub fn new() -> PjrtBackend {
-        PjrtBackend { engine: None }
-    }
-
-    fn engine(&mut self) -> Result<&Engine, BackendError> {
-        if self.engine.is_none() {
-            let engine = Engine::load_default()
-                .map_err(|e| BackendError::Unavailable(format!("{e:#}")))?;
-            self.engine = Some(engine);
-        }
-        Ok(self.engine.as_ref().unwrap())
+        PjrtBackend
     }
 }
 
@@ -41,6 +41,33 @@ impl Default for PjrtBackend {
     fn default() -> Self {
         Self::new()
     }
+}
+
+fn build_prepared(image: Arc<ScheduledMatrix>) -> Result<PreparedPjrt, BackendError> {
+    let t0 = Instant::now();
+    let engine =
+        Engine::load_default().map_err(|e| BackendError::Unavailable(format!("{e:#}")))?;
+    let rows_per_pe = image.rows_per_pe();
+    let variant = engine
+        .variants()
+        .into_iter()
+        .find(|v| v.k0 == image.k0 && v.m_tile >= rows_per_pe)
+        .ok_or_else(|| {
+            BackendError::Unavailable(format!(
+                "no compiled variant with k0 = {} and m_tile >= {rows_per_pe}; \
+                 preprocess via Engine::plan",
+                image.k0
+            ))
+        })?;
+    // Residency today is the A stream staged for the kernels; device
+    // buffers for B/C land here when the HBM path arrives.
+    let resident_bytes = image.a_stream_bytes();
+    Ok(PreparedPjrt {
+        image,
+        engine,
+        variant,
+        cost: PrepareCost { wall: t0.elapsed(), resident_bytes },
+    })
 }
 
 impl SpmmBackend for PjrtBackend {
@@ -57,31 +84,53 @@ impl SpmmBackend for PjrtBackend {
         }
     }
 
+    fn prepare(&self, image: Arc<ScheduledMatrix>) -> Result<Box<dyn PreparedSpmm>, BackendError> {
+        Ok(Box::new(build_prepared(image)?))
+    }
+
+    /// Without the real engine the stub `Engine` holds no client handles,
+    /// so the (never-constructible) prepared handle is trivially `Send`.
+    /// With `pjrt` + `xla` the default refusal stands: prepare inside the
+    /// executing thread.
+    #[cfg(not(all(feature = "pjrt", feature = "xla")))]
+    fn prepare_send(
+        &self,
+        image: Arc<ScheduledMatrix>,
+    ) -> Result<Box<dyn PreparedSpmm + Send>, BackendError> {
+        Ok(Box::new(build_prepared(image)?))
+    }
+}
+
+/// A matrix resident on the PJRT engine: the loaded engine plus the
+/// selected kernel variant for this image.
+pub struct PreparedPjrt {
+    image: Arc<ScheduledMatrix>,
+    engine: Engine,
+    variant: Variant,
+    cost: PrepareCost,
+}
+
+impl PreparedSpmm for PreparedPjrt {
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prepare_cost(&self) -> PrepareCost {
+        self.cost
+    }
+
     fn execute(
         &mut self,
-        sm: &ScheduledMatrix,
         b: &[f32],
         c: &mut [f32],
         n: usize,
         alpha: f32,
         beta: f32,
     ) -> Result<(), BackendError> {
-        check_shapes(sm, b, c, n)?;
-        let rows_per_pe = sm.rows_per_pe();
-        let engine = self.engine()?;
-        let variant = engine
-            .variants()
-            .into_iter()
-            .find(|v| v.k0 == sm.k0 && v.m_tile >= rows_per_pe)
-            .ok_or_else(|| {
-                BackendError::Unavailable(format!(
-                    "no compiled variant with k0 = {} and m_tile >= {rows_per_pe}; \
-                     preprocess via Engine::plan",
-                    sm.k0
-                ))
-            })?;
-        let out = engine
-            .spmm(variant, sm, b, &*c, n, alpha, beta)
+        check_shapes(&self.image, b, c, n)?;
+        let out = self
+            .engine
+            .spmm(self.variant, &self.image, b, &*c, n, alpha, beta)
             .map_err(|e| BackendError::Execution(format!("{e:#}")))?;
         c.copy_from_slice(&out);
         Ok(())
@@ -102,20 +151,15 @@ mod tests {
     }
 
     #[test]
-    fn execute_errors_cleanly_when_unavailable() {
-        // On a clean checkout (no artifacts dir, `pjrt` feature off) the
-        // backend must refuse with an error, not panic.
-        if std::path::Path::new("artifacts/manifest.tsv").exists() && cfg!(feature = "pjrt") {
+    fn prepare_errors_cleanly_when_unavailable() {
+        // On a clean checkout (no artifacts dir, real engine off) prepare
+        // must refuse with an error, not panic.
+        if std::path::Path::new("artifacts/manifest.tsv").exists() && super::super::PJRT_REAL {
             return; // environment actually has a runtime: nothing to assert
         }
         let a = Coo::empty(4, 4);
-        let sm = preprocess(&a, 2, 2, 2);
-        let b = vec![0.0; 8];
-        let mut c = vec![0.0; 8];
-        let err = PjrtBackend::new().execute(&sm, &b, &mut c, 2, 1.0, 0.0).unwrap_err();
-        assert!(matches!(
-            err,
-            BackendError::Unavailable(_) | BackendError::Execution(_)
-        ));
+        let sm = Arc::new(preprocess(&a, 2, 2, 2));
+        let err = PjrtBackend::new().prepare(sm).map(|_| ()).unwrap_err();
+        assert!(matches!(err, BackendError::Unavailable(_)), "{err}");
     }
 }

@@ -1,8 +1,10 @@
-//! Serving metrics: per-request latency recording, shard-level load
+//! Serving metrics: per-request latency recording, prepare amortization
+//! (per-worker prepared-handle cache hits vs. misses), shard-level load
 //! statistics (when a sharded backend executes), and summary statistics.
 
 use std::time::Duration;
 
+use crate::backend::PrepareCost;
 use crate::shard::ShardRunStats;
 
 /// One served request's timing.
@@ -32,6 +34,10 @@ pub struct Recorder {
     timings: Vec<RequestTiming>,
     batches: usize,
     batched_requests: usize,
+    prepares: usize,
+    prepare_hits: usize,
+    prepare_wall_s: f64,
+    prepared_bytes: u64,
     shard_execs: usize,
     shard_count_sum: usize,
     shard_imbalance_sum: f64,
@@ -49,6 +55,18 @@ impl Recorder {
     pub fn record_batch(&mut self, n: usize) {
         self.batches += 1;
         self.batched_requests += n;
+    }
+
+    /// Record one worker preparing a matrix (a prepared-handle cache miss).
+    pub fn record_prepare(&mut self, cost: &PrepareCost) {
+        self.prepares += 1;
+        self.prepare_wall_s += cost.wall.as_secs_f64();
+        self.prepared_bytes += cost.resident_bytes;
+    }
+
+    /// Record one job served from a worker's prepared-handle cache.
+    pub fn record_prepare_hit(&mut self) {
+        self.prepare_hits += 1;
     }
 
     /// Record one sharded execution's shard-level stats (per-shard nnz and
@@ -99,6 +117,19 @@ impl Recorder {
             total_flops,
             sum_latency_s: wall,
             backends,
+            prepares: self.prepares,
+            prepare_hits: self.prepare_hits,
+            prepare_hit_rate: if self.prepares + self.prepare_hits == 0 {
+                0.0
+            } else {
+                self.prepare_hits as f64 / (self.prepares + self.prepare_hits) as f64
+            },
+            mean_prepare_s: if self.prepares == 0 {
+                0.0
+            } else {
+                self.prepare_wall_s / self.prepares as f64
+            },
+            prepared_bytes: self.prepared_bytes,
             shard_execs: self.shard_execs,
             mean_shards: if self.shard_execs == 0 {
                 0.0
@@ -141,6 +172,19 @@ pub struct Summary {
     pub sum_latency_s: f64,
     /// Requests served per backend name, sorted by name.
     pub backends: Vec<(&'static str, usize)>,
+    /// Matrix prepares performed across workers (prepared-handle cache
+    /// misses; each pays the backend's build path once).
+    pub prepares: usize,
+    /// Jobs served from a worker's prepared-handle cache (no re-prepare).
+    pub prepare_hits: usize,
+    /// hits / (hits + prepares) — the amortization headline: how often a
+    /// request found its matrix already resident.
+    pub prepare_hit_rate: f64,
+    /// Mean wall time per prepare (s).
+    pub mean_prepare_s: f64,
+    /// Total bytes made resident by prepares (decoded streams, shard
+    /// images, scratch).
+    pub prepared_bytes: u64,
     /// Sharded executions observed (0 when no sharded backend served).
     pub shard_execs: usize,
     /// Mean shard count per sharded execution.
@@ -201,6 +245,33 @@ mod tests {
         assert!(s.backends.is_empty());
         assert_eq!(s.shard_execs, 0);
         assert_eq!(s.mean_shard_imbalance, 0.0);
+        assert_eq!(s.prepares, 0);
+        assert_eq!(s.prepare_hit_rate, 0.0);
+    }
+
+    #[test]
+    fn prepare_accounting_aggregates() {
+        let mut r = Recorder::default();
+        r.record_prepare(&PrepareCost {
+            wall: Duration::from_millis(10),
+            resident_bytes: 1_000,
+        });
+        r.record_prepare(&PrepareCost {
+            wall: Duration::from_millis(30),
+            resident_bytes: 3_000,
+        });
+        r.record_prepare_hit();
+        r.record_prepare_hit();
+        r.record_prepare_hit();
+        r.record_prepare_hit();
+        r.record_prepare_hit();
+        r.record_prepare_hit();
+        let s = r.summary();
+        assert_eq!(s.prepares, 2);
+        assert_eq!(s.prepare_hits, 6);
+        assert!((s.prepare_hit_rate - 0.75).abs() < 1e-12);
+        assert!((s.mean_prepare_s - 0.02).abs() < 1e-9);
+        assert_eq!(s.prepared_bytes, 4_000);
     }
 
     #[test]

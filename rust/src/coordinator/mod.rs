@@ -5,7 +5,11 @@
 //! Execution is pluggable: workers run any [`crate::backend::SpmmBackend`]
 //! (native multi-threaded engine by default), constructed per worker thread
 //! either via a factory closure ([`Server::start`]) or by registry name
-//! ([`Server::start_backend`]).
+//! ([`Server::start_backend`]). Each worker keeps an MRU cache of
+//! [`crate::backend::PreparedSpmm`] handles keyed on the registered image,
+//! so repeated requests against one matrix prepare it once per worker —
+//! the prepare hit rate, wall time, and resident bytes are part of the
+//! serving [`metrics::Summary`].
 
 pub mod metrics;
 pub mod server;

@@ -10,11 +10,20 @@
 //! image identity within a bounded window, dispatches merged jobs to
 //! workers, and splits C back per request.
 //!
-//! Workers are std::thread with a [`SpmmBackend`] built inside the thread
-//! (PJRT clients are not Send; the factory pattern keeps them thread-local).
-//! [`Server::start_backend`] builds the factory from a registry spec string
-//! (`"native"`, `"native:4"`, `"functional"`, `"pjrt"`), so deployments pick
-//! engines by name; every request records which backend executed it.
+//! **Prepared-handle caching**: each worker keys a small MRU cache of
+//! [`PreparedSpmm`] handles on the registered [`ImageHandle`] id, so N
+//! requests against one matrix prepare it once *per worker* — the
+//! prepare/execute contract's amortization, measured: prepare counts, wall
+//! time, resident bytes, and the cache hit rate all flow into
+//! [`Summary`].
+//!
+//! Workers are std::thread; the backend factory is called once per worker
+//! and handles are prepared inside the worker thread (the real PJRT
+//! engine's handles are thread-local, which is exactly what the per-worker
+//! cache respects). [`Server::start_backend`] builds the factory from a
+//! registry spec string (`"native"`, `"native:4"`, `"functional"`,
+//! `"pjrt"`, `"sharded:4:native"`), so deployments pick engines by name;
+//! every request records which backend executed it.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -25,11 +34,17 @@ use std::time::{Duration, Instant};
 
 use super::metrics::{Recorder, RequestTiming, Summary};
 use crate::arch::simulator::problem_flops;
-use crate::backend::{self, BackendError, SpmmBackend};
+use crate::backend::{self, BackendError, PreparedSpmm, SpmmBackend};
 use crate::sched::ScheduledMatrix;
 
+/// Prepared handles kept per worker, most recently used first. Sized for a
+/// worker serving a handful of registered matrices; beyond this the oldest
+/// residency is dropped and rebuilt on next use.
+pub const PREPARED_CACHE_ENTRIES: usize = 8;
+
 /// A preprocessed matrix registered with the server (shared across
-/// requests — the "model weights" of the serving analogy).
+/// requests — the "model weights" of the serving analogy). The `id` is
+/// what workers key their prepared-handle caches on.
 #[derive(Clone)]
 pub struct ImageHandle {
     /// Unique id assigned at registration.
@@ -66,7 +81,7 @@ pub struct SpmmResponse {
 
 /// A batch-merged job handed to workers.
 pub struct MergedJob {
-    image: Arc<ScheduledMatrix>,
+    image: ImageHandle,
     alpha: f32,
     beta: f32,
     b_cat: Vec<f32>,
@@ -135,8 +150,8 @@ impl Server {
                 let recorder = Arc::clone(&recorder);
                 let factory = Arc::clone(&factory);
                 std::thread::spawn(move || {
-                    let mut exec = factory(w);
-                    worker_loop(&mut *exec, job_rx, recorder);
+                    let exec = factory(w);
+                    worker_loop(&*exec, job_rx, recorder);
                 })
             })
             .collect();
@@ -154,12 +169,13 @@ impl Server {
     /// registry (`"native"`, `"native:<threads>"`, `"native-blocked"`,
     /// `"functional"`, `"pjrt"`, `"sharded:<S>:<inner>"`). The spec is
     /// parsed and its availability in this build is checked eagerly (an
-    /// unavailable backend — e.g. `pjrt` without the feature — is refused
-    /// here rather than failing every request); each worker thread then
-    /// constructs its own instance. Auto-threaded specs are rewritten
-    /// through [`backend::apply_thread_budget`] with this machine's cores
-    /// divided across the worker threads, so workers × shards × engine
-    /// threads never oversubscribes the CPU.
+    /// unavailable backend — e.g. `pjrt` without the real engine — is
+    /// refused here rather than failing every request); each worker thread
+    /// then constructs its own factory and prepares handles inside the
+    /// thread. Auto-threaded specs are rewritten through
+    /// [`backend::apply_thread_budget`] with this machine's cores divided
+    /// across the worker threads, so workers × shards × engine threads
+    /// never oversubscribes the CPU.
     pub fn start_backend(
         n_workers: usize,
         policy: BatchPolicy,
@@ -227,10 +243,10 @@ fn batcher_loop(
             return;
         }
         recorder.lock().unwrap().record_batch(group.len());
-        let image = Arc::clone(&group[0].0.image.image);
+        let image = group[0].0.image.clone();
         let (alpha, beta) = (group[0].0.alpha, group[0].0.beta);
-        let m = image.m;
-        let k = image.k;
+        let m = image.image.m;
+        let k = image.image.k;
         let n_total: usize = group.iter().map(|(r, _, _)| r.n).sum();
         // Column-concatenate B and C (row-major interleave).
         let mut b_cat = vec![0f32; k * n_total];
@@ -301,11 +317,14 @@ fn batcher_loop(
 }
 
 fn worker_loop(
-    exec: &mut dyn SpmmBackend,
+    backend: &dyn SpmmBackend,
     job_rx: Arc<Mutex<Receiver<MergedJob>>>,
     recorder: Arc<Mutex<Recorder>>,
 ) {
-    let backend_name = exec.name();
+    let backend_name = backend.name();
+    // Per-worker prepared-handle cache, MRU-first, keyed on ImageHandle id.
+    // Handles never leave this thread (PJRT-compatible by construction).
+    let mut prepared: Vec<(u64, Box<dyn PreparedSpmm>)> = Vec::new();
     loop {
         let job = {
             let rx = job_rx.lock().unwrap();
@@ -313,27 +332,50 @@ fn worker_loop(
         };
         let Ok(mut job) = job else { break };
         let start = Instant::now();
-        let error = exec
-            .execute(
-                &job.image,
-                &job.b_cat,
-                &mut job.c_cat,
-                job.n_total,
-                job.alpha,
-                job.beta,
-            )
-            .err()
-            .map(|e| e.to_string());
+        // Resolve the resident handle: cache hit bubbles to the front,
+        // miss pays the backend's build path exactly once per worker.
+        let resolved: Result<(), String> =
+            match prepared.iter().position(|(id, _)| *id == job.image.id) {
+                Some(0) => {
+                    recorder.lock().unwrap().record_prepare_hit();
+                    Ok(())
+                }
+                Some(i) => {
+                    let entry = prepared.remove(i);
+                    prepared.insert(0, entry);
+                    recorder.lock().unwrap().record_prepare_hit();
+                    Ok(())
+                }
+                None => match backend.prepare(Arc::clone(&job.image.image)) {
+                    Ok(handle) => {
+                        recorder.lock().unwrap().record_prepare(&handle.prepare_cost());
+                        prepared.insert(0, (job.image.id, handle));
+                        prepared.truncate(PREPARED_CACHE_ENTRIES);
+                        Ok(())
+                    }
+                    Err(e) => Err(e.to_string()),
+                },
+            };
+        let error = match resolved {
+            Ok(()) => {
+                let handle = &mut prepared[0].1;
+                handle
+                    .execute(&job.b_cat, &mut job.c_cat, job.n_total, job.alpha, job.beta)
+                    .err()
+                    .map(|e| e.to_string())
+            }
+            Err(e) => Some(e),
+        };
         let exec_time = start.elapsed();
         // Sharded backends expose per-shard stats for the job just run;
         // fold them into the serving summary (imbalance, makespan).
         if error.is_none() {
-            if let Some(stats) = exec.shard_stats() {
+            if let Some(stats) = prepared[0].1.shard_stats() {
                 recorder.lock().unwrap().record_shards(&stats);
             }
         }
-        let m = job.image.m;
-        let nnz = job.image.nnz;
+        let m = job.image.image.m;
+        let nnz = job.image.image.nnz;
         for seg in job.segments {
             let mut c = vec![0f32; m * seg.n];
             if error.is_none() {
@@ -359,13 +401,38 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::{Capability, FunctionalBackend};
+    use crate::backend::{Capability, FunctionalBackend, PrepareCost};
     use crate::prop;
     use crate::sched::preprocess;
+    use crate::shard::{PreparedSharded, ShardExecutor, ShardedMatrix};
     use crate::sparse::{gen, rng::Rng};
 
-    /// Injects an execution failure on every request.
+    /// Injects an execution failure on every request (prepare succeeds —
+    /// residency is not the failure under test).
     struct FailingBackend;
+
+    struct FailingPrepared;
+
+    impl PreparedSpmm for FailingPrepared {
+        fn backend_name(&self) -> &'static str {
+            "failing"
+        }
+
+        fn prepare_cost(&self) -> PrepareCost {
+            PrepareCost::default()
+        }
+
+        fn execute(
+            &mut self,
+            _b: &[f32],
+            _c: &mut [f32],
+            _n: usize,
+            _alpha: f32,
+            _beta: f32,
+        ) -> Result<(), BackendError> {
+            Err(BackendError::Execution("injected failure".into()))
+        }
+    }
 
     impl SpmmBackend for FailingBackend {
         fn name(&self) -> &'static str {
@@ -381,16 +448,11 @@ mod tests {
             }
         }
 
-        fn execute(
-            &mut self,
-            _image: &ScheduledMatrix,
-            _b: &[f32],
-            _c: &mut [f32],
-            _n: usize,
-            _alpha: f32,
-            _beta: f32,
-        ) -> Result<(), BackendError> {
-            Err(BackendError::Execution("injected failure".into()))
+        fn prepare(
+            &self,
+            _image: Arc<ScheduledMatrix>,
+        ) -> Result<Box<dyn PreparedSpmm>, BackendError> {
+            Ok(Box::new(FailingPrepared))
         }
     }
 
@@ -428,6 +490,64 @@ mod tests {
         prop::assert_allclose(&resp.c, &want, 1e-4, 1e-4).unwrap();
         let summary = server.shutdown();
         assert_eq!(summary.requests, 1);
+        assert_eq!(summary.prepares, 1);
+    }
+
+    #[test]
+    fn repeated_matrix_prepares_once_per_worker() {
+        // The amortization headline: sequential requests against one image
+        // on one worker — exactly one prepare, everything else cache hits.
+        let (coo, sm) = make_image(41);
+        let server = Server::start_backend(1, BatchPolicy::default(), "native:1").unwrap();
+        let handle = server.register(sm);
+        let mut rng = Rng::new(42);
+        let n = 3;
+        for _ in 0..5 {
+            let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+            let c: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+            let mut want = c.clone();
+            coo.spmm_reference(&b, &mut want, n, 1.0, 0.5);
+            let resp = server.call(SpmmRequest {
+                image: handle.clone(),
+                b,
+                c,
+                n,
+                alpha: 1.0,
+                beta: 0.5,
+            });
+            assert!(resp.error.is_none());
+            prop::assert_allclose(&resp.c, &want, 1e-4, 1e-4).unwrap();
+        }
+        let summary = server.shutdown();
+        assert_eq!(summary.requests, 5);
+        assert_eq!(summary.prepares, 1, "one matrix, one worker: one prepare");
+        assert_eq!(summary.prepare_hits, 4);
+        assert!(summary.prepare_hit_rate > 0.7, "{}", summary.prepare_hit_rate);
+        assert!(summary.prepared_bytes > 0);
+    }
+
+    #[test]
+    fn multiple_images_each_get_residency() {
+        let (coo1, sm1) = make_image(43);
+        let (coo2, sm2) = make_image(44);
+        let server = Server::start_backend(1, BatchPolicy::default(), "native:1").unwrap();
+        let h1 = server.register(sm1);
+        let h2 = server.register(sm2);
+        let n = 2;
+        for (h, coo) in [(&h1, &coo1), (&h2, &coo2), (&h1, &coo1), (&h2, &coo2)] {
+            let resp = server.call(SpmmRequest {
+                image: h.clone(),
+                b: vec![1.0; coo.k * n],
+                c: vec![0.0; coo.m * n],
+                n,
+                alpha: 1.0,
+                beta: 0.0,
+            });
+            assert!(resp.error.is_none());
+        }
+        let summary = server.shutdown();
+        assert_eq!(summary.prepares, 2, "two matrices: two prepares");
+        assert_eq!(summary.prepare_hits, 2, "revisits hit the cache");
     }
 
     #[test]
@@ -447,6 +567,47 @@ mod tests {
         assert!(err.contains("injected failure"), "{err}");
         assert_eq!(resp.timing.backend, "failing");
         server.shutdown();
+    }
+
+    #[test]
+    fn unavailable_prepare_is_reported_per_request() {
+        // A backend whose prepare fails (pjrt without artifacts) must fail
+        // each request with the prepare error, not panic the worker.
+        struct NoPrepare;
+        impl SpmmBackend for NoPrepare {
+            fn name(&self) -> &'static str {
+                "no-prepare"
+            }
+            fn capability(&self) -> Capability {
+                Capability {
+                    threads: 1,
+                    simd_lanes: 1,
+                    requires_artifacts: true,
+                    deterministic: true,
+                }
+            }
+            fn prepare(
+                &self,
+                _image: Arc<ScheduledMatrix>,
+            ) -> Result<Box<dyn PreparedSpmm>, BackendError> {
+                Err(BackendError::Unavailable("no artifacts here".into()))
+            }
+        }
+        let (_, sm) = make_image(11);
+        let server = Server::start(1, BatchPolicy::default(), |_| Box::new(NoPrepare));
+        let handle = server.register(sm.clone());
+        let resp = server.call(SpmmRequest {
+            image: handle,
+            b: vec![0.0; sm.k * 2],
+            c: vec![0.0; sm.m * 2],
+            n: 2,
+            alpha: 1.0,
+            beta: 0.0,
+        });
+        let err = resp.error.expect("prepare failure must be surfaced");
+        assert!(err.contains("no artifacts here"), "{err}");
+        let summary = server.shutdown();
+        assert_eq!(summary.prepares, 0, "failed prepares must not count as residency");
     }
 
     #[test]
@@ -540,20 +701,42 @@ mod tests {
         assert_eq!(summary.shard_execs, 1);
         assert!((summary.mean_shards - 3.0).abs() < 1e-12);
         assert!(summary.mean_shard_imbalance >= 1.0);
+        assert_eq!(summary.prepares, 1, "the shard plan is built once, at prepare");
     }
 
     #[test]
     fn failing_shard_surfaces_with_shard_identified() {
-        use crate::shard::{ShardExecutor, ShardedBackend};
+        // A composite whose shard 1 of 2 always fails at execute; the
+        // response must name it, never silently zero its rows.
+        struct HalfBrokenSharded;
+        impl SpmmBackend for HalfBrokenSharded {
+            fn name(&self) -> &'static str {
+                "sharded"
+            }
+            fn capability(&self) -> Capability {
+                Capability {
+                    threads: 2,
+                    simd_lanes: 1,
+                    requires_artifacts: false,
+                    deterministic: true,
+                }
+            }
+            fn prepare(
+                &self,
+                image: Arc<ScheduledMatrix>,
+            ) -> Result<Box<dyn PreparedSpmm>, BackendError> {
+                let sharded = ShardedMatrix::from_image(&image, 2);
+                let ok = FunctionalBackend
+                    .prepare_send(Arc::clone(&sharded.shards[0].image))?;
+                let exec = ShardExecutor::from_prepared(
+                    &sharded,
+                    vec![ok, Box::new(FailingPrepared)],
+                );
+                Ok(Box::new(PreparedSharded::from_executor(image, exec)))
+            }
+        }
         let (_, sm) = make_image(23);
-        // Shard 1 of 2 always fails; the response must name it, never
-        // silently zero its rows.
-        let server = Server::start(1, BatchPolicy::default(), |_| {
-            Box::new(ShardedBackend::from_executor(ShardExecutor::from_backends(vec![
-                Box::new(FunctionalBackend),
-                Box::new(FailingBackend),
-            ])))
-        });
+        let server = Server::start(1, BatchPolicy::default(), |_| Box::new(HalfBrokenSharded));
         let handle = server.register(sm.clone());
         let resp = server.call(SpmmRequest {
             image: handle,
@@ -600,5 +783,7 @@ mod tests {
         let s = server.shutdown();
         assert_eq!(s.requests, 20);
         assert!(s.p50_s >= 0.0);
+        // At most one prepare per worker for the single registered image.
+        assert!(s.prepares <= 3, "prepares = {}", s.prepares);
     }
 }

@@ -7,22 +7,26 @@
 //! * [`HFlexAccelerator::synthesize`] consumes an [`AcceleratorConfig`] —
 //!   after that the configuration is immutable (no public mutators), like a
 //!   bitstream after place-and-route.
-//! * [`HFlexAccelerator::invoke`] accepts any [`SpmmProblem`]; the only
-//!   inputs that change between invocations are the Algorithm 1 parameters:
-//!   matrix pointers (A's scheduled image, B, C), the Q pointer lists
-//!   (inside the image), and the scalars M, K, N, α, β.
-//! * An image preprocessed for a *different* configuration is rejected with
-//!   [`HFlexError::WrongConfiguration`] — the analogue of needing a new
-//!   synthesis/place/route run, which HFlex exists to avoid.
+//! * [`HFlexAccelerator::load`] preprocesses a matrix *and* prepares it on
+//!   the accelerator's execution backend, returning a [`LoadedMatrix`] —
+//!   the A-resident handle of the serving shape (one sparse A, many dense
+//!   B). Loading is the only per-matrix cost; it happens once.
+//! * [`HFlexAccelerator::invoke`] accepts any [`SpmmProblem`] against a
+//!   loaded matrix; the only inputs that change between invocations are
+//!   the Algorithm 1 parameters: matrix pointers (the loaded image, B, C)
+//!   and the scalars N, α, β.
+//! * An image preprocessed for a *different* configuration is rejected at
+//!   load with [`HFlexError::WrongConfiguration`] — the analogue of needing
+//!   a new synthesis/place/route run, which HFlex exists to avoid.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::arch::{simulate, AcceleratorConfig, SimReport};
-use crate::backend::{self, SpmmBackend};
+use crate::backend::{self, BackendError, PrepareCost, PreparedSpmm, SpmmBackend};
 use crate::sched::{preprocess, ScheduledMatrix};
 use crate::sparse::Coo;
 
-/// Why an invocation was refused.
+/// Why a load or an invocation was refused.
 #[derive(Debug, PartialEq)]
 pub enum HFlexError {
     /// Image was scheduled for a different accelerator configuration.
@@ -42,7 +46,7 @@ pub enum HFlexError {
     },
     /// B/C buffer shape mismatch with (M, K, N).
     ShapeMismatch(String),
-    /// The execution backend refused or failed the run.
+    /// The execution backend refused or failed the prepare or the run.
     Backend(String),
 }
 
@@ -66,12 +70,26 @@ impl std::fmt::Display for HFlexError {
 
 impl std::error::Error for HFlexError {}
 
-/// One SpMM problem: `C = alpha * A @ B + beta * C`. The HFlex parameter
-/// set of Algorithm 1 — pointers + scalars, nothing hardware-shaped.
+/// Backend failures flow through unchanged — shape errors stay shape
+/// errors, everything else keeps the backend's own message — so HFlex and
+/// the serving coordinator report identical error text for the same
+/// failure.
+impl From<BackendError> for HFlexError {
+    fn from(e: BackendError) -> HFlexError {
+        match e {
+            BackendError::Shape(s) => HFlexError::ShapeMismatch(s),
+            other => HFlexError::Backend(other.to_string()),
+        }
+    }
+}
+
+/// One SpMM problem against a loaded matrix: `C = alpha * A @ B + beta * C`.
+/// The HFlex parameter set of Algorithm 1 — pointers + scalars, nothing
+/// hardware-shaped.
 #[derive(Debug)]
 pub struct SpmmProblem<'a> {
-    /// Preprocessed A (carries M, K, Q and the scheduled non-zeros).
-    pub a: &'a ScheduledMatrix,
+    /// The loaded (preprocessed + prepared) A.
+    pub a: &'a LoadedMatrix,
     /// Dense B, row-major K × N.
     pub b: &'a [f32],
     /// Dense C in/out, row-major M × N.
@@ -93,14 +111,54 @@ pub struct InvokeReport {
     pub backend: &'static str,
 }
 
+/// A matrix loaded onto an accelerator: the scheduled image plus the
+/// backend's matrix-resident [`PreparedSpmm`] handle. Invocations against
+/// it never re-submit or re-shard the image — the HFlex serving shape.
+///
+/// `Send + Sync` (executions serialize through an internal lock, matching
+/// one resident copy of A), so loaded matrices can be shared across
+/// request threads.
+pub struct LoadedMatrix {
+    image: Arc<ScheduledMatrix>,
+    prepared: Mutex<Box<dyn PreparedSpmm + Send>>,
+    cost: PrepareCost,
+}
+
+impl std::fmt::Debug for LoadedMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LoadedMatrix")
+            .field("m", &self.image.m)
+            .field("k", &self.image.k)
+            .field("nnz", &self.image.nnz)
+            .field("backend", &self.backend_name())
+            .finish()
+    }
+}
+
+impl LoadedMatrix {
+    /// The scheduled image this matrix is resident as.
+    pub fn image(&self) -> &Arc<ScheduledMatrix> {
+        &self.image
+    }
+
+    /// What loading cost and what the backend keeps resident.
+    pub fn prepare_cost(&self) -> PrepareCost {
+        self.cost
+    }
+
+    /// Name of the backend holding the residency.
+    pub fn backend_name(&self) -> &'static str {
+        self.prepared.lock().unwrap().backend_name()
+    }
+}
+
 /// A "synthesized" Sextans accelerator: an immutable configuration plus the
-/// execution backend that stands in for the silicon.
+/// execution backend that stands in for the silicon. Backends are stateless
+/// `Send + Sync` factories, so the accelerator itself is freely shareable;
+/// per-matrix state lives in the [`LoadedMatrix`] handles it loads.
 pub struct HFlexAccelerator {
     cfg: AcceleratorConfig,
-    // `+ Send` keeps the accelerator itself Send + Sync (shareable across
-    // threads like the seed's plain-config struct); executions serialize
-    // through the lock, matching one physical accelerator.
-    backend: Mutex<Box<dyn SpmmBackend + Send>>,
+    backend: Box<dyn SpmmBackend>,
 }
 
 impl std::fmt::Debug for HFlexAccelerator {
@@ -121,12 +179,9 @@ impl HFlexAccelerator {
     }
 
     /// Synthesis with an explicit execution backend (see
-    /// [`backend::create_send`] for name-based construction).
-    pub fn synthesize_with_backend(
-        cfg: AcceleratorConfig,
-        backend: Box<dyn SpmmBackend + Send>,
-    ) -> Self {
-        HFlexAccelerator { cfg, backend: Mutex::new(backend) }
+    /// [`backend::create`] for name-based construction).
+    pub fn synthesize_with_backend(cfg: AcceleratorConfig, backend: Box<dyn SpmmBackend>) -> Self {
+        HFlexAccelerator { cfg, backend }
     }
 
     /// The immutable configuration.
@@ -136,11 +191,14 @@ impl HFlexAccelerator {
 
     /// Name of the execution backend.
     pub fn backend_name(&self) -> &'static str {
-        self.backend.lock().unwrap().name()
+        self.backend.name()
     }
 
     /// Host-side preprocessing (§3.3's "C++ wrapper"): partition + OoO
-    /// schedule + encode for THIS accelerator's (P, K0, D).
+    /// schedule + encode for THIS accelerator's (P, K0, D). Most callers
+    /// want [`load`], which also makes the image backend-resident.
+    ///
+    /// [`load`]: HFlexAccelerator::load
     pub fn preprocess(&self, a: &Coo) -> Result<ScheduledMatrix, HFlexError> {
         let sm = preprocess(a, self.cfg.p(), self.cfg.k0, self.cfg.d);
         if sm.rows_per_pe() > self.cfg.c_depth {
@@ -152,16 +210,50 @@ impl HFlexAccelerator {
         Ok(sm)
     }
 
-    /// Execute one SpMM through the configured backend: the functional
-    /// result is written into `problem.c`, cycle-accurate timing of what
-    /// the silicon would do is returned. No re-synthesis, ever.
+    /// Load a matrix onto the accelerator: preprocess for this (P, K0, D)
+    /// and prepare it on the execution backend. The per-matrix cost, paid
+    /// once; every subsequent [`invoke`] runs against the resident handle.
+    ///
+    /// [`invoke`]: HFlexAccelerator::invoke
+    pub fn load(&self, a: &Coo) -> Result<LoadedMatrix, HFlexError> {
+        let image = Arc::new(self.preprocess(a)?);
+        self.load_image(image)
+    }
+
+    /// Load an already-preprocessed image (it must match this
+    /// accelerator's configuration and fit the C scratchpad).
+    pub fn load_image(&self, image: Arc<ScheduledMatrix>) -> Result<LoadedMatrix, HFlexError> {
+        let accel = (self.cfg.p(), self.cfg.k0, self.cfg.d);
+        let img = (image.p, image.k0, image.d);
+        if accel != img {
+            return Err(HFlexError::WrongConfiguration { image: img, accel });
+        }
+        if image.rows_per_pe() > self.cfg.c_depth {
+            return Err(HFlexError::ScratchpadOverflow {
+                rows_per_pe: image.rows_per_pe(),
+                c_depth: self.cfg.c_depth,
+            });
+        }
+        let prepared = self.backend.prepare_send(Arc::clone(&image))?;
+        let cost = prepared.prepare_cost();
+        Ok(LoadedMatrix { image, prepared: Mutex::new(prepared), cost })
+    }
+
+    /// Execute one SpMM against a loaded matrix: the functional result is
+    /// written into `problem.c`, cycle-accurate timing of what the silicon
+    /// would do is returned. No re-synthesis, no re-preparation, ever.
     pub fn invoke(&self, problem: SpmmProblem<'_>) -> Result<InvokeReport, HFlexError> {
-        let sm = problem.a;
+        let sm: &ScheduledMatrix = problem.a.image();
+        // A LoadedMatrix from a different accelerator generation is still a
+        // foreign image (loads are accelerator-specific).
         let accel = (self.cfg.p(), self.cfg.k0, self.cfg.d);
         let image = (sm.p, sm.k0, sm.d);
         if accel != image {
             return Err(HFlexError::WrongConfiguration { image, accel });
         }
+        // Same (P, K0, D) does not imply the same URAM depth: a matrix
+        // loaded on a deeper-scratchpad generation must still be refused
+        // here.
         if sm.rows_per_pe() > self.cfg.c_depth {
             return Err(HFlexError::ScratchpadOverflow {
                 rows_per_pe: sm.rows_per_pe(),
@@ -183,10 +275,9 @@ impl HFlexAccelerator {
             )));
         }
         let backend_name = {
-            let mut be = self.backend.lock().unwrap();
-            let name = be.name();
-            be.execute(sm, problem.b, problem.c, problem.n, problem.alpha, problem.beta)
-                .map_err(|e| HFlexError::Backend(e.to_string()))?;
+            let mut prepared = problem.a.prepared.lock().unwrap();
+            let name = prepared.backend_name();
+            prepared.execute(problem.b, problem.c, problem.n, problem.alpha, problem.beta)?;
             name
         };
         let sim = simulate(sm, &self.cfg, problem.n);
@@ -196,30 +287,47 @@ impl HFlexAccelerator {
 
 /// A matrix too tall for the C scratchpad, split into sequential row
 /// blocks (extension over the paper, which *excludes* such matrices from
-/// its evaluation: each block fits `c_depth × P` rows and is processed as
-/// an independent SpMM over the same B — correctness is exact because C
-/// rows partition cleanly across blocks).
-#[derive(Clone, Debug)]
+/// its evaluation: each block fits `c_depth × P` rows and is loaded as an
+/// independent resident SpMM over the same B — correctness is exact because
+/// C rows partition cleanly across blocks).
+#[derive(Debug)]
 pub struct TiledImage {
-    /// (first global row, scheduled image of the block) per block.
-    pub blocks: Vec<(usize, ScheduledMatrix)>,
+    /// (first global row, loaded block) per block.
+    pub blocks: Vec<(usize, LoadedMatrix)>,
     /// Total rows (M).
     pub m: usize,
     /// Columns (K).
     pub k: usize,
 }
 
+impl TiledImage {
+    /// Total prepare cost across blocks.
+    pub fn prepare_cost(&self) -> PrepareCost {
+        let mut total = PrepareCost::default();
+        for (_, block) in &self.blocks {
+            let c = block.prepare_cost();
+            total.wall += c.wall;
+            total.resident_bytes += c.resident_bytes;
+        }
+        total
+    }
+}
+
 impl HFlexAccelerator {
-    /// Preprocess with automatic row-block tiling: always succeeds, even
-    /// for M > c_depth × P (the paper's 5 GB/scratchpad exclusions).
-    pub fn preprocess_tiled(&self, a: &Coo) -> TiledImage {
+    /// Load with automatic row-block tiling: always succeeds shape-wise,
+    /// even for M > c_depth × P (the paper's 5 GB/scratchpad exclusions).
+    /// Every block is preprocessed *and* prepared, so the tiled invoke path
+    /// is as resident as the plain one.
+    pub fn load_tiled(&self, a: &Coo) -> Result<TiledImage, HFlexError> {
         let block_rows = self.cfg.c_depth * self.cfg.p();
         if a.m <= block_rows {
-            return TiledImage {
-                blocks: vec![(0, preprocess(a, self.cfg.p(), self.cfg.k0, self.cfg.d))],
+            let image =
+                Arc::new(preprocess(a, self.cfg.p(), self.cfg.k0, self.cfg.d));
+            return Ok(TiledImage {
+                blocks: vec![(0, self.load_image(image)?)],
                 m: a.m,
                 k: a.k,
-            };
+            });
         }
         let nblocks = a.m.div_ceil(block_rows);
         // Bucket non-zeros by row block, shifting rows to block-local.
@@ -232,21 +340,21 @@ impl HFlexAccelerator {
             cols[blk].push(a.cols[i]);
             vals[blk].push(a.vals[i]);
         }
-        let blocks = (0..nblocks)
-            .map(|blk| {
-                let off = blk * block_rows;
-                let m_blk = block_rows.min(a.m - off);
-                let coo = Coo {
-                    m: m_blk,
-                    k: a.k,
-                    rows: std::mem::take(&mut rows[blk]),
-                    cols: std::mem::take(&mut cols[blk]),
-                    vals: std::mem::take(&mut vals[blk]),
-                };
-                (off, preprocess(&coo, self.cfg.p(), self.cfg.k0, self.cfg.d))
-            })
-            .collect();
-        TiledImage { blocks, m: a.m, k: a.k }
+        let mut blocks = Vec::with_capacity(nblocks);
+        for blk in 0..nblocks {
+            let off = blk * block_rows;
+            let m_blk = block_rows.min(a.m - off);
+            let coo = Coo {
+                m: m_blk,
+                k: a.k,
+                rows: std::mem::take(&mut rows[blk]),
+                cols: std::mem::take(&mut cols[blk]),
+                vals: std::mem::take(&mut vals[blk]),
+            };
+            let image = Arc::new(preprocess(&coo, self.cfg.p(), self.cfg.k0, self.cfg.d));
+            blocks.push((off, self.load_image(image)?));
+        }
+        Ok(TiledImage { blocks, m: a.m, k: a.k })
     }
 
     /// Execute a tiled SpMM: blocks run sequentially on the accelerator
@@ -268,11 +376,11 @@ impl HFlexAccelerator {
             return Err(HFlexError::ShapeMismatch("C".into()));
         }
         let mut total_cycles = 0u64;
-        for (off, sm) in &image.blocks {
+        for (off, block) in &image.blocks {
             // C rows of this block are contiguous in row-major C.
-            let c_block = &mut c[off * n..(off + sm.m) * n];
+            let c_block = &mut c[off * n..(off + block.image().m) * n];
             let report = self.invoke(SpmmProblem {
-                a: sm,
+                a: block,
                 b,
                 c: c_block,
                 n,
@@ -310,12 +418,12 @@ mod tests {
         let mut rng = Rng::new(1);
         for (m, k, n) in [(64, 64, 8), (1000, 300, 16), (77, 4100, 64), (5, 5, 8)] {
             let a = gen::random_uniform(m, k, 0.1, &mut rng);
-            let sm = acc.preprocess(&a).unwrap();
+            let loaded = acc.load(&a).unwrap();
             let (b, mut c) = problem_data(k, m, n, 2);
             let mut want = c.clone();
             a.spmm_reference(&b, &mut want, n, 2.0, 0.5);
             let report = acc
-                .invoke(SpmmProblem { a: &sm, b: &b, c: &mut c, n, alpha: 2.0, beta: 0.5 })
+                .invoke(SpmmProblem { a: &loaded, b: &b, c: &mut c, n, alpha: 2.0, beta: 0.5 })
                 .unwrap();
             prop::assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
             assert!(report.sim.cycles > 0);
@@ -323,11 +431,29 @@ mod tests {
     }
 
     #[test]
-    fn accelerator_is_send_and_sync() {
-        // The accelerator must stay shareable across threads (pre-backend
-        // behavior): Mutex<Box<dyn SpmmBackend + Send>> keeps Send + Sync.
+    fn loaded_matrix_serves_many_invocations() {
+        // One load, many (B, n, alpha, beta): the A-resident serving shape.
+        let acc = accel();
+        let mut rng = Rng::new(31);
+        let a = gen::power_law_rows(120, 100, 1_500, 1.0, &mut rng);
+        let loaded = acc.load(&a).unwrap();
+        assert!(loaded.prepare_cost().resident_bytes > 0);
+        for (n, alpha, beta) in [(4usize, 1.0f32, 0.0f32), (9, 2.0, -0.5), (1, 0.5, 1.0)] {
+            let (b, mut c) = problem_data(a.k, a.m, n, 32 + n as u64);
+            let mut want = c.clone();
+            a.spmm_reference(&b, &mut want, n, alpha, beta);
+            acc.invoke(SpmmProblem { a: &loaded, b: &b, c: &mut c, n, alpha, beta }).unwrap();
+            prop::assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn accelerator_and_loaded_matrix_are_send_and_sync() {
+        // Shareable across request threads: the accelerator (stateless
+        // factory) and the loaded handle (internal lock).
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<HFlexAccelerator>();
+        assert_send_sync::<LoadedMatrix>();
     }
 
     #[test]
@@ -336,10 +462,11 @@ mod tests {
         assert_eq!(acc.backend_name(), "native");
         let mut rng = Rng::new(21);
         let a = gen::random_uniform(32, 32, 0.2, &mut rng);
-        let sm = acc.preprocess(&a).unwrap();
+        let loaded = acc.load(&a).unwrap();
+        assert_eq!(loaded.backend_name(), "native");
         let (b, mut c) = problem_data(32, 32, 4, 22);
         let report = acc
-            .invoke(SpmmProblem { a: &sm, b: &b, c: &mut c, n: 4, alpha: 1.0, beta: 0.0 })
+            .invoke(SpmmProblem { a: &loaded, b: &b, c: &mut c, n: 4, alpha: 1.0, beta: 0.0 })
             .unwrap();
         assert_eq!(report.backend, "native");
     }
@@ -348,19 +475,39 @@ mod tests {
     fn explicit_backend_selection() {
         let acc = HFlexAccelerator::synthesize_with_backend(
             AcceleratorConfig::sextans_u280(),
-            crate::backend::create_send("functional").unwrap(),
+            crate::backend::create("functional").unwrap(),
         );
         assert_eq!(acc.backend_name(), "functional");
         let mut rng = Rng::new(23);
         let a = gen::random_uniform(40, 30, 0.15, &mut rng);
-        let sm = acc.preprocess(&a).unwrap();
+        let loaded = acc.load(&a).unwrap();
         let (b, mut c) = problem_data(30, 40, 3, 24);
         let mut want = c.clone();
         a.spmm_reference(&b, &mut want, 3, 1.0, 1.0);
         let report = acc
-            .invoke(SpmmProblem { a: &sm, b: &b, c: &mut c, n: 3, alpha: 1.0, beta: 1.0 })
+            .invoke(SpmmProblem { a: &loaded, b: &b, c: &mut c, n: 3, alpha: 1.0, beta: 1.0 })
             .unwrap();
         assert_eq!(report.backend, "functional");
+        prop::assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
+    }
+
+    #[test]
+    fn sharded_backend_loads_and_invokes() {
+        let acc = HFlexAccelerator::synthesize_with_backend(
+            AcceleratorConfig::sextans_u280(),
+            crate::backend::create("sharded:2:native:1").unwrap(),
+        );
+        let mut rng = Rng::new(25);
+        let a = gen::random_uniform(64, 48, 0.1, &mut rng);
+        let loaded = acc.load(&a).unwrap();
+        assert_eq!(loaded.backend_name(), "sharded");
+        let (b, mut c) = problem_data(48, 64, 5, 26);
+        let mut want = c.clone();
+        a.spmm_reference(&b, &mut want, 5, 1.0, 0.0);
+        let report = acc
+            .invoke(SpmmProblem { a: &loaded, b: &b, c: &mut c, n: 5, alpha: 1.0, beta: 0.0 })
+            .unwrap();
+        assert_eq!(report.backend, "sharded");
         prop::assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
     }
 
@@ -369,14 +516,49 @@ mod tests {
         let acc = accel();
         let mut rng = Rng::new(3);
         let a = gen::random_uniform(64, 64, 0.1, &mut rng);
-        // Preprocess for a DIFFERENT window size.
-        let foreign = preprocess(&a, acc.config().p(), 1024, acc.config().d);
-        let (b, mut c) = problem_data(64, 64, 8, 4);
-        let err = acc
-            .invoke(SpmmProblem { a: &foreign, b: &b, c: &mut c, n: 8, alpha: 1.0, beta: 0.0 })
-            .unwrap_err();
+        // Preprocess for a DIFFERENT window size: refused at load.
+        let foreign = Arc::new(preprocess(&a, acc.config().p(), 1024, acc.config().d));
+        let err = acc.load_image(foreign).map(|_| ()).unwrap_err();
         assert!(matches!(err, HFlexError::WrongConfiguration { .. }));
         assert!(err.to_string().contains("re-synthesis"));
+    }
+
+    #[test]
+    fn rejects_loaded_matrix_from_other_accelerator() {
+        // A LoadedMatrix prepared for one generation is foreign to another.
+        let acc = accel();
+        let mut other_cfg = AcceleratorConfig::sextans_u280();
+        other_cfg.k0 = 1024;
+        let other = HFlexAccelerator::synthesize(other_cfg);
+        let mut rng = Rng::new(33);
+        let a = gen::random_uniform(32, 32, 0.2, &mut rng);
+        let loaded = other.load(&a).unwrap();
+        let (b, mut c) = problem_data(32, 32, 4, 34);
+        let err = acc
+            .invoke(SpmmProblem { a: &loaded, b: &b, c: &mut c, n: 4, alpha: 1.0, beta: 0.0 })
+            .unwrap_err();
+        assert!(matches!(err, HFlexError::WrongConfiguration { .. }));
+    }
+
+    #[test]
+    fn invoke_rejects_overflow_from_deeper_scratchpad_generation() {
+        // Same (P, K0, D), larger c_depth: a matrix loaded there must not
+        // slip past a smaller-scratchpad accelerator at invoke time.
+        let small = tiny_accel(); // c_depth = 16
+        let mut big_cfg = AcceleratorConfig::sextans_u280();
+        big_cfg.pegs = 2;
+        big_cfg.pes_per_peg = 2;
+        big_cfg.c_depth = 64; // block = 256 rows
+        big_cfg.k0 = 32;
+        let big = HFlexAccelerator::synthesize(big_cfg);
+        let mut rng = Rng::new(15);
+        let a = gen::random_uniform(200, 30, 0.1, &mut rng); // fits big, not small
+        let loaded = big.load(&a).unwrap();
+        let (b, mut c) = problem_data(30, 200, 2, 16);
+        let err = small
+            .invoke(SpmmProblem { a: &loaded, b: &b, c: &mut c, n: 2, alpha: 1.0, beta: 0.0 })
+            .unwrap_err();
+        assert!(matches!(err, HFlexError::ScratchpadOverflow { .. }));
     }
 
     #[test]
@@ -384,7 +566,7 @@ mod tests {
         // M > c_depth * P: 64 PEs * 12,288 = 786,432 rows max.
         let acc = accel();
         let huge = Coo::empty(800_000, 16);
-        let err = acc.preprocess(&huge).unwrap_err();
+        let err = acc.load(&huge).map(|_| ()).unwrap_err();
         assert!(matches!(err, HFlexError::ScratchpadOverflow { .. }));
     }
 
@@ -393,12 +575,28 @@ mod tests {
         let acc = accel();
         let mut rng = Rng::new(5);
         let a = gen::random_uniform(16, 16, 0.2, &mut rng);
-        let sm = acc.preprocess(&a).unwrap();
+        let loaded = acc.load(&a).unwrap();
         let (b, mut c) = problem_data(16, 16, 8, 6);
         let err = acc
-            .invoke(SpmmProblem { a: &sm, b: &b[..10], c: &mut c, n: 8, alpha: 1.0, beta: 0.0 })
+            .invoke(SpmmProblem { a: &loaded, b: &b[..10], c: &mut c, n: 8, alpha: 1.0, beta: 0.0 })
             .unwrap_err();
         assert!(matches!(err, HFlexError::ShapeMismatch(_)));
+    }
+
+    #[test]
+    fn backend_errors_convert_without_restringifying() {
+        let shape = BackendError::Shape("B has 3 elements".into());
+        assert_eq!(
+            HFlexError::from(shape),
+            HFlexError::ShapeMismatch("B has 3 elements".into())
+        );
+        let exec = BackendError::Execution("boom".into());
+        let converted = HFlexError::from(exec);
+        // The inner text is exactly the BackendError display, once.
+        assert_eq!(
+            converted,
+            HFlexError::Backend(BackendError::Execution("boom".into()).to_string())
+        );
     }
 
     use crate::sparse::Coo;
@@ -418,7 +616,7 @@ mod tests {
         let acc = tiny_accel();
         let mut rng = Rng::new(7);
         let a = gen::random_uniform(200, 70, 0.1, &mut rng); // 4 blocks
-        let image = acc.preprocess_tiled(&a);
+        let image = acc.load_tiled(&a).unwrap();
         assert_eq!(image.blocks.len(), 4);
         let n = 5;
         let (b, mut c) = problem_data(70, 200, n, 8);
@@ -436,7 +634,7 @@ mod tests {
         let acc = tiny_accel();
         let mut rng = Rng::new(9);
         let a = gen::random_uniform(60, 40, 0.1, &mut rng);
-        let image = acc.preprocess_tiled(&a);
+        let image = acc.load_tiled(&a).unwrap();
         assert_eq!(image.blocks.len(), 1);
     }
 
@@ -445,26 +643,28 @@ mod tests {
         let acc = tiny_accel();
         let mut rng = Rng::new(11);
         let a = gen::random_uniform(300, 50, 0.05, &mut rng);
-        let image = acc.preprocess_tiled(&a);
-        for (_, sm) in &image.blocks {
-            assert!(sm.rows_per_pe() <= acc.config().c_depth);
+        let image = acc.load_tiled(&a).unwrap();
+        for (_, block) in &image.blocks {
+            assert!(block.image().rows_per_pe() <= acc.config().c_depth);
         }
         // Every non-zero lands in exactly one block.
-        let total: usize = image.blocks.iter().map(|(_, sm)| sm.nnz).sum();
+        let total: usize = image.blocks.iter().map(|(_, b)| b.image().nnz).sum();
         assert_eq!(total, a.nnz());
+        // Prepare cost aggregates across blocks.
+        assert!(image.prepare_cost().resident_bytes > 0);
     }
 
     #[test]
-    fn tiled_beats_plain_preprocess_rejection() {
+    fn tiled_beats_plain_load_rejection() {
         // The plain path refuses what the tiled path handles.
         let acc = tiny_accel();
         let mut rng = Rng::new(13);
         let a = gen::random_uniform(200, 30, 0.08, &mut rng);
         assert!(matches!(
-            acc.preprocess(&a),
+            acc.load(&a).map(|_| ()),
             Err(HFlexError::ScratchpadOverflow { .. })
         ));
-        let image = acc.preprocess_tiled(&a);
+        let image = acc.load_tiled(&a).unwrap();
         let n = 2;
         let (b, mut c) = problem_data(30, 200, n, 14);
         acc.invoke_tiled(&image, &b, &mut c, n, 1.0, 0.0).unwrap();

@@ -6,12 +6,14 @@
 //!               [--backend NAME] [--shards S] [--xla]
 //! sextans gen   --m M --k K --density D --out file.mtx [--seed S]
 //! sextans serve [--requests R] [--workers W] [--backend NAME] [--shards S]
+//! sextans backends
 //! sextans info
 //! ```
 //!
 //! `--backend` picks the execution engine by registry name (default:
-//! `native`, the multi-threaded host engine; see `sextans info` for the
-//! full list). `--shards S` (S > 1) spreads each SpMM across S parallel
+//! `native`, the multi-threaded host engine; `sextans backends` lists every
+//! registered engine with its capability and availability in this build).
+//! `--shards S` (S > 1) spreads each SpMM across S parallel
 //! accelerator instances of that backend — `run` drives the
 //! [`sextans::shard`] API directly and prints per-shard load and latency;
 //! `serve` wraps the spec as `sharded:<S>:<backend>` so the coordinator
@@ -23,7 +25,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use sextans::arch::{resources, simulate, AcceleratorConfig};
-use sextans::backend;
+use sextans::backend::{self, SpmmBackend};
 use sextans::cli::Cli;
 use sextans::coordinator::{BatchPolicy, Server, SpmmRequest};
 use sextans::hflex::{HFlexAccelerator, SpmmProblem};
@@ -41,10 +43,11 @@ fn main() {
         "run" => cmd_run(&cli),
         "gen" => cmd_gen(&cli),
         "serve" => cmd_serve(&cli),
+        "backends" => cmd_backends(),
         "info" | "" => cmd_info(),
         other => {
             eprintln!("unknown command {other:?}");
-            eprintln!("commands: repro, run, gen, serve, info");
+            eprintln!("commands: repro, run, gen, serve, backends, info");
             std::process::exit(2);
         }
     };
@@ -135,6 +138,8 @@ fn cmd_run(cli: &Cli) -> Result<()> {
             bail!("--xla cross-checks the single-accelerator engine; run it without --shards");
         }
         // Sharded path: S parallel accelerator instances, row-partitioned.
+        // Prepare once (plan + per-shard images + resident inner handles),
+        // then execute against the resident pool.
         let t0 = std::time::Instant::now();
         let sharded = ShardedMatrix::build(&coo, shards, cfg.p(), cfg.k0, cfg.d);
         println!(
@@ -143,9 +148,15 @@ fn cmd_run(cli: &Cli) -> Result<()> {
             t0.elapsed().as_secs_f64() * 1e3,
             sharded.imbalance()
         );
-        let mut exec = ShardExecutor::from_spec(backend_spec, shards)?;
-        println!("backend: {shards} x {backend_spec:?} (thread-budgeted)");
-        let stats = exec.execute(&sharded, &b, &mut c, n, alpha, beta)?;
+        let mut exec = ShardExecutor::prepare(&sharded, backend_spec)?;
+        let pcost = exec.prepare_cost();
+        println!(
+            "backend: {shards} x {backend_spec:?} (thread-budgeted); prepared in {:.2} ms, \
+             {:.2} MiB resident",
+            pcost.wall.as_secs_f64() * 1e3,
+            pcost.resident_bytes as f64 / (1024.0 * 1024.0)
+        );
+        let stats = exec.execute(&b, &mut c, n, alpha, beta)?;
         // Per-shard simulated cycles: the pool's makespan is the slowest
         // shard (shards run on independent accelerators).
         let mut makespan_cycles = 0u64;
@@ -190,10 +201,12 @@ fn cmd_run(cli: &Cli) -> Result<()> {
     let c_in = c.clone();
     let accel = HFlexAccelerator::synthesize_with_backend(
         cfg,
-        backend::create_send(backend_spec)?,
+        backend::create(backend_spec)?,
     );
     println!("backend: {} (spec {backend_spec:?})", accel.backend_name());
-    let image = accel.preprocess(&coo)?;
+    // Load = preprocess + make backend-resident, paid once per matrix.
+    let loaded = accel.load(&coo)?;
+    let image = loaded.image();
     println!(
         "preprocessed: {} windows, {} slots ({} bubbles), effective II {:.4}",
         image.num_windows,
@@ -201,8 +214,15 @@ fn cmd_run(cli: &Cli) -> Result<()> {
         image.total_bubbles(),
         image.effective_ii()
     );
+    let pcost = loaded.prepare_cost();
+    println!(
+        "loaded: prepared on {:?} in {:.2} ms, {:.2} MiB resident",
+        loaded.backend_name(),
+        pcost.wall.as_secs_f64() * 1e3,
+        pcost.resident_bytes as f64 / (1024.0 * 1024.0)
+    );
 
-    let report = accel.invoke(SpmmProblem { a: &image, b: &b, c: &mut c, n, alpha, beta })?;
+    let report = accel.invoke(SpmmProblem { a: &loaded, b: &b, c: &mut c, n, alpha, beta })?;
     let sim = &report.sim;
     println!(
         "simulated: {} cycles = {:.3} ms @ {} MHz -> {:.2} GFLOP/s",
@@ -323,6 +343,15 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     for (name, count) in &s.backends {
         println!("  backend {name}: {count} requests");
     }
+    println!(
+        "  prepares: {} ({} cache hits, hit rate {:.0}%), mean prepare {:.2} ms, \
+         {:.2} MiB made resident",
+        s.prepares,
+        s.prepare_hits,
+        s.prepare_hit_rate * 100.0,
+        s.mean_prepare_s * 1e3,
+        s.prepared_bytes as f64 / (1024.0 * 1024.0)
+    );
     if s.shard_execs > 0 {
         println!(
             "  shards: {} sharded executions, mean {:.1} shards, nnz imbalance mean {:.3} / \
@@ -334,6 +363,39 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             s.mean_shard_makespan_s * 1e3
         );
     }
+    Ok(())
+}
+
+/// `backends`: every registry name with its capability and availability in
+/// this build.
+fn cmd_backends() -> Result<()> {
+    println!(
+        "{:<15} {:<12} {:>7} {:>6}  {:<13} {:<10} description",
+        "name", "status", "threads", "lanes", "deterministic", "artifacts"
+    );
+    for info in backend::registry() {
+        let status = if info.available { "available" } else { "unavailable" };
+        match backend::create(info.name) {
+            Ok(be) => {
+                let cap = be.capability();
+                println!(
+                    "{:<15} {:<12} {:>7} {:>6}  {:<13} {:<10} {}",
+                    info.name,
+                    status,
+                    cap.threads,
+                    cap.simd_lanes,
+                    if cap.deterministic { "yes" } else { "no" },
+                    if cap.requires_artifacts { "required" } else { "no" },
+                    info.description
+                );
+            }
+            Err(e) => println!("{:<15} {:<12} {e}", info.name, status),
+        }
+    }
+    println!(
+        "\nspecs: native:<threads>, native-blocked:<threads>, sharded:<S>:<inner>; \
+         select with --backend on `run`/`serve`"
+    );
     Ok(())
 }
 

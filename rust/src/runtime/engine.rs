@@ -6,8 +6,8 @@
 //! fixed executables (HFlex: only buffer contents change). HLO *text* is the
 //! interchange format (see `python/compile/aot.py` and /opt/xla-example).
 //!
-//! Only compiled with the `pjrt` cargo feature (needs the `xla` crate);
-//! see `engine_stub.rs` for the default build.
+//! Only compiled with the `pjrt` + `xla` cargo features (needs the `xla`
+//! bindings crate); see `engine_stub.rs` for every other build.
 
 use std::collections::HashMap;
 use std::path::Path;

@@ -1,4 +1,5 @@
-//! Stub engine, compiled when the `pjrt` cargo feature is off.
+//! Stub engine, compiled unless both the `pjrt` and `xla` cargo features
+//! are on (the real engine needs the `xla` bindings crate).
 //!
 //! Keeps the full [`Engine`] API surface so every consumer (the `pjrt`
 //! execution backend, `sextans run --xla`, examples, benches) type-checks
@@ -26,8 +27,8 @@ impl Engine {
     /// Always fails: the build has no PJRT support.
     pub fn load(_dir: &Path) -> Result<Engine> {
         bail!(
-            "PJRT engine unavailable: built without the `pjrt` cargo feature \
-             (enable it, add the `xla` dependency, and run `make artifacts`)"
+            "PJRT engine unavailable: built without the `pjrt`+`xla` cargo features \
+             (enable both, add the `xla` dependency, and run `make artifacts`)"
         )
     }
 

@@ -2,17 +2,20 @@
 //! Pallas kernels from the rust request path. Python never runs here.
 //!
 //! The real engine needs the `xla` bindings crate and is therefore gated
-//! behind the `pjrt` cargo feature. Without it (the default in artifact-free
-//! environments), [`Engine`] is an API-identical stub whose `load` reports
-//! unavailability — callers (the `pjrt` execution backend, examples, tests)
-//! degrade gracefully instead of failing to build.
+//! behind **both** the `pjrt` and `xla` cargo features (`xla` marks the
+//! bindings dependency as actually wired into the manifest). With `pjrt`
+//! alone — the configuration CI's feature matrix builds — [`Engine`] is
+//! still the API-identical stub whose `load` reports unavailability, so the
+//! feature-gated API surface compiles in artifact-free environments and
+//! callers (the `pjrt` execution backend, examples, tests) degrade
+//! gracefully instead of failing to build.
 
 pub mod manifest;
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla"))]
 pub mod engine;
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "xla")))]
 #[path = "engine_stub.rs"]
 pub mod engine;
 

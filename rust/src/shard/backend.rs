@@ -1,100 +1,91 @@
 //! The `"sharded:<S>:<inner>"` composite backend: sharding behind the
-//! plain [`SpmmBackend`] contract, so every registry consumer (the HFlex
-//! accelerator, the serving coordinator, the CLI) gains multi-accelerator
-//! execution from a spec string alone.
+//! plain [`SpmmBackend`] prepare/execute contract, so every registry
+//! consumer (the HFlex accelerator, the serving coordinator, the CLI)
+//! gains multi-accelerator execution from a spec string alone.
 //!
-//! The backend contract hands over a *preprocessed image*, not raw COO, so
-//! the composite inverts preprocessing once ([`reconstruct_coo`]), builds a
-//! [`ShardedMatrix`] for the same (P, K0, D), and caches it keyed by a
-//! content fingerprint of the image. The cache holds the
-//! [`CACHE_ENTRIES`] most recently used matrices, so a worker serving
-//! several registered models (the coordinator's normal multi-model case)
-//! still pays only an O(slots) hash per request, not a re-shard.
-//! Shard-level timings of the latest run are exposed through
-//! [`SpmmBackend::shard_stats`] so serving metrics can aggregate them.
+//! The two-phase contract puts all the sharding work where it belongs:
+//! [`SpmmBackend::prepare`] inverts preprocessing once, row-partitions into
+//! S nnz-balanced shards ([`ShardedMatrix::from_image`]), and prepares one
+//! inner handle per shard ([`ShardExecutor::prepare`]). The returned
+//! [`PreparedSharded`] handle is the resident pool — every execute is pure
+//! gather → parallel shards → scatter, with no per-request re-shard, no
+//! image content hashing, nothing to invalidate. Shard-level timings of the
+//! latest run are exposed through [`PreparedSpmm::shard_stats`] so serving
+//! metrics can aggregate them.
+
+use std::sync::Arc;
+use std::time::Instant;
 
 use super::executor::ShardExecutor;
-use super::plan::{reconstruct_coo, ShardedMatrix};
+use super::plan::ShardedMatrix;
 use super::{ShardError, ShardRunStats};
-use crate::backend::{check_shapes, BackendError, Capability, SpmmBackend};
+use crate::backend::{
+    self, BackendError, Capability, PrepareCost, PreparedSpmm, SpmmBackend,
+};
 use crate::sched::ScheduledMatrix;
 
-/// Sharded images kept per backend instance, most recently used first.
-/// Sized for a worker serving a handful of registered matrices; beyond
-/// this the oldest re-shard is rebuilt on next use.
-pub const CACHE_ENTRIES: usize = 8;
-
-/// Composite backend running S row-shards in parallel over inner engines.
+/// Composite backend factory: prepares S row-shards over inner engines.
+/// Stateless — the shard plan and the inner handles live in the
+/// [`PreparedSharded`] handles it produces.
 pub struct ShardedBackend {
     shards: usize,
-    executor: ShardExecutor,
-    /// Recently sharded images, MRU-first, keyed by content fingerprint.
-    cache: Vec<(u64, ShardedMatrix)>,
-    /// Stats of the most recent successful execution.
-    last_stats: Option<ShardRunStats>,
+    /// Inner registry spec, as given (thread budgeting happens per prepare,
+    /// inside [`ShardExecutor::prepare`]).
+    inner_spec: String,
+    /// Aggregate capability, computed once from a probe of the budgeted
+    /// inner spec.
+    cap: Capability,
 }
 
 impl ShardedBackend {
-    /// Build from a shard count and an inner registry spec (see
-    /// [`ShardExecutor::from_spec`] for thread budgeting and nesting rules).
+    /// Build from a shard count and an inner registry spec. The inner spec
+    /// is validated (and nested `sharded` refused) here, so bad specs fail
+    /// at construction rather than at first prepare.
     pub fn from_spec(shards: usize, inner_spec: &str) -> Result<ShardedBackend, BackendError> {
         if shards == 0 {
             return Err(BackendError::InvalidSpec(
                 "sharded:<S> needs S >= 1".into(),
             ));
         }
-        let executor = ShardExecutor::from_spec(inner_spec, shards)?;
-        Ok(ShardedBackend { shards, executor, cache: Vec::new(), last_stats: None })
-    }
-
-    /// Build around an explicit executor (tests, heterogeneous pools). The
-    /// shard count is the executor's backend count.
-    pub fn from_executor(executor: ShardExecutor) -> ShardedBackend {
-        ShardedBackend {
-            shards: executor.num_shards(),
-            executor,
-            cache: Vec::new(),
-            last_stats: None,
+        if inner_spec == "sharded" || inner_spec.starts_with("sharded:") {
+            return Err(BackendError::InvalidSpec(
+                "sharded cannot nest inside sharded".into(),
+            ));
         }
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let budgeted = backend::apply_thread_budget(inner_spec, (cores / shards).max(1));
+        let inner_cap = backend::create(&budgeted)?.capability();
+        Ok(ShardedBackend {
+            shards,
+            inner_spec: inner_spec.to_string(),
+            cap: Capability {
+                threads: (inner_cap.threads * shards).max(1),
+                simd_lanes: inner_cap.simd_lanes,
+                requires_artifacts: inner_cap.requires_artifacts,
+                deterministic: inner_cap.deterministic,
+            },
+        })
     }
 
     /// Configured shard count.
     pub fn num_shards(&self) -> usize {
         self.shards
     }
-}
 
-const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
-
-#[inline]
-fn fnv(h: u64, x: u64) -> u64 {
-    (h ^ x).wrapping_mul(FNV_PRIME)
-}
-
-/// Content fingerprint of a scheduled image: dimensions, every stream's Q
-/// pointer list, and every encoded word (FNV-1a over u64s). Q matters: the
-/// encoded words store *window-local* columns, so the same word sequence
-/// under different window boundaries is a different matrix. One linear
-/// pass per request — a deliberate correctness-over-speed trade (pointer
-/// identity could be recycled across deregistered models); if the hash
-/// ever shows up in profiles, precompute it once on `ScheduledMatrix` at
-/// preprocess time and compare stored values here.
-fn fingerprint(sm: &ScheduledMatrix) -> u64 {
-    let mut h = FNV_OFFSET;
-    for dim in [sm.m, sm.k, sm.p, sm.k0, sm.d, sm.num_windows, sm.nnz] {
-        h = fnv(h, dim as u64);
+    fn build(&self, image: Arc<ScheduledMatrix>) -> Result<PreparedSharded, BackendError> {
+        let t0 = Instant::now();
+        // The build path, paid exactly once per prepared matrix: invert
+        // preprocessing, plan + preprocess S shards, prepare each inner.
+        let sharded = ShardedMatrix::from_image(&image, self.shards);
+        let executor = ShardExecutor::prepare(&sharded, &self.inner_spec)?;
+        let resident_bytes = executor.prepare_cost().resident_bytes;
+        Ok(PreparedSharded {
+            image,
+            executor,
+            last_stats: None,
+            cost: PrepareCost { wall: t0.elapsed(), resident_bytes },
+        })
     }
-    for stream in &sm.streams {
-        h = fnv(h, stream.encoded.len() as u64);
-        for &start in stream.q.entries() {
-            h = fnv(h, start as u64);
-        }
-        for &word in &stream.encoded {
-            h = fnv(h, word);
-        }
-    }
-    h
 }
 
 impl SpmmBackend for ShardedBackend {
@@ -103,49 +94,73 @@ impl SpmmBackend for ShardedBackend {
     }
 
     fn capability(&self) -> Capability {
-        let inners = self.executor.backends();
-        Capability {
-            threads: inners.iter().map(|b| b.capability().threads).sum::<usize>().max(1),
-            simd_lanes: inners.first().map(|b| b.capability().simd_lanes).unwrap_or(1),
-            requires_artifacts: inners.iter().any(|b| b.capability().requires_artifacts),
-            deterministic: inners.iter().all(|b| b.capability().deterministic),
-        }
+        self.cap
+    }
+
+    fn prepare(&self, image: Arc<ScheduledMatrix>) -> Result<Box<dyn PreparedSpmm>, BackendError> {
+        Ok(Box::new(self.build(image)?))
+    }
+
+    fn prepare_send(
+        &self,
+        image: Arc<ScheduledMatrix>,
+    ) -> Result<Box<dyn PreparedSpmm + Send>, BackendError> {
+        Ok(Box::new(self.build(image)?))
+    }
+}
+
+/// A matrix resident across a shard pool: the shard plan, one preprocessed
+/// image per shard, and one prepared inner handle per shard.
+pub struct PreparedSharded {
+    /// The unsharded source image (kept so the handle reports the matrix it
+    /// is resident for and the Arc stays alive for the caller's bookkeeping).
+    image: Arc<ScheduledMatrix>,
+    executor: ShardExecutor,
+    /// Stats of the most recent successful execution.
+    last_stats: Option<ShardRunStats>,
+    cost: PrepareCost,
+}
+
+impl PreparedSharded {
+    /// Wrap an explicitly assembled executor (tests, heterogeneous pools).
+    pub fn from_executor(image: Arc<ScheduledMatrix>, executor: ShardExecutor) -> PreparedSharded {
+        let cost = executor.prepare_cost();
+        PreparedSharded { image, executor, last_stats: None, cost }
+    }
+
+    /// Number of resident shards.
+    pub fn num_shards(&self) -> usize {
+        self.executor.num_shards()
+    }
+
+    /// The source image this pool is resident for.
+    pub fn image(&self) -> &Arc<ScheduledMatrix> {
+        &self.image
+    }
+}
+
+impl PreparedSpmm for PreparedSharded {
+    fn backend_name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn prepare_cost(&self) -> PrepareCost {
+        self.cost
     }
 
     fn execute(
         &mut self,
-        sm: &ScheduledMatrix,
         b: &[f32],
         c: &mut [f32],
         n: usize,
         alpha: f32,
         beta: f32,
     ) -> Result<(), BackendError> {
-        check_shapes(sm, b, c, n)?;
         self.last_stats = None;
-        let fp = fingerprint(sm);
-        match self.cache.iter().position(|(cached, _)| *cached == fp) {
-            Some(0) => {}
-            Some(i) => {
-                // MRU: bubble the hit to the front.
-                let entry = self.cache.remove(i);
-                self.cache.insert(0, entry);
-            }
-            None => {
-                let coo = reconstruct_coo(sm);
-                let sharded = ShardedMatrix::build(&coo, self.shards, sm.p, sm.k0, sm.d);
-                self.cache.insert(0, (fp, sharded));
-                self.cache.truncate(CACHE_ENTRIES);
-            }
-        }
-        let sharded = &self.cache[0].1;
-        let stats = self
-            .executor
-            .execute(sharded, b, c, n, alpha, beta)
-            .map_err(|e| match e {
-                ShardError::Shape(s) => BackendError::Shape(s),
-                err @ ShardError::ShardFailed { .. } => BackendError::Execution(err.to_string()),
-            })?;
+        let stats = self.executor.execute(b, c, n, alpha, beta).map_err(|e| match e {
+            ShardError::Shape(s) => BackendError::Shape(s),
+            err @ ShardError::ShardFailed { .. } => BackendError::Execution(err.to_string()),
+        })?;
         self.last_stats = Some(stats);
         Ok(())
     }
@@ -158,15 +173,15 @@ impl SpmmBackend for ShardedBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::{self, FunctionalBackend};
+    use crate::backend::FunctionalBackend;
     use crate::prop;
     use crate::sched::preprocess;
     use crate::sparse::{gen, rng::Rng};
 
-    fn image(seed: u64) -> (crate::sparse::Coo, ScheduledMatrix) {
+    fn image(seed: u64) -> (crate::sparse::Coo, Arc<ScheduledMatrix>) {
         let mut rng = Rng::new(seed);
         let coo = gen::power_law_rows(120, 90, 1_500, 1.0, &mut rng);
-        let sm = preprocess(&coo, 4, 32, 6);
+        let sm = Arc::new(preprocess(&coo, 4, 32, 6));
         (coo, sm)
     }
 
@@ -178,42 +193,42 @@ mod tests {
         let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
         let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
         let mut want = c0.clone();
-        FunctionalBackend.execute(&sm, &b, &mut want, n, 2.0, -0.5).unwrap();
+        FunctionalBackend
+            .prepare(Arc::clone(&sm))
+            .unwrap()
+            .execute(&b, &mut want, n, 2.0, -0.5)
+            .unwrap();
         for s in [1usize, 3, 8] {
-            let mut be = ShardedBackend::from_spec(s, "native:1").unwrap();
+            let be = ShardedBackend::from_spec(s, "native:1").unwrap();
+            let mut handle = be.prepare(Arc::clone(&sm)).unwrap();
             let mut c = c0.clone();
-            be.execute(&sm, &b, &mut c, n, 2.0, -0.5).unwrap();
+            handle.execute(&b, &mut c, n, 2.0, -0.5).unwrap();
             prop::assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
-            let stats = be.shard_stats().expect("stats after success");
+            let stats = handle.shard_stats().expect("stats after success");
             assert_eq!(stats.shards, s);
         }
     }
 
     #[test]
-    fn cache_keeps_multiple_images_mru_first() {
+    fn one_handle_shards_once_and_serves_many() {
         let (coo, sm) = image(3);
-        let (_, sm2) = image(4);
-        let mut be = ShardedBackend::from_spec(2, "functional").unwrap();
-        let n = 2;
-        let b = vec![1.0f32; coo.k * n];
-        let mut c = vec![0.0f32; coo.m * n];
-        be.execute(&sm, &b, &mut c, n, 1.0, 0.0).unwrap();
-        assert_eq!(be.cache.len(), 1);
-        let fp1 = be.cache[0].0;
-        be.execute(&sm, &b, &mut c, n, 1.0, 0.0).unwrap();
-        assert_eq!(be.cache.len(), 1, "repeat must hit, not append");
-        // A second image is cached alongside the first (multi-model
-        // serving must not thrash), and becomes the MRU entry.
-        let b2 = vec![1.0f32; sm2.k * n];
-        let mut c2 = vec![0.0f32; sm2.m * n];
-        be.execute(&sm2, &b2, &mut c2, n, 1.0, 0.0).unwrap();
-        assert_eq!(be.cache.len(), 2);
-        assert_ne!(be.cache[0].0, fp1, "new image must be MRU");
-        // Re-running the first image bubbles it back to the front without
-        // evicting the second.
-        be.execute(&sm, &b, &mut c, n, 1.0, 0.0).unwrap();
-        assert_eq!(be.cache.len(), 2);
-        assert_eq!(be.cache[0].0, fp1);
+        let be = ShardedBackend::from_spec(3, "functional").unwrap();
+        let mut handle = be.prepare(Arc::clone(&sm)).unwrap();
+        // Prepare did the sharding: resident bytes cover the shard images,
+        // and the wall time is nonzero-able (not asserted — clocks).
+        assert!(handle.prepare_cost().resident_bytes > 0);
+        let mut rng = Rng::new(4);
+        // Many requests, n varying across calls, against the one handle.
+        for n in [2usize, 6, 1, 4] {
+            let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+            let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+            let mut want = c0.clone();
+            coo.spmm_reference(&b, &mut want, n, 1.5, -0.25);
+            let mut c = c0;
+            handle.execute(&b, &mut c, n, 1.5, -0.25).unwrap();
+            prop::assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
+            assert_eq!(handle.shard_stats().unwrap().shards, 3);
+        }
     }
 
     #[test]
@@ -221,32 +236,40 @@ mod tests {
         let be = backend::create("sharded:3:native:1").unwrap();
         assert_eq!(be.name(), "sharded");
         assert!(be.capability().threads >= 3);
-        let send = backend::create_send("sharded:2:functional").unwrap();
-        assert_eq!(send.name(), "sharded");
+        let (_, sm) = image(5);
+        let handle = be.prepare_send(Arc::clone(&sm)).unwrap();
+        assert_eq!(handle.backend_name(), "sharded");
     }
 
     #[test]
-    fn fingerprints_differ_across_images() {
-        let (_, a) = image(5);
-        let (_, b) = image(6);
-        assert_ne!(fingerprint(&a), fingerprint(&b));
-        assert_eq!(fingerprint(&a), fingerprint(&a.clone()));
+    fn from_spec_rejects_bad_specs_eagerly() {
+        assert!(matches!(
+            ShardedBackend::from_spec(0, "native"),
+            Err(BackendError::InvalidSpec(_))
+        ));
+        assert!(matches!(
+            ShardedBackend::from_spec(2, "sharded:2:native"),
+            Err(BackendError::InvalidSpec(_))
+        ));
+        assert!(matches!(
+            ShardedBackend::from_spec(2, "warpdrive"),
+            Err(BackendError::Unknown(_))
+        ));
     }
 
     #[test]
-    fn fingerprint_distinguishes_window_boundaries() {
-        // Same encoded words, different Q: a non-zero at global col 3
-        // (window 0) vs col 11 (window 1, local col 3 under k0 = 8)
-        // produces identical slot words whose meaning differs only through
-        // the pointer list. The fingerprint must tell them apart or the
-        // cache would silently serve the wrong matrix.
-        use crate::sparse::Coo;
-        let a = Coo::new(1, 16, vec![0], vec![3], vec![2.5]).unwrap();
-        let b = Coo::new(1, 16, vec![0], vec![11], vec![2.5]).unwrap();
-        let ia = preprocess(&a, 1, 8, 1);
-        let ib = preprocess(&b, 1, 8, 1);
-        assert_eq!(ia.streams[0].encoded, ib.streams[0].encoded);
-        assert_ne!(ia.streams[0].q, ib.streams[0].q);
-        assert_ne!(fingerprint(&ia), fingerprint(&ib));
+    fn failed_execute_clears_stats() {
+        let (coo, sm) = image(6);
+        let be = ShardedBackend::from_spec(2, "functional").unwrap();
+        let mut handle = be.prepare(Arc::clone(&sm)).unwrap();
+        let n = 2;
+        let b = vec![1.0f32; coo.k * n];
+        let mut c = vec![0.0f32; coo.m * n];
+        handle.execute(&b, &mut c, n, 1.0, 0.0).unwrap();
+        assert!(handle.shard_stats().is_some());
+        // A shape failure must not leave stale stats behind.
+        let err = handle.execute(&b[..3], &mut c, n, 1.0, 0.0).unwrap_err();
+        assert!(matches!(err, BackendError::Shape(_)));
+        assert!(handle.shard_stats().is_none());
     }
 }

@@ -1,22 +1,42 @@
-//! Parallel shard execution: one inner [`SpmmBackend`] instance per shard,
-//! all shards running concurrently, row-disjoint C blocks gathered back.
+//! Parallel shard execution over *prepared* inner handles: one
+//! [`PreparedSpmm`] per shard, resident on that shard's image, all shards
+//! running concurrently, row-disjoint C blocks gathered back.
 //!
-//! Each shard stands in for one accelerator card of a pool: it receives the
-//! full B (broadcast), computes its own rows of C into a private block, and
-//! the host scatters the blocks back — exact, because the shard plan
-//! partitions rows. The scoped-thread fan-out mirrors the deployment the
-//! ROADMAP aims at (S independent accelerators), so per-shard wall-clock
-//! latencies in [`ShardRunStats`] are the real makespan decomposition.
+//! Each shard stands in for one accelerator card of a pool: its inner
+//! handle is prepared once on the shard's image
+//! ([`ShardExecutor::prepare`] — the build path), then every request
+//! broadcasts the full B, computes the shard's rows of C into a private
+//! block, and the host scatters the blocks back — exact, because the shard
+//! plan partitions rows. The scoped-thread fan-out mirrors the deployment
+//! the ROADMAP aims at (S independent accelerators), so per-shard
+//! wall-clock latencies in [`ShardRunStats`] are the real makespan
+//! decomposition — and because the executor now *owns* the resident
+//! shards, the cross-process deployment only has to move the handles.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::{ShardError, ShardRunStats, ShardedMatrix};
-use crate::backend::{self, BackendError, SpmmBackend};
+use crate::backend::{self, BackendError, PrepareCost, PreparedSpmm};
 
-/// Executes a [`ShardedMatrix`] over a pool of inner backends (one per
-/// shard, so shards never serialize behind a shared engine).
+/// Executes a [`ShardedMatrix`] resident across a pool of prepared inner
+/// handles (one per shard, so shards never serialize behind a shared
+/// engine). Build once with [`ShardExecutor::prepare`], execute many.
 pub struct ShardExecutor {
-    inners: Vec<Box<dyn SpmmBackend + Send>>,
+    /// One prepared inner handle per shard, resident on the shard's image.
+    inners: Vec<Box<dyn PreparedSpmm + Send>>,
+    /// Global rows owned by each shard (ascending; local row `i` of shard
+    /// `s` is `global_rows[s][i]`).
+    global_rows: Vec<Vec<u32>>,
+    /// Real non-zeros per shard (for [`ShardRunStats`]).
+    shard_nnz: Vec<usize>,
+    /// Total rows / columns of the resident matrix.
+    m: usize,
+    k: usize,
+    /// Build-time nnz imbalance of the shard plan.
+    imbalance: f64,
+    /// Aggregate build cost (shard images + inner prepares + row maps).
+    cost: PrepareCost,
     /// Per-shard C gather blocks, grow-only across calls (hot-path
     /// allocation stays zero after warm-up, matching the native engine's
     /// scratch discipline).
@@ -27,19 +47,21 @@ impl std::fmt::Debug for ShardExecutor {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "ShardExecutor({} x ", self.inners.len())?;
         match self.inners.first() {
-            Some(b) => write!(f, "{})", b.name()),
+            Some(b) => write!(f, "{})", b.backend_name()),
             None => write!(f, "none)"),
         }
     }
 }
 
 impl ShardExecutor {
-    /// Build `s` inner backends from a registry spec (`"native"`,
-    /// `"native:2"`, `"functional"`, ...). A bare auto-threaded spec is
-    /// first divided by `s` through [`backend::apply_thread_budget`] so the
-    /// pool as a whole never oversubscribes the machine. Nested `"sharded"`
-    /// inners are refused.
-    pub fn from_spec(inner_spec: &str, s: usize) -> Result<ShardExecutor, BackendError> {
+    /// Prepare every shard of `sm` on an inner registry spec (`"native"`,
+    /// `"native:2"`, `"functional"`, ...): the build path, paid once per
+    /// matrix. A bare auto-threaded spec is first divided by the shard
+    /// count through [`backend::apply_thread_budget`] so the pool as a
+    /// whole never oversubscribes the machine. Nested `"sharded"` inners
+    /// are refused.
+    pub fn prepare(sm: &ShardedMatrix, inner_spec: &str) -> Result<ShardExecutor, BackendError> {
+        let s = sm.num_shards();
         if s == 0 {
             return Err(BackendError::InvalidSpec("shard count must be >= 1".into()));
         }
@@ -48,60 +70,97 @@ impl ShardExecutor {
                 "sharded cannot nest inside sharded".into(),
             ));
         }
+        let t0 = Instant::now();
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         let spec = backend::apply_thread_budget(inner_spec, (cores / s).max(1));
-        let inners = (0..s)
-            .map(|_| backend::create_send(&spec))
+        let factory = backend::create(&spec)?;
+        let inners = sm
+            .shards
+            .iter()
+            .map(|shard| factory.prepare_send(Arc::clone(&shard.image)))
             .collect::<Result<Vec<_>, _>>()?;
-        Ok(ShardExecutor { inners, locals: Vec::new() })
+        let resident_bytes = sm.resident_bytes()
+            + inners.iter().map(|h| h.prepare_cost().resident_bytes).sum::<u64>();
+        Ok(Self::assemble(sm, inners, PrepareCost { wall: t0.elapsed(), resident_bytes }))
     }
 
-    /// Build from explicit backends (tests, heterogeneous pools).
-    pub fn from_backends(inners: Vec<Box<dyn SpmmBackend + Send>>) -> ShardExecutor {
-        ShardExecutor { inners, locals: Vec::new() }
+    /// Build from explicitly prepared handles, one per shard in order
+    /// (tests, heterogeneous pools). Panics if the handle count does not
+    /// match the shard count.
+    pub fn from_prepared(
+        sm: &ShardedMatrix,
+        inners: Vec<Box<dyn PreparedSpmm + Send>>,
+    ) -> ShardExecutor {
+        assert_eq!(
+            inners.len(),
+            sm.num_shards(),
+            "one prepared handle per shard required"
+        );
+        let resident_bytes = sm.resident_bytes()
+            + inners.iter().map(|h| h.prepare_cost().resident_bytes).sum::<u64>();
+        Self::assemble(sm, inners, PrepareCost { wall: Default::default(), resident_bytes })
     }
 
-    /// Number of shards this executor can run (= inner backend count).
+    fn assemble(
+        sm: &ShardedMatrix,
+        inners: Vec<Box<dyn PreparedSpmm + Send>>,
+        cost: PrepareCost,
+    ) -> ShardExecutor {
+        ShardExecutor {
+            inners,
+            global_rows: sm.shards.iter().map(|s| s.global_rows.clone()).collect(),
+            shard_nnz: sm.shards.iter().map(|s| s.image.nnz).collect(),
+            m: sm.m,
+            k: sm.k,
+            imbalance: sm.imbalance(),
+            cost,
+            locals: Vec::new(),
+        }
+    }
+
+    /// Number of resident shards (= prepared inner handles).
     pub fn num_shards(&self) -> usize {
         self.inners.len()
     }
 
-    /// The inner backends (capability inspection).
-    pub fn backends(&self) -> &[Box<dyn SpmmBackend + Send>] {
+    /// The prepared inner handles (cost inspection).
+    pub fn prepared(&self) -> &[Box<dyn PreparedSpmm + Send>] {
         &self.inners
     }
 
-    /// Execute `C = alpha * A @ B + beta * C` across all shards in
+    /// Aggregate build cost: shard images, inner prepares, row maps.
+    pub fn prepare_cost(&self) -> PrepareCost {
+        self.cost
+    }
+
+    /// Build-time nnz imbalance of the resident shard plan.
+    pub fn imbalance(&self) -> f64 {
+        self.imbalance
+    }
+
+    /// Execute `C = alpha * A @ B + beta * C` across all resident shards in
     /// parallel. On success C holds every row; on failure C is untouched
     /// and the error names the failing shard.
     pub fn execute(
         &mut self,
-        sm: &ShardedMatrix,
         b: &[f32],
         c: &mut [f32],
         n: usize,
         alpha: f32,
         beta: f32,
     ) -> Result<ShardRunStats, ShardError> {
-        if self.inners.len() != sm.shards.len() {
-            return Err(ShardError::Shape(format!(
-                "executor has {} backends but the matrix has {} shards",
-                self.inners.len(),
-                sm.shards.len()
-            )));
-        }
-        if b.len() != sm.k * n {
+        if b.len() != self.k * n {
             return Err(ShardError::Shape(format!(
                 "B has {} elements, expected K*N = {}",
                 b.len(),
-                sm.k * n
+                self.k * n
             )));
         }
-        if c.len() != sm.m * n {
+        if c.len() != self.m * n {
             return Err(ShardError::Shape(format!(
                 "C has {} elements, expected M*N = {}",
                 c.len(),
-                sm.m * n
+                self.m * n
             )));
         }
 
@@ -109,36 +168,36 @@ impl ShardExecutor {
         // (the beta * C_in term lives in the block). Blocks are grow-only
         // executor scratch; every element is overwritten by the gather, so
         // stale contents from earlier calls cannot leak.
-        if self.locals.len() < sm.shards.len() {
-            self.locals.resize_with(sm.shards.len(), Vec::new);
+        if self.locals.len() < self.global_rows.len() {
+            self.locals.resize_with(self.global_rows.len(), Vec::new);
         }
-        for (shard, buf) in sm.shards.iter().zip(self.locals.iter_mut()) {
-            let need = shard.global_rows.len() * n;
+        for (rows, buf) in self.global_rows.iter().zip(self.locals.iter_mut()) {
+            let need = rows.len() * n;
             if buf.len() < need {
                 buf.resize(need, 0.0);
             }
-            for (li, &gr) in shard.global_rows.iter().enumerate() {
+            for (li, &gr) in rows.iter().enumerate() {
                 let gr = gr as usize;
                 buf[li * n..(li + 1) * n].copy_from_slice(&c[gr * n..(gr + 1) * n]);
             }
         }
 
         // Parallel shard execution: one scoped thread per shard, each
-        // driving its own inner backend on its own C block.
+        // driving its own prepared inner handle on its own C block.
         let inners = &mut self.inners;
+        let global_rows = &self.global_rows;
         let locals = &mut self.locals;
         let outcomes: Vec<(Result<(), BackendError>, std::time::Duration)> =
             std::thread::scope(|scope| {
                 let handles: Vec<_> = inners
                     .iter_mut()
-                    .zip(sm.shards.iter())
+                    .zip(global_rows.iter())
                     .zip(locals.iter_mut())
-                    .map(|((inner, shard), buf)| {
+                    .map(|((inner, rows), buf)| {
                         scope.spawn(move || {
-                            let need = shard.global_rows.len() * n;
+                            let need = rows.len() * n;
                             let t0 = Instant::now();
-                            let r =
-                                inner.execute(&shard.image, b, &mut buf[..need], n, alpha, beta);
+                            let r = inner.execute(b, &mut buf[..need], n, alpha, beta);
                             (r, t0.elapsed())
                         })
                     })
@@ -161,18 +220,18 @@ impl ShardExecutor {
 
         // Scatter: every shard succeeded, so write the row-disjoint blocks
         // back (partial results never reach C).
-        for (shard, buf) in sm.shards.iter().zip(self.locals.iter()) {
-            for (li, &gr) in shard.global_rows.iter().enumerate() {
+        for (rows, buf) in self.global_rows.iter().zip(self.locals.iter()) {
+            for (li, &gr) in rows.iter().enumerate() {
                 let gr = gr as usize;
                 c[gr * n..(gr + 1) * n].copy_from_slice(&buf[li * n..(li + 1) * n]);
             }
         }
 
         Ok(ShardRunStats {
-            shards: sm.shards.len(),
-            shard_nnz: sm.shards.iter().map(|s| s.image.nnz).collect(),
+            shards: self.inners.len(),
+            shard_nnz: self.shard_nnz.clone(),
             shard_latency: outcomes.into_iter().map(|(_, d)| d).collect(),
-            imbalance: sm.imbalance(),
+            imbalance: self.imbalance,
         })
     }
 }
@@ -180,31 +239,24 @@ impl ShardExecutor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::{Capability, FunctionalBackend};
+    use crate::backend::{FunctionalBackend, SpmmBackend};
     use crate::prop;
-    use crate::sched::ScheduledMatrix;
     use crate::sparse::{gen, rng::Rng, Coo};
 
     /// Fails every execution — for partial-failure surfacing tests.
-    struct FailingBackend;
+    struct FailingPrepared;
 
-    impl SpmmBackend for FailingBackend {
-        fn name(&self) -> &'static str {
+    impl PreparedSpmm for FailingPrepared {
+        fn backend_name(&self) -> &'static str {
             "failing"
         }
 
-        fn capability(&self) -> Capability {
-            Capability {
-                threads: 1,
-                simd_lanes: 1,
-                requires_artifacts: false,
-                deterministic: true,
-            }
+        fn prepare_cost(&self) -> PrepareCost {
+            PrepareCost::default()
         }
 
         fn execute(
             &mut self,
-            _image: &ScheduledMatrix,
             _b: &[f32],
             _c: &mut [f32],
             _n: usize,
@@ -215,10 +267,13 @@ mod tests {
         }
     }
 
-    fn functional_pool(s: usize) -> ShardExecutor {
-        ShardExecutor::from_backends(
-            (0..s).map(|_| Box::new(FunctionalBackend) as Box<dyn SpmmBackend + Send>).collect(),
-        )
+    fn functional_pool(sm: &ShardedMatrix) -> ShardExecutor {
+        let inners = sm
+            .shards
+            .iter()
+            .map(|s| FunctionalBackend.prepare_send(Arc::clone(&s.image)).unwrap())
+            .collect();
+        ShardExecutor::from_prepared(sm, inners)
     }
 
     #[test]
@@ -232,9 +287,9 @@ mod tests {
         coo.spmm_reference(&b, &mut want, n, 1.5, -0.5);
         for s in [1usize, 2, 5] {
             let sharded = ShardedMatrix::build(&coo, s, 4, 16, 6);
-            let mut exec = functional_pool(s);
+            let mut exec = functional_pool(&sharded);
             let mut c = c0.clone();
-            let stats = exec.execute(&sharded, &b, &mut c, n, 1.5, -0.5).unwrap();
+            let stats = exec.execute(&b, &mut c, n, 1.5, -0.5).unwrap();
             assert_eq!(stats.shards, s);
             assert_eq!(stats.shard_nnz.iter().sum::<usize>(), coo.nnz());
             prop::assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
@@ -246,16 +301,19 @@ mod tests {
         let mut rng = Rng::new(2);
         let coo = gen::random_uniform(40, 30, 0.2, &mut rng);
         let sharded = ShardedMatrix::build(&coo, 3, 2, 8, 4);
-        let mut exec = ShardExecutor::from_backends(vec![
-            Box::new(FunctionalBackend),
-            Box::new(FailingBackend),
-            Box::new(FunctionalBackend),
-        ]);
+        let mut exec = ShardExecutor::from_prepared(
+            &sharded,
+            vec![
+                FunctionalBackend.prepare_send(Arc::clone(&sharded.shards[0].image)).unwrap(),
+                Box::new(FailingPrepared),
+                FunctionalBackend.prepare_send(Arc::clone(&sharded.shards[2].image)).unwrap(),
+            ],
+        );
         let n = 3;
         let b = vec![1.0f32; coo.k * n];
         let c0: Vec<f32> = (0..coo.m * n).map(|i| i as f32).collect();
         let mut c = c0.clone();
-        let err = exec.execute(&sharded, &b, &mut c, n, 1.0, 0.0).unwrap_err();
+        let err = exec.execute(&b, &mut c, n, 1.0, 0.0).unwrap_err();
         match err {
             ShardError::ShardFailed { shard, shards, ref message } => {
                 assert_eq!(shard, 1);
@@ -272,17 +330,16 @@ mod tests {
     fn shape_mismatches_are_rejected() {
         let coo = Coo::empty(4, 4);
         let sharded = ShardedMatrix::build(&coo, 2, 2, 4, 2);
-        let mut exec = functional_pool(2);
+        let mut exec = functional_pool(&sharded);
         let mut c = vec![0f32; 8];
         // Wrong B length.
         assert!(matches!(
-            exec.execute(&sharded, &[0.0; 7], &mut c, 2, 1.0, 0.0),
+            exec.execute(&[0.0; 7], &mut c, 2, 1.0, 0.0),
             Err(ShardError::Shape(_))
         ));
-        // Executor / shard count mismatch.
-        let mut small = functional_pool(3);
+        // Wrong C length.
         assert!(matches!(
-            small.execute(&sharded, &[0.0; 8], &mut c, 2, 1.0, 0.0),
+            exec.execute(&[0.0; 8], &mut c[..6], 2, 1.0, 0.0),
             Err(ShardError::Shape(_))
         ));
     }
@@ -292,11 +349,11 @@ mod tests {
         // Rows with no non-zeros must still compute C = beta * C.
         let coo = Coo::new(6, 4, vec![2], vec![1], vec![3.0]).unwrap();
         let sharded = ShardedMatrix::build(&coo, 3, 2, 4, 2);
-        let mut exec = functional_pool(3);
+        let mut exec = functional_pool(&sharded);
         let n = 2;
         let b = vec![1.0f32; coo.k * n];
         let mut c = vec![2.0f32; coo.m * n];
-        exec.execute(&sharded, &b, &mut c, n, 1.0, 0.5).unwrap();
+        exec.execute(&b, &mut c, n, 1.0, 0.5).unwrap();
         for (i, &v) in c.iter().enumerate() {
             let row = i / n;
             let want = if row == 2 { 3.0 + 1.0 } else { 1.0 };
@@ -305,25 +362,44 @@ mod tests {
     }
 
     #[test]
-    fn from_spec_builds_budgeted_pool() {
-        let exec = ShardExecutor::from_spec("native", 4).unwrap();
+    fn prepare_builds_budgeted_resident_pool() {
+        let mut rng = Rng::new(5);
+        let coo = gen::random_uniform(64, 48, 0.1, &mut rng);
+        let sharded = ShardedMatrix::build(&coo, 4, 2, 16, 4);
+        let exec = ShardExecutor::prepare(&sharded, "native").unwrap();
         assert_eq!(exec.num_shards(), 4);
-        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        let per_shard = (cores / 4).max(1);
-        for be in exec.backends() {
-            assert_eq!(be.capability().threads, per_shard);
+        assert_eq!(exec.prepared().len(), 4);
+        for h in exec.prepared() {
+            assert_eq!(h.backend_name(), "native");
         }
+        // Resident accounting covers the shard images at minimum.
+        assert!(exec.prepare_cost().resident_bytes >= sharded.resident_bytes());
     }
 
     #[test]
-    fn from_spec_rejects_nesting_and_zero_shards() {
+    fn prepare_rejects_nesting() {
+        let coo = Coo::empty(4, 4);
+        let sharded = ShardedMatrix::build(&coo, 2, 2, 4, 2);
         assert!(matches!(
-            ShardExecutor::from_spec("sharded:2:native", 2),
+            ShardExecutor::prepare(&sharded, "sharded:2:native"),
             Err(BackendError::InvalidSpec(_))
         ));
-        assert!(matches!(
-            ShardExecutor::from_spec("native", 0),
-            Err(BackendError::InvalidSpec(_))
-        ));
+    }
+
+    #[test]
+    fn one_pool_serves_varying_n() {
+        let mut rng = Rng::new(7);
+        let coo = gen::power_law_rows(90, 60, 900, 1.0, &mut rng);
+        let sharded = ShardedMatrix::build(&coo, 3, 2, 16, 4);
+        let mut exec = ShardExecutor::prepare(&sharded, "native:1").unwrap();
+        for n in [5usize, 1, 9, 3] {
+            let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+            let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+            let mut want = c0.clone();
+            coo.spmm_reference(&b, &mut want, n, 1.25, 0.5);
+            let mut c = c0;
+            exec.execute(&b, &mut c, n, 1.25, 0.5).unwrap();
+            prop::assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
+        }
     }
 }

@@ -13,14 +13,19 @@
 //! scatter — exact, no reduction needed (B is broadcast to every shard,
 //! exactly how a multi-card deployment would replicate the dense operand).
 //!
-//! Three entry points:
+//! Sharding follows the crate-wide **prepare/execute** contract: the plan,
+//! the per-shard images, and one *prepared* inner handle per shard are all
+//! built once per matrix; every request afterwards is gather → parallel
+//! shards → scatter. Three entry points:
 //!
-//! * [`ShardedMatrix`] + [`ShardExecutor`] — the direct API: build once,
-//!   execute many times, get [`ShardRunStats`] per run.
+//! * [`ShardedMatrix`] + [`ShardExecutor::prepare`] — the direct API:
+//!   prepare the resident pool once, execute many times, get
+//!   [`ShardRunStats`] per run.
 //! * The `"sharded:<S>:<inner>"` composite backend
 //!   ([`ShardedBackend`], registered in [`crate::backend::registry`]) — any
 //!   consumer of the registry (the HFlex accelerator, the serving
-//!   coordinator) gains sharding by spec string alone.
+//!   coordinator) gains sharding by spec string alone; its
+//!   [`PreparedSharded`] handle owns the pool.
 //! * `--shards S` on `sextans run` / `sextans serve`.
 //!
 //! Failure of any shard surfaces as [`ShardError::ShardFailed`] naming the
@@ -30,7 +35,7 @@ pub mod backend;
 pub mod executor;
 pub mod plan;
 
-pub use backend::ShardedBackend;
+pub use backend::{PreparedSharded, ShardedBackend};
 pub use executor::ShardExecutor;
 pub use plan::{plan_shards, reconstruct_coo, Shard, ShardPlan, ShardedMatrix};
 

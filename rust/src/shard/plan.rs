@@ -10,6 +10,7 @@
 //! C-scratchpad capacity, so they are leveled across shards by row count.
 
 use std::cmp::Reverse;
+use std::sync::Arc;
 
 use crate::sched::partition::{global_col, global_row};
 use crate::sched::{decode, preprocess, ScheduledMatrix};
@@ -85,13 +86,15 @@ pub fn plan_shards(coo: &Coo, s: usize) -> ShardPlan {
 }
 
 /// One shard: the global rows it owns (ascending — local row `i` of the
-/// shard is global row `global_rows[i]`) and its preprocessed image.
+/// shard is global row `global_rows[i]`) and its preprocessed image. The
+/// image is `Arc`-shared so prepared execution handles (one inner
+/// [`crate::backend::PreparedSpmm`] per shard) can hold it without copies.
 #[derive(Clone, Debug)]
 pub struct Shard {
     /// Ascending global row indices of this shard.
     pub global_rows: Vec<u32>,
     /// The shard's scheduled image (local row space, full K).
-    pub image: ScheduledMatrix,
+    pub image: Arc<ScheduledMatrix>,
 }
 
 /// A matrix row-partitioned into S shards, each preprocessed for the same
@@ -146,10 +149,29 @@ impl ShardedMatrix {
                     cols: std::mem::take(&mut cols_v[sh]),
                     vals: std::mem::take(&mut vals_v[sh]),
                 };
-                Shard { global_rows, image: preprocess(&local, p, k0, d) }
+                Shard { global_rows, image: Arc::new(preprocess(&local, p, k0, d)) }
             })
             .collect();
         ShardedMatrix { m: coo.m, k: coo.k, imbalance, shards }
+    }
+
+    /// Re-shard a *preprocessed image*: invert preprocessing once
+    /// ([`reconstruct_coo`]) and build shard images for the same
+    /// (P, K0, D). This is the prepare-path entry for the
+    /// `"sharded:<S>:<inner>"` composite backend, whose contract hands over
+    /// images rather than raw COO — paid exactly once per prepared matrix.
+    pub fn from_image(sm: &ScheduledMatrix, s: usize) -> ShardedMatrix {
+        let coo = reconstruct_coo(sm);
+        ShardedMatrix::build(&coo, s, sm.p, sm.k0, sm.d)
+    }
+
+    /// Bytes this sharded form keeps resident: the shard images' A streams
+    /// plus the global-row maps.
+    pub fn resident_bytes(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.image.a_stream_bytes() + 4 * s.global_rows.len() as u64)
+            .sum()
     }
 
     /// Number of shards.
@@ -305,6 +327,23 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn from_image_matches_build_from_coo() {
+        let mut rng = Rng::new(17);
+        let coo = gen::power_law_rows(140, 90, 1_600, 1.0, &mut rng);
+        let sm = preprocess(&coo, 4, 16, 6);
+        let via_image = ShardedMatrix::from_image(&sm, 3);
+        let via_coo = ShardedMatrix::build(&coo, 3, 4, 16, 6);
+        assert_eq!(via_image.num_shards(), via_coo.num_shards());
+        assert_eq!(via_image.nnz(), via_coo.nnz());
+        assert_eq!(via_image.m, via_coo.m);
+        for (a, b) in via_image.shards.iter().zip(&via_coo.shards) {
+            assert_eq!(a.global_rows, b.global_rows);
+            assert_eq!(a.image.nnz, b.image.nnz);
+        }
+        assert!(via_image.resident_bytes() > 0);
     }
 
     #[test]

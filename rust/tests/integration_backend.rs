@@ -1,24 +1,27 @@
-//! Integration: the pluggable execution-backend subsystem.
+//! Integration: the pluggable execution-backend subsystem under the
+//! two-phase prepare/execute contract.
 //!
 //! The core contract — native backend == functional simulator == CSR
-//! reference on arbitrary COO matrices — plus registry selection and the
-//! coordinator serving correct results through a named backend with no
-//! artifacts directory present (the HFlex §3.4 promise held by pure-rust
-//! execution).
+//! reference on arbitrary COO matrices, driven through prepared handles —
+//! plus registry selection and the coordinator serving correct results
+//! through a named backend with no artifacts directory present (the HFlex
+//! §3.4 promise held by pure-rust execution).
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use sextans::backend::{self, BackendError, FunctionalBackend, NativeBackend, SpmmBackend};
+use sextans::backend::{
+    self, BackendError, FunctionalBackend, NativeBackend, PreparedSpmm, SpmmBackend,
+};
 use sextans::coordinator::{BatchPolicy, Server, SpmmRequest};
 use sextans::prop::{self, assert_allclose};
-use sextans::sched::preprocess;
+use sextans::sched::{preprocess, ScheduledMatrix};
 use sextans::sparse::{gen, rng::Rng, Coo, Csr};
 
-/// Run one backend over a fresh copy of `c0` and return the result.
+/// One-shot a backend over a fresh copy of `c0` and return the result.
 fn run(
-    backend: &mut dyn SpmmBackend,
-    sm: &sextans::sched::ScheduledMatrix,
+    backend: &dyn SpmmBackend,
+    sm: &Arc<ScheduledMatrix>,
     b: &[f32],
     c0: &[f32],
     n: usize,
@@ -26,7 +29,7 @@ fn run(
     beta: f32,
 ) -> Vec<f32> {
     let mut c = c0.to_vec();
-    backend.execute(sm, b, &mut c, n, alpha, beta).unwrap();
+    backend.execute_once(sm, b, &mut c, n, alpha, beta).unwrap();
     c
 }
 
@@ -43,16 +46,21 @@ fn native_equals_functional_equals_csr_reference_property() {
         let p = 1 + rng.index(8);
         let k0 = 1 + rng.index(24);
         let d = 1 + rng.index(10);
-        let sm = preprocess(&a, p, k0, d);
+        let sm = Arc::new(preprocess(&a, p, k0, d));
         let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
         let c0: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
         let threads = 1 + rng.index(6);
         let csr = Csr::from_coo(&a);
-        // The satellite contract: alpha/beta in {0, 1, 2.5} all agree.
+        // One prepared handle per engine, driven across every scalar pair —
+        // the reuse contract is part of what's under test.
+        let mut native = NativeBackend::new(threads).prepare(Arc::clone(&sm)).unwrap();
+        let mut functional = FunctionalBackend.prepare(Arc::clone(&sm)).unwrap();
         for (alpha, beta) in [(0.0f32, 1.0f32), (1.0, 0.0), (2.5, 2.5), (1.0, 2.5)] {
-            let native = run(&mut NativeBackend::new(threads), &sm, &b, &c0, n, alpha, beta);
-            let functional = run(&mut FunctionalBackend, &sm, &b, &c0, n, alpha, beta);
-            if native != functional {
+            let mut got_native = c0.clone();
+            native.execute(&b, &mut got_native, n, alpha, beta).unwrap();
+            let mut got_functional = c0.clone();
+            functional.execute(&b, &mut got_functional, n, alpha, beta).unwrap();
+            if got_native != got_functional {
                 return Err(format!(
                     "native (threads={threads}) != functional bitwise at alpha={alpha}, \
                      beta={beta}"
@@ -60,7 +68,7 @@ fn native_equals_functional_equals_csr_reference_property() {
             }
             let mut reference = c0.clone();
             csr.spmm_reference(&b, &mut reference, n, alpha, beta);
-            assert_allclose(&native, &reference, 2e-4, 2e-4)
+            assert_allclose(&got_native, &reference, 2e-4, 2e-4)
                 .map_err(|e| format!("native vs CSR at alpha={alpha}, beta={beta}: {e}"))?;
         }
         Ok(())
@@ -75,7 +83,7 @@ fn agreement_with_empty_rows_and_multi_window_matrix() {
     let cols = vec![0u32, 17, 3, 33, 59, 48, 16, 31];
     let vals = vec![1.5f32, -2.0, 0.5, 3.0, -1.0, 2.5, -0.5, 1.0];
     let a = Coo::new(9, 60, rows, cols, vals).unwrap();
-    let sm = preprocess(&a, 4, 16, 6);
+    let sm = Arc::new(preprocess(&a, 4, 16, 6));
     assert!(sm.num_windows >= 4, "test matrix must span several windows");
 
     let mut rng = Rng::new(7);
@@ -84,8 +92,8 @@ fn agreement_with_empty_rows_and_multi_window_matrix() {
     let c0: Vec<f32> = (0..a.m * n).map(|_| rng.normal()).collect();
     let csr = Csr::from_coo(&a);
     for (alpha, beta) in [(0.0f32, 0.0f32), (0.0, 1.0), (1.0, 1.0), (2.5, 0.0), (2.5, 2.5)] {
-        let native = run(&mut NativeBackend::new(4), &sm, &b, &c0, n, alpha, beta);
-        let functional = run(&mut FunctionalBackend, &sm, &b, &c0, n, alpha, beta);
+        let native = run(&NativeBackend::new(4), &sm, &b, &c0, n, alpha, beta);
+        let functional = run(&FunctionalBackend, &sm, &b, &c0, n, alpha, beta);
         assert_eq!(native, functional, "alpha={alpha} beta={beta}");
         let mut reference = c0.clone();
         csr.spmm_reference(&b, &mut reference, n, alpha, beta);
@@ -146,14 +154,16 @@ fn coordinator_serves_native_backend_without_artifacts() {
     let summary = server.shutdown();
     assert_eq!(summary.requests, 1);
     assert_eq!(summary.backends, vec![("native", 1)]);
+    assert_eq!(summary.prepares, 1, "the image became resident exactly once");
 }
 
 #[test]
 fn server_refuses_unavailable_backend_at_startup() {
-    // Without the `pjrt` feature the registry marks pjrt unavailable, and
-    // the server must refuse at startup instead of zero-filling responses.
+    // Without the real PJRT engine the registry marks pjrt unavailable,
+    // and the server must refuse at startup instead of zero-filling
+    // responses.
     if backend::registry().iter().any(|b| b.name == "pjrt" && b.available) {
-        return; // pjrt-enabled build: nothing to assert here
+        return; // real-engine build: nothing to assert here
     }
     let err = Server::start_backend(1, BatchPolicy::default(), "pjrt")
         .map(|_| ())
@@ -185,4 +195,25 @@ fn capabilities_identify_the_engines() {
     assert_eq!(functional.capability().threads, 1);
     let pjrt = backend::create("pjrt").unwrap();
     assert!(pjrt.capability().requires_artifacts);
+}
+
+#[test]
+fn prepare_reports_cost_and_handles_survive_dropping_the_factory() {
+    let mut rng = Rng::new(13);
+    let coo = gen::random_uniform(60, 50, 0.15, &mut rng);
+    let sm = Arc::new(preprocess(&coo, 4, 16, 6));
+    let mut handle = {
+        // The factory can go away; the handle owns its residency.
+        let factory = backend::create("native:2").unwrap();
+        factory.prepare(Arc::clone(&sm)).unwrap()
+    };
+    let cost = handle.prepare_cost();
+    assert!(cost.resident_bytes > 0);
+    let n = 4;
+    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+    let mut c = vec![0f32; coo.m * n];
+    handle.execute(&b, &mut c, n, 1.0, 0.0).unwrap();
+    let mut want = vec![0f32; coo.m * n];
+    coo.spmm_reference(&b, &mut want, n, 1.0, 0.0);
+    assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
 }

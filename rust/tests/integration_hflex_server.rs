@@ -27,13 +27,13 @@ fn hflex_end_to_end_mixed_shapes_and_scalars() {
         (gen::rmat(256, 2_048, 0.45, 0.2, 0.2, &mut rng), 32, -1.0, 2.0),
     ];
     for (coo, n, alpha, beta) in cases {
-        let image = accel.preprocess(&coo).unwrap();
+        let loaded = accel.load(&coo).unwrap();
         let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
         let mut c: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
         let mut want = c.clone();
         coo.spmm_reference(&b, &mut want, n, alpha, beta);
         let rep = accel
-            .invoke(SpmmProblem { a: &image, b: &b, c: &mut c, n, alpha, beta })
+            .invoke(SpmmProblem { a: &loaded, b: &b, c: &mut c, n, alpha, beta })
             .unwrap();
         assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
         assert!(rep.sim.cycles > 0);
@@ -83,16 +83,15 @@ fn failure_injection_wrong_config_is_rejected_cleanly() {
     let accel = HFlexAccelerator::synthesize(AcceleratorConfig::sextans_u280());
     let mut rng = Rng::new(300);
     let coo = gen::random_uniform(64, 64, 0.1, &mut rng);
-    // Image for a hypothetical different accelerator generation.
-    let foreign = preprocess(&coo, 32, 2048, 6);
-    let b = vec![0f32; 64 * 8];
-    let mut c = vec![0f32; 64 * 8];
-    let err = accel
-        .invoke(SpmmProblem { a: &foreign, b: &b, c: &mut c, n: 8, alpha: 1.0, beta: 0.0 })
-        .unwrap_err();
+    // Image for a hypothetical different accelerator generation: refused
+    // at load, before any backend residency is built.
+    let foreign = Arc::new(preprocess(&coo, 32, 2048, 6));
+    let err = accel.load_image(foreign).map(|_| ()).unwrap_err();
     assert!(matches!(err, HFlexError::WrongConfiguration { .. }));
     // The accelerator still works afterwards.
-    let good = accel.preprocess(&coo).unwrap();
+    let b = vec![0f32; 64 * 8];
+    let mut c = vec![0f32; 64 * 8];
+    let good = accel.load(&coo).unwrap();
     accel
         .invoke(SpmmProblem { a: &good, b: &b, c: &mut c, n: 8, alpha: 1.0, beta: 0.0 })
         .unwrap();
@@ -103,13 +102,13 @@ fn simulated_timing_is_monotone_in_n() {
     let accel = HFlexAccelerator::synthesize(AcceleratorConfig::sextans_u280());
     let mut rng = Rng::new(400);
     let coo = gen::random_uniform(2048, 2048, 0.01, &mut rng);
-    let image = accel.preprocess(&coo).unwrap();
+    let loaded = accel.load(&coo).unwrap();
     let mut prev = 0u64;
     for n in [8usize, 64, 512] {
         let b = vec![0f32; coo.k * n];
         let mut c = vec![0f32; coo.m * n];
         let rep = accel
-            .invoke(SpmmProblem { a: &image, b: &b, c: &mut c, n, alpha: 1.0, beta: 0.0 })
+            .invoke(SpmmProblem { a: &loaded, b: &b, c: &mut c, n, alpha: 1.0, beta: 0.0 })
             .unwrap();
         assert!(rep.sim.cycles > prev, "cycles must grow with N");
         prev = rep.sim.cycles;

@@ -1,0 +1,176 @@
+//! Integration: the prepare/execute contract itself.
+//!
+//! * Reuse property: ONE `PreparedSpmm` handle per engine, driven with many
+//!   (B, alpha, beta) — **including n changing across calls** — stays equal
+//!   to the CSR reference for `native`, `native-blocked`, `functional`, and
+//!   `sharded:{1,3,8}:native`.
+//! * `execute_batch` equals repeated `execute` on every engine.
+//! * Serving e2e: repeated requests against one registered matrix hit the
+//!   per-worker prepared-handle cache (hit rate > 0) — the acceptance bar
+//!   for prepare-once/execute-many in the coordinator.
+
+use std::sync::Arc;
+
+use sextans::backend::{self, PreparedSpmm, SpmmBackend};
+use sextans::coordinator::{BatchPolicy, Server, SpmmRequest};
+use sextans::prop::{self, assert_allclose};
+use sextans::sched::preprocess;
+use sextans::sparse::{gen, rng::Rng, Csr};
+
+const ENGINES: [&str; 6] = [
+    "native",
+    "native-blocked",
+    "functional",
+    "sharded:1:native:1",
+    "sharded:3:native:1",
+    "sharded:8:native:1",
+];
+
+#[test]
+fn one_prepared_handle_many_calls_matches_reference_property() {
+    prop::check("prepared_reuse_vs_reference", 0x9E0A, 10, |rng| {
+        let m = 1 + rng.index(80);
+        let k = 1 + rng.index(100);
+        let a = if rng.chance(0.5) {
+            gen::random_uniform(m, k, rng.f64() * 0.25, rng)
+        } else {
+            gen::power_law_rows(m, k, 1 + rng.index(4 * m), 1.1, rng)
+        };
+        let p = 1 + rng.index(8);
+        let k0 = 1 + rng.index(24);
+        let d = 1 + rng.index(8);
+        let sm = Arc::new(preprocess(&a, p, k0, d));
+        let csr = Csr::from_coo(&a);
+        // A shared request schedule: n varies call to call, which is the
+        // part per-call engines never had to survive.
+        let calls: Vec<(usize, f32, f32)> = (0..5)
+            .map(|_| {
+                (
+                    1 + rng.index(12),
+                    rng.range_f32(-2.0, 2.0),
+                    rng.range_f32(-2.0, 2.0),
+                )
+            })
+            .collect();
+        let inputs: Vec<(Vec<f32>, Vec<f32>)> = calls
+            .iter()
+            .map(|&(n, _, _)| {
+                (
+                    (0..k * n).map(|_| rng.normal()).collect(),
+                    (0..m * n).map(|_| rng.normal()).collect(),
+                )
+            })
+            .collect();
+        for spec in ENGINES {
+            let mut handle = backend::create(spec)
+                .map_err(|e| e.to_string())?
+                .prepare(Arc::clone(&sm))
+                .map_err(|e| format!("{spec}: prepare: {e}"))?;
+            for (&(n, alpha, beta), (b, c0)) in calls.iter().zip(&inputs) {
+                let mut got = c0.clone();
+                handle
+                    .execute(b, &mut got, n, alpha, beta)
+                    .map_err(|e| format!("{spec} at n={n}: {e}"))?;
+                let mut want = c0.clone();
+                csr.spmm_reference(b, &mut want, n, alpha, beta);
+                assert_allclose(&got, &want, 3e-4, 3e-4)
+                    .map_err(|e| format!("{spec} at n={n}, alpha={alpha}, beta={beta}: {e}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn execute_batch_equals_repeated_execute() {
+    let mut rng = Rng::new(0xBA7C);
+    let a = gen::power_law_rows(70, 60, 800, 1.0, &mut rng);
+    let sm = Arc::new(preprocess(&a, 4, 16, 5));
+    let n = 4;
+    let bs: Vec<Vec<f32>> =
+        (0..3).map(|_| (0..a.k * n).map(|_| rng.normal()).collect()).collect();
+    let c0s: Vec<Vec<f32>> =
+        (0..3).map(|_| (0..a.m * n).map(|_| rng.normal()).collect()).collect();
+    for spec in ENGINES {
+        let factory = backend::create(spec).unwrap();
+        // Sequential singles on one handle...
+        let mut single = factory.prepare(Arc::clone(&sm)).unwrap();
+        let mut want: Vec<Vec<f32>> = c0s.clone();
+        for (b, c) in bs.iter().zip(want.iter_mut()) {
+            single.execute(b, c, n, 1.5, -0.5).unwrap();
+        }
+        // ...must equal one execute_batch on a fresh handle.
+        let mut batched = factory.prepare(Arc::clone(&sm)).unwrap();
+        let mut got: Vec<Vec<f32>> = c0s.clone();
+        {
+            let mut jobs: Vec<(&[f32], &mut [f32])> = bs
+                .iter()
+                .map(|b| b.as_slice())
+                .zip(got.iter_mut().map(|c| c.as_mut_slice()))
+                .collect();
+            batched.execute_batch(&mut jobs, n, 1.5, -0.5).unwrap();
+        }
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g, w, "{spec}: batch entry {i} diverged from sequential");
+        }
+    }
+}
+
+#[test]
+fn prepare_cost_is_reported_per_engine() {
+    let mut rng = Rng::new(0xC057);
+    let a = gen::random_uniform(64, 64, 0.1, &mut rng);
+    let sm = Arc::new(preprocess(&a, 4, 16, 5));
+    // Native keeps decoded triples resident; sharded keeps shard images +
+    // inner residency; functional keeps nothing extra.
+    let native = backend::create("native:2").unwrap().prepare(Arc::clone(&sm)).unwrap();
+    assert!(native.prepare_cost().resident_bytes >= 12 * a.nnz() as u64);
+    let sharded =
+        backend::create("sharded:2:native:1").unwrap().prepare(Arc::clone(&sm)).unwrap();
+    assert!(sharded.prepare_cost().resident_bytes > 0);
+    let functional = backend::create("functional").unwrap().prepare(Arc::clone(&sm)).unwrap();
+    assert_eq!(functional.prepare_cost().resident_bytes, 0);
+}
+
+#[test]
+fn serving_e2e_prepared_cache_hit_rate_is_positive() {
+    // The acceptance bar: N sequential requests against one registered
+    // matrix on one worker — the matrix is sharded/prepared once, and the
+    // server's hit-rate metric proves every later request found it
+    // resident.
+    let mut rng = Rng::new(0x417);
+    let coo = gen::power_law_rows(160, 120, 2_500, 1.1, &mut rng);
+    let image = Arc::new(preprocess(&coo, 8, 32, 10));
+    let server =
+        Server::start_backend(1, BatchPolicy::default(), "sharded:3:native:1").unwrap();
+    let handle = server.register(image);
+    let n = 4;
+    for _ in 0..6 {
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let mut want = c0.clone();
+        coo.spmm_reference(&b, &mut want, n, 1.5, 0.5);
+        // call() waits per request, so batches never merge and each request
+        // is its own cache lookup.
+        let resp = server.call(SpmmRequest {
+            image: handle.clone(),
+            b,
+            c: c0,
+            n,
+            alpha: 1.5,
+            beta: 0.5,
+        });
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_allclose(&resp.c, &want, 2e-4, 2e-4).unwrap();
+    }
+    let summary = server.shutdown();
+    assert_eq!(summary.requests, 6);
+    assert_eq!(summary.prepares, 1, "one matrix, one worker: exactly one shard build");
+    assert_eq!(summary.prepare_hits, 5);
+    assert!(
+        summary.prepare_hit_rate > 0.0,
+        "hit rate must be positive, got {}",
+        summary.prepare_hit_rate
+    );
+    assert!(summary.shard_execs >= 1);
+}

@@ -1,35 +1,22 @@
-//! Integration: the sharded multi-accelerator execution subsystem.
+//! Integration: the sharded multi-accelerator execution subsystem under
+//! the prepare/execute contract.
 //!
 //! The acceptance contract — `sharded:<S>:native` == `functional` == CSR
 //! reference for random COO matrices (empty rows, skewed rows, multi-window
-//! K) across alpha/beta and S ∈ {1, 2, 3, 8}; greedy shard planning stays
-//! within a 1.25 nnz-imbalance bound on power-law matrices; and the serving
-//! coordinator carries shard metrics end to end.
+//! K) across alpha/beta and S ∈ {1, 2, 3, 8}, with **one prepared handle
+//! per (matrix, S) driven across every scalar pair**; greedy shard planning
+//! stays within a 1.25 nnz-imbalance bound on power-law matrices; and the
+//! serving coordinator carries shard metrics end to end.
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use sextans::backend::{self, FunctionalBackend, SpmmBackend};
+use sextans::backend::{self, FunctionalBackend, PreparedSpmm, SpmmBackend};
 use sextans::coordinator::{BatchPolicy, Server, SpmmRequest};
 use sextans::prop::{self, assert_allclose};
 use sextans::sched::preprocess;
 use sextans::shard::{plan_shards, ShardedMatrix};
 use sextans::sparse::{gen, rng::Rng, Coo, Csr};
-
-/// Run one backend over a fresh copy of `c0` and return the result.
-fn run(
-    backend: &mut dyn SpmmBackend,
-    sm: &sextans::sched::ScheduledMatrix,
-    b: &[f32],
-    c0: &[f32],
-    n: usize,
-    alpha: f32,
-    beta: f32,
-) -> Vec<f32> {
-    let mut c = c0.to_vec();
-    backend.execute(sm, b, &mut c, n, alpha, beta).unwrap();
-    c
-}
 
 #[test]
 fn sharded_equals_functional_equals_csr_reference_property() {
@@ -48,16 +35,24 @@ fn sharded_equals_functional_equals_csr_reference_property() {
         let p = 1 + rng.index(8);
         let k0 = 1 + rng.index(24);
         let d = 1 + rng.index(10);
-        let sm = preprocess(&a, p, k0, d);
+        let sm = Arc::new(preprocess(&a, p, k0, d));
         let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
         let c0: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
         let csr = Csr::from_coo(&a);
+        let mut functional = FunctionalBackend.prepare(Arc::clone(&sm)).unwrap();
         for s in [1usize, 2, 3, 8] {
-            let mut sharded = backend::create(&format!("sharded:{s}:native:1")).unwrap();
+            // Prepare once per (matrix, S): sharding happens here, not per
+            // execute.
+            let mut sharded = backend::create(&format!("sharded:{s}:native:1"))
+                .unwrap()
+                .prepare(Arc::clone(&sm))
+                .unwrap();
             for (alpha, beta) in [(0.0f32, 1.0f32), (1.0, 0.0), (2.5, 2.5), (1.0, -0.5)] {
-                let got = run(&mut *sharded, &sm, &b, &c0, n, alpha, beta);
-                let functional = run(&mut FunctionalBackend, &sm, &b, &c0, n, alpha, beta);
-                assert_allclose(&got, &functional, 2e-4, 2e-4).map_err(|e| {
+                let mut got = c0.clone();
+                sharded.execute(&b, &mut got, n, alpha, beta).unwrap();
+                let mut reference_fn = c0.clone();
+                functional.execute(&b, &mut reference_fn, n, alpha, beta).unwrap();
+                assert_allclose(&got, &reference_fn, 2e-4, 2e-4).map_err(|e| {
                     format!("sharded:{s} vs functional at alpha={alpha}, beta={beta}: {e}")
                 })?;
                 let mut reference = c0.clone();
@@ -152,6 +147,10 @@ fn coordinator_serves_sharded_backend_with_metrics() {
     assert!(summary.mean_shard_imbalance >= 1.0);
     assert!(summary.max_shard_imbalance >= summary.mean_shard_imbalance);
     assert_eq!(summary.backends, vec![("sharded", 6)]);
+    // Sharding is per prepared matrix, never per request: one registered
+    // image on two workers can be sharded at most twice.
+    assert!(summary.prepares <= 2, "prepares = {}", summary.prepares);
+    assert!(summary.prepared_bytes > 0);
 }
 
 #[test]
@@ -162,15 +161,15 @@ fn sharded_handles_degenerate_shapes() {
         let cols: Vec<u32> = nnz_rows.iter().map(|&r| r % k as u32).collect();
         let vals = vec![2.0f32; nnz_rows.len()];
         let a = Coo::new(m, k, nnz_rows, cols, vals).unwrap();
-        let sm = preprocess(&a, 2, 4, 3);
+        let sm = Arc::new(preprocess(&a, 2, 4, 3));
         let n = 3;
         let b = vec![1.0f32; k * n];
         let c0 = vec![1.0f32; m * n];
         let mut want = c0.clone();
         a.spmm_reference(&b, &mut want, n, 1.0, 2.0);
-        let mut be = backend::create("sharded:8:native:1").unwrap();
+        let be = backend::create("sharded:8:native:1").unwrap();
         let mut c = c0;
-        be.execute(&sm, &b, &mut c, n, 1.0, 2.0).unwrap();
+        be.execute_once(&sm, &b, &mut c, n, 1.0, 2.0).unwrap();
         assert_allclose(&c, &want, 1e-5, 1e-5).unwrap();
     }
 }
