@@ -48,7 +48,7 @@ fn main() {
     // worker, the composite divides the worker's share per shard.
     let server = Server::start_backend(
         2,
-        BatchPolicy { max_columns: 256, window: Duration::from_millis(3) },
+        BatchPolicy { max_columns: 256, window: Duration::from_millis(3), route_columns: 8 },
         "sharded:4:native",
     )
     .expect("backend spec");

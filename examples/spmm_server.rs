@@ -40,7 +40,11 @@ fn main() {
     // "functional" or "pjrt" to change the execution path.
     let server = Server::start_backend(
         2,
-        BatchPolicy { max_columns: 256, window: std::time::Duration::from_millis(3) },
+        BatchPolicy {
+            max_columns: 256,
+            window: std::time::Duration::from_millis(3),
+            route_columns: 8,
+        },
         "native",
     )
     .expect("backend spec");

@@ -8,6 +8,13 @@
 //! the prepared path over per-call at each k — the curve should start near
 //! the prepare/execute cost ratio at k = 1 and asymptote to 1x of
 //! steady-state as k grows.
+//!
+//! The second section measures **re-shard-on-skew** on a skewed power-law
+//! matrix: the cost of the trigger itself (drop the resident pool +
+//! re-prepare at the halved S), the nnz imbalance before/after, the
+//! steady-state execute at both shard counts, and the number of executes
+//! needed to amortize the rebuild — so the serving policy's threshold is
+//! informed by measurement, not guesswork.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -99,5 +106,62 @@ fn main() {
                 (k as f64 * flops) / prepared_s / 1e9
             );
         }
+    }
+
+    // ---- Re-shard-on-skew: the cost of drop + re-prepare at a new S ----
+    // A heavily skewed power-law matrix — the shape whose imbalance trips
+    // the serving trigger (one dominant row keeps the largest shard hot
+    // regardless of S, so halving S improves max/mean balance).
+    let skewed = gen::power_law_rows(4096, 4096, 200_000, 2.0, &mut rng);
+    let skewed_sm = Arc::new(preprocess(&skewed, p, k0, d));
+    let skewed_flops = problem_flops(skewed.nnz(), skewed.m, n) as f64;
+    section(&format!(
+        "re-shard-on-skew cost (skewed power-law {}x{}, nnz {}, N={n})",
+        skewed.m,
+        skewed.k,
+        skewed.nnz()
+    ));
+    const RESHARD_ITERS: usize = 5;
+    for (s_from, s_to) in [(8usize, 4usize), (4, 2)] {
+        let steady = |handle: &mut dyn PreparedSpmm, c: &mut [f32]| -> f64 {
+            handle.execute(&b, c, n, 1.0, 0.5).unwrap(); // warm scratch
+            let t0 = Instant::now();
+            for _ in 0..RESHARD_ITERS {
+                c.copy_from_slice(&c0);
+                handle.execute(&b, c, n, 1.0, 0.5).unwrap();
+                black_box(&c);
+            }
+            t0.elapsed().as_secs_f64() / RESHARD_ITERS as f64
+        };
+        let from = backend::create(&format!("sharded:{s_from}:native")).unwrap();
+        let mut handle = from.prepare(Arc::clone(&skewed_sm)).unwrap();
+        let imb_from = sextans::shard::plan_shards(&skewed, s_from).imbalance();
+        let exec_from = steady(&mut *handle, &mut c);
+
+        // The trigger's cost: drop the resident pool, re-prepare at s_to.
+        let to = backend::create(&format!("sharded:{s_to}:native")).unwrap();
+        let t0 = Instant::now();
+        drop(handle);
+        let mut handle = to.prepare(Arc::clone(&skewed_sm)).unwrap();
+        let reshard_s = t0.elapsed().as_secs_f64();
+        let imb_to = sextans::shard::plan_shards(&skewed, s_to).imbalance();
+        let exec_to = steady(&mut *handle, &mut c);
+
+        let break_even = if exec_from > exec_to {
+            format!("{:.0} executes", (reshard_s / (exec_from - exec_to)).ceil())
+        } else {
+            "never (old S faster here)".to_string()
+        };
+        println!(
+            "S {s_from} -> {s_to}: rebuild {:.2} ms ({:.2} MiB resident), imbalance \
+             {imb_from:.3} -> {imb_to:.3}, steady execute {:.2} -> {:.2} ms \
+             ({:.2} -> {:.2} GFLOP/s), break-even after {break_even}",
+            reshard_s * 1e3,
+            handle.prepare_cost().resident_bytes as f64 / (1024.0 * 1024.0),
+            exec_from * 1e3,
+            exec_to * 1e3,
+            skewed_flops / exec_from / 1e9,
+            skewed_flops / exec_to / 1e9
+        );
     }
 }

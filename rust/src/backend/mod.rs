@@ -164,6 +164,35 @@ pub trait PreparedSpmm {
     fn shard_stats(&self) -> Option<crate::shard::ShardRunStats> {
         None
     }
+
+    /// Number of internal shard units this handle partitions its matrix
+    /// across (`None` for single-unit engines). The serving residency
+    /// stage tracks this to drive re-shard-on-skew rebuilds.
+    fn resident_shards(&self) -> Option<usize> {
+        None
+    }
+
+    /// Routing hook for shard-aware batching: like [`execute`], but a
+    /// composite handle may skip internal units that own no non-zeros —
+    /// their rows receive exactly the `beta * C` update the engine would
+    /// have computed, so results stay bit-identical. Returns the number of
+    /// units skipped; single-unit engines keep this default (a plain
+    /// execute, 0 skipped). The serving batcher dispatches small-N merged
+    /// jobs through this path, where per-unit fan-out overhead rivals the
+    /// useful work.
+    ///
+    /// [`execute`]: PreparedSpmm::execute
+    fn execute_routed(
+        &mut self,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<usize, BackendError> {
+        self.execute(b, c, n, alpha, beta)?;
+        Ok(0)
+    }
 }
 
 impl std::fmt::Debug for dyn PreparedSpmm {
@@ -359,6 +388,19 @@ fn parse_sharded(arg: Option<&str>) -> Result<(usize, String), BackendError> {
         return Err(BackendError::InvalidSpec("sharded:<S> needs S >= 1".into()));
     }
     Ok((s, inner))
+}
+
+/// Split a `sharded:<S>:<inner>` spec into its shard count and raw inner
+/// spec (`None` for non-sharded or malformed specs — [`create`] rejects
+/// the latter with a better error). The serving coordinator uses this to
+/// wire re-shard-on-skew: rebuilds need the *un-budgeted* inner spec so
+/// thread budgets can be re-derived for the new S.
+pub fn sharded_parts(spec: &str) -> Option<(usize, String)> {
+    let (name, arg) = split_spec(spec);
+    if name != "sharded" {
+        return None;
+    }
+    parse_sharded(arg).ok()
 }
 
 /// Check that the spec's engine can execute in this build. For `sharded`
@@ -592,6 +634,38 @@ mod tests {
         let sm = Arc::new(preprocess(&Coo::empty(2, 2), 1, 2, 1));
         let err = Local.prepare_send(sm).unwrap_err();
         assert!(err.to_string().contains("local-only"), "{err}");
+    }
+
+    #[test]
+    fn sharded_parts_splits_composite_specs_only() {
+        assert_eq!(sharded_parts("sharded:4:native"), Some((4, "native".to_string())));
+        assert_eq!(
+            sharded_parts("sharded:2:native:3"),
+            Some((2, "native:3".to_string()))
+        );
+        assert_eq!(sharded_parts("sharded:3"), Some((3, "native".to_string())));
+        assert_eq!(sharded_parts("sharded"), Some((2, "native".to_string())));
+        assert_eq!(sharded_parts("native"), None);
+        assert_eq!(sharded_parts("native:4"), None);
+        assert_eq!(sharded_parts("sharded:x:native"), None);
+    }
+
+    #[test]
+    fn execute_routed_default_matches_execute_and_skips_nothing() {
+        let mut rng = Rng::new(31);
+        let a = gen::random_uniform(32, 24, 0.2, &mut rng);
+        let image = Arc::new(preprocess(&a, 2, 8, 4));
+        let n = 2;
+        let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..a.m * n).map(|_| rng.normal()).collect();
+        let mut handle = create("native:1").unwrap().prepare(Arc::clone(&image)).unwrap();
+        assert_eq!(handle.resident_shards(), None, "native is single-unit");
+        let mut plain = c0.clone();
+        handle.execute(&b, &mut plain, n, 1.5, -0.5).unwrap();
+        let mut routed = c0.clone();
+        let skipped = handle.execute_routed(&b, &mut routed, n, 1.5, -0.5).unwrap();
+        assert_eq!(skipped, 0);
+        assert_eq!(plain, routed, "default routing is a plain execute");
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! Stage 1 — **admission**: every request passes a backpressure gate
+//! before it may enter the batching queue.
+//!
+//! The gate is a lock-free in-flight counter: a submit beyond
+//! [`AdmissionPolicy::max_in_flight`] is rejected immediately with an error
+//! response instead of growing the queue without bound — load shedding at
+//! the front door, so a traffic spike degrades into fast rejections rather
+//! than unbounded memory growth and timeout cascades deep in the pipeline.
+//! Rejections are counted in the serving summary
+//! ([`super::metrics::Summary::rejected`]).
+//!
+//! One admission slot is held from submit until the response for that
+//! request is sent (dispatch releases it per segment), so the bound covers
+//! the whole pipeline: queued, batching, and executing requests all count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Backpressure policy for the admission stage.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionPolicy {
+    /// Maximum requests in flight (admitted but not yet responded to). A
+    /// submit beyond this is rejected immediately with an error response.
+    pub max_in_flight: usize,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy { max_in_flight: 4096 }
+    }
+}
+
+/// The admission gate: an in-flight counter enforcing [`AdmissionPolicy`],
+/// shared by submitting callers (admit) and dispatch workers (release).
+#[derive(Debug)]
+pub struct AdmissionGate {
+    policy: AdmissionPolicy,
+    in_flight: AtomicUsize,
+}
+
+impl AdmissionGate {
+    /// Build a gate enforcing `policy`.
+    pub fn new(policy: AdmissionPolicy) -> AdmissionGate {
+        AdmissionGate { policy, in_flight: AtomicUsize::new(0) }
+    }
+
+    /// Try to admit one request: `true` reserves an in-flight slot, `false`
+    /// means the pipeline is full and the request must be rejected.
+    pub fn try_admit(&self) -> bool {
+        let mut cur = self.in_flight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.policy.max_in_flight {
+                return false;
+            }
+            match self.in_flight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Release one admitted request (called exactly once per response).
+    pub fn release(&self) {
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Requests currently admitted and not yet responded to.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// The policy this gate enforces.
+    pub fn policy(&self) -> AdmissionPolicy {
+        self.policy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_the_bound_then_rejects() {
+        let gate = AdmissionGate::new(AdmissionPolicy { max_in_flight: 3 });
+        assert!(gate.try_admit());
+        assert!(gate.try_admit());
+        assert!(gate.try_admit());
+        assert_eq!(gate.in_flight(), 3);
+        assert!(!gate.try_admit(), "fourth request must be shed");
+        assert_eq!(gate.in_flight(), 3, "a rejected request holds no slot");
+    }
+
+    #[test]
+    fn release_reopens_the_gate() {
+        let gate = AdmissionGate::new(AdmissionPolicy { max_in_flight: 1 });
+        assert!(gate.try_admit());
+        assert!(!gate.try_admit());
+        gate.release();
+        assert_eq!(gate.in_flight(), 0);
+        assert!(gate.try_admit());
+    }
+
+    #[test]
+    fn zero_depth_rejects_everything() {
+        let gate = AdmissionGate::new(AdmissionPolicy { max_in_flight: 0 });
+        assert!(!gate.try_admit());
+        assert_eq!(gate.in_flight(), 0);
+    }
+
+    #[test]
+    fn concurrent_admission_never_exceeds_bound() {
+        use std::sync::Arc;
+        let gate = Arc::new(AdmissionGate::new(AdmissionPolicy { max_in_flight: 8 }));
+        let admitted: usize = std::thread::scope(|scope| {
+            (0..4)
+                .map(|_| {
+                    let gate = Arc::clone(&gate);
+                    scope.spawn(move || (0..10).filter(|_| gate.try_admit()).count())
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .sum()
+        });
+        assert_eq!(admitted, 8, "exactly max_in_flight across all threads");
+        assert_eq!(gate.in_flight(), 8);
+    }
+}

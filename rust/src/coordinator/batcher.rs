@@ -1,0 +1,278 @@
+//! Stage 2 — **batching**: admitted requests are merged within a bounded
+//! window into column-concatenated jobs, and small jobs are marked for
+//! shard-aware routing.
+//!
+//! **Dynamic batching** exploits SpMM's structure: two requests against the
+//! same preprocessed A image with matching (α, β) are *column-concatenated*
+//! into a single SpMM with N = N₁ + N₂ — the accelerator's per-window costs
+//! (B stream, C init, pointers) amortize across the batch exactly as the
+//! paper's N/N0 loop amortizes them across columns. The batcher groups by
+//! (image id, α bits, β bits) within [`BatchPolicy::window`], dispatches
+//! merged jobs to the worker pool, and the dispatch stage splits C back per
+//! request.
+//!
+//! **Shard-aware routing**: a merged job whose total column count stays at
+//! or below [`BatchPolicy::route_columns`] is dispatched as *routed* — a
+//! sharded execution handle then runs it only on the shards whose row sets
+//! contain non-zeros, skipping empty shards entirely (their rows receive
+//! the exact `beta * C` update host-side). For small N the per-shard
+//! fan-out overhead is comparable to the useful work, so skipping shards
+//! that would compute nothing is pure latency win; results are
+//! bit-identical to the unrouted path.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::metrics::Recorder;
+use super::server::{ImageHandle, SpmmRequest, SpmmResponse};
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max total columns per merged job (paper sweeps N up to 512).
+    pub max_columns: usize,
+    /// How long the batcher waits to fill a batch.
+    pub window: Duration,
+    /// Shard-aware routing threshold: a merged job with at most this many
+    /// total columns is dispatched *routed*, letting a sharded handle skip
+    /// shards that own no non-zeros. `0` disables routing.
+    pub route_columns: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_columns: 512,
+            window: Duration::from_millis(2),
+            route_columns: 8,
+        }
+    }
+}
+
+/// A request waiting in the batcher, with its stage timestamps.
+pub(crate) struct PendingReq {
+    pub(crate) req: SpmmRequest,
+    pub(crate) respond: Sender<SpmmResponse>,
+    /// When the caller submitted (the queue stage starts here).
+    pub(crate) submitted: Instant,
+    /// When the batcher admitted it to a merge group (the batch stage
+    /// starts here).
+    pub(crate) admitted: Instant,
+}
+
+/// Messages from the server facade into the batching stage.
+pub(crate) enum Msg {
+    /// One request with its response channel and submit timestamp.
+    Request(SpmmRequest, Sender<SpmmResponse>, Instant),
+    /// Drain pending groups and stop.
+    Shutdown,
+}
+
+/// One request's slice of a merged job.
+pub(crate) struct Segment {
+    pub(crate) n: usize,
+    pub(crate) col_off: usize,
+    pub(crate) submitted: Instant,
+    pub(crate) admitted: Instant,
+    pub(crate) respond: Sender<SpmmResponse>,
+}
+
+/// A batch-merged job handed to the dispatch stage.
+pub(crate) struct MergedJob {
+    pub(crate) image: ImageHandle,
+    pub(crate) alpha: f32,
+    pub(crate) beta: f32,
+    pub(crate) b_cat: Vec<f32>,
+    pub(crate) c_cat: Vec<f32>,
+    pub(crate) n_total: usize,
+    /// Dispatch through the shard-aware routed path (small-N job).
+    pub(crate) routed: bool,
+    pub(crate) segments: Vec<Segment>,
+}
+
+/// Column-concatenate a group of same-key requests into one merged job
+/// (row-major interleave of B and C), marking it routed when the total
+/// column count is within the policy's routing threshold. Returns `None`
+/// for an empty group.
+pub(crate) fn merge_group(group: Vec<PendingReq>, policy: &BatchPolicy) -> Option<MergedJob> {
+    if group.is_empty() {
+        return None;
+    }
+    let image = group[0].req.image.clone();
+    let (alpha, beta) = (group[0].req.alpha, group[0].req.beta);
+    let m = image.image.m;
+    let k = image.image.k;
+    let n_total: usize = group.iter().map(|p| p.req.n).sum();
+    let mut b_cat = vec![0f32; k * n_total];
+    let mut c_cat = vec![0f32; m * n_total];
+    let mut col = 0usize;
+    let mut segments = Vec::with_capacity(group.len());
+    for p in group {
+        let req = p.req;
+        for row in 0..k {
+            b_cat[row * n_total + col..row * n_total + col + req.n]
+                .copy_from_slice(&req.b[row * req.n..(row + 1) * req.n]);
+        }
+        for row in 0..m {
+            c_cat[row * n_total + col..row * n_total + col + req.n]
+                .copy_from_slice(&req.c[row * req.n..(row + 1) * req.n]);
+        }
+        segments.push(Segment {
+            n: req.n,
+            col_off: col,
+            submitted: p.submitted,
+            admitted: p.admitted,
+            respond: p.respond,
+        });
+        col += req.n;
+    }
+    Some(MergedJob {
+        image,
+        alpha,
+        beta,
+        b_cat,
+        c_cat,
+        n_total,
+        routed: policy.route_columns > 0 && n_total <= policy.route_columns,
+        segments,
+    })
+}
+
+/// The batching loop: group pending requests by (image id, α bits, β bits),
+/// flush a group when it reaches [`BatchPolicy::max_columns`] or the merge
+/// window expires, and hand merged jobs to the dispatch stage.
+pub(crate) fn batcher_loop(
+    rx: Receiver<Msg>,
+    job_tx: Sender<MergedJob>,
+    policy: BatchPolicy,
+    recorder: Arc<Mutex<Recorder>>,
+) {
+    type Key = (u64, u32, u32);
+    let mut pending: HashMap<Key, Vec<PendingReq>> = HashMap::new();
+    let mut deadline: Option<Instant> = None;
+
+    let flush = |group: Vec<PendingReq>,
+                 job_tx: &Sender<MergedJob>,
+                 recorder: &Arc<Mutex<Recorder>>| {
+        let len = group.len();
+        if let Some(job) = merge_group(group, &policy) {
+            recorder.lock().unwrap().record_batch(len);
+            let _ = job_tx.send(job);
+        }
+    };
+
+    loop {
+        let timeout = deadline
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Request(req, respond, submitted)) => {
+                let key = (req.image.id, req.alpha.to_bits(), req.beta.to_bits());
+                let group = pending.entry(key).or_default();
+                group.push(PendingReq { req, respond, submitted, admitted: Instant::now() });
+                let cols: usize = group.iter().map(|p| p.req.n).sum();
+                if cols >= policy.max_columns {
+                    let group = pending.remove(&key).unwrap();
+                    flush(group, &job_tx, &recorder);
+                }
+                if deadline.is_none() && !pending.is_empty() {
+                    deadline = Some(Instant::now() + policy.window);
+                }
+            }
+            Ok(Msg::Shutdown) => {
+                for (_, group) in pending.drain() {
+                    flush(group, &job_tx, &recorder);
+                }
+                break; // dropping job_tx stops workers
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                for (_, group) in pending.drain() {
+                    flush(group, &job_tx, &recorder);
+                }
+                deadline = None;
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                for (_, group) in pending.drain() {
+                    flush(group, &job_tx, &recorder);
+                }
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::preprocess;
+    use crate::sparse::{gen, rng::Rng};
+    use std::sync::mpsc;
+
+    fn handle(seed: u64) -> ImageHandle {
+        let mut rng = Rng::new(seed);
+        let coo = gen::random_uniform(6, 4, 0.5, &mut rng);
+        ImageHandle { id: seed, image: Arc::new(preprocess(&coo, 2, 4, 2)) }
+    }
+
+    fn pending(image: &ImageHandle, n: usize, fill_b: f32, fill_c: f32) -> PendingReq {
+        // The receiver is dropped — merge_group only stores the sender.
+        let (tx, _rx) = mpsc::channel();
+        let now = Instant::now();
+        PendingReq {
+            req: SpmmRequest {
+                image: image.clone(),
+                b: vec![fill_b; image.image.k * n],
+                c: vec![fill_c; image.image.m * n],
+                n,
+                alpha: 1.0,
+                beta: 0.0,
+            },
+            respond: tx,
+            submitted: now,
+            admitted: now,
+        }
+    }
+
+    #[test]
+    fn empty_group_merges_to_none() {
+        let policy = BatchPolicy::default();
+        assert!(merge_group(Vec::new(), &policy).is_none());
+    }
+
+    #[test]
+    fn merge_concatenates_columns_in_order() {
+        let policy = BatchPolicy { route_columns: 0, ..BatchPolicy::default() };
+        let img = handle(1);
+        let (k, m) = (img.image.k, img.image.m);
+        let group = vec![pending(&img, 2, 1.0, 10.0), pending(&img, 3, 2.0, 20.0)];
+        let job = merge_group(group, &policy).unwrap();
+        assert_eq!(job.n_total, 5);
+        assert!(!job.routed, "route_columns = 0 disables routing");
+        assert_eq!(job.segments.len(), 2);
+        assert_eq!((job.segments[0].n, job.segments[0].col_off), (2, 0));
+        assert_eq!((job.segments[1].n, job.segments[1].col_off), (3, 2));
+        // Row-major interleave: each B row holds 2 cols of request 0 then
+        // 3 cols of request 1.
+        for row in 0..k {
+            assert_eq!(&job.b_cat[row * 5..row * 5 + 2], &[1.0, 1.0]);
+            assert_eq!(&job.b_cat[row * 5 + 2..row * 5 + 5], &[2.0, 2.0, 2.0]);
+        }
+        for row in 0..m {
+            assert_eq!(&job.c_cat[row * 5..row * 5 + 2], &[10.0, 10.0]);
+            assert_eq!(&job.c_cat[row * 5 + 2..row * 5 + 5], &[20.0, 20.0, 20.0]);
+        }
+    }
+
+    #[test]
+    fn small_jobs_are_marked_routed() {
+        let policy = BatchPolicy { route_columns: 4, ..BatchPolicy::default() };
+        let img = handle(2);
+        let job = merge_group(vec![pending(&img, 3, 0.0, 0.0)], &policy).unwrap();
+        assert!(job.routed, "3 <= 4 columns must route");
+        let group = vec![pending(&img, 3, 0.0, 0.0), pending(&img, 3, 0.0, 0.0)];
+        let job = merge_group(group, &policy).unwrap();
+        assert!(!job.routed, "6 > 4 columns must not route");
+    }
+}

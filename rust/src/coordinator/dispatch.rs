@@ -1,0 +1,244 @@
+//! Stage 3 — **dispatch**: the worker pool that executes merged jobs
+//! against resident handles and splits results back per request.
+//!
+//! Workers are std::thread; the backend factory is called once per worker
+//! thread. Handle resolution goes through the shared residency stage
+//! ([`super::residency`]) first; backends whose handles cannot cross
+//! threads (the real PJRT engine) fall back to a per-worker thread-local
+//! MRU cache — the same residency discipline, scoped to one thread.
+//!
+//! Dispatch also owns the **thread-budget composition**: the machine's
+//! cores are divided across the worker threads
+//! ([`per_worker_budget`]), each worker's share is applied to auto-sized
+//! backend specs, and the sharded composite divides its share per shard —
+//! so workers × shards × engine threads never oversubscribes the CPU.
+//! After a runtime re-shard the residency stage re-derives the same
+//! composition for the new S ([`super::residency::reshard_spec`]).
+//!
+//! Per-stage timings measured here (prepare wait, execute) join the
+//! batcher's timestamps (queue wait, batch wait) in each response's
+//! [`RequestTiming`], giving the pipeline its end-to-end latency
+//! breakdown.
+
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::admission::AdmissionGate;
+use super::batcher::MergedJob;
+use super::metrics::{Recorder, RequestTiming};
+use super::residency::{Resolution, ResidencyManager, PREPARED_CACHE_ENTRIES};
+use super::server::SpmmResponse;
+use crate::arch::simulator::problem_flops;
+use crate::backend::{PreparedSpmm, SpmmBackend};
+use crate::shard::ShardRunStats;
+
+/// Per-worker core budget: the machine's cores divided across `n_workers`
+/// threads, at least one — the first factor of the workers × shards ×
+/// engine-threads composition.
+pub fn per_worker_budget(n_workers: usize) -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    cores.div_ceil(n_workers.max(1)).max(1)
+}
+
+/// Spawn the worker pool: each worker constructs its own backend from the
+/// factory and loops on the shared job channel until it disconnects.
+pub(crate) fn spawn_workers<F>(
+    n_workers: usize,
+    factory: Arc<F>,
+    job_rx: Arc<Mutex<Receiver<MergedJob>>>,
+    recorder: Arc<Mutex<Recorder>>,
+    residency: Arc<ResidencyManager>,
+    gate: Arc<AdmissionGate>,
+) -> Vec<JoinHandle<()>>
+where
+    F: Fn(usize) -> Box<dyn SpmmBackend> + Send + Sync + 'static,
+{
+    (0..n_workers.max(1))
+        .map(|w| {
+            let job_rx = Arc::clone(&job_rx);
+            let recorder = Arc::clone(&recorder);
+            let residency = Arc::clone(&residency);
+            let gate = Arc::clone(&gate);
+            let factory = Arc::clone(&factory);
+            std::thread::spawn(move || {
+                let exec = factory(w);
+                worker_loop(&*exec, job_rx, recorder, residency, gate);
+            })
+        })
+        .collect()
+}
+
+/// Run one merged job on a resolved handle: the routed path lets a sharded
+/// handle skip shards owning no non-zeros. Returns shards skipped.
+fn run_job(
+    handle: &mut dyn PreparedSpmm,
+    job: &mut MergedJob,
+) -> Result<usize, crate::backend::BackendError> {
+    if job.routed {
+        handle.execute_routed(&job.b_cat, &mut job.c_cat, job.n_total, job.alpha, job.beta)
+    } else {
+        handle
+            .execute(&job.b_cat, &mut job.c_cat, job.n_total, job.alpha, job.beta)
+            .map(|()| 0)
+    }
+}
+
+fn worker_loop(
+    backend: &dyn SpmmBackend,
+    job_rx: Arc<Mutex<Receiver<MergedJob>>>,
+    recorder: Arc<Mutex<Recorder>>,
+    residency: Arc<ResidencyManager>,
+    gate: Arc<AdmissionGate>,
+) {
+    let backend_name = backend.name();
+    // Fallback cache for thread-local handles, MRU-first, keyed on
+    // ImageHandle id (entry-bounded; the shared cache is byte-sized).
+    let mut local: Vec<(u64, Box<dyn PreparedSpmm>)> = Vec::new();
+    loop {
+        let job = {
+            let rx = job_rx.lock().unwrap();
+            rx.recv()
+        };
+        let Ok(mut job) = job else { break };
+        let picked = Instant::now();
+
+        // Stage boundary: residency resolution (cache hit or prepare).
+        let t_prepare = Instant::now();
+        let resolution =
+            residency.resolve(job.image.id, &job.image.image, backend, &recorder);
+        let mut skipped = 0usize;
+        let mut stats: Option<ShardRunStats> = None;
+        let (prepare_dur, exec_dur, error) = match resolution {
+            Resolution::Shared(shared) => {
+                let prepare_dur = t_prepare.elapsed();
+                // Waiting for the shared per-matrix handle is engine
+                // contention, not prepare work: it counts toward the
+                // execute stage, keeping "prepare ~0 on a cache hit" true.
+                let t_exec = Instant::now();
+                let mut handle = shared.lock().unwrap();
+                let r = run_job(&mut **handle, &mut job);
+                let error = match r {
+                    Ok(sk) => {
+                        skipped = sk;
+                        stats = handle.shard_stats();
+                        None
+                    }
+                    Err(e) => Some(e.to_string()),
+                };
+                (prepare_dur, t_exec.elapsed(), error)
+            }
+            Resolution::ThreadLocal => {
+                // Resolve in the worker-local fallback cache; a miss pays
+                // the backend's build path once per worker.
+                let resolved: Result<(), String> =
+                    match local.iter().position(|(id, _)| *id == job.image.id) {
+                        Some(0) => {
+                            recorder.lock().unwrap().record_prepare_hit();
+                            Ok(())
+                        }
+                        Some(i) => {
+                            let entry = local.remove(i);
+                            local.insert(0, entry);
+                            recorder.lock().unwrap().record_prepare_hit();
+                            Ok(())
+                        }
+                        None => match backend.prepare(Arc::clone(&job.image.image)) {
+                            Ok(handle) => {
+                                recorder
+                                    .lock()
+                                    .unwrap()
+                                    .record_prepare(&handle.prepare_cost());
+                                local.insert(0, (job.image.id, handle));
+                                local.truncate(PREPARED_CACHE_ENTRIES);
+                                Ok(())
+                            }
+                            Err(e) => Err(e.to_string()),
+                        },
+                    };
+                let prepare_dur = t_prepare.elapsed();
+                let t_exec = Instant::now();
+                let error = match resolved {
+                    Ok(()) => {
+                        let handle = &mut *local[0].1;
+                        match run_job(handle, &mut job) {
+                            Ok(sk) => {
+                                skipped = sk;
+                                stats = handle.shard_stats();
+                                None
+                            }
+                            Err(e) => Some(e.to_string()),
+                        }
+                    }
+                    Err(e) => Some(e),
+                };
+                (prepare_dur, t_exec.elapsed(), error)
+            }
+        };
+        if error.is_none() {
+            if let Some(ref s) = stats {
+                // Routed accounting only means something on a handle that
+                // actually has shards to skip; the default execute_routed
+                // passthrough on single-unit engines reports no stats.
+                if job.routed {
+                    recorder.lock().unwrap().record_routed(skipped);
+                }
+                recorder.lock().unwrap().record_shards(s);
+            }
+        }
+        // Split C back per request and respond with per-stage timings —
+        // before feeding the skew window, so a triggered rebuild never
+        // delays responses whose results are already computed.
+        let m = job.image.image.m;
+        let nnz = job.image.image.nnz;
+        for seg in job.segments {
+            let mut c = vec![0f32; m * seg.n];
+            if error.is_none() {
+                for row in 0..m {
+                    c[row * seg.n..(row + 1) * seg.n].copy_from_slice(
+                        &job.c_cat[row * job.n_total + seg.col_off
+                            ..row * job.n_total + seg.col_off + seg.n],
+                    );
+                }
+            }
+            let timing = RequestTiming {
+                queue: seg.admitted.duration_since(seg.submitted),
+                batch: picked.duration_since(seg.admitted),
+                prepare: prepare_dur,
+                exec: exec_dur,
+                flops: problem_flops(nnz, m, seg.n),
+                backend: backend_name,
+            };
+            recorder.lock().unwrap().record(timing);
+            let _ = seg.respond.send(SpmmResponse { c, timing, error: error.clone() });
+            gate.release();
+        }
+        // Feed the re-shard-on-skew window last: a rebuild it triggers is
+        // paid here, after this job's callers have their answers.
+        if error.is_none() {
+            if let Some(ref s) = stats {
+                residency.note_shards(job.image.id, s, &recorder);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_worker_budget_divides_cores() {
+        let cores =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        assert_eq!(per_worker_budget(1), cores);
+        assert!(per_worker_budget(cores * 4) >= 1);
+        // Zero workers is clamped, never a division by zero.
+        assert_eq!(per_worker_budget(0), cores);
+        // Shares cover the machine: budget * workers >= cores.
+        for w in 1..=8 {
+            assert!(per_worker_budget(w) * w >= cores, "workers = {w}");
+        }
+    }
+}

@@ -1,18 +1,29 @@
-//! Serving metrics: per-request latency recording, prepare amortization
-//! (per-worker prepared-handle cache hits vs. misses), shard-level load
-//! statistics (when a sharded backend executes), and summary statistics.
+//! Serving metrics: per-request latency with a **per-stage breakdown**
+//! (queue wait → batch wait → prepare → execute, matching the pipeline's
+//! four stages), prepare amortization (shared prepared-handle cache hits
+//! vs. misses, byte-budget evictions), admission rejections, shard-aware
+//! routing counts, re-shard-on-skew rebuilds, and shard-level load
+//! statistics — rolled up into [`Summary`].
 
 use std::time::Duration;
 
 use crate::backend::PrepareCost;
 use crate::shard::ShardRunStats;
 
-/// One served request's timing.
+/// One served request's timing, decomposed by pipeline stage.
 #[derive(Clone, Copy, Debug)]
 pub struct RequestTiming {
-    /// Time from submit to dispatch (queue + batching delay).
+    /// Stage 1→2 wait: submit until the batcher admits it to a merge
+    /// group.
     pub queue: Duration,
-    /// Executor time.
+    /// Stage 2→3 wait: merge-group admission until a worker picks the
+    /// merged job up (window wait + dispatch queue).
+    pub batch: Duration,
+    /// Stage 4: residency resolution — a cache hit is ~0, a miss pays the
+    /// backend's prepare.
+    pub prepare: Duration,
+    /// Executor time (for shared residencies this includes waiting for
+    /// the per-matrix handle — engine contention, not prepare work).
     pub exec: Duration,
     /// Problem size in FLOP.
     pub flops: u64,
@@ -22,9 +33,9 @@ pub struct RequestTiming {
 }
 
 impl RequestTiming {
-    /// End-to-end latency.
+    /// End-to-end latency: the sum of all four stages.
     pub fn total(&self) -> Duration {
-        self.queue + self.exec
+        self.queue + self.batch + self.prepare + self.exec
     }
 }
 
@@ -34,10 +45,16 @@ pub struct Recorder {
     timings: Vec<RequestTiming>,
     batches: usize,
     batched_requests: usize,
+    rejected: usize,
     prepares: usize,
     prepare_hits: usize,
     prepare_wall_s: f64,
     prepared_bytes: u64,
+    evictions: usize,
+    routed_jobs: usize,
+    shards_skipped: usize,
+    reshards: usize,
+    last_reshard: Option<(usize, usize)>,
     shard_execs: usize,
     shard_count_sum: usize,
     shard_imbalance_sum: f64,
@@ -57,16 +74,43 @@ impl Recorder {
         self.batched_requests += n;
     }
 
-    /// Record one worker preparing a matrix (a prepared-handle cache miss).
+    /// Record one request shed by the admission gate (never queued).
+    pub fn record_reject(&mut self) {
+        self.rejected += 1;
+    }
+
+    /// Record one matrix becoming resident (a prepared-handle cache miss).
     pub fn record_prepare(&mut self, cost: &PrepareCost) {
         self.prepares += 1;
         self.prepare_wall_s += cost.wall.as_secs_f64();
         self.prepared_bytes += cost.resident_bytes;
     }
 
-    /// Record one job served from a worker's prepared-handle cache.
+    /// Record one job served from an already-resident prepared handle.
     pub fn record_prepare_hit(&mut self) {
         self.prepare_hits += 1;
+    }
+
+    /// Record one residency evicted by the byte-budget policy.
+    pub fn record_evict(&mut self) {
+        self.evictions += 1;
+    }
+
+    /// Record one merged job dispatched through the shard-aware routed
+    /// path, with the number of shards it skipped.
+    pub fn record_routed(&mut self, skipped: usize) {
+        self.routed_jobs += 1;
+        self.shards_skipped += skipped;
+    }
+
+    /// Record one skew-triggered rebuild: the resident sharded handle was
+    /// dropped and re-prepared at a new shard count. Deliberately not
+    /// folded into the prepare aggregates — a rebuild is neither a cache
+    /// miss nor a caller-visible prepare, and mixing its wall time into
+    /// `mean_prepare_s` would skew that mean's denominator.
+    pub fn record_reshard(&mut self, from_shards: usize, to_shards: usize) {
+        self.reshards += 1;
+        self.last_reshard = Some((from_shards, to_shards));
     }
 
     /// Record one sharded execution's shard-level stats (per-shard nnz and
@@ -103,6 +147,10 @@ impl Recorder {
             }
         }
         backends.sort_by_key(|(name, _)| *name);
+        let denom = self.timings.len().max(1) as f64;
+        let stage_mean = |f: fn(&RequestTiming) -> Duration| -> f64 {
+            self.timings.iter().map(|t| f(t).as_secs_f64()).sum::<f64>() / denom
+        };
         Summary {
             requests: self.timings.len(),
             batches: self.batches,
@@ -111,11 +159,16 @@ impl Recorder {
             } else {
                 self.batched_requests as f64 / self.batches as f64
             },
+            rejected: self.rejected,
             p50_s: pct(0.50),
             p95_s: pct(0.95),
             p99_s: pct(0.99),
             total_flops,
             sum_latency_s: wall,
+            stage_queue_s: stage_mean(|t| t.queue),
+            stage_batch_s: stage_mean(|t| t.batch),
+            stage_prepare_s: stage_mean(|t| t.prepare),
+            stage_exec_s: stage_mean(|t| t.exec),
             backends,
             prepares: self.prepares,
             prepare_hits: self.prepare_hits,
@@ -130,6 +183,11 @@ impl Recorder {
                 self.prepare_wall_s / self.prepares as f64
             },
             prepared_bytes: self.prepared_bytes,
+            evictions: self.evictions,
+            routed_jobs: self.routed_jobs,
+            shards_skipped: self.shards_skipped,
+            reshards: self.reshards,
+            last_reshard: self.last_reshard,
             shard_execs: self.shard_execs,
             mean_shards: if self.shard_execs == 0 {
                 0.0
@@ -160,6 +218,8 @@ pub struct Summary {
     pub batches: usize,
     /// Mean requests per batch.
     pub mean_batch: f64,
+    /// Requests shed by the admission gate (not counted in `requests`).
+    pub rejected: usize,
     /// Median end-to-end latency (s).
     pub p50_s: f64,
     /// 95th percentile latency (s).
@@ -170,21 +230,43 @@ pub struct Summary {
     pub total_flops: u64,
     /// Sum of request latencies (s).
     pub sum_latency_s: f64,
+    /// Mean per-request queue wait: submit → batcher admission (s).
+    pub stage_queue_s: f64,
+    /// Mean per-request batch wait: admission → worker pickup (s).
+    pub stage_batch_s: f64,
+    /// Mean per-request residency resolution: cache hit or prepare (s).
+    pub stage_prepare_s: f64,
+    /// Mean per-request execution time (s).
+    pub stage_exec_s: f64,
     /// Requests served per backend name, sorted by name.
     pub backends: Vec<(&'static str, usize)>,
-    /// Matrix prepares performed across workers (prepared-handle cache
-    /// misses; each pays the backend's build path once).
+    /// Matrix prepares performed (prepared-handle cache misses; each pays
+    /// the backend's build path once, shared across workers).
     pub prepares: usize,
-    /// Jobs served from a worker's prepared-handle cache (no re-prepare).
+    /// Jobs served from the prepared-handle cache (no re-prepare).
     pub prepare_hits: usize,
     /// hits / (hits + prepares) — the amortization headline: how often a
     /// request found its matrix already resident.
     pub prepare_hit_rate: f64,
-    /// Mean wall time per prepare (s).
+    /// Mean wall time per prepare (s); skew rebuilds are counted in
+    /// [`Summary::reshards`], not here.
     pub mean_prepare_s: f64,
     /// Total bytes made resident by prepares (decoded streams, shard
     /// images, scratch).
     pub prepared_bytes: u64,
+    /// Residencies evicted by the byte-budget policy.
+    pub evictions: usize,
+    /// Merged jobs dispatched through the shard-aware routed path on a
+    /// sharded handle (plain-engine jobs under the routing threshold are
+    /// not counted — there is nothing to skip).
+    pub routed_jobs: usize,
+    /// Total shards skipped across routed executions (shards owning no
+    /// non-zeros of the touched rows).
+    pub shards_skipped: usize,
+    /// Skew-triggered rebuilds (drop + re-prepare at a new shard count).
+    pub reshards: usize,
+    /// Most recent rebuild as (from, to) shard counts.
+    pub last_reshard: Option<(usize, usize)>,
     /// Sharded executions observed (0 when no sharded backend served).
     pub shard_execs: usize,
     /// Mean shard count per sharded execution.
@@ -208,6 +290,8 @@ mod tests {
     fn tb(ms: u64, flops: u64, backend: &'static str) -> RequestTiming {
         RequestTiming {
             queue: Duration::from_millis(ms / 2),
+            batch: Duration::ZERO,
+            prepare: Duration::ZERO,
             exec: Duration::from_millis(ms - ms / 2),
             flops,
             backend,
@@ -225,6 +309,38 @@ mod tests {
         assert!((s.p50_s - 0.005).abs() < 0.0015, "{}", s.p50_s);
         assert!(s.p99_s >= 0.09);
         assert_eq!(s.total_flops, 100);
+    }
+
+    #[test]
+    fn stage_breakdown_means_sum_to_mean_latency() {
+        let mut r = Recorder::default();
+        r.record(RequestTiming {
+            queue: Duration::from_millis(1),
+            batch: Duration::from_millis(2),
+            prepare: Duration::from_millis(3),
+            exec: Duration::from_millis(4),
+            flops: 1,
+            backend: "test",
+        });
+        r.record(RequestTiming {
+            queue: Duration::from_millis(3),
+            batch: Duration::from_millis(4),
+            prepare: Duration::from_millis(5),
+            exec: Duration::from_millis(8),
+            flops: 1,
+            backend: "test",
+        });
+        let s = r.summary();
+        assert!((s.stage_queue_s - 0.002).abs() < 1e-9);
+        assert!((s.stage_batch_s - 0.003).abs() < 1e-9);
+        assert!((s.stage_prepare_s - 0.004).abs() < 1e-9);
+        assert!((s.stage_exec_s - 0.006).abs() < 1e-9);
+        let stage_sum = s.stage_queue_s + s.stage_batch_s + s.stage_prepare_s + s.stage_exec_s;
+        let mean_latency = s.sum_latency_s / s.requests as f64;
+        assert!(
+            (stage_sum - mean_latency).abs() < 1e-12,
+            "stages must decompose the latency: {stage_sum} vs {mean_latency}"
+        );
     }
 
     #[test]
@@ -247,6 +363,13 @@ mod tests {
         assert_eq!(s.mean_shard_imbalance, 0.0);
         assert_eq!(s.prepares, 0);
         assert_eq!(s.prepare_hit_rate, 0.0);
+        assert_eq!(s.stage_queue_s, 0.0);
+        assert_eq!(s.stage_exec_s, 0.0);
+        assert_eq!(s.rejected, 0);
+        assert_eq!(s.routed_jobs, 0);
+        assert_eq!(s.reshards, 0);
+        assert_eq!(s.last_reshard, None);
+        assert_eq!(s.evictions, 0);
     }
 
     #[test]
@@ -260,18 +383,49 @@ mod tests {
             wall: Duration::from_millis(30),
             resident_bytes: 3_000,
         });
-        r.record_prepare_hit();
-        r.record_prepare_hit();
-        r.record_prepare_hit();
-        r.record_prepare_hit();
-        r.record_prepare_hit();
-        r.record_prepare_hit();
+        for _ in 0..6 {
+            r.record_prepare_hit();
+        }
         let s = r.summary();
         assert_eq!(s.prepares, 2);
         assert_eq!(s.prepare_hits, 6);
         assert!((s.prepare_hit_rate - 0.75).abs() < 1e-12);
         assert!((s.mean_prepare_s - 0.02).abs() < 1e-9);
         assert_eq!(s.prepared_bytes, 4_000);
+    }
+
+    #[test]
+    fn pipeline_event_counters_aggregate() {
+        let mut r = Recorder::default();
+        r.record_reject();
+        r.record_reject();
+        r.record_evict();
+        r.record_routed(5);
+        r.record_routed(0);
+        r.record_reshard(8, 4);
+        let s = r.summary();
+        assert_eq!(s.rejected, 2);
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.routed_jobs, 2);
+        assert_eq!(s.shards_skipped, 5);
+        assert_eq!(s.reshards, 1);
+        assert_eq!(s.last_reshard, Some((8, 4)));
+    }
+
+    #[test]
+    fn reshard_does_not_perturb_prepare_accounting() {
+        let mut r = Recorder::default();
+        r.record_prepare(&PrepareCost {
+            wall: Duration::from_millis(10),
+            resident_bytes: 100,
+        });
+        r.record_prepare_hit();
+        r.record_reshard(4, 2);
+        let s = r.summary();
+        assert_eq!(s.prepares, 1, "a rebuild is not a cache miss");
+        assert!((s.prepare_hit_rate - 0.5).abs() < 1e-12);
+        assert!((s.mean_prepare_s - 0.010).abs() < 1e-9, "rebuilds must not skew the mean");
+        assert_eq!(s.reshards, 1);
     }
 
     #[test]

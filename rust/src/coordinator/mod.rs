@@ -1,18 +1,54 @@
-//! L3 serving coordinator: request router, dynamic batcher, worker pool,
-//! serving metrics — the systems wrapper that turns the HFlex accelerator
-//! into a service.
+//! L3 serving coordinator: an adaptive SpMM serving pipeline that turns
+//! the HFlex accelerator into a service.
 //!
-//! Execution is pluggable: workers run any [`crate::backend::SpmmBackend`]
-//! (native multi-threaded engine by default), constructed per worker thread
-//! either via a factory closure ([`Server::start`]) or by registry name
-//! ([`Server::start_backend`]). Each worker keeps an MRU cache of
-//! [`crate::backend::PreparedSpmm`] handles keyed on the registered image,
-//! so repeated requests against one matrix prepare it once per worker —
-//! the prepare hit rate, wall time, and resident bytes are part of the
-//! serving [`metrics::Summary`].
+//! Requests flow through four focused stages, each its own module:
+//!
+//! ```text
+//!  submit()                                                response
+//!     │                                                        ▲
+//!     ▼                                                        │
+//!  ┌─────────────┐   ┌─────────────┐   ┌──────────────┐        │
+//!  │ 1 admission │──▶│ 2 batcher   │──▶│ 3 dispatch   │────────┘
+//!  │  in-flight  │   │  merge      │   │  worker pool │
+//!  │  gate, load │   │  window,    │   │  thread      │   ┌──────────────┐
+//!  │  shedding   │   │  shard-     │   │  budgets,    │◀─▶│ 4 residency  │
+//!  └─────────────┘   │  aware      │   │  stage       │   │  byte-sized  │
+//!                    │  routing    │   │  timings     │   │  shared pool │
+//!                    └─────────────┘   └──────────────┘   │  re-shard on │
+//!                                                         │  skew        │
+//!                                                         └──────────────┘
+//! ```
+//!
+//! * [`admission`] — an in-flight gate sheds load at the front door
+//!   instead of letting queues grow without bound.
+//! * [`batcher`] — same-image requests merge by column concatenation
+//!   within a bounded window (the paper's N/N0 amortization, applied
+//!   across requests); small merged jobs are marked for shard-aware
+//!   routing so a sharded handle skips shards owning no non-zeros.
+//! * [`dispatch`] — the worker pool; composes thread budgets
+//!   (workers × shards × engine threads ≤ cores) and measures the
+//!   per-stage latency breakdown reported in [`metrics::Summary`].
+//! * [`residency`] — prepared handles cached by resident **bytes** and
+//!   shared read-only across workers via `Arc`; rolling shard-imbalance
+//!   triggers re-shard-on-skew (drop + re-prepare at a smaller S) without
+//!   callers noticing.
+//!
+//! The public surface is the [`server::Server`] facade: `start`,
+//! `start_backend`, `register`, `submit`, `call`, `shutdown` — plus
+//! `start_with`/`start_backend_with` to set every stage policy through
+//! [`server::PipelineConfig`].
 
+pub mod admission;
+pub mod batcher;
+pub mod dispatch;
 pub mod metrics;
+pub mod residency;
 pub mod server;
 
 pub use crate::backend::SpmmBackend;
-pub use server::{BatchPolicy, ImageHandle, Server, SpmmRequest, SpmmResponse};
+pub use admission::AdmissionPolicy;
+pub use batcher::BatchPolicy;
+pub use residency::{ReshardPolicy, ResidencyPolicy};
+pub use server::{
+    ImageHandle, PipelineConfig, Server, SpmmRequest, SpmmResponse,
+};

@@ -1,0 +1,633 @@
+//! Stage 4 — **residency**: which prepared matrices stay resident, sized
+//! by **bytes** rather than entry count, shared read-only across workers,
+//! and rebuilt at a smaller shard count when serving metrics show skew.
+//!
+//! Serpens (arXiv 2111.12555) makes the case at the memory level: residency
+//! placement, not compute, decides throughput. This stage owns that
+//! decision for the serving pipeline:
+//!
+//! * **Shared handles** — a prepared handle is built once (through the
+//!   backend's `prepare_send`) and shared by every worker via
+//!   `Arc<Mutex<..>>`, instead of one duplicate residency per worker.
+//!   Backends whose handles cannot cross threads (the real PJRT engine)
+//!   fall back to per-worker thread-local caches
+//!   ([`Resolution::ThreadLocal`]).
+//! * **Byte-sized eviction** — the cache budget is
+//!   [`ResidencyPolicy::max_resident_bytes`] of actual
+//!   [`crate::backend::PrepareCost::resident_bytes`], not a fixed entry
+//!   count: eight tiny matrices no longer evict each other while one huge
+//!   matrix slips under an entry-based limit.
+//! * **Re-shard-on-skew** — every sharded execution feeds its nnz
+//!   imbalance into a rolling window; when the window's mean exceeds
+//!   [`ReshardPolicy::imbalance_threshold`], the resident handle is
+//!   dropped and re-prepared at half its shard count — exactly the
+//!   prepare/execute contract's rebuild path, invisible to callers. The
+//!   rebuilt spec passes through [`crate::backend::apply_thread_budget`]
+//!   again ([`reshard_spec`]) so the new workers × shards × engine-threads
+//!   product cannot oversubscribe the machine.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::metrics::Recorder;
+use crate::backend::{self, BackendError, PreparedSpmm, SpmmBackend};
+use crate::sched::ScheduledMatrix;
+use crate::shard::ShardRunStats;
+
+/// Depth of the per-worker *fallback* cache used for backends whose
+/// handles cannot cross threads (`prepare_send` refused, e.g. the real
+/// PJRT engine). The shared cache is byte-sized instead
+/// ([`ResidencyPolicy::max_resident_bytes`]).
+pub const PREPARED_CACHE_ENTRIES: usize = 8;
+
+/// Prepared-handle cache policy: sized by resident bytes, not entries.
+#[derive(Clone, Copy, Debug)]
+pub struct ResidencyPolicy {
+    /// Total bytes of prepared-handle state kept resident across all
+    /// cached matrices. Least-recently-used residencies are dropped first;
+    /// the most recently used handle always stays, even when it alone
+    /// exceeds the budget (the server must be able to serve).
+    pub max_resident_bytes: u64,
+}
+
+impl Default for ResidencyPolicy {
+    fn default() -> Self {
+        ResidencyPolicy { max_resident_bytes: 512 * 1024 * 1024 }
+    }
+}
+
+/// Re-shard-on-skew policy.
+#[derive(Clone, Copy, Debug)]
+pub struct ReshardPolicy {
+    /// Rolling mean shard-nnz imbalance (max/mean, 1.0 = balanced) above
+    /// which the resident sharded handle is rebuilt at half its shard
+    /// count. `f64::INFINITY` (the default) disables resharding.
+    pub imbalance_threshold: f64,
+    /// Sharded executions accumulated per evaluation window; the trigger
+    /// is checked (and the window reset) every `window` executions.
+    pub window: usize,
+}
+
+impl Default for ReshardPolicy {
+    fn default() -> Self {
+        ReshardPolicy { imbalance_threshold: f64::INFINITY, window: 16 }
+    }
+}
+
+/// What a rebuild needs that the budgeted factory spec no longer carries:
+/// the inner engine spec exactly as the operator gave it (un-budgeted) and
+/// the per-worker core budget computed at server startup.
+#[derive(Clone, Debug)]
+pub struct ReshardContext {
+    /// Raw inner spec of the `sharded:<S>:<inner>` composite, before
+    /// thread budgeting.
+    pub inner_spec: String,
+    /// Core budget per server worker.
+    pub budget: usize,
+}
+
+/// Compose the registry spec for a rebuilt sharded handle: `new_s` shards
+/// over the raw inner spec, re-budgeted for `budget` cores. Rebuilding
+/// from the *budgeted* spec instead would freeze the inner thread count at
+/// the old S's share — after S halves, half the cores would sit idle (or,
+/// resharding upward, be oversubscribed).
+pub fn reshard_spec(inner_spec: &str, new_s: usize, budget: usize) -> String {
+    backend::apply_thread_budget(&format!("sharded:{new_s}:{inner_spec}"), budget)
+}
+
+/// A prepared handle shared across workers. Execution serializes on the
+/// per-matrix mutex; the engine's own internal parallelism (budgeted per
+/// worker) provides the concurrency within one matrix. Trade-off: with W
+/// workers all hammering a *single* matrix, at most one execute runs at a
+/// time on a 1/W core share — the memory win (one residency instead of W
+/// duplicates) is bought with serialized execution on that pathological
+/// workload; distinct matrices still execute concurrently across workers.
+pub type SharedHandle = Arc<Mutex<Box<dyn PreparedSpmm + Send>>>;
+
+/// Outcome of a residency lookup.
+pub enum Resolution {
+    /// The matrix is resident (or just became resident) in the shared
+    /// cache; execute through this handle.
+    Shared(SharedHandle),
+    /// This backend's handles cannot cross threads; the worker must
+    /// prepare thread-locally and keep its own fallback cache.
+    ThreadLocal,
+}
+
+struct Entry {
+    id: u64,
+    image: Arc<ScheduledMatrix>,
+    handle: SharedHandle,
+    bytes: u64,
+    /// Current shard count of a composite handle (`None` = single-unit).
+    shards: Option<usize>,
+    /// Sharded executions since the last rebuild or window reset.
+    execs: usize,
+    /// Sum of per-execution nnz imbalance over `execs`.
+    imbalance_sum: f64,
+    /// A skew rebuild is in flight (built outside the lock; the old
+    /// handle keeps serving until the swap).
+    rebuilding: bool,
+}
+
+struct State {
+    /// MRU-first.
+    entries: Vec<Entry>,
+    total_bytes: u64,
+    /// Image ids with a prepare in flight (built outside the lock so
+    /// other matrices resolve without stalling; same-id resolvers wait on
+    /// the condvar instead of preparing twice).
+    preparing: Vec<u64>,
+    /// Image ids whose backend refused `prepare_send` once: resolved
+    /// straight to [`Resolution::ThreadLocal`] from then on, so the
+    /// steady-state hot path of thread-local backends (the real PJRT
+    /// engine) never re-runs the miss protocol.
+    thread_local: Vec<u64>,
+}
+
+/// Drop LRU residencies until the pool fits the byte budget. The MRU
+/// entry always stays, even oversized (the server must be able to serve),
+/// and entries with a rebuild in flight are passed over — evicting one
+/// would throw away the re-prepare its rebuild is paying for; the budget
+/// is re-enforced when that rebuild lands.
+fn evict_to_budget(policy: &ResidencyPolicy, st: &mut State, recorder: &Mutex<Recorder>) {
+    while st.total_bytes > policy.max_resident_bytes && st.entries.len() > 1 {
+        let Some(victim_idx) = st.entries.iter().rposition(|e| !e.rebuilding) else {
+            break;
+        };
+        if victim_idx == 0 {
+            break;
+        }
+        let victim = st.entries.remove(victim_idx);
+        st.total_bytes -= victim.bytes;
+        recorder.lock().unwrap().record_evict();
+    }
+}
+
+/// The residency manager: one per server, shared by all workers.
+pub struct ResidencyManager {
+    policy: ResidencyPolicy,
+    reshard: ReshardPolicy,
+    ctx: Option<ReshardContext>,
+    state: Mutex<State>,
+    /// Signaled when an in-flight prepare (see `State::preparing`) ends.
+    prepare_done: Condvar,
+}
+
+impl ResidencyManager {
+    /// Build a manager. `ctx` enables re-shard-on-skew and is only
+    /// available when the server was started from a registry spec (a
+    /// closure factory has no spec to rebuild from).
+    pub fn new(
+        policy: ResidencyPolicy,
+        reshard: ReshardPolicy,
+        ctx: Option<ReshardContext>,
+    ) -> ResidencyManager {
+        ResidencyManager {
+            policy,
+            reshard,
+            ctx,
+            state: Mutex::new(State {
+                entries: Vec::new(),
+                total_bytes: 0,
+                preparing: Vec::new(),
+                thread_local: Vec::new(),
+            }),
+            prepare_done: Condvar::new(),
+        }
+    }
+
+    /// Resolve a registered image to its shared prepared handle: a hit
+    /// bubbles the entry to the MRU front; a miss prepares through
+    /// `factory` *outside* the state lock (hits and other matrices keep
+    /// resolving meanwhile; same-id resolvers wait on a condvar so one
+    /// matrix is never prepared twice concurrently) and may evict
+    /// least-recently-used residencies to fit the byte budget. Returns
+    /// [`Resolution::ThreadLocal`] when the factory refuses
+    /// `prepare_send`.
+    pub fn resolve(
+        &self,
+        id: u64,
+        image: &Arc<ScheduledMatrix>,
+        factory: &dyn SpmmBackend,
+        recorder: &Mutex<Recorder>,
+    ) -> Resolution {
+        let mut guard = self.state.lock().unwrap();
+        loop {
+            // Re-checked after every condvar wake: a concurrent resolver
+            // may have latched this image as thread-local meanwhile.
+            if guard.thread_local.contains(&id) {
+                return Resolution::ThreadLocal;
+            }
+            if let Some(i) = guard.entries.iter().position(|e| e.id == id) {
+                if i != 0 {
+                    let e = guard.entries.remove(i);
+                    guard.entries.insert(0, e);
+                }
+                recorder.lock().unwrap().record_prepare_hit();
+                return Resolution::Shared(Arc::clone(&guard.entries[0].handle));
+            }
+            if guard.preparing.contains(&id) {
+                // Another worker is building this matrix; when it finishes
+                // we re-check and hit (or, if it failed, build ourselves).
+                guard = self.prepare_done.wait(guard).unwrap();
+            } else {
+                break;
+            }
+        }
+        guard.preparing.push(id);
+        drop(guard);
+
+        // Miss: the build path, run unlocked. Thread-local backends (and
+        // genuinely failing prepares) fall back to the worker, which
+        // surfaces the engine's own error per request.
+        let prepared = factory.prepare_send(Arc::clone(image));
+
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        st.preparing.retain(|p| *p != id);
+        self.prepare_done.notify_all();
+        let handle = match prepared {
+            Ok(h) => h,
+            Err(e) => {
+                // Latch only the definitive refusal (`Unavailable` is what
+                // both the default "handles are thread-local" refusal and
+                // an artifact-less engine return): those never start
+                // succeeding, so skip the miss protocol from now on. Other
+                // errors may be transient — keep retrying the shared path
+                // so the byte-budgeted cache isn't silently disabled. The
+                // worker-local fallback re-attempts `prepare` per request
+                // either way, so errors still surface there.
+                if matches!(e, BackendError::Unavailable(_)) {
+                    st.thread_local.push(id);
+                }
+                return Resolution::ThreadLocal;
+            }
+        };
+        let cost = handle.prepare_cost();
+        recorder.lock().unwrap().record_prepare(&cost);
+        let shards = handle.resident_shards();
+        let shared: SharedHandle = Arc::new(Mutex::new(handle));
+        st.entries.insert(
+            0,
+            Entry {
+                id,
+                image: Arc::clone(image),
+                handle: Arc::clone(&shared),
+                bytes: cost.resident_bytes,
+                shards,
+                execs: 0,
+                imbalance_sum: 0.0,
+                rebuilding: false,
+            },
+        );
+        st.total_bytes += cost.resident_bytes;
+        // Byte-sized eviction. Workers still executing an evicted handle
+        // hold their own Arc clone; the bytes are freed when the last of
+        // them finishes.
+        evict_to_budget(&self.policy, st, recorder);
+        Resolution::Shared(shared)
+    }
+
+    /// Feed one sharded execution's stats into the rolling skew window for
+    /// `id`. When the window fills and its mean imbalance exceeds the
+    /// policy threshold, the resident handle is dropped and re-prepared at
+    /// half its shard count (via [`reshard_spec`], so thread budgets are
+    /// re-derived for the new S) — callers never notice beyond the one-off
+    /// rebuild latency. A failed rebuild keeps the old handle serving.
+    pub fn note_shards(&self, id: u64, stats: &ShardRunStats, recorder: &Mutex<Recorder>) {
+        let Some(ctx) = &self.ctx else { return };
+        if self.reshard.imbalance_threshold.is_infinite() {
+            return;
+        }
+        // Phase 1 — under the lock: accumulate the window and decide.
+        let (image, s, new_s) = {
+            let mut guard = self.state.lock().unwrap();
+            let Some(e) = guard.entries.iter_mut().find(|e| e.id == id) else { return };
+            let Some(s) = e.shards else { return };
+            // Stats from a handle retired by an earlier rebuild (stale S),
+            // or arriving while a rebuild is in flight, must not poison
+            // the new pool's window and double-trigger.
+            if e.rebuilding || stats.shards != s {
+                return;
+            }
+            e.execs += 1;
+            e.imbalance_sum += stats.imbalance;
+            if e.execs < self.reshard.window.max(1) {
+                return;
+            }
+            let mean = e.imbalance_sum / e.execs as f64;
+            e.execs = 0;
+            e.imbalance_sum = 0.0;
+            if mean <= self.reshard.imbalance_threshold || s <= 1 {
+                return;
+            }
+            e.rebuilding = true;
+            (Arc::clone(&e.image), s, (s / 2).max(1))
+        };
+        // Phase 2 — unlocked: build the new pool while the old one keeps
+        // serving (hits and other matrices never stall behind a rebuild).
+        let spec = reshard_spec(&ctx.inner_spec, new_s, ctx.budget);
+        let rebuilt =
+            backend::create(&spec).and_then(|factory| factory.prepare_send(image));
+        // Phase 3 — under the lock: swap the handle in (or keep the old
+        // one on a failed rebuild) and re-enforce the byte budget.
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        let Some(e) = st.entries.iter_mut().find(|e| e.id == id) else { return };
+        e.rebuilding = false;
+        let Ok(handle) = rebuilt else { return };
+        let cost = handle.prepare_cost();
+        recorder.lock().unwrap().record_reshard(s, new_s);
+        st.total_bytes = st.total_bytes + cost.resident_bytes - e.bytes;
+        e.bytes = cost.resident_bytes;
+        e.shards = handle.resident_shards();
+        e.execs = 0;
+        e.imbalance_sum = 0.0;
+        // Replacing the Arc retires the old pool: workers mid-execute on
+        // it finish safely on their own clones.
+        e.handle = Arc::new(Mutex::new(handle));
+        evict_to_budget(&self.policy, st, recorder);
+    }
+
+    /// Total bytes currently resident across cached handles.
+    pub fn resident_bytes(&self) -> u64 {
+        self.state.lock().unwrap().total_bytes
+    }
+
+    /// Number of resident matrices.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().entries.len()
+    }
+
+    /// True when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current shard count of the resident handle for `id` (`None` when
+    /// not resident or not a composite handle).
+    pub fn resident_shards(&self, id: u64) -> Option<usize> {
+        self.state
+            .lock()
+            .unwrap()
+            .entries
+            .iter()
+            .find(|e| e.id == id)
+            .and_then(|e| e.shards)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::sched::preprocess;
+    use crate::shard::ShardedBackend;
+    use crate::sparse::{gen, rng::Rng};
+    use std::time::Duration;
+
+    fn image(seed: u64) -> Arc<ScheduledMatrix> {
+        let mut rng = Rng::new(seed);
+        let coo = gen::random_uniform(48, 40, 0.2, &mut rng);
+        Arc::new(preprocess(&coo, 4, 16, 6))
+    }
+
+    fn skewed_image() -> Arc<ScheduledMatrix> {
+        let mut rng = Rng::new(77);
+        let coo = gen::power_law_rows(96, 64, 1_200, 1.2, &mut rng);
+        Arc::new(preprocess(&coo, 4, 16, 6))
+    }
+
+    fn stats(shards: usize, imbalance: f64) -> ShardRunStats {
+        ShardRunStats {
+            shards,
+            shard_nnz: vec![1; shards],
+            shard_latency: vec![Duration::from_micros(1); shards],
+            imbalance,
+        }
+    }
+
+    #[test]
+    fn hit_shares_one_handle_and_records() {
+        let mgr = ResidencyManager::new(
+            ResidencyPolicy::default(),
+            ReshardPolicy::default(),
+            None,
+        );
+        let recorder = Mutex::new(Recorder::default());
+        let be = NativeBackend::new(1);
+        let img = image(1);
+        let a = mgr.resolve(7, &img, &be, &recorder);
+        let b = mgr.resolve(7, &img, &be, &recorder);
+        let (Resolution::Shared(a), Resolution::Shared(b)) = (a, b) else {
+            panic!("native prepares sendable handles");
+        };
+        assert!(Arc::ptr_eq(&a, &b), "both workers must share one residency");
+        assert_eq!(mgr.len(), 1);
+        let s = recorder.lock().unwrap().summary();
+        assert_eq!(s.prepares, 1);
+        assert_eq!(s.prepare_hits, 1);
+    }
+
+    #[test]
+    fn eviction_is_by_bytes_not_entries() {
+        let recorder = Mutex::new(Recorder::default());
+        let be = NativeBackend::new(1);
+        // Learn one image's resident footprint, then budget for two.
+        let probe = ResidencyManager::new(
+            ResidencyPolicy::default(),
+            ReshardPolicy::default(),
+            None,
+        );
+        probe.resolve(0, &image(10), &be, &recorder);
+        let one = probe.resident_bytes();
+        assert!(one > 0);
+
+        let mgr = ResidencyManager::new(
+            ResidencyPolicy { max_resident_bytes: 2 * one + one / 2 },
+            ReshardPolicy::default(),
+            None,
+        );
+        for (id, seed) in [(1u64, 11u64), (2, 12), (3, 13)] {
+            mgr.resolve(id, &image(seed), &be, &recorder);
+        }
+        // Images are equal-sized, so a 2.5x budget holds two: the LRU
+        // (id 1) was evicted.
+        assert!(mgr.len() < 3, "byte budget must evict");
+        assert!(mgr.resident_bytes() <= 2 * one + one / 2);
+        assert!(mgr.resident_shards(1).is_none());
+        let s = recorder.lock().unwrap().summary();
+        assert!(s.evictions >= 1);
+        // An oversized single handle still stays resident.
+        let tiny = ResidencyManager::new(
+            ResidencyPolicy { max_resident_bytes: 1 },
+            ReshardPolicy::default(),
+            None,
+        );
+        tiny.resolve(9, &image(14), &be, &recorder);
+        assert_eq!(tiny.len(), 1, "the newest handle is never evicted");
+    }
+
+    #[test]
+    fn refused_prepare_send_falls_back_to_thread_local_and_latches() {
+        use crate::backend::{BackendError, Capability, SpmmBackend};
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        struct LocalOnly(AtomicUsize);
+        impl SpmmBackend for LocalOnly {
+            fn name(&self) -> &'static str {
+                "local-only"
+            }
+            fn capability(&self) -> Capability {
+                Capability {
+                    threads: 1,
+                    simd_lanes: 1,
+                    requires_artifacts: false,
+                    deterministic: true,
+                }
+            }
+            fn prepare(
+                &self,
+                _image: Arc<ScheduledMatrix>,
+            ) -> Result<Box<dyn PreparedSpmm>, BackendError> {
+                Err(BackendError::Unavailable("unit test".into()))
+            }
+            fn prepare_send(
+                &self,
+                _image: Arc<ScheduledMatrix>,
+            ) -> Result<Box<dyn PreparedSpmm + Send>, BackendError> {
+                self.0.fetch_add(1, Ordering::Relaxed);
+                Err(BackendError::Unavailable("thread-local handles".into()))
+            }
+        }
+        let mgr = ResidencyManager::new(
+            ResidencyPolicy::default(),
+            ReshardPolicy::default(),
+            None,
+        );
+        let recorder = Mutex::new(Recorder::default());
+        let be = LocalOnly(AtomicUsize::new(0));
+        let img = image(20);
+        assert!(matches!(
+            mgr.resolve(1, &img, &be, &recorder),
+            Resolution::ThreadLocal
+        ));
+        assert!(mgr.is_empty(), "refused handles must not occupy the cache");
+        assert_eq!(recorder.lock().unwrap().summary().prepares, 0);
+        // The refusal latches: later jobs skip the miss protocol entirely.
+        assert!(matches!(
+            mgr.resolve(1, &img, &be, &recorder),
+            Resolution::ThreadLocal
+        ));
+        assert_eq!(be.0.load(Ordering::Relaxed), 1, "prepare_send attempted exactly once");
+    }
+
+    #[test]
+    fn skew_window_triggers_exactly_one_halving() {
+        let mgr = ResidencyManager::new(
+            ResidencyPolicy::default(),
+            ReshardPolicy { imbalance_threshold: 1.5, window: 2 },
+            Some(ReshardContext { inner_spec: "functional".into(), budget: 4 }),
+        );
+        let recorder = Mutex::new(Recorder::default());
+        let be = ShardedBackend::from_spec(4, "functional").unwrap();
+        let img = skewed_image();
+        mgr.resolve(5, &img, &be, &recorder);
+        assert_eq!(mgr.resident_shards(5), Some(4));
+        // Window of 2 skewed executions: rebuild at S = 2.
+        mgr.note_shards(5, &stats(4, 3.0), &recorder);
+        assert_eq!(mgr.resident_shards(5), Some(4), "window not yet full");
+        mgr.note_shards(5, &stats(4, 3.0), &recorder);
+        assert_eq!(mgr.resident_shards(5), Some(2), "skew must halve the pool");
+        let s = recorder.lock().unwrap().summary();
+        assert_eq!(s.reshards, 1);
+        assert_eq!(s.last_reshard, Some((4, 2)));
+        // A balanced window afterwards must not rebuild again.
+        mgr.note_shards(5, &stats(2, 1.0), &recorder);
+        mgr.note_shards(5, &stats(2, 1.0), &recorder);
+        assert_eq!(mgr.resident_shards(5), Some(2));
+        assert_eq!(recorder.lock().unwrap().summary().reshards, 1);
+    }
+
+    #[test]
+    fn stale_stats_from_a_retired_pool_are_ignored() {
+        let mgr = ResidencyManager::new(
+            ResidencyPolicy::default(),
+            ReshardPolicy { imbalance_threshold: 1.5, window: 1 },
+            Some(ReshardContext { inner_spec: "functional".into(), budget: 4 }),
+        );
+        let recorder = Mutex::new(Recorder::default());
+        let be = ShardedBackend::from_spec(8, "functional").unwrap();
+        mgr.resolve(6, &skewed_image(), &be, &recorder);
+        mgr.note_shards(6, &stats(8, 4.0), &recorder);
+        assert_eq!(mgr.resident_shards(6), Some(4), "window of 1: immediate halving");
+        // A worker still executing the retired 8-shard pool reports late;
+        // its stale stats must not feed the 4-shard window and re-trigger.
+        mgr.note_shards(6, &stats(8, 4.0), &recorder);
+        mgr.note_shards(6, &stats(8, 4.0), &recorder);
+        assert_eq!(mgr.resident_shards(6), Some(4));
+        assert_eq!(recorder.lock().unwrap().summary().reshards, 1);
+        // Fresh 4-shard stats still drive the window.
+        mgr.note_shards(6, &stats(4, 3.0), &recorder);
+        assert_eq!(mgr.resident_shards(6), Some(2));
+        assert_eq!(recorder.lock().unwrap().summary().reshards, 2);
+    }
+
+    #[test]
+    fn resharding_disabled_without_context_or_threshold() {
+        let recorder = Mutex::new(Recorder::default());
+        let be = ShardedBackend::from_spec(4, "functional").unwrap();
+        // No context (closure-started server): never reshards.
+        let no_ctx = ResidencyManager::new(
+            ResidencyPolicy::default(),
+            ReshardPolicy { imbalance_threshold: 1.1, window: 1 },
+            None,
+        );
+        no_ctx.resolve(1, &skewed_image(), &be, &recorder);
+        no_ctx.note_shards(1, &stats(4, 9.0), &recorder);
+        assert_eq!(no_ctx.resident_shards(1), Some(4));
+        // Default (infinite) threshold: never reshards.
+        let off = ResidencyManager::new(
+            ResidencyPolicy::default(),
+            ReshardPolicy::default(),
+            Some(ReshardContext { inner_spec: "functional".into(), budget: 4 }),
+        );
+        off.resolve(2, &skewed_image(), &be, &recorder);
+        for _ in 0..40 {
+            off.note_shards(2, &stats(4, 9.0), &recorder);
+        }
+        assert_eq!(off.resident_shards(2), Some(4));
+        assert_eq!(recorder.lock().unwrap().summary().reshards, 0);
+    }
+
+    #[test]
+    fn reshard_spec_reapplies_the_thread_budget() {
+        // The oversubscription fix: budgets derive from the *raw* inner
+        // spec and the per-worker core budget, not from the stale budgeted
+        // spec of the old S.
+        assert_eq!(reshard_spec("native", 4, 16), "sharded:4:native:4");
+        assert_eq!(reshard_spec("native", 2, 16), "sharded:2:native:8");
+        // Explicit operator thread counts pass through untouched.
+        assert_eq!(reshard_spec("native:1", 4, 16), "sharded:4:native:1");
+        assert_eq!(reshard_spec("functional", 2, 16), "sharded:2:functional");
+    }
+
+    #[test]
+    fn reshard_replaces_bytes_accounting() {
+        let mgr = ResidencyManager::new(
+            ResidencyPolicy::default(),
+            ReshardPolicy { imbalance_threshold: 1.5, window: 1 },
+            Some(ReshardContext { inner_spec: "native:1".into(), budget: 4 }),
+        );
+        let recorder = Mutex::new(Recorder::default());
+        let be = ShardedBackend::from_spec(8, "native:1").unwrap();
+        mgr.resolve(3, &skewed_image(), &be, &recorder);
+        let before = mgr.resident_bytes();
+        assert!(before > 0);
+        mgr.note_shards(3, &stats(8, 4.0), &recorder);
+        assert_eq!(mgr.resident_shards(3), Some(4));
+        let after = mgr.resident_bytes();
+        assert!(after > 0);
+        // Accounting stays consistent with the single resident entry.
+        assert_eq!(mgr.len(), 1);
+    }
+}

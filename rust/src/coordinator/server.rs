@@ -1,50 +1,36 @@
-//! The SpMM serving coordinator: request queue → dynamic batcher → worker
-//! pool, in the style of an inference router (vLLM-like), specialized to
-//! the HFlex contract.
+//! The public serving facade over the four-stage pipeline: [`Server`]
+//! wires **admission → batching → dispatch → residency** together and
+//! exposes the stable request surface (`start`, `start_backend`,
+//! `register`, `submit`, `call`, `shutdown`).
 //!
-//! **Dynamic batching** exploits SpMM's structure: two requests against the
-//! same preprocessed A image with matching (α, β) are *column-concatenated*
-//! into a single SpMM with N = N₁ + N₂ — the accelerator's per-window costs
-//! (B stream, C init, pointers) amortize across the batch exactly as the
-//! paper's N/N0 loop amortizes them across columns. The batcher groups by
-//! image identity within a bounded window, dispatches merged jobs to
-//! workers, and splits C back per request.
-//!
-//! **Prepared-handle caching**: each worker keys a small MRU cache of
-//! [`PreparedSpmm`] handles on the registered [`ImageHandle`] id, so N
-//! requests against one matrix prepare it once *per worker* — the
-//! prepare/execute contract's amortization, measured: prepare counts, wall
-//! time, resident bytes, and the cache hit rate all flow into
-//! [`Summary`].
-//!
-//! Workers are std::thread; the backend factory is called once per worker
-//! and handles are prepared inside the worker thread (the real PJRT
-//! engine's handles are thread-local, which is exactly what the per-worker
-//! cache respects). [`Server::start_backend`] builds the factory from a
-//! registry spec string (`"native"`, `"native:4"`, `"functional"`,
-//! `"pjrt"`, `"sharded:4:native"`), so deployments pick engines by name;
-//! every request records which backend executed it.
+//! Policy for every stage lives in [`PipelineConfig`]; the two classic
+//! constructors keep their signatures and default the rest. Servers
+//! started from a registry spec ([`Server::start_backend`] /
+//! [`Server::start_backend_with`]) additionally get re-shard-on-skew
+//! wiring: the raw `sharded:<S>:<inner>` parts and the per-worker core
+//! budget are handed to the residency stage so a skew-triggered rebuild
+//! re-derives its thread budget for the new S.
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::admission::{AdmissionGate, AdmissionPolicy};
+use super::batcher::{batcher_loop, Msg};
+use super::dispatch;
 use super::metrics::{Recorder, RequestTiming, Summary};
-use crate::arch::simulator::problem_flops;
-use crate::backend::{self, BackendError, PreparedSpmm, SpmmBackend};
+use super::residency::{ReshardContext, ReshardPolicy, ResidencyManager, ResidencyPolicy};
+use crate::backend::{self, BackendError, SpmmBackend};
 use crate::sched::ScheduledMatrix;
 
-/// Prepared handles kept per worker, most recently used first. Sized for a
-/// worker serving a handful of registered matrices; beyond this the oldest
-/// residency is dropped and rebuilt on next use.
-pub const PREPARED_CACHE_ENTRIES: usize = 8;
+pub use super::batcher::BatchPolicy;
+pub use super::residency::PREPARED_CACHE_ENTRIES;
 
 /// A preprocessed matrix registered with the server (shared across
 /// requests — the "model weights" of the serving analogy). The `id` is
-/// what workers key their prepared-handle caches on.
+/// what the residency stage keys prepared handles on.
 #[derive(Clone)]
 pub struct ImageHandle {
     /// Unique id assigned at registration.
@@ -71,55 +57,36 @@ pub struct SpmmRequest {
 
 /// Completed response.
 pub struct SpmmResponse {
-    /// C_out, row-major M × n (zero-filled when `error` is set).
+    /// C_out, row-major M × n. Zero-filled when the pipeline failed
+    /// mid-execution; **empty** when the request was shed at admission
+    /// (rejection must not pay an M × n allocation) — check `error`
+    /// before reading.
     pub c: Vec<f32>,
-    /// Timing.
+    /// Per-stage timing.
     pub timing: RequestTiming,
-    /// Why the backend failed, if it did; `c` is then not a result.
+    /// Why the pipeline failed, if it did; `c` is then not a result.
     pub error: Option<String>,
 }
 
-/// A batch-merged job handed to workers.
-pub struct MergedJob {
-    image: ImageHandle,
-    alpha: f32,
-    beta: f32,
-    b_cat: Vec<f32>,
-    c_cat: Vec<f32>,
-    n_total: usize,
-    segments: Vec<Segment>,
+/// Every pipeline stage's policy in one place. `Default` matches the
+/// classic constructors: generous admission, 2 ms merge window, 512 MiB
+/// residency, re-shard-on-skew off.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PipelineConfig {
+    /// Stage 1 — admission backpressure.
+    pub admission: AdmissionPolicy,
+    /// Stage 2 — merge window, batch size, shard-aware routing threshold.
+    pub batch: BatchPolicy,
+    /// Stage 4 — prepared-handle byte budget.
+    pub residency: ResidencyPolicy,
+    /// Stage 4 — re-shard-on-skew trigger (needs a registry-spec server).
+    pub reshard: ReshardPolicy,
 }
 
-struct Segment {
-    n: usize,
-    col_off: usize,
-    submitted: Instant,
-    respond: Sender<SpmmResponse>,
-}
-
-/// Batching policy knobs.
-#[derive(Clone, Copy, Debug)]
-pub struct BatchPolicy {
-    /// Max total columns per merged job (paper sweeps N up to 512).
-    pub max_columns: usize,
-    /// How long the batcher waits to fill a batch.
-    pub window: Duration,
-}
-
-impl Default for BatchPolicy {
-    fn default() -> Self {
-        BatchPolicy { max_columns: 512, window: Duration::from_millis(2) }
-    }
-}
-
-enum Msg {
-    Request(SpmmRequest, Sender<SpmmResponse>, Instant),
-    Shutdown,
-}
-
-/// The serving coordinator.
+/// The serving coordinator facade.
 pub struct Server {
     tx: Sender<Msg>,
+    gate: Arc<AdmissionGate>,
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     recorder: Arc<Mutex<Recorder>>,
@@ -128,41 +95,24 @@ pub struct Server {
 
 impl Server {
     /// Start with `n_workers` threads, a backend factory (called once per
-    /// worker thread), and a batching policy.
+    /// worker thread), and a batching policy; every other stage runs its
+    /// default policy.
     pub fn start<F>(n_workers: usize, policy: BatchPolicy, factory: F) -> Server
     where
         F: Fn(usize) -> Box<dyn SpmmBackend> + Send + Sync + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let (job_tx, job_rx) = mpsc::channel::<MergedJob>();
-        let job_rx = Arc::new(Mutex::new(job_rx));
-        let recorder = Arc::new(Mutex::new(Recorder::default()));
+        let config = PipelineConfig { batch: policy, ..PipelineConfig::default() };
+        Server::start_with(n_workers, config, factory)
+    }
 
-        let batcher = {
-            let recorder = Arc::clone(&recorder);
-            std::thread::spawn(move || batcher_loop(rx, job_tx, policy, recorder))
-        };
-
-        let factory = Arc::new(factory);
-        let workers = (0..n_workers.max(1))
-            .map(|w| {
-                let job_rx = Arc::clone(&job_rx);
-                let recorder = Arc::clone(&recorder);
-                let factory = Arc::clone(&factory);
-                std::thread::spawn(move || {
-                    let exec = factory(w);
-                    worker_loop(&*exec, job_rx, recorder);
-                })
-            })
-            .collect();
-
-        Server {
-            tx,
-            batcher: Some(batcher),
-            workers,
-            recorder,
-            next_image_id: AtomicU64::new(1),
-        }
+    /// Start with every stage policy explicit. Re-shard-on-skew stays off
+    /// for closure factories — there is no registry spec to rebuild from;
+    /// use [`Server::start_backend_with`] for that.
+    pub fn start_with<F>(n_workers: usize, config: PipelineConfig, factory: F) -> Server
+    where
+        F: Fn(usize) -> Box<dyn SpmmBackend> + Send + Sync + 'static,
+    {
+        Server::start_pipeline(n_workers, config, factory, None)
     }
 
     /// Start with backends built by name from the [`crate::backend`]
@@ -170,25 +120,87 @@ impl Server {
     /// `"functional"`, `"pjrt"`, `"sharded:<S>:<inner>"`). The spec is
     /// parsed and its availability in this build is checked eagerly (an
     /// unavailable backend — e.g. `pjrt` without the real engine — is
-    /// refused here rather than failing every request); each worker thread
-    /// then constructs its own factory and prepares handles inside the
-    /// thread. Auto-threaded specs are rewritten through
-    /// [`backend::apply_thread_budget`] with this machine's cores divided
-    /// across the worker threads, so workers × shards × engine threads
-    /// never oversubscribes the CPU.
+    /// refused here rather than failing every request). Auto-threaded
+    /// specs are rewritten through [`backend::apply_thread_budget`] with
+    /// this machine's cores divided across the worker threads, so
+    /// workers × shards × engine threads never oversubscribes the CPU.
     pub fn start_backend(
         n_workers: usize,
         policy: BatchPolicy,
         spec: &str,
     ) -> Result<Server, BackendError> {
+        let config = PipelineConfig { batch: policy, ..PipelineConfig::default() };
+        Server::start_backend_with(n_workers, config, spec)
+    }
+
+    /// [`Server::start_backend`] with every stage policy explicit. When
+    /// the spec is a `sharded:<S>:<inner>` composite, the residency stage
+    /// is additionally wired for re-shard-on-skew: it keeps the raw inner
+    /// spec and the per-worker core budget, so a skew-triggered rebuild at
+    /// a new S re-applies [`backend::apply_thread_budget`] instead of
+    /// inheriting the old S's stale thread shares.
+    pub fn start_backend_with(
+        n_workers: usize,
+        config: PipelineConfig,
+        spec: &str,
+    ) -> Result<Server, BackendError> {
         backend::create(spec)?; // parse + argument validation
         backend::check_available(spec)?; // sees through sharded:<S>:<inner>
-        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        let spec =
-            backend::apply_thread_budget(spec, cores.div_ceil(n_workers.max(1)).max(1));
-        Ok(Server::start(n_workers, policy, move |_| {
-            backend::create(&spec).expect("backend spec validated at startup")
-        }))
+        let budget = dispatch::per_worker_budget(n_workers);
+        let budgeted = backend::apply_thread_budget(spec, budget);
+        let ctx = backend::sharded_parts(spec)
+            .map(|(_, inner)| ReshardContext { inner_spec: inner, budget });
+        Ok(Server::start_pipeline(
+            n_workers,
+            config,
+            move |_| backend::create(&budgeted).expect("backend spec validated at startup"),
+            ctx,
+        ))
+    }
+
+    /// Assemble the four stages.
+    fn start_pipeline<F>(
+        n_workers: usize,
+        config: PipelineConfig,
+        factory: F,
+        reshard_ctx: Option<ReshardContext>,
+    ) -> Server
+    where
+        F: Fn(usize) -> Box<dyn SpmmBackend> + Send + Sync + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (job_tx, job_rx) = mpsc::channel();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let recorder = Arc::new(Mutex::new(Recorder::default()));
+        let gate = Arc::new(AdmissionGate::new(config.admission));
+        let residency = Arc::new(ResidencyManager::new(
+            config.residency,
+            config.reshard,
+            reshard_ctx,
+        ));
+
+        let batcher = {
+            let recorder = Arc::clone(&recorder);
+            let policy = config.batch;
+            std::thread::spawn(move || batcher_loop(rx, job_tx, policy, recorder))
+        };
+        let workers = dispatch::spawn_workers(
+            n_workers,
+            Arc::new(factory),
+            job_rx,
+            Arc::clone(&recorder),
+            residency,
+            Arc::clone(&gate),
+        );
+
+        Server {
+            tx,
+            gate,
+            batcher: Some(batcher),
+            workers,
+            recorder,
+            next_image_id: AtomicU64::new(1),
+        }
     }
 
     /// Register a preprocessed matrix for serving.
@@ -196,13 +208,60 @@ impl Server {
         ImageHandle { id: self.next_image_id.fetch_add(1, Ordering::Relaxed), image }
     }
 
-    /// Submit a request; returns the response channel.
+    /// Submit a request; returns the response channel. A request whose
+    /// B/C buffers do not match the image and `n` is refused here with an
+    /// error response (it would otherwise poison the batcher's column
+    /// concatenation), and a request beyond the admission bound is
+    /// rejected immediately: the response arrives at once with
+    /// [`SpmmResponse::error`] set (the latter counted in
+    /// [`Summary::rejected`]).
     pub fn submit(&self, req: SpmmRequest) -> Receiver<SpmmResponse> {
         let (tx, rx) = mpsc::channel();
+        let sm = &req.image.image;
+        if req.b.len() != sm.k * req.n || req.c.len() != sm.m * req.n {
+            let _ = tx.send(SpmmResponse {
+                c: Vec::new(),
+                timing: Self::rejected_timing(),
+                error: Some(format!(
+                    "shape mismatch: B has {} elements (expected K*N = {}), C has {} \
+                     (expected M*N = {})",
+                    req.b.len(),
+                    sm.k * req.n,
+                    req.c.len(),
+                    sm.m * req.n
+                )),
+            });
+            return rx;
+        }
+        if !self.gate.try_admit() {
+            self.recorder.lock().unwrap().record_reject();
+            let _ = tx.send(SpmmResponse {
+                c: Vec::new(),
+                timing: Self::rejected_timing(),
+                error: Some(format!(
+                    "admission rejected: {} requests in flight (max {})",
+                    self.gate.in_flight(),
+                    self.gate.policy().max_in_flight
+                )),
+            });
+            return rx;
+        }
         self.tx
             .send(Msg::Request(req, tx, Instant::now()))
             .expect("server stopped");
         rx
+    }
+
+    /// Zeroed timing for requests refused before entering the pipeline.
+    fn rejected_timing() -> RequestTiming {
+        RequestTiming {
+            queue: Duration::ZERO,
+            batch: Duration::ZERO,
+            prepare: Duration::ZERO,
+            exec: Duration::ZERO,
+            flops: 0,
+            backend: "rejected",
+        }
     }
 
     /// Convenience: submit and wait.
@@ -224,184 +283,12 @@ impl Server {
     }
 }
 
-fn batcher_loop(
-    rx: Receiver<Msg>,
-    job_tx: Sender<MergedJob>,
-    policy: BatchPolicy,
-    recorder: Arc<Mutex<Recorder>>,
-) {
-    // Pending requests grouped by (image id, alpha bits, beta bits).
-    type Key = (u64, u32, u32);
-    let mut pending: HashMap<Key, Vec<(SpmmRequest, Sender<SpmmResponse>, Instant)>> =
-        HashMap::new();
-    let mut deadline: Option<Instant> = None;
-
-    let flush = |group: Vec<(SpmmRequest, Sender<SpmmResponse>, Instant)>,
-                 job_tx: &Sender<MergedJob>,
-                 recorder: &Arc<Mutex<Recorder>>| {
-        if group.is_empty() {
-            return;
-        }
-        recorder.lock().unwrap().record_batch(group.len());
-        let image = group[0].0.image.clone();
-        let (alpha, beta) = (group[0].0.alpha, group[0].0.beta);
-        let m = image.image.m;
-        let k = image.image.k;
-        let n_total: usize = group.iter().map(|(r, _, _)| r.n).sum();
-        // Column-concatenate B and C (row-major interleave).
-        let mut b_cat = vec![0f32; k * n_total];
-        let mut c_cat = vec![0f32; m * n_total];
-        let mut col = 0usize;
-        let mut segments = Vec::with_capacity(group.len());
-        for (req, respond, submitted) in group {
-            for row in 0..k {
-                b_cat[row * n_total + col..row * n_total + col + req.n]
-                    .copy_from_slice(&req.b[row * req.n..(row + 1) * req.n]);
-            }
-            for row in 0..m {
-                c_cat[row * n_total + col..row * n_total + col + req.n]
-                    .copy_from_slice(&req.c[row * req.n..(row + 1) * req.n]);
-            }
-            segments.push(Segment { n: req.n, col_off: col, submitted, respond });
-            col += req.n;
-        }
-        let _ = job_tx.send(MergedJob {
-            image,
-            alpha,
-            beta,
-            b_cat,
-            c_cat,
-            n_total,
-            segments,
-        });
-    };
-
-    loop {
-        let timeout = deadline
-            .map(|d| d.saturating_duration_since(Instant::now()))
-            .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
-            Ok(Msg::Request(req, respond, submitted)) => {
-                let key = (req.image.id, req.alpha.to_bits(), req.beta.to_bits());
-                let group = pending.entry(key).or_default();
-                group.push((req, respond, submitted));
-                let cols: usize = group.iter().map(|(r, _, _)| r.n).sum();
-                if cols >= policy.max_columns {
-                    let group = pending.remove(&key).unwrap();
-                    flush(group, &job_tx, &recorder);
-                }
-                if deadline.is_none() && !pending.is_empty() {
-                    deadline = Some(Instant::now() + policy.window);
-                }
-            }
-            Ok(Msg::Shutdown) => {
-                for (_, group) in pending.drain() {
-                    flush(group, &job_tx, &recorder);
-                }
-                break; // dropping job_tx stops workers
-            }
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                for (_, group) in pending.drain() {
-                    flush(group, &job_tx, &recorder);
-                }
-                deadline = None;
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                for (_, group) in pending.drain() {
-                    flush(group, &job_tx, &recorder);
-                }
-                break;
-            }
-        }
-    }
-}
-
-fn worker_loop(
-    backend: &dyn SpmmBackend,
-    job_rx: Arc<Mutex<Receiver<MergedJob>>>,
-    recorder: Arc<Mutex<Recorder>>,
-) {
-    let backend_name = backend.name();
-    // Per-worker prepared-handle cache, MRU-first, keyed on ImageHandle id.
-    // Handles never leave this thread (PJRT-compatible by construction).
-    let mut prepared: Vec<(u64, Box<dyn PreparedSpmm>)> = Vec::new();
-    loop {
-        let job = {
-            let rx = job_rx.lock().unwrap();
-            rx.recv()
-        };
-        let Ok(mut job) = job else { break };
-        let start = Instant::now();
-        // Resolve the resident handle: cache hit bubbles to the front,
-        // miss pays the backend's build path exactly once per worker.
-        let resolved: Result<(), String> =
-            match prepared.iter().position(|(id, _)| *id == job.image.id) {
-                Some(0) => {
-                    recorder.lock().unwrap().record_prepare_hit();
-                    Ok(())
-                }
-                Some(i) => {
-                    let entry = prepared.remove(i);
-                    prepared.insert(0, entry);
-                    recorder.lock().unwrap().record_prepare_hit();
-                    Ok(())
-                }
-                None => match backend.prepare(Arc::clone(&job.image.image)) {
-                    Ok(handle) => {
-                        recorder.lock().unwrap().record_prepare(&handle.prepare_cost());
-                        prepared.insert(0, (job.image.id, handle));
-                        prepared.truncate(PREPARED_CACHE_ENTRIES);
-                        Ok(())
-                    }
-                    Err(e) => Err(e.to_string()),
-                },
-            };
-        let error = match resolved {
-            Ok(()) => {
-                let handle = &mut prepared[0].1;
-                handle
-                    .execute(&job.b_cat, &mut job.c_cat, job.n_total, job.alpha, job.beta)
-                    .err()
-                    .map(|e| e.to_string())
-            }
-            Err(e) => Some(e),
-        };
-        let exec_time = start.elapsed();
-        // Sharded backends expose per-shard stats for the job just run;
-        // fold them into the serving summary (imbalance, makespan).
-        if error.is_none() {
-            if let Some(stats) = prepared[0].1.shard_stats() {
-                recorder.lock().unwrap().record_shards(&stats);
-            }
-        }
-        let m = job.image.image.m;
-        let nnz = job.image.image.nnz;
-        for seg in job.segments {
-            let mut c = vec![0f32; m * seg.n];
-            if error.is_none() {
-                for row in 0..m {
-                    c[row * seg.n..(row + 1) * seg.n].copy_from_slice(
-                        &job.c_cat
-                            [row * job.n_total + seg.col_off..row * job.n_total + seg.col_off + seg.n],
-                    );
-                }
-            }
-            let timing = RequestTiming {
-                queue: start.duration_since(seg.submitted),
-                exec: exec_time,
-                flops: problem_flops(nnz, m, seg.n),
-                backend: backend_name,
-            };
-            recorder.lock().unwrap().record(timing);
-            let _ = seg.respond.send(SpmmResponse { c, timing, error: error.clone() });
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::{Capability, FunctionalBackend, PrepareCost};
+    use crate::backend::{
+        Capability, FunctionalBackend, PrepareCost, PreparedSpmm,
+    };
     use crate::prop;
     use crate::sched::preprocess;
     use crate::shard::{PreparedSharded, ShardExecutor, ShardedMatrix};
@@ -494,9 +381,9 @@ mod tests {
     }
 
     #[test]
-    fn repeated_matrix_prepares_once_per_worker() {
+    fn repeated_matrix_prepares_once() {
         // The amortization headline: sequential requests against one image
-        // on one worker — exactly one prepare, everything else cache hits.
+        // — exactly one prepare, everything else shared-cache hits.
         let (coo, sm) = make_image(41);
         let server = Server::start_backend(1, BatchPolicy::default(), "native:1").unwrap();
         let handle = server.register(sm);
@@ -520,7 +407,7 @@ mod tests {
         }
         let summary = server.shutdown();
         assert_eq!(summary.requests, 5);
-        assert_eq!(summary.prepares, 1, "one matrix, one worker: one prepare");
+        assert_eq!(summary.prepares, 1, "one matrix: one prepare");
         assert_eq!(summary.prepare_hits, 4);
         assert!(summary.prepare_hit_rate > 0.7, "{}", summary.prepare_hit_rate);
         assert!(summary.prepared_bytes > 0);
@@ -548,6 +435,99 @@ mod tests {
         let summary = server.shutdown();
         assert_eq!(summary.prepares, 2, "two matrices: two prepares");
         assert_eq!(summary.prepare_hits, 2, "revisits hit the cache");
+    }
+
+    #[test]
+    fn workers_share_one_residency_per_image() {
+        // The PR 3 follow-up made real: N workers serving one matrix hold
+        // one shared prepared handle, not N duplicates.
+        let (coo, sm) = make_image(45);
+        let server = Server::start_backend(3, BatchPolicy::default(), "native:1").unwrap();
+        let handle = server.register(sm);
+        let n = 2;
+        let rxs: Vec<_> = (0..12)
+            .map(|_| {
+                server.submit(SpmmRequest {
+                    image: handle.clone(),
+                    b: vec![1.0; coo.k * n],
+                    c: vec![0.0; coo.m * n],
+                    n,
+                    alpha: 1.0,
+                    beta: 0.0,
+                })
+            })
+            .collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().error.is_none());
+        }
+        let summary = server.shutdown();
+        assert_eq!(
+            summary.prepares, 1,
+            "three workers, one image: one shared residency"
+        );
+    }
+
+    #[test]
+    fn admission_gate_sheds_load_with_error_responses() {
+        let (_, sm) = make_image(46);
+        let config = PipelineConfig {
+            admission: AdmissionPolicy { max_in_flight: 0 },
+            ..PipelineConfig::default()
+        };
+        let server =
+            Server::start_with(1, config, |_| Box::new(FunctionalBackend));
+        let handle = server.register(sm.clone());
+        let resp = server.call(SpmmRequest {
+            image: handle,
+            b: vec![0.0; sm.k * 2],
+            c: vec![0.0; sm.m * 2],
+            n: 2,
+            alpha: 1.0,
+            beta: 0.0,
+        });
+        let err = resp.error.expect("shed requests must carry an error");
+        assert!(err.contains("admission rejected"), "{err}");
+        assert_eq!(resp.timing.backend, "rejected");
+        let summary = server.shutdown();
+        assert_eq!(summary.rejected, 1);
+        assert_eq!(summary.requests, 0, "rejected requests are never served");
+    }
+
+    #[test]
+    fn malformed_shapes_are_refused_without_poisoning_the_server() {
+        let (coo, sm) = make_image(47);
+        let server = start_functional(1);
+        let handle = server.register(sm);
+        // B one element short: refused at submit, never reaches the
+        // batcher's column concatenation.
+        let resp = server.call(SpmmRequest {
+            image: handle.clone(),
+            b: vec![0.0; coo.k * 2 - 1],
+            c: vec![0.0; coo.m * 2],
+            n: 2,
+            alpha: 1.0,
+            beta: 0.0,
+        });
+        let err = resp.error.expect("bad shapes must be refused");
+        assert!(err.contains("shape mismatch"), "{err}");
+        // The pipeline is still healthy for well-formed requests.
+        let n = 2;
+        let b = vec![1.0; coo.k * n];
+        let c = vec![0.0; coo.m * n];
+        let mut want = c.clone();
+        coo.spmm_reference(&b, &mut want, n, 1.0, 0.0);
+        let resp = server.call(SpmmRequest {
+            image: handle,
+            b,
+            c,
+            n,
+            alpha: 1.0,
+            beta: 0.0,
+        });
+        assert!(resp.error.is_none());
+        prop::assert_allclose(&resp.c, &want, 1e-4, 1e-4).unwrap();
+        let summary = server.shutdown();
+        assert_eq!(summary.requests, 1, "only the valid request is served");
     }
 
     #[test]
@@ -615,7 +595,11 @@ mod tests {
         let (coo, sm) = make_image(3);
         let server = Server::start(
             1,
-            BatchPolicy { max_columns: 64, window: Duration::from_millis(20) },
+            BatchPolicy {
+                max_columns: 64,
+                window: Duration::from_millis(20),
+                route_columns: 8,
+            },
             |_| Box::new(FunctionalBackend),
         );
         let handle = server.register(sm);
@@ -654,7 +638,11 @@ mod tests {
         let (_, sm) = make_image(5);
         let server = Server::start(
             1,
-            BatchPolicy { max_columns: 512, window: Duration::from_millis(10) },
+            BatchPolicy {
+                max_columns: 512,
+                window: Duration::from_millis(10),
+                route_columns: 8,
+            },
             |_| Box::new(FunctionalBackend),
         );
         let handle = server.register(sm.clone());
@@ -783,7 +771,7 @@ mod tests {
         let s = server.shutdown();
         assert_eq!(s.requests, 20);
         assert!(s.p50_s >= 0.0);
-        // At most one prepare per worker for the single registered image.
-        assert!(s.prepares <= 3, "prepares = {}", s.prepares);
+        // The single registered image is shared: at most one prepare.
+        assert!(s.prepares <= 1, "prepares = {}", s.prepares);
     }
 }

@@ -27,7 +27,10 @@ use anyhow::{bail, Result};
 use sextans::arch::{resources, simulate, AcceleratorConfig};
 use sextans::backend::{self, SpmmBackend};
 use sextans::cli::Cli;
-use sextans::coordinator::{BatchPolicy, Server, SpmmRequest};
+use sextans::coordinator::{
+    AdmissionPolicy, BatchPolicy, PipelineConfig, ReshardPolicy, ResidencyPolicy, Server,
+    SpmmRequest,
+};
 use sextans::hflex::{HFlexAccelerator, SpmmProblem};
 use sextans::perfmodel::Platform;
 use sextans::report::{self, experiments};
@@ -289,7 +292,11 @@ fn cmd_gen(cli: &Cli) -> Result<()> {
 }
 
 /// `serve`: demo serving loop on a registry-selected backend; `--shards S`
-/// wraps the backend as a `sharded:<S>:<inner>` composite.
+/// wraps the backend as a `sharded:<S>:<inner>` composite. Pipeline policy
+/// flags: `--queue-depth` (admission bound), `--max-columns`/`--window-ms`
+/// (batching), `--route-columns` (shard-aware routing threshold),
+/// `--resident-mb` (residency byte budget), `--reshard-threshold` /
+/// `--reshard-window` (re-shard-on-skew trigger).
 fn cmd_serve(cli: &Cli) -> Result<()> {
     let requests = cli.get_usize("requests", 64);
     let workers = cli.get_usize("workers", 2);
@@ -312,7 +319,32 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         coo.nnz()
     );
 
-    let server = Server::start_backend(workers, BatchPolicy::default(), backend_spec)?;
+    let defaults = PipelineConfig::default();
+    let config = PipelineConfig {
+        admission: AdmissionPolicy {
+            max_in_flight: cli.get_usize("queue-depth", defaults.admission.max_in_flight),
+        },
+        batch: BatchPolicy {
+            max_columns: cli.get_usize("max-columns", defaults.batch.max_columns),
+            window: std::time::Duration::from_millis(
+                cli.get_u64("window-ms", defaults.batch.window.as_millis() as u64),
+            ),
+            route_columns: cli.get_usize("route-columns", defaults.batch.route_columns),
+        },
+        residency: ResidencyPolicy {
+            max_resident_bytes: cli.get_u64(
+                "resident-mb",
+                defaults.residency.max_resident_bytes / (1024 * 1024),
+            ) * 1024
+                * 1024,
+        },
+        reshard: ReshardPolicy {
+            imbalance_threshold: cli.get_f32("reshard-threshold", f32::INFINITY) as f64,
+            window: cli.get_usize("reshard-window", defaults.reshard.window),
+        },
+    };
+
+    let server = Server::start_backend_with(workers, config, backend_spec)?;
     let handle = server.register(image);
     let mut rxs = Vec::new();
     for i in 0..requests {
@@ -340,18 +372,40 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         s.p95_s * 1e3,
         s.p99_s * 1e3
     );
+    println!(
+        "  stages (mean/request): queue {:.3} ms | batch {:.3} ms | prepare {:.3} ms | \
+         execute {:.3} ms",
+        s.stage_queue_s * 1e3,
+        s.stage_batch_s * 1e3,
+        s.stage_prepare_s * 1e3,
+        s.stage_exec_s * 1e3
+    );
+    if s.rejected > 0 {
+        println!("  admission: {} requests shed at the gate", s.rejected);
+    }
     for (name, count) in &s.backends {
         println!("  backend {name}: {count} requests");
     }
     println!(
         "  prepares: {} ({} cache hits, hit rate {:.0}%), mean prepare {:.2} ms, \
-         {:.2} MiB made resident",
+         {:.2} MiB made resident, {} evicted",
         s.prepares,
         s.prepare_hits,
         s.prepare_hit_rate * 100.0,
         s.mean_prepare_s * 1e3,
-        s.prepared_bytes as f64 / (1024.0 * 1024.0)
+        s.prepared_bytes as f64 / (1024.0 * 1024.0),
+        s.evictions
     );
+    if s.routed_jobs > 0 {
+        println!(
+            "  routing: {} small-N jobs routed, {} shards skipped",
+            s.routed_jobs, s.shards_skipped
+        );
+    }
+    if s.reshards > 0 {
+        let (from, to) = s.last_reshard.unwrap_or((0, 0));
+        println!("  re-shard-on-skew: {} rebuilds (last {from} -> {to} shards)", s.reshards);
+    }
     if s.shard_execs > 0 {
         println!(
             "  shards: {} sharded executions, mean {:.1} shards, nnz imbalance mean {:.3} / \
@@ -366,35 +420,59 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
-/// `backends`: every registry name with its capability and availability in
-/// this build.
+/// `backends`: every registry name with its capability, availability in
+/// this build, and the effective thread budget its auto-sized spec
+/// resolves to on this machine ([`backend::apply_thread_budget`] with all
+/// cores). For the sharded composite the resolved inner engine is printed
+/// too, since that is what actually executes.
 fn cmd_backends() -> Result<()> {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!(
-        "{:<15} {:<12} {:>7} {:>6}  {:<13} {:<10} description",
-        "name", "status", "threads", "lanes", "deterministic", "artifacts"
+        "{:<15} {:<12} {:>7} {:>6}  {:<13} {:<10} {:<22} description",
+        "name",
+        "status",
+        "threads",
+        "lanes",
+        "deterministic",
+        "artifacts",
+        format!("budgeted@{cores}c")
     );
     for info in backend::registry() {
         let status = if info.available { "available" } else { "unavailable" };
-        match backend::create(info.name) {
+        let budgeted = backend::apply_thread_budget(info.name, cores);
+        match backend::create(&budgeted) {
             Ok(be) => {
                 let cap = be.capability();
                 println!(
-                    "{:<15} {:<12} {:>7} {:>6}  {:<13} {:<10} {}",
+                    "{:<15} {:<12} {:>7} {:>6}  {:<13} {:<10} {:<22} {}",
                     info.name,
                     status,
                     cap.threads,
                     cap.simd_lanes,
                     if cap.deterministic { "yes" } else { "no" },
                     if cap.requires_artifacts { "required" } else { "no" },
+                    budgeted,
                     info.description
                 );
+                if let Some((s, inner)) = backend::sharded_parts(&budgeted) {
+                    let engine = backend::create(&inner)
+                        .map(|b| b.name())
+                        .unwrap_or("?");
+                    println!(
+                        "{:<15} {:<12} {:>7} {:>6}  {:<13} {:<10} {:<22} resolved inner: \
+                         {s} x {inner:?} (engine {engine})",
+                        "", "", "", "", "", "", ""
+                    );
+                }
             }
             Err(e) => println!("{:<15} {:<12} {e}", info.name, status),
         }
     }
     println!(
         "\nspecs: native:<threads>, native-blocked:<threads>, sharded:<S>:<inner>; \
-         select with --backend on `run`/`serve`"
+         select with --backend on `run`/`serve`. Auto-sized specs are shown after \
+         thread budgeting for this machine's {cores} cores; `serve` further divides \
+         the budget across its workers."
     );
     Ok(())
 }

@@ -72,6 +72,17 @@ impl ShardedBackend {
         self.shards
     }
 
+    /// The same composite at a different shard count — the programmatic
+    /// rebuild-at-S hook for direct API consumers: drop the old handle,
+    /// prepare through this factory at the new S (thread budgets are
+    /// re-derived inside prepare for the new shard count). The serving
+    /// coordinator's re-shard-on-skew takes the equivalent registry-spec
+    /// route instead ([`crate::coordinator::residency::reshard_spec`]) so
+    /// it can re-apply the per-worker core budget.
+    pub fn with_shards(&self, shards: usize) -> Result<ShardedBackend, BackendError> {
+        ShardedBackend::from_spec(shards, &self.inner_spec)
+    }
+
     fn build(&self, image: Arc<ScheduledMatrix>) -> Result<PreparedSharded, BackendError> {
         let t0 = Instant::now();
         // The build path, paid exactly once per prepared matrix: invert
@@ -133,6 +144,14 @@ impl PreparedSharded {
         self.executor.num_shards()
     }
 
+    /// Global row sets of the resident shards (ascending per shard).
+    /// Today's routed execution skips shards by their nnz counts
+    /// ([`ShardExecutor::execute_active`]); these row sets are the basis
+    /// for the finer per-request row-mask routing the ROADMAP defers.
+    pub fn shard_row_sets(&self) -> &[Vec<u32>] {
+        self.executor.shard_rows()
+    }
+
     /// The source image this pool is resident for.
     pub fn image(&self) -> &Arc<ScheduledMatrix> {
         &self.image
@@ -167,6 +186,30 @@ impl PreparedSpmm for PreparedSharded {
 
     fn shard_stats(&self) -> Option<ShardRunStats> {
         self.last_stats.clone()
+    }
+
+    fn resident_shards(&self) -> Option<usize> {
+        Some(self.executor.num_shards())
+    }
+
+    fn execute_routed(
+        &mut self,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<usize, BackendError> {
+        self.last_stats = None;
+        let (stats, skipped) =
+            self.executor.execute_active(b, c, n, alpha, beta).map_err(|e| match e {
+                ShardError::Shape(s) => BackendError::Shape(s),
+                err @ ShardError::ShardFailed { .. } => {
+                    BackendError::Execution(err.to_string())
+                }
+            })?;
+        self.last_stats = Some(stats);
+        Ok(skipped)
     }
 }
 
@@ -255,6 +298,35 @@ mod tests {
             ShardedBackend::from_spec(2, "warpdrive"),
             Err(BackendError::Unknown(_))
         ));
+    }
+
+    #[test]
+    fn handle_exposes_row_sets_and_shard_count() {
+        let (coo, sm) = image(7);
+        let be = ShardedBackend::from_spec(3, "functional").unwrap();
+        assert_eq!(be.with_shards(5).unwrap().num_shards(), 5, "rebuild-at-S hook");
+        let handle = be.build(Arc::clone(&sm)).unwrap();
+        assert_eq!(PreparedSpmm::resident_shards(&handle), Some(3));
+        let rows: usize = handle.shard_row_sets().iter().map(|r| r.len()).sum();
+        assert_eq!(rows, coo.m, "row sets partition the matrix");
+    }
+
+    #[test]
+    fn routed_execute_matches_plain_on_dense_pools() {
+        let (coo, sm) = image(8);
+        let be = ShardedBackend::from_spec(4, "native:1").unwrap();
+        let mut handle = be.prepare(Arc::clone(&sm)).unwrap();
+        let n = 2;
+        let mut rng = Rng::new(9);
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let mut plain = c0.clone();
+        handle.execute(&b, &mut plain, n, 1.5, -0.5).unwrap();
+        let mut routed = c0.clone();
+        let skipped = handle.execute_routed(&b, &mut routed, n, 1.5, -0.5).unwrap();
+        assert_eq!(skipped, 0, "every shard owns non-zeros on a power-law image");
+        assert_eq!(plain, routed);
+        assert_eq!(handle.shard_stats().unwrap().shards, 4);
     }
 
     #[test]

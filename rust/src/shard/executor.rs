@@ -138,6 +138,18 @@ impl ShardExecutor {
         self.imbalance
     }
 
+    /// Global rows owned by each resident shard — the row sets shard-aware
+    /// batching routes on (ascending; local row `i` of shard `s` is
+    /// `shard_rows()[s][i]`).
+    pub fn shard_rows(&self) -> &[Vec<u32>] {
+        &self.global_rows
+    }
+
+    /// Real non-zeros per resident shard.
+    pub fn shard_nnz(&self) -> &[usize] {
+        &self.shard_nnz
+    }
+
     /// Execute `C = alpha * A @ B + beta * C` across all resident shards in
     /// parallel. On success C holds every row; on failure C is untouched
     /// and the error names the failing shard.
@@ -149,6 +161,37 @@ impl ShardExecutor {
         alpha: f32,
         beta: f32,
     ) -> Result<ShardRunStats, ShardError> {
+        self.execute_masked(b, c, n, alpha, beta, false).map(|(stats, _)| stats)
+    }
+
+    /// Like [`ShardExecutor::execute`], but skip shards that own no
+    /// non-zeros: no thread is spawned for them, and their rows receive
+    /// the pure `beta * C` update host-side — bit-identical, because an
+    /// empty shard's engine result is exactly `beta * C`. Returns the run
+    /// stats (skipped shards report zero latency) plus the number of
+    /// shards skipped. This is the execution half of shard-aware routing:
+    /// worth it for small-N requests, where per-shard fan-out overhead is
+    /// comparable to the useful work.
+    pub fn execute_active(
+        &mut self,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<(ShardRunStats, usize), ShardError> {
+        self.execute_masked(b, c, n, alpha, beta, true)
+    }
+
+    fn execute_masked(
+        &mut self,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+        skip_empty: bool,
+    ) -> Result<(ShardRunStats, usize), ShardError> {
         if b.len() != self.k * n {
             return Err(ShardError::Shape(format!(
                 "B has {} elements, expected K*N = {}",
@@ -163,15 +206,26 @@ impl ShardExecutor {
                 self.m * n
             )));
         }
+        let active: Vec<bool> = if skip_empty {
+            self.shard_nnz.iter().map(|&nnz| nnz > 0).collect()
+        } else {
+            vec![true; self.inners.len()]
+        };
+        let skipped = active.iter().filter(|a| !**a).count();
 
-        // Gather: seed each shard's private C block with its global rows
-        // (the beta * C_in term lives in the block). Blocks are grow-only
-        // executor scratch; every element is overwritten by the gather, so
-        // stale contents from earlier calls cannot leak.
+        // Gather: seed each active shard's private C block with its global
+        // rows (the beta * C_in term lives in the block). Blocks are
+        // grow-only executor scratch; every element is overwritten by the
+        // gather, so stale contents from earlier calls cannot leak.
         if self.locals.len() < self.global_rows.len() {
             self.locals.resize_with(self.global_rows.len(), Vec::new);
         }
-        for (rows, buf) in self.global_rows.iter().zip(self.locals.iter_mut()) {
+        for (i, (rows, buf)) in
+            self.global_rows.iter().zip(self.locals.iter_mut()).enumerate()
+        {
+            if !active[i] {
+                continue;
+            }
             let need = rows.len() * n;
             if buf.len() < need {
                 buf.resize(need, 0.0);
@@ -182,23 +236,26 @@ impl ShardExecutor {
             }
         }
 
-        // Parallel shard execution: one scoped thread per shard, each
-        // driving its own prepared inner handle on its own C block.
+        // Parallel shard execution: one scoped thread per active shard,
+        // each driving its own prepared inner handle on its own C block.
         let inners = &mut self.inners;
         let global_rows = &self.global_rows;
         let locals = &mut self.locals;
-        let outcomes: Vec<(Result<(), BackendError>, std::time::Duration)> =
+        let active_ref = &active;
+        let outcomes: Vec<(usize, Result<(), BackendError>, std::time::Duration)> =
             std::thread::scope(|scope| {
                 let handles: Vec<_> = inners
                     .iter_mut()
                     .zip(global_rows.iter())
                     .zip(locals.iter_mut())
-                    .map(|((inner, rows), buf)| {
+                    .enumerate()
+                    .filter(|(i, _)| active_ref[*i])
+                    .map(|(i, ((inner, rows), buf))| {
                         scope.spawn(move || {
                             let need = rows.len() * n;
                             let t0 = Instant::now();
                             let r = inner.execute(b, &mut buf[..need], n, alpha, beta);
-                            (r, t0.elapsed())
+                            (i, r, t0.elapsed())
                         })
                     })
                     .collect();
@@ -208,31 +265,51 @@ impl ShardExecutor {
                     .collect()
             });
 
-        for (shard, (outcome, _)) in outcomes.iter().enumerate() {
+        let shards_total = self.global_rows.len();
+        for (shard, outcome, _) in &outcomes {
             if let Err(e) = outcome {
                 return Err(ShardError::ShardFailed {
-                    shard,
-                    shards: outcomes.len(),
+                    shard: *shard,
+                    shards: shards_total,
                     message: e.to_string(),
                 });
             }
         }
 
-        // Scatter: every shard succeeded, so write the row-disjoint blocks
-        // back (partial results never reach C).
-        for (rows, buf) in self.global_rows.iter().zip(self.locals.iter()) {
-            for (li, &gr) in rows.iter().enumerate() {
-                let gr = gr as usize;
-                c[gr * n..(gr + 1) * n].copy_from_slice(&buf[li * n..(li + 1) * n]);
+        // Scatter: every active shard succeeded, so write the row-disjoint
+        // blocks back; only now do skipped shards' rows get their pure
+        // beta update (partial results never reach C).
+        for (i, (rows, buf)) in
+            self.global_rows.iter().zip(self.locals.iter()).enumerate()
+        {
+            if active[i] {
+                for (li, &gr) in rows.iter().enumerate() {
+                    let gr = gr as usize;
+                    c[gr * n..(gr + 1) * n].copy_from_slice(&buf[li * n..(li + 1) * n]);
+                }
+            } else {
+                for &gr in rows {
+                    let gr = gr as usize;
+                    for v in &mut c[gr * n..(gr + 1) * n] {
+                        *v *= beta;
+                    }
+                }
             }
         }
 
-        Ok(ShardRunStats {
-            shards: self.inners.len(),
-            shard_nnz: self.shard_nnz.clone(),
-            shard_latency: outcomes.into_iter().map(|(_, d)| d).collect(),
-            imbalance: self.imbalance,
-        })
+        let mut shard_latency = vec![std::time::Duration::ZERO; shards_total];
+        for (i, _, d) in outcomes {
+            shard_latency[i] = d;
+        }
+        Ok((
+            ShardRunStats {
+                shards: shards_total,
+                shard_nnz: self.shard_nnz.clone(),
+                shard_latency,
+                imbalance: self.imbalance,
+            },
+            skipped,
+        ))
     }
 }
 
@@ -384,6 +461,67 @@ mod tests {
             ShardExecutor::prepare(&sharded, "sharded:2:native"),
             Err(BackendError::InvalidSpec(_))
         ));
+    }
+
+    #[test]
+    fn execute_active_skips_empty_shards_bit_identically() {
+        // 3 non-empty rows over 8 shards: 5 shards own only empty rows
+        // and must be skipped, with C bit-identical to the full run.
+        let coo = Coo::new(
+            24,
+            16,
+            vec![0, 0, 5, 5, 11],
+            vec![1, 7, 3, 9, 14],
+            vec![1.5, -2.0, 0.25, 4.0, -1.0],
+        )
+        .unwrap();
+        let sharded = ShardedMatrix::build(&coo, 8, 2, 8, 2);
+        let empty_shards =
+            sharded.shards.iter().filter(|s| s.image.nnz == 0).count();
+        assert!(empty_shards >= 5, "construction must leave empty shards");
+        let n = 3;
+        let b: Vec<f32> = (0..coo.k * n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let c0: Vec<f32> = (0..coo.m * n).map(|i| (i as f32 * 0.13).cos()).collect();
+
+        let mut full = c0.clone();
+        let mut exec = functional_pool(&sharded);
+        exec.execute(&b, &mut full, n, 1.25, -0.75).unwrap();
+
+        let mut routed = c0.clone();
+        let (stats, skipped) =
+            exec.execute_active(&b, &mut routed, n, 1.25, -0.75).unwrap();
+        assert_eq!(skipped, empty_shards);
+        assert_eq!(routed, full, "routing must be bit-identical");
+        assert_eq!(stats.shards, 8, "stats still describe the whole pool");
+        // Skipped shards report zero latency; the row sets are exposed
+        // for the batcher's routing decision.
+        let zero_lat =
+            stats.shard_latency.iter().filter(|d| d.is_zero()).count();
+        assert!(zero_lat >= empty_shards);
+        assert_eq!(exec.shard_rows().len(), 8);
+        assert_eq!(
+            exec.shard_rows().iter().map(|r| r.len()).sum::<usize>(),
+            coo.m
+        );
+        assert_eq!(exec.shard_nnz().iter().sum::<usize>(), coo.nnz());
+    }
+
+    #[test]
+    fn execute_active_runs_all_shards_when_none_empty() {
+        let mut rng = Rng::new(9);
+        let coo = gen::power_law_rows(60, 40, 900, 1.0, &mut rng);
+        let sharded = ShardedMatrix::build(&coo, 3, 2, 8, 2);
+        assert!(sharded.shards.iter().all(|s| s.image.nnz > 0));
+        let mut exec = functional_pool(&sharded);
+        let n = 2;
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        let mut c: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let mut want = c.clone();
+        coo.spmm_reference(&b, &mut want, n, 1.0, 0.5);
+        let (stats, skipped) = exec.execute_active(&b, &mut c, n, 1.0, 0.5).unwrap();
+        assert_eq!(skipped, 0);
+        assert_eq!(stats.shards, 3);
+        prop::assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
     }
 
     #[test]

@@ -130,7 +130,7 @@ fn coordinator_serves_native_backend_without_artifacts() {
     let image = Arc::new(preprocess(&coo, 8, 32, 10));
     let server = Server::start_backend(
         2,
-        BatchPolicy { max_columns: 64, window: Duration::from_millis(2) },
+        BatchPolicy { max_columns: 64, window: Duration::from_millis(2), route_columns: 8 },
         "native:2",
     )
     .unwrap();

@@ -52,7 +52,7 @@ fn server_survives_heterogeneous_load() {
 
     let server = Server::start(
         2,
-        BatchPolicy { max_columns: 64, window: Duration::from_millis(2) },
+        BatchPolicy { max_columns: 64, window: Duration::from_millis(2), route_columns: 8 },
         |_| Box::new(FunctionalBackend),
     );
     let h1 = server.register(i1);

@@ -1,0 +1,303 @@
+//! Integration: the adaptive serving pipeline end to end — shard-aware
+//! routed batching (small-N requests execute on a shard subset with
+//! results identical to the functional backend), re-shard-on-skew (a
+//! skewed workload triggers exactly one rebuild and results stay
+//! deterministic afterwards), the per-stage latency breakdown, and
+//! admission backpressure.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sextans::backend::{FunctionalBackend, PreparedSpmm, SpmmBackend};
+use sextans::coordinator::{
+    AdmissionPolicy, BatchPolicy, PipelineConfig, ReshardPolicy, Server, SpmmRequest,
+};
+use sextans::prop::assert_allclose;
+use sextans::sched::preprocess;
+use sextans::sparse::{rng::Rng, Coo};
+
+/// A matrix whose non-zeros live in only 4 of 40 rows: over 8 shards the
+/// LPT planner gives each non-empty row its own shard, leaving 4 shards
+/// with nothing to compute. Each row holds exactly one non-zero per
+/// K0 = 8 window, so every schedule accumulates a row's contributions in
+/// the same (window-ascending) order — results are bit-identical across
+/// sharded, routed, and whole-image execution.
+fn sparse_rows_matrix() -> Coo {
+    let (m, k) = (40usize, 24usize);
+    let mut rows = Vec::new();
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    for r in 0..4u32 {
+        for w in 0..3u32 {
+            rows.push(r);
+            cols.push(w * 8 + r);
+            vals.push(0.5 + r as f32 - 0.25 * w as f32);
+        }
+    }
+    Coo::new(m, k, rows, cols, vals).unwrap()
+}
+
+/// One extreme row plus 70 light rows: nnz imbalance 4.0 at S = 8 (one
+/// shard holds half the work), 2.0 at S = 4 — so a threshold of 2.5
+/// triggers exactly one halving.
+fn skewed_matrix() -> Coo {
+    let k = 800usize;
+    let mut rows = Vec::new();
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    for j in 0..700u32 {
+        rows.push(0);
+        cols.push(j);
+        vals.push(0.01 + (j % 7) as f32 * 0.1);
+    }
+    for r in 1..=70u32 {
+        for j in 0..10u32 {
+            rows.push(r);
+            cols.push((r * 7 + j * 13) % k as u32);
+            vals.push(0.2 + (r % 5) as f32 * 0.05);
+        }
+    }
+    Coo::new(71, k, rows, cols, vals).unwrap()
+}
+
+fn vecs(coo: &Coo, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+    let c: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+    (b, c)
+}
+
+#[test]
+fn small_n_requests_execute_on_a_shard_subset() {
+    let coo = sparse_rows_matrix();
+    let image = Arc::new(preprocess(&coo, 4, 8, 4));
+
+    // Reference: the functional backend on the unsharded image.
+    let mut reference = FunctionalBackend.prepare(Arc::clone(&image)).unwrap();
+
+    let config = PipelineConfig {
+        batch: BatchPolicy {
+            max_columns: 512,
+            window: Duration::from_millis(2),
+            route_columns: 4,
+        },
+        ..PipelineConfig::default()
+    };
+    let server = Server::start_backend_with(1, config, "sharded:8:functional").unwrap();
+    let handle = server.register(Arc::clone(&image));
+
+    let n = 2; // <= route_columns: dispatched through the routed path
+    let requests = 3;
+    for i in 0..requests {
+        let (b, c0) = vecs(&coo, n, 100 + i);
+        let mut want = c0.clone();
+        reference.execute(&b, &mut want, n, 1.5, -0.5).unwrap();
+        let resp = server.call(SpmmRequest {
+            image: handle.clone(),
+            b,
+            c: c0,
+            n,
+            alpha: 1.5,
+            beta: -0.5,
+        });
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        // Same engine per shard, complete rows per shard: the routed
+        // sharded result must equal the functional reference exactly.
+        assert_eq!(resp.c, want, "routed subset must match the functional backend");
+        let mut coo_want = vecs(&coo, n, 100 + i).1;
+        coo.spmm_reference(&vecs(&coo, n, 100 + i).0, &mut coo_want, n, 1.5, -0.5);
+        assert_allclose(&resp.c, &coo_want, 2e-4, 2e-4).unwrap();
+    }
+    // A wide request stays on the unrouted path.
+    let n_wide = 16;
+    let (b, c0) = vecs(&coo, n_wide, 999);
+    let resp = server.call(SpmmRequest {
+        image: handle.clone(),
+        b,
+        c: c0,
+        n: n_wide,
+        alpha: 1.5,
+        beta: -0.5,
+    });
+    assert!(resp.error.is_none());
+
+    let summary = server.shutdown();
+    assert_eq!(summary.requests, requests as usize + 1);
+    assert_eq!(summary.routed_jobs, requests as usize, "small-N jobs route");
+    // 4 non-empty rows over 8 shards: every routed execution skips the 4
+    // shards that own no non-zeros.
+    assert_eq!(summary.shards_skipped, 4 * requests as usize);
+    assert_eq!(summary.prepares, 1, "routing reuses the one resident pool");
+}
+
+#[test]
+fn routed_and_unrouted_paths_are_bit_identical() {
+    let coo = sparse_rows_matrix();
+    let image = Arc::new(preprocess(&coo, 4, 8, 4));
+    let n = 2;
+    let (b, c0) = vecs(&coo, n, 7);
+    let mut results = Vec::new();
+    for route_columns in [4usize, 0] {
+        let config = PipelineConfig {
+            batch: BatchPolicy {
+                max_columns: 512,
+                window: Duration::from_millis(2),
+                route_columns,
+            },
+            ..PipelineConfig::default()
+        };
+        let server = Server::start_backend_with(1, config, "sharded:8:native:1").unwrap();
+        let handle = server.register(Arc::clone(&image));
+        let resp = server.call(SpmmRequest {
+            image: handle,
+            b: b.clone(),
+            c: c0.clone(),
+            n,
+            alpha: 2.0,
+            beta: 0.75,
+        });
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        let summary = server.shutdown();
+        if route_columns > 0 {
+            assert_eq!(summary.routed_jobs, 1);
+            assert_eq!(summary.shards_skipped, 4);
+        } else {
+            assert_eq!(summary.routed_jobs, 0);
+        }
+        results.push(resp.c);
+    }
+    assert_eq!(
+        results[0], results[1],
+        "skipping empty shards must not change a single bit"
+    );
+}
+
+#[test]
+fn skewed_workload_triggers_exactly_one_reshard() {
+    let coo = skewed_matrix();
+    let image = Arc::new(preprocess(&coo, 4, 64, 4));
+    let config = PipelineConfig {
+        batch: BatchPolicy {
+            max_columns: 512,
+            window: Duration::from_millis(2),
+            route_columns: 0, // isolate resharding from routing
+        },
+        reshard: ReshardPolicy { imbalance_threshold: 2.5, window: 4 },
+        ..PipelineConfig::default()
+    };
+    let server = Server::start_backend_with(1, config, "sharded:8:native:1").unwrap();
+    let handle = server.register(Arc::clone(&image));
+
+    let n = 3;
+    let (b, c0) = vecs(&coo, n, 21);
+    let mut want = c0.clone();
+    coo.spmm_reference(&b, &mut want, n, 1.25, 0.5);
+
+    // 12 identical sequential requests: executions 1-4 run at S=8 (mean
+    // imbalance 4.0 > 2.5 -> rebuild after the 4th), 5-12 at S=4 (mean
+    // 2.0 < 2.5 -> no second rebuild).
+    let mut responses = Vec::new();
+    for _ in 0..12 {
+        let resp = server.call(SpmmRequest {
+            image: handle.clone(),
+            b: b.clone(),
+            c: c0.clone(),
+            n,
+            alpha: 1.25,
+            beta: 0.5,
+        });
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_allclose(&resp.c, &want, 2e-4, 2e-4).unwrap();
+        responses.push(resp.c);
+    }
+    let summary = server.shutdown();
+    assert_eq!(summary.reshards, 1, "exactly one rebuild");
+    assert_eq!(summary.last_reshard, Some((8, 4)));
+    assert_eq!(summary.requests, 12);
+    // The rebuild happened mid-stream: mean shard count sits strictly
+    // between the old and new S.
+    assert!(
+        summary.mean_shards > 4.0 && summary.mean_shards < 8.0,
+        "mean shards {} must reflect 8-shard and 4-shard executions",
+        summary.mean_shards
+    );
+    // Determinism around the rebuild: identical requests produce
+    // bit-identical results within each residency generation.
+    for c in &responses[1..4] {
+        assert_eq!(responses[0], *c, "pre-rebuild responses must be bit-identical");
+    }
+    for c in &responses[5..] {
+        assert_eq!(responses[4], *c, "post-rebuild responses must be bit-identical");
+    }
+}
+
+#[test]
+fn stage_breakdown_decomposes_request_latency() {
+    let coo = sparse_rows_matrix();
+    let image = Arc::new(preprocess(&coo, 4, 8, 4));
+    let server = Server::start(2, BatchPolicy::default(), |_| Box::new(FunctionalBackend));
+    let handle = server.register(image);
+    let n = 4;
+    for i in 0..5 {
+        let (b, c0) = vecs(&coo, n, 300 + i);
+        let resp = server.call(SpmmRequest {
+            image: handle.clone(),
+            b,
+            c: c0,
+            n,
+            alpha: 1.0,
+            beta: 0.0,
+        });
+        assert!(resp.error.is_none());
+        // The four stages decompose each request's end-to-end latency.
+        let t = resp.timing;
+        assert_eq!(t.total(), t.queue + t.batch + t.prepare + t.exec);
+    }
+    let summary = server.shutdown();
+    assert_eq!(summary.requests, 5);
+    for (name, v) in [
+        ("queue", summary.stage_queue_s),
+        ("batch", summary.stage_batch_s),
+        ("prepare", summary.stage_prepare_s),
+        ("exec", summary.stage_exec_s),
+    ] {
+        assert!(v.is_finite() && v >= 0.0, "stage {name} = {v}");
+    }
+    assert!(summary.stage_exec_s > 0.0, "execution must take measurable time");
+    let stage_sum = summary.stage_queue_s
+        + summary.stage_batch_s
+        + summary.stage_prepare_s
+        + summary.stage_exec_s;
+    let mean_latency = summary.sum_latency_s / summary.requests as f64;
+    assert!(
+        (stage_sum - mean_latency).abs() <= 1e-9 + 1e-6 * mean_latency,
+        "stage means ({stage_sum}) must sum to the mean latency ({mean_latency})"
+    );
+}
+
+#[test]
+fn admission_backpressure_sheds_and_recovers() {
+    let coo = sparse_rows_matrix();
+    let image = Arc::new(preprocess(&coo, 4, 8, 4));
+    let config = PipelineConfig {
+        admission: AdmissionPolicy { max_in_flight: 0 },
+        ..PipelineConfig::default()
+    };
+    let server = Server::start_with(1, config, |_| Box::new(FunctionalBackend));
+    let handle = server.register(image);
+    let n = 2;
+    let (b, c0) = vecs(&coo, n, 55);
+    let resp = server.call(SpmmRequest {
+        image: handle.clone(),
+        b,
+        c: c0,
+        n,
+        alpha: 1.0,
+        beta: 0.0,
+    });
+    let err = resp.error.expect("a zero-depth gate rejects everything");
+    assert!(err.contains("admission rejected"), "{err}");
+    let summary = server.shutdown();
+    assert_eq!(summary.rejected, 1);
+    assert_eq!(summary.requests, 0);
+}

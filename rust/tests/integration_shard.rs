@@ -111,7 +111,7 @@ fn coordinator_serves_sharded_backend_with_metrics() {
     let image = Arc::new(preprocess(&coo, 8, 32, 10));
     let server = Server::start_backend(
         2,
-        BatchPolicy { max_columns: 64, window: Duration::from_millis(2) },
+        BatchPolicy { max_columns: 64, window: Duration::from_millis(2), route_columns: 8 },
         "sharded:4:native:1",
     )
     .unwrap();
