@@ -53,7 +53,7 @@ fn main() {
             coo.nnz()
         ));
 
-        let mut functional = FunctionalBackend.prepare(Arc::clone(&sm)).unwrap();
+        let functional = FunctionalBackend.prepare(Arc::clone(&sm)).unwrap();
         let r = bench("backend/functional", 1, 6, Duration::from_millis(400), || {
             c.copy_from_slice(&c0);
             functional.execute(&b, &mut c, n, 1.0, 0.5).unwrap();
@@ -63,7 +63,7 @@ fn main() {
         println!("    -> {base_gflops:.2} GFLOP/s");
 
         for threads in [1usize, 2, 4, 8] {
-            let mut native = NativeBackend::new(threads).prepare(Arc::clone(&sm)).unwrap();
+            let native = NativeBackend::new(threads).prepare(Arc::clone(&sm)).unwrap();
             let r = bench(
                 &format!("backend/native:{threads}"),
                 1,

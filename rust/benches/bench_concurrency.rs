@@ -1,0 +1,114 @@
+//! Shared-handle concurrency scaling: W ∈ {1, 2, 4, 8} worker threads all
+//! executing against ONE prepared matrix (`Arc<dyn PreparedSpmm>`, no
+//! mutex), reporting aggregate GFLOP/s and scaling efficiency vs the
+//! W = 1 baseline — the number the `&self` execution redesign exists to
+//! improve. Under the old `Arc<Mutex<..>>` residency, this workload ran
+//! exactly one execute at a time regardless of W (efficiency ~ 1/W);
+//! with pooled scratch it should scale near-linearly until the memory
+//! bus saturates.
+//!
+//! The inner engine is pinned to one thread (`native:1`) so the scaling
+//! measured is *concurrency across requests*, not the engine's own
+//! fan-out; a second section repeats W = 4 on `sharded:2:native:1` to
+//! show the composite's gather/scatter path also concurrency-scales.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use sextans::arch::simulator::problem_flops;
+use sextans::backend::{self, PreparedSpmm, SpmmBackend};
+use sextans::bench_util::{black_box, section};
+use sextans::sched::preprocess;
+use sextans::sparse::{gen, rng::Rng};
+
+/// Aggregate seconds for `iters` executes spread evenly over `w` threads
+/// sharing `handle`.
+fn run_shared(
+    handle: &Arc<dyn PreparedSpmm + Send + Sync>,
+    w: usize,
+    iters: usize,
+    b: &[f32],
+    c0: &[f32],
+    n: usize,
+) -> f64 {
+    let per_thread = iters.div_ceil(w);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..w {
+            let handle = Arc::clone(handle);
+            s.spawn(move || {
+                let mut c = c0.to_vec();
+                for _ in 0..per_thread {
+                    handle.execute(b, &mut c, n, 1.0, 0.5).unwrap();
+                    black_box(&c);
+                }
+            });
+        }
+    });
+    t0.elapsed().as_secs_f64() / (per_thread * w) as f64
+}
+
+fn main() {
+    let mut rng = Rng::new(0xC0C0);
+    // One serving-shaped hot matrix; N modest so a single execute is far
+    // from saturating the machine on its own.
+    let coo = gen::power_law_rows(4096, 4096, 250_000, 1.1, &mut rng);
+    let (p, k0, d) = (64usize, 4096usize, 10usize);
+    let n = 16usize;
+    let sm = Arc::new(preprocess(&coo, p, k0, d));
+    let flops = problem_flops(coo.nnz(), coo.m, n) as f64;
+    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+    let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+
+    section(&format!(
+        "shared-handle concurrency ({}x{}, nnz {}, N={n}, engine native:1)",
+        coo.m,
+        coo.k,
+        coo.nnz()
+    ));
+
+    let handle: Arc<dyn PreparedSpmm + Send + Sync> = Arc::from(
+        backend::create("native:1").unwrap().prepare_send(Arc::clone(&sm)).unwrap(),
+    );
+    // Warm the scratch pool at the highest W so allocation never lands in
+    // a timed region.
+    run_shared(&handle, 8, 8, &b, &c0, n);
+
+    let iters = 24usize;
+    let mut base_gflops = 0.0f64;
+    for w in [1usize, 2, 4, 8] {
+        let per_exec_s = run_shared(&handle, w, iters, &b, &c0, n);
+        // Aggregate throughput across the W concurrent streams
+        // (per_exec_s already amortizes the wall clock over every execute
+        // issued by every thread).
+        let agg_gflops = flops / per_exec_s / 1e9;
+        if w == 1 {
+            base_gflops = agg_gflops;
+        }
+        let efficiency = agg_gflops / (base_gflops * w as f64);
+        println!(
+            "W={w}: {:.3} ms/execute, aggregate {:.2} GFLOP/s, scaling efficiency \
+             {:.0}% of linear",
+            per_exec_s * 1e3,
+            agg_gflops,
+            efficiency * 100.0
+        );
+    }
+
+    section("shared sharded handle (W=4, sharded:2:native:1)");
+    let sharded: Arc<dyn PreparedSpmm + Send + Sync> = Arc::from(
+        backend::create("sharded:2:native:1")
+            .unwrap()
+            .prepare_send(Arc::clone(&sm))
+            .unwrap(),
+    );
+    run_shared(&sharded, 4, 4, &b, &c0, n); // warm gather blocks
+    for w in [1usize, 4] {
+        let per_exec_s = run_shared(&sharded, w, iters, &b, &c0, n);
+        println!(
+            "W={w}: {:.3} ms/execute, aggregate {:.2} GFLOP/s",
+            per_exec_s * 1e3,
+            flops / per_exec_s / 1e9
+        );
+    }
+}

@@ -53,7 +53,7 @@ fn main() {
 
         // One-time prepare cost of the resident handle.
         let t0 = Instant::now();
-        let mut handle = factory.prepare(Arc::clone(&sm)).expect("prepare");
+        let handle = factory.prepare(Arc::clone(&sm)).expect("prepare");
         let prepare_s = t0.elapsed().as_secs_f64();
         let cost = handle.prepare_cost();
         // Warm up scratch, then measure steady-state execute.
@@ -123,7 +123,7 @@ fn main() {
     ));
     const RESHARD_ITERS: usize = 5;
     for (s_from, s_to) in [(8usize, 4usize), (4, 2)] {
-        let steady = |handle: &mut dyn PreparedSpmm, c: &mut [f32]| -> f64 {
+        let steady = |handle: &dyn PreparedSpmm, c: &mut [f32]| -> f64 {
             handle.execute(&b, c, n, 1.0, 0.5).unwrap(); // warm scratch
             let t0 = Instant::now();
             for _ in 0..RESHARD_ITERS {
@@ -134,18 +134,18 @@ fn main() {
             t0.elapsed().as_secs_f64() / RESHARD_ITERS as f64
         };
         let from = backend::create(&format!("sharded:{s_from}:native")).unwrap();
-        let mut handle = from.prepare(Arc::clone(&skewed_sm)).unwrap();
+        let handle = from.prepare(Arc::clone(&skewed_sm)).unwrap();
         let imb_from = sextans::shard::plan_shards(&skewed, s_from).imbalance();
-        let exec_from = steady(&mut *handle, &mut c);
+        let exec_from = steady(&*handle, &mut c);
 
         // The trigger's cost: drop the resident pool, re-prepare at s_to.
         let to = backend::create(&format!("sharded:{s_to}:native")).unwrap();
         let t0 = Instant::now();
         drop(handle);
-        let mut handle = to.prepare(Arc::clone(&skewed_sm)).unwrap();
+        let handle = to.prepare(Arc::clone(&skewed_sm)).unwrap();
         let reshard_s = t0.elapsed().as_secs_f64();
         let imb_to = sextans::shard::plan_shards(&skewed, s_to).imbalance();
-        let exec_to = steady(&mut *handle, &mut c);
+        let exec_to = steady(&*handle, &mut c);
 
         let break_even = if exec_from > exec_to {
             format!("{:.0} executes", (reshard_s / (exec_from - exec_to)).ceil())

@@ -38,7 +38,7 @@ fn main() {
 
     // Baseline: the unsharded native backend, auto-threaded, prepared once.
     let sm = Arc::new(preprocess(&coo, p, k0, d));
-    let mut native = NativeBackend::new(0).prepare(Arc::clone(&sm)).expect("native prepare");
+    let native = NativeBackend::new(0).prepare(Arc::clone(&sm)).expect("native prepare");
     let r = bench("shard/unsharded-native", 1, 6, Duration::from_millis(400), || {
         c.copy_from_slice(&c0);
         native.execute(&b, &mut c, n, 1.0, 0.5).unwrap();
@@ -49,7 +49,7 @@ fn main() {
 
     for s in [1usize, 2, 4, 8] {
         let sharded = ShardedMatrix::build(&coo, s, p, k0, d);
-        let mut exec = ShardExecutor::prepare(&sharded, "native").expect("native pool");
+        let exec = ShardExecutor::prepare(&sharded, "native").expect("native pool");
         let pcost = exec.prepare_cost();
         let r = bench(
             &format!("shard/sharded:{s}:native"),

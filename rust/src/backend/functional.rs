@@ -5,7 +5,9 @@
 //! The prepared handle keeps nothing resident beyond the shared image
 //! (`resident_bytes = 0`): the simulator consumes the encoded streams
 //! directly, so prepare is effectively free. That makes this backend the
-//! baseline for amortization measurements too.
+//! baseline for amortization measurements too — and, with no per-call
+//! state at all, trivially `&self`-executable: concurrent callers share
+//! one handle with zero coordination.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -38,7 +40,7 @@ impl SpmmBackend for FunctionalBackend {
     fn prepare_send(
         &self,
         image: Arc<ScheduledMatrix>,
-    ) -> Result<Box<dyn PreparedSpmm + Send>, BackendError> {
+    ) -> Result<Box<dyn PreparedSpmm + Send + Sync>, BackendError> {
         Ok(Box::new(PreparedFunctional::new(image)))
     }
 }
@@ -69,7 +71,7 @@ impl PreparedSpmm for PreparedFunctional {
     }
 
     fn execute(
-        &mut self,
+        &self,
         b: &[f32],
         c: &mut [f32],
         n: usize,
@@ -98,7 +100,7 @@ mod tests {
         let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
         let c0: Vec<f32> = (0..a.m * n).map(|_| rng.normal()).collect();
         let mut got = c0.clone();
-        let mut handle = FunctionalBackend.prepare(Arc::clone(&sm)).unwrap();
+        let handle = FunctionalBackend.prepare(Arc::clone(&sm)).unwrap();
         handle.execute(&b, &mut got, n, 1.5, 0.5).unwrap();
         let mut want = c0;
         functional::execute(&sm, &b, &mut want, n, 1.5, 0.5);

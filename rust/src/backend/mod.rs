@@ -26,6 +26,14 @@
 //! everything that serves more than one request against the same A (the
 //! coordinator, the HFlex accelerator, the benches) holds a handle.
 //!
+//! Execution is **shared-read**: every `execute*` method takes `&self`, so
+//! one handle sustains arbitrarily many *concurrent* multiplications — the
+//! Sextans serving shape (one scheduled A, a stream of dense operands)
+//! without a per-matrix lock. All per-call mutable state (C-accumulation
+//! tiles, per-shard gather blocks) is drawn from an internal
+//! [`ScratchPool`], whose lock guards only the tiny checkout/return — never
+//! the multiply.
+//!
 //! Backends are selected by name through [`create`] (`"native"`,
 //! `"native:4"`, `"native-blocked"`, `"functional"`, `"pjrt"`,
 //! `"sharded:4:native"`), so servers and CLIs stay backend-agnostic.
@@ -36,10 +44,12 @@
 pub mod functional;
 pub mod native;
 pub mod pjrt;
+pub mod scratch;
 
 pub use functional::FunctionalBackend;
 pub use native::NativeBackend;
 pub use pjrt::PjrtBackend;
+pub use scratch::{Scratch, ScratchPool};
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -113,13 +123,19 @@ pub struct PrepareCost {
 }
 
 /// A matrix-resident execution handle: one preprocessed A, arbitrarily many
-/// SpMMs. Handles own all per-matrix state (scratch, shard plans, device
-/// buffers), so nothing is rebuilt between calls — N and the scalars may
-/// change freely per call.
+/// SpMMs. Handles own all per-matrix state (scratch pools, shard plans,
+/// device buffers), so nothing is rebuilt between calls — N and the scalars
+/// may change freely per call.
+///
+/// Execution takes `&self`: the resident image and decoded streams are
+/// read-only, and per-call mutable state comes from an internal
+/// [`ScratchPool`], so any number of threads may execute against one
+/// handle concurrently (share the handle via `Arc`, no mutex).
 ///
 /// Handles are not required to be `Send` (the real PJRT engine's client is
 /// thread-local); use [`SpmmBackend::prepare_send`] when the handle must
-/// cross threads.
+/// cross threads — its handles are additionally `Sync`, the shared
+/// concurrent-execution contract.
 pub trait PreparedSpmm {
     /// Registry name of the engine that prepared this handle.
     fn backend_name(&self) -> &'static str;
@@ -130,7 +146,7 @@ pub trait PreparedSpmm {
     /// Execute `C = alpha * A @ B + beta * C` against the resident matrix,
     /// where `b` is row-major `k x n` and `c` is row-major `m x n`.
     fn execute(
-        &mut self,
+        &self,
         b: &[f32],
         c: &mut [f32],
         n: usize,
@@ -143,7 +159,7 @@ pub trait PreparedSpmm {
     /// sparse A, a stream of dense operands). The default runs the pairs
     /// sequentially; engines may override to amortize further.
     fn execute_batch(
-        &mut self,
+        &self,
         jobs: &mut [(&[f32], &mut [f32])],
         n: usize,
         alpha: f32,
@@ -158,7 +174,10 @@ pub trait PreparedSpmm {
     /// Shard-level statistics of the most recent successful [`execute`]
     /// (see [`crate::shard`]). Non-sharding engines keep the default
     /// `None`; the serving coordinator polls this after every job to feed
-    /// shard metrics into its summary.
+    /// shard metrics into its summary. With concurrent executions the
+    /// "most recent" run is whichever finished last — per-shard nnz and
+    /// imbalance are per-matrix facts either way, so the metrics stay
+    /// meaningful.
     ///
     /// [`execute`]: PreparedSpmm::execute
     fn shard_stats(&self) -> Option<crate::shard::ShardRunStats> {
@@ -183,7 +202,7 @@ pub trait PreparedSpmm {
     ///
     /// [`execute`]: PreparedSpmm::execute
     fn execute_routed(
-        &mut self,
+        &self,
         b: &[f32],
         c: &mut [f32],
         n: usize,
@@ -201,7 +220,7 @@ impl std::fmt::Debug for dyn PreparedSpmm {
     }
 }
 
-impl std::fmt::Debug for dyn PreparedSpmm + Send {
+impl std::fmt::Debug for dyn PreparedSpmm + Send + Sync {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "PreparedSpmm({})", self.backend_name())
     }
@@ -228,16 +247,18 @@ pub trait SpmmBackend: Send + Sync {
     /// loading, scratch sizing) happens here, exactly once.
     fn prepare(&self, image: Arc<ScheduledMatrix>) -> Result<Box<dyn PreparedSpmm>, BackendError>;
 
-    /// Like [`prepare`], but the handle may cross threads. Engines whose
-    /// handles are thread-local (the real PJRT engine) keep this default
-    /// refusal — prepare inside the executing thread instead (the serving
+    /// Like [`prepare`], but the handle may cross threads *and* be shared
+    /// between them (`Send + Sync`): wrap it in an `Arc` and any number of
+    /// workers execute against it concurrently. Engines whose handles are
+    /// thread-local (the real PJRT engine) keep this default refusal —
+    /// prepare inside the executing thread instead (the serving
     /// coordinator's workers do).
     ///
     /// [`prepare`]: SpmmBackend::prepare
     fn prepare_send(
         &self,
         image: Arc<ScheduledMatrix>,
-    ) -> Result<Box<dyn PreparedSpmm + Send>, BackendError> {
+    ) -> Result<Box<dyn PreparedSpmm + Send + Sync>, BackendError> {
         let _ = image;
         Err(BackendError::Unavailable(format!(
             "backend {:?} prepares thread-local handles; call prepare() inside the \
@@ -480,7 +501,7 @@ pub fn create(spec: &str) -> Result<Box<dyn SpmmBackend>, BackendError> {
 pub fn prepare_send(
     spec: &str,
     image: Arc<ScheduledMatrix>,
-) -> Result<Box<dyn PreparedSpmm + Send>, BackendError> {
+) -> Result<Box<dyn PreparedSpmm + Send + Sync>, BackendError> {
     create(spec)?.prepare_send(image)
 }
 
@@ -601,7 +622,7 @@ mod tests {
         let be = create("native:2").unwrap();
         let mut once = c0.clone();
         be.execute_once(&image, &b, &mut once, n, 1.5, -0.5).unwrap();
-        let mut handle = be.prepare(Arc::clone(&image)).unwrap();
+        let handle = be.prepare(Arc::clone(&image)).unwrap();
         let mut held = c0.clone();
         handle.execute(&b, &mut held, n, 1.5, -0.5).unwrap();
         assert_eq!(once, held);
@@ -658,7 +679,7 @@ mod tests {
         let n = 2;
         let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
         let c0: Vec<f32> = (0..a.m * n).map(|_| rng.normal()).collect();
-        let mut handle = create("native:1").unwrap().prepare(Arc::clone(&image)).unwrap();
+        let handle = create("native:1").unwrap().prepare(Arc::clone(&image)).unwrap();
         assert_eq!(handle.resident_shards(), None, "native is single-unit");
         let mut plain = c0.clone();
         handle.execute(&b, &mut plain, n, 1.5, -0.5).unwrap();
@@ -674,7 +695,7 @@ mod tests {
         let a = gen::random_uniform(24, 20, 0.25, &mut rng);
         let image = Arc::new(preprocess(&a, 2, 8, 4));
         let n = 2;
-        let mut handle = create("native:1").unwrap().prepare(Arc::clone(&image)).unwrap();
+        let handle = create("native:1").unwrap().prepare(Arc::clone(&image)).unwrap();
         let bs: Vec<Vec<f32>> =
             (0..3).map(|_| (0..a.k * n).map(|_| rng.normal()).collect()).collect();
         let mut cs: Vec<Vec<f32>> = (0..3).map(|_| vec![0.0; a.m * n]).collect();

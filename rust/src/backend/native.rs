@@ -25,9 +25,13 @@
 //! float lanes — which vectorizes cleanly without changing the per-element
 //! order of adds.
 //!
-//! Hot-path allocation is zero after warm-up: each worker's scratch tile
-//! lives in the handle and only grows (never shrinks) across requests; the
-//! blocked variant's tiles are fully pre-sized at prepare time.
+//! Hot-path allocation is zero after warm-up: the handle keeps a
+//! [`ScratchPool`] of per-call scratch *sets* (one tile per worker), each
+//! execution checks one set out, and tiles only grow (never shrink) across
+//! requests; the blocked variant seeds a fully pre-sized set at prepare
+//! time. Because the decoded streams are read-only and all mutable state
+//! is pooled, `execute` takes `&self` — any number of threads may drive
+//! one handle concurrently, each on its own scratch set.
 //!
 //! **Column blocking** ([`NativeBackend::blocked`], registry name
 //! `"native-blocked"`): for N well beyond [`COL_BLOCK`], the B window rows
@@ -42,7 +46,9 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::{check_shapes, BackendError, Capability, PrepareCost, PreparedSpmm, SpmmBackend};
+use super::{
+    check_shapes, BackendError, Capability, PrepareCost, PreparedSpmm, ScratchPool, SpmmBackend,
+};
 use crate::sched::{decode, ScheduledMatrix};
 
 /// Inner-loop chunk width — the paper's N0 (8 PUs per PE).
@@ -95,7 +101,10 @@ impl NativeBackend {
         self.block_n
     }
 
-    fn build(&self, image: Arc<ScheduledMatrix>) -> PreparedNative {
+    /// Concrete-typed prepare: identical to [`SpmmBackend::prepare`] but
+    /// returns [`PreparedNative`] directly, for callers that need its
+    /// inherent accessors (the scratch-pool sizing tests, benches).
+    pub fn build(&self, image: Arc<ScheduledMatrix>) -> PreparedNative {
         let t0 = Instant::now();
         // Decode every PE stream once: drop bubbles, resolve window-local
         // columns to global B rows, keep slot-issue order (the accumulation
@@ -119,23 +128,25 @@ impl NativeBackend {
             })
             .collect();
         let workers = self.threads.min(image.p).max(1);
-        // Blocked tiles are fully pre-sized here (their width is fixed);
-        // unblocked tiles size themselves to N on first execute and are
-        // grow-only afterwards.
-        let scratch: Vec<Vec<f32>> = if self.block_n > 0 {
+        // Seed the scratch pool with one per-call set (one tile per
+        // worker). Blocked tiles are fully pre-sized here (their width is
+        // fixed); unblocked tiles size themselves to N on first execute
+        // and are grow-only afterwards. Additional sets are created only
+        // by *concurrent* executions, one per simultaneous caller.
+        let seed: Vec<Vec<f32>> = if self.block_n > 0 {
             (0..workers).map(|_| vec![0.0; image.rows_per_pe() * self.block_n]).collect()
         } else {
             (0..workers).map(|_| Vec::new()).collect()
         };
         let triple_bytes = std::mem::size_of::<(u32, u32, f32)>() as u64;
         let resident_bytes = streams.iter().map(|s| s.len() as u64 * triple_bytes).sum::<u64>()
-            + scratch.iter().map(|s| s.len() as u64 * 4).sum::<u64>();
+            + seed.iter().map(|s| s.len() as u64 * 4).sum::<u64>();
         PreparedNative {
             image,
             block_n: self.block_n,
             workers,
             streams,
-            scratch,
+            scratch: ScratchPool::with_seed(seed),
             cost: PrepareCost { wall: t0.elapsed(), resident_bytes },
         }
     }
@@ -166,13 +177,14 @@ impl SpmmBackend for NativeBackend {
     fn prepare_send(
         &self,
         image: Arc<ScheduledMatrix>,
-    ) -> Result<Box<dyn PreparedSpmm + Send>, BackendError> {
+    ) -> Result<Box<dyn PreparedSpmm + Send + Sync>, BackendError> {
         Ok(Box::new(self.build(image)))
     }
 }
 
-/// A matrix resident on the native engine: decoded per-PE streams plus the
-/// per-worker scratch tiles, ready for any number of (B, n, alpha, beta).
+/// A matrix resident on the native engine: decoded per-PE streams (shared,
+/// read-only) plus a pool of per-call scratch sets, ready for any number
+/// of — including concurrent — (B, n, alpha, beta).
 pub struct PreparedNative {
     image: Arc<ScheduledMatrix>,
     /// Column-block width; 0 = unblocked.
@@ -180,11 +192,15 @@ pub struct PreparedNative {
     /// Worker-thread count (<= P, >= 1), fixed at prepare.
     workers: usize,
     /// Per-PE decoded slot streams in issue order: (local row, global col,
-    /// value); bubbles dropped.
+    /// value); bubbles dropped. Read-only after prepare — the shared half
+    /// of the `&self` execution contract.
     streams: Vec<Vec<(u32, u32, f32)>>,
-    /// Per-worker C_AB scratch tiles (`rows_per_pe * block width`), reused
-    /// across requests and across the PEs a worker owns.
-    scratch: Vec<Vec<f32>>,
+    /// Pool of per-call scratch sets — one C_AB tile per worker
+    /// (`rows_per_pe * block width`), tiles reused across requests and
+    /// across the PEs a worker owns. One set is checked out per execution,
+    /// so the pool holds at most as many sets as there are concurrent
+    /// callers.
+    scratch: ScratchPool<Vec<Vec<f32>>>,
     cost: PrepareCost,
 }
 
@@ -192,6 +208,14 @@ impl PreparedNative {
     /// The resident image.
     pub fn image(&self) -> &Arc<ScheduledMatrix> {
         &self.image
+    }
+
+    /// Scratch sets currently parked in the internal pool (none checked
+    /// out ⇒ the handle's whole scratch footprint). The pool holds at most
+    /// one set per peak *concurrent* execution — exposed so tests can
+    /// assert that bound.
+    pub fn scratch_sets(&self) -> usize {
+        self.scratch.idle()
     }
 }
 
@@ -294,7 +318,7 @@ impl PreparedSpmm for PreparedNative {
     }
 
     fn execute(
-        &mut self,
+        &self,
         b: &[f32],
         c: &mut [f32],
         n: usize,
@@ -311,7 +335,11 @@ impl PreparedSpmm for PreparedNative {
         let block = if self.block_n == 0 { n } else { self.block_n.min(n) };
         let rows_per_pe = sm.rows_per_pe();
         let tile = rows_per_pe * block;
-        for buf in &mut self.scratch[..workers] {
+        // Per-call mutable state: check one scratch set out of the pool
+        // (concurrent callers each get their own; the lock covers only
+        // this checkout and the drop at the end, never the multiply).
+        let mut set = self.scratch.checkout(|| vec![Vec::new(); workers]);
+        for buf in &mut set[..workers] {
             if buf.len() < tile {
                 buf.resize(tile, 0.0);
             }
@@ -319,7 +347,7 @@ impl PreparedSpmm for PreparedNative {
         let streams: &[Vec<(u32, u32, f32)>] = &self.streams;
         let cptr = CPtr(c.as_mut_ptr());
         if workers == 1 {
-            let buf = &mut self.scratch[0];
+            let buf = &mut set[0];
             let mut col0 = 0;
             while col0 < n {
                 let cols = block.min(n - col0);
@@ -333,7 +361,7 @@ impl PreparedSpmm for PreparedNative {
             return Ok(());
         }
         std::thread::scope(|s| {
-            for (w, buf) in self.scratch[..workers].iter_mut().enumerate() {
+            for (w, buf) in set[..workers].iter_mut().enumerate() {
                 let worker_c = cptr;
                 s.spawn(move || {
                     let mut col0 = 0;
@@ -370,7 +398,7 @@ mod tests {
         alpha: f32,
         beta: f32,
     ) -> Vec<f32> {
-        let mut handle = NativeBackend::new(threads).build(Arc::clone(sm));
+        let handle = NativeBackend::new(threads).build(Arc::clone(sm));
         let mut c = c0.to_vec();
         handle.execute(b, &mut c, n, alpha, beta).unwrap();
         c
@@ -413,7 +441,7 @@ mod tests {
         let sm = Arc::new(preprocess(&a, 4, 16, 4));
         let n = 4;
         let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
-        let mut handle = NativeBackend::new(2).build(Arc::clone(&sm));
+        let handle = NativeBackend::new(2).build(Arc::clone(&sm));
         let mut first = vec![0f32; a.m * n];
         handle.execute(&b, &mut first, n, 1.0, 0.0).unwrap();
         // Second request with dirty scratch must produce identical output.
@@ -493,7 +521,7 @@ mod tests {
             let c0: Vec<f32> = (0..a.m * n).map(|_| rng.normal()).collect();
             for threads in [1usize, 4] {
                 let plain = run_native(threads, &sm, &b, &c0, n, 1.5, -0.25);
-                let mut blocked = NativeBackend::blocked(threads).build(Arc::clone(&sm));
+                let blocked = NativeBackend::blocked(threads).build(Arc::clone(&sm));
                 let mut c = c0.clone();
                 blocked.execute(&b, &mut c, n, 1.5, -0.25).unwrap();
                 assert_eq!(c, plain, "n = {n}, threads = {threads}");
@@ -511,7 +539,7 @@ mod tests {
         let backend = NativeBackend::blocked(2);
         assert_eq!(backend.name(), "native-blocked");
         assert_eq!(backend.block_width(), COL_BLOCK);
-        let mut handle = backend.build(Arc::clone(&sm));
+        let handle = backend.build(Arc::clone(&sm));
         assert_eq!(handle.backend_name(), "native-blocked");
         let mut first = vec![0f32; a.m * n];
         handle.execute(&b, &mut first, n, 1.0, 0.0).unwrap();
@@ -522,6 +550,50 @@ mod tests {
         let mut want = vec![0f32; a.m * n];
         a.spmm_reference(&b, &mut want, n, 1.0, 0.0);
         prop::assert_allclose(&first, &want, 2e-4, 2e-4).unwrap();
+    }
+
+    #[test]
+    fn concurrent_executions_share_one_handle_bit_identically() {
+        // The &self contract: W threads hammer ONE prepared handle with no
+        // external lock; every result matches the serial run bitwise, and
+        // the internal scratch pool never grows beyond the number of
+        // concurrent callers.
+        let mut rng = Rng::new(21);
+        let a = gen::power_law_rows(120, 90, 1_500, 1.0, &mut rng);
+        let sm = Arc::new(preprocess(&a, 8, 16, 6));
+        let n = 6;
+        let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..a.m * n).map(|_| rng.normal()).collect();
+        let handle = NativeBackend::new(2).build(Arc::clone(&sm));
+        let mut serial = c0.clone();
+        handle.execute(&b, &mut serial, n, 1.5, -0.25).unwrap();
+        let callers = 4;
+        let results: Vec<Vec<f32>> = std::thread::scope(|s| {
+            (0..callers)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut c = c0.clone();
+                        for _ in 0..8 {
+                            handle.execute(&b, &mut c, n, 1.5, -0.25).unwrap();
+                            c.copy_from_slice(&c0);
+                        }
+                        handle.execute(&b, &mut c, n, 1.5, -0.25).unwrap();
+                        c
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for c in &results {
+            assert_eq!(c, &serial, "concurrent result diverged from serial");
+        }
+        let sets = handle.scratch_sets();
+        assert!(
+            (1..=callers).contains(&sets),
+            "scratch pool holds {sets} sets for {callers} concurrent callers"
+        );
     }
 
     #[test]

@@ -89,14 +89,14 @@ impl SpmmBackend for PjrtBackend {
     }
 
     /// Without the real engine the stub `Engine` holds no client handles,
-    /// so the (never-constructible) prepared handle is trivially `Send`.
-    /// With `pjrt` + `xla` the default refusal stands: prepare inside the
-    /// executing thread.
+    /// so the (never-constructible) prepared handle is trivially
+    /// `Send + Sync`. With `pjrt` + `xla` the default refusal stands:
+    /// prepare inside the executing thread.
     #[cfg(not(all(feature = "pjrt", feature = "xla")))]
     fn prepare_send(
         &self,
         image: Arc<ScheduledMatrix>,
-    ) -> Result<Box<dyn PreparedSpmm + Send>, BackendError> {
+    ) -> Result<Box<dyn PreparedSpmm + Send + Sync>, BackendError> {
         Ok(Box::new(build_prepared(image)?))
     }
 }
@@ -120,7 +120,7 @@ impl PreparedSpmm for PreparedPjrt {
     }
 
     fn execute(
-        &mut self,
+        &self,
         b: &[f32],
         c: &mut [f32],
         n: usize,
@@ -128,6 +128,11 @@ impl PreparedSpmm for PreparedPjrt {
         beta: f32,
     ) -> Result<(), BackendError> {
         check_shapes(&self.image, b, c, n)?;
+        // `Engine::spmm` takes `&self` and stages its host buffers
+        // per call, so the handle carries no per-call mutable state of its
+        // own: `&self` execution is direct. (Concurrency across one
+        // *real* PJRT handle is still bounded by the engine's thread-local
+        // client — those handles never cross threads in the first place.)
         let out = self
             .engine
             .spmm(self.variant, &self.image, b, &*c, n, alpha, beta)

@@ -1,0 +1,160 @@
+//! A tiny checkout/return scratch pool — the mechanism that lets prepared
+//! handles execute through `&self`.
+//!
+//! Every engine needs per-call mutable state (C-accumulation tiles,
+//! per-shard gather blocks, staging buffers). With `&mut self` execution
+//! that state lived in the handle and forced callers to serialize; the
+//! pool inverts the ownership: the handle keeps a [`ScratchPool`], each
+//! execution checks a scratch set out for the duration of the call, and
+//! the set returns automatically when the call finishes. The pool's lock
+//! guards only the push/pop of the slot vector — a few nanoseconds — never
+//! the multiply itself, so W concurrent executions proceed with W
+//! independent scratch sets and zero contention on the hot path.
+//!
+//! Sizing invariant: a slot exists only while checked out or parked in the
+//! pool, and a checkout always drains the pool before allocating, so the
+//! pool never holds more sets than the peak number of *concurrent*
+//! executions — W workers hammering one handle grow it to at most W sets
+//! (asserted by the unit tests below and the backend integration tests).
+//!
+//! Accounting caveat: [`crate::backend::PrepareCost::resident_bytes`] is
+//! captured at prepare time with one (seed) scratch set, so a handle whose
+//! pool has grown under concurrency holds up to W−1 additional sets the
+//! byte-sized residency cache does not see. Trimming idle sets and
+//! re-reporting pooled bytes is a recorded ROADMAP follow-up.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::Mutex;
+
+/// A checkout/return pool of reusable scratch values. Cheap to construct;
+/// `Sync` whenever `T: Send`, which is what lets handles holding one be
+/// shared across threads.
+#[derive(Debug, Default)]
+pub struct ScratchPool<T> {
+    slots: Mutex<Vec<T>>,
+}
+
+impl<T> ScratchPool<T> {
+    /// An empty pool; slots are created lazily by [`ScratchPool::checkout`].
+    pub fn new() -> ScratchPool<T> {
+        ScratchPool { slots: Mutex::new(Vec::new()) }
+    }
+
+    /// A pool seeded with one ready slot — engines pre-size their scratch
+    /// at prepare time so the first execution allocates nothing.
+    pub fn with_seed(seed: T) -> ScratchPool<T> {
+        ScratchPool { slots: Mutex::new(vec![seed]) }
+    }
+
+    /// Check a slot out, building a fresh one with `make` only when every
+    /// parked slot is already in use. The returned guard derefs to `T` and
+    /// parks the slot back on drop (including on panic/unwind).
+    pub fn checkout(&self, make: impl FnOnce() -> T) -> Scratch<'_, T> {
+        let recycled = self.slots.lock().unwrap().pop();
+        Scratch { pool: self, item: Some(recycled.unwrap_or_else(make)) }
+    }
+
+    /// Slots currently parked in the pool (none checked out ⇒ the pool's
+    /// total footprint). Exposed so tests can assert the sizing invariant.
+    pub fn idle(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+}
+
+/// RAII checkout from a [`ScratchPool`]: deref to the scratch value, return
+/// it to the pool on drop.
+pub struct Scratch<'p, T> {
+    pool: &'p ScratchPool<T>,
+    item: Option<T>,
+}
+
+impl<T> Deref for Scratch<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.item.as_ref().expect("scratch present until drop")
+    }
+}
+
+impl<T> DerefMut for Scratch<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.item.as_mut().expect("scratch present until drop")
+    }
+}
+
+impl<T> Drop for Scratch<'_, T> {
+    fn drop(&mut self) {
+        if let Some(item) = self.item.take() {
+            self.pool.slots.lock().unwrap().push(item);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn checkout_reuses_parked_slots() {
+        let made = AtomicUsize::new(0);
+        let pool: ScratchPool<Vec<f32>> = ScratchPool::new();
+        for _ in 0..10 {
+            let mut s = pool.checkout(|| {
+                made.fetch_add(1, Ordering::Relaxed);
+                vec![0.0; 8]
+            });
+            s[0] = 1.0;
+        }
+        assert_eq!(made.load(Ordering::Relaxed), 1, "sequential reuse allocates once");
+        assert_eq!(pool.idle(), 1);
+    }
+
+    #[test]
+    fn seeded_pool_starts_with_one_ready_slot() {
+        let pool = ScratchPool::with_seed(vec![0.0f32; 16]);
+        assert_eq!(pool.idle(), 1);
+        {
+            let s = pool.checkout(|| panic!("the seed must satisfy the first checkout"));
+            assert_eq!(s.len(), 16);
+            assert_eq!(pool.idle(), 0, "checked-out slots leave the pool");
+        }
+        assert_eq!(pool.idle(), 1, "drop parks the slot back");
+    }
+
+    #[test]
+    fn pool_never_grows_beyond_peak_concurrency() {
+        // W threads × many checkouts each: the pool ends with at most W
+        // slots — the sizing invariant the &self execution path relies on.
+        let pool: ScratchPool<Vec<u8>> = ScratchPool::new();
+        let workers = 4;
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    for _ in 0..200 {
+                        let mut s = pool.checkout(|| vec![0u8; 64]);
+                        s[0] = s[0].wrapping_add(1);
+                    }
+                });
+            }
+        });
+        assert!(
+            pool.idle() <= workers,
+            "pool grew to {} slots with only {workers} concurrent users",
+            pool.idle()
+        );
+        assert!(pool.idle() >= 1, "at least one slot survives for reuse");
+    }
+
+    #[test]
+    fn nested_checkouts_get_distinct_slots() {
+        let pool: ScratchPool<Vec<u8>> = ScratchPool::new();
+        let mut a = pool.checkout(|| vec![1u8]);
+        let b = pool.checkout(|| vec![2u8]);
+        a[0] = 9;
+        assert_eq!(b[0], 2, "overlapping checkouts must not alias");
+        drop(a);
+        drop(b);
+        assert_eq!(pool.idle(), 2);
+    }
+}

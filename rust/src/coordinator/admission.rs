@@ -9,11 +9,23 @@
 //! Rejections are counted in the serving summary
 //! ([`super::metrics::Summary::rejected`]).
 //!
+//! **Per-image fairness** ([`AdmissionPolicy::per_image_quota`], off by
+//! default): with shared handles executing concurrently, one hot matrix
+//! can fill the whole global gate and starve every other registered image.
+//! The quota bounds how many in-flight requests any single image may hold;
+//! a request over its image's quota is shed even when the global gate has
+//! room, and the shed is attributed to that image in
+//! [`super::metrics::Summary::image_sheds`]. The per-image counts live
+//! under a tiny mutex that is only touched when the quota is enabled — the
+//! quota-off path stays a single lock-free CAS.
+//!
 //! One admission slot is held from submit until the response for that
 //! request is sent (dispatch releases it per segment), so the bound covers
 //! the whole pipeline: queued, batching, and executing requests all count.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Backpressure policy for the admission stage.
 #[derive(Clone, Copy, Debug)]
@@ -21,12 +33,28 @@ pub struct AdmissionPolicy {
     /// Maximum requests in flight (admitted but not yet responded to). A
     /// submit beyond this is rejected immediately with an error response.
     pub max_in_flight: usize,
+    /// Maximum in-flight requests any one registered image may hold; `0`
+    /// (the default) disables the per-image quota. Keeps one hot matrix
+    /// from starving the rest of the gate.
+    pub per_image_quota: usize,
 }
 
 impl Default for AdmissionPolicy {
     fn default() -> Self {
-        AdmissionPolicy { max_in_flight: 4096 }
+        AdmissionPolicy { max_in_flight: 4096, per_image_quota: 0 }
     }
+}
+
+/// Outcome of one admission attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// A slot was reserved; the request may enter the pipeline.
+    Admitted,
+    /// The global in-flight bound is full — shed.
+    Full,
+    /// The global gate had room, but this image is at its per-image
+    /// quota — shed, attributed to the image.
+    ImageQuota,
 }
 
 /// The admission gate: an in-flight counter enforcing [`AdmissionPolicy`],
@@ -35,21 +63,53 @@ impl Default for AdmissionPolicy {
 pub struct AdmissionGate {
     policy: AdmissionPolicy,
     in_flight: AtomicUsize,
+    /// In-flight count per image id; consulted only when
+    /// `policy.per_image_quota > 0` (entries are dropped at zero, so the
+    /// map stays as small as the set of currently-active images, and
+    /// admit/release stay O(1) however many images are live).
+    per_image: Mutex<HashMap<u64, usize>>,
 }
 
 impl AdmissionGate {
     /// Build a gate enforcing `policy`.
     pub fn new(policy: AdmissionPolicy) -> AdmissionGate {
-        AdmissionGate { policy, in_flight: AtomicUsize::new(0) }
+        AdmissionGate {
+            policy,
+            in_flight: AtomicUsize::new(0),
+            per_image: Mutex::new(HashMap::new()),
+        }
     }
 
-    /// Try to admit one request: `true` reserves an in-flight slot, `false`
-    /// means the pipeline is full and the request must be rejected.
-    pub fn try_admit(&self) -> bool {
+    /// Try to admit one request for `image_id`: [`Admit::Admitted`]
+    /// reserves an in-flight slot (global, plus the image's when the quota
+    /// is on); the two shed variants reserve nothing once they return.
+    ///
+    /// The per-image quota is checked **before** the global slot is
+    /// reserved: an over-quota hot image's rejected burst then never
+    /// transiently occupies global capacity, so it cannot spuriously
+    /// [`Admit::Full`]-shed other images — the transient reservation of a
+    /// doomed attempt (quota slot rolled back on a full global gate)
+    /// harms only the image that made it.
+    pub fn try_admit(&self, image_id: u64) -> Admit {
+        if self.policy.per_image_quota > 0 {
+            let mut per_image = self.per_image.lock().unwrap();
+            // A fresh entry starts at 0 < quota (quota >= 1 here), so
+            // this never parks a dead zero-count entry in the map.
+            let count = per_image.entry(image_id).or_insert(0);
+            if *count >= self.policy.per_image_quota {
+                return Admit::ImageQuota;
+            }
+            *count += 1;
+        }
         let mut cur = self.in_flight.load(Ordering::Relaxed);
         loop {
             if cur >= self.policy.max_in_flight {
-                return false;
+                // Roll back this image's reservation: the request was
+                // shed by the global bound, not admitted.
+                if self.policy.per_image_quota > 0 {
+                    self.release_image(image_id);
+                }
+                return Admit::Full;
             }
             match self.in_flight.compare_exchange_weak(
                 cur,
@@ -57,20 +117,43 @@ impl AdmissionGate {
                 Ordering::Relaxed,
                 Ordering::Relaxed,
             ) {
-                Ok(_) => return true,
+                Ok(_) => return Admit::Admitted,
                 Err(now) => cur = now,
             }
         }
     }
 
-    /// Release one admitted request (called exactly once per response).
-    pub fn release(&self) {
+    /// Drop one reservation from `image_id`'s quota count (entries are
+    /// removed at zero so the map tracks only live images).
+    fn release_image(&self, image_id: u64) {
+        let mut per_image = self.per_image.lock().unwrap();
+        let drained = per_image.get_mut(&image_id).map(|count| {
+            *count -= 1;
+            *count == 0
+        });
+        if drained == Some(true) {
+            per_image.remove(&image_id);
+        }
+    }
+
+    /// Release one admitted request for `image_id` (called exactly once
+    /// per response).
+    pub fn release(&self, image_id: u64) {
+        if self.policy.per_image_quota > 0 {
+            self.release_image(image_id);
+        }
         self.in_flight.fetch_sub(1, Ordering::Relaxed);
     }
 
     /// Requests currently admitted and not yet responded to.
     pub fn in_flight(&self) -> usize {
         self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// In-flight requests currently held by `image_id` (0 when the quota
+    /// is disabled — counts are only tracked while it is on).
+    pub fn image_in_flight(&self, image_id: u64) -> usize {
+        self.per_image.lock().unwrap().get(&image_id).copied().unwrap_or(0)
     }
 
     /// The policy this gate enforces.
@@ -83,43 +166,112 @@ impl AdmissionGate {
 mod tests {
     use super::*;
 
+    fn gate(max_in_flight: usize) -> AdmissionGate {
+        AdmissionGate::new(AdmissionPolicy { max_in_flight, per_image_quota: 0 })
+    }
+
     #[test]
     fn admits_up_to_the_bound_then_rejects() {
-        let gate = AdmissionGate::new(AdmissionPolicy { max_in_flight: 3 });
-        assert!(gate.try_admit());
-        assert!(gate.try_admit());
-        assert!(gate.try_admit());
+        let gate = gate(3);
+        assert_eq!(gate.try_admit(1), Admit::Admitted);
+        assert_eq!(gate.try_admit(1), Admit::Admitted);
+        assert_eq!(gate.try_admit(2), Admit::Admitted);
         assert_eq!(gate.in_flight(), 3);
-        assert!(!gate.try_admit(), "fourth request must be shed");
+        assert_eq!(gate.try_admit(3), Admit::Full, "fourth request must be shed");
         assert_eq!(gate.in_flight(), 3, "a rejected request holds no slot");
     }
 
     #[test]
     fn release_reopens_the_gate() {
-        let gate = AdmissionGate::new(AdmissionPolicy { max_in_flight: 1 });
-        assert!(gate.try_admit());
-        assert!(!gate.try_admit());
-        gate.release();
+        let gate = gate(1);
+        assert_eq!(gate.try_admit(1), Admit::Admitted);
+        assert_eq!(gate.try_admit(1), Admit::Full);
+        gate.release(1);
         assert_eq!(gate.in_flight(), 0);
-        assert!(gate.try_admit());
+        assert_eq!(gate.try_admit(1), Admit::Admitted);
     }
 
     #[test]
     fn zero_depth_rejects_everything() {
-        let gate = AdmissionGate::new(AdmissionPolicy { max_in_flight: 0 });
-        assert!(!gate.try_admit());
+        let gate = gate(0);
+        assert_eq!(gate.try_admit(1), Admit::Full);
         assert_eq!(gate.in_flight(), 0);
+    }
+
+    #[test]
+    fn per_image_quota_sheds_the_hot_image_only() {
+        let gate = AdmissionGate::new(AdmissionPolicy {
+            max_in_flight: 10,
+            per_image_quota: 2,
+        });
+        assert_eq!(gate.try_admit(7), Admit::Admitted);
+        assert_eq!(gate.try_admit(7), Admit::Admitted);
+        // The hot image is at quota; the global gate still has room.
+        assert_eq!(gate.try_admit(7), Admit::ImageQuota);
+        assert_eq!(gate.in_flight(), 2, "a quota shed returns its global slot");
+        assert_eq!(gate.image_in_flight(7), 2);
+        // Other images are unaffected — that is the fairness point.
+        assert_eq!(gate.try_admit(8), Admit::Admitted);
+        assert_eq!(gate.image_in_flight(8), 1);
+        // Releasing the hot image reopens its quota.
+        gate.release(7);
+        assert_eq!(gate.try_admit(7), Admit::Admitted);
+        assert_eq!(gate.in_flight(), 3);
+    }
+
+    #[test]
+    fn quota_releases_drop_empty_image_entries() {
+        let gate = AdmissionGate::new(AdmissionPolicy {
+            max_in_flight: 4,
+            per_image_quota: 4,
+        });
+        assert_eq!(gate.try_admit(1), Admit::Admitted);
+        gate.release(1);
+        assert_eq!(gate.image_in_flight(1), 0);
+        assert_eq!(gate.in_flight(), 0);
+        assert!(gate.per_image.lock().unwrap().is_empty(), "zero counts are dropped");
+    }
+
+    #[test]
+    fn global_bound_still_wins_over_quota_headroom() {
+        let gate = AdmissionGate::new(AdmissionPolicy {
+            max_in_flight: 1,
+            per_image_quota: 5,
+        });
+        assert_eq!(gate.try_admit(1), Admit::Admitted);
+        assert_eq!(gate.try_admit(2), Admit::Full, "quota headroom cannot bypass the bound");
+        // The Full shed rolled its per-image reservation back.
+        assert_eq!(gate.image_in_flight(2), 0, "a Full shed holds no quota slot");
+    }
+
+    #[test]
+    fn over_quota_bursts_never_occupy_global_slots() {
+        // The fairness point of quota-before-global ordering: a hot image
+        // hammering past its quota is shed without ever touching the
+        // global counter, so other images see full capacity.
+        let gate = AdmissionGate::new(AdmissionPolicy {
+            max_in_flight: 2,
+            per_image_quota: 1,
+        });
+        assert_eq!(gate.try_admit(7), Admit::Admitted);
+        for _ in 0..50 {
+            assert_eq!(gate.try_admit(7), Admit::ImageQuota);
+            assert_eq!(gate.in_flight(), 1, "quota sheds must not touch the global gate");
+        }
+        assert_eq!(gate.try_admit(8), Admit::Admitted, "other images keep their capacity");
     }
 
     #[test]
     fn concurrent_admission_never_exceeds_bound() {
         use std::sync::Arc;
-        let gate = Arc::new(AdmissionGate::new(AdmissionPolicy { max_in_flight: 8 }));
+        let gate = Arc::new(gate(8));
         let admitted: usize = std::thread::scope(|scope| {
             (0..4)
-                .map(|_| {
+                .map(|t| {
                     let gate = Arc::clone(&gate);
-                    scope.spawn(move || (0..10).filter(|_| gate.try_admit()).count())
+                    scope.spawn(move || {
+                        (0..10).filter(|_| gate.try_admit(t) == Admit::Admitted).count()
+                    })
                 })
                 .collect::<Vec<_>>()
                 .into_iter()
@@ -128,5 +280,29 @@ mod tests {
         });
         assert_eq!(admitted, 8, "exactly max_in_flight across all threads");
         assert_eq!(gate.in_flight(), 8);
+    }
+
+    #[test]
+    fn concurrent_quota_never_exceeds_per_image_bound() {
+        use std::sync::Arc;
+        let gate = Arc::new(AdmissionGate::new(AdmissionPolicy {
+            max_in_flight: 64,
+            per_image_quota: 3,
+        }));
+        let admitted: usize = std::thread::scope(|scope| {
+            (0..4)
+                .map(|_| {
+                    let gate = Arc::clone(&gate);
+                    scope.spawn(move || {
+                        (0..8).filter(|_| gate.try_admit(42) == Admit::Admitted).count()
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .sum()
+        });
+        assert_eq!(admitted, 3, "quota holds under contention");
+        assert_eq!(gate.image_in_flight(42), 3);
     }
 }

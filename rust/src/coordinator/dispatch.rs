@@ -3,9 +3,14 @@
 //!
 //! Workers are std::thread; the backend factory is called once per worker
 //! thread. Handle resolution goes through the shared residency stage
-//! ([`super::residency`]) first; backends whose handles cannot cross
-//! threads (the real PJRT engine) fall back to a per-worker thread-local
-//! MRU cache — the same residency discipline, scoped to one thread.
+//! ([`super::residency`]) first: resolved handles are plain
+//! `Arc<dyn PreparedSpmm + Send + Sync>` clones, and execution goes
+//! through `&self` — W workers serving one hot matrix run W executes
+//! *concurrently* (the engines draw per-call scratch from internal
+//! pools), with no per-matrix lock anywhere on the path. Backends whose
+//! handles cannot cross threads (the real PJRT engine) fall back to a
+//! per-worker thread-local MRU cache — the same residency discipline,
+//! scoped to one thread.
 //!
 //! Dispatch also owns the **thread-budget composition**: the machine's
 //! cores are divided across the worker threads
@@ -17,8 +22,13 @@
 //!
 //! Per-stage timings measured here (prepare wait, execute) join the
 //! batcher's timestamps (queue wait, batch wait) in each response's
-//! [`RequestTiming`], giving the pipeline its end-to-end latency
-//! breakdown.
+//! [`RequestTiming`]. With the per-matrix mutex gone, the `exec` stage is
+//! *pure engine time* — the lock wait that used to be folded into it no
+//! longer exists, so a worker-side stall can only appear as queue/batch
+//! wait (upstream of pickup) or as prepare (residency resolution). The
+//! [`ConcurrencyGauge`] threaded through the workers records how many
+//! executions actually overlap ([`super::metrics::Summary`]'s
+//! `exec_concurrency_peak`), making the lock removal observable.
 
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
@@ -27,7 +37,7 @@ use std::time::Instant;
 
 use super::admission::AdmissionGate;
 use super::batcher::MergedJob;
-use super::metrics::{Recorder, RequestTiming};
+use super::metrics::{ConcurrencyGauge, Recorder, RequestTiming};
 use super::residency::{Resolution, ResidencyManager, PREPARED_CACHE_ENTRIES};
 use super::server::SpmmResponse;
 use crate::arch::simulator::problem_flops;
@@ -44,6 +54,7 @@ pub fn per_worker_budget(n_workers: usize) -> usize {
 
 /// Spawn the worker pool: each worker constructs its own backend from the
 /// factory and loops on the shared job channel until it disconnects.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn spawn_workers<F>(
     n_workers: usize,
     factory: Arc<F>,
@@ -51,6 +62,7 @@ pub(crate) fn spawn_workers<F>(
     recorder: Arc<Mutex<Recorder>>,
     residency: Arc<ResidencyManager>,
     gate: Arc<AdmissionGate>,
+    exec_gauge: Arc<ConcurrencyGauge>,
 ) -> Vec<JoinHandle<()>>
 where
     F: Fn(usize) -> Box<dyn SpmmBackend> + Send + Sync + 'static,
@@ -62,9 +74,10 @@ where
             let residency = Arc::clone(&residency);
             let gate = Arc::clone(&gate);
             let factory = Arc::clone(&factory);
+            let exec_gauge = Arc::clone(&exec_gauge);
             std::thread::spawn(move || {
                 let exec = factory(w);
-                worker_loop(&*exec, job_rx, recorder, residency, gate);
+                worker_loop(&*exec, job_rx, recorder, residency, gate, exec_gauge);
             })
         })
         .collect()
@@ -73,7 +86,7 @@ where
 /// Run one merged job on a resolved handle: the routed path lets a sharded
 /// handle skip shards owning no non-zeros. Returns shards skipped.
 fn run_job(
-    handle: &mut dyn PreparedSpmm,
+    handle: &dyn PreparedSpmm,
     job: &mut MergedJob,
 ) -> Result<usize, crate::backend::BackendError> {
     if job.routed {
@@ -91,6 +104,7 @@ fn worker_loop(
     recorder: Arc<Mutex<Recorder>>,
     residency: Arc<ResidencyManager>,
     gate: Arc<AdmissionGate>,
+    exec_gauge: Arc<ConcurrencyGauge>,
 ) {
     let backend_name = backend.name();
     // Fallback cache for thread-local handles, MRU-first, keyed on
@@ -113,16 +127,19 @@ fn worker_loop(
         let (prepare_dur, exec_dur, error) = match resolution {
             Resolution::Shared(shared) => {
                 let prepare_dur = t_prepare.elapsed();
-                // Waiting for the shared per-matrix handle is engine
-                // contention, not prepare work: it counts toward the
-                // execute stage, keeping "prepare ~0 on a cache hit" true.
+                // Execute straight through the shared handle — `&self`,
+                // no lock, concurrent with every other worker on the same
+                // matrix. The gauge counts overlapping executions so the
+                // summary can report the realized concurrency.
                 let t_exec = Instant::now();
-                let mut handle = shared.lock().unwrap();
-                let r = run_job(&mut **handle, &mut job);
+                let r = {
+                    let _in_exec = exec_gauge.enter();
+                    run_job(&*shared, &mut job)
+                };
                 let error = match r {
                     Ok(sk) => {
                         skipped = sk;
-                        stats = handle.shard_stats();
+                        stats = shared.shard_stats();
                         None
                     }
                     Err(e) => Some(e.to_string()),
@@ -161,8 +178,12 @@ fn worker_loop(
                 let t_exec = Instant::now();
                 let error = match resolved {
                     Ok(()) => {
-                        let handle = &mut *local[0].1;
-                        match run_job(handle, &mut job) {
+                        let handle = &*local[0].1;
+                        let r = {
+                            let _in_exec = exec_gauge.enter();
+                            run_job(handle, &mut job)
+                        };
+                        match r {
                             Ok(sk) => {
                                 skipped = sk;
                                 stats = handle.shard_stats();
@@ -212,7 +233,7 @@ fn worker_loop(
             };
             recorder.lock().unwrap().record(timing);
             let _ = seg.respond.send(SpmmResponse { c, timing, error: error.clone() });
-            gate.release();
+            gate.release(job.image.id);
         }
         // Feed the re-shard-on-skew window last: a rebuild it triggers is
         // paid here, after this job's callers have their answers.

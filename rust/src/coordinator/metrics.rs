@@ -1,14 +1,61 @@
 //! Serving metrics: per-request latency with a **per-stage breakdown**
 //! (queue wait → batch wait → prepare → execute, matching the pipeline's
 //! four stages), prepare amortization (shared prepared-handle cache hits
-//! vs. misses, byte-budget evictions), admission rejections, shard-aware
-//! routing counts, re-shard-on-skew rebuilds, and shard-level load
-//! statistics — rolled up into [`Summary`].
+//! vs. misses, byte-budget evictions), admission rejections (total and
+//! per-image-quota), shard-aware routing counts, re-shard-on-skew
+//! rebuilds, execution concurrency (the [`ConcurrencyGauge`] high-water
+//! mark proving shared handles really execute in parallel), and
+//! shard-level load statistics — rolled up into [`Summary`].
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
 
 use crate::backend::PrepareCost;
 use crate::shard::ShardRunStats;
+
+/// Counts overlapping executions across the worker pool: `enter` bumps the
+/// live count (returning an RAII guard that drops it) and folds it into a
+/// monotonic high-water mark. Lock-free — two atomics — so the gauge adds
+/// nothing measurable to the execute path it instruments.
+#[derive(Debug, Default)]
+pub struct ConcurrencyGauge {
+    current: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl ConcurrencyGauge {
+    /// A gauge at zero.
+    pub fn new() -> ConcurrencyGauge {
+        ConcurrencyGauge::default()
+    }
+
+    /// Mark one execution as live until the returned guard drops.
+    pub fn enter(&self) -> ConcurrencyGuard<'_> {
+        let now = self.current.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+        ConcurrencyGuard(self)
+    }
+
+    /// Executions live right now.
+    pub fn current(&self) -> usize {
+        self.current.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of simultaneously live executions.
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII token from [`ConcurrencyGauge::enter`]; dropping it ends the
+/// execution it marked live.
+pub struct ConcurrencyGuard<'g>(&'g ConcurrencyGauge);
+
+impl Drop for ConcurrencyGuard<'_> {
+    fn drop(&mut self) {
+        self.0.current.fetch_sub(1, Ordering::Relaxed);
+    }
+}
 
 /// One served request's timing, decomposed by pipeline stage.
 #[derive(Clone, Copy, Debug)]
@@ -20,10 +67,13 @@ pub struct RequestTiming {
     /// merged job up (window wait + dispatch queue).
     pub batch: Duration,
     /// Stage 4: residency resolution — a cache hit is ~0, a miss pays the
-    /// backend's prepare.
+    /// backend's prepare (waiting out another worker's in-flight prepare
+    /// of the same image counts here too).
     pub prepare: Duration,
-    /// Executor time (for shared residencies this includes waiting for
-    /// the per-matrix handle — engine contention, not prepare work).
+    /// Pure executor time. Shared handles execute through `&self` with no
+    /// per-matrix lock, so nothing but the engine is ever folded in here;
+    /// any worker-side stall upstream of execution shows up as queue or
+    /// batch wait instead.
     pub exec: Duration,
     /// Problem size in FLOP.
     pub flops: u64,
@@ -46,6 +96,9 @@ pub struct Recorder {
     batches: usize,
     batched_requests: usize,
     rejected: usize,
+    /// Per-image-quota sheds, keyed by image id (insertion order).
+    image_sheds: Vec<(u64, usize)>,
+    exec_concurrency_peak: usize,
     prepares: usize,
     prepare_hits: usize,
     prepare_wall_s: f64,
@@ -77,6 +130,23 @@ impl Recorder {
     /// Record one request shed by the admission gate (never queued).
     pub fn record_reject(&mut self) {
         self.rejected += 1;
+    }
+
+    /// Record one request shed by the *per-image* quota (also counted in
+    /// [`Recorder::record_reject`] by the caller), attributed to its image
+    /// so the summary can show which matrix was hogging the gate.
+    pub fn record_image_shed(&mut self, image_id: u64) {
+        match self.image_sheds.iter_mut().find(|(id, _)| *id == image_id) {
+            Some((_, count)) => *count += 1,
+            None => self.image_sheds.push((image_id, 1)),
+        }
+    }
+
+    /// Fold an observed execution-concurrency high-water mark into the
+    /// summary (monotonic max; fed from the dispatch stage's
+    /// [`ConcurrencyGauge`]).
+    pub fn record_exec_concurrency(&mut self, peak: usize) {
+        self.exec_concurrency_peak = self.exec_concurrency_peak.max(peak);
     }
 
     /// Record one matrix becoming resident (a prepared-handle cache miss).
@@ -160,6 +230,12 @@ impl Recorder {
                 self.batched_requests as f64 / self.batches as f64
             },
             rejected: self.rejected,
+            image_sheds: {
+                let mut sheds = self.image_sheds.clone();
+                sheds.sort_by_key(|&(id, _)| id);
+                sheds
+            },
+            exec_concurrency_peak: self.exec_concurrency_peak,
             p50_s: pct(0.50),
             p95_s: pct(0.95),
             p99_s: pct(0.99),
@@ -220,6 +296,15 @@ pub struct Summary {
     pub mean_batch: f64,
     /// Requests shed by the admission gate (not counted in `requests`).
     pub rejected: usize,
+    /// Of `rejected`, sheds caused by the per-image in-flight quota,
+    /// attributed to the image that was over quota — (image id, count),
+    /// sorted by id. Empty when the quota is off or never tripped.
+    pub image_sheds: Vec<(u64, usize)>,
+    /// High-water mark of simultaneously executing requests across the
+    /// worker pool. With shared `&self` handles this reaches the worker
+    /// count on a single-hot-matrix workload — the observable proof that
+    /// the per-matrix lock is gone (1 means executions never overlapped).
+    pub exec_concurrency_peak: usize,
     /// Median end-to-end latency (s).
     pub p50_s: f64,
     /// 95th percentile latency (s).
@@ -366,10 +451,41 @@ mod tests {
         assert_eq!(s.stage_queue_s, 0.0);
         assert_eq!(s.stage_exec_s, 0.0);
         assert_eq!(s.rejected, 0);
+        assert!(s.image_sheds.is_empty());
+        assert_eq!(s.exec_concurrency_peak, 0);
         assert_eq!(s.routed_jobs, 0);
         assert_eq!(s.reshards, 0);
         assert_eq!(s.last_reshard, None);
         assert_eq!(s.evictions, 0);
+    }
+
+    #[test]
+    fn concurrency_gauge_tracks_overlap_and_peak() {
+        let g = ConcurrencyGauge::new();
+        assert_eq!((g.current(), g.peak()), (0, 0));
+        {
+            let _a = g.enter();
+            let _b = g.enter();
+            assert_eq!((g.current(), g.peak()), (2, 2));
+        }
+        assert_eq!(g.current(), 0, "guards release on drop");
+        assert_eq!(g.peak(), 2, "the high-water mark is monotonic");
+        let _c = g.enter();
+        assert_eq!((g.current(), g.peak()), (1, 2));
+    }
+
+    #[test]
+    fn image_sheds_and_exec_peak_aggregate() {
+        let mut r = Recorder::default();
+        r.record_image_shed(7);
+        r.record_image_shed(3);
+        r.record_image_shed(7);
+        r.record_exec_concurrency(2);
+        r.record_exec_concurrency(5);
+        r.record_exec_concurrency(4);
+        let s = r.summary();
+        assert_eq!(s.image_sheds, vec![(3, 1), (7, 2)], "sorted by image id");
+        assert_eq!(s.exec_concurrency_peak, 5, "peak is a monotonic max");
     }
 
     #[test]

@@ -10,28 +10,37 @@
 //!  ┌─────────────┐   ┌─────────────┐   ┌──────────────┐        │
 //!  │ 1 admission │──▶│ 2 batcher   │──▶│ 3 dispatch   │────────┘
 //!  │  in-flight  │   │  merge      │   │  worker pool │
-//!  │  gate, load │   │  window,    │   │  thread      │   ┌──────────────┐
-//!  │  shedding   │   │  shard-     │   │  budgets,    │◀─▶│ 4 residency  │
-//!  └─────────────┘   │  aware      │   │  stage       │   │  byte-sized  │
-//!                    │  routing    │   │  timings     │   │  shared pool │
-//!                    └─────────────┘   └──────────────┘   │  re-shard on │
+//!  │  gate, per- │   │  window,    │   │  thread      │   ┌──────────────┐
+//!  │  image      │   │  shard-     │   │  budgets,    │◀─▶│ 4 residency  │
+//!  │  quota,     │   │  aware      │   │  stage       │   │  byte-sized  │
+//!  │  shedding   │   │  routing    │   │  timings,    │   │  cache of    │
+//!  └─────────────┘   └─────────────┘   │  concurrent  │   │  shared Arc< │
+//!                                      │  &self exec  │   │  PreparedSpmm│
+//!                                      └──────────────┘   │  > handles,  │
+//!                                                         │  re-shard on │
 //!                                                         │  skew        │
 //!                                                         └──────────────┘
 //! ```
 //!
 //! * [`admission`] — an in-flight gate sheds load at the front door
-//!   instead of letting queues grow without bound.
+//!   instead of letting queues grow without bound; an optional per-image
+//!   quota keeps one hot matrix from starving the rest.
 //! * [`batcher`] — same-image requests merge by column concatenation
 //!   within a bounded window (the paper's N/N0 amortization, applied
 //!   across requests); small merged jobs are marked for shard-aware
 //!   routing so a sharded handle skips shards owning no non-zeros.
 //! * [`dispatch`] — the worker pool; composes thread budgets
-//!   (workers × shards × engine threads ≤ cores) and measures the
-//!   per-stage latency breakdown reported in [`metrics::Summary`].
+//!   (workers × shards × engine threads ≤ cores), executes through shared
+//!   `Arc<dyn PreparedSpmm>` handles *concurrently* (`&self` execution —
+//!   no per-matrix lock, W workers on one hot matrix run W executes at
+//!   once), and measures the per-stage latency breakdown plus the
+//!   execution-concurrency high-water mark reported in
+//!   [`metrics::Summary`].
 //! * [`residency`] — prepared handles cached by resident **bytes** and
-//!   shared read-only across workers via `Arc`; rolling shard-imbalance
-//!   triggers re-shard-on-skew (drop + re-prepare at a smaller S) without
-//!   callers noticing.
+//!   cloned out to workers as plain `Arc<dyn PreparedSpmm + Send + Sync>`
+//!   (the only locks left guard the cache map and the engines' scratch
+//!   pools); rolling shard-imbalance triggers re-shard-on-skew (drop +
+//!   re-prepare at a smaller S) without callers noticing.
 //!
 //! The public surface is the [`server::Server`] facade: `start`,
 //! `start_backend`, `register`, `submit`, `call`, `shutdown` — plus

@@ -6,11 +6,16 @@
 //! placement, not compute, decides throughput. This stage owns that
 //! decision for the serving pipeline:
 //!
-//! * **Shared handles** — a prepared handle is built once (through the
-//!   backend's `prepare_send`) and shared by every worker via
-//!   `Arc<Mutex<..>>`, instead of one duplicate residency per worker.
-//!   Backends whose handles cannot cross threads (the real PJRT engine)
-//!   fall back to per-worker thread-local caches
+//! * **Shared handles, lock-free execution** — a prepared handle is built
+//!   once (through the backend's `prepare_send`) and shared by every
+//!   worker as a plain `Arc<dyn PreparedSpmm + Send + Sync>`, instead of
+//!   one duplicate residency per worker. Because `execute` takes `&self`
+//!   (per-call scratch comes from the handle's internal pool), W workers
+//!   hammering one hot matrix run W executions *concurrently* — no
+//!   per-matrix mutex, no serialization. The only locks left in this
+//!   stage guard the cache map itself and the engines' tiny scratch-pool
+//!   checkouts. Backends whose handles cannot cross threads (the real
+//!   PJRT engine) fall back to per-worker thread-local caches
 //!   ([`Resolution::ThreadLocal`]).
 //! * **Byte-sized eviction** — the cache budget is
 //!   [`ResidencyPolicy::max_resident_bytes`] of actual
@@ -94,14 +99,13 @@ pub fn reshard_spec(inner_spec: &str, new_s: usize, budget: usize) -> String {
     backend::apply_thread_budget(&format!("sharded:{new_s}:{inner_spec}"), budget)
 }
 
-/// A prepared handle shared across workers. Execution serializes on the
-/// per-matrix mutex; the engine's own internal parallelism (budgeted per
-/// worker) provides the concurrency within one matrix. Trade-off: with W
-/// workers all hammering a *single* matrix, at most one execute runs at a
-/// time on a 1/W core share — the memory win (one residency instead of W
-/// duplicates) is bought with serialized execution on that pathological
-/// workload; distinct matrices still execute concurrently across workers.
-pub type SharedHandle = Arc<Mutex<Box<dyn PreparedSpmm + Send>>>;
+/// A prepared handle shared across workers. Execution goes straight
+/// through `&self` — workers clone the `Arc` and execute concurrently, so
+/// W workers hammering a *single* hot matrix get W simultaneous
+/// executions (each on its own pooled scratch) instead of serializing on
+/// a per-matrix mutex. One residency, full concurrency: the memory win no
+/// longer costs the single-hot-matrix workload anything.
+pub type SharedHandle = Arc<dyn PreparedSpmm + Send + Sync>;
 
 /// Outcome of a residency lookup.
 pub enum Resolution {
@@ -266,7 +270,7 @@ impl ResidencyManager {
         let cost = handle.prepare_cost();
         recorder.lock().unwrap().record_prepare(&cost);
         let shards = handle.resident_shards();
-        let shared: SharedHandle = Arc::new(Mutex::new(handle));
+        let shared: SharedHandle = Arc::from(handle);
         st.entries.insert(
             0,
             Entry {
@@ -345,7 +349,7 @@ impl ResidencyManager {
         e.imbalance_sum = 0.0;
         // Replacing the Arc retires the old pool: workers mid-execute on
         // it finish safely on their own clones.
-        e.handle = Arc::new(Mutex::new(handle));
+        e.handle = Arc::from(handle);
         evict_to_budget(&self.policy, st, recorder);
     }
 
@@ -494,7 +498,7 @@ mod tests {
             fn prepare_send(
                 &self,
                 _image: Arc<ScheduledMatrix>,
-            ) -> Result<Box<dyn PreparedSpmm + Send>, BackendError> {
+            ) -> Result<Box<dyn PreparedSpmm + Send + Sync>, BackendError> {
                 self.0.fetch_add(1, Ordering::Relaxed);
                 Err(BackendError::Unavailable("thread-local handles".into()))
             }

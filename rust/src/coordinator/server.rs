@@ -17,10 +17,10 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::admission::{AdmissionGate, AdmissionPolicy};
+use super::admission::{Admit, AdmissionGate, AdmissionPolicy};
 use super::batcher::{batcher_loop, Msg};
 use super::dispatch;
-use super::metrics::{Recorder, RequestTiming, Summary};
+use super::metrics::{ConcurrencyGauge, Recorder, RequestTiming, Summary};
 use super::residency::{ReshardContext, ReshardPolicy, ResidencyManager, ResidencyPolicy};
 use crate::backend::{self, BackendError, SpmmBackend};
 use crate::sched::ScheduledMatrix;
@@ -90,6 +90,7 @@ pub struct Server {
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     recorder: Arc<Mutex<Recorder>>,
+    exec_gauge: Arc<ConcurrencyGauge>,
     next_image_id: AtomicU64,
 }
 
@@ -173,6 +174,7 @@ impl Server {
         let job_rx = Arc::new(Mutex::new(job_rx));
         let recorder = Arc::new(Mutex::new(Recorder::default()));
         let gate = Arc::new(AdmissionGate::new(config.admission));
+        let exec_gauge = Arc::new(ConcurrencyGauge::new());
         let residency = Arc::new(ResidencyManager::new(
             config.residency,
             config.reshard,
@@ -191,6 +193,7 @@ impl Server {
             Arc::clone(&recorder),
             residency,
             Arc::clone(&gate),
+            Arc::clone(&exec_gauge),
         );
 
         Server {
@@ -199,6 +202,7 @@ impl Server {
             batcher: Some(batcher),
             workers,
             recorder,
+            exec_gauge,
             next_image_id: AtomicU64::new(1),
         }
     }
@@ -233,18 +237,37 @@ impl Server {
             });
             return rx;
         }
-        if !self.gate.try_admit() {
-            self.recorder.lock().unwrap().record_reject();
-            let _ = tx.send(SpmmResponse {
-                c: Vec::new(),
-                timing: Self::rejected_timing(),
-                error: Some(format!(
-                    "admission rejected: {} requests in flight (max {})",
-                    self.gate.in_flight(),
-                    self.gate.policy().max_in_flight
-                )),
-            });
-            return rx;
+        match self.gate.try_admit(req.image.id) {
+            Admit::Admitted => {}
+            Admit::Full => {
+                self.recorder.lock().unwrap().record_reject();
+                let _ = tx.send(SpmmResponse {
+                    c: Vec::new(),
+                    timing: Self::rejected_timing(),
+                    error: Some(format!(
+                        "admission rejected: {} requests in flight (max {})",
+                        self.gate.in_flight(),
+                        self.gate.policy().max_in_flight
+                    )),
+                });
+                return rx;
+            }
+            Admit::ImageQuota => {
+                let mut recorder = self.recorder.lock().unwrap();
+                recorder.record_reject();
+                recorder.record_image_shed(req.image.id);
+                drop(recorder);
+                let _ = tx.send(SpmmResponse {
+                    c: Vec::new(),
+                    timing: Self::rejected_timing(),
+                    error: Some(format!(
+                        "admission rejected: image {} at its per-image quota ({})",
+                        req.image.id,
+                        self.gate.policy().per_image_quota
+                    )),
+                });
+                return rx;
+            }
         }
         self.tx
             .send(Msg::Request(req, tx, Instant::now()))
@@ -278,8 +301,10 @@ impl Server {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        let summary = self.recorder.lock().unwrap().summary();
-        summary
+        // All workers have joined: the gauge's high-water mark is final.
+        let mut recorder = self.recorder.lock().unwrap();
+        recorder.record_exec_concurrency(self.exec_gauge.peak());
+        recorder.summary()
     }
 }
 
@@ -310,7 +335,7 @@ mod tests {
         }
 
         fn execute(
-            &mut self,
+            &self,
             _b: &[f32],
             _c: &mut [f32],
             _n: usize,
@@ -471,7 +496,7 @@ mod tests {
     fn admission_gate_sheds_load_with_error_responses() {
         let (_, sm) = make_image(46);
         let config = PipelineConfig {
-            admission: AdmissionPolicy { max_in_flight: 0 },
+            admission: AdmissionPolicy { max_in_flight: 0, ..AdmissionPolicy::default() },
             ..PipelineConfig::default()
         };
         let server =
@@ -491,6 +516,85 @@ mod tests {
         let summary = server.shutdown();
         assert_eq!(summary.rejected, 1);
         assert_eq!(summary.requests, 0, "rejected requests are never served");
+    }
+
+    #[test]
+    fn per_image_quota_sheds_and_attributes_to_the_image() {
+        // Quota 1, one image, a burst of back-to-back submits: the first
+        // admitted request holds the image's only slot at least for the
+        // batcher's 2 ms merge window, so the burst (microseconds) trips
+        // the quota while the global gate still has room.
+        let (coo, sm) = make_image(61);
+        let config = PipelineConfig {
+            admission: AdmissionPolicy { max_in_flight: 64, per_image_quota: 1 },
+            ..PipelineConfig::default()
+        };
+        let server = Server::start_with(1, config, |_| Box::new(FunctionalBackend));
+        let handle = server.register(sm);
+        let n = 2;
+        let mk = || SpmmRequest {
+            image: handle.clone(),
+            b: vec![1.0; coo.k * n],
+            c: vec![0.0; coo.m * n],
+            n,
+            alpha: 1.0,
+            beta: 0.0,
+        };
+        let rxs: Vec<_> = (0..8).map(|_| server.submit(mk())).collect();
+        let mut served = 0usize;
+        let mut shed = 0usize;
+        for rx in rxs {
+            match rx.recv().unwrap().error {
+                None => served += 1,
+                Some(e) => {
+                    assert!(e.contains("per-image quota"), "{e}");
+                    shed += 1;
+                }
+            }
+        }
+        assert!(shed >= 1, "a burst over quota 1 must shed");
+        assert!(served >= 1, "the quota holder itself is served");
+        // After the pipeline drained, the image admits again.
+        let resp = server.call(mk());
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        let summary = server.shutdown();
+        assert_eq!(summary.rejected, shed);
+        assert_eq!(summary.image_sheds, vec![(handle.id, shed)]);
+        assert_eq!(summary.requests, served + 1);
+    }
+
+    #[test]
+    fn summary_reports_exec_concurrency_peak() {
+        let (coo, sm) = make_image(62);
+        let server = start_functional(4);
+        let handle = server.register(sm);
+        let n = 2;
+        let rxs: Vec<_> = (0..32)
+            .map(|_| {
+                server.submit(SpmmRequest {
+                    image: handle.clone(),
+                    b: vec![1.0; coo.k * n],
+                    c: vec![0.0; coo.m * n],
+                    n,
+                    alpha: 1.0,
+                    beta: 0.0,
+                })
+            })
+            .collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().error.is_none());
+        }
+        let summary = server.shutdown();
+        assert_eq!(summary.requests, 32);
+        // Every request executed, so at least one execution was observed
+        // live; with 4 workers and one shared &self handle the peak may
+        // reach 4, but timing makes >1 unassertable here (the dedicated
+        // stress test covers true overlap).
+        assert!(
+            (1..=4).contains(&summary.exec_concurrency_peak),
+            "peak = {}",
+            summary.exec_concurrency_peak
+        );
     }
 
     #[test]

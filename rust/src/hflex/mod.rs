@@ -19,7 +19,7 @@
 //!   load with [`HFlexError::WrongConfiguration`] — the analogue of needing
 //!   a new synthesis/place/route run, which HFlex exists to avoid.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::arch::{simulate, AcceleratorConfig, SimReport};
 use crate::backend::{self, BackendError, PrepareCost, PreparedSpmm, SpmmBackend};
@@ -115,12 +115,22 @@ pub struct InvokeReport {
 /// backend's matrix-resident [`PreparedSpmm`] handle. Invocations against
 /// it never re-submit or re-shard the image — the HFlex serving shape.
 ///
-/// `Send + Sync` (executions serialize through an internal lock, matching
-/// one resident copy of A), so loaded matrices can be shared across
-/// request threads.
+/// `Send + Sync` with **lock-free invocation**: the prepared handle
+/// executes through `&self` (per-call scratch comes from its internal
+/// pool), so request threads sharing one loaded matrix invoke
+/// concurrently — one resident copy of A, W simultaneous streams against
+/// it, exactly the paper's one-A-many-B serving shape.
+///
+/// Thread composition is the caller's to budget on this direct API: W
+/// concurrent invocations each use the backend's full thread count, so an
+/// auto-threaded engine (`native` = all cores) driven from W request
+/// threads schedules up to W × cores workers. Synthesize with an explicit
+/// share (e.g. `backend::create("native:2")`) when fanning in requests —
+/// the serving coordinator does this automatically via its per-worker
+/// core budget.
 pub struct LoadedMatrix {
     image: Arc<ScheduledMatrix>,
-    prepared: Mutex<Box<dyn PreparedSpmm + Send>>,
+    prepared: Box<dyn PreparedSpmm + Send + Sync>,
     cost: PrepareCost,
 }
 
@@ -148,7 +158,7 @@ impl LoadedMatrix {
 
     /// Name of the backend holding the residency.
     pub fn backend_name(&self) -> &'static str {
-        self.prepared.lock().unwrap().backend_name()
+        self.prepared.backend_name()
     }
 }
 
@@ -236,7 +246,7 @@ impl HFlexAccelerator {
         }
         let prepared = self.backend.prepare_send(Arc::clone(&image))?;
         let cost = prepared.prepare_cost();
-        Ok(LoadedMatrix { image, prepared: Mutex::new(prepared), cost })
+        Ok(LoadedMatrix { image, prepared, cost })
     }
 
     /// Execute one SpMM against a loaded matrix: the functional result is
@@ -274,12 +284,11 @@ impl HFlexAccelerator {
                 sm.m * problem.n
             )));
         }
-        let backend_name = {
-            let mut prepared = problem.a.prepared.lock().unwrap();
-            let name = prepared.backend_name();
-            prepared.execute(problem.b, problem.c, problem.n, problem.alpha, problem.beta)?;
-            name
-        };
+        // Lock-free: the handle executes through &self, so concurrent
+        // invocations against one loaded matrix proceed in parallel.
+        let prepared = &problem.a.prepared;
+        let backend_name = prepared.backend_name();
+        prepared.execute(problem.b, problem.c, problem.n, problem.alpha, problem.beta)?;
         let sim = simulate(sm, &self.cfg, problem.n);
         Ok(InvokeReport { sim, backend: backend_name })
     }
@@ -450,10 +459,59 @@ mod tests {
     #[test]
     fn accelerator_and_loaded_matrix_are_send_and_sync() {
         // Shareable across request threads: the accelerator (stateless
-        // factory) and the loaded handle (internal lock).
+        // factory) and the loaded handle (&self execution over pooled
+        // scratch — no lock).
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<HFlexAccelerator>();
         assert_send_sync::<LoadedMatrix>();
+    }
+
+    #[test]
+    fn concurrent_invocations_share_one_loaded_matrix() {
+        // W request threads invoking one LoadedMatrix simultaneously must
+        // all match the serial result bitwise — the lock removal must not
+        // cost determinism.
+        let acc = accel();
+        let mut rng = Rng::new(51);
+        let a = gen::power_law_rows(100, 80, 1_200, 1.0, &mut rng);
+        let loaded = acc.load(&a).unwrap();
+        let n = 4;
+        let (b, c0) = problem_data(a.k, a.m, n, 52);
+        let mut serial = c0.clone();
+        acc.invoke(SpmmProblem {
+            a: &loaded,
+            b: &b,
+            c: &mut serial,
+            n,
+            alpha: 1.5,
+            beta: -0.5,
+        })
+        .unwrap();
+        let results: Vec<Vec<f32>> = std::thread::scope(|s| {
+            (0..4)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut c = c0.clone();
+                        acc.invoke(SpmmProblem {
+                            a: &loaded,
+                            b: &b,
+                            c: &mut c,
+                            n,
+                            alpha: 1.5,
+                            beta: -0.5,
+                        })
+                        .unwrap();
+                        c
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for c in &results {
+            assert_eq!(c, &serial, "concurrent invoke diverged from serial");
+        }
     }
 
     #[test]

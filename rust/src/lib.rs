@@ -32,10 +32,10 @@
 //! | [`arch`] | §3.1, §3.2, §3.5, §3.6.2 | cycle-level streaming simulator, functional simulator, resource model |
 //! | [`perfmodel`] | §3.6.1, §4.1 | Eq. 6–10 closed form, GPU baselines, platform constants, energy |
 //! | [`hflex`] | §3.4 | the HFlex runtime contract: one fixed accelerator, arbitrary SpMMs; [`hflex::HFlexAccelerator::load`] returns an A-resident [`hflex::LoadedMatrix`] |
-//! | [`backend`] | §3.4, §4.2 | two-phase prepare/execute engines: [`backend::SpmmBackend`] factories produce matrix-resident [`backend::PreparedSpmm`] handles (prepare A once, execute many) — native multi-threaded CPU (plain + column-blocked), functional reference, PJRT adapter, sharded composite — selected by name |
-//! | [`shard`] | §3.3 scaled up | sharded multi-accelerator execution: nnz-balanced row partitioning, resident [`shard::ShardExecutor`] pools of prepared inner handles (full or active-subset execution), `sharded:<S>:<inner>` composite backend |
+//! | [`backend`] | §3.4, §4.2 | two-phase prepare/execute engines: [`backend::SpmmBackend`] factories produce matrix-resident [`backend::PreparedSpmm`] handles (prepare A once, execute many — *concurrently*: `execute` takes `&self`, per-call scratch comes from [`backend::ScratchPool`]s) — native multi-threaded CPU (plain + column-blocked), functional reference, PJRT adapter, sharded composite — selected by name |
+//! | [`shard`] | §3.3 scaled up | sharded multi-accelerator execution: nnz-balanced row partitioning, resident [`shard::ShardExecutor`] pools of prepared inner handles (full or active-subset execution, `&self` with pooled gather blocks), `sharded:<S>:<inner>` composite backend |
 //! | [`runtime`] | — | PJRT client wrapping the AOT HLO artifacts (stubbed unless both `pjrt` and `xla` features are on) |
-//! | [`coordinator`] | — | adaptive SpMM serving pipeline in four stages — admission (backpressure gate), batcher (merge window + shard-aware routing), dispatch (worker pool + thread budgets + stage timings), residency (byte-sized shared prepared-handle cache + re-shard-on-skew) — behind the [`coordinator::Server`] facade |
+//! | [`coordinator`] | — | adaptive SpMM serving pipeline in four stages — admission (backpressure gate + per-image fairness quota), batcher (merge window + shard-aware routing), dispatch (worker pool + thread budgets + stage timings + concurrent execution over shared `Arc<dyn PreparedSpmm>` handles), residency (byte-sized cache of shared lock-free handles + re-shard-on-skew) — behind the [`coordinator::Server`] facade |
 //! | [`metrics`] | §4.2 | GFLOP/s, bandwidth utilization, energy efficiency, geomean/CDF |
 //! | [`report`] | §4.2, §4.3 | experiment drivers regenerating Tables 1–5 and Figures 7–10 |
 

@@ -151,7 +151,7 @@ fn cmd_run(cli: &Cli) -> Result<()> {
             t0.elapsed().as_secs_f64() * 1e3,
             sharded.imbalance()
         );
-        let mut exec = ShardExecutor::prepare(&sharded, backend_spec)?;
+        let exec = ShardExecutor::prepare(&sharded, backend_spec)?;
         let pcost = exec.prepare_cost();
         println!(
             "backend: {shards} x {backend_spec:?} (thread-budgeted); prepared in {:.2} ms, \
@@ -293,7 +293,8 @@ fn cmd_gen(cli: &Cli) -> Result<()> {
 
 /// `serve`: demo serving loop on a registry-selected backend; `--shards S`
 /// wraps the backend as a `sharded:<S>:<inner>` composite. Pipeline policy
-/// flags: `--queue-depth` (admission bound), `--max-columns`/`--window-ms`
+/// flags: `--queue-depth` (admission bound), `--image-quota` (per-image
+/// in-flight fairness quota, 0 = off), `--max-columns`/`--window-ms`
 /// (batching), `--route-columns` (shard-aware routing threshold),
 /// `--resident-mb` (residency byte budget), `--reshard-threshold` /
 /// `--reshard-window` (re-shard-on-skew trigger).
@@ -323,6 +324,8 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let config = PipelineConfig {
         admission: AdmissionPolicy {
             max_in_flight: cli.get_usize("queue-depth", defaults.admission.max_in_flight),
+            per_image_quota: cli
+                .get_usize("image-quota", defaults.admission.per_image_quota),
         },
         batch: BatchPolicy {
             max_columns: cli.get_usize("max-columns", defaults.batch.max_columns),
@@ -374,14 +377,18 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     );
     println!(
         "  stages (mean/request): queue {:.3} ms | batch {:.3} ms | prepare {:.3} ms | \
-         execute {:.3} ms",
+         execute {:.3} ms; exec concurrency peak {}",
         s.stage_queue_s * 1e3,
         s.stage_batch_s * 1e3,
         s.stage_prepare_s * 1e3,
-        s.stage_exec_s * 1e3
+        s.stage_exec_s * 1e3,
+        s.exec_concurrency_peak
     );
     if s.rejected > 0 {
         println!("  admission: {} requests shed at the gate", s.rejected);
+        for (image, count) in &s.image_sheds {
+            println!("    image {image}: {count} shed by the per-image quota");
+        }
     }
     for (name, count) in &s.backends {
         println!("  backend {name}: {count} requests");

@@ -13,12 +13,12 @@
 //! latest run are exposed through [`PreparedSpmm::shard_stats`] so serving
 //! metrics can aggregate them.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::executor::ShardExecutor;
 use super::plan::ShardedMatrix;
-use super::{ShardError, ShardRunStats};
+use super::ShardRunStats;
 use crate::backend::{
     self, BackendError, Capability, PrepareCost, PreparedSpmm, SpmmBackend,
 };
@@ -93,7 +93,7 @@ impl ShardedBackend {
         Ok(PreparedSharded {
             image,
             executor,
-            last_stats: None,
+            last_stats: Mutex::new(None),
             cost: PrepareCost { wall: t0.elapsed(), resident_bytes },
         })
     }
@@ -115,20 +115,28 @@ impl SpmmBackend for ShardedBackend {
     fn prepare_send(
         &self,
         image: Arc<ScheduledMatrix>,
-    ) -> Result<Box<dyn PreparedSpmm + Send>, BackendError> {
+    ) -> Result<Box<dyn PreparedSpmm + Send + Sync>, BackendError> {
         Ok(Box::new(self.build(image)?))
     }
 }
 
 /// A matrix resident across a shard pool: the shard plan, one preprocessed
-/// image per shard, and one prepared inner handle per shard.
+/// image per shard, and one prepared inner handle per shard. Executes
+/// through `&self` — the executor pools its gather blocks, so concurrent
+/// requests stream against one resident pool.
 pub struct PreparedSharded {
     /// The unsharded source image (kept so the handle reports the matrix it
     /// is resident for and the Arc stays alive for the caller's bookkeeping).
     image: Arc<ScheduledMatrix>,
     executor: ShardExecutor,
-    /// Stats of the most recent successful execution.
-    last_stats: Option<ShardRunStats>,
+    /// Stats of the most recent *successful* execution. The lock guards
+    /// only this tiny report, never the execution itself; with concurrent
+    /// executions "most recent" is whichever run finished last. Failed
+    /// calls leave it untouched — clearing here would let a failing
+    /// request racing a successful one wipe the winner's report before
+    /// the serving dispatcher reads it (a failed run never reports stats
+    /// through that path anyway).
+    last_stats: Mutex<Option<ShardRunStats>>,
     cost: PrepareCost,
 }
 
@@ -136,7 +144,7 @@ impl PreparedSharded {
     /// Wrap an explicitly assembled executor (tests, heterogeneous pools).
     pub fn from_executor(image: Arc<ScheduledMatrix>, executor: ShardExecutor) -> PreparedSharded {
         let cost = executor.prepare_cost();
-        PreparedSharded { image, executor, last_stats: None, cost }
+        PreparedSharded { image, executor, last_stats: Mutex::new(None), cost }
     }
 
     /// Number of resident shards.
@@ -168,24 +176,20 @@ impl PreparedSpmm for PreparedSharded {
     }
 
     fn execute(
-        &mut self,
+        &self,
         b: &[f32],
         c: &mut [f32],
         n: usize,
         alpha: f32,
         beta: f32,
     ) -> Result<(), BackendError> {
-        self.last_stats = None;
-        let stats = self.executor.execute(b, c, n, alpha, beta).map_err(|e| match e {
-            ShardError::Shape(s) => BackendError::Shape(s),
-            err @ ShardError::ShardFailed { .. } => BackendError::Execution(err.to_string()),
-        })?;
-        self.last_stats = Some(stats);
+        let stats = self.executor.execute(b, c, n, alpha, beta)?;
+        *self.last_stats.lock().unwrap() = Some(stats);
         Ok(())
     }
 
     fn shard_stats(&self) -> Option<ShardRunStats> {
-        self.last_stats.clone()
+        self.last_stats.lock().unwrap().clone()
     }
 
     fn resident_shards(&self) -> Option<usize> {
@@ -193,22 +197,15 @@ impl PreparedSpmm for PreparedSharded {
     }
 
     fn execute_routed(
-        &mut self,
+        &self,
         b: &[f32],
         c: &mut [f32],
         n: usize,
         alpha: f32,
         beta: f32,
     ) -> Result<usize, BackendError> {
-        self.last_stats = None;
-        let (stats, skipped) =
-            self.executor.execute_active(b, c, n, alpha, beta).map_err(|e| match e {
-                ShardError::Shape(s) => BackendError::Shape(s),
-                err @ ShardError::ShardFailed { .. } => {
-                    BackendError::Execution(err.to_string())
-                }
-            })?;
-        self.last_stats = Some(stats);
+        let (stats, skipped) = self.executor.execute_active(b, c, n, alpha, beta)?;
+        *self.last_stats.lock().unwrap() = Some(stats);
         Ok(skipped)
     }
 }
@@ -243,7 +240,7 @@ mod tests {
             .unwrap();
         for s in [1usize, 3, 8] {
             let be = ShardedBackend::from_spec(s, "native:1").unwrap();
-            let mut handle = be.prepare(Arc::clone(&sm)).unwrap();
+            let handle = be.prepare(Arc::clone(&sm)).unwrap();
             let mut c = c0.clone();
             handle.execute(&b, &mut c, n, 2.0, -0.5).unwrap();
             prop::assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
@@ -256,7 +253,7 @@ mod tests {
     fn one_handle_shards_once_and_serves_many() {
         let (coo, sm) = image(3);
         let be = ShardedBackend::from_spec(3, "functional").unwrap();
-        let mut handle = be.prepare(Arc::clone(&sm)).unwrap();
+        let handle = be.prepare(Arc::clone(&sm)).unwrap();
         // Prepare did the sharding: resident bytes cover the shard images,
         // and the wall time is nonzero-able (not asserted — clocks).
         assert!(handle.prepare_cost().resident_bytes > 0);
@@ -315,7 +312,7 @@ mod tests {
     fn routed_execute_matches_plain_on_dense_pools() {
         let (coo, sm) = image(8);
         let be = ShardedBackend::from_spec(4, "native:1").unwrap();
-        let mut handle = be.prepare(Arc::clone(&sm)).unwrap();
+        let handle = be.prepare(Arc::clone(&sm)).unwrap();
         let n = 2;
         let mut rng = Rng::new(9);
         let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
@@ -330,18 +327,25 @@ mod tests {
     }
 
     #[test]
-    fn failed_execute_clears_stats() {
+    fn failed_execute_keeps_last_successful_stats() {
         let (coo, sm) = image(6);
         let be = ShardedBackend::from_spec(2, "functional").unwrap();
-        let mut handle = be.prepare(Arc::clone(&sm)).unwrap();
+        let handle = be.prepare(Arc::clone(&sm)).unwrap();
         let n = 2;
         let b = vec![1.0f32; coo.k * n];
         let mut c = vec![0.0f32; coo.m * n];
         handle.execute(&b, &mut c, n, 1.0, 0.0).unwrap();
         assert!(handle.shard_stats().is_some());
-        // A shape failure must not leave stale stats behind.
+        // A failed call reports its error but must NOT clear the report of
+        // the last successful run: under concurrent `&self` execution a
+        // failure racing a success would otherwise wipe the winner's stats
+        // before the serving dispatcher reads them (failed runs never
+        // report stats through that path regardless).
         let err = handle.execute(&b[..3], &mut c, n, 1.0, 0.0).unwrap_err();
         assert!(matches!(err, BackendError::Shape(_)));
-        assert!(handle.shard_stats().is_none());
+        assert_eq!(
+            handle.shard_stats().expect("stats survive failed calls").shards,
+            2
+        );
     }
 }

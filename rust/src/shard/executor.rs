@@ -12,19 +12,29 @@
 //! wall-clock latencies in [`ShardRunStats`] are the real makespan
 //! decomposition — and because the executor now *owns* the resident
 //! shards, the cross-process deployment only has to move the handles.
+//!
+//! Execution takes `&self`: the inner handles themselves execute through
+//! `&self` (see [`PreparedSpmm`]), and the per-call C gather blocks come
+//! from a [`ScratchPool`] of per-call block sets, so concurrent requests
+//! stream against one resident pool without serializing. Exact-failure
+//! semantics and the scatter order are unchanged — blocks are written back
+//! shard-ascending only after every active shard succeeded, so results
+//! stay bit-identical to the serial path and a failed run leaves C
+//! untouched.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use super::{ShardError, ShardRunStats, ShardedMatrix};
-use crate::backend::{self, BackendError, PrepareCost, PreparedSpmm};
+use crate::backend::{self, BackendError, PrepareCost, PreparedSpmm, ScratchPool};
 
 /// Executes a [`ShardedMatrix`] resident across a pool of prepared inner
 /// handles (one per shard, so shards never serialize behind a shared
-/// engine). Build once with [`ShardExecutor::prepare`], execute many.
+/// engine). Build once with [`ShardExecutor::prepare`], execute many —
+/// concurrently, through `&self`.
 pub struct ShardExecutor {
     /// One prepared inner handle per shard, resident on the shard's image.
-    inners: Vec<Box<dyn PreparedSpmm + Send>>,
+    inners: Vec<Box<dyn PreparedSpmm + Send + Sync>>,
     /// Global rows owned by each shard (ascending; local row `i` of shard
     /// `s` is `global_rows[s][i]`).
     global_rows: Vec<Vec<u32>>,
@@ -37,10 +47,10 @@ pub struct ShardExecutor {
     imbalance: f64,
     /// Aggregate build cost (shard images + inner prepares + row maps).
     cost: PrepareCost,
-    /// Per-shard C gather blocks, grow-only across calls (hot-path
-    /// allocation stays zero after warm-up, matching the native engine's
-    /// scratch discipline).
-    locals: Vec<Vec<f32>>,
+    /// Pool of per-call C gather block sets (one block per shard), blocks
+    /// grow-only across calls — hot-path allocation stays zero after
+    /// warm-up, and concurrent executions each check out their own set.
+    locals: ScratchPool<Vec<Vec<f32>>>,
 }
 
 impl std::fmt::Debug for ShardExecutor {
@@ -89,7 +99,7 @@ impl ShardExecutor {
     /// match the shard count.
     pub fn from_prepared(
         sm: &ShardedMatrix,
-        inners: Vec<Box<dyn PreparedSpmm + Send>>,
+        inners: Vec<Box<dyn PreparedSpmm + Send + Sync>>,
     ) -> ShardExecutor {
         assert_eq!(
             inners.len(),
@@ -103,7 +113,7 @@ impl ShardExecutor {
 
     fn assemble(
         sm: &ShardedMatrix,
-        inners: Vec<Box<dyn PreparedSpmm + Send>>,
+        inners: Vec<Box<dyn PreparedSpmm + Send + Sync>>,
         cost: PrepareCost,
     ) -> ShardExecutor {
         ShardExecutor {
@@ -114,7 +124,7 @@ impl ShardExecutor {
             k: sm.k,
             imbalance: sm.imbalance(),
             cost,
-            locals: Vec::new(),
+            locals: ScratchPool::new(),
         }
     }
 
@@ -124,8 +134,15 @@ impl ShardExecutor {
     }
 
     /// The prepared inner handles (cost inspection).
-    pub fn prepared(&self) -> &[Box<dyn PreparedSpmm + Send>] {
+    pub fn prepared(&self) -> &[Box<dyn PreparedSpmm + Send + Sync>] {
         &self.inners
+    }
+
+    /// Per-call gather-block sets currently parked in the internal scratch
+    /// pool — at most one per peak concurrent execution (see
+    /// [`ScratchPool`]); exposed so tests can assert the bound.
+    pub fn scratch_sets(&self) -> usize {
+        self.locals.idle()
     }
 
     /// Aggregate build cost: shard images, inner prepares, row maps.
@@ -154,7 +171,7 @@ impl ShardExecutor {
     /// parallel. On success C holds every row; on failure C is untouched
     /// and the error names the failing shard.
     pub fn execute(
-        &mut self,
+        &self,
         b: &[f32],
         c: &mut [f32],
         n: usize,
@@ -173,7 +190,7 @@ impl ShardExecutor {
     /// worth it for small-N requests, where per-shard fan-out overhead is
     /// comparable to the useful work.
     pub fn execute_active(
-        &mut self,
+        &self,
         b: &[f32],
         c: &mut [f32],
         n: usize,
@@ -184,7 +201,7 @@ impl ShardExecutor {
     }
 
     fn execute_masked(
-        &mut self,
+        &self,
         b: &[f32],
         c: &mut [f32],
         n: usize,
@@ -213,15 +230,20 @@ impl ShardExecutor {
         };
         let skipped = active.iter().filter(|a| !**a).count();
 
+        // Per-call mutable state: check one gather-block set out of the
+        // pool (concurrent executions each get their own set; the pool
+        // lock covers only this checkout and the return at the end).
+        let mut locals = self.locals.checkout(Vec::new);
+        if locals.len() < self.global_rows.len() {
+            locals.resize_with(self.global_rows.len(), Vec::new);
+        }
+
         // Gather: seed each active shard's private C block with its global
         // rows (the beta * C_in term lives in the block). Blocks are
-        // grow-only executor scratch; every element is overwritten by the
+        // grow-only pooled scratch; every element is overwritten by the
         // gather, so stale contents from earlier calls cannot leak.
-        if self.locals.len() < self.global_rows.len() {
-            self.locals.resize_with(self.global_rows.len(), Vec::new);
-        }
         for (i, (rows, buf)) in
-            self.global_rows.iter().zip(self.locals.iter_mut()).enumerate()
+            self.global_rows.iter().zip(locals.iter_mut()).enumerate()
         {
             if !active[i] {
                 continue;
@@ -237,15 +259,15 @@ impl ShardExecutor {
         }
 
         // Parallel shard execution: one scoped thread per active shard,
-        // each driving its own prepared inner handle on its own C block.
-        let inners = &mut self.inners;
+        // each driving its (shared, &self) prepared inner handle on its
+        // own C block from the checked-out set.
+        let inners = &self.inners;
         let global_rows = &self.global_rows;
-        let locals = &mut self.locals;
         let active_ref = &active;
         let outcomes: Vec<(usize, Result<(), BackendError>, std::time::Duration)> =
             std::thread::scope(|scope| {
                 let handles: Vec<_> = inners
-                    .iter_mut()
+                    .iter()
                     .zip(global_rows.iter())
                     .zip(locals.iter_mut())
                     .enumerate()
@@ -277,10 +299,11 @@ impl ShardExecutor {
         }
 
         // Scatter: every active shard succeeded, so write the row-disjoint
-        // blocks back; only now do skipped shards' rows get their pure
-        // beta update (partial results never reach C).
+        // blocks back in shard-ascending order (the order contract the
+        // bit-identical tests pin down); only now do skipped shards' rows
+        // get their pure beta update (partial results never reach C).
         for (i, (rows, buf)) in
-            self.global_rows.iter().zip(self.locals.iter()).enumerate()
+            self.global_rows.iter().zip(locals.iter()).enumerate()
         {
             if active[i] {
                 for (li, &gr) in rows.iter().enumerate() {
@@ -333,7 +356,7 @@ mod tests {
         }
 
         fn execute(
-            &mut self,
+            &self,
             _b: &[f32],
             _c: &mut [f32],
             _n: usize,
@@ -364,7 +387,7 @@ mod tests {
         coo.spmm_reference(&b, &mut want, n, 1.5, -0.5);
         for s in [1usize, 2, 5] {
             let sharded = ShardedMatrix::build(&coo, s, 4, 16, 6);
-            let mut exec = functional_pool(&sharded);
+            let exec = functional_pool(&sharded);
             let mut c = c0.clone();
             let stats = exec.execute(&b, &mut c, n, 1.5, -0.5).unwrap();
             assert_eq!(stats.shards, s);
@@ -378,7 +401,7 @@ mod tests {
         let mut rng = Rng::new(2);
         let coo = gen::random_uniform(40, 30, 0.2, &mut rng);
         let sharded = ShardedMatrix::build(&coo, 3, 2, 8, 4);
-        let mut exec = ShardExecutor::from_prepared(
+        let exec = ShardExecutor::from_prepared(
             &sharded,
             vec![
                 FunctionalBackend.prepare_send(Arc::clone(&sharded.shards[0].image)).unwrap(),
@@ -407,7 +430,7 @@ mod tests {
     fn shape_mismatches_are_rejected() {
         let coo = Coo::empty(4, 4);
         let sharded = ShardedMatrix::build(&coo, 2, 2, 4, 2);
-        let mut exec = functional_pool(&sharded);
+        let exec = functional_pool(&sharded);
         let mut c = vec![0f32; 8];
         // Wrong B length.
         assert!(matches!(
@@ -426,7 +449,7 @@ mod tests {
         // Rows with no non-zeros must still compute C = beta * C.
         let coo = Coo::new(6, 4, vec![2], vec![1], vec![3.0]).unwrap();
         let sharded = ShardedMatrix::build(&coo, 3, 2, 4, 2);
-        let mut exec = functional_pool(&sharded);
+        let exec = functional_pool(&sharded);
         let n = 2;
         let b = vec![1.0f32; coo.k * n];
         let mut c = vec![2.0f32; coo.m * n];
@@ -484,7 +507,7 @@ mod tests {
         let c0: Vec<f32> = (0..coo.m * n).map(|i| (i as f32 * 0.13).cos()).collect();
 
         let mut full = c0.clone();
-        let mut exec = functional_pool(&sharded);
+        let exec = functional_pool(&sharded);
         exec.execute(&b, &mut full, n, 1.25, -0.75).unwrap();
 
         let mut routed = c0.clone();
@@ -512,7 +535,7 @@ mod tests {
         let coo = gen::power_law_rows(60, 40, 900, 1.0, &mut rng);
         let sharded = ShardedMatrix::build(&coo, 3, 2, 8, 2);
         assert!(sharded.shards.iter().all(|s| s.image.nnz > 0));
-        let mut exec = functional_pool(&sharded);
+        let exec = functional_pool(&sharded);
         let n = 2;
         let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
         let mut c: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
@@ -529,7 +552,7 @@ mod tests {
         let mut rng = Rng::new(7);
         let coo = gen::power_law_rows(90, 60, 900, 1.0, &mut rng);
         let sharded = ShardedMatrix::build(&coo, 3, 2, 16, 4);
-        let mut exec = ShardExecutor::prepare(&sharded, "native:1").unwrap();
+        let exec = ShardExecutor::prepare(&sharded, "native:1").unwrap();
         for n in [5usize, 1, 9, 3] {
             let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
             let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();

@@ -71,6 +71,21 @@ impl std::fmt::Display for ShardError {
 
 impl std::error::Error for ShardError {}
 
+/// Sharded failures map onto the backend error surface without
+/// re-stringifying: a shape error stays a shape error (same inner text),
+/// and a shard failure keeps its "shard i of S failed" message as an
+/// execution error. The one mapping point for every sharded entry path.
+impl From<ShardError> for crate::backend::BackendError {
+    fn from(e: ShardError) -> Self {
+        match e {
+            ShardError::Shape(s) => crate::backend::BackendError::Shape(s),
+            err @ ShardError::ShardFailed { .. } => {
+                crate::backend::BackendError::Execution(err.to_string())
+            }
+        }
+    }
+}
+
 /// Shard-level statistics from one sharded execution — the inter-shard
 /// analogue of the paper's per-PE load-balance metrics.
 #[derive(Clone, Debug)]

@@ -53,8 +53,8 @@ fn native_equals_functional_equals_csr_reference_property() {
         let csr = Csr::from_coo(&a);
         // One prepared handle per engine, driven across every scalar pair —
         // the reuse contract is part of what's under test.
-        let mut native = NativeBackend::new(threads).prepare(Arc::clone(&sm)).unwrap();
-        let mut functional = FunctionalBackend.prepare(Arc::clone(&sm)).unwrap();
+        let native = NativeBackend::new(threads).prepare(Arc::clone(&sm)).unwrap();
+        let functional = FunctionalBackend.prepare(Arc::clone(&sm)).unwrap();
         for (alpha, beta) in [(0.0f32, 1.0f32), (1.0, 0.0), (2.5, 2.5), (1.0, 2.5)] {
             let mut got_native = c0.clone();
             native.execute(&b, &mut got_native, n, alpha, beta).unwrap();
@@ -202,7 +202,7 @@ fn prepare_reports_cost_and_handles_survive_dropping_the_factory() {
     let mut rng = Rng::new(13);
     let coo = gen::random_uniform(60, 50, 0.15, &mut rng);
     let sm = Arc::new(preprocess(&coo, 4, 16, 6));
-    let mut handle = {
+    let handle = {
         // The factory can go away; the handle owns its residency.
         let factory = backend::create("native:2").unwrap();
         factory.prepare(Arc::clone(&sm)).unwrap()

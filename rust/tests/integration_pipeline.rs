@@ -2,8 +2,10 @@
 //! routed batching (small-N requests execute on a shard subset with
 //! results identical to the functional backend), re-shard-on-skew (a
 //! skewed workload triggers exactly one rebuild and results stay
-//! deterministic afterwards), the per-stage latency breakdown, and
-//! admission backpressure.
+//! deterministic afterwards), the per-stage latency breakdown, admission
+//! backpressure, and the shared-handle concurrency contract (N threads ×
+//! one `Arc<dyn PreparedSpmm>` handle, bit-identical to the functional
+//! reference, with the scratch pool bounded by the thread count).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -73,7 +75,7 @@ fn small_n_requests_execute_on_a_shard_subset() {
     let image = Arc::new(preprocess(&coo, 4, 8, 4));
 
     // Reference: the functional backend on the unsharded image.
-    let mut reference = FunctionalBackend.prepare(Arc::clone(&image)).unwrap();
+    let reference = FunctionalBackend.prepare(Arc::clone(&image)).unwrap();
 
     let config = PipelineConfig {
         batch: BatchPolicy {
@@ -275,12 +277,164 @@ fn stage_breakdown_decomposes_request_latency() {
     );
 }
 
+/// The tentpole's acceptance test: N threads share ONE prepared handle
+/// (`Arc<dyn PreparedSpmm + Send + Sync>`, no mutex) across every
+/// shareable engine, each thread running many executes with varying
+/// inputs; every result must be bit-identical to the functional reference
+/// on the same image. Any data race in the &self execution path (scratch
+/// aliasing, stream corruption, pool mix-ups) shows up as a wrong bit
+/// here.
+#[test]
+fn n_threads_one_shared_handle_bit_identical_to_functional() {
+    let mut rng = Rng::new(0x5EED);
+    let coo = {
+        // A power-law-ish matrix with empty rows mixed in.
+        let (m, k) = (96usize, 72usize);
+        let mut rows = Vec::new();
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..1_400u32 {
+            let r = (i * i * 37 + i * 11) % (m as u32);
+            if r % 5 == 4 {
+                continue; // leave some rows empty
+            }
+            rows.push(r);
+            cols.push((i * 53 + 7) % (k as u32));
+            vals.push(0.1 + ((i % 13) as f32) * 0.17 - ((i % 7) as f32) * 0.09);
+        }
+        Coo::new(m, k, rows, cols, vals).unwrap()
+    };
+    let image = Arc::new(preprocess(&coo, 4, 16, 6));
+    let functional = FunctionalBackend.prepare(Arc::clone(&image)).unwrap();
+
+    // Shared request schedule: every thread replays the same calls.
+    let calls: Vec<(usize, f32, f32)> =
+        vec![(3, 1.5, -0.5), (1, 2.0, 0.0), (7, -0.75, 1.25), (3, 1.5, -0.5)];
+    let inputs: Vec<(Vec<f32>, Vec<f32>)> = calls
+        .iter()
+        .map(|&(n, _, _)| {
+            (
+                (0..coo.k * n).map(|_| rng.normal()).collect(),
+                (0..coo.m * n).map(|_| rng.normal()).collect(),
+            )
+        })
+        .collect();
+    let functional_wants: Vec<Vec<f32>> = calls
+        .iter()
+        .zip(&inputs)
+        .map(|(&(n, alpha, beta), (b, c0))| {
+            let mut want = c0.clone();
+            functional.execute(b, &mut want, n, alpha, beta).unwrap();
+            want
+        })
+        .collect();
+
+    let threads = 6;
+    for spec in ["native:2", "native-blocked:2", "functional", "sharded:3:native:1"] {
+        let shared: Arc<dyn PreparedSpmm + Send + Sync> = Arc::from(
+            sextans::backend::create(spec).unwrap().prepare_send(Arc::clone(&image)).unwrap(),
+        );
+        // The engine's own serial answers, computed on the SAME handle
+        // before any concurrency: every concurrent result must match
+        // these bitwise — the determinism half of the contract.
+        let serial_wants: Vec<Vec<f32>> = calls
+            .iter()
+            .zip(&inputs)
+            .map(|(&(n, alpha, beta), (b, c0))| {
+                let mut want = c0.clone();
+                shared.execute(b, &mut want, n, alpha, beta).unwrap();
+                want
+            })
+            .collect();
+        // Correctness half: native and native-blocked are documented
+        // bit-identical to the functional reference on the same image;
+        // sharded reschedules rows per shard, so it matches within FP
+        // tolerance instead.
+        for (i, (serial, func)) in serial_wants.iter().zip(&functional_wants).enumerate() {
+            if spec.starts_with("sharded") {
+                assert_allclose(serial, func, 3e-4, 3e-4)
+                    .unwrap_or_else(|e| panic!("{spec} call {i}: {e}"));
+            } else {
+                assert_eq!(serial, func, "{spec} call {i} must match functional bitwise");
+            }
+        }
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let shared = Arc::clone(&shared);
+                let calls = &calls;
+                let inputs = &inputs;
+                let serial_wants = &serial_wants;
+                s.spawn(move || {
+                    for round in 0..10 {
+                        // Threads walk the schedule at different offsets so
+                        // different (n, alpha, beta) genuinely overlap.
+                        let i = (t + round) % calls.len();
+                        let (n, alpha, beta) = calls[i];
+                        let (b, c0) = &inputs[i];
+                        let mut c = c0.clone();
+                        shared.execute(b, &mut c, n, alpha, beta).unwrap();
+                        assert_eq!(
+                            c, serial_wants[i],
+                            "{spec}: thread {t} round {round} diverged under concurrency"
+                        );
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Sizing contract of the pooled scratch: W concurrent executors against
+/// one shared handle leave at most W scratch sets in its pool — residency
+/// never balloons past the realized concurrency.
+#[test]
+fn shared_handle_scratch_pool_is_bounded_by_worker_count() {
+    use sextans::backend::NativeBackend;
+    let mut rng = Rng::new(0xB0BB);
+    let coo = {
+        let (m, k) = (64usize, 48usize);
+        let mut rows = Vec::new();
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..900u32 {
+            rows.push((i * 31 + 3) % (m as u32));
+            cols.push((i * 17 + 5) % (k as u32));
+            vals.push(1.0 + (i % 9) as f32 * 0.25);
+        }
+        Coo::new(m, k, rows, cols, vals).unwrap()
+    };
+    let image = Arc::new(preprocess(&coo, 4, 16, 4));
+    let handle = NativeBackend::new(2).build(Arc::clone(&image));
+    let n = 5;
+    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+    let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+    let workers = 4;
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let b = &b;
+            let c0 = &c0;
+            let handle = &handle;
+            s.spawn(move || {
+                for _ in 0..50 {
+                    let mut c = c0.clone();
+                    handle.execute(b, &mut c, n, 1.0, 0.5).unwrap();
+                }
+            });
+        }
+    });
+    let sets = handle.scratch_sets();
+    assert!(
+        (1..=workers).contains(&sets),
+        "pool holds {sets} sets for {workers} concurrent executors"
+    );
+}
+
 #[test]
 fn admission_backpressure_sheds_and_recovers() {
     let coo = sparse_rows_matrix();
     let image = Arc::new(preprocess(&coo, 4, 8, 4));
     let config = PipelineConfig {
-        admission: AdmissionPolicy { max_in_flight: 0 },
+        admission: AdmissionPolicy { max_in_flight: 0, ..AdmissionPolicy::default() },
         ..PipelineConfig::default()
     };
     let server = Server::start_with(1, config, |_| Box::new(FunctionalBackend));

@@ -62,7 +62,7 @@ fn one_prepared_handle_many_calls_matches_reference_property() {
             })
             .collect();
         for spec in ENGINES {
-            let mut handle = backend::create(spec)
+            let handle = backend::create(spec)
                 .map_err(|e| e.to_string())?
                 .prepare(Arc::clone(&sm))
                 .map_err(|e| format!("{spec}: prepare: {e}"))?;
@@ -94,13 +94,13 @@ fn execute_batch_equals_repeated_execute() {
     for spec in ENGINES {
         let factory = backend::create(spec).unwrap();
         // Sequential singles on one handle...
-        let mut single = factory.prepare(Arc::clone(&sm)).unwrap();
+        let single = factory.prepare(Arc::clone(&sm)).unwrap();
         let mut want: Vec<Vec<f32>> = c0s.clone();
         for (b, c) in bs.iter().zip(want.iter_mut()) {
             single.execute(b, c, n, 1.5, -0.5).unwrap();
         }
         // ...must equal one execute_batch on a fresh handle.
-        let mut batched = factory.prepare(Arc::clone(&sm)).unwrap();
+        let batched = factory.prepare(Arc::clone(&sm)).unwrap();
         let mut got: Vec<Vec<f32>> = c0s.clone();
         {
             let mut jobs: Vec<(&[f32], &mut [f32])> = bs

@@ -39,11 +39,11 @@ fn sharded_equals_functional_equals_csr_reference_property() {
         let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
         let c0: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
         let csr = Csr::from_coo(&a);
-        let mut functional = FunctionalBackend.prepare(Arc::clone(&sm)).unwrap();
+        let functional = FunctionalBackend.prepare(Arc::clone(&sm)).unwrap();
         for s in [1usize, 2, 3, 8] {
             // Prepare once per (matrix, S): sharding happens here, not per
             // execute.
-            let mut sharded = backend::create(&format!("sharded:{s}:native:1"))
+            let sharded = backend::create(&format!("sharded:{s}:native:1"))
                 .unwrap()
                 .prepare(Arc::clone(&sm))
                 .unwrap();
