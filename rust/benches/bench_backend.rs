@@ -8,6 +8,11 @@
 //! should already win at 1 thread thanks to the 8-lane chunked inner
 //! loop).
 
+//! Set `BENCH_OUT=<file>` to additionally write the measurements as a
+//! `BENCH_*.json` snapshot (schema: `sextans::telemetry::bench_record`);
+//! `BENCH_TIMESTAMP` stamps it (defaults to `unknown`).
+
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -17,6 +22,7 @@ use sextans::bench_util::{bench, black_box, section};
 use sextans::sched::preprocess;
 use sextans::sparse::catalog::{catalog, crystm03_like, MatrixSpec, Scale};
 use sextans::sparse::rng::Rng;
+use sextans::telemetry::bench_record::{git_rev, BenchMeasurement, BenchRecord};
 
 fn pick(specs: &[MatrixSpec], name_prefix: &str) -> Option<MatrixSpec> {
     specs.iter().find(|s| s.name.starts_with(name_prefix)).cloned()
@@ -36,7 +42,8 @@ fn main() {
 
     let n = 16usize;
     let mut rng = Rng::new(0xBE);
-    for spec in shapes {
+    let mut results: Vec<BenchMeasurement> = Vec::new();
+    for spec in &shapes {
         let coo = spec.build();
         // Paper-shaped image: 64 PEs, K0 = 4096, D = 10.
         let sm = Arc::new(preprocess(&coo, 64, 4096, 10));
@@ -61,6 +68,16 @@ fn main() {
         });
         let base_gflops = r.throughput(flops) / 1e9;
         println!("    -> {base_gflops:.2} GFLOP/s");
+        results.push(BenchMeasurement {
+            bench: "backend/functional".into(),
+            matrix: spec.name.clone(),
+            n,
+            gflops: base_gflops,
+            median_ns: r.median_ns,
+            p50_ns: r.p50_ns,
+            p95_ns: r.p95_ns,
+            p99_ns: r.p99_ns,
+        });
 
         for threads in [1usize, 2, 4, 8] {
             let native = NativeBackend::new(threads).prepare(Arc::clone(&sm)).unwrap();
@@ -80,6 +97,30 @@ fn main() {
                 "    -> {gflops:.2} GFLOP/s ({:.2}x vs functional)",
                 gflops / base_gflops
             );
+            results.push(BenchMeasurement {
+                bench: format!("backend/native:{threads}"),
+                matrix: spec.name.clone(),
+                n,
+                gflops,
+                median_ns: r.median_ns,
+                p50_ns: r.p50_ns,
+                p95_ns: r.p95_ns,
+                p99_ns: r.p99_ns,
+            });
         }
+    }
+
+    if let Ok(path) = std::env::var("BENCH_OUT") {
+        let record = BenchRecord {
+            name: "backend".into(),
+            git_rev: git_rev(),
+            timestamp: std::env::var("BENCH_TIMESTAMP").unwrap_or_else(|_| "unknown".into()),
+            host_threads: std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+            matrices: shapes,
+            results,
+            scaling: Vec::new(),
+        };
+        record.write(Path::new(&path)).expect("write BENCH_OUT");
+        println!("\nwrote {path}");
     }
 }

@@ -12,6 +12,11 @@
 //! fan-out; a second section repeats W = 4 on `sharded:2:native:1` to
 //! show the composite's gather/scatter path also concurrency-scales.
 
+//! Set `BENCH_OUT=<file>` to additionally write the scaling points as a
+//! `BENCH_*.json` snapshot (schema: `sextans::telemetry::bench_record`);
+//! `BENCH_TIMESTAMP` stamps it (defaults to `unknown`).
+
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -20,6 +25,7 @@ use sextans::backend::{self, PreparedSpmm, SpmmBackend};
 use sextans::bench_util::{black_box, section};
 use sextans::sched::preprocess;
 use sextans::sparse::{gen, rng::Rng};
+use sextans::telemetry::bench_record::{git_rev, BenchRecord, ScalingPoint};
 
 /// Aggregate seconds for `iters` executes spread evenly over `w` threads
 /// sharing `handle`.
@@ -76,6 +82,7 @@ fn main() {
 
     let iters = 24usize;
     let mut base_gflops = 0.0f64;
+    let mut scaling: Vec<ScalingPoint> = Vec::new();
     for w in [1usize, 2, 4, 8] {
         let per_exec_s = run_shared(&handle, w, iters, &b, &c0, n);
         // Aggregate throughput across the W concurrent streams
@@ -93,6 +100,26 @@ fn main() {
             agg_gflops,
             efficiency * 100.0
         );
+        scaling.push(ScalingPoint {
+            bench: "concurrency/native:1".into(),
+            workers: w,
+            gflops: agg_gflops,
+            efficiency,
+        });
+    }
+
+    if let Ok(path) = std::env::var("BENCH_OUT") {
+        let record = BenchRecord {
+            name: "concurrency".into(),
+            git_rev: git_rev(),
+            timestamp: std::env::var("BENCH_TIMESTAMP").unwrap_or_else(|_| "unknown".into()),
+            host_threads: std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+            matrices: Vec::new(),
+            results: Vec::new(),
+            scaling,
+        };
+        record.write(Path::new(&path)).expect("write BENCH_OUT");
+        println!("wrote {path}");
     }
 
     section("shared sharded handle (W=4, sharded:2:native:1)");

@@ -16,14 +16,20 @@
 //! needed to amortize the rebuild — so the serving policy's threshold is
 //! informed by measurement, not guesswork.
 
+//! Set `BENCH_OUT=<file>` to additionally write the steady-state execute
+//! measurements as a `BENCH_*.json` snapshot (schema:
+//! `sextans::telemetry::bench_record`); `BENCH_TIMESTAMP` stamps it.
+
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
 use sextans::arch::simulator::problem_flops;
 use sextans::backend::{self, PreparedSpmm, SpmmBackend};
-use sextans::bench_util::{black_box, section};
+use sextans::bench_util::{black_box, percentile_sorted, section};
 use sextans::sched::preprocess;
 use sextans::sparse::{gen, rng::Rng};
+use sextans::telemetry::bench_record::{git_rev, BenchMeasurement, BenchRecord};
 
 fn main() {
     let mut rng = Rng::new(0xA3);
@@ -45,6 +51,7 @@ fn main() {
         coo.nnz()
     ));
 
+    let mut results: Vec<BenchMeasurement> = Vec::new();
     for s in [1usize, 4] {
         // sharded:1 still pays the full plan/re-shard on the old per-call
         // path, so the S=1 row isolates the contract change itself.
@@ -56,16 +63,30 @@ fn main() {
         let handle = factory.prepare(Arc::clone(&sm)).expect("prepare");
         let prepare_s = t0.elapsed().as_secs_f64();
         let cost = handle.prepare_cost();
-        // Warm up scratch, then measure steady-state execute.
+        // Warm up scratch, then measure steady-state execute per-iteration
+        // (sampled so the BENCH snapshot gets real percentiles).
         handle.execute(&b, &mut c, n, 1.0, 0.5).unwrap();
         const STEADY_ITERS: usize = 5;
-        let t0 = Instant::now();
+        let mut samples: Vec<f64> = Vec::with_capacity(STEADY_ITERS);
         for _ in 0..STEADY_ITERS {
             c.copy_from_slice(&c0);
+            let t1 = Instant::now();
             handle.execute(&b, &mut c, n, 1.0, 0.5).unwrap();
+            samples.push(t1.elapsed().as_nanos() as f64);
             black_box(&c);
         }
-        let exec_s = t0.elapsed().as_secs_f64() / STEADY_ITERS as f64;
+        let exec_s = samples.iter().sum::<f64>() / samples.len() as f64 / 1e9;
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        results.push(BenchMeasurement {
+            bench: format!("prepare/{spec}"),
+            matrix: "power_law_4096".into(),
+            n,
+            gflops: flops / exec_s / 1e9,
+            median_ns: percentile_sorted(&samples, 0.5),
+            p50_ns: percentile_sorted(&samples, 0.5),
+            p95_ns: percentile_sorted(&samples, 0.95),
+            p99_ns: percentile_sorted(&samples, 0.99),
+        });
         println!(
             "{spec}: prepare {:.2} ms ({:.2} MiB resident), steady-state execute \
              {:.2} ms = {:.2} GFLOP/s",
@@ -106,6 +127,20 @@ fn main() {
                 (k as f64 * flops) / prepared_s / 1e9
             );
         }
+    }
+
+    if let Ok(path) = std::env::var("BENCH_OUT") {
+        let record = BenchRecord {
+            name: "prepare".into(),
+            git_rev: git_rev(),
+            timestamp: std::env::var("BENCH_TIMESTAMP").unwrap_or_else(|_| "unknown".into()),
+            host_threads: std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+            matrices: Vec::new(),
+            results,
+            scaling: Vec::new(),
+        };
+        record.write(Path::new(&path)).expect("write BENCH_OUT");
+        println!("wrote {path}");
     }
 
     // ---- Re-shard-on-skew: the cost of drop + re-prepare at a new S ----

@@ -122,6 +122,22 @@ pub struct PrepareCost {
     pub resident_bytes: u64,
 }
 
+/// What one `execute*_with_report` call did, returned *by value* so the
+/// facts belong to the caller that ran the job. The older
+/// [`PreparedSpmm::shard_stats`] poll reads a last-run cell that concurrent
+/// executions overwrite (last-finisher-wins); the report path has no such
+/// race — the serving dispatch uses it to attribute shard metrics to the
+/// exact request that produced them.
+#[derive(Clone, Debug, Default)]
+pub struct ExecutionReport {
+    /// Internal units skipped by routed execution (0 on the plain path and
+    /// for single-unit engines).
+    pub skipped: usize,
+    /// Shard-level statistics of *this* call, for handles that shard
+    /// internally; `None` for single-unit engines.
+    pub shard_stats: Option<crate::shard::ShardRunStats>,
+}
+
 /// A matrix-resident execution handle: one preprocessed A, arbitrarily many
 /// SpMMs. Handles own all per-matrix state (scratch pools, shard plans,
 /// device buffers), so nothing is rebuilt between calls — N and the scalars
@@ -173,13 +189,15 @@ pub trait PreparedSpmm {
 
     /// Shard-level statistics of the most recent successful [`execute`]
     /// (see [`crate::shard`]). Non-sharding engines keep the default
-    /// `None`; the serving coordinator polls this after every job to feed
-    /// shard metrics into its summary. With concurrent executions the
-    /// "most recent" run is whichever finished last — per-shard nnz and
-    /// imbalance are per-matrix facts either way, so the metrics stay
-    /// meaningful.
+    /// `None`. With concurrent executions the "most recent" run is
+    /// whichever finished last — callers that need the stats of *their*
+    /// call use [`execute_with_report`] /
+    /// [`execute_routed_with_report`] instead (the serving dispatch does);
+    /// this poll remains for diagnostics and compatibility.
     ///
     /// [`execute`]: PreparedSpmm::execute
+    /// [`execute_with_report`]: PreparedSpmm::execute_with_report
+    /// [`execute_routed_with_report`]: PreparedSpmm::execute_routed_with_report
     fn shard_stats(&self) -> Option<crate::shard::ShardRunStats> {
         None
     }
@@ -211,6 +229,56 @@ pub trait PreparedSpmm {
     ) -> Result<usize, BackendError> {
         self.execute(b, c, n, alpha, beta)?;
         Ok(0)
+    }
+
+    /// [`execute`] returning a per-call [`ExecutionReport`]. Unlike the
+    /// [`shard_stats`] poll, the report cannot be clobbered by a concurrent
+    /// execution finishing later — sharding handles override this to return
+    /// the stats of exactly this call. The default wraps a plain execute
+    /// (no units, no stats).
+    ///
+    /// [`execute`]: PreparedSpmm::execute
+    /// [`shard_stats`]: PreparedSpmm::shard_stats
+    fn execute_with_report(
+        &self,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<ExecutionReport, BackendError> {
+        self.execute(b, c, n, alpha, beta)?;
+        Ok(ExecutionReport::default())
+    }
+
+    /// [`execute_routed`] returning a per-call [`ExecutionReport`] — the
+    /// routed counterpart of [`execute_with_report`], same race-free
+    /// attribution. The default wraps `execute_routed` so composites that
+    /// only override the older method still report their skip count.
+    ///
+    /// [`execute_routed`]: PreparedSpmm::execute_routed
+    /// [`execute_with_report`]: PreparedSpmm::execute_with_report
+    fn execute_routed_with_report(
+        &self,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<ExecutionReport, BackendError> {
+        let skipped = self.execute_routed(b, c, n, alpha, beta)?;
+        Ok(ExecutionReport { skipped, shard_stats: None })
+    }
+
+    /// Bytes this handle keeps resident *right now*, including per-call
+    /// scratch that has accumulated in internal pools since prepare. The
+    /// default repeats [`prepare_cost`]'s static estimate; engines with
+    /// growing pools override it so the residency stage's byte-budgeted
+    /// eviction sees the true cost of a hot handle.
+    ///
+    /// [`prepare_cost`]: PreparedSpmm::prepare_cost
+    fn resident_bytes_now(&self) -> u64 {
+        self.prepare_cost().resident_bytes
     }
 }
 

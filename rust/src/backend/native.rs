@@ -317,6 +317,19 @@ impl PreparedSpmm for PreparedNative {
         self.cost
     }
 
+    fn resident_bytes_now(&self) -> u64 {
+        // Decoded streams are fixed at prepare; the scratch pool grows with
+        // request width (tiles are grow-only) and with peak concurrency
+        // (one set per simultaneous caller), so it is measured live.
+        let triple_bytes = std::mem::size_of::<(u32, u32, f32)>() as u64;
+        let streams: u64 =
+            self.streams.iter().map(|s| s.len() as u64 * triple_bytes).sum();
+        let pooled = self
+            .scratch
+            .measure(|set| set.iter().map(|tile| tile.len() as u64 * 4).sum());
+        streams + pooled
+    }
+
     fn execute(
         &self,
         b: &[f32],
@@ -470,6 +483,32 @@ mod tests {
         // Blocked variant additionally pre-sizes its tiles.
         let blocked = NativeBackend::blocked(2).build(Arc::clone(&sm));
         assert!(blocked.prepare_cost().resident_bytes > cost.resident_bytes);
+    }
+
+    #[test]
+    fn resident_bytes_now_tracks_grown_scratch() {
+        let mut rng = Rng::new(9);
+        let a = gen::random_uniform(60, 60, 0.1, &mut rng);
+        let sm = Arc::new(preprocess(&a, 4, 16, 4));
+        let handle = NativeBackend::new(2).build(Arc::clone(&sm));
+        let at_prepare = handle.prepare_cost().resident_bytes;
+        assert_eq!(
+            handle.resident_bytes_now(),
+            at_prepare,
+            "before any execution the live footprint is the prepare estimate"
+        );
+        // A wide request grows the (unblocked) tiles well past the empty
+        // seed; the live measurement must see it, the static one cannot.
+        let n = 200;
+        let b = vec![1.0f32; a.k * n];
+        let mut c = vec![0.0f32; a.m * n];
+        handle.execute(&b, &mut c, n, 1.0, 0.0).unwrap();
+        assert!(
+            handle.resident_bytes_now() > at_prepare,
+            "grown scratch tiles missing from the live footprint: {} <= {at_prepare}",
+            handle.resident_bytes_now()
+        );
+        assert_eq!(handle.prepare_cost().resident_bytes, at_prepare);
     }
 
     #[test]

@@ -17,11 +17,14 @@
 //! executions — W workers hammering one handle grow it to at most W sets
 //! (asserted by the unit tests below and the backend integration tests).
 //!
-//! Accounting caveat: [`crate::backend::PrepareCost::resident_bytes`] is
-//! captured at prepare time with one (seed) scratch set, so a handle whose
-//! pool has grown under concurrency holds up to W−1 additional sets the
-//! byte-sized residency cache does not see. Trimming idle sets and
-//! re-reporting pooled bytes is a recorded ROADMAP follow-up.
+//! Accounting: [`crate::backend::PrepareCost::resident_bytes`] is captured
+//! at prepare time with one (seed) scratch set; a pool that has grown
+//! under concurrency holds up to W−1 additional sets beyond that estimate.
+//! [`ScratchPool::measure`] sums a caller-supplied byte function over the
+//! parked slots, and engines surface the live total through
+//! [`crate::backend::PreparedSpmm::resident_bytes_now`] — the serving
+//! residency stage refreshes its byte-budgeted accounting from that after
+//! each execution, so hot handles are charged for their real footprint.
 
 use std::ops::{Deref, DerefMut};
 use std::sync::Mutex;
@@ -58,6 +61,14 @@ impl<T> ScratchPool<T> {
     /// total footprint). Exposed so tests can assert the sizing invariant.
     pub fn idle(&self) -> usize {
         self.slots.lock().unwrap().len()
+    }
+
+    /// Sum `bytes_of` over the parked slots — the pool's current resident
+    /// footprint (checked-out slots are transient call state and excluded
+    /// on purpose). Engines use this to implement
+    /// [`crate::backend::PreparedSpmm::resident_bytes_now`].
+    pub fn measure(&self, bytes_of: impl Fn(&T) -> u64) -> u64 {
+        self.slots.lock().unwrap().iter().map(bytes_of).sum()
     }
 }
 
@@ -144,6 +155,22 @@ mod tests {
             pool.idle()
         );
         assert!(pool.idle() >= 1, "at least one slot survives for reuse");
+    }
+
+    #[test]
+    fn measure_sums_parked_slots_only() {
+        let pool: ScratchPool<Vec<u8>> = ScratchPool::new();
+        assert_eq!(pool.measure(|s| s.len() as u64), 0, "empty pool holds no bytes");
+        let a = pool.checkout(|| vec![0u8; 100]);
+        let b = pool.checkout(|| vec![0u8; 28]);
+        assert_eq!(
+            pool.measure(|s| s.len() as u64),
+            0,
+            "checked-out slots are call state, not resident footprint"
+        );
+        drop(a);
+        drop(b);
+        assert_eq!(pool.measure(|s| s.len() as u64), 128);
     }
 
     #[test]

@@ -19,6 +19,11 @@ pub struct BenchResult {
     pub mad_ns: f64,
     /// Mean per-iteration time.
     pub mean_ns: f64,
+    /// Nearest-rank latency percentiles over the timed iterations — the
+    /// tail shape the `BENCH_*.json` trajectory records.
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
 }
 
 impl BenchResult {
@@ -26,6 +31,17 @@ impl BenchResult {
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / (self.median_ns / 1e9)
     }
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample set: rank
+/// `round((len-1) * q)` — the same rule the coordinator's streaming
+/// histograms use, so bench files and serve metrics agree on definition.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
 }
 
 /// Format nanoseconds human-readably.
@@ -69,6 +85,9 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize, min_time: 
         median_ns: median,
         mad_ns: mad,
         mean_ns: mean,
+        p50_ns: percentile_sorted(&samples, 0.50),
+        p95_ns: percentile_sorted(&samples, 0.95),
+        p99_ns: percentile_sorted(&samples, 0.99),
     };
     println!(
         "{:<48} median {:>12}  (±{:>10}, mean {:>12}, {} iters)",
@@ -109,6 +128,7 @@ mod tests {
         assert!(r.iters >= 5);
         assert!(r.median_ns >= 0.0);
         assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p95_ns && r.p95_ns <= r.p99_ns);
     }
 
     #[test]
@@ -119,8 +139,23 @@ mod tests {
             median_ns: 1e6, // 1 ms
             mad_ns: 0.0,
             mean_ns: 1e6,
+            p50_ns: 1e6,
+            p95_ns: 1e6,
+            p99_ns: 1e6,
         };
         assert!((r.throughput(1000.0) - 1e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn percentile_sorted_uses_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_sorted(&v, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&v, 1.0), 100.0);
+        // rank round(99 * 0.5) = 50 -> value 51.
+        assert_eq!(percentile_sorted(&v, 0.5), 51.0);
+        assert_eq!(percentile_sorted(&v, 0.95), 95.0);
+        assert_eq!(percentile_sorted(&[], 0.5), 0.0);
+        assert_eq!(percentile_sorted(&[7.0], 0.99), 7.0);
     }
 
     #[test]

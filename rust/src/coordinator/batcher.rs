@@ -26,7 +26,8 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::metrics::Recorder;
-use super::server::{ImageHandle, SpmmRequest, SpmmResponse};
+use super::server::{ImageHandle, SpmmRequest, SpmmResponse, TraceCtx};
+use crate::telemetry::trace::{SpanRecord, TelemetrySink};
 
 /// Batching policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -60,12 +61,15 @@ pub(crate) struct PendingReq {
     /// When the batcher admitted it to a merge group (the batch stage
     /// starts here).
     pub(crate) admitted: Instant,
+    /// Telemetry ids, when the pipeline has a sink configured.
+    pub(crate) trace: Option<TraceCtx>,
 }
 
 /// Messages from the server facade into the batching stage.
 pub(crate) enum Msg {
-    /// One request with its response channel and submit timestamp.
-    Request(SpmmRequest, Sender<SpmmResponse>, Instant),
+    /// One request with its response channel, submit timestamp, and
+    /// telemetry trace ids (when a sink is configured).
+    Request(SpmmRequest, Sender<SpmmResponse>, Instant, Option<TraceCtx>),
     /// Drain pending groups and stop.
     Shutdown,
 }
@@ -77,6 +81,7 @@ pub(crate) struct Segment {
     pub(crate) submitted: Instant,
     pub(crate) admitted: Instant,
     pub(crate) respond: Sender<SpmmResponse>,
+    pub(crate) trace: Option<TraceCtx>,
 }
 
 /// A batch-merged job handed to the dispatch stage.
@@ -125,6 +130,7 @@ pub(crate) fn merge_group(group: Vec<PendingReq>, policy: &BatchPolicy) -> Optio
             submitted: p.submitted,
             admitted: p.admitted,
             respond: p.respond,
+            trace: p.trace,
         });
         col += req.n;
     }
@@ -148,6 +154,7 @@ pub(crate) fn batcher_loop(
     job_tx: Sender<MergedJob>,
     policy: BatchPolicy,
     recorder: Arc<Mutex<Recorder>>,
+    sink: Option<Arc<dyn TelemetrySink>>,
 ) {
     type Key = (u64, u32, u32);
     let mut pending: HashMap<Key, Vec<PendingReq>> = HashMap::new();
@@ -168,10 +175,23 @@ pub(crate) fn batcher_loop(
             .map(|d| d.saturating_duration_since(Instant::now()))
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
-            Ok(Msg::Request(req, respond, submitted)) => {
+            Ok(Msg::Request(req, respond, submitted, trace)) => {
+                let admitted = Instant::now();
+                // The queue span covers submit -> batcher pickup, stamped
+                // from the same Instants RequestTiming::queue is computed
+                // from in dispatch.
+                if let (Some(sink), Some(ctx)) = (sink.as_ref(), trace) {
+                    sink.emit(SpanRecord::from_instants(
+                        ctx.trace_id,
+                        Some(ctx.root_id),
+                        "queue",
+                        submitted,
+                        admitted,
+                    ));
+                }
                 let key = (req.image.id, req.alpha.to_bits(), req.beta.to_bits());
                 let group = pending.entry(key).or_default();
-                group.push(PendingReq { req, respond, submitted, admitted: Instant::now() });
+                group.push(PendingReq { req, respond, submitted, admitted, trace });
                 let cols: usize = group.iter().map(|p| p.req.n).sum();
                 if cols >= policy.max_columns {
                     let group = pending.remove(&key).unwrap();
@@ -232,6 +252,7 @@ mod tests {
             respond: tx,
             submitted: now,
             admitted: now,
+            trace: None,
         }
     }
 

@@ -29,6 +29,13 @@
 //! [`ConcurrencyGauge`] threaded through the workers records how many
 //! executions actually overlap ([`super::metrics::Summary`]'s
 //! `exec_concurrency_peak`), making the lock removal observable.
+//!
+//! When a [`crate::telemetry::trace::TelemetrySink`] is configured, each
+//! traced request additionally gets `batch`/`prepare`/`exec` spans and a
+//! closing `request` root span. The spans are stamped from the *same*
+//! `Instant`s that populate [`RequestTiming`], so a span tree's stage
+//! durations reconcile with the metrics exactly — there are no second
+//! clock reads to drift.
 
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
@@ -41,8 +48,9 @@ use super::metrics::{ConcurrencyGauge, Recorder, RequestTiming};
 use super::residency::{Resolution, ResidencyManager, PREPARED_CACHE_ENTRIES};
 use super::server::SpmmResponse;
 use crate::arch::simulator::problem_flops;
-use crate::backend::{PreparedSpmm, SpmmBackend};
+use crate::backend::{ExecutionReport, PreparedSpmm, SpmmBackend};
 use crate::shard::ShardRunStats;
+use crate::telemetry::trace::{instant_ns, next_span_id, now_ns, SpanRecord, TelemetrySink};
 
 /// Per-worker core budget: the machine's cores divided across `n_workers`
 /// threads, at least one — the first factor of the workers × shards ×
@@ -63,6 +71,7 @@ pub(crate) fn spawn_workers<F>(
     residency: Arc<ResidencyManager>,
     gate: Arc<AdmissionGate>,
     exec_gauge: Arc<ConcurrencyGauge>,
+    sink: Option<Arc<dyn TelemetrySink>>,
 ) -> Vec<JoinHandle<()>>
 where
     F: Fn(usize) -> Box<dyn SpmmBackend> + Send + Sync + 'static,
@@ -75,29 +84,38 @@ where
             let gate = Arc::clone(&gate);
             let factory = Arc::clone(&factory);
             let exec_gauge = Arc::clone(&exec_gauge);
+            let sink = sink.clone();
             std::thread::spawn(move || {
                 let exec = factory(w);
-                worker_loop(&*exec, job_rx, recorder, residency, gate, exec_gauge);
+                worker_loop(&*exec, job_rx, recorder, residency, gate, exec_gauge, sink);
             })
         })
         .collect()
 }
 
 /// Run one merged job on a resolved handle: the routed path lets a sharded
-/// handle skip shards owning no non-zeros. Returns shards skipped.
+/// handle skip shards owning no non-zeros. Returns *this call's* execution
+/// report — taking skip counts and shard stats by value from the report
+/// (instead of polling `shard_stats()` afterwards) keeps attribution
+/// correct when several workers execute the same handle concurrently.
 fn run_job(
     handle: &dyn PreparedSpmm,
     job: &mut MergedJob,
-) -> Result<usize, crate::backend::BackendError> {
+) -> Result<ExecutionReport, crate::backend::BackendError> {
     if job.routed {
-        handle.execute_routed(&job.b_cat, &mut job.c_cat, job.n_total, job.alpha, job.beta)
+        handle.execute_routed_with_report(
+            &job.b_cat,
+            &mut job.c_cat,
+            job.n_total,
+            job.alpha,
+            job.beta,
+        )
     } else {
-        handle
-            .execute(&job.b_cat, &mut job.c_cat, job.n_total, job.alpha, job.beta)
-            .map(|()| 0)
+        handle.execute_with_report(&job.b_cat, &mut job.c_cat, job.n_total, job.alpha, job.beta)
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     backend: &dyn SpmmBackend,
     job_rx: Arc<Mutex<Receiver<MergedJob>>>,
@@ -105,6 +123,7 @@ fn worker_loop(
     residency: Arc<ResidencyManager>,
     gate: Arc<AdmissionGate>,
     exec_gauge: Arc<ConcurrencyGauge>,
+    sink: Option<Arc<dyn TelemetrySink>>,
 ) {
     let backend_name = backend.name();
     // Fallback cache for thread-local handles, MRU-first, keyed on
@@ -118,15 +137,33 @@ fn worker_loop(
         let Ok(mut job) = job else { break };
         let picked = Instant::now();
 
+        // Pre-allocate the first traced segment's `prepare` span id so a
+        // residency miss can parent its `backend.prepare` span under it
+        // before the `prepare` span itself is emitted below.
+        let prepare_span = if sink.is_some() {
+            job.segments
+                .iter()
+                .find_map(|s| s.trace)
+                .map(|ctx| (ctx.trace_id, next_span_id()))
+        } else {
+            None
+        };
+
         // Stage boundary: residency resolution (cache hit or prepare).
         let t_prepare = Instant::now();
-        let resolution =
-            residency.resolve(job.image.id, &job.image.image, backend, &recorder);
+        let resolution = residency.resolve_traced(
+            job.image.id,
+            &job.image.image,
+            backend,
+            &recorder,
+            prepare_span,
+        );
         let mut skipped = 0usize;
         let mut stats: Option<ShardRunStats> = None;
-        let (prepare_dur, exec_dur, error) = match resolution {
+        let mut resident_now: Option<u64> = None;
+        let (prepare_end, t_exec, exec_end, error) = match resolution {
             Resolution::Shared(shared) => {
-                let prepare_dur = t_prepare.elapsed();
+                let prepare_end = Instant::now();
                 // Execute straight through the shared handle — `&self`,
                 // no lock, concurrent with every other worker on the same
                 // matrix. The gauge counts overlapping executions so the
@@ -136,15 +173,20 @@ fn worker_loop(
                     let _in_exec = exec_gauge.enter();
                     run_job(&*shared, &mut job)
                 };
+                let exec_end = Instant::now();
                 let error = match r {
-                    Ok(sk) => {
-                        skipped = sk;
-                        stats = shared.shard_stats();
+                    Ok(report) => {
+                        skipped = report.skipped;
+                        stats = report.shard_stats;
+                        // Scratch pools may have grown under concurrency;
+                        // refresh the shared cache's byte accounting from
+                        // the handle's live footprint after responses.
+                        resident_now = Some(shared.resident_bytes_now());
                         None
                     }
                     Err(e) => Some(e.to_string()),
                 };
-                (prepare_dur, t_exec.elapsed(), error)
+                (prepare_end, t_exec, exec_end, error)
             }
             Resolution::ThreadLocal => {
                 // Resolve in the worker-local fallback cache; a miss pays
@@ -174,7 +216,7 @@ fn worker_loop(
                             Err(e) => Err(e.to_string()),
                         },
                     };
-                let prepare_dur = t_prepare.elapsed();
+                let prepare_end = Instant::now();
                 let t_exec = Instant::now();
                 let error = match resolved {
                     Ok(()) => {
@@ -184,9 +226,9 @@ fn worker_loop(
                             run_job(handle, &mut job)
                         };
                         match r {
-                            Ok(sk) => {
-                                skipped = sk;
-                                stats = handle.shard_stats();
+                            Ok(report) => {
+                                skipped = report.skipped;
+                                stats = report.shard_stats;
                                 None
                             }
                             Err(e) => Some(e.to_string()),
@@ -194,9 +236,12 @@ fn worker_loop(
                     }
                     Err(e) => Some(e),
                 };
-                (prepare_dur, t_exec.elapsed(), error)
+                let exec_end = Instant::now();
+                (prepare_end, t_exec, exec_end, error)
             }
         };
+        let prepare_dur = prepare_end.duration_since(t_prepare);
+        let exec_dur = exec_end.duration_since(t_exec);
         if error.is_none() {
             if let Some(ref s) = stats {
                 // Routed accounting only means something on a handle that
@@ -230,14 +275,70 @@ fn worker_loop(
                 exec: exec_dur,
                 flops: problem_flops(nnz, m, seg.n),
                 backend: backend_name,
+                image: job.image.id,
             };
             recorder.lock().unwrap().record(timing);
             let _ = seg.respond.send(SpmmResponse { c, timing, error: error.clone() });
             gate.release(job.image.id);
+            // Stage spans share the `Instant`s the timing above was built
+            // from, so the tree's durations reconcile with it exactly. The
+            // root `request` span closes last, after the response is sent.
+            if let (Some(sink), Some(ctx)) = (sink.as_deref(), seg.trace) {
+                sink.emit(SpanRecord::from_instants(
+                    ctx.trace_id,
+                    Some(ctx.root_id),
+                    "batch",
+                    seg.admitted,
+                    picked,
+                ));
+                let prepare_id = match prepare_span {
+                    Some((t, id)) if t == ctx.trace_id => id,
+                    _ => next_span_id(),
+                };
+                sink.emit(SpanRecord {
+                    trace_id: ctx.trace_id,
+                    span_id: prepare_id,
+                    parent_id: Some(ctx.root_id),
+                    name: "prepare",
+                    start_ns: instant_ns(t_prepare),
+                    end_ns: instant_ns(prepare_end),
+                    tags: Vec::new(),
+                });
+                sink.emit(
+                    SpanRecord::from_instants(
+                        ctx.trace_id,
+                        Some(ctx.root_id),
+                        "exec",
+                        t_exec,
+                        exec_end,
+                    )
+                    .tag("backend", backend_name),
+                );
+                let mut root = SpanRecord {
+                    trace_id: ctx.trace_id,
+                    span_id: ctx.root_id,
+                    parent_id: None,
+                    name: "request",
+                    start_ns: instant_ns(seg.submitted),
+                    end_ns: now_ns(),
+                    tags: Vec::new(),
+                }
+                .tag("backend", backend_name)
+                .tag("image", job.image.id.to_string());
+                if let Some(e) = &error {
+                    root = root.tag("error", e.clone());
+                }
+                sink.emit(root);
+            }
         }
-        // Feed the re-shard-on-skew window last: a rebuild it triggers is
-        // paid here, after this job's callers have their answers.
         if error.is_none() {
+            // Refresh the shared cache's byte accounting with the handle's
+            // live footprint (scratch pools grow under concurrency), then
+            // feed the re-shard-on-skew window last: a rebuild it triggers
+            // is paid here, after this job's callers have their answers.
+            if let Some(bytes) = resident_now {
+                residency.note_bytes(job.image.id, bytes, &recorder);
+            }
             if let Some(ref s) = stats {
                 residency.note_shards(job.image.id, s, &recorder);
             }

@@ -6,12 +6,22 @@
 //! rebuilds, execution concurrency (the [`ConcurrencyGauge`] high-water
 //! mark proving shared handles really execute in parallel), and
 //! shard-level load statistics — rolled up into [`Summary`].
+//!
+//! Latency aggregation is **streaming**: the recorder holds fixed-memory
+//! log-bucketed [`Histogram`]s (one for end-to-end latency, one per
+//! pipeline stage, one per backend) instead of the unbounded timing `Vec`
+//! it used to keep, so p50/p95/p99 stay available — per stage and per
+//! backend — no matter how long the server runs (± 2.2% relative bucket
+//! error; counts, sums, and stage means remain exact). Per-image
+//! aggregates attribute load to the matrix that caused it.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
 
 use crate::backend::PrepareCost;
 use crate::shard::ShardRunStats;
+use crate::telemetry::histogram::{Histogram, Percentiles};
+use crate::telemetry::json::{self, Value};
 
 /// Counts overlapping executions across the worker pool: `enter` bumps the
 /// live count (returning an RAII guard that drops it) and folds it into a
@@ -80,6 +90,9 @@ pub struct RequestTiming {
     /// Name of the backend that executed the request (mixed-backend
     /// deployments stay attributable).
     pub backend: &'static str,
+    /// Id of the matrix image the request ran against (0 for requests
+    /// that never reached an image, e.g. admission rejects).
+    pub image: u64,
 }
 
 impl RequestTiming {
@@ -89,10 +102,40 @@ impl RequestTiming {
     }
 }
 
-/// Accumulates request timings; thread-safe via external Mutex.
+/// Per-image serving aggregates: which matrix generated the load.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ImageSummary {
+    /// Image id (as carried by `ImageHandle`).
+    pub image: u64,
+    /// Requests served against this image.
+    pub requests: usize,
+    /// Sum of those requests' end-to-end latencies (s).
+    pub sum_latency_s: f64,
+    /// FLOPs served against this image.
+    pub flops: u64,
+}
+
+/// Accumulates request timings; thread-safe via external Mutex. Fixed
+/// memory: histograms per stage/backend plus small per-image aggregates.
 #[derive(Debug, Default)]
 pub struct Recorder {
-    timings: Vec<RequestTiming>,
+    total_hist: Histogram,
+    queue_hist: Histogram,
+    batch_hist: Histogram,
+    prepare_hist: Histogram,
+    exec_hist: Histogram,
+    /// Exact running stage sums — the stage means must decompose the mean
+    /// latency exactly, which bucketed estimates cannot guarantee.
+    queue_sum_s: f64,
+    batch_sum_s: f64,
+    prepare_sum_s: f64,
+    exec_sum_s: f64,
+    total_flops: u64,
+    /// Per-backend request count and end-to-end latency histogram
+    /// (insertion order; sorted at summary time).
+    per_backend: Vec<(&'static str, usize, Histogram)>,
+    /// Per-image aggregates (insertion order; sorted at summary time).
+    per_image: Vec<ImageSummary>,
     batches: usize,
     batched_requests: usize,
     rejected: usize,
@@ -118,7 +161,41 @@ pub struct Recorder {
 impl Recorder {
     /// Record one request.
     pub fn record(&mut self, t: RequestTiming) {
-        self.timings.push(t);
+        let total = t.total().as_secs_f64();
+        self.total_hist.record(total);
+        self.queue_hist.record(t.queue.as_secs_f64());
+        self.batch_hist.record(t.batch.as_secs_f64());
+        self.prepare_hist.record(t.prepare.as_secs_f64());
+        self.exec_hist.record(t.exec.as_secs_f64());
+        self.queue_sum_s += t.queue.as_secs_f64();
+        self.batch_sum_s += t.batch.as_secs_f64();
+        self.prepare_sum_s += t.prepare.as_secs_f64();
+        self.exec_sum_s += t.exec.as_secs_f64();
+        self.total_flops += t.flops;
+        match self.per_backend.iter_mut().find(|(name, _, _)| *name == t.backend) {
+            Some((_, count, hist)) => {
+                *count += 1;
+                hist.record(total);
+            }
+            None => {
+                let mut hist = Histogram::new();
+                hist.record(total);
+                self.per_backend.push((t.backend, 1, hist));
+            }
+        }
+        match self.per_image.iter_mut().find(|s| s.image == t.image) {
+            Some(s) => {
+                s.requests += 1;
+                s.sum_latency_s += total;
+                s.flops += t.flops;
+            }
+            None => self.per_image.push(ImageSummary {
+                image: t.image,
+                requests: 1,
+                sum_latency_s: total,
+                flops: t.flops,
+            }),
+        }
     }
 
     /// Record a dispatched batch of `n` requests.
@@ -197,32 +274,19 @@ impl Recorder {
 
     /// Summarize.
     pub fn summary(&self) -> Summary {
-        let mut totals: Vec<f64> =
-            self.timings.iter().map(|t| t.total().as_secs_f64()).collect();
-        totals.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| -> f64 {
-            if totals.is_empty() {
-                return 0.0;
-            }
-            let idx = ((totals.len() as f64 - 1.0) * p).round() as usize;
-            totals[idx]
-        };
-        let total_flops: u64 = self.timings.iter().map(|t| t.flops).sum();
-        let wall: f64 = totals.iter().sum();
-        let mut backends: Vec<(&'static str, usize)> = Vec::new();
-        for t in &self.timings {
-            match backends.iter_mut().find(|(name, _)| *name == t.backend) {
-                Some((_, count)) => *count += 1,
-                None => backends.push((t.backend, 1)),
-            }
-        }
+        let requests = self.total_hist.count() as usize;
+        let denom = requests.max(1) as f64;
+        let total_pct = self.total_hist.percentiles();
+        let mut backends: Vec<(&'static str, usize)> =
+            self.per_backend.iter().map(|(name, count, _)| (*name, *count)).collect();
         backends.sort_by_key(|(name, _)| *name);
-        let denom = self.timings.len().max(1) as f64;
-        let stage_mean = |f: fn(&RequestTiming) -> Duration| -> f64 {
-            self.timings.iter().map(|t| f(t).as_secs_f64()).sum::<f64>() / denom
-        };
+        let mut backend_latency: Vec<(&'static str, Percentiles)> =
+            self.per_backend.iter().map(|(name, _, h)| (*name, h.percentiles())).collect();
+        backend_latency.sort_by_key(|(name, _)| *name);
+        let mut images = self.per_image.clone();
+        images.sort_by_key(|s| s.image);
         Summary {
-            requests: self.timings.len(),
+            requests,
             batches: self.batches,
             mean_batch: if self.batches == 0 {
                 0.0
@@ -236,16 +300,22 @@ impl Recorder {
                 sheds
             },
             exec_concurrency_peak: self.exec_concurrency_peak,
-            p50_s: pct(0.50),
-            p95_s: pct(0.95),
-            p99_s: pct(0.99),
-            total_flops,
-            sum_latency_s: wall,
-            stage_queue_s: stage_mean(|t| t.queue),
-            stage_batch_s: stage_mean(|t| t.batch),
-            stage_prepare_s: stage_mean(|t| t.prepare),
-            stage_exec_s: stage_mean(|t| t.exec),
+            p50_s: total_pct.p50,
+            p95_s: total_pct.p95,
+            p99_s: total_pct.p99,
+            total_flops: self.total_flops,
+            sum_latency_s: self.total_hist.sum(),
+            stage_queue_s: self.queue_sum_s / denom,
+            stage_batch_s: self.batch_sum_s / denom,
+            stage_prepare_s: self.prepare_sum_s / denom,
+            stage_exec_s: self.exec_sum_s / denom,
+            stage_queue_pct: self.queue_hist.percentiles(),
+            stage_batch_pct: self.batch_hist.percentiles(),
+            stage_prepare_pct: self.prepare_hist.percentiles(),
+            stage_exec_pct: self.exec_hist.percentiles(),
             backends,
+            backend_latency,
+            images,
             prepares: self.prepares,
             prepare_hits: self.prepare_hits,
             prepare_hit_rate: if self.prepares + self.prepare_hits == 0 {
@@ -323,8 +393,21 @@ pub struct Summary {
     pub stage_prepare_s: f64,
     /// Mean per-request execution time (s).
     pub stage_exec_s: f64,
+    /// Queue-wait p50/p95/p99 (s), from the streaming stage histogram.
+    pub stage_queue_pct: Percentiles,
+    /// Batch-wait p50/p95/p99 (s).
+    pub stage_batch_pct: Percentiles,
+    /// Residency-resolution p50/p95/p99 (s) — tail shows cold prepares.
+    pub stage_prepare_pct: Percentiles,
+    /// Execution p50/p95/p99 (s).
+    pub stage_exec_pct: Percentiles,
     /// Requests served per backend name, sorted by name.
     pub backends: Vec<(&'static str, usize)>,
+    /// End-to-end latency percentiles per backend name, sorted by name
+    /// (same names as [`Summary::backends`]).
+    pub backend_latency: Vec<(&'static str, Percentiles)>,
+    /// Per-image request/latency/FLOP aggregates, sorted by image id.
+    pub images: Vec<ImageSummary>,
     /// Matrix prepares performed (prepared-handle cache misses; each pays
     /// the backend's build path once, shared across workers).
     pub prepares: usize,
@@ -364,6 +447,120 @@ pub struct Summary {
     pub mean_shard_makespan_s: f64,
 }
 
+fn percentiles_value(p: &Percentiles) -> Value {
+    json::obj(vec![
+        ("p50_s", json::num(p.p50)),
+        ("p95_s", json::num(p.p95)),
+        ("p99_s", json::num(p.p99)),
+    ])
+}
+
+impl Summary {
+    /// Serialize the summary as JSON (the `serve --metrics-json` payload).
+    /// Stage entries carry both the exact mean and the histogram
+    /// percentiles; backends merge count and latency percentiles per name.
+    pub fn to_value(&self) -> Value {
+        let stage = |mean: f64, pct: &Percentiles| -> Value {
+            json::obj(vec![
+                ("mean_s", json::num(mean)),
+                ("p50_s", json::num(pct.p50)),
+                ("p95_s", json::num(pct.p95)),
+                ("p99_s", json::num(pct.p99)),
+            ])
+        };
+        json::obj(vec![
+            ("requests", json::num(self.requests as f64)),
+            ("batches", json::num(self.batches as f64)),
+            ("mean_batch", json::num(self.mean_batch)),
+            ("rejected", json::num(self.rejected as f64)),
+            (
+                "image_sheds",
+                Value::Arr(
+                    self.image_sheds
+                        .iter()
+                        .map(|(id, count)| {
+                            json::obj(vec![
+                                ("image", json::num(*id as f64)),
+                                ("sheds", json::num(*count as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("exec_concurrency_peak", json::num(self.exec_concurrency_peak as f64)),
+            ("latency", percentiles_value(&Percentiles {
+                p50: self.p50_s,
+                p95: self.p95_s,
+                p99: self.p99_s,
+            })),
+            ("total_flops", json::num(self.total_flops as f64)),
+            ("sum_latency_s", json::num(self.sum_latency_s)),
+            (
+                "stages",
+                json::obj(vec![
+                    ("queue", stage(self.stage_queue_s, &self.stage_queue_pct)),
+                    ("batch", stage(self.stage_batch_s, &self.stage_batch_pct)),
+                    ("prepare", stage(self.stage_prepare_s, &self.stage_prepare_pct)),
+                    ("exec", stage(self.stage_exec_s, &self.stage_exec_pct)),
+                ]),
+            ),
+            (
+                "backends",
+                Value::Arr(
+                    self.backends
+                        .iter()
+                        .map(|(name, count)| {
+                            let pct = self
+                                .backend_latency
+                                .iter()
+                                .find(|(n, _)| n == name)
+                                .map(|(_, p)| *p)
+                                .unwrap_or_default();
+                            json::obj(vec![
+                                ("backend", json::s(*name)),
+                                ("requests", json::num(*count as f64)),
+                                ("p50_s", json::num(pct.p50)),
+                                ("p95_s", json::num(pct.p95)),
+                                ("p99_s", json::num(pct.p99)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "images",
+                Value::Arr(
+                    self.images
+                        .iter()
+                        .map(|i| {
+                            json::obj(vec![
+                                ("image", json::num(i.image as f64)),
+                                ("requests", json::num(i.requests as f64)),
+                                ("sum_latency_s", json::num(i.sum_latency_s)),
+                                ("flops", json::num(i.flops as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("prepares", json::num(self.prepares as f64)),
+            ("prepare_hits", json::num(self.prepare_hits as f64)),
+            ("prepare_hit_rate", json::num(self.prepare_hit_rate)),
+            ("mean_prepare_s", json::num(self.mean_prepare_s)),
+            ("prepared_bytes", json::num(self.prepared_bytes as f64)),
+            ("evictions", json::num(self.evictions as f64)),
+            ("routed_jobs", json::num(self.routed_jobs as f64)),
+            ("shards_skipped", json::num(self.shards_skipped as f64)),
+            ("reshards", json::num(self.reshards as f64)),
+            ("shard_execs", json::num(self.shard_execs as f64)),
+            ("mean_shards", json::num(self.mean_shards)),
+            ("mean_shard_imbalance", json::num(self.mean_shard_imbalance)),
+            ("max_shard_imbalance", json::num(self.max_shard_imbalance)),
+            ("mean_shard_makespan_s", json::num(self.mean_shard_makespan_s)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -380,6 +577,7 @@ mod tests {
             exec: Duration::from_millis(ms - ms / 2),
             flops,
             backend,
+            image: 1,
         }
     }
 
@@ -406,6 +604,7 @@ mod tests {
             exec: Duration::from_millis(4),
             flops: 1,
             backend: "test",
+            image: 1,
         });
         r.record(RequestTiming {
             queue: Duration::from_millis(3),
@@ -414,6 +613,7 @@ mod tests {
             exec: Duration::from_millis(8),
             flops: 1,
             backend: "test",
+            image: 1,
         });
         let s = r.summary();
         assert!((s.stage_queue_s - 0.002).abs() < 1e-9);
@@ -426,6 +626,35 @@ mod tests {
             (stage_sum - mean_latency).abs() < 1e-12,
             "stages must decompose the latency: {stage_sum} vs {mean_latency}"
         );
+    }
+
+    #[test]
+    fn per_stage_percentiles_come_from_streaming_histograms() {
+        let mut r = Recorder::default();
+        // 20 requests: queue fixed at 1 ms, exec spread 1..=20 ms.
+        for ms in 1..=20u64 {
+            r.record(RequestTiming {
+                queue: Duration::from_millis(1),
+                batch: Duration::ZERO,
+                prepare: Duration::ZERO,
+                exec: Duration::from_millis(ms),
+                flops: 0,
+                backend: "test",
+                image: 1,
+            });
+        }
+        let s = r.summary();
+        assert!((s.stage_queue_pct.p50 - 0.001).abs() / 0.001 < 0.045, "{:?}", s.stage_queue_pct);
+        assert!(
+            (s.stage_queue_pct.p99 - 0.001).abs() / 0.001 < 0.045,
+            "constant stage has a flat tail: {:?}",
+            s.stage_queue_pct
+        );
+        // Exec p50 ~ 10-11 ms, p99 ~ 20 ms (rank rounding), within bucket error.
+        assert!((s.stage_exec_pct.p50 - 0.010).abs() < 0.002, "{:?}", s.stage_exec_pct);
+        assert!((s.stage_exec_pct.p99 - 0.020).abs() < 0.002, "{:?}", s.stage_exec_pct);
+        // Zero-valued stages report zero percentiles.
+        assert_eq!(s.stage_batch_pct.p99, 0.0);
     }
 
     #[test]
@@ -444,12 +673,15 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.p50_s, 0.0);
         assert!(s.backends.is_empty());
+        assert!(s.backend_latency.is_empty());
+        assert!(s.images.is_empty());
         assert_eq!(s.shard_execs, 0);
         assert_eq!(s.mean_shard_imbalance, 0.0);
         assert_eq!(s.prepares, 0);
         assert_eq!(s.prepare_hit_rate, 0.0);
         assert_eq!(s.stage_queue_s, 0.0);
         assert_eq!(s.stage_exec_s, 0.0);
+        assert_eq!(s.stage_exec_pct, Percentiles::default());
         assert_eq!(s.rejected, 0);
         assert!(s.image_sheds.is_empty());
         assert_eq!(s.exec_concurrency_peak, 0);
@@ -575,5 +807,58 @@ mod tests {
         r.record(tb(3, 10, "native"));
         let s = r.summary();
         assert_eq!(s.backends, vec![("functional", 1), ("native", 2)]);
+        // Latency percentiles ride along per backend, same name order.
+        assert_eq!(s.backend_latency.len(), 2);
+        assert_eq!(s.backend_latency[0].0, "functional");
+        assert_eq!(s.backend_latency[1].0, "native");
+        assert!((s.backend_latency[0].1.p50 - 0.002).abs() / 0.002 < 0.045);
+        // Native served 1 ms and 3 ms; p50 rank 1 of 2 -> ~3 ms.
+        assert!((s.backend_latency[1].1.p50 - 0.003).abs() / 0.003 < 0.045);
+    }
+
+    #[test]
+    fn image_breakdown_attributes_load_per_image() {
+        let mut r = Recorder::default();
+        let mut t7 = t(2, 100);
+        t7.image = 7;
+        let mut t3 = t(4, 50);
+        t3.image = 3;
+        r.record(t7);
+        r.record(t3);
+        r.record(t7);
+        let s = r.summary();
+        assert_eq!(s.images.len(), 2);
+        assert_eq!(s.images[0].image, 3, "sorted by image id");
+        assert_eq!(s.images[0].requests, 1);
+        assert_eq!(s.images[0].flops, 50);
+        assert_eq!(s.images[1].image, 7);
+        assert_eq!(s.images[1].requests, 2);
+        assert_eq!(s.images[1].flops, 200);
+        assert!((s.images[1].sum_latency_s - 0.004).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_exports_stage_percentiles_as_json() {
+        let mut r = Recorder::default();
+        for ms in [1u64, 2, 3, 4, 5, 6, 7, 8, 9, 100] {
+            r.record(t(ms, 10));
+        }
+        r.record_batch(10);
+        let v = r.summary().to_value();
+        let text = v.to_json_pretty();
+        let parsed = crate::telemetry::json::parse(&text).unwrap();
+        assert_eq!(parsed.get("requests").and_then(Value::as_u64), Some(10));
+        let exec = parsed.get("stages").and_then(|s| s.get("exec")).unwrap();
+        let p99 = exec.get("p99_s").and_then(Value::as_f64).unwrap();
+        assert!(p99 > 0.0, "per-stage p99 must be exported: {text}");
+        let queue = parsed.get("stages").and_then(|s| s.get("queue")).unwrap();
+        assert!(queue.get("p50_s").is_some());
+        assert!(queue.get("mean_s").is_some());
+        let backends = parsed.get("backends").and_then(Value::as_arr).unwrap();
+        assert_eq!(backends.len(), 1);
+        assert_eq!(backends[0].get("backend").and_then(Value::as_str), Some("test"));
+        assert!(backends[0].get("p95_s").is_some());
+        let images = parsed.get("images").and_then(Value::as_arr).unwrap();
+        assert_eq!(images[0].get("requests").and_then(Value::as_u64), Some(10));
     }
 }

@@ -15,11 +15,13 @@
 //!  │  quota,     │   │  aware      │   │  stage       │   │  byte-sized  │
 //!  │  shedding   │   │  routing    │   │  timings,    │   │  cache of    │
 //!  └─────────────┘   └─────────────┘   │  concurrent  │   │  shared Arc< │
-//!                                      │  &self exec  │   │  PreparedSpmm│
-//!                                      └──────────────┘   │  > handles,  │
-//!                                                         │  re-shard on │
-//!                                                         │  skew        │
-//!                                                         └──────────────┘
+//!        │                 │           │  &self exec  │   │  PreparedSpmm│
+//!        │ admission       │ queue     └──────────────┘   │  > handles,  │
+//!        ▼ span            ▼ span        │ batch/prepare/ │  re-shard on │
+//!  ┌──────────────────────────────────── ▼ exec + root ─┐ │  skew        │
+//!  │ telemetry sink (optional): one span tree / request │ └──────────────┘
+//!  └────────────────────────────────────────────────────┘   │ backend.
+//!                                                           ▼ prepare span
 //! ```
 //!
 //! * [`admission`] — an in-flight gate sheds load at the front door
@@ -41,6 +43,16 @@
 //!   (the only locks left guard the cache map and the engines' scratch
 //!   pools); rolling shard-imbalance triggers re-shard-on-skew (drop +
 //!   re-prepare at a smaller S) without callers noticing.
+//!
+//! Every stage is instrumented twice over. Aggregates flow into
+//! [`metrics::Recorder`]'s fixed-memory streaming histograms (per-stage,
+//! per-backend, and per-image p50/p95/p99 in [`metrics::Summary`]). Per
+//! request, an optional [`crate::telemetry::trace::TelemetrySink`] on
+//! [`server::PipelineConfig`] receives a span tree — `admission`, `queue`,
+//! `batch`, `prepare` (with a `backend.prepare` child on residency
+//! misses), `exec`, and a closing `request` root — stamped from the same
+//! `Instant`s as [`metrics::RequestTiming`], so traces and metrics always
+//! reconcile.
 //!
 //! The public surface is the [`server::Server`] facade: `start`,
 //! `start_backend`, `register`, `submit`, `call`, `shutdown` — plus

@@ -32,11 +32,13 @@
 //!   product cannot oversubscribe the machine.
 
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use super::metrics::Recorder;
 use crate::backend::{self, BackendError, PreparedSpmm, SpmmBackend};
 use crate::sched::ScheduledMatrix;
 use crate::shard::ShardRunStats;
+use crate::telemetry::trace::{SpanRecord, TelemetrySink};
 
 /// Depth of the per-worker *fallback* cache used for backends whose
 /// handles cannot cross threads (`prepare_send` refused, e.g. the real
@@ -175,16 +177,21 @@ pub struct ResidencyManager {
     state: Mutex<State>,
     /// Signaled when an in-flight prepare (see `State::preparing`) ends.
     prepare_done: Condvar,
+    /// Telemetry sink: cache misses emit a `backend.prepare` span covering
+    /// the unlocked build (`None` disables emission).
+    sink: Option<Arc<dyn TelemetrySink>>,
 }
 
 impl ResidencyManager {
     /// Build a manager. `ctx` enables re-shard-on-skew and is only
     /// available when the server was started from a registry spec (a
-    /// closure factory has no spec to rebuild from).
+    /// closure factory has no spec to rebuild from). `sink` receives a
+    /// `backend.prepare` span per actual (miss-path) handle build.
     pub fn new(
         policy: ResidencyPolicy,
         reshard: ReshardPolicy,
         ctx: Option<ReshardContext>,
+        sink: Option<Arc<dyn TelemetrySink>>,
     ) -> ResidencyManager {
         ResidencyManager {
             policy,
@@ -197,6 +204,7 @@ impl ResidencyManager {
                 thread_local: Vec::new(),
             }),
             prepare_done: Condvar::new(),
+            sink,
         }
     }
 
@@ -214,6 +222,22 @@ impl ResidencyManager {
         image: &Arc<ScheduledMatrix>,
         factory: &dyn SpmmBackend,
         recorder: &Mutex<Recorder>,
+    ) -> Resolution {
+        self.resolve_traced(id, image, factory, recorder, None)
+    }
+
+    /// [`ResidencyManager::resolve`] with telemetry attribution: when the
+    /// lookup misses and this call pays the build, a `backend.prepare`
+    /// span (child of `trace`'s `(trace_id, parent_span_id)`) covering the
+    /// unlocked `prepare_send` is emitted to the configured sink. Hits
+    /// emit nothing — that is the point of the amortization.
+    pub(crate) fn resolve_traced(
+        &self,
+        id: u64,
+        image: &Arc<ScheduledMatrix>,
+        factory: &dyn SpmmBackend,
+        recorder: &Mutex<Recorder>,
+        trace: Option<(u64, u64)>,
     ) -> Resolution {
         let mut guard = self.state.lock().unwrap();
         loop {
@@ -244,7 +268,20 @@ impl ResidencyManager {
         // Miss: the build path, run unlocked. Thread-local backends (and
         // genuinely failing prepares) fall back to the worker, which
         // surfaces the engine's own error per request.
+        let t_build = Instant::now();
         let prepared = factory.prepare_send(Arc::clone(image));
+        if let (Some(sink), Some((trace_id, parent))) = (self.sink.as_ref(), trace) {
+            let span = SpanRecord::from_instants(
+                trace_id,
+                Some(parent),
+                "backend.prepare",
+                t_build,
+                Instant::now(),
+            )
+            .tag("backend", factory.name().to_string())
+            .tag("outcome", if prepared.is_ok() { "built" } else { "refused" });
+            sink.emit(span);
+        }
 
         let mut guard = self.state.lock().unwrap();
         let st = &mut *guard;
@@ -353,6 +390,25 @@ impl ResidencyManager {
         evict_to_budget(&self.policy, st, recorder);
     }
 
+    /// Refresh the byte accounting of `id` from a live measurement
+    /// ([`crate::backend::PreparedSpmm::resident_bytes_now`]). Scratch
+    /// pools grow after prepare — with request width and with peak
+    /// concurrency — so the prepare-time estimate undercounts hot handles;
+    /// the dispatch stage calls this after each execution so the
+    /// byte-budgeted LRU charges handles for what they actually hold, and
+    /// the budget is re-enforced when the pool grew.
+    pub fn note_bytes(&self, id: u64, bytes: u64, recorder: &Mutex<Recorder>) {
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        let Some(e) = st.entries.iter_mut().find(|e| e.id == id) else { return };
+        if e.bytes == bytes {
+            return;
+        }
+        st.total_bytes = st.total_bytes - e.bytes + bytes;
+        e.bytes = bytes;
+        evict_to_budget(&self.policy, st, recorder);
+    }
+
     /// Total bytes currently resident across cached handles.
     pub fn resident_bytes(&self) -> u64 {
         self.state.lock().unwrap().total_bytes
@@ -417,6 +473,7 @@ mod tests {
             ResidencyPolicy::default(),
             ReshardPolicy::default(),
             None,
+            None,
         );
         let recorder = Mutex::new(Recorder::default());
         let be = NativeBackend::new(1);
@@ -442,6 +499,7 @@ mod tests {
             ResidencyPolicy::default(),
             ReshardPolicy::default(),
             None,
+            None,
         );
         probe.resolve(0, &image(10), &be, &recorder);
         let one = probe.resident_bytes();
@@ -450,6 +508,7 @@ mod tests {
         let mgr = ResidencyManager::new(
             ResidencyPolicy { max_resident_bytes: 2 * one + one / 2 },
             ReshardPolicy::default(),
+            None,
             None,
         );
         for (id, seed) in [(1u64, 11u64), (2, 12), (3, 13)] {
@@ -466,6 +525,7 @@ mod tests {
         let tiny = ResidencyManager::new(
             ResidencyPolicy { max_resident_bytes: 1 },
             ReshardPolicy::default(),
+            None,
             None,
         );
         tiny.resolve(9, &image(14), &be, &recorder);
@@ -507,6 +567,7 @@ mod tests {
             ResidencyPolicy::default(),
             ReshardPolicy::default(),
             None,
+            None,
         );
         let recorder = Mutex::new(Recorder::default());
         let be = LocalOnly(AtomicUsize::new(0));
@@ -531,6 +592,7 @@ mod tests {
             ResidencyPolicy::default(),
             ReshardPolicy { imbalance_threshold: 1.5, window: 2 },
             Some(ReshardContext { inner_spec: "functional".into(), budget: 4 }),
+            None,
         );
         let recorder = Mutex::new(Recorder::default());
         let be = ShardedBackend::from_spec(4, "functional").unwrap();
@@ -558,6 +620,7 @@ mod tests {
             ResidencyPolicy::default(),
             ReshardPolicy { imbalance_threshold: 1.5, window: 1 },
             Some(ReshardContext { inner_spec: "functional".into(), budget: 4 }),
+            None,
         );
         let recorder = Mutex::new(Recorder::default());
         let be = ShardedBackend::from_spec(8, "functional").unwrap();
@@ -585,6 +648,7 @@ mod tests {
             ResidencyPolicy::default(),
             ReshardPolicy { imbalance_threshold: 1.1, window: 1 },
             None,
+            None,
         );
         no_ctx.resolve(1, &skewed_image(), &be, &recorder);
         no_ctx.note_shards(1, &stats(4, 9.0), &recorder);
@@ -594,6 +658,7 @@ mod tests {
             ResidencyPolicy::default(),
             ReshardPolicy::default(),
             Some(ReshardContext { inner_spec: "functional".into(), budget: 4 }),
+            None,
         );
         off.resolve(2, &skewed_image(), &be, &recorder);
         for _ in 0..40 {
@@ -621,6 +686,7 @@ mod tests {
             ResidencyPolicy::default(),
             ReshardPolicy { imbalance_threshold: 1.5, window: 1 },
             Some(ReshardContext { inner_spec: "native:1".into(), budget: 4 }),
+            None,
         );
         let recorder = Mutex::new(Recorder::default());
         let be = ShardedBackend::from_spec(8, "native:1").unwrap();

@@ -24,6 +24,7 @@ use super::metrics::{ConcurrencyGauge, Recorder, RequestTiming, Summary};
 use super::residency::{ReshardContext, ReshardPolicy, ResidencyManager, ResidencyPolicy};
 use crate::backend::{self, BackendError, SpmmBackend};
 use crate::sched::ScheduledMatrix;
+use crate::telemetry::trace::{next_span_id, next_trace_id, SpanRecord, TelemetrySink};
 
 pub use super::batcher::BatchPolicy;
 pub use super::residency::PREPARED_CACHE_ENTRIES;
@@ -70,8 +71,8 @@ pub struct SpmmResponse {
 
 /// Every pipeline stage's policy in one place. `Default` matches the
 /// classic constructors: generous admission, 2 ms merge window, 512 MiB
-/// residency, re-shard-on-skew off.
-#[derive(Clone, Copy, Debug, Default)]
+/// residency, re-shard-on-skew off, no telemetry sink.
+#[derive(Clone, Default)]
 pub struct PipelineConfig {
     /// Stage 1 — admission backpressure.
     pub admission: AdmissionPolicy,
@@ -81,6 +82,34 @@ pub struct PipelineConfig {
     pub residency: ResidencyPolicy,
     /// Stage 4 — re-shard-on-skew trigger (needs a registry-spec server).
     pub reshard: ReshardPolicy,
+    /// Telemetry sink receiving one [`SpanRecord`] per completed pipeline
+    /// stage of every request (admission, queue, batch, prepare, exec,
+    /// plus a `request` root and `backend.prepare` on residency misses).
+    /// `None` (the default) disables tracing; emission is a few atomic
+    /// increments and one sink call per span, off the lock-held paths.
+    pub sink: Option<Arc<dyn TelemetrySink>>,
+}
+
+impl std::fmt::Debug for PipelineConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PipelineConfig")
+            .field("admission", &self.admission)
+            .field("batch", &self.batch)
+            .field("residency", &self.residency)
+            .field("reshard", &self.reshard)
+            .field("sink", &self.sink.as_ref().map(|_| "<dyn TelemetrySink>"))
+            .finish()
+    }
+}
+
+/// Pre-allocated trace ids carried alongside one request through every
+/// pipeline stage. The root `request` span id is reserved up front so
+/// stage spans can reference their parent before it is emitted (the root
+/// itself is written by dispatch when the response is sent).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct TraceCtx {
+    pub(crate) trace_id: u64,
+    pub(crate) root_id: u64,
 }
 
 /// The serving coordinator facade.
@@ -92,6 +121,7 @@ pub struct Server {
     recorder: Arc<Mutex<Recorder>>,
     exec_gauge: Arc<ConcurrencyGauge>,
     next_image_id: AtomicU64,
+    sink: Option<Arc<dyn TelemetrySink>>,
 }
 
 impl Server {
@@ -175,16 +205,19 @@ impl Server {
         let recorder = Arc::new(Mutex::new(Recorder::default()));
         let gate = Arc::new(AdmissionGate::new(config.admission));
         let exec_gauge = Arc::new(ConcurrencyGauge::new());
+        let sink = config.sink.clone();
         let residency = Arc::new(ResidencyManager::new(
             config.residency,
             config.reshard,
             reshard_ctx,
+            sink.clone(),
         ));
 
         let batcher = {
             let recorder = Arc::clone(&recorder);
             let policy = config.batch;
-            std::thread::spawn(move || batcher_loop(rx, job_tx, policy, recorder))
+            let sink = sink.clone();
+            std::thread::spawn(move || batcher_loop(rx, job_tx, policy, recorder, sink))
         };
         let workers = dispatch::spawn_workers(
             n_workers,
@@ -194,6 +227,7 @@ impl Server {
             residency,
             Arc::clone(&gate),
             Arc::clone(&exec_gauge),
+            sink.clone(),
         );
 
         Server {
@@ -204,6 +238,7 @@ impl Server {
             recorder,
             exec_gauge,
             next_image_id: AtomicU64::new(1),
+            sink,
         }
     }
 
@@ -220,9 +255,15 @@ impl Server {
     /// [`SpmmResponse::error`] set (the latter counted in
     /// [`Summary::rejected`]).
     pub fn submit(&self, req: SpmmRequest) -> Receiver<SpmmResponse> {
+        let submitted = Instant::now();
+        let trace = self.sink.as_ref().map(|_| TraceCtx {
+            trace_id: next_trace_id(),
+            root_id: next_span_id(),
+        });
         let (tx, rx) = mpsc::channel();
         let sm = &req.image.image;
         if req.b.len() != sm.k * req.n || req.c.len() != sm.m * req.n {
+            self.emit_admission(trace, submitted, req.image.id, "shape_mismatch");
             let _ = tx.send(SpmmResponse {
                 c: Vec::new(),
                 timing: Self::rejected_timing(),
@@ -241,6 +282,7 @@ impl Server {
             Admit::Admitted => {}
             Admit::Full => {
                 self.recorder.lock().unwrap().record_reject();
+                self.emit_admission(trace, submitted, req.image.id, "shed_full");
                 let _ = tx.send(SpmmResponse {
                     c: Vec::new(),
                     timing: Self::rejected_timing(),
@@ -257,6 +299,7 @@ impl Server {
                 recorder.record_reject();
                 recorder.record_image_shed(req.image.id);
                 drop(recorder);
+                self.emit_admission(trace, submitted, req.image.id, "shed_image_quota");
                 let _ = tx.send(SpmmResponse {
                     c: Vec::new(),
                     timing: Self::rejected_timing(),
@@ -269,10 +312,35 @@ impl Server {
                 return rx;
             }
         }
+        self.emit_admission(trace, submitted, req.image.id, "admitted");
         self.tx
-            .send(Msg::Request(req, tx, Instant::now()))
+            .send(Msg::Request(req, tx, submitted, trace))
             .expect("server stopped");
         rx
+    }
+
+    /// Emit the stage-1 span: the admission decision for one request.
+    /// Rejected requests never get a `request` root span, so their lone
+    /// `admission` span becomes the trace root when the tree is rebuilt.
+    fn emit_admission(
+        &self,
+        trace: Option<TraceCtx>,
+        submitted: Instant,
+        image: u64,
+        outcome: &'static str,
+    ) {
+        if let (Some(sink), Some(ctx)) = (self.sink.as_ref(), trace) {
+            let span = SpanRecord::from_instants(
+                ctx.trace_id,
+                Some(ctx.root_id),
+                "admission",
+                submitted,
+                Instant::now(),
+            )
+            .tag("image", image.to_string())
+            .tag("outcome", outcome.to_string());
+            sink.emit(span);
+        }
     }
 
     /// Zeroed timing for requests refused before entering the pipeline.
@@ -284,6 +352,7 @@ impl Server {
             exec: Duration::ZERO,
             flops: 0,
             backend: "rejected",
+            image: 0,
         }
     }
 

@@ -37,6 +37,7 @@
 //! | [`runtime`] | — | PJRT client wrapping the AOT HLO artifacts (stubbed unless both `pjrt` and `xla` features are on) |
 //! | [`coordinator`] | — | adaptive SpMM serving pipeline in four stages — admission (backpressure gate + per-image fairness quota), batcher (merge window + shard-aware routing), dispatch (worker pool + thread budgets + stage timings + concurrent execution over shared `Arc<dyn PreparedSpmm>` handles), residency (byte-sized cache of shared lock-free handles + re-shard-on-skew) — behind the [`coordinator::Server`] facade |
 //! | [`metrics`] | §4.2 | GFLOP/s, bandwidth utilization, energy efficiency, geomean/CDF |
+//! | [`telemetry`] | §4.2 methodology | observability: per-request span traces (sink threaded through the coordinator via `PipelineConfig`), fixed-memory streaming latency histograms behind `Summary`, hand-rolled JSON, and the persisted `BENCH_*.json` perf-trajectory schema with regression compare |
 //! | [`report`] | §4.2, §4.3 | experiment drivers regenerating Tables 1–5 and Figures 7–10 |
 
 pub mod arch;
@@ -53,3 +54,4 @@ pub mod runtime;
 pub mod sched;
 pub mod shard;
 pub mod sparse;
+pub mod telemetry;

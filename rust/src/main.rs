@@ -6,6 +6,11 @@
 //!               [--backend NAME] [--shards S] [--xla]
 //! sextans gen   --m M --k K --density D --out file.mtx [--seed S]
 //! sextans serve [--requests R] [--workers W] [--backend NAME] [--shards S]
+//!               [--trace-json FILE] [--metrics-json FILE]
+//! sextans bench [--full] [--name NAME] [--out DIR] [--timestamp TS]
+//!               [--backend NAME] [--baseline FILE] [--tolerance T] [--strict]
+//! sextans trace [<catalog-matrix>] [--requests R] [--workers W]
+//!               [--backend NAME] [--out FILE]
 //! sextans backends
 //! sextans info
 //! ```
@@ -22,10 +27,12 @@
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
+use sextans::arch::simulator::problem_flops;
 use sextans::arch::{resources, simulate, AcceleratorConfig};
 use sextans::backend::{self, SpmmBackend};
+use sextans::bench_util;
 use sextans::cli::Cli;
 use sextans::coordinator::{
     AdmissionPolicy, BatchPolicy, PipelineConfig, ReshardPolicy, ResidencyPolicy, Server,
@@ -36,8 +43,10 @@ use sextans::perfmodel::Platform;
 use sextans::report::{self, experiments};
 use sextans::sched::preprocess;
 use sextans::shard::{ShardExecutor, ShardedMatrix};
-use sextans::sparse::catalog::Scale;
+use sextans::sparse::catalog::{self, Scale};
 use sextans::sparse::{gen, mm_io, rng::Rng, Coo};
+use sextans::telemetry::bench_record::{compare, BenchMeasurement, BenchRecord, ScalingPoint};
+use sextans::telemetry::trace::{build_tree, render_tree, TelemetrySink, TraceCollector};
 
 fn main() {
     let cli = Cli::from_env();
@@ -46,11 +55,13 @@ fn main() {
         "run" => cmd_run(&cli),
         "gen" => cmd_gen(&cli),
         "serve" => cmd_serve(&cli),
+        "bench" => cmd_bench(&cli),
+        "trace" => cmd_trace(&cli),
         "backends" => cmd_backends(),
         "info" | "" => cmd_info(),
         other => {
             eprintln!("unknown command {other:?}");
-            eprintln!("commands: repro, run, gen, serve, backends, info");
+            eprintln!("commands: repro, run, gen, serve, bench, trace, backends, info");
             std::process::exit(2);
         }
     };
@@ -297,7 +308,10 @@ fn cmd_gen(cli: &Cli) -> Result<()> {
 /// in-flight fairness quota, 0 = off), `--max-columns`/`--window-ms`
 /// (batching), `--route-columns` (shard-aware routing threshold),
 /// `--resident-mb` (residency byte budget), `--reshard-threshold` /
-/// `--reshard-window` (re-shard-on-skew trigger).
+/// `--reshard-window` (re-shard-on-skew trigger). Telemetry:
+/// `--trace-json FILE` attaches a span collector and writes every
+/// request's span tree as JSON; `--metrics-json FILE` writes the shutdown
+/// summary (per-stage/per-backend/per-image p50/p95/p99 included).
 fn cmd_serve(cli: &Cli) -> Result<()> {
     let requests = cli.get_usize("requests", 64);
     let workers = cli.get_usize("workers", 2);
@@ -320,6 +334,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         coo.nnz()
     );
 
+    let collector = cli.get("trace-json").map(|_| Arc::new(TraceCollector::new()));
     let defaults = PipelineConfig::default();
     let config = PipelineConfig {
         admission: AdmissionPolicy {
@@ -345,6 +360,9 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             imbalance_threshold: cli.get_f32("reshard-threshold", f32::INFINITY) as f64,
             window: cli.get_usize("reshard-window", defaults.reshard.window),
         },
+        sink: collector
+            .as_ref()
+            .map(|c| Arc::clone(c) as Arc<dyn TelemetrySink>),
     };
 
     let server = Server::start_backend_with(workers, config, backend_spec)?;
@@ -423,6 +441,265 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             s.max_shard_imbalance,
             s.mean_shard_makespan_s * 1e3
         );
+    }
+    if let Some(path) = cli.get("metrics-json") {
+        std::fs::write(path, s.to_value().to_json_pretty())?;
+        println!("  metrics summary written to {path}");
+    }
+    if let (Some(path), Some(collector)) = (cli.get("trace-json"), &collector) {
+        std::fs::write(path, collector.to_value().to_json_pretty())?;
+        println!(
+            "  {} spans across {} traces written to {path}",
+            collector.spans().len(),
+            collector.trace_ids().len()
+        );
+    }
+    Ok(())
+}
+
+/// `bench`: measure SpMM throughput/latency on catalog matrices and write a
+/// machine-readable `BENCH_<name>.json` snapshot (schema in
+/// [`sextans::telemetry::bench_record`]). The default is a CI-sized smoke
+/// run; `--full` measures one representative matrix per catalog family plus
+/// the Table 1 workload. `--baseline FILE` compares against a previous
+/// snapshot and (with `--strict`) fails on regressions beyond
+/// `--tolerance` (default 0.15).
+fn cmd_bench(cli: &Cli) -> Result<()> {
+    let full = cli.flag("full");
+    let name = cli
+        .get("name")
+        .unwrap_or(if full { "full" } else { "smoke" })
+        .to_string();
+    let timestamp = cli.get("timestamp").unwrap_or("unknown").to_string();
+    let out_dir = PathBuf::from(cli.get("out").unwrap_or("."));
+    let base_spec = cli.get("backend").unwrap_or("native").to_string();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let backend_spec = backend::apply_thread_budget(&base_spec, cores);
+
+    let specs: Vec<catalog::MatrixSpec> = if full {
+        let cat = catalog::catalog(Scale::Ci);
+        let mut picks: Vec<catalog::MatrixSpec> = [
+            "snap_rmat_10",
+            "ss_banded_10",
+            "ss_circuit_10",
+            "ss_uniform_10",
+            "ss_block_10",
+            "ss_powrows_10",
+        ]
+        .iter()
+        .filter_map(|name| cat.iter().find(|s| s.name == *name).cloned())
+        .collect();
+        picks.push(catalog::crystm03_like());
+        picks
+    } else {
+        vec![
+            catalog::MatrixSpec {
+                name: "smoke_banded".into(),
+                family: catalog::Family::SsBanded,
+                m: 2048,
+                k: 2048,
+                nnz: 32_768,
+                seed: 0xBE9C01,
+            },
+            catalog::MatrixSpec {
+                name: "smoke_rmat".into(),
+                family: catalog::Family::SnapRmat,
+                m: 2048,
+                k: 2048,
+                nnz: 20_000,
+                seed: 0xBE9C02,
+            },
+        ]
+    };
+    let n_values: &[usize] = if full { &[8, 64, 256] } else { &[8, 32] };
+    let min_time = std::time::Duration::from_millis(if full { 200 } else { 50 });
+
+    let cfg = AcceleratorConfig::sextans_u280();
+    let mut record = BenchRecord {
+        name: name.clone(),
+        git_rev: sextans::telemetry::bench_record::git_rev(),
+        timestamp,
+        host_threads: cores,
+        matrices: specs.clone(),
+        results: Vec::new(),
+        scaling: Vec::new(),
+    };
+
+    bench_util::section(&format!("bench {name} on {backend_spec}"));
+    for spec in &specs {
+        let coo = spec.build();
+        let image = Arc::new(preprocess(&coo, cfg.p(), cfg.k0, cfg.d));
+        let be = backend::create(&backend_spec)?;
+        let prepared = be.prepare(Arc::clone(&image))?;
+        for &n in n_values {
+            let mut rng = Rng::new(spec.seed ^ 0xB0B);
+            let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+            let mut c = vec![0f32; coo.m * n];
+            let flops = problem_flops(coo.nnz(), coo.m, n) as f64;
+            let r = bench_util::bench(
+                &format!("{}/{} n={n}", backend_spec, spec.name),
+                1,
+                5,
+                min_time,
+                || {
+                    prepared.execute(&b, &mut c, n, 1.0, 0.0).expect("bench execute");
+                },
+            );
+            record.results.push(BenchMeasurement {
+                bench: format!("backend/{backend_spec}"),
+                matrix: spec.name.clone(),
+                n,
+                // flops per nanosecond is numerically GFLOP/s.
+                gflops: flops / r.median_ns,
+                median_ns: r.median_ns,
+                p50_ns: r.p50_ns,
+                p95_ns: r.p95_ns,
+                p99_ns: r.p99_ns,
+            });
+        }
+    }
+
+    // Concurrency scaling on the first (smallest) matrix: W independent
+    // callers, each with its own thread-budgeted backend instance, hammer
+    // the same matrix; prepare happens before the barrier so the timed
+    // region is pure execution.
+    bench_util::section("concurrency scaling");
+    let scale_spec = &specs[0];
+    let coo = scale_spec.build();
+    let image = Arc::new(preprocess(&coo, cfg.p(), cfg.k0, cfg.d));
+    let n = 16usize;
+    let iters = if full { 20usize } else { 8 };
+    let flops = problem_flops(coo.nnz(), coo.m, n) as f64;
+    let worker_counts: &[usize] = if full { &[1, 2, 4] } else { &[1, 2] };
+    let mut single_gflops = 0.0f64;
+    for &workers in worker_counts {
+        let per_worker = backend::apply_thread_budget(&base_spec, (cores / workers).max(1));
+        let barrier = std::sync::Barrier::new(workers + 1);
+        let mut t0 = std::time::Instant::now();
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let image = Arc::clone(&image);
+                let spec = per_worker.clone();
+                let barrier = &barrier;
+                let (m, k) = (coo.m, coo.k);
+                scope.spawn(move || {
+                    let be = backend::create(&spec).expect("scaling backend");
+                    let prepared = be.prepare(image).expect("scaling prepare");
+                    let mut rng = Rng::new(0xD15B + w as u64);
+                    let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+                    let mut c = vec![0f32; m * n];
+                    barrier.wait();
+                    for _ in 0..iters {
+                        prepared.execute(&b, &mut c, n, 1.0, 0.0).expect("scaling execute");
+                    }
+                });
+            }
+            barrier.wait();
+            t0 = std::time::Instant::now();
+        });
+        let elapsed_ns = (t0.elapsed().as_nanos() as f64).max(1.0);
+        let gflops = (workers * iters) as f64 * flops / elapsed_ns;
+        if workers == 1 {
+            single_gflops = gflops;
+        }
+        let efficiency = if single_gflops > 0.0 {
+            gflops / (workers as f64 * single_gflops)
+        } else {
+            0.0
+        };
+        println!(
+            "{workers} worker(s) on {}: {gflops:.2} GFLOP/s aggregate, efficiency {efficiency:.2}",
+            scale_spec.name
+        );
+        record.scaling.push(ScalingPoint {
+            bench: format!("concurrency/{base_spec}"),
+            workers,
+            gflops,
+            efficiency,
+        });
+    }
+
+    let path = out_dir.join(format!("BENCH_{name}.json"));
+    record.write(&path)?;
+    println!("\nwrote {}", path.display());
+
+    if let Some(base_path) = cli.get("baseline") {
+        let baseline = BenchRecord::read(Path::new(base_path)).map_err(|e| anyhow!(e))?;
+        let tolerance = cli.get_f32("tolerance", 0.15) as f64;
+        let regressions = compare(&baseline, &record, tolerance);
+        if regressions.is_empty() {
+            println!(
+                "no regressions vs {base_path} (tolerance {:.0}%)",
+                tolerance * 100.0
+            );
+        } else {
+            for r in &regressions {
+                println!("regression: {r}");
+            }
+            if cli.flag("strict") {
+                bail!("{} regression(s) vs {base_path}", regressions.len());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `trace`: run a few requests through the serving pipeline with a span
+/// collector attached and pretty-print each request's span tree —
+/// `admission`, `queue`, `batch`, `prepare` (with `backend.prepare` on
+/// residency misses), `exec`, under a `request` root. The positional
+/// argument picks a catalog matrix by name (e.g. `crystm03_like`);
+/// without one a small R-MAT graph is generated.
+fn cmd_trace(cli: &Cli) -> Result<()> {
+    let requests = cli.get_usize("requests", 3);
+    let workers = cli.get_usize("workers", 2);
+    let backend_spec = cli.get("backend").unwrap_or("native");
+    let cfg = AcceleratorConfig::sextans_u280();
+    let coo = match cli.positional.first() {
+        Some(name) => {
+            let cat = catalog::catalog(Scale::Ci);
+            let spec = cat.iter().find(|s| s.name == *name).ok_or_else(|| {
+                anyhow!("unknown catalog matrix {name:?} (try e.g. crystm03_like)")
+            })?;
+            println!("matrix {} ({:?})", spec.name, spec.family);
+            spec.build()
+        }
+        None => gen::rmat(2048, 20_000, 0.57, 0.19, 0.19, &mut Rng::new(11)),
+    };
+    let image = Arc::new(preprocess(&coo, cfg.p(), cfg.k0, cfg.d));
+    let collector = Arc::new(TraceCollector::new());
+    let config = PipelineConfig {
+        sink: Some(Arc::clone(&collector) as Arc<dyn TelemetrySink>),
+        ..PipelineConfig::default()
+    };
+    let server = Server::start_backend_with(workers, config, backend_spec)?;
+    let handle = server.register(image);
+    let mut rng = Rng::new(0x7A3CE);
+    let mut rxs = Vec::new();
+    for i in 0..requests {
+        let n = [4usize, 8, 16][i % 3];
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        rxs.push(server.submit(SpmmRequest {
+            image: handle.clone(),
+            b,
+            c: vec![0.0; coo.m * n],
+            n,
+            alpha: 1.0,
+            beta: 0.0,
+        }));
+    }
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let _ = server.shutdown();
+    for tid in collector.trace_ids() {
+        println!("trace {tid}:");
+        let spans = collector.trace(tid);
+        print!("{}", render_tree(&build_tree(&spans)));
+    }
+    if let Some(path) = cli.get("out") {
+        std::fs::write(path, collector.to_value().to_json_pretty())?;
+        println!("wrote {} spans to {path}", collector.spans().len());
     }
     Ok(())
 }

@@ -20,7 +20,7 @@ use super::executor::ShardExecutor;
 use super::plan::ShardedMatrix;
 use super::ShardRunStats;
 use crate::backend::{
-    self, BackendError, Capability, PrepareCost, PreparedSpmm, SpmmBackend,
+    self, BackendError, Capability, ExecutionReport, PrepareCost, PreparedSpmm, SpmmBackend,
 };
 use crate::sched::ScheduledMatrix;
 
@@ -208,6 +208,36 @@ impl PreparedSpmm for PreparedSharded {
         *self.last_stats.lock().unwrap() = Some(stats);
         Ok(skipped)
     }
+
+    fn execute_with_report(
+        &self,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<ExecutionReport, BackendError> {
+        let stats = self.executor.execute(b, c, n, alpha, beta)?;
+        *self.last_stats.lock().unwrap() = Some(stats.clone());
+        Ok(ExecutionReport { skipped: 0, shard_stats: Some(stats) })
+    }
+
+    fn execute_routed_with_report(
+        &self,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<ExecutionReport, BackendError> {
+        let (stats, skipped) = self.executor.execute_active(b, c, n, alpha, beta)?;
+        *self.last_stats.lock().unwrap() = Some(stats.clone());
+        Ok(ExecutionReport { skipped, shard_stats: Some(stats) })
+    }
+
+    fn resident_bytes_now(&self) -> u64 {
+        self.executor.resident_bytes_now()
+    }
 }
 
 #[cfg(test)]
@@ -324,6 +354,25 @@ mod tests {
         assert_eq!(skipped, 0, "every shard owns non-zeros on a power-law image");
         assert_eq!(plain, routed);
         assert_eq!(handle.shard_stats().unwrap().shards, 4);
+    }
+
+    #[test]
+    fn report_path_returns_this_calls_stats_by_value() {
+        let (coo, sm) = image(10);
+        let be = ShardedBackend::from_spec(3, "functional").unwrap();
+        let handle = be.prepare(Arc::clone(&sm)).unwrap();
+        let n = 2;
+        let b = vec![1.0f32; coo.k * n];
+        let mut c = vec![0.0f32; coo.m * n];
+        let report = handle.execute_with_report(&b, &mut c, n, 1.0, 0.0).unwrap();
+        assert_eq!(report.skipped, 0);
+        let stats = report.shard_stats.expect("sharded handles report per-call stats");
+        assert_eq!(stats.shards, 3);
+        assert_eq!(stats.shard_nnz.iter().sum::<usize>(), coo.nnz());
+        let routed = handle.execute_routed_with_report(&b, &mut c, n, 1.0, 0.0).unwrap();
+        assert!(routed.shard_stats.is_some(), "routed report carries stats too");
+        // The legacy poll still reflects the latest run for compatibility.
+        assert_eq!(handle.shard_stats().unwrap().shards, 3);
     }
 
     #[test]

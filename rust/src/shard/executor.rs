@@ -150,6 +150,20 @@ impl ShardExecutor {
         self.cost
     }
 
+    /// Bytes resident *right now*: the build-time estimate with each inner
+    /// handle's live footprint substituted for its prepare-time snapshot,
+    /// plus the gather-block sets parked in the scratch pool (which grow
+    /// with peak concurrency and are invisible to [`PrepareCost`]).
+    pub fn resident_bytes_now(&self) -> u64 {
+        let static_inners: u64 =
+            self.inners.iter().map(|h| h.prepare_cost().resident_bytes).sum();
+        let live_inners: u64 = self.inners.iter().map(|h| h.resident_bytes_now()).sum();
+        let pooled = self.locals.measure(|set| {
+            set.iter().map(|b| (b.len() * std::mem::size_of::<f32>()) as u64).sum()
+        });
+        self.cost.resident_bytes.saturating_sub(static_inners) + live_inners + pooled
+    }
+
     /// Build-time nnz imbalance of the resident shard plan.
     pub fn imbalance(&self) -> f64 {
         self.imbalance
@@ -545,6 +559,32 @@ mod tests {
         assert_eq!(skipped, 0);
         assert_eq!(stats.shards, 3);
         prop::assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
+    }
+
+    #[test]
+    fn resident_bytes_now_sees_pooled_gather_blocks() {
+        let mut rng = Rng::new(11);
+        let coo = gen::random_uniform(48, 32, 0.2, &mut rng);
+        let sharded = ShardedMatrix::build(&coo, 3, 2, 8, 4);
+        let exec = functional_pool(&sharded);
+        let before = exec.resident_bytes_now();
+        assert_eq!(
+            before,
+            exec.prepare_cost().resident_bytes,
+            "no pooled scratch before the first execution"
+        );
+        let n = 4;
+        let b = vec![1.0f32; coo.k * n];
+        let mut c = vec![0.0f32; coo.m * n];
+        exec.execute(&b, &mut c, n, 1.0, 0.0).unwrap();
+        // One gather-block set (one block per shard, m rows total) is now
+        // parked in the pool and must be charged.
+        let gather = (coo.m * n * std::mem::size_of::<f32>()) as u64;
+        let after = exec.resident_bytes_now();
+        assert!(
+            after >= before + gather,
+            "pooled gather blocks uncharged: {before} -> {after} (want >= +{gather})"
+        );
     }
 
     #[test]

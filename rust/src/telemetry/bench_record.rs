@@ -1,0 +1,510 @@
+//! The persisted perf trajectory: `BENCH_<name>.json` snapshots.
+//!
+//! The paper's evaluation is a ranked throughput table (PAPER.md §6:
+//! 1,400 SpMMs by GFLOP/s); this module gives the repo the machine-readable
+//! equivalent so the trajectory survives across PRs. Every snapshot records
+//! enough to re-run it (git rev, matrix catalog parameters, thread count)
+//! plus the measurements (GFLOP/s, latency percentiles, scaling
+//! efficiency). `bench_backend`/`bench_concurrency`/`bench_prepare` and the
+//! `sextans bench` subcommand all emit this schema; [`compare`] flags
+//! regressions between two snapshots, and CI validates a smoke-sized file
+//! every run (the full sweep stays manual).
+//!
+//! Schema (all JSON, written pretty for diffable commits):
+//!
+//! ```json
+//! {
+//!   "schema": 1,
+//!   "name": "baseline",
+//!   "git_rev": "b487bad...",
+//!   "timestamp": "2026-08-08",
+//!   "host_threads": 8,
+//!   "matrices": [ {"name", "family", "m", "k", "nnz", "seed"} ],
+//!   "results":  [ {"bench", "matrix", "n", "gflops", "median_ns",
+//!                  "p50_ns", "p95_ns", "p99_ns"} ],
+//!   "scaling":  [ {"bench", "workers", "gflops", "efficiency"} ]
+//! }
+//! ```
+//!
+//! `timestamp` is a caller-supplied string (the build is offline and the
+//! harness avoids ambient wall-clock reads — pass `--timestamp` to the CLI
+//! or set `BENCH_TIMESTAMP` for the benches; unset, it records `unknown`).
+
+use std::path::Path;
+
+use super::json::{self, Value};
+use crate::sparse::catalog::{Family, MatrixSpec};
+
+/// Current schema version, bumped on breaking layout changes.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One `BENCH_*.json` snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct BenchRecord {
+    /// Snapshot name; the file is conventionally `BENCH_<name>.json`.
+    pub name: String,
+    /// Git revision the numbers were taken at.
+    pub git_rev: String,
+    /// Caller-supplied timestamp string.
+    pub timestamp: String,
+    /// `available_parallelism` on the measuring host.
+    pub host_threads: usize,
+    /// Catalog parameters of every matrix measured (re-buildable via
+    /// [`MatrixSpec::build`]).
+    pub matrices: Vec<MatrixSpec>,
+    /// Throughput/latency measurements.
+    pub results: Vec<BenchMeasurement>,
+    /// Concurrency scaling points.
+    pub scaling: Vec<ScalingPoint>,
+}
+
+/// One throughput measurement: a (bench, matrix, N) cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchMeasurement {
+    /// Which bench produced it (`backend/native:4`, `prepare/sharded`, ...).
+    pub bench: String,
+    /// Catalog name of the matrix.
+    pub matrix: String,
+    /// Dense column count.
+    pub n: usize,
+    /// Sustained throughput.
+    pub gflops: f64,
+    /// Median iteration latency, nanoseconds.
+    pub median_ns: f64,
+    /// Iteration latency percentiles, nanoseconds.
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+}
+
+/// One concurrency scaling point: aggregate throughput at `workers`
+/// concurrent callers, and efficiency relative to `workers` × the
+/// single-caller rate (1.0 = perfect scaling).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScalingPoint {
+    pub bench: String,
+    pub workers: usize,
+    pub gflops: f64,
+    pub efficiency: f64,
+}
+
+fn family_name(f: Family) -> &'static str {
+    match f {
+        Family::SnapRmat => "snap_rmat",
+        Family::SsBanded => "ss_banded",
+        Family::SsCircuit => "ss_circuit",
+        Family::SsUniform => "ss_uniform",
+        Family::SsBlock => "ss_block",
+        Family::SsPowerRows => "ss_power_rows",
+    }
+}
+
+fn family_from(name: &str) -> Option<Family> {
+    Some(match name {
+        "snap_rmat" => Family::SnapRmat,
+        "ss_banded" => Family::SsBanded,
+        "ss_circuit" => Family::SsCircuit,
+        "ss_uniform" => Family::SsUniform,
+        "ss_block" => Family::SsBlock,
+        "ss_power_rows" => Family::SsPowerRows,
+        _ => return None,
+    })
+}
+
+impl BenchRecord {
+    /// Serialize to the schema above.
+    pub fn to_value(&self) -> Value {
+        json::obj(vec![
+            ("schema", json::num(SCHEMA_VERSION as f64)),
+            ("name", json::s(self.name.clone())),
+            ("git_rev", json::s(self.git_rev.clone())),
+            ("timestamp", json::s(self.timestamp.clone())),
+            ("host_threads", json::num(self.host_threads as f64)),
+            (
+                "matrices",
+                Value::Arr(
+                    self.matrices
+                        .iter()
+                        .map(|m| {
+                            json::obj(vec![
+                                ("name", json::s(m.name.clone())),
+                                ("family", json::s(family_name(m.family))),
+                                ("m", json::num(m.m as f64)),
+                                ("k", json::num(m.k as f64)),
+                                ("nnz", json::num(m.nnz as f64)),
+                                ("seed", json::num(m.seed as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "results",
+                Value::Arr(
+                    self.results
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("bench", json::s(r.bench.clone())),
+                                ("matrix", json::s(r.matrix.clone())),
+                                ("n", json::num(r.n as f64)),
+                                ("gflops", json::num(r.gflops)),
+                                ("median_ns", json::num(r.median_ns)),
+                                ("p50_ns", json::num(r.p50_ns)),
+                                ("p95_ns", json::num(r.p95_ns)),
+                                ("p99_ns", json::num(r.p99_ns)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "scaling",
+                Value::Arr(
+                    self.scaling
+                        .iter()
+                        .map(|s| {
+                            json::obj(vec![
+                                ("bench", json::s(s.bench.clone())),
+                                ("workers", json::num(s.workers as f64)),
+                                ("gflops", json::num(s.gflops)),
+                                ("efficiency", json::num(s.efficiency)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Deserialize; errors name the offending field.
+    pub fn from_value(v: &Value) -> Result<BenchRecord, String> {
+        fn str_field(v: &Value, key: &str) -> Result<String, String> {
+            v.get(key)
+                .and_then(Value::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("missing or non-string field '{key}'"))
+        }
+        fn num_field(v: &Value, key: &str) -> Result<f64, String> {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| format!("missing or non-numeric field '{key}'"))
+        }
+        fn usize_field(v: &Value, key: &str) -> Result<usize, String> {
+            v.get(key)
+                .and_then(Value::as_u64)
+                .map(|n| n as usize)
+                .ok_or_else(|| format!("missing or non-integer field '{key}'"))
+        }
+        let schema = v
+            .get("schema")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| "missing 'schema' version".to_string())?;
+        if schema != SCHEMA_VERSION {
+            return Err(format!("unsupported schema version {schema} (want {SCHEMA_VERSION})"));
+        }
+        let arr_field = |key: &str| -> Result<&[Value], String> {
+            v.get(key)
+                .and_then(Value::as_arr)
+                .ok_or_else(|| format!("missing or non-array field '{key}'"))
+        };
+        let mut matrices = Vec::new();
+        for m in arr_field("matrices")? {
+            let fam = str_field(m, "family")?;
+            matrices.push(MatrixSpec {
+                name: str_field(m, "name")?,
+                family: family_from(&fam).ok_or_else(|| format!("unknown family '{fam}'"))?,
+                m: usize_field(m, "m")?,
+                k: usize_field(m, "k")?,
+                nnz: usize_field(m, "nnz")?,
+                seed: m
+                    .get("seed")
+                    .and_then(Value::as_u64)
+                    .ok_or_else(|| "missing or non-integer field 'seed'".to_string())?,
+            });
+        }
+        let mut results = Vec::new();
+        for r in arr_field("results")? {
+            results.push(BenchMeasurement {
+                bench: str_field(r, "bench")?,
+                matrix: str_field(r, "matrix")?,
+                n: usize_field(r, "n")?,
+                gflops: num_field(r, "gflops")?,
+                median_ns: num_field(r, "median_ns")?,
+                p50_ns: num_field(r, "p50_ns")?,
+                p95_ns: num_field(r, "p95_ns")?,
+                p99_ns: num_field(r, "p99_ns")?,
+            });
+        }
+        let mut scaling = Vec::new();
+        for s in arr_field("scaling")? {
+            scaling.push(ScalingPoint {
+                bench: str_field(s, "bench")?,
+                workers: usize_field(s, "workers")?,
+                gflops: num_field(s, "gflops")?,
+                efficiency: num_field(s, "efficiency")?,
+            });
+        }
+        Ok(BenchRecord {
+            name: str_field(v, "name")?,
+            git_rev: str_field(v, "git_rev")?,
+            timestamp: str_field(v, "timestamp")?,
+            host_threads: usize_field(v, "host_threads")?,
+            matrices,
+            results,
+            scaling,
+        })
+    }
+
+    /// Write `BENCH_<name>.json`-style pretty JSON to `path`.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_value().to_json_pretty())
+    }
+
+    /// Read and validate a snapshot file.
+    pub fn read(path: &Path) -> Result<BenchRecord, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        let v = json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        BenchRecord::from_value(&v).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+/// One flagged regression between two snapshots.
+#[derive(Clone, Debug)]
+pub struct Regression {
+    /// What regressed (`backend/native:4 on crystm03_like n=16`, ...).
+    pub what: String,
+    pub baseline: f64,
+    pub current: f64,
+}
+
+impl std::fmt::Display for Regression {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: {:.3} -> {:.3} ({:+.1}%)",
+            self.what,
+            self.baseline,
+            self.current,
+            (self.current / self.baseline - 1.0) * 100.0
+        )
+    }
+}
+
+/// Compare `current` against `baseline`: every (bench, matrix, n) cell and
+/// every (bench, workers) scaling point present in both is checked, and a
+/// [`Regression`] is flagged when current throughput (or efficiency) falls
+/// more than `tolerance` below baseline (`tolerance` 0.15 = 15% slack;
+/// single-machine benches are noisy, so comparisons should leave headroom).
+/// Cells present in only one snapshot are ignored — the trajectory grows.
+pub fn compare(baseline: &BenchRecord, current: &BenchRecord, tolerance: f64) -> Vec<Regression> {
+    let mut out = Vec::new();
+    for b in &baseline.results {
+        let hit = current
+            .results
+            .iter()
+            .find(|c| c.bench == b.bench && c.matrix == b.matrix && c.n == b.n);
+        if let Some(c) = hit {
+            if c.gflops < b.gflops * (1.0 - tolerance) {
+                out.push(Regression {
+                    what: format!("{} on {} n={} (GFLOP/s)", b.bench, b.matrix, b.n),
+                    baseline: b.gflops,
+                    current: c.gflops,
+                });
+            }
+        }
+    }
+    for b in &baseline.scaling {
+        let hit =
+            current.scaling.iter().find(|c| c.bench == b.bench && c.workers == b.workers);
+        if let Some(c) = hit {
+            if c.efficiency < b.efficiency * (1.0 - tolerance) {
+                out.push(Regression {
+                    what: format!("{} at {} workers (efficiency)", b.bench, b.workers),
+                    baseline: b.efficiency,
+                    current: c.efficiency,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// The current git revision, read straight from `.git` (no subprocess —
+/// the bench environment is offline and minimal). Walks up from `start`
+/// to find the repository; follows one level of `ref:` indirection and
+/// falls back to `packed-refs`. Returns `"unknown"` when anything is
+/// missing — a bench must never fail because it ran outside a checkout.
+pub fn git_rev_from(start: &Path) -> String {
+    let mut dir = Some(start.to_path_buf());
+    while let Some(d) = dir {
+        let git = d.join(".git");
+        if git.join("HEAD").is_file() {
+            return read_head(&git).unwrap_or_else(|| "unknown".into());
+        }
+        dir = d.parent().map(Path::to_path_buf);
+    }
+    "unknown".into()
+}
+
+/// [`git_rev_from`] starting at the current directory.
+pub fn git_rev() -> String {
+    std::env::current_dir().map(|d| git_rev_from(&d)).unwrap_or_else(|_| "unknown".into())
+}
+
+fn read_head(git: &Path) -> Option<String> {
+    let head = std::fs::read_to_string(git.join("HEAD")).ok()?;
+    let head = head.trim();
+    let reference = match head.strip_prefix("ref: ") {
+        None => return Some(head.to_string()), // detached HEAD
+        Some(r) => r.trim(),
+    };
+    if let Ok(hash) = std::fs::read_to_string(git.join(reference)) {
+        return Some(hash.trim().to_string());
+    }
+    // Ref may live in packed-refs: lines of "<hash> <ref>".
+    let packed = std::fs::read_to_string(git.join("packed-refs")).ok()?;
+    for line in packed.lines() {
+        if let Some((hash, name)) = line.split_once(' ') {
+            if name.trim() == reference {
+                return Some(hash.trim().to_string());
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::catalog::crystm03_like;
+
+    fn sample() -> BenchRecord {
+        BenchRecord {
+            name: "unit".into(),
+            git_rev: "abc123".into(),
+            timestamp: "2026-08-08".into(),
+            host_threads: 8,
+            matrices: vec![crystm03_like()],
+            results: vec![BenchMeasurement {
+                bench: "backend/native:4".into(),
+                matrix: "crystm03_like".into(),
+                n: 16,
+                gflops: 12.5,
+                median_ns: 1_500_000.0,
+                p50_ns: 1_480_000.0,
+                p95_ns: 1_900_000.0,
+                p99_ns: 2_400_000.0,
+            }],
+            scaling: vec![ScalingPoint {
+                bench: "concurrency/native:1".into(),
+                workers: 4,
+                gflops: 40.0,
+                efficiency: 0.91,
+            }],
+        }
+    }
+
+    #[test]
+    fn record_round_trips_through_json() {
+        let rec = sample();
+        let text = rec.to_value().to_json_pretty();
+        let back = BenchRecord::from_value(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.name, rec.name);
+        assert_eq!(back.git_rev, rec.git_rev);
+        assert_eq!(back.host_threads, 8);
+        assert_eq!(back.results, rec.results);
+        assert_eq!(back.scaling, rec.scaling);
+        assert_eq!(back.matrices.len(), 1);
+        let m = &back.matrices[0];
+        assert_eq!(m.name, "crystm03_like");
+        assert_eq!(m.family, Family::SsBanded);
+        assert_eq!((m.m, m.k, m.nnz, m.seed), (24_696, 24_696, 583_770, 0xC45731));
+    }
+
+    #[test]
+    fn every_family_survives_the_round_trip() {
+        for fam in [
+            Family::SnapRmat,
+            Family::SsBanded,
+            Family::SsCircuit,
+            Family::SsUniform,
+            Family::SsBlock,
+            Family::SsPowerRows,
+        ] {
+            assert_eq!(family_from(family_name(fam)), Some(fam));
+        }
+        assert_eq!(family_from("nonsense"), None);
+    }
+
+    #[test]
+    fn malformed_records_are_rejected_with_field_names() {
+        let missing_rev = json::parse(r#"{"schema": 1, "name": "x"}"#).unwrap();
+        let err = BenchRecord::from_value(&missing_rev).unwrap_err();
+        assert!(err.contains("matrices") || err.contains("git_rev"), "{err}");
+
+        let bad_schema = json::parse(r#"{"schema": 99}"#).unwrap();
+        let err = BenchRecord::from_value(&bad_schema).unwrap_err();
+        assert!(err.contains("schema version 99"), "{err}");
+
+        let no_schema = json::parse("{}").unwrap();
+        assert!(BenchRecord::from_value(&no_schema).is_err());
+    }
+
+    #[test]
+    fn compare_flags_only_regressions_beyond_tolerance() {
+        let base = sample();
+        let mut cur = sample();
+        // 4% down: inside a 15% tolerance.
+        cur.results[0].gflops = 12.0;
+        assert!(compare(&base, &cur, 0.15).is_empty());
+        // 40% down: flagged, with the cell named.
+        cur.results[0].gflops = 7.5;
+        let regs = compare(&base, &cur, 0.15);
+        assert_eq!(regs.len(), 1);
+        assert!(regs[0].what.contains("crystm03_like n=16"), "{}", regs[0].what);
+        assert!(regs[0].to_string().contains("12.5"), "{}", regs[0]);
+        // Scaling efficiency collapse is flagged independently.
+        cur.results[0].gflops = 12.5;
+        cur.scaling[0].efficiency = 0.4;
+        let regs = compare(&base, &cur, 0.15);
+        assert_eq!(regs.len(), 1);
+        assert!(regs[0].what.contains("workers"), "{}", regs[0].what);
+    }
+
+    #[test]
+    fn compare_ignores_cells_present_on_one_side_only() {
+        let base = sample();
+        let mut cur = sample();
+        cur.results[0].matrix = "different_matrix".into();
+        cur.scaling[0].workers = 16;
+        assert!(compare(&base, &cur, 0.15).is_empty());
+    }
+
+    #[test]
+    fn git_rev_resolves_this_repository() {
+        // The test runs inside the repo checkout, so a 40-hex rev must
+        // resolve from the manifest directory upward.
+        let rev = git_rev_from(Path::new(env!("CARGO_MANIFEST_DIR")));
+        assert_eq!(rev.len(), 40, "unexpected rev: {rev}");
+        assert!(rev.chars().all(|c| c.is_ascii_hexdigit()), "{rev}");
+    }
+
+    #[test]
+    fn git_rev_outside_a_checkout_is_unknown() {
+        assert_eq!(git_rev_from(Path::new("/")), "unknown");
+    }
+
+    #[test]
+    fn write_and_read_file() {
+        let dir = std::env::temp_dir().join("sextans_bench_record_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_unit.json");
+        let rec = sample();
+        rec.write(&path).unwrap();
+        let back = BenchRecord::read(&path).unwrap();
+        assert_eq!(back.results, rec.results);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

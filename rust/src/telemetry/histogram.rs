@@ -1,0 +1,296 @@
+//! Fixed-memory streaming latency histogram with log-spaced buckets.
+//!
+//! The serving recorder used to keep every [`RequestTiming`] in an
+//! unbounded `Vec` and sort it at summary time — O(requests) memory held
+//! for the lifetime of the server. This histogram replaces that with a
+//! fixed ~4 KB footprint: buckets grow geometrically by `2^(1/16)`
+//! (≈ 4.4% per bucket), so any quantile is recovered to within ± 2.2%
+//! relative error (half a bucket width, geometric), independent of how
+//! many samples streamed through. Exact `count`, `sum`, `min`, and `max`
+//! are tracked on the side, and quantile estimates are clamped to the
+//! observed `[min, max]` so the tails never report a value outside what
+//! was actually seen.
+//!
+//! The quantile rank convention matches the exact-sort implementation it
+//! replaces (`idx = round((n-1) * q)`, nearest-rank on the sorted
+//! samples), so summaries stay comparable across the transition.
+//!
+//! [`RequestTiming`]: crate::coordinator::metrics::RequestTiming
+
+/// Geometric bucket growth factor: `2^(1/16)`.
+const GROWTH: f64 = 1.044_273_782_427_413_8;
+/// Natural log of [`GROWTH`] (ln 2 / 16).
+const LN_GROWTH: f64 = std::f64::consts::LN_2 / 16.0;
+/// Lower edge of the first regular bucket: 100 ns in seconds.
+const MIN_EDGE: f64 = 1e-7;
+/// Regular bucket count: spans 100 ns .. ~3400 s (`MIN_EDGE * GROWTH^N`),
+/// comfortably past any single-request latency this stack can produce.
+const BUCKETS: usize = 560;
+
+/// Streaming histogram over non-negative `f64` samples (seconds, by
+/// convention, but any unit works). Fixed memory; ± 2.2% relative
+/// quantile error.
+#[derive(Clone)]
+pub struct Histogram {
+    /// `counts[0]` is the underflow bucket (`< MIN_EDGE`), `counts[1..=BUCKETS]`
+    /// are the regular log-spaced buckets, `counts[BUCKETS + 1]` is overflow.
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count)
+            .field("sum", &self.sum)
+            .field("min", &self.min)
+            .field("max", &self.max)
+            .finish()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram. Allocation happens once, here.
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: vec![0; BUCKETS + 2],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        if v < MIN_EDGE {
+            return 0;
+        }
+        let idx = ((v / MIN_EDGE).ln() / LN_GROWTH).floor() as isize;
+        (idx.max(0) as usize + 1).min(BUCKETS + 1)
+    }
+
+    /// Record one sample. Negative and non-finite samples are clamped to 0
+    /// (they land in the underflow bucket).
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        self.counts[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Number of samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of all samples.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean, or 0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    /// Exact smallest sample, or 0 when empty.
+    pub fn min(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.min }
+    }
+
+    /// Exact largest sample, or 0 when empty.
+    pub fn max(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.max }
+    }
+
+    /// Estimate the `q`-quantile (`q` in `[0, 1]`), nearest-rank with the
+    /// same rounding as the exact-sort path this histogram replaced:
+    /// the returned value approximates sorted-sample index
+    /// `round((count - 1) * q)`. Returns 0 when empty. The estimate is the
+    /// geometric midpoint of the bucket holding that rank, clamped to the
+    /// exact observed `[min, max]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((self.count - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if seen > rank {
+                return self.representative(i);
+            }
+        }
+        self.max()
+    }
+
+    /// A point estimate for bucket `i`: the geometric midpoint of its
+    /// edges, clamped to the observed extrema (so single-bucket and tail
+    /// estimates cannot leave the sampled range).
+    fn representative(&self, i: usize) -> f64 {
+        let v = if i == 0 {
+            // Underflow: everything below 100 ns — call it the midpoint
+            // to zero.
+            MIN_EDGE / 2.0
+        } else if i >= BUCKETS + 1 {
+            self.max
+        } else {
+            let lo = MIN_EDGE * ((i - 1) as f64 * LN_GROWTH).exp();
+            lo * GROWTH.sqrt()
+        };
+        v.clamp(self.min, self.max)
+    }
+
+    /// p50 / p95 / p99 in one call.
+    pub fn percentiles(&self) -> Percentiles {
+        Percentiles {
+            p50: self.quantile(0.50),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+        }
+    }
+}
+
+/// The three standard latency percentiles, in the histogram's sample unit
+/// (seconds for every histogram in this crate).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::rng::Rng;
+
+    /// The exact nearest-rank quantile the histogram approximates.
+    fn exact_quantile(samples: &mut [f64], q: f64) -> f64 {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((samples.len() - 1) as f64 * q).round() as usize;
+        samples[idx]
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeroes() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.percentiles(), Percentiles::default());
+    }
+
+    #[test]
+    fn count_sum_min_max_are_exact() {
+        let mut h = Histogram::new();
+        for v in [0.003, 0.001, 0.25, 0.007] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 0.261).abs() < 1e-12);
+        assert_eq!(h.min(), 0.001);
+        assert_eq!(h.max(), 0.25);
+        assert!((h.mean() - 0.261 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_sample_quantiles_are_that_sample() {
+        let mut h = Histogram::new();
+        h.record(0.0042);
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0.0042, "q={q}");
+        }
+    }
+
+    #[test]
+    fn quantiles_match_exact_sort_within_bucket_error_uniform() {
+        let mut rng = Rng::new(11);
+        // Latencies spread over 4 decades: 100 µs .. 1 s.
+        let mut samples: Vec<f64> =
+            (0..5000).map(|_| 1e-4 * 10f64.powf(4.0 * rng.f64())).collect();
+        let mut h = Histogram::new();
+        for &v in &samples {
+            h.record(v);
+        }
+        for q in [0.01, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let exact = exact_quantile(&mut samples, q);
+            let est = h.quantile(q);
+            let rel = (est - exact).abs() / exact;
+            assert!(rel < 0.045, "q={q}: exact {exact} vs est {est} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn quantiles_match_exact_sort_on_skewed_samples() {
+        let mut rng = Rng::new(7);
+        // Heavy-tailed: mostly ~1 ms with a 100x tail, like a latency trace
+        // with occasional cold prepares.
+        let mut samples: Vec<f64> = (0..2000)
+            .map(|i| {
+                let base = 1e-3 * (1.0 + rng.f64());
+                if i % 50 == 0 { base * 100.0 } else { base }
+            })
+            .collect();
+        let mut h = Histogram::new();
+        for &v in &samples {
+            h.record(v);
+        }
+        for q in [0.5, 0.95, 0.99] {
+            let exact = exact_quantile(&mut samples, q);
+            let est = h.quantile(q);
+            let rel = (est - exact).abs() / exact;
+            assert!(rel < 0.045, "q={q}: exact {exact} vs est {est} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn out_of_range_samples_clamp_not_panic() {
+        let mut h = Histogram::new();
+        h.record(1e-9); // below first edge -> underflow bucket
+        h.record(1e6); // beyond last edge -> overflow bucket
+        h.record(-3.0); // negative -> clamped to 0
+        h.record(f64::NAN); // non-finite -> clamped to 0
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 1e6);
+        // Quantiles stay inside the observed range.
+        for q in [0.0, 0.5, 1.0] {
+            let v = h.quantile(q);
+            assert!((0.0..=1e6).contains(&v), "q={q}: {v}");
+        }
+        assert_eq!(h.quantile(1.0), 1e6, "overflow estimate is the exact max");
+    }
+
+    #[test]
+    fn rank_rounding_matches_replaced_sort_path() {
+        // The recorder's historical fixture: 1..9 ms plus one 100 ms
+        // outlier. Exact sort gives p50 = 6 ms (rank round(4.5) = 5) and
+        // p99 = 100 ms; the histogram must land within bucket error.
+        let mut h = Histogram::new();
+        for ms in 1..=9 {
+            h.record(ms as f64 * 1e-3);
+        }
+        h.record(0.1);
+        let p = h.percentiles();
+        assert!((p.p50 - 0.006).abs() / 0.006 < 0.045, "p50 {}", p.p50);
+        assert!((p.p99 - 0.1).abs() / 0.1 < 0.045, "p99 {}", p.p99);
+    }
+}

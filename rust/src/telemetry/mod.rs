@@ -1,0 +1,33 @@
+//! End-to-end observability: span traces, streaming histograms, and the
+//! persisted `BENCH_*.json` perf trajectory.
+//!
+//! The paper's claims are throughput numbers; this subsystem is how the
+//! repo keeps its own numbers honest. Three layers, all dependency-free
+//! (the build is offline — JSON is hand-rolled in [`json`], clocks are
+//! `std::time`):
+//!
+//! * [`trace`] — per-request span trees. The serving pipeline emits one
+//!   span per stage through a [`TelemetrySink`] configured on
+//!   `PipelineConfig`; leaf durations reconcile exactly with the
+//!   coordinator's `RequestTiming` because both are stamped from the same
+//!   `Instant`s. Surfaced by `sextans trace` and `serve --trace-json`.
+//! * [`histogram`] — fixed-memory log-bucketed latency histograms
+//!   (± 2.2% relative quantile error) that replaced the recorder's
+//!   unbounded timing `Vec`, giving per-stage / per-backend p50/p95/p99
+//!   in `Summary` no matter how long the server runs.
+//! * [`bench_record`] — the `BENCH_<name>.json` snapshot schema (git rev,
+//!   catalog params, GFLOP/s, percentiles, scaling efficiency) written by
+//!   the benches and `sextans bench`, plus [`compare`] for regression
+//!   flagging. The committed repo-root baseline is the start of the
+//!   trajectory each PR appends to.
+
+pub mod bench_record;
+pub mod histogram;
+pub mod json;
+pub mod trace;
+
+pub use bench_record::{compare, BenchMeasurement, BenchRecord, Regression, ScalingPoint};
+pub use histogram::{Histogram, Percentiles};
+pub use trace::{
+    build_tree, render_tree, SpanNode, SpanRecord, TelemetrySink, TraceCollector,
+};

@@ -1,0 +1,391 @@
+//! Per-request span tracing: monotonic timestamps, parent/child span ids,
+//! and a pluggable [`TelemetrySink`].
+//!
+//! One served request yields one *span tree*: a root `request` span with a
+//! leaf per pipeline stage (`queue`, `batch`, `prepare`, `exec`) plus an
+//! `admission` span at submit time and a `backend.prepare` child under
+//! `prepare` when the residency layer actually builds a handle. The leaf
+//! spans are stamped from the **same** `Instant`s the coordinator uses for
+//! [`RequestTiming`], so a tree's stage durations reconcile exactly with
+//! the recorded timing (pinned by `tests/integration_telemetry.rs`).
+//!
+//! Timestamps are nanoseconds since a process-local monotonic epoch (the
+//! first time any telemetry clock is read) — comparable within a process,
+//! meaningless across processes; the `BENCH_*.json` trajectory carries
+//! wall-clock context instead. Span and trace ids come from process-wide
+//! atomic counters, so concurrent requests interleave without collisions.
+//!
+//! Sinks receive completed [`SpanRecord`]s only (no start events): every
+//! emit site measures first, then reports, keeping the hot path to one
+//! `Mutex` push in the bundled [`TraceCollector`]. A sink must be cheap
+//! and must not block — it runs inside the batcher and worker loops.
+//!
+//! [`RequestTiming`]: crate::coordinator::metrics::RequestTiming
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::json::{self, Value};
+
+/// Process-local monotonic epoch: fixed the first time any span timestamp
+/// is taken, so all spans in a process share one time base.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds from the process epoch to `t`. Saturates to 0 for instants
+/// taken before the epoch was initialized (possible when the first spans
+/// race), keeping timestamps monotone rather than panicking.
+pub fn instant_ns(t: Instant) -> u64 {
+    t.checked_duration_since(epoch()).map(|d| d.as_nanos() as u64).unwrap_or(0)
+}
+
+/// Nanoseconds from the process epoch to now.
+pub fn now_ns() -> u64 {
+    instant_ns(Instant::now())
+}
+
+/// Allocate a fresh trace id (one per request).
+pub fn next_trace_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Allocate a fresh span id (unique within the process, not per trace, so
+/// emit sites never need coordination).
+pub fn next_span_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// One completed span: a named interval inside a request's trace.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// The request this span belongs to.
+    pub trace_id: u64,
+    /// Unique id of this span.
+    pub span_id: u64,
+    /// Parent span id; `None` marks the trace root.
+    pub parent_id: Option<u64>,
+    /// Stage name: `request`, `admission`, `queue`, `batch`, `prepare`,
+    /// `backend.prepare`, `exec`, ...
+    pub name: &'static str,
+    /// Start, nanoseconds since the process epoch.
+    pub start_ns: u64,
+    /// End, nanoseconds since the process epoch (`>= start_ns`).
+    pub end_ns: u64,
+    /// Free-form annotations (backend name, admission outcome, ...).
+    pub tags: Vec<(&'static str, String)>,
+}
+
+impl SpanRecord {
+    /// Span duration in nanoseconds.
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+
+    /// Build a record from the `Instant`s an emit site already holds.
+    pub fn from_instants(
+        trace_id: u64,
+        parent_id: Option<u64>,
+        name: &'static str,
+        start: Instant,
+        end: Instant,
+    ) -> SpanRecord {
+        let start_ns = instant_ns(start);
+        SpanRecord {
+            trace_id,
+            span_id: next_span_id(),
+            parent_id,
+            name,
+            start_ns,
+            end_ns: instant_ns(end).max(start_ns),
+            tags: Vec::new(),
+        }
+    }
+
+    /// Attach a tag, builder-style.
+    pub fn tag(mut self, key: &'static str, value: impl Into<String>) -> SpanRecord {
+        self.tags.push((key, value.into()));
+        self
+    }
+
+    /// Serialize as a JSON object.
+    pub fn to_value(&self) -> Value {
+        let mut fields = vec![
+            ("trace_id", json::num(self.trace_id as f64)),
+            ("span_id", json::num(self.span_id as f64)),
+        ];
+        if let Some(p) = self.parent_id {
+            fields.push(("parent_id", json::num(p as f64)));
+        }
+        fields.push(("name", json::s(self.name)));
+        fields.push(("start_ns", json::num(self.start_ns as f64)));
+        fields.push(("end_ns", json::num(self.end_ns as f64)));
+        if !self.tags.is_empty() {
+            fields.push((
+                "tags",
+                Value::Obj(
+                    self.tags.iter().map(|(k, v)| (k.to_string(), json::s(v.clone()))).collect(),
+                ),
+            ));
+        }
+        json::obj(fields)
+    }
+}
+
+/// Receiver for completed spans. Implementations must be cheap and
+/// non-blocking — emit sites sit inside the batcher and worker loops.
+pub trait TelemetrySink: Send + Sync {
+    /// Accept one completed span.
+    fn emit(&self, span: SpanRecord);
+}
+
+/// The bundled sink: collects every span in memory for later inspection,
+/// tree assembly, or JSON export. Suitable for tests, `sextans trace`, and
+/// `serve --trace-json`; a long-running deployment would swap in a
+/// bounded/exporting sink.
+#[derive(Debug, Default)]
+pub struct TraceCollector {
+    spans: Mutex<Vec<SpanRecord>>,
+}
+
+impl TraceCollector {
+    pub fn new() -> TraceCollector {
+        TraceCollector::default()
+    }
+
+    /// All spans emitted so far, in emit order.
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        self.spans.lock().unwrap().clone()
+    }
+
+    /// Spans of one trace, in emit order.
+    pub fn trace(&self, trace_id: u64) -> Vec<SpanRecord> {
+        self.spans.lock().unwrap().iter().filter(|s| s.trace_id == trace_id).cloned().collect()
+    }
+
+    /// Distinct trace ids seen, ascending.
+    pub fn trace_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> =
+            self.spans.lock().unwrap().iter().map(|s| s.trace_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// Serialize every span as a JSON array (the `serve --trace-json`
+    /// payload).
+    pub fn to_value(&self) -> Value {
+        Value::Arr(self.spans.lock().unwrap().iter().map(SpanRecord::to_value).collect())
+    }
+}
+
+impl TelemetrySink for TraceCollector {
+    fn emit(&self, span: SpanRecord) {
+        self.spans.lock().unwrap().push(span);
+    }
+}
+
+/// One node of an assembled span tree.
+#[derive(Debug)]
+pub struct SpanNode {
+    pub span: SpanRecord,
+    pub children: Vec<SpanNode>,
+}
+
+impl SpanNode {
+    /// Sum of this node's leaf durations (a node with children reports
+    /// its children's leaves, not its own interval).
+    pub fn leaf_duration_ns(&self) -> u64 {
+        if self.children.is_empty() {
+            self.span.duration_ns()
+        } else {
+            self.children.iter().map(SpanNode::leaf_duration_ns).sum()
+        }
+    }
+}
+
+/// Assemble one trace's spans into root trees. Children are ordered by
+/// start time; spans whose parent is missing from the slice are promoted
+/// to roots so a partial trace still renders.
+pub fn build_tree(spans: &[SpanRecord]) -> Vec<SpanNode> {
+    let ids: std::collections::HashSet<u64> = spans.iter().map(|s| s.span_id).collect();
+    let mut by_parent: std::collections::HashMap<u64, Vec<&SpanRecord>> =
+        std::collections::HashMap::new();
+    let mut roots: Vec<&SpanRecord> = Vec::new();
+    for s in spans {
+        match s.parent_id {
+            Some(p) if ids.contains(&p) => by_parent.entry(p).or_default().push(s),
+            _ => roots.push(s),
+        }
+    }
+    fn attach(
+        s: &SpanRecord,
+        by_parent: &std::collections::HashMap<u64, Vec<&SpanRecord>>,
+    ) -> SpanNode {
+        let mut children: Vec<SpanNode> = by_parent
+            .get(&s.span_id)
+            .map(|kids| kids.iter().map(|k| attach(k, by_parent)).collect())
+            .unwrap_or_default();
+        children.sort_by_key(|n| n.span.start_ns);
+        SpanNode { span: s.clone(), children }
+    }
+    roots.sort_by_key(|s| s.start_ns);
+    roots.iter().map(|r| attach(r, &by_parent)).collect()
+}
+
+/// Pretty-print span trees, one line per span with indentation, duration,
+/// and tags — the `sextans trace` output.
+pub fn render_tree(roots: &[SpanNode]) -> String {
+    fn fmt_dur(ns: u64) -> String {
+        if ns >= 1_000_000_000 {
+            format!("{:.3}s", ns as f64 / 1e9)
+        } else if ns >= 1_000_000 {
+            format!("{:.3}ms", ns as f64 / 1e6)
+        } else {
+            format!("{:.1}us", ns as f64 / 1e3)
+        }
+    }
+    fn walk(node: &SpanNode, depth: usize, out: &mut String) {
+        out.push_str(&"  ".repeat(depth));
+        out.push_str(&format!(
+            "{:<16} {:>10}  [{} .. {}]",
+            node.span.name,
+            fmt_dur(node.span.duration_ns()),
+            node.span.start_ns,
+            node.span.end_ns
+        ));
+        for (k, v) in &node.span.tags {
+            out.push_str(&format!("  {k}={v}"));
+        }
+        out.push('\n');
+        for child in &node.children {
+            walk(child, depth + 1, out);
+        }
+    }
+    let mut out = String::new();
+    for root in roots {
+        walk(root, 0, &mut out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn span(trace: u64, id_hint: &'static str, parent: Option<u64>) -> SpanRecord {
+        let start = Instant::now();
+        SpanRecord::from_instants(trace, parent, id_hint, start, start + Duration::from_micros(5))
+    }
+
+    #[test]
+    fn ids_are_unique_across_threads() {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(|| (0..500).map(|_| next_span_id()).collect::<Vec<u64>>())
+            })
+            .collect();
+        let mut all: Vec<u64> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "span ids collided");
+    }
+
+    #[test]
+    fn timestamps_are_monotone_and_ordered() {
+        let a = now_ns();
+        std::thread::sleep(Duration::from_millis(1));
+        let b = now_ns();
+        assert!(b > a);
+        let s = span(1, "x", None);
+        assert!(s.end_ns >= s.start_ns);
+        assert!(s.duration_ns() >= 4_000, "5us span measured {}ns", s.duration_ns());
+    }
+
+    #[test]
+    fn collector_filters_by_trace() {
+        let sink = TraceCollector::new();
+        sink.emit(span(1, "a", None));
+        sink.emit(span(2, "b", None));
+        sink.emit(span(1, "c", None));
+        assert_eq!(sink.spans().len(), 3);
+        assert_eq!(sink.trace(1).len(), 2);
+        assert_eq!(sink.trace(2).len(), 1);
+        assert_eq!(sink.trace_ids(), vec![1, 2]);
+    }
+
+    #[test]
+    fn tree_assembly_nests_children_under_parents() {
+        let root = span(7, "request", None);
+        let queue = span(7, "queue", Some(root.span_id));
+        let prepare = span(7, "prepare", Some(root.span_id));
+        let build = span(7, "backend.prepare", Some(prepare.span_id));
+        let spans = vec![queue.clone(), build.clone(), root.clone(), prepare.clone()];
+        let trees = build_tree(&spans);
+        assert_eq!(trees.len(), 1);
+        let t = &trees[0];
+        assert_eq!(t.span.name, "request");
+        assert_eq!(t.children.len(), 2);
+        let prep = t.children.iter().find(|c| c.span.name == "prepare").unwrap();
+        assert_eq!(prep.children.len(), 1);
+        assert_eq!(prep.children[0].span.name, "backend.prepare");
+        // Leaf duration of the tree sums queue + backend.prepare (prepare
+        // has a child, so its own interval is not double-counted).
+        let want = queue.duration_ns() + build.duration_ns();
+        assert_eq!(t.leaf_duration_ns(), want);
+    }
+
+    #[test]
+    fn orphan_spans_are_promoted_to_roots() {
+        let s = span(3, "exec", Some(999_999_999));
+        let trees = build_tree(&[s]);
+        assert_eq!(trees.len(), 1);
+        assert_eq!(trees[0].span.name, "exec");
+    }
+
+    #[test]
+    fn render_shows_names_durations_and_tags() {
+        let root = span(5, "request", None).tag("backend", "native");
+        let child = span(5, "exec", Some(root.span_id));
+        let text = render_tree(&build_tree(&[root, child]));
+        assert!(text.contains("request"), "{text}");
+        assert!(text.contains("  exec"), "{text}");
+        assert!(text.contains("backend=native"), "{text}");
+    }
+
+    #[test]
+    fn span_json_round_trips() {
+        let s = span(9, "prepare", Some(4)).tag("backend", "native:2");
+        let v = s.to_value();
+        let parsed = super::super::json::parse(&v.to_json_pretty()).unwrap();
+        assert_eq!(parsed.get("trace_id").and_then(Value::as_u64), Some(9));
+        assert_eq!(parsed.get("parent_id").and_then(Value::as_u64), Some(4));
+        assert_eq!(parsed.get("name").and_then(Value::as_str), Some("prepare"));
+        assert_eq!(
+            parsed.get("tags").and_then(|t| t.get("backend")).and_then(Value::as_str),
+            Some("native:2")
+        );
+        assert_eq!(
+            parsed.get("end_ns").and_then(Value::as_u64),
+            Some(s.end_ns),
+            "nanosecond timestamps survive the f64 JSON number path"
+        );
+    }
+
+    #[test]
+    fn sink_trait_object_is_shareable() {
+        let sink: Arc<dyn TelemetrySink> = Arc::new(TraceCollector::new());
+        let clone = Arc::clone(&sink);
+        let t = std::thread::spawn(move || clone.emit(span(1, "a", None)));
+        sink.emit(span(1, "b", None));
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,254 @@
+//! Integration: the end-to-end telemetry subsystem — per-request span
+//! trees that reconcile with the metrics pipeline, admission-only traces
+//! for rejected requests, the `--metrics-json` summary payload, and the
+//! committed `BENCH_baseline.json` perf-trajectory snapshot.
+//!
+//! The reconciliation test is the subsystem's acceptance bar: stage spans
+//! are stamped from the *same* `Instant`s that populate
+//! [`sextans::coordinator::metrics::RequestTiming`], so queue/batch/
+//! prepare/exec span durations must equal the reported timings to the
+//! nanosecond — not approximately, exactly. Only the root `request` span,
+//! which closes after the response is sent, gets a clock-tolerance bound.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use sextans::coordinator::{AdmissionPolicy, PipelineConfig, Server, SpmmRequest};
+use sextans::sched::preprocess;
+use sextans::sparse::{rng::Rng, Coo};
+use sextans::telemetry::bench_record::{compare, BenchRecord, SCHEMA_VERSION};
+use sextans::telemetry::trace::{build_tree, SpanNode, TelemetrySink, TraceCollector};
+
+/// Root close is bounded by real work (splitting C per segment) plus
+/// scheduling noise; 100 ms is orders of magnitude above both on any CI
+/// box while still catching a clock-domain mixup (which would be off by
+/// the process uptime).
+const ROOT_CLOSE_TOLERANCE_NS: u128 = 100_000_000;
+
+fn test_matrix() -> Coo {
+    let (m, k) = (48usize, 32usize);
+    let mut rows = Vec::new();
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    for i in 0..600u32 {
+        rows.push((i * 13 + 1) % (m as u32));
+        cols.push((i * 29 + 3) % (k as u32));
+        vals.push(0.25 + (i % 11) as f32 * 0.125);
+    }
+    Coo::new(m, k, rows, cols, vals).unwrap()
+}
+
+fn vecs(coo: &Coo, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+    let c: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+    (b, c)
+}
+
+fn traced_config(collector: &Arc<TraceCollector>) -> PipelineConfig {
+    PipelineConfig {
+        sink: Some(Arc::clone(collector) as Arc<dyn TelemetrySink>),
+        ..PipelineConfig::default()
+    }
+}
+
+fn child<'a>(root: &'a SpanNode, name: &str) -> &'a SpanNode {
+    root.children
+        .iter()
+        .find(|c| c.span.name == name)
+        .unwrap_or_else(|| panic!("span tree is missing a '{name}' child"))
+}
+
+#[test]
+fn span_tree_reconciles_with_request_timing() {
+    let coo = test_matrix();
+    let image = Arc::new(preprocess(&coo, 4, 8, 4));
+    let collector = Arc::new(TraceCollector::new());
+    let server =
+        Server::start_backend_with(2, traced_config(&collector), "native:1").unwrap();
+    let handle = server.register(Arc::clone(&image));
+
+    let mut timings = Vec::new();
+    for i in 0..4u64 {
+        let n = 2 + i as usize;
+        let (b, c0) = vecs(&coo, n, 40 + i);
+        let resp = server.call(SpmmRequest {
+            image: handle.clone(),
+            b,
+            c: c0,
+            n,
+            alpha: 1.0,
+            beta: 0.5,
+        });
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        timings.push(resp.timing);
+    }
+    // Shutdown joins the workers, so every span (including roots, emitted
+    // after the response send) is in the collector by now.
+    server.shutdown();
+
+    // Sequential submission allocates strictly increasing trace ids, so
+    // ascending trace ids line up with the recorded timings.
+    let ids = collector.trace_ids();
+    assert_eq!(ids.len(), timings.len(), "one trace per request");
+    for (trace_idx, (tid, t)) in ids.iter().zip(&timings).enumerate() {
+        let spans = collector.trace(*tid);
+        let roots = build_tree(&spans);
+        assert_eq!(roots.len(), 1, "trace {tid} must have exactly one root");
+        let root = &roots[0];
+        assert_eq!(root.span.name, "request");
+        assert!(root.span.parent_id.is_none());
+
+        // Exact integer-nanosecond reconciliation: span and timing were
+        // built from the same Instants.
+        assert_eq!(child(root, "queue").span.duration_ns() as u128, t.queue.as_nanos());
+        assert_eq!(child(root, "batch").span.duration_ns() as u128, t.batch.as_nanos());
+        assert_eq!(
+            child(root, "prepare").span.duration_ns() as u128,
+            t.prepare.as_nanos()
+        );
+        assert_eq!(child(root, "exec").span.duration_ns() as u128, t.exec.as_nanos());
+
+        let admission = child(root, "admission");
+        assert!(
+            admission.span.tags.iter().any(|(k, v)| *k == "outcome" && v == "admitted"),
+            "admission span must record the outcome"
+        );
+
+        // The first request misses residency: its prepare span carries the
+        // backend build as a child span.
+        if trace_idx == 0 {
+            let backend_prepare = child(child(root, "prepare"), "backend.prepare");
+            assert!(backend_prepare
+                .span
+                .tags
+                .iter()
+                .any(|(k, v)| *k == "outcome" && v == "built"));
+        }
+
+        // The root interval covers the whole stage breakdown and closes
+        // within clock tolerance of the reported end-to-end latency.
+        let total_ns = t.total().as_nanos();
+        let root_ns = root.span.duration_ns() as u128;
+        assert!(
+            root_ns >= total_ns,
+            "trace {tid}: root {root_ns} ns shorter than stage sum {total_ns} ns"
+        );
+        assert!(
+            root_ns - total_ns < ROOT_CLOSE_TOLERANCE_NS,
+            "trace {tid}: root closes {} ns after the stage sum",
+            root_ns - total_ns
+        );
+    }
+}
+
+#[test]
+fn rejected_requests_trace_as_a_lone_admission_span() {
+    let coo = test_matrix();
+    let image = Arc::new(preprocess(&coo, 4, 8, 4));
+    let collector = Arc::new(TraceCollector::new());
+    let config = PipelineConfig {
+        admission: AdmissionPolicy { max_in_flight: 0, ..AdmissionPolicy::default() },
+        ..traced_config(&collector)
+    };
+    let server = Server::start_backend_with(1, config, "functional").unwrap();
+    let handle = server.register(image);
+    let n = 2;
+    let (b, c0) = vecs(&coo, n, 9);
+    let resp = server.call(SpmmRequest {
+        image: handle,
+        b,
+        c: c0,
+        n,
+        alpha: 1.0,
+        beta: 0.0,
+    });
+    assert!(resp.error.is_some(), "zero-depth gate must reject");
+    server.shutdown();
+
+    let ids = collector.trace_ids();
+    assert_eq!(ids.len(), 1);
+    let spans = collector.trace(ids[0]);
+    assert_eq!(spans.len(), 1, "a shed request gets exactly one span");
+    // No `request` root exists; build_tree promotes the orphan admission
+    // span so the partial trace still renders.
+    let roots = build_tree(&spans);
+    assert_eq!(roots.len(), 1);
+    assert_eq!(roots[0].span.name, "admission");
+    assert!(roots[0]
+        .span
+        .tags
+        .iter()
+        .any(|(k, v)| *k == "outcome" && v == "shed_full"));
+}
+
+#[test]
+fn metrics_summary_json_carries_stage_percentiles() {
+    let coo = test_matrix();
+    let image = Arc::new(preprocess(&coo, 4, 8, 4));
+    let server = Server::start_backend_with(1, PipelineConfig::default(), "native:1").unwrap();
+    let handle = server.register(image);
+    for i in 0..6u64 {
+        let n = 3;
+        let (b, c0) = vecs(&coo, n, 70 + i);
+        let resp = server.call(SpmmRequest {
+            image: handle.clone(),
+            b,
+            c: c0,
+            n,
+            alpha: 1.0,
+            beta: 0.0,
+        });
+        assert!(resp.error.is_none());
+    }
+    let summary = server.shutdown();
+    let v = summary.to_value();
+    assert_eq!(v.get("requests").and_then(|r| r.as_u64()), Some(6));
+    let stages = v.get("stages").expect("stages object");
+    for stage in ["queue", "batch", "prepare", "exec"] {
+        let s = stages.get(stage).unwrap_or_else(|| panic!("missing stage {stage}"));
+        for key in ["mean_s", "p50_s", "p95_s", "p99_s"] {
+            let val = s
+                .get(key)
+                .and_then(|x| x.as_f64())
+                .unwrap_or_else(|| panic!("stage {stage} missing {key}"));
+            assert!(val.is_finite() && val >= 0.0, "{stage}.{key} = {val}");
+        }
+        // Percentiles are monotone by construction.
+        let p50 = s.get("p50_s").unwrap().as_f64().unwrap();
+        let p99 = s.get("p99_s").unwrap().as_f64().unwrap();
+        assert!(p99 >= p50, "{stage}: p99 {p99} < p50 {p50}");
+    }
+    // Exec takes measurable time, so its percentiles are strictly positive.
+    let exec_p50 =
+        stages.get("exec").unwrap().get("p50_s").unwrap().as_f64().unwrap();
+    assert!(exec_p50 > 0.0);
+    // Per-backend and per-image latency tables ride along.
+    let backends = v.get("backends").and_then(|b| b.as_arr()).expect("backends array");
+    assert!(!backends.is_empty());
+    assert!(backends[0].get("p95_s").and_then(|x| x.as_f64()).is_some());
+    let images = v.get("images").and_then(|b| b.as_arr()).expect("images array");
+    assert_eq!(images.len(), 1, "one registered image served every request");
+    assert_eq!(images[0].get("requests").and_then(|x| x.as_u64()), Some(6));
+}
+
+/// The committed perf-trajectory baseline at the repo root must always
+/// parse under the current schema and never flag regressions against
+/// itself — this is what keeps the `BENCH_*.json` contract honest across
+/// PRs (CI also validates a freshly generated smoke snapshot).
+#[test]
+fn committed_bench_baseline_parses_and_self_compares_clean() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_baseline.json");
+    let baseline = BenchRecord::read(&path).expect("committed baseline must parse");
+    assert_eq!(baseline.name, "baseline");
+    assert!(!baseline.git_rev.is_empty());
+    // Matrices recorded in the snapshot are rebuildable catalog specs.
+    for spec in &baseline.matrices {
+        assert!(spec.m > 0 && spec.nnz > 0, "{}: degenerate spec", spec.name);
+    }
+    assert!(compare(&baseline, &baseline, 0.0).is_empty(), "self-compare must be clean");
+    // The schema version in the file matches the library's.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let v = sextans::telemetry::json::parse(&text).unwrap();
+    assert_eq!(v.get("schema").and_then(|s| s.as_u64()), Some(SCHEMA_VERSION));
+}
