@@ -136,6 +136,32 @@ pub struct ExecutionReport {
     /// Shard-level statistics of *this* call, for handles that shard
     /// internally; `None` for single-unit engines.
     pub shard_stats: Option<crate::shard::ShardRunStats>,
+    /// Distributed-fleet statistics of *this* call; `None` for local
+    /// engines. Set by the `remote:<addr>` backend so the serving
+    /// dispatch can attribute placement/retry/re-place counters to the
+    /// exact request that incurred them.
+    pub remote: Option<RemoteStats>,
+}
+
+/// What one distributed execution did across the worker fleet — the
+/// per-call facts behind the `remote_*` counters in
+/// [`crate::coordinator::metrics::Summary`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RemoteStats {
+    /// Workers in the fleet (reachable or not).
+    pub workers: usize,
+    /// Workers not marked dead after this call.
+    pub live_workers: usize,
+    /// Shard placements currently live across the fleet (replicas
+    /// included).
+    pub placements: usize,
+    /// Effective replication factor (requested R clamped to fleet size).
+    pub replicas: usize,
+    /// Failed RPC attempts that were retried on another replica during
+    /// this call.
+    pub retries: usize,
+    /// Shards re-placed (re-prepared on a fresh worker) during this call.
+    pub replaced: usize,
 }
 
 /// A matrix-resident execution handle: one preprocessed A, arbitrarily many
@@ -267,7 +293,7 @@ pub trait PreparedSpmm {
         beta: f32,
     ) -> Result<ExecutionReport, BackendError> {
         let skipped = self.execute_routed(b, c, n, alpha, beta)?;
-        Ok(ExecutionReport { skipped, shard_stats: None })
+        Ok(ExecutionReport { skipped, ..ExecutionReport::default() })
     }
 
     /// Bytes this handle keeps resident *right now*, including per-call
@@ -279,6 +305,20 @@ pub trait PreparedSpmm {
     /// [`prepare_cost`]: PreparedSpmm::prepare_cost
     fn resident_bytes_now(&self) -> u64 {
         self.prepare_cost().resident_bytes
+    }
+
+    /// Release internal scratch that has sat idle longer than `max_idle`,
+    /// returning the bytes reclaimed. Scratch pools grow to the peak
+    /// concurrency a handle ever saw and otherwise hold that high-water
+    /// footprint forever; the serving residency stage calls this on cold
+    /// handles so the reclaim shows up in the next
+    /// [`resident_bytes_now`] measurement. Engines without trimmable
+    /// state keep this default no-op.
+    ///
+    /// [`resident_bytes_now`]: PreparedSpmm::resident_bytes_now
+    fn trim_resident(&self, max_idle: Duration) -> u64 {
+        let _ = max_idle;
+        0
     }
 }
 
@@ -425,6 +465,13 @@ pub fn registry() -> Vec<BackendInfo> {
             description: "row-sharded composite running S shards in parallel over an \
                           inner backend (sharded:<S>:<inner>, default sharded:2:native)",
         },
+        BackendInfo {
+            name: "remote",
+            available: true,
+            description: "distributed composite proxying shards to `sextans worker` \
+                          processes (remote:<addr>[,addr...][,replicas=R]); \
+                          availability = at least one worker answers a ping",
+        },
     ]
 }
 
@@ -505,6 +552,15 @@ pub fn check_available(spec: &str) -> Result<(), BackendError> {
             Err(_) => Ok(()),
         };
     }
+    if name == "remote" {
+        // Availability is a live property of the fleet, not the build:
+        // probe the workers (at least one must answer a ping). Malformed
+        // specs pass — create() rejects them with a better error.
+        return match crate::net::RemoteBackend::from_spec(arg) {
+            Ok(be) => be.probe(),
+            Err(_) => Ok(()),
+        };
+    }
     match registry().iter().find(|b| b.name == name) {
         Some(info) if !info.available => Err(BackendError::Unavailable(format!(
             "backend {name:?} cannot execute in this build ({})",
@@ -560,6 +616,7 @@ pub fn create(spec: &str) -> Result<Box<dyn SpmmBackend>, BackendError> {
             let (s, inner) = parse_sharded(arg)?;
             Ok(Box::new(crate::shard::ShardedBackend::from_spec(s, &inner)?))
         }
+        "remote" => Ok(Box::new(crate::net::RemoteBackend::from_spec(arg)?)),
         other => Err(BackendError::Unknown(other.to_string())),
     }
 }
@@ -589,7 +646,7 @@ mod tests {
         let names: Vec<_> = registry().iter().map(|b| b.name).collect();
         assert_eq!(
             names,
-            vec!["native", "native-blocked", "functional", "pjrt", "sharded"]
+            vec!["native", "native-blocked", "functional", "pjrt", "sharded", "remote"]
         );
         // Everything but pjrt executes in every build; pjrt tracks the
         // real-engine feature pair.
@@ -614,6 +671,11 @@ mod tests {
         assert_eq!(create("sharded:3").unwrap().name(), "sharded");
         assert_eq!(create("sharded:2:functional").unwrap().name(), "sharded");
         assert_eq!(create("sharded:2:native:1").unwrap().name(), "sharded");
+        assert_eq!(create("remote:127.0.0.1:7070").unwrap().name(), "remote");
+        assert_eq!(
+            create("remote:127.0.0.1:7070,127.0.0.1:7071,replicas=2").unwrap().name(),
+            "remote"
+        );
     }
 
     #[test]
@@ -625,6 +687,16 @@ mod tests {
         assert!(matches!(create("sharded:x:native"), Err(BackendError::InvalidSpec(_))));
         assert!(matches!(
             create("sharded:2:sharded:2:native"),
+            Err(BackendError::InvalidSpec(_))
+        ));
+        assert!(matches!(create("remote"), Err(BackendError::InvalidSpec(_))));
+        assert!(matches!(create("remote:"), Err(BackendError::InvalidSpec(_))));
+        assert!(matches!(
+            create("remote:replicas=2"),
+            Err(BackendError::InvalidSpec(_))
+        ));
+        assert!(matches!(
+            create("remote:127.0.0.1:7070,replicas=x"),
             Err(BackendError::InvalidSpec(_))
         ));
         let msg = create("fpga").unwrap_err().to_string();
@@ -645,6 +717,11 @@ mod tests {
         assert_eq!(apply_thread_budget("sharded:2:native:5", 8), "sharded:2:native:5");
         assert_eq!(apply_thread_budget("sharded:2", 8), "sharded:2:native:4");
         assert_eq!(apply_thread_budget("sharded", 8), "sharded:2:native:4");
+        // Remote threads are another machine's problem: pass through.
+        assert_eq!(
+            apply_thread_budget("remote:127.0.0.1:7070", 8),
+            "remote:127.0.0.1:7070"
+        );
         // Budget is clamped to at least one core.
         assert_eq!(apply_thread_budget("native", 0), "native:1");
         // Malformed specs pass through untouched (create() rejects them).
@@ -661,6 +738,11 @@ mod tests {
         assert!(check_available("warpdrive").is_ok());
         assert_eq!(check_available("pjrt").is_ok(), PJRT_REAL);
         assert_eq!(check_available("sharded:2:pjrt").is_ok(), PJRT_REAL);
+        // Remote availability is a live probe: nothing listens on the
+        // discard port, so the fleet is unreachable.
+        assert!(check_available("remote:127.0.0.1:9").is_err());
+        // Malformed remote specs defer to create()'s richer errors.
+        assert!(check_available("remote:no-port-here").is_ok());
     }
 
     #[test]

@@ -330,6 +330,14 @@ impl PreparedSpmm for PreparedNative {
         streams + pooled
     }
 
+    fn trim_resident(&self, max_idle: std::time::Duration) -> u64 {
+        // The decoded streams are the handle's reason to exist; only the
+        // pooled scratch sets (sized by peak concurrency and request
+        // width) are reclaimable.
+        self.scratch
+            .trim_idle(max_idle, |set| set.iter().map(|tile| tile.len() as u64 * 4).sum())
+    }
+
     fn execute(
         &self,
         b: &[f32],

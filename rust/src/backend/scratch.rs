@@ -28,13 +28,22 @@
 
 use std::ops::{Deref, DerefMut};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// One parked slot plus the moment it was returned — the idle clock
+/// [`ScratchPool::trim_idle`] reads.
+#[derive(Debug)]
+struct Parked<T> {
+    value: T,
+    since: Instant,
+}
 
 /// A checkout/return pool of reusable scratch values. Cheap to construct;
 /// `Sync` whenever `T: Send`, which is what lets handles holding one be
 /// shared across threads.
 #[derive(Debug, Default)]
 pub struct ScratchPool<T> {
-    slots: Mutex<Vec<T>>,
+    slots: Mutex<Vec<Parked<T>>>,
 }
 
 impl<T> ScratchPool<T> {
@@ -46,14 +55,16 @@ impl<T> ScratchPool<T> {
     /// A pool seeded with one ready slot — engines pre-size their scratch
     /// at prepare time so the first execution allocates nothing.
     pub fn with_seed(seed: T) -> ScratchPool<T> {
-        ScratchPool { slots: Mutex::new(vec![seed]) }
+        ScratchPool {
+            slots: Mutex::new(vec![Parked { value: seed, since: Instant::now() }]),
+        }
     }
 
     /// Check a slot out, building a fresh one with `make` only when every
     /// parked slot is already in use. The returned guard derefs to `T` and
     /// parks the slot back on drop (including on panic/unwind).
     pub fn checkout(&self, make: impl FnOnce() -> T) -> Scratch<'_, T> {
-        let recycled = self.slots.lock().unwrap().pop();
+        let recycled = self.slots.lock().unwrap().pop().map(|p| p.value);
         Scratch { pool: self, item: Some(recycled.unwrap_or_else(make)) }
     }
 
@@ -68,7 +79,30 @@ impl<T> ScratchPool<T> {
     /// on purpose). Engines use this to implement
     /// [`crate::backend::PreparedSpmm::resident_bytes_now`].
     pub fn measure(&self, bytes_of: impl Fn(&T) -> u64) -> u64 {
-        self.slots.lock().unwrap().iter().map(bytes_of).sum()
+        self.slots.lock().unwrap().iter().map(|p| bytes_of(&p.value)).sum()
+    }
+
+    /// Drop every slot parked for longer than `max_idle` and return the
+    /// bytes reclaimed (per `bytes_of`). A pool sized by a concurrency
+    /// burst otherwise holds its high-water footprint forever; engines
+    /// expose this through
+    /// [`crate::backend::PreparedSpmm::trim_resident`] so the serving
+    /// residency stage can shrink cold handles — the reclaim shows up in
+    /// the next [`crate::backend::PreparedSpmm::resident_bytes_now`]
+    /// measurement. Checkout order is LIFO, so under steady load the
+    /// stale tail is exactly the burst surplus.
+    pub fn trim_idle(&self, max_idle: Duration, bytes_of: impl Fn(&T) -> u64) -> u64 {
+        let mut slots = self.slots.lock().unwrap();
+        let mut reclaimed = 0;
+        slots.retain(|p| {
+            if p.since.elapsed() > max_idle {
+                reclaimed += bytes_of(&p.value);
+                false
+            } else {
+                true
+            }
+        });
+        reclaimed
     }
 }
 
@@ -96,7 +130,11 @@ impl<T> DerefMut for Scratch<'_, T> {
 impl<T> Drop for Scratch<'_, T> {
     fn drop(&mut self) {
         if let Some(item) = self.item.take() {
-            self.pool.slots.lock().unwrap().push(item);
+            self.pool
+                .slots
+                .lock()
+                .unwrap()
+                .push(Parked { value: item, since: Instant::now() });
         }
     }
 }
@@ -171,6 +209,52 @@ mod tests {
         drop(a);
         drop(b);
         assert_eq!(pool.measure(|s| s.len() as u64), 128);
+    }
+
+    #[test]
+    fn trim_idle_reclaims_stale_slots_and_reports_bytes() {
+        let pool: ScratchPool<Vec<u8>> = ScratchPool::new();
+        {
+            let a = pool.checkout(|| vec![0u8; 100]);
+            let b = pool.checkout(|| vec![0u8; 28]);
+            drop(a);
+            drop(b);
+        }
+        assert_eq!(pool.idle(), 2);
+        // Nothing is older than an hour: nothing reclaimed.
+        let reclaimed =
+            pool.trim_idle(std::time::Duration::from_secs(3600), |s| s.len() as u64);
+        assert_eq!(reclaimed, 0);
+        assert_eq!(pool.idle(), 2);
+        // Zero high-water timeout: everything parked is stale.
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let reclaimed = pool.trim_idle(std::time::Duration::ZERO, |s| s.len() as u64);
+        assert_eq!(reclaimed, 128, "reclaim reports the bytes of dropped slots");
+        assert_eq!(pool.idle(), 0);
+        assert_eq!(pool.measure(|s| s.len() as u64), 0, "footprint reflects the trim");
+    }
+
+    #[test]
+    fn trim_spares_recently_used_slots() {
+        let pool: ScratchPool<Vec<u8>> = ScratchPool::new();
+        {
+            let a = pool.checkout(|| vec![0u8; 64]);
+            drop(a);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        {
+            // Touch one slot now; it was just returned so it must survive a
+            // 10ms high-water trim while nothing else does.
+            let b = pool.checkout(|| vec![0u8; 16]);
+            let c = pool.checkout(|| vec![0u8; 256]);
+            drop(c);
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            drop(b);
+        }
+        let reclaimed =
+            pool.trim_idle(std::time::Duration::from_millis(10), |s| s.len() as u64);
+        assert_eq!(reclaimed, 256, "only the stale slot is reclaimed");
+        assert_eq!(pool.idle(), 1);
     }
 
     #[test]

@@ -48,9 +48,11 @@ use super::metrics::{ConcurrencyGauge, Recorder, RequestTiming};
 use super::residency::{Resolution, ResidencyManager, PREPARED_CACHE_ENTRIES};
 use super::server::SpmmResponse;
 use crate::arch::simulator::problem_flops;
-use crate::backend::{ExecutionReport, PreparedSpmm, SpmmBackend};
+use crate::backend::{ExecutionReport, PreparedSpmm, RemoteStats, SpmmBackend};
 use crate::shard::ShardRunStats;
-use crate::telemetry::trace::{instant_ns, next_span_id, now_ns, SpanRecord, TelemetrySink};
+use crate::telemetry::trace::{
+    instant_ns, next_span_id, now_ns, push_span_context, SpanRecord, TelemetrySink,
+};
 
 /// Per-worker core budget: the machine's cores divided across `n_workers`
 /// threads, at least one — the first factor of the workers × shards ×
@@ -148,6 +150,18 @@ fn worker_loop(
         } else {
             None
         };
+        // Likewise pre-allocate the `exec` span id and install it as the
+        // thread's span context for the duration of the execution, so
+        // engines that fan out over the network (the `remote:` backend)
+        // can parent their `net.rpc` spans under this request's exec span.
+        let exec_span = if sink.is_some() {
+            job.segments
+                .iter()
+                .find_map(|s| s.trace)
+                .map(|ctx| (ctx.trace_id, next_span_id()))
+        } else {
+            None
+        };
 
         // Stage boundary: residency resolution (cache hit or prepare).
         let t_prepare = Instant::now();
@@ -160,6 +174,7 @@ fn worker_loop(
         );
         let mut skipped = 0usize;
         let mut stats: Option<ShardRunStats> = None;
+        let mut remote_stats: Option<RemoteStats> = None;
         let mut resident_now: Option<u64> = None;
         let (prepare_end, t_exec, exec_end, error) = match resolution {
             Resolution::Shared(shared) => {
@@ -171,6 +186,8 @@ fn worker_loop(
                 let t_exec = Instant::now();
                 let r = {
                     let _in_exec = exec_gauge.enter();
+                    let _span_ctx =
+                        exec_span.map(|(trace_id, id)| push_span_context(trace_id, id));
                     run_job(&*shared, &mut job)
                 };
                 let exec_end = Instant::now();
@@ -178,6 +195,7 @@ fn worker_loop(
                     Ok(report) => {
                         skipped = report.skipped;
                         stats = report.shard_stats;
+                        remote_stats = report.remote;
                         // Scratch pools may have grown under concurrency;
                         // refresh the shared cache's byte accounting from
                         // the handle's live footprint after responses.
@@ -223,12 +241,15 @@ fn worker_loop(
                         let handle = &*local[0].1;
                         let r = {
                             let _in_exec = exec_gauge.enter();
+                            let _span_ctx = exec_span
+                                .map(|(trace_id, id)| push_span_context(trace_id, id));
                             run_job(handle, &mut job)
                         };
                         match r {
                             Ok(report) => {
                                 skipped = report.skipped;
                                 stats = report.shard_stats;
+                                remote_stats = report.remote;
                                 None
                             }
                             Err(e) => Some(e.to_string()),
@@ -251,6 +272,9 @@ fn worker_loop(
                     recorder.lock().unwrap().record_routed(skipped);
                 }
                 recorder.lock().unwrap().record_shards(s);
+            }
+            if let Some(ref rs) = remote_stats {
+                recorder.lock().unwrap().record_remote(rs);
             }
         }
         // Split C back per request and respond with per-stage timings —
@@ -304,14 +328,20 @@ fn worker_loop(
                     end_ns: instant_ns(prepare_end),
                     tags: Vec::new(),
                 });
+                let exec_id = match exec_span {
+                    Some((t, id)) if t == ctx.trace_id => id,
+                    _ => next_span_id(),
+                };
                 sink.emit(
-                    SpanRecord::from_instants(
-                        ctx.trace_id,
-                        Some(ctx.root_id),
-                        "exec",
-                        t_exec,
-                        exec_end,
-                    )
+                    SpanRecord {
+                        trace_id: ctx.trace_id,
+                        span_id: exec_id,
+                        parent_id: Some(ctx.root_id),
+                        name: "exec",
+                        start_ns: instant_ns(t_exec),
+                        end_ns: instant_ns(exec_end),
+                        tags: Vec::new(),
+                    }
                     .tag("backend", backend_name),
                 );
                 let mut root = SpanRecord {
@@ -342,6 +372,9 @@ fn worker_loop(
             if let Some(ref s) = stats {
                 residency.note_shards(job.image.id, s, &recorder);
             }
+            // Sweep idle pooled scratch (rate-limited inside; a no-op
+            // unless the residency policy sets a scratch-idle timeout).
+            let _ = residency.trim_scratch(&recorder);
         }
     }
 }

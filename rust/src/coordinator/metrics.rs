@@ -18,7 +18,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
 
-use crate::backend::PrepareCost;
+use crate::backend::{PrepareCost, RemoteStats};
 use crate::shard::ShardRunStats;
 use crate::telemetry::histogram::{Histogram, Percentiles};
 use crate::telemetry::json::{self, Value};
@@ -156,6 +156,12 @@ pub struct Recorder {
     shard_imbalance_sum: f64,
     shard_imbalance_max: f64,
     shard_slowest_s_sum: f64,
+    remote_execs: usize,
+    remote_retries: usize,
+    remote_replaced: usize,
+    /// Latest fleet view (last-wins gauges from the most recent remote
+    /// execution's [`RemoteStats`]).
+    remote_fleet: Option<RemoteStats>,
 }
 
 impl Recorder {
@@ -272,6 +278,17 @@ impl Recorder {
         self.shard_slowest_s_sum += stats.slowest().as_secs_f64();
     }
 
+    /// Record one distributed execution's fleet stats: retry/re-place
+    /// event counters accumulate, the fleet shape (workers, live workers,
+    /// placements, replicas) is a last-wins gauge — it describes the
+    /// fleet *now*, not a sum over history.
+    pub fn record_remote(&mut self, stats: &RemoteStats) {
+        self.remote_execs += 1;
+        self.remote_retries += stats.retries;
+        self.remote_replaced += stats.replaced;
+        self.remote_fleet = Some(*stats);
+    }
+
     /// Summarize.
     pub fn summary(&self) -> Summary {
         let requests = self.total_hist.count() as usize;
@@ -351,6 +368,13 @@ impl Recorder {
             } else {
                 self.shard_slowest_s_sum / self.shard_execs as f64
             },
+            remote_execs: self.remote_execs,
+            remote_retries: self.remote_retries,
+            remote_replaced: self.remote_replaced,
+            remote_workers: self.remote_fleet.map_or(0, |f| f.workers),
+            remote_live_workers: self.remote_fleet.map_or(0, |f| f.live_workers),
+            remote_placements: self.remote_fleet.map_or(0, |f| f.placements),
+            remote_replicas: self.remote_fleet.map_or(0, |f| f.replicas),
         }
     }
 }
@@ -445,6 +469,25 @@ pub struct Summary {
     pub max_shard_imbalance: f64,
     /// Mean slowest-shard (makespan) latency per sharded execution (s).
     pub mean_shard_makespan_s: f64,
+    /// Distributed executions observed (0 when no `remote:` backend
+    /// served).
+    pub remote_execs: usize,
+    /// Failed remote RPC attempts retried on another replica, summed
+    /// across distributed executions.
+    pub remote_retries: usize,
+    /// Shards re-placed onto a fresh worker mid-stream, summed across
+    /// distributed executions.
+    pub remote_replaced: usize,
+    /// Fleet size of the most recent distributed execution (gauge).
+    pub remote_workers: usize,
+    /// Workers still live after the most recent distributed execution
+    /// (gauge).
+    pub remote_live_workers: usize,
+    /// Shard placements (replicas included) live across the fleet after
+    /// the most recent distributed execution (gauge).
+    pub remote_placements: usize,
+    /// Configured replication factor of the serving fleet (gauge).
+    pub remote_replicas: usize,
 }
 
 fn percentiles_value(p: &Percentiles) -> Value {
@@ -557,6 +600,18 @@ impl Summary {
             ("mean_shard_imbalance", json::num(self.mean_shard_imbalance)),
             ("max_shard_imbalance", json::num(self.max_shard_imbalance)),
             ("mean_shard_makespan_s", json::num(self.mean_shard_makespan_s)),
+            (
+                "remote",
+                json::obj(vec![
+                    ("execs", json::num(self.remote_execs as f64)),
+                    ("retries", json::num(self.remote_retries as f64)),
+                    ("replaced", json::num(self.remote_replaced as f64)),
+                    ("workers", json::num(self.remote_workers as f64)),
+                    ("live_workers", json::num(self.remote_live_workers as f64)),
+                    ("placements", json::num(self.remote_placements as f64)),
+                    ("replicas", json::num(self.remote_replicas as f64)),
+                ]),
+            ),
         ])
     }
 }
@@ -689,6 +744,44 @@ mod tests {
         assert_eq!(s.reshards, 0);
         assert_eq!(s.last_reshard, None);
         assert_eq!(s.evictions, 0);
+        assert_eq!(s.remote_execs, 0);
+        assert_eq!(s.remote_retries, 0);
+        assert_eq!(s.remote_replaced, 0);
+        assert_eq!(s.remote_workers, 0);
+    }
+
+    #[test]
+    fn remote_accounting_sums_events_and_gauges_fleet_shape() {
+        let mut r = Recorder::default();
+        r.record_remote(&RemoteStats {
+            workers: 3,
+            live_workers: 3,
+            placements: 6,
+            replicas: 2,
+            retries: 1,
+            replaced: 0,
+        });
+        r.record_remote(&RemoteStats {
+            workers: 3,
+            live_workers: 2,
+            placements: 5,
+            replicas: 2,
+            retries: 2,
+            replaced: 1,
+        });
+        let s = r.summary();
+        assert_eq!(s.remote_execs, 2);
+        assert_eq!(s.remote_retries, 3, "retries accumulate across executions");
+        assert_eq!(s.remote_replaced, 1);
+        assert_eq!(s.remote_workers, 3);
+        assert_eq!(s.remote_live_workers, 2, "fleet shape is last-wins");
+        assert_eq!(s.remote_placements, 5);
+        assert_eq!(s.remote_replicas, 2);
+        let v = s.to_value();
+        let parsed = crate::telemetry::json::parse(&v.to_json_pretty()).unwrap();
+        let remote = parsed.get("remote").unwrap();
+        assert_eq!(remote.get("retries").and_then(Value::as_u64), Some(3));
+        assert_eq!(remote.get("live_workers").and_then(Value::as_u64), Some(2));
     }
 
     #[test]

@@ -18,10 +18,17 @@
 //!        │                 │           │  &self exec  │   │  PreparedSpmm│
 //!        │ admission       │ queue     └──────────────┘   │  > handles,  │
 //!        ▼ span            ▼ span        │ batch/prepare/ │  re-shard on │
-//!  ┌──────────────────────────────────── ▼ exec + root ─┐ │  skew        │
-//!  │ telemetry sink (optional): one span tree / request │ └──────────────┘
-//!  └────────────────────────────────────────────────────┘   │ backend.
-//!                                                           ▼ prepare span
+//!  ┌──────────────────────────────────── ▼ exec + root ─┐ │  skew,       │
+//!  │ telemetry sink (optional): one span tree / request │ │  scratch     │
+//!  └────────────────────────────────────────────────────┘ │  trimming    │
+//!                      ▲ net.rpc spans                     └──────────────┘
+//!                      │                                     │ backend.
+//!  ┌──────────────────────────────────────────────────────┐  ▼ prepare span
+//!  │ 5 remote worker tier (optional): remote:<addr>[,...] │
+//!  │   shards placed on `sextans worker` processes over   │
+//!  │   the framed wire protocol — R-way replication,      │
+//!  │   retry on replicas, re-place off dead workers       │
+//!  └──────────────────────────────────────────────────────┘
 //! ```
 //!
 //! * [`admission`] — an in-flight gate sheds load at the front door
@@ -42,7 +49,18 @@
 //!   cloned out to workers as plain `Arc<dyn PreparedSpmm + Send + Sync>`
 //!   (the only locks left guard the cache map and the engines' scratch
 //!   pools); rolling shard-imbalance triggers re-shard-on-skew (drop +
-//!   re-prepare at a smaller S) without callers noticing.
+//!   re-prepare at a smaller S) without callers noticing, and an optional
+//!   scratch-idle timeout trims pooled scratch that sat parked past its
+//!   high-water mark, shedding a concurrency burst's footprint.
+//! * **remote worker tier** (optional) — a `remote:<addr>[,addr...]`
+//!   backend spec swaps the in-process engine for a fleet of
+//!   `sextans worker` processes reached over [`crate::net`]'s framed wire
+//!   protocol. The dispatch stage is oblivious: the handle it executes is
+//!   a [`crate::net::PreparedRemote`] that places shards across the fleet
+//!   (R-way replicated), retries failures on replicas, re-places shards
+//!   off dead workers, and reports placement/retry/re-place counters that
+//!   land in [`metrics::Summary`] and as `net.rpc` child spans under each
+//!   request's `exec` span.
 //!
 //! Every stage is instrumented twice over. Aggregates flow into
 //! [`metrics::Recorder`]'s fixed-memory streaming histograms (per-stage,

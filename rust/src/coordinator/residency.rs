@@ -32,7 +32,7 @@
 //!   product cannot oversubscribe the machine.
 
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::metrics::Recorder;
 use crate::backend::{self, BackendError, PreparedSpmm, SpmmBackend};
@@ -54,11 +54,17 @@ pub struct ResidencyPolicy {
     /// the most recently used handle always stays, even when it alone
     /// exceeds the budget (the server must be able to serve).
     pub max_resident_bytes: u64,
+    /// High-water timeout for pooled scratch: slot sets idle longer than
+    /// this are dropped by [`ResidencyManager::trim_scratch`] (through
+    /// [`crate::backend::PreparedSpmm::trim_resident`]), so a concurrency
+    /// burst's scratch surplus is reclaimed instead of held forever.
+    /// `None` (the default) disables trimming.
+    pub scratch_idle: Option<Duration>,
 }
 
 impl Default for ResidencyPolicy {
     fn default() -> Self {
-        ResidencyPolicy { max_resident_bytes: 512 * 1024 * 1024 }
+        ResidencyPolicy { max_resident_bytes: 512 * 1024 * 1024, scratch_idle: None }
     }
 }
 
@@ -148,6 +154,8 @@ struct State {
     /// steady-state hot path of thread-local backends (the real PJRT
     /// engine) never re-runs the miss protocol.
     thread_local: Vec<u64>,
+    /// When the last scratch trim sweep ran (rate limit).
+    last_trim: Instant,
 }
 
 /// Drop LRU residencies until the pool fits the byte budget. The MRU
@@ -202,6 +210,7 @@ impl ResidencyManager {
                 total_bytes: 0,
                 preparing: Vec::new(),
                 thread_local: Vec::new(),
+                last_trim: Instant::now(),
             }),
             prepare_done: Condvar::new(),
             sink,
@@ -409,6 +418,38 @@ impl ResidencyManager {
         evict_to_budget(&self.policy, st, recorder);
     }
 
+    /// Trim idle pooled scratch across every resident handle (rate-limited
+    /// to once per half [`ResidencyPolicy::scratch_idle`]), refreshing the
+    /// byte accounting of handles that shrank. Returns the bytes
+    /// reclaimed. The dispatch stage calls this after executions, so a
+    /// server that saw a concurrency burst sheds the burst's scratch
+    /// surplus once the slots go idle past the high-water timeout — the
+    /// reclaim is visible in [`ResidencyManager::resident_bytes`] and the
+    /// handles' own `resident_bytes_now`. A no-op when the policy leaves
+    /// `scratch_idle` unset.
+    pub fn trim_scratch(&self, recorder: &Mutex<Recorder>) -> u64 {
+        let Some(max_idle) = self.policy.scratch_idle else { return 0 };
+        let handles: Vec<(u64, SharedHandle)> = {
+            let mut guard = self.state.lock().unwrap();
+            if guard.last_trim.elapsed() < max_idle / 2 {
+                return 0;
+            }
+            guard.last_trim = Instant::now();
+            guard.entries.iter().map(|e| (e.id, Arc::clone(&e.handle))).collect()
+        };
+        // Trim outside the lock: trait objects may take their own pool
+        // locks, and resolution must not stall behind the sweep.
+        let mut reclaimed = 0u64;
+        for (id, handle) in handles {
+            let got = handle.trim_resident(max_idle);
+            if got > 0 {
+                reclaimed += got;
+                self.note_bytes(id, handle.resident_bytes_now(), recorder);
+            }
+        }
+        reclaimed
+    }
+
     /// Total bytes currently resident across cached handles.
     pub fn resident_bytes(&self) -> u64 {
         self.state.lock().unwrap().total_bytes
@@ -506,7 +547,7 @@ mod tests {
         assert!(one > 0);
 
         let mgr = ResidencyManager::new(
-            ResidencyPolicy { max_resident_bytes: 2 * one + one / 2 },
+            ResidencyPolicy { max_resident_bytes: 2 * one + one / 2, ..Default::default() },
             ReshardPolicy::default(),
             None,
             None,
@@ -523,7 +564,7 @@ mod tests {
         assert!(s.evictions >= 1);
         // An oversized single handle still stays resident.
         let tiny = ResidencyManager::new(
-            ResidencyPolicy { max_resident_bytes: 1 },
+            ResidencyPolicy { max_resident_bytes: 1, ..Default::default() },
             ReshardPolicy::default(),
             None,
             None,
@@ -678,6 +719,52 @@ mod tests {
         // Explicit operator thread counts pass through untouched.
         assert_eq!(reshard_spec("native:1", 4, 16), "sharded:4:native:1");
         assert_eq!(reshard_spec("functional", 2, 16), "sharded:2:functional");
+    }
+
+    #[test]
+    fn trim_scratch_reclaims_idle_pool_bytes_and_reaccounts() {
+        let mgr = ResidencyManager::new(
+            ResidencyPolicy {
+                scratch_idle: Some(Duration::from_millis(2)),
+                ..Default::default()
+            },
+            ReshardPolicy::default(),
+            None,
+            None,
+        );
+        let recorder = Mutex::new(Recorder::default());
+        let be = NativeBackend::new(1);
+        let img = image(30);
+        let Resolution::Shared(handle) = mgr.resolve(8, &img, &be, &recorder) else {
+            panic!("native prepares sendable handles");
+        };
+        // Execute once so a scratch set is parked, then refresh the byte
+        // accounting the way dispatch does after an execution.
+        let n = 3;
+        let b = vec![1.0f32; img.k * n];
+        let mut c = vec![0.0f32; img.m * n];
+        handle.execute(&b, &mut c, n, 1.0, 0.0).unwrap();
+        mgr.note_bytes(8, handle.resident_bytes_now(), &recorder);
+        let before = mgr.resident_bytes();
+        std::thread::sleep(Duration::from_millis(10));
+        let reclaimed = mgr.trim_scratch(&recorder);
+        assert!(reclaimed > 0, "idle scratch must be reclaimed");
+        assert!(
+            mgr.resident_bytes() < before,
+            "trim must re-account: {} -> {}",
+            before,
+            mgr.resident_bytes()
+        );
+        // Immediately after a sweep the rate limit suppresses the next one.
+        assert_eq!(mgr.trim_scratch(&recorder), 0, "sweeps are rate-limited");
+        // With trimming disabled, the manager never touches the handles.
+        let off = ResidencyManager::new(
+            ResidencyPolicy::default(),
+            ReshardPolicy::default(),
+            None,
+            None,
+        );
+        assert_eq!(off.trim_scratch(&recorder), 0);
     }
 
     #[test]

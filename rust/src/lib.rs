@@ -34,6 +34,7 @@
 //! | [`hflex`] | §3.4 | the HFlex runtime contract: one fixed accelerator, arbitrary SpMMs; [`hflex::HFlexAccelerator::load`] returns an A-resident [`hflex::LoadedMatrix`] |
 //! | [`backend`] | §3.4, §4.2 | two-phase prepare/execute engines: [`backend::SpmmBackend`] factories produce matrix-resident [`backend::PreparedSpmm`] handles (prepare A once, execute many — *concurrently*: `execute` takes `&self`, per-call scratch comes from [`backend::ScratchPool`]s) — native multi-threaded CPU (plain + column-blocked), functional reference, PJRT adapter, sharded composite — selected by name |
 //! | [`shard`] | §3.3 scaled up | sharded multi-accelerator execution: nnz-balanced row partitioning, resident [`shard::ShardExecutor`] pools of prepared inner handles (full or active-subset execution, `&self` with pooled gather blocks), `sharded:<S>:<inner>` composite backend |
+//! | [`net`] | §3.3 scaled out | distributed worker fleet: versioned length-prefixed wire codec for scheduled images, `sextans worker` shard servers, LPT/replicated shard placement, and the `remote:<addr>[,addr...]` backend proxying execution over pooled connections with retry + re-place |
 //! | [`runtime`] | — | PJRT client wrapping the AOT HLO artifacts (stubbed unless both `pjrt` and `xla` features are on) |
 //! | [`coordinator`] | — | adaptive SpMM serving pipeline in four stages — admission (backpressure gate + per-image fairness quota), batcher (merge window + shard-aware routing), dispatch (worker pool + thread budgets + stage timings + concurrent execution over shared `Arc<dyn PreparedSpmm>` handles), residency (byte-sized cache of shared lock-free handles + re-shard-on-skew) — behind the [`coordinator::Server`] facade |
 //! | [`metrics`] | §4.2 | GFLOP/s, bandwidth utilization, energy efficiency, geomean/CDF |
@@ -47,6 +48,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod hflex;
 pub mod metrics;
+pub mod net;
 pub mod perfmodel;
 pub mod prop;
 pub mod report;

@@ -11,6 +11,8 @@
 //!               [--backend NAME] [--baseline FILE] [--tolerance T] [--strict]
 //! sextans trace [<catalog-matrix>] [--requests R] [--workers W]
 //!               [--backend NAME] [--out FILE]
+//! sextans worker [--addr HOST:PORT] [--backend NAME]
+//!                [--read-timeout-ms T] [--write-timeout-ms T]
 //! sextans backends
 //! sextans info
 //! ```
@@ -39,6 +41,7 @@ use sextans::coordinator::{
     SpmmRequest,
 };
 use sextans::hflex::{HFlexAccelerator, SpmmProblem};
+use sextans::net::{self, WorkerConfig};
 use sextans::perfmodel::Platform;
 use sextans::report::{self, experiments};
 use sextans::sched::preprocess;
@@ -57,11 +60,12 @@ fn main() {
         "serve" => cmd_serve(&cli),
         "bench" => cmd_bench(&cli),
         "trace" => cmd_trace(&cli),
+        "worker" => cmd_worker(&cli),
         "backends" => cmd_backends(),
         "info" | "" => cmd_info(),
         other => {
             eprintln!("unknown command {other:?}");
-            eprintln!("commands: repro, run, gen, serve, bench, trace, backends, info");
+            eprintln!("commands: repro, run, gen, serve, bench, trace, worker, backends, info");
             std::process::exit(2);
         }
     };
@@ -307,8 +311,12 @@ fn cmd_gen(cli: &Cli) -> Result<()> {
 /// flags: `--queue-depth` (admission bound), `--image-quota` (per-image
 /// in-flight fairness quota, 0 = off), `--max-columns`/`--window-ms`
 /// (batching), `--route-columns` (shard-aware routing threshold),
-/// `--resident-mb` (residency byte budget), `--reshard-threshold` /
-/// `--reshard-window` (re-shard-on-skew trigger). Telemetry:
+/// `--resident-mb` (residency byte budget), `--scratch-idle-ms` (trim
+/// pooled scratch idle past this high-water timeout; 0 = off),
+/// `--reshard-threshold` / `--reshard-window` (re-shard-on-skew
+/// trigger). A `--backend remote:<addr>[,addr...]` spec proxies
+/// execution to `sextans worker` processes and prints fleet counters on
+/// shutdown. Telemetry:
 /// `--trace-json FILE` attaches a span collector and writes every
 /// request's span tree as JSON; `--metrics-json FILE` writes the shutdown
 /// summary (per-stage/per-backend/per-image p50/p95/p99 included).
@@ -355,6 +363,10 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
                 defaults.residency.max_resident_bytes / (1024 * 1024),
             ) * 1024
                 * 1024,
+            scratch_idle: match cli.get_u64("scratch-idle-ms", 0) {
+                0 => None,
+                ms => Some(std::time::Duration::from_millis(ms)),
+            },
         },
         reshard: ReshardPolicy {
             imbalance_threshold: cli.get_f32("reshard-threshold", f32::INFINITY) as f64,
@@ -364,6 +376,13 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             .as_ref()
             .map(|c| Arc::clone(c) as Arc<dyn TelemetrySink>),
     };
+
+    // The remote backend emits net.rpc spans through a process-global
+    // sink; point it at the same collector so per-shard RPCs nest under
+    // each request's exec span in the trace output.
+    if let Some(c) = &collector {
+        net::set_telemetry_sink(Some(Arc::clone(c) as Arc<dyn TelemetrySink>));
+    }
 
     let server = Server::start_backend_with(workers, config, backend_spec)?;
     let handle = server.register(image);
@@ -384,6 +403,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         let _ = rx.recv();
     }
     let s = server.shutdown();
+    net::set_telemetry_sink(None);
     println!(
         "served {} requests in {} batches (mean batch {:.1}); p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms",
         s.requests,
@@ -440,6 +460,19 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             s.mean_shard_imbalance,
             s.max_shard_imbalance,
             s.mean_shard_makespan_s * 1e3
+        );
+    }
+    if s.remote_execs > 0 {
+        println!(
+            "  remote: {} fleet executions over {} workers ({} live), {} placements \
+             x{} replication; {} retries, {} shards re-placed",
+            s.remote_execs,
+            s.remote_workers,
+            s.remote_live_workers,
+            s.remote_placements,
+            s.remote_replicas,
+            s.remote_retries,
+            s.remote_replaced
         );
     }
     if let Some(path) = cli.get("metrics-json") {
@@ -625,6 +658,17 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
 
     if let Some(base_path) = cli.get("baseline") {
         let baseline = BenchRecord::read(Path::new(base_path)).map_err(|e| anyhow!(e))?;
+        if baseline.is_zeroed() {
+            eprintln!(
+                "WARNING: baseline {base_path} is the zeroed placeholder (every \
+                 measurement is 0 GFLOP/s) — comparisons against it can only ever \
+                 pass. Re-measure it with `sextans bench --name baseline` on a \
+                 quiet machine before trusting this gate."
+            );
+            if cli.flag("strict") {
+                bail!("--strict refuses the zeroed placeholder baseline {base_path}");
+            }
+        }
         let tolerance = cli.get_f32("tolerance", 0.15) as f64;
         let regressions = compare(&baseline, &record, tolerance);
         if regressions.is_empty() {
@@ -704,6 +748,36 @@ fn cmd_trace(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// `worker`: a follower process for the distributed fleet. Binds
+/// `--addr` (default `127.0.0.1:0` — port 0 picks a free port), prints
+/// `worker listening on <addr>` so a parent process can scrape the bound
+/// port, then serves prepare/execute/stats/evict RPCs over the framed
+/// wire protocol until a shutdown RPC arrives. `--backend` picks the
+/// local engine images are prepared through (default `native`);
+/// `--read-timeout-ms`/`--write-timeout-ms` bound how long one stalled
+/// peer can pin a connection thread (default 10000).
+fn cmd_worker(cli: &Cli) -> Result<()> {
+    use std::io::Write as _;
+    let addr = cli.get("addr").unwrap_or("127.0.0.1:0");
+    let config = WorkerConfig {
+        backend_spec: cli.get("backend").unwrap_or("native").to_string(),
+        read_timeout: std::time::Duration::from_millis(cli.get_u64("read-timeout-ms", 10_000)),
+        write_timeout: std::time::Duration::from_millis(cli.get_u64("write-timeout-ms", 10_000)),
+    };
+    let worker = net::Worker::bind(addr, &config)?;
+    // The "listening on" line is the readiness handshake: tests and the
+    // CI smoke leg parse the port out of it, so flush before serving.
+    println!(
+        "worker listening on {} (backend {:?})",
+        worker.local_addr()?,
+        config.backend_spec
+    );
+    std::io::stdout().flush()?;
+    worker.run(&config)?;
+    println!("worker shut down");
+    Ok(())
+}
+
 /// `backends`: every registry name with its capability, availability in
 /// this build, and the effective thread budget its auto-sized spec
 /// resolves to on this machine ([`backend::apply_thread_budget`] with all
@@ -723,6 +797,23 @@ fn cmd_backends() -> Result<()> {
     );
     for info in backend::registry() {
         let status = if info.available { "available" } else { "unavailable" };
+        if info.name == "remote" {
+            // The remote composite needs a fleet address to instantiate,
+            // and its availability is a live ping probe of that fleet —
+            // not a property of the build, so no capability row here.
+            println!(
+                "{:<15} {:<12} {:>7} {:>6}  {:<13} {:<10} {:<22} {}",
+                info.name,
+                "probed",
+                "fleet",
+                1,
+                "yes",
+                "no",
+                "remote:<addr>[,...]",
+                info.description
+            );
+            continue;
+        }
         let budgeted = backend::apply_thread_budget(info.name, cores);
         match backend::create(&budgeted) {
             Ok(be) => {
@@ -753,10 +844,12 @@ fn cmd_backends() -> Result<()> {
         }
     }
     println!(
-        "\nspecs: native:<threads>, native-blocked:<threads>, sharded:<S>:<inner>; \
-         select with --backend on `run`/`serve`. Auto-sized specs are shown after \
-         thread budgeting for this machine's {cores} cores; `serve` further divides \
-         the budget across its workers."
+        "\nspecs: native:<threads>, native-blocked:<threads>, sharded:<S>:<inner>, \
+         remote:<addr>[,addr...][,replicas=R][,timeout_ms=T]; select with --backend \
+         on `run`/`serve`. Auto-sized specs are shown after thread budgeting for \
+         this machine's {cores} cores; `serve` further divides the budget across \
+         its workers. The remote fleet is `sextans worker` processes; its \
+         availability probe pings the listed addresses."
     );
     Ok(())
 }

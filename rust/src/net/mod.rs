@@ -1,0 +1,36 @@
+//! Distributed worker fleet: remote shard execution over a framed wire
+//! protocol.
+//!
+//! The sharded composite ([`crate::shard`]) scales SpMM across prepared
+//! handles *inside one process*; this module lifts the same
+//! prepare-once/execute-many contract onto a fleet of `sextans worker`
+//! processes so shard residencies can live on other machines:
+//!
+//! * [`wire`] — the versioned, length-prefixed binary framing plus
+//!   payload codecs for [`crate::sched::ScheduledMatrix`] images, shard
+//!   plans, prepare costs, and execute requests. Hand-rolled little-endian
+//!   encoding in the spirit of [`crate::telemetry::json`]: no new
+//!   dependencies, every decode bounds-checked and version-gated.
+//! * [`worker`] — the server side: a process that listens on a socket,
+//!   holds prepared shard residencies keyed by image id, and serves
+//!   ping/prepare/execute/stats/evict/shutdown RPCs with per-request
+//!   framing and read/write timeouts.
+//! * [`placer`] — LPT shard placement across the fleet with R-way
+//!   replication on distinct workers.
+//! * [`remote`] — the client side: the `remote:<addr>[,addr...]` backend
+//!   whose [`crate::backend::PreparedSpmm`] handle proxies shard
+//!   executions over pooled connections, retries across replicas, and
+//!   re-places shards off dead workers mid-stream.
+//!
+//! Failure semantics mirror the in-process executor: "shard i of S on
+//! host h failed" with C untouched — never silently zeroed rows.
+
+pub mod placer;
+pub mod remote;
+pub mod wire;
+pub mod worker;
+
+pub use placer::{place, FleetPlan};
+pub use remote::{set_telemetry_sink, PreparedRemote, RemoteBackend};
+pub use wire::{Op, WireError, WorkerStats, MAX_FRAME_BYTES, WIRE_VERSION};
+pub use worker::{Worker, WorkerConfig};

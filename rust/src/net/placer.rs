@@ -1,0 +1,145 @@
+//! Fleet shard placement: spread a shard plan across worker processes
+//! with R-way replication.
+//!
+//! The same LPT greedy that balances non-zeros across shards
+//! ([`crate::shard::plan_shards`]) is applied one level up — shards →
+//! workers, the Sextans/Serpens channel-balancing story lifted across the
+//! process boundary. Heaviest shard first, each copy onto the currently
+//! lightest worker that does not already hold one; a worker's load is the
+//! nnz of everything placed on it. Replication (R ≥ 2) is what lets one
+//! hot matrix survive a worker death: the executor fails over to the next
+//! replica before it has to re-place and re-prepare.
+//!
+//! Placement is deterministic (stable weight sort, index tie-break), so a
+//! fleet of identical prepares lands identically — the property tests pin
+//! that.
+
+/// Where every shard of one prepared matrix lives in the fleet.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FleetPlan {
+    /// `assignments[shard]` = worker indices holding a replica of that
+    /// shard, preference order (first = primary). Each list holds
+    /// `replicas` distinct workers.
+    pub assignments: Vec<Vec<usize>>,
+    /// Effective replication factor (requested R clamped to the fleet
+    /// size).
+    pub replicas: usize,
+}
+
+impl FleetPlan {
+    /// Total shard placements across the fleet (shards × replicas).
+    pub fn placements(&self) -> usize {
+        self.assignments.iter().map(Vec::len).sum()
+    }
+
+    /// Placements beyond the one required copy per shard.
+    pub fn replica_placements(&self) -> usize {
+        self.placements() - self.assignments.len()
+    }
+}
+
+/// Place `weights.len()` shards (weight = shard nnz) onto `workers`
+/// workers with `replicas`-way replication. `replicas` is clamped to
+/// `[1, workers]`; `workers` must be ≥ 1.
+///
+/// Greedy LPT: shards descend by weight, each replica goes to the least
+/// loaded worker not already holding that shard. Ties break on the lower
+/// worker index, so placement is a pure function of its inputs.
+pub fn place(weights: &[u64], workers: usize, replicas: usize) -> FleetPlan {
+    assert!(workers >= 1, "placement needs at least one worker");
+    let replicas = replicas.clamp(1, workers);
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    // Stable sort: equal weights keep ascending shard order.
+    order.sort_by_key(|&i| std::cmp::Reverse(weights[i]));
+    let mut load = vec![0u64; workers];
+    let mut assignments = vec![Vec::new(); weights.len()];
+    for &shard in &order {
+        let mut chosen: Vec<usize> = Vec::with_capacity(replicas);
+        for _ in 0..replicas {
+            let w = (0..workers)
+                .filter(|w| !chosen.contains(w))
+                .min_by_key(|&w| (load[w], w))
+                .expect("replicas clamped to fleet size");
+            load[w] += weights[shard];
+            chosen.push(w);
+        }
+        assignments[shard] = chosen;
+    }
+    FleetPlan { assignments, replicas }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn single_worker_takes_everything() {
+        let plan = place(&[5, 1, 3], 1, 1);
+        assert_eq!(plan.assignments, vec![vec![0], vec![0], vec![0]]);
+        assert_eq!(plan.placements(), 3);
+        assert_eq!(plan.replica_placements(), 0);
+    }
+
+    #[test]
+    fn replicas_land_on_distinct_workers() {
+        let plan = place(&[10, 8, 6, 4], 3, 2);
+        assert_eq!(plan.replicas, 2);
+        for (shard, workers) in plan.assignments.iter().enumerate() {
+            assert_eq!(workers.len(), 2, "shard {shard}");
+            assert_ne!(workers[0], workers[1], "shard {shard} replicated onto itself");
+        }
+        assert_eq!(plan.replica_placements(), 4);
+    }
+
+    #[test]
+    fn replication_clamps_to_fleet_size() {
+        let plan = place(&[7, 7], 2, 5);
+        assert_eq!(plan.replicas, 2);
+        assert!(plan.assignments.iter().all(|a| a.len() == 2));
+    }
+
+    #[test]
+    fn lpt_balances_unreplicated_load() {
+        // Weights 9,7,6,5,4 over 2 workers: LPT lands loads 14 and 17,
+        // within one smallest-item of balance.
+        let plan = place(&[9, 7, 6, 5, 4], 2, 1);
+        let mut load = [0u64; 2];
+        for (shard, a) in plan.assignments.iter().enumerate() {
+            load[a[0]] += [9u64, 7, 6, 5, 4][shard];
+        }
+        let (lo, hi) = (load.iter().min().unwrap(), load.iter().max().unwrap());
+        assert!(hi - lo <= 4, "loads {load:?}");
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_balanced() {
+        prop::check("placer_properties", 0xF1EE7, 32, |rng| {
+            let shards = 1 + rng.index(12);
+            let workers = 1 + rng.index(6);
+            let replicas = 1 + rng.index(3);
+            let weights: Vec<u64> = (0..shards).map(|_| rng.index(1000) as u64).collect();
+            let a = place(&weights, workers, replicas);
+            let b = place(&weights, workers, replicas);
+            if a != b {
+                return Err("placement is not deterministic".into());
+            }
+            let want_r = replicas.min(workers);
+            for (shard, ws) in a.assignments.iter().enumerate() {
+                if ws.len() != want_r {
+                    return Err(format!("shard {shard}: {} replicas, want {want_r}", ws.len()));
+                }
+                let mut sorted = ws.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                if sorted.len() != ws.len() {
+                    return Err(format!("shard {shard}: duplicate worker in {ws:?}"));
+                }
+                if ws.iter().any(|&w| w >= workers) {
+                    return Err(format!("shard {shard}: worker out of range in {ws:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

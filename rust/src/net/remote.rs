@@ -1,0 +1,990 @@
+//! The `remote:<addr>[,addr...]` backend: a [`PreparedSpmm`] handle whose
+//! shards live in `sextans worker` processes across a fleet.
+//!
+//! Prepare shards the image locally ([`ShardedMatrix::from_image`], one
+//! shard per worker up to M rows), spreads the shards over the fleet with
+//! the LPT [`placer`] (R-way replication via `replicas=R` in the spec),
+//! and ships each shard's [`crate::sched::ScheduledMatrix`] over the
+//! [`super::wire`] framing. Execution is the [`crate::shard::ShardExecutor`]
+//! gather → fan-out → scatter dance with RPCs in place of inner handles:
+//! B is broadcast, each shard's C block is seeded from the caller's C (so
+//! the worker computes the full `alpha·A_i·B + beta·C_i` expression), and
+//! the scatter runs **only after every shard succeeded** — a partial
+//! failure surfaces as "shard i of S on host h failed: ..." with C
+//! untouched, never as silently zeroed rows.
+//!
+//! Failure handling per shard, in order: retry the next replica
+//! (placement order), then **re-place** — re-prepare the shard on any
+//! live worker that does not hold it and execute there, updating the
+//! placement map for subsequent calls. Transport errors mark a worker
+//! dead (skipped until the handle is rebuilt); worker-side errors (an
+//! evicted residency, an execution refusal) leave it live so a
+//! re-prepare can heal it. Retry/re-place/placement counts flow out
+//! through [`ExecutionReport::remote`] into the serving metrics, and
+//! every RPC emits a `net.rpc` child span when a telemetry sink is
+//! installed ([`set_telemetry_sink`]) and the executing thread carries a
+//! span context ([`crate::telemetry::trace::push_span_context`]).
+//!
+//! Connections are pooled per worker (stale pooled connections fall back
+//! to one fresh reconnect), and all sockets run with read/write timeouts
+//! so a hung peer becomes an error, not a stuck request.
+
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use super::placer::{self, FleetPlan};
+use super::wire::{self, Op, WireError};
+use crate::backend::{
+    check_shapes, BackendError, Capability, ExecutionReport, PrepareCost, PreparedSpmm,
+    RemoteStats, ScratchPool, SpmmBackend,
+};
+use crate::sched::ScheduledMatrix;
+use crate::shard::{ShardRunStats, ShardedMatrix};
+use crate::telemetry::trace::{self, SpanRecord, TelemetrySink};
+
+/// Default per-socket read/write/connect timeout (`timeout_ms=` overrides).
+const DEFAULT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Install (or clear) the process-wide sink that receives `net.rpc` spans.
+/// The serving CLI points this at the same collector as
+/// [`crate::coordinator::PipelineConfig::sink`] so remote RPCs nest under
+/// each request's `exec` span.
+pub fn set_telemetry_sink(sink: Option<Arc<dyn TelemetrySink>>) {
+    *sink_cell().lock().unwrap() = sink;
+}
+
+fn sink_cell() -> &'static Mutex<Option<Arc<dyn TelemetrySink>>> {
+    static SINK: OnceLock<Mutex<Option<Arc<dyn TelemetrySink>>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(None))
+}
+
+fn current_sink() -> Option<Arc<dyn TelemetrySink>> {
+    sink_cell().lock().unwrap().clone()
+}
+
+/// Fleet-unique image ids (per client process): every shard residency a
+/// handle installs gets a fresh id, so two prepared matrices never
+/// collide on a worker.
+fn next_image_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Why one RPC attempt failed.
+enum RpcError {
+    /// Could not reach the worker or the stream broke — the worker is
+    /// marked dead.
+    Transport(String),
+    /// The worker replied with an error — it is alive (e.g. the
+    /// residency was evicted), so it stays eligible for re-prepare.
+    Remote(String),
+}
+
+impl RpcError {
+    fn message(&self) -> &str {
+        match self {
+            RpcError::Transport(m) | RpcError::Remote(m) => m,
+        }
+    }
+}
+
+/// One blocking request/reply exchange. Outer error = transport, inner =
+/// worker-side error string.
+fn rpc_on(
+    stream: &mut TcpStream,
+    op: Op,
+    payload: &[u8],
+) -> Result<Result<Vec<u8>, String>, WireError> {
+    wire::write_frame(stream, op, payload)?;
+    let (reply_op, reply) = wire::read_frame(stream)?;
+    match reply_op {
+        Op::Ok => Ok(Ok(reply)),
+        Op::Err => Ok(Err(String::from_utf8_lossy(&reply).into_owned())),
+        other => Err(WireError::Malformed(format!("unexpected reply opcode {other:?}"))),
+    }
+}
+
+/// One worker in the fleet: its address, a pool of warm connections, and
+/// a death mark set on transport failure.
+struct WorkerLink {
+    addr: String,
+    pool: Mutex<Vec<TcpStream>>,
+    dead: AtomicBool,
+    timeout: Duration,
+}
+
+impl WorkerLink {
+    fn new(addr: String, timeout: Duration) -> WorkerLink {
+        WorkerLink {
+            addr,
+            pool: Mutex::new(Vec::new()),
+            dead: AtomicBool::new(false),
+            timeout,
+        }
+    }
+
+    fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Relaxed)
+    }
+
+    fn connect(&self) -> Result<TcpStream, String> {
+        let sock_addr = self
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| format!("cannot resolve {}: {e}", self.addr))?
+            .next()
+            .ok_or_else(|| format!("{} resolves to no address", self.addr))?;
+        let stream = TcpStream::connect_timeout(&sock_addr, self.timeout)
+            .map_err(|e| format!("cannot connect to {}: {e}", self.addr))?;
+        let _ = stream.set_read_timeout(Some(self.timeout));
+        let _ = stream.set_write_timeout(Some(self.timeout));
+        let _ = stream.set_nodelay(true);
+        Ok(stream)
+    }
+
+    /// One RPC over a pooled connection; a stale pooled connection gets
+    /// exactly one fresh reconnect before the worker is declared dead.
+    fn call(&self, op: Op, payload: &[u8]) -> Result<Vec<u8>, RpcError> {
+        if let Some(mut stream) = self.pool.lock().unwrap().pop() {
+            match rpc_on(&mut stream, op, payload) {
+                Ok(Ok(bytes)) => {
+                    self.pool.lock().unwrap().push(stream);
+                    return Ok(bytes);
+                }
+                Ok(Err(msg)) => {
+                    self.pool.lock().unwrap().push(stream);
+                    return Err(RpcError::Remote(msg));
+                }
+                // Stale pooled connection (worker restarted, idle close):
+                // drop it and fall through to a fresh connect.
+                Err(_) => {}
+            }
+        }
+        let mut stream = self.connect().map_err(|e| {
+            self.dead.store(true, Ordering::Relaxed);
+            RpcError::Transport(e)
+        })?;
+        match rpc_on(&mut stream, op, payload) {
+            Ok(Ok(bytes)) => {
+                self.pool.lock().unwrap().push(stream);
+                Ok(bytes)
+            }
+            Ok(Err(msg)) => {
+                self.pool.lock().unwrap().push(stream);
+                Err(RpcError::Remote(msg))
+            }
+            Err(e) => {
+                self.dead.store(true, Ordering::Relaxed);
+                Err(RpcError::Transport(format!("rpc to {} failed: {e}", self.addr)))
+            }
+        }
+    }
+
+    /// [`WorkerLink::call`] wrapped in a `net.rpc` span when the calling
+    /// thread carries a span context and a sink is installed.
+    fn call_traced(
+        &self,
+        op: Op,
+        payload: &[u8],
+        op_name: &'static str,
+        shard: usize,
+        ctx: Option<(u64, u64)>,
+    ) -> Result<Vec<u8>, RpcError> {
+        let start = Instant::now();
+        let result = self.call(op, payload);
+        if let (Some((trace_id, parent)), Some(sink)) = (ctx, current_sink()) {
+            sink.emit(
+                SpanRecord::from_instants(
+                    trace_id,
+                    Some(parent),
+                    "net.rpc",
+                    start,
+                    Instant::now(),
+                )
+                .tag("op", op_name)
+                .tag("addr", self.addr.clone())
+                .tag("shard", shard.to_string())
+                .tag("outcome", if result.is_ok() { "ok" } else { "error" }),
+            );
+        }
+        result
+    }
+}
+
+/// Factory for distributed execution over a `sextans worker` fleet.
+/// Spec: `remote:<addr>[,addr...][,replicas=R][,timeout_ms=T]`.
+pub struct RemoteBackend {
+    addrs: Vec<String>,
+    replicas: usize,
+    timeout: Duration,
+}
+
+impl RemoteBackend {
+    /// Parse the spec argument (everything after `remote:`).
+    pub fn from_spec(arg: Option<&str>) -> Result<RemoteBackend, BackendError> {
+        let usage = "remote:<addr>[,addr...][,replicas=R][,timeout_ms=T] needs at least \
+                     one <host:port> worker address";
+        let Some(arg) = arg.filter(|a| !a.is_empty()) else {
+            return Err(BackendError::InvalidSpec(usage.to_string()));
+        };
+        let mut addrs = Vec::new();
+        let mut replicas = 1usize;
+        let mut timeout = DEFAULT_TIMEOUT;
+        for part in arg.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(BackendError::InvalidSpec(format!(
+                    "empty element in remote spec {arg:?}"
+                )));
+            }
+            if let Some((key, value)) = part.split_once('=') {
+                match key {
+                    "replicas" => {
+                        replicas = value.parse::<usize>().ok().filter(|&r| r >= 1).ok_or_else(
+                            || {
+                                BackendError::InvalidSpec(format!(
+                                    "replicas= needs an integer >= 1, got {value:?}"
+                                ))
+                            },
+                        )?;
+                    }
+                    "timeout_ms" => {
+                        let ms = value.parse::<u64>().map_err(|_| {
+                            BackendError::InvalidSpec(format!(
+                                "timeout_ms= needs an integer, got {value:?}"
+                            ))
+                        })?;
+                        timeout = Duration::from_millis(ms.max(1));
+                    }
+                    other => {
+                        return Err(BackendError::InvalidSpec(format!(
+                            "unknown remote option {other:?} (expected replicas= or \
+                             timeout_ms=)"
+                        )));
+                    }
+                }
+            } else {
+                let port_ok = part
+                    .rsplit_once(':')
+                    .is_some_and(|(host, port)| !host.is_empty() && port.parse::<u16>().is_ok());
+                if !port_ok {
+                    return Err(BackendError::InvalidSpec(format!(
+                        "worker address {part:?} is not <host:port>"
+                    )));
+                }
+                addrs.push(part.to_string());
+            }
+        }
+        if addrs.is_empty() {
+            return Err(BackendError::InvalidSpec(usage.to_string()));
+        }
+        Ok(RemoteBackend { addrs, replicas, timeout })
+    }
+
+    /// The configured worker addresses.
+    pub fn addrs(&self) -> &[String] {
+        &self.addrs
+    }
+
+    /// Availability probe: at least one worker must answer a Ping.
+    /// [`crate::backend::check_available`] routes `remote:` specs here, so
+    /// `sextans backends` and server startup report fleet reachability
+    /// instead of assuming it.
+    pub fn probe(&self) -> Result<(), BackendError> {
+        let mut last_err = String::from("fleet is empty");
+        for addr in &self.addrs {
+            let link = WorkerLink::new(addr.clone(), self.timeout);
+            match link.call(Op::Ping, &[]) {
+                Ok(_) => return Ok(()),
+                Err(e) => last_err = e.message().to_string(),
+            }
+        }
+        Err(BackendError::Unavailable(format!(
+            "no reachable worker in fleet [{}]: {last_err}",
+            self.addrs.join(", ")
+        )))
+    }
+
+    fn build(&self, image: Arc<ScheduledMatrix>) -> Result<PreparedRemote, BackendError> {
+        let t0 = Instant::now();
+        let fleet_size = self.addrs.len();
+        // One shard per worker, but never more shards than rows.
+        let s = fleet_size.min(image.m.max(1));
+        let sharded = ShardedMatrix::from_image(&image, s);
+        let imbalance = sharded.imbalance();
+        let resident_bytes = sharded.resident_bytes();
+        let weights: Vec<u64> = sharded.shards.iter().map(|sh| sh.image.nnz as u64).collect();
+        let fleet: FleetPlan = placer::place(&weights, fleet_size, self.replicas);
+        let workers: Vec<Arc<WorkerLink>> = self
+            .addrs
+            .iter()
+            .map(|a| Arc::new(WorkerLink::new(a.clone(), self.timeout)))
+            .collect();
+        let shards: Vec<RemoteShard> = sharded
+            .shards
+            .into_iter()
+            .map(|sh| RemoteShard {
+                global_rows: sh.global_rows,
+                image: sh.image,
+                image_id: next_image_id(),
+            })
+            .collect();
+
+        // Install every placement; a worker that fails its prepare is
+        // routed around (the shard lands on any live worker instead), and
+        // prepare only fails outright when a shard has nowhere to live.
+        let mut placements: Vec<Vec<usize>> = vec![Vec::new(); shards.len()];
+        for (i, shard) in shards.iter().enumerate() {
+            let payload = wire::encode_prepare_req(shard.image_id, &shard.image);
+            let mut last_err = String::from("no worker assigned");
+            for &w in &fleet.assignments[i] {
+                if workers[w].is_dead() {
+                    continue;
+                }
+                match workers[w].call(Op::Prepare, &payload) {
+                    Ok(_) => placements[i].push(w),
+                    Err(e) => last_err = e.message().to_string(),
+                }
+            }
+            if placements[i].is_empty() {
+                for (w, link) in workers.iter().enumerate() {
+                    if fleet.assignments[i].contains(&w) || link.is_dead() {
+                        continue;
+                    }
+                    match link.call(Op::Prepare, &payload) {
+                        Ok(_) => {
+                            placements[i].push(w);
+                            break;
+                        }
+                        Err(e) => last_err = e.message().to_string(),
+                    }
+                }
+            }
+            if placements[i].is_empty() {
+                return Err(BackendError::Unavailable(format!(
+                    "shard {i} of {} has no reachable worker in fleet [{}]: {last_err}",
+                    shards.len(),
+                    self.addrs.join(", ")
+                )));
+            }
+        }
+
+        Ok(PreparedRemote {
+            image,
+            shards,
+            workers,
+            placements: Mutex::new(placements),
+            replicas: fleet.replicas,
+            imbalance,
+            scratch: ScratchPool::new(),
+            last_stats: Mutex::new(None),
+            cost: PrepareCost { wall: t0.elapsed(), resident_bytes },
+            retries_total: AtomicU64::new(0),
+            replaced_total: AtomicU64::new(0),
+        })
+    }
+}
+
+impl SpmmBackend for RemoteBackend {
+    fn name(&self) -> &'static str {
+        "remote"
+    }
+
+    fn capability(&self) -> Capability {
+        Capability {
+            threads: self.addrs.len(),
+            simd_lanes: 1,
+            requires_artifacts: false,
+            deterministic: true,
+        }
+    }
+
+    fn prepare(&self, image: Arc<ScheduledMatrix>) -> Result<Box<dyn PreparedSpmm>, BackendError> {
+        Ok(Box::new(self.build(image)?))
+    }
+
+    fn prepare_send(
+        &self,
+        image: Arc<ScheduledMatrix>,
+    ) -> Result<Box<dyn PreparedSpmm + Send + Sync>, BackendError> {
+        Ok(Box::new(self.build(image)?))
+    }
+}
+
+/// One shard of a remote prepared matrix: the rows it owns, the image the
+/// client keeps for re-placement, and its fleet-unique residency id.
+struct RemoteShard {
+    global_rows: Vec<u32>,
+    image: Arc<ScheduledMatrix>,
+    image_id: u64,
+}
+
+/// What one shard's fan-out thread produced.
+struct ShardOutcome {
+    latency: Duration,
+    retries: usize,
+    /// Worker index the shard was re-placed onto, when failover ran out
+    /// of standing replicas.
+    replaced: Option<usize>,
+}
+
+/// The distributed [`PreparedSpmm`] handle: shard residencies on remote
+/// workers, execute via pooled RPCs with replica failover and re-place.
+pub struct PreparedRemote {
+    image: Arc<ScheduledMatrix>,
+    shards: Vec<RemoteShard>,
+    workers: Vec<Arc<WorkerLink>>,
+    /// `placements[shard]` = worker indices holding it, preference order.
+    /// Mutated by re-placement.
+    placements: Mutex<Vec<Vec<usize>>>,
+    replicas: usize,
+    imbalance: f64,
+    /// Per-call gather blocks (one `rows_i × n` C block per shard).
+    scratch: ScratchPool<Vec<Vec<f32>>>,
+    last_stats: Mutex<Option<ShardRunStats>>,
+    cost: PrepareCost,
+    retries_total: AtomicU64,
+    replaced_total: AtomicU64,
+}
+
+impl PreparedRemote {
+    /// Where every shard currently lives: (residency id, worker
+    /// addresses in preference order). Exposed for tests and diagnostics.
+    pub fn shard_locations(&self) -> Vec<(u64, Vec<String>)> {
+        let placements = self.placements.lock().unwrap();
+        self.shards
+            .iter()
+            .zip(placements.iter())
+            .map(|(shard, ws)| {
+                (shard.image_id, ws.iter().map(|&w| self.workers[w].addr.clone()).collect())
+            })
+            .collect()
+    }
+
+    /// Current fleet view as reported in [`ExecutionReport::remote`].
+    fn remote_stats(&self, retries: usize, replaced: usize) -> RemoteStats {
+        let placements: usize = self.placements.lock().unwrap().iter().map(Vec::len).sum();
+        RemoteStats {
+            workers: self.workers.len(),
+            live_workers: self.workers.iter().filter(|w| !w.is_dead()).count(),
+            placements,
+            replicas: self.replicas,
+            retries,
+            replaced,
+        }
+    }
+
+    /// Run one shard: standing replicas in placement order, then
+    /// re-place onto any live worker (preferring workers that do not
+    /// already hold the shard, then re-preparing on live holders — which
+    /// heals an evicted residency).
+    #[allow(clippy::too_many_arguments)]
+    fn run_shard(
+        &self,
+        i: usize,
+        block: &mut Vec<f32>,
+        b: &[f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+        order: &[usize],
+        ctx: Option<(u64, u64)>,
+    ) -> Result<ShardOutcome, String> {
+        let t0 = Instant::now();
+        let shard = &self.shards[i];
+        let total = self.shards.len();
+        let payload = wire::encode_execute_req(shard.image_id, n, alpha, beta, b, block);
+        let mut retries = 0usize;
+        let mut last_err = String::from("no replica placed");
+        let mut last_addr = self.workers.first().map(|w| w.addr.clone()).unwrap_or_default();
+
+        // One execute attempt on worker `w`: Ok(rows) on success, Err with
+        // the failure described otherwise. Captures only the request
+        // payload and expected reply length, so `block` stays free for
+        // the caller to overwrite on success.
+        let expect_len = block.len();
+        let attempt = |w: usize| -> Result<Vec<f32>, String> {
+            let link = &self.workers[w];
+            let bytes = link
+                .call_traced(Op::Execute, &payload, "execute", i, ctx)
+                .map_err(|e| e.message().to_string())?;
+            match wire::decode_execute_ok(&bytes) {
+                Ok(rows) if rows.len() == expect_len => Ok(rows),
+                Ok(rows) => {
+                    Err(format!("reply has {} elements, expected {expect_len}", rows.len()))
+                }
+                Err(e) => Err(format!("bad execute reply: {e}")),
+            }
+        };
+
+        for &w in order {
+            if self.workers[w].is_dead() {
+                continue;
+            }
+            match attempt(w) {
+                Ok(rows) => {
+                    *block = rows;
+                    return Ok(ShardOutcome { latency: t0.elapsed(), retries, replaced: None });
+                }
+                Err(e) => {
+                    retries += 1;
+                    last_err = e;
+                    last_addr = self.workers[w].addr.clone();
+                }
+            }
+        }
+
+        // Re-place: fresh workers first, then live current holders (a
+        // re-prepare on a holder heals an evicted residency).
+        let mut candidates: Vec<usize> = (0..self.workers.len())
+            .filter(|w| !order.contains(w) && !self.workers[*w].is_dead())
+            .collect();
+        candidates.extend(order.iter().copied().filter(|&w| !self.workers[w].is_dead()));
+        let prepare_payload = wire::encode_prepare_req(shard.image_id, &shard.image);
+        for w in candidates {
+            if let Err(e) =
+                self.workers[w].call_traced(Op::Prepare, &prepare_payload, "prepare", i, ctx)
+            {
+                last_err = e.message().to_string();
+                last_addr = self.workers[w].addr.clone();
+                continue;
+            }
+            match attempt(w) {
+                Ok(rows) => {
+                    *block = rows;
+                    return Ok(ShardOutcome {
+                        latency: t0.elapsed(),
+                        retries,
+                        replaced: Some(w),
+                    });
+                }
+                Err(e) => {
+                    retries += 1;
+                    last_err = e;
+                    last_addr = self.workers[w].addr.clone();
+                }
+            }
+        }
+        Err(format!("shard {i} of {total} on host {last_addr} failed: {last_err}"))
+    }
+
+    /// The full gather → remote fan-out → scatter execution.
+    fn execute_remote(
+        &self,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<ExecutionReport, BackendError> {
+        check_shapes(&self.image, b, c, n)?;
+        let ctx = trace::current_span_context();
+        let s = self.shards.len();
+
+        let mut blocks = self.scratch.checkout(Vec::new);
+        blocks.resize_with(s, Vec::new);
+        for (i, shard) in self.shards.iter().enumerate() {
+            let block = &mut blocks[i];
+            block.resize(shard.global_rows.len() * n, 0.0);
+            for (li, &gr) in shard.global_rows.iter().enumerate() {
+                block[li * n..(li + 1) * n]
+                    .copy_from_slice(&c[gr as usize * n..(gr as usize + 1) * n]);
+            }
+        }
+
+        let order: Vec<Vec<usize>> = self.placements.lock().unwrap().clone();
+        let outcomes: Vec<Result<ShardOutcome, String>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = blocks
+                .iter_mut()
+                .enumerate()
+                .map(|(i, block)| {
+                    let order_i = &order[i];
+                    scope.spawn(move || {
+                        self.run_shard(i, block, b, n, alpha, beta, order_i, ctx)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("remote shard thread panicked"))
+                .collect()
+        });
+
+        // Fail before any scatter: a partial failure leaves C untouched.
+        let mut run = Vec::with_capacity(s);
+        for outcome in outcomes {
+            match outcome {
+                Ok(o) => run.push(o),
+                Err(msg) => return Err(BackendError::Execution(msg)),
+            }
+        }
+
+        // All shards succeeded: scatter the disjoint row blocks back,
+        // shard-ascending (deterministic, rows are disjoint by plan).
+        for (shard, block) in self.shards.iter().zip(blocks.iter()) {
+            for (li, &gr) in shard.global_rows.iter().enumerate() {
+                c[gr as usize * n..(gr as usize + 1) * n]
+                    .copy_from_slice(&block[li * n..(li + 1) * n]);
+            }
+        }
+
+        // Record re-placements so subsequent calls go straight to the
+        // new holders (dead holders are dropped from the list).
+        let retries: usize = run.iter().map(|o| o.retries).sum();
+        let replaced: usize = run.iter().filter(|o| o.replaced.is_some()).count();
+        if replaced > 0 {
+            let mut placements = self.placements.lock().unwrap();
+            for (i, outcome) in run.iter().enumerate() {
+                if let Some(w) = outcome.replaced {
+                    placements[i].retain(|&old| old != w && !self.workers[old].is_dead());
+                    placements[i].insert(0, w);
+                }
+            }
+        }
+        self.retries_total.fetch_add(retries as u64, Ordering::Relaxed);
+        self.replaced_total.fetch_add(replaced as u64, Ordering::Relaxed);
+
+        let stats = ShardRunStats {
+            shards: s,
+            shard_nnz: self.shards.iter().map(|sh| sh.image.nnz).collect(),
+            shard_latency: run.iter().map(|o| o.latency).collect(),
+            imbalance: self.imbalance,
+        };
+        *self.last_stats.lock().unwrap() = Some(stats.clone());
+        Ok(ExecutionReport {
+            skipped: 0,
+            shard_stats: Some(stats),
+            remote: Some(self.remote_stats(retries, replaced)),
+        })
+    }
+}
+
+impl PreparedSpmm for PreparedRemote {
+    fn backend_name(&self) -> &'static str {
+        "remote"
+    }
+
+    fn prepare_cost(&self) -> PrepareCost {
+        self.cost
+    }
+
+    fn execute(
+        &self,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<(), BackendError> {
+        self.execute_remote(b, c, n, alpha, beta).map(|_| ())
+    }
+
+    fn execute_with_report(
+        &self,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<ExecutionReport, BackendError> {
+        self.execute_remote(b, c, n, alpha, beta)
+    }
+
+    fn execute_routed_with_report(
+        &self,
+        b: &[f32],
+        c: &mut [f32],
+        n: usize,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<ExecutionReport, BackendError> {
+        // No shard skipping over the wire yet: route = plain execute, but
+        // keep the remote counters attached to the report.
+        self.execute_remote(b, c, n, alpha, beta)
+    }
+
+    fn shard_stats(&self) -> Option<ShardRunStats> {
+        self.last_stats.lock().unwrap().clone()
+    }
+
+    fn resident_shards(&self) -> Option<usize> {
+        Some(self.shards.len())
+    }
+
+    fn resident_bytes_now(&self) -> u64 {
+        let pooled = self.scratch.measure(|blocks| {
+            blocks.iter().map(|b| b.len() as u64 * 4).sum::<u64>()
+        });
+        self.cost.resident_bytes + pooled
+    }
+
+    fn trim_resident(&self, max_idle: Duration) -> u64 {
+        self.scratch
+            .trim_idle(max_idle, |blocks| blocks.iter().map(|b| b.len() as u64 * 4).sum())
+    }
+}
+
+impl Drop for PreparedRemote {
+    fn drop(&mut self) {
+        // Best-effort fleet hygiene: release the shard residencies so
+        // workers do not accumulate images across handle rebuilds.
+        let placements = self.placements.lock().unwrap();
+        for (shard, ws) in self.shards.iter().zip(placements.iter()) {
+            let mut payload = wire::ByteWriter::new();
+            payload.put_u64(shard.image_id);
+            let payload = payload.into_bytes();
+            for &w in ws {
+                if !self.workers[w].is_dead() {
+                    let _ = self.workers[w].call(Op::Evict, &payload);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::worker::{Worker, WorkerConfig};
+    use crate::prop::assert_allclose;
+    use crate::sched::preprocess;
+    use crate::sparse::{gen, rng::Rng};
+    use crate::telemetry::trace::TraceCollector;
+
+    fn spawn_worker(spec: &str) -> String {
+        let config = WorkerConfig {
+            backend_spec: spec.to_string(),
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+        };
+        let worker = Worker::bind("127.0.0.1:0", &config).unwrap();
+        let addr = worker.local_addr().unwrap().to_string();
+        std::thread::spawn(move || worker.run(&config).unwrap());
+        addr
+    }
+
+    fn fleet_spec(addrs: &[String], extra: &str) -> String {
+        if extra.is_empty() {
+            addrs.join(",")
+        } else {
+            format!("{},{extra}", addrs.join(","))
+        }
+    }
+
+    #[test]
+    fn spec_parsing_accepts_fleets_and_options() {
+        let be = RemoteBackend::from_spec(Some("127.0.0.1:7070,127.0.0.1:7071,replicas=2"))
+            .unwrap();
+        assert_eq!(be.addrs().len(), 2);
+        assert_eq!(be.replicas, 2);
+        let be =
+            RemoteBackend::from_spec(Some("h1:1,timeout_ms=250")).unwrap();
+        assert_eq!(be.timeout, Duration::from_millis(250));
+        assert!(RemoteBackend::from_spec(None).is_err());
+        assert!(RemoteBackend::from_spec(Some("")).is_err());
+        assert!(RemoteBackend::from_spec(Some("replicas=2")).is_err());
+        assert!(RemoteBackend::from_spec(Some("no-port")).is_err());
+        assert!(RemoteBackend::from_spec(Some("h:99999")).is_err());
+        assert!(RemoteBackend::from_spec(Some("h:1,bogus=3")).is_err());
+    }
+
+    #[test]
+    fn remote_over_two_workers_matches_local_reference() {
+        let addrs = vec![spawn_worker("functional"), spawn_worker("functional")];
+        let be = RemoteBackend::from_spec(Some(&fleet_spec(&addrs, ""))).unwrap();
+        be.probe().unwrap();
+
+        let mut rng = Rng::new(40);
+        let coo = gen::random_uniform(50, 36, 0.15, &mut rng);
+        let image = Arc::new(preprocess(&coo, 4, 12, 4));
+        let handle = be.prepare_send(Arc::clone(&image)).unwrap();
+        assert_eq!(handle.resident_shards(), Some(2));
+
+        let n = 3;
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let mut got = c0.clone();
+        let report = handle.execute_with_report(&b, &mut got, n, 1.5, -0.5).unwrap();
+        let mut want = c0.clone();
+        coo.spmm_reference(&b, &mut want, n, 1.5, -0.5);
+        assert_allclose(&got, &want, 2e-4, 2e-4).unwrap();
+
+        let remote = report.remote.expect("remote stats attached");
+        assert_eq!(remote.workers, 2);
+        assert_eq!(remote.live_workers, 2);
+        assert_eq!(remote.placements, 2, "2 shards x 1 replica");
+        assert_eq!(remote.retries, 0);
+        assert_eq!(remote.replaced, 0);
+        let stats = report.shard_stats.expect("shard stats attached");
+        assert_eq!(stats.shards, 2);
+    }
+
+    #[test]
+    fn replicated_placement_survives_an_evicted_replica() {
+        let addrs = vec![spawn_worker("functional"), spawn_worker("functional")];
+        let be =
+            RemoteBackend::from_spec(Some(&fleet_spec(&addrs, "replicas=2"))).unwrap();
+
+        let mut rng = Rng::new(41);
+        let coo = gen::random_uniform(30, 24, 0.2, &mut rng);
+        let image = Arc::new(preprocess(&coo, 2, 8, 3));
+        let boxed = be.prepare_send(Arc::clone(&image)).unwrap();
+        // Concrete type needed for shard_locations; re-prepare directly.
+        let handle = be.build(Arc::clone(&image)).unwrap();
+        drop(boxed);
+        let locations = handle.shard_locations();
+        assert_eq!(locations.len(), 2);
+        for (_, ws) in &locations {
+            assert_eq!(ws.len(), 2, "every shard is double-placed");
+        }
+
+        // Evict shard 0's residency from its primary worker, out of band.
+        let (id, ws) = &locations[0];
+        let link = WorkerLink::new(ws[0].clone(), Duration::from_secs(5));
+        let mut payload = wire::ByteWriter::new();
+        payload.put_u64(*id);
+        assert_eq!(link.call(Op::Evict, &payload.into_bytes()).unwrap(), vec![1]);
+
+        let n = 2;
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let mut got = c0.clone();
+        let report = handle.execute_with_report(&b, &mut got, n, 1.0, 0.5).unwrap();
+        let mut want = c0.clone();
+        coo.spmm_reference(&b, &mut want, n, 1.0, 0.5);
+        assert_allclose(&got, &want, 2e-4, 2e-4).unwrap();
+
+        let remote = report.remote.unwrap();
+        assert!(remote.retries >= 1, "the evicted replica costs a retry: {remote:?}");
+        assert_eq!(remote.live_workers, 2, "an evicted residency is not a dead worker");
+    }
+
+    #[test]
+    fn dead_worker_triggers_replace_and_correct_answer() {
+        // Worker 1 exists at prepare time, then "dies" before execution:
+        // simulate by binding a listener, preparing, then dropping it.
+        let live = spawn_worker("functional");
+        let doomed_config = WorkerConfig {
+            backend_spec: "functional".to_string(),
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+        };
+        let doomed = Worker::bind("127.0.0.1:0", &doomed_config).unwrap();
+        let doomed_addr = doomed.local_addr().unwrap().to_string();
+        let doomed_thread = {
+            let cfg = doomed_config.clone();
+            std::thread::spawn(move || doomed.run(&cfg).unwrap())
+        };
+
+        let spec = format!("{live},{doomed_addr},timeout_ms=2000");
+        let be = RemoteBackend::from_spec(Some(&spec)).unwrap();
+        let mut rng = Rng::new(42);
+        let coo = gen::random_uniform(40, 30, 0.2, &mut rng);
+        let image = Arc::new(preprocess(&coo, 2, 8, 3));
+        let handle = be.build(Arc::clone(&image)).unwrap();
+
+        // Kill the doomed worker: shut its listener down so fresh
+        // connections fail. Its pooled prepare-time connection is also
+        // torn down because shutdown stops the accept loop and the
+        // connection thread exits with the RPC below.
+        {
+            let link = WorkerLink::new(doomed_addr.clone(), Duration::from_secs(2));
+            link.call(Op::Shutdown, &[]).unwrap();
+        }
+        doomed_thread.join().unwrap();
+
+        let n = 2;
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let mut got = c0.clone();
+        let report = handle.execute_with_report(&b, &mut got, n, 2.0, -1.0).unwrap();
+        let mut want = c0.clone();
+        coo.spmm_reference(&b, &mut want, n, 2.0, -1.0);
+        assert_allclose(&got, &want, 2e-4, 2e-4).unwrap();
+
+        let remote = report.remote.unwrap();
+        assert!(remote.retries >= 1, "{remote:?}");
+        assert!(remote.replaced >= 1, "the dead worker's shard must re-place: {remote:?}");
+        assert_eq!(remote.live_workers, 1, "{remote:?}");
+
+        // The next call uses the updated placement: no further retries.
+        let mut again = c0.clone();
+        let report = handle.execute_with_report(&b, &mut again, n, 2.0, -1.0).unwrap();
+        assert_eq!(again, got, "post-re-place results stay deterministic");
+        let remote = report.remote.unwrap();
+        assert_eq!(remote.retries, 0, "{remote:?}");
+        assert_eq!(remote.replaced, 0, "{remote:?}");
+    }
+
+    #[test]
+    fn partial_failure_leaves_c_untouched() {
+        // A fleet whose only worker is unreachable: prepare must fail
+        // (nothing to place on), so build against a live worker, kill it,
+        // then execute — C must be byte-identical to its seed.
+        let cfg = WorkerConfig {
+            backend_spec: "functional".to_string(),
+            read_timeout: Duration::from_secs(2),
+            write_timeout: Duration::from_secs(2),
+        };
+        let worker = Worker::bind("127.0.0.1:0", &cfg).unwrap();
+        let addr = worker.local_addr().unwrap().to_string();
+        let join = {
+            let cfg = cfg.clone();
+            std::thread::spawn(move || worker.run(&cfg).unwrap())
+        };
+        let spec = format!("{addr},timeout_ms=1000");
+        let be = RemoteBackend::from_spec(Some(&spec)).unwrap();
+        let mut rng = Rng::new(43);
+        let coo = gen::random_uniform(20, 16, 0.25, &mut rng);
+        let image = Arc::new(preprocess(&coo, 2, 8, 3));
+        let handle = be.build(Arc::clone(&image)).unwrap();
+        {
+            let link = WorkerLink::new(addr, Duration::from_secs(2));
+            link.call(Op::Shutdown, &[]).unwrap();
+        }
+        join.join().unwrap();
+
+        let n = 2;
+        let b = vec![1.0f32; coo.k * n];
+        let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let mut c = c0.clone();
+        let err = handle.execute(&b, &mut c, n, 1.0, 0.0).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("shard 0 of 1 on host"), "{msg}");
+        assert_eq!(c, c0, "failed execution must leave C untouched");
+    }
+
+    #[test]
+    fn rpc_spans_nest_under_the_pushed_context() {
+        let addrs = vec![spawn_worker("functional")];
+        let be = RemoteBackend::from_spec(Some(&fleet_spec(&addrs, ""))).unwrap();
+        let mut rng = Rng::new(44);
+        let coo = gen::random_uniform(16, 12, 0.3, &mut rng);
+        let image = Arc::new(preprocess(&coo, 2, 8, 3));
+        let handle = be.build(Arc::clone(&image)).unwrap();
+
+        let collector = Arc::new(TraceCollector::new());
+        set_telemetry_sink(Some(Arc::clone(&collector) as Arc<dyn TelemetrySink>));
+        let n = 2;
+        let b = vec![0.5f32; coo.k * n];
+        let mut c = vec![0.0f32; coo.m * n];
+        {
+            let _guard = trace::push_span_context(77, 500);
+            handle.execute(&b, &mut c, n, 1.0, 0.0).unwrap();
+        }
+        set_telemetry_sink(None);
+
+        let spans: Vec<_> = collector
+            .spans()
+            .into_iter()
+            .filter(|s| s.name == "net.rpc" && s.trace_id == 77)
+            .collect();
+        assert!(!spans.is_empty(), "execute must emit net.rpc spans");
+        for s in &spans {
+            assert_eq!(s.parent_id, Some(500), "net.rpc parents under the pushed span");
+            assert!(s.tags.iter().any(|(k, _)| *k == "addr"));
+        }
+    }
+}

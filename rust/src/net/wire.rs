@@ -1,0 +1,894 @@
+//! Versioned, length-prefixed binary framing for the distributed worker
+//! protocol — the serialization surface that lets a prepared matrix cross
+//! a process (and host) boundary.
+//!
+//! Hand-rolled like [`crate::telemetry::json`]: no external dependencies,
+//! explicit little-endian layout, and every decoder validates before it
+//! trusts. One frame is
+//!
+//! ```text
+//! +------+---------+--------+----------+---------...---------+
+//! | SXTN | version | opcode | len (u32)| payload (len bytes) |
+//! | 4 B  |  u16 LE | u16 LE |   LE     |                     |
+//! +------+---------+--------+----------+---------...---------+
+//! ```
+//!
+//! and the payload codecs cover the three prepared-work artifacts named by
+//! the HFlex contract: the [`ScheduledMatrix`] memory image
+//! ([`encode_image`]/[`decode_image`]), the shard plan
+//! ([`encode_plan`]/[`decode_plan`]), and the [`PrepareCost`] amortization
+//! report ([`encode_cost`]/[`decode_cost`]). Truncated frames, foreign
+//! magic, version skew, and malformed payloads all surface as typed
+//! [`WireError`]s — a worker must never panic on hostile bytes.
+
+use std::io::{Read, Write};
+use std::time::Duration;
+
+use crate::backend::PrepareCost;
+use crate::sched::pointer::PointerList;
+use crate::sched::preprocess::{PeStream, WindowStats};
+use crate::sched::ScheduledMatrix;
+use crate::shard::ShardPlan;
+
+/// Frame magic: the first four bytes of every Sextans frame.
+pub const MAGIC: [u8; 4] = *b"SXTN";
+
+/// Wire protocol version. Bumped on any incompatible layout change; a
+/// worker refuses frames from a different version rather than guessing.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Upper bound on one frame's payload (1 GiB). Large enough for any
+/// realistic B/C operand pair, small enough that a corrupt length field
+/// cannot drive an allocation to the moon.
+pub const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+/// Fixed frame header size: magic + version + opcode + payload length.
+pub const HEADER_BYTES: usize = 12;
+
+/// RPC opcodes carried in the frame header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u16)]
+pub enum Op {
+    /// Liveness / availability probe. Empty payload both ways.
+    Ping = 1,
+    /// Install a prepared residency: `u64 image id` + encoded image.
+    /// Reply: the worker-side [`PrepareCost`].
+    Prepare = 2,
+    /// Execute against a resident image: id, n, alpha, beta, B, C.
+    /// Reply: the updated C block.
+    Execute = 3,
+    /// Worker residency statistics. Empty request payload.
+    Stats = 4,
+    /// Drop one residency: `u64 image id`. Reply: 1 if it was resident.
+    Evict = 5,
+    /// Ask the worker process to exit after replying (used by tests/CI
+    /// for a clean shutdown instead of a kill).
+    Shutdown = 6,
+    /// Success reply; payload layout depends on the request opcode.
+    Ok = 100,
+    /// Failure reply; payload is a UTF-8 error message.
+    Err = 101,
+}
+
+impl Op {
+    /// Decode an opcode, rejecting unknown values.
+    pub fn from_u16(v: u16) -> Result<Op, WireError> {
+        Ok(match v {
+            1 => Op::Ping,
+            2 => Op::Prepare,
+            3 => Op::Execute,
+            4 => Op::Stats,
+            5 => Op::Evict,
+            6 => Op::Shutdown,
+            100 => Op::Ok,
+            101 => Op::Err,
+            other => return Err(WireError::BadOpcode(other)),
+        })
+    }
+}
+
+/// Why a frame or payload was refused.
+#[derive(Debug)]
+pub enum WireError {
+    /// Underlying socket/file error.
+    Io(std::io::Error),
+    /// The stream did not start with [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Peer speaks a different protocol version.
+    Version {
+        /// Version found in the frame header.
+        got: u16,
+        /// Version this build speaks ([`WIRE_VERSION`]).
+        want: u16,
+    },
+    /// Unknown opcode value.
+    BadOpcode(u16),
+    /// The stream ended mid-frame, or a payload declared more content
+    /// than it carries.
+    Truncated {
+        /// Bytes the decoder needed next.
+        needed: usize,
+        /// Bytes actually remaining.
+        have: usize,
+    },
+    /// Declared payload length exceeds [`MAX_FRAME_BYTES`].
+    TooLarge(u64),
+    /// Payload parsed but violates an invariant (bad Q list, shard-count
+    /// mismatch, trailing garbage, ...).
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire i/o error: {e}"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:?} (expected SXTN)"),
+            WireError::Version { got, want } => {
+                write!(f, "wire version mismatch: peer speaks v{got}, this build v{want}")
+            }
+            WireError::BadOpcode(v) => write!(f, "unknown opcode {v}"),
+            WireError::Truncated { needed, have } => {
+                write!(f, "truncated frame: needed {needed} more bytes, have {have}")
+            }
+            WireError::TooLarge(n) => {
+                write!(f, "frame payload of {n} bytes exceeds the {MAX_FRAME_BYTES} cap")
+            }
+            WireError::Malformed(s) => write!(f, "malformed payload: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Byte-level primitives
+// ---------------------------------------------------------------------------
+
+/// Append-only little-endian payload builder.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    /// Fresh empty writer.
+    pub fn new() -> ByteWriter {
+        ByteWriter::default()
+    }
+
+    /// Finish and take the encoded bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Append a u8.
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a little-endian u16.
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a little-endian u32.
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a little-endian u64.
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a little-endian f32.
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a length-prefixed (u32) UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Append a length-prefixed (u64 count) u32 slice.
+    pub fn put_u32_slice(&mut self, vs: &[u32]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.put_u32(v);
+        }
+    }
+
+    /// Append a length-prefixed (u64 count) u64 slice.
+    pub fn put_u64_slice(&mut self, vs: &[u64]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.put_u64(v);
+        }
+    }
+
+    /// Append a length-prefixed (u64 count) f32 slice.
+    pub fn put_f32_slice(&mut self, vs: &[f32]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.put_f32(v);
+        }
+    }
+}
+
+/// Bounds-checked little-endian payload reader: every read either yields a
+/// value or a [`WireError::Truncated`] — no panics on short input.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// Read from the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Error unless every byte was consumed — catches trailing garbage.
+    pub fn finish(&self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(WireError::Malformed(format!(
+                "{} trailing bytes after payload",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated { needed: n, have: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read a u8.
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a little-endian u16.
+    pub fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    /// Read a little-endian u32.
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read a little-endian u64.
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a little-endian u64 and require it to fit a usize.
+    pub fn len64(&mut self) -> Result<usize, WireError> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| WireError::TooLarge(v))
+    }
+
+    /// Read a little-endian f32.
+    pub fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String, WireError> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::Malformed("string is not UTF-8".into()))
+    }
+
+    /// Read a length-prefixed u32 slice (count validated against the
+    /// remaining bytes *before* allocating).
+    pub fn u32_slice(&mut self) -> Result<Vec<u32>, WireError> {
+        let n = self.len64()?;
+        if self.remaining() < n * 4 {
+            return Err(WireError::Truncated { needed: n * 4, have: self.remaining() });
+        }
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    /// Read a length-prefixed u64 slice.
+    pub fn u64_slice(&mut self) -> Result<Vec<u64>, WireError> {
+        let n = self.len64()?;
+        if self.remaining() < n * 8 {
+            return Err(WireError::Truncated { needed: n * 8, have: self.remaining() });
+        }
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    /// Read a length-prefixed f32 slice.
+    pub fn f32_slice(&mut self) -> Result<Vec<f32>, WireError> {
+        let n = self.len64()?;
+        if self.remaining() < n * 4 {
+            return Err(WireError::Truncated { needed: n * 4, have: self.remaining() });
+        }
+        (0..n).map(|_| self.f32()).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frame I/O
+// ---------------------------------------------------------------------------
+
+/// Write one frame: header ([`MAGIC`], [`WIRE_VERSION`], opcode, length)
+/// followed by the payload, then flush.
+pub fn write_frame(w: &mut impl Write, op: Op, payload: &[u8]) -> Result<(), WireError> {
+    if payload.len() as u64 > MAX_FRAME_BYTES as u64 {
+        return Err(WireError::TooLarge(payload.len() as u64));
+    }
+    let mut header = [0u8; HEADER_BYTES];
+    header[0..4].copy_from_slice(&MAGIC);
+    header[4..6].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    header[6..8].copy_from_slice(&(op as u16).to_le_bytes());
+    header[8..12].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame, returning `None` on a clean EOF *between* frames (the
+/// peer closed an idle connection). EOF mid-header or mid-payload is a
+/// [`WireError::Truncated`].
+pub fn read_frame_opt(r: &mut impl Read) -> Result<Option<(Op, Vec<u8>)>, WireError> {
+    let mut header = [0u8; HEADER_BYTES];
+    let mut filled = 0;
+    while filled < HEADER_BYTES {
+        let n = r.read(&mut header[filled..])?;
+        if n == 0 {
+            if filled == 0 {
+                return Ok(None);
+            }
+            return Err(WireError::Truncated {
+                needed: HEADER_BYTES - filled,
+                have: filled,
+            });
+        }
+        filled += n;
+    }
+    if header[0..4] != MAGIC {
+        return Err(WireError::BadMagic(header[0..4].try_into().unwrap()));
+    }
+    let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    if version != WIRE_VERSION {
+        return Err(WireError::Version { got: version, want: WIRE_VERSION });
+    }
+    let op = Op::from_u16(u16::from_le_bytes(header[6..8].try_into().unwrap()))?;
+    let len = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    if len > MAX_FRAME_BYTES {
+        return Err(WireError::TooLarge(len as u64));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            WireError::Truncated { needed: len as usize, have: 0 }
+        } else {
+            WireError::Io(e)
+        }
+    })?;
+    Ok(Some((op, payload)))
+}
+
+/// Read one frame; a clean EOF between frames is also an error here (use
+/// [`read_frame_opt`] where idle closes are expected).
+pub fn read_frame(r: &mut impl Read) -> Result<(Op, Vec<u8>), WireError> {
+    read_frame_opt(r)?.ok_or(WireError::Truncated { needed: HEADER_BYTES, have: 0 })
+}
+
+// ---------------------------------------------------------------------------
+// ScheduledMatrix codec
+// ---------------------------------------------------------------------------
+
+/// Encode a [`ScheduledMatrix`] memory image (scalars, per-PE encoded
+/// streams with Q pointer lists, per-window stats).
+pub fn encode_image(sm: &ScheduledMatrix) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    for v in [sm.m, sm.k, sm.p, sm.k0, sm.d, sm.num_windows, sm.nnz] {
+        w.put_u64(v as u64);
+    }
+    w.put_u64(sm.streams.len() as u64);
+    for stream in &sm.streams {
+        w.put_u64(stream.nnz as u64);
+        w.put_u64_slice(&stream.encoded);
+        w.put_u32_slice(stream.q.entries());
+    }
+    w.put_u64(sm.window_stats.len() as u64);
+    for ws in &sm.window_stats {
+        for v in [ws.max_cycles, ws.nnz, ws.bubbles, ws.max_cycles_inorder, ws.max_cycles_rowmajor]
+        {
+            w.put_u64(v);
+        }
+    }
+    w.into_bytes()
+}
+
+/// Decode a [`ScheduledMatrix`], validating structural invariants: stream
+/// count equals P, each Q list is a valid pointer list over its stream
+/// ([`PointerList::validate`]), and window-stat count equals the window
+/// count.
+pub fn decode_image(bytes: &[u8]) -> Result<ScheduledMatrix, WireError> {
+    let mut r = ByteReader::new(bytes);
+    let m = r.len64()?;
+    let k = r.len64()?;
+    let p = r.len64()?;
+    let k0 = r.len64()?;
+    let d = r.len64()?;
+    let num_windows = r.len64()?;
+    let nnz = r.len64()?;
+    let nstreams = r.len64()?;
+    if nstreams != p {
+        return Err(WireError::Malformed(format!("{nstreams} streams for P = {p}")));
+    }
+    let mut streams = Vec::with_capacity(nstreams);
+    for _ in 0..nstreams {
+        let s_nnz = r.len64()?;
+        let encoded = r.u64_slice()?;
+        let q_raw = r.u32_slice()?;
+        let q = PointerList::validate(&q_raw, encoded.len())
+            .map_err(|e| WireError::Malformed(format!("bad Q list: {e}")))?;
+        if q.num_windows() != num_windows {
+            return Err(WireError::Malformed(format!(
+                "stream has {} windows, image declares {num_windows}",
+                q.num_windows()
+            )));
+        }
+        streams.push(PeStream { encoded, q, nnz: s_nnz });
+    }
+    let nstats = r.len64()?;
+    if nstats != num_windows {
+        return Err(WireError::Malformed(format!(
+            "{nstats} window stats for {num_windows} windows"
+        )));
+    }
+    let mut window_stats = Vec::with_capacity(nstats);
+    for _ in 0..nstats {
+        window_stats.push(WindowStats {
+            max_cycles: r.u64()?,
+            nnz: r.u64()?,
+            bubbles: r.u64()?,
+            max_cycles_inorder: r.u64()?,
+            max_cycles_rowmajor: r.u64()?,
+        });
+    }
+    r.finish()?;
+    Ok(ScheduledMatrix { m, k, p, k0, d, num_windows, streams, window_stats, nnz })
+}
+
+// ---------------------------------------------------------------------------
+// ShardPlan codec
+// ---------------------------------------------------------------------------
+
+/// Encode a [`ShardPlan`] (shard count, row→shard assignment, per-shard
+/// row lists and nnz).
+pub fn encode_plan(plan: &ShardPlan) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(plan.shards as u64);
+    w.put_u32_slice(&plan.assignment);
+    w.put_u64(plan.shard_rows.len() as u64);
+    for rows in &plan.shard_rows {
+        w.put_u32_slice(rows);
+    }
+    w.put_u64(plan.shard_nnz.len() as u64);
+    for &nnz in &plan.shard_nnz {
+        w.put_u64(nnz as u64);
+    }
+    w.into_bytes()
+}
+
+/// Decode a [`ShardPlan`], validating that the per-shard vectors agree
+/// with the declared shard count.
+pub fn decode_plan(bytes: &[u8]) -> Result<ShardPlan, WireError> {
+    let mut r = ByteReader::new(bytes);
+    let shards = r.len64()?;
+    let assignment = r.u32_slice()?;
+    let nrows = r.len64()?;
+    if nrows != shards {
+        return Err(WireError::Malformed(format!("{nrows} row lists for {shards} shards")));
+    }
+    let mut shard_rows = Vec::with_capacity(nrows);
+    for _ in 0..nrows {
+        shard_rows.push(r.u32_slice()?);
+    }
+    let nnnz = r.len64()?;
+    if nnnz != shards {
+        return Err(WireError::Malformed(format!("{nnnz} nnz entries for {shards} shards")));
+    }
+    let mut shard_nnz = Vec::with_capacity(nnnz);
+    for _ in 0..nnnz {
+        shard_nnz.push(r.len64()?);
+    }
+    r.finish()?;
+    for (i, &s) in assignment.iter().enumerate() {
+        if s as usize >= shards {
+            return Err(WireError::Malformed(format!(
+                "row {i} assigned to shard {s} of {shards}"
+            )));
+        }
+    }
+    Ok(ShardPlan { shards, assignment, shard_rows, shard_nnz })
+}
+
+// ---------------------------------------------------------------------------
+// PrepareCost codec
+// ---------------------------------------------------------------------------
+
+/// Encode a [`PrepareCost`] (wall nanoseconds + resident bytes).
+pub fn encode_cost(cost: &PrepareCost) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(cost.wall.as_nanos() as u64);
+    w.put_u64(cost.resident_bytes);
+    w.into_bytes()
+}
+
+/// Decode a [`PrepareCost`].
+pub fn decode_cost(bytes: &[u8]) -> Result<PrepareCost, WireError> {
+    let mut r = ByteReader::new(bytes);
+    let wall = Duration::from_nanos(r.u64()?);
+    let resident_bytes = r.u64()?;
+    r.finish()?;
+    Ok(PrepareCost { wall, resident_bytes })
+}
+
+// ---------------------------------------------------------------------------
+// RPC payload codecs (shared by worker and remote backend)
+// ---------------------------------------------------------------------------
+
+/// Encode a Prepare request: image id + encoded image.
+pub fn encode_prepare_req(image_id: u64, sm: &ScheduledMatrix) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(image_id);
+    let img = encode_image(sm);
+    w.put_u64(img.len() as u64);
+    let mut bytes = w.into_bytes();
+    bytes.extend_from_slice(&img);
+    bytes
+}
+
+/// Decode a Prepare request into (image id, image).
+pub fn decode_prepare_req(bytes: &[u8]) -> Result<(u64, ScheduledMatrix), WireError> {
+    let mut r = ByteReader::new(bytes);
+    let id = r.u64()?;
+    let len = r.len64()?;
+    let img_bytes = r.take(len)?;
+    r.finish()?;
+    Ok((id, decode_image(img_bytes)?))
+}
+
+/// Encode an Execute request: image id, N, scalars, B (`k×n`), C (`m×n`).
+pub fn encode_execute_req(
+    image_id: u64,
+    n: usize,
+    alpha: f32,
+    beta: f32,
+    b: &[f32],
+    c: &[f32],
+) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(image_id);
+    w.put_u64(n as u64);
+    w.put_f32(alpha);
+    w.put_f32(beta);
+    w.put_f32_slice(b);
+    w.put_f32_slice(c);
+    w.into_bytes()
+}
+
+/// Decode an Execute request into (id, n, alpha, beta, b, c).
+#[allow(clippy::type_complexity)]
+pub fn decode_execute_req(
+    bytes: &[u8],
+) -> Result<(u64, usize, f32, f32, Vec<f32>, Vec<f32>), WireError> {
+    let mut r = ByteReader::new(bytes);
+    let id = r.u64()?;
+    let n = r.len64()?;
+    let alpha = r.f32()?;
+    let beta = r.f32()?;
+    let b = r.f32_slice()?;
+    let c = r.f32_slice()?;
+    r.finish()?;
+    Ok((id, n, alpha, beta, b, c))
+}
+
+/// Encode an Execute success reply: the updated C block.
+pub fn encode_execute_ok(c: &[f32]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_f32_slice(c);
+    w.into_bytes()
+}
+
+/// Decode an Execute success reply.
+pub fn decode_execute_ok(bytes: &[u8]) -> Result<Vec<f32>, WireError> {
+    let mut r = ByteReader::new(bytes);
+    let c = r.f32_slice()?;
+    r.finish()?;
+    Ok(c)
+}
+
+/// Worker residency statistics carried in a Stats reply.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkerStats {
+    /// Prepared images currently resident.
+    pub resident: u64,
+    /// Live resident bytes across those handles.
+    pub resident_bytes: u64,
+    /// Execute RPCs served since the worker started.
+    pub executes: u64,
+}
+
+/// Encode a Stats success reply.
+pub fn encode_stats_ok(stats: &WorkerStats) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(stats.resident);
+    w.put_u64(stats.resident_bytes);
+    w.put_u64(stats.executes);
+    w.into_bytes()
+}
+
+/// Decode a Stats success reply.
+pub fn decode_stats_ok(bytes: &[u8]) -> Result<WorkerStats, WireError> {
+    let mut r = ByteReader::new(bytes);
+    let stats = WorkerStats {
+        resident: r.u64()?,
+        resident_bytes: r.u64()?,
+        executes: r.u64()?,
+    };
+    r.finish()?;
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+    use crate::sched::preprocess;
+    use crate::shard::plan_shards;
+    use crate::sparse::{gen, rng::Rng};
+
+    fn sample_image(seed: u64) -> ScheduledMatrix {
+        let mut rng = Rng::new(seed);
+        let m = 8 + rng.index(56);
+        let k = 8 + rng.index(72);
+        let coo = gen::random_uniform(m, k, 0.05 + rng.f64() * 0.2, &mut rng);
+        let p = 1 + rng.index(6);
+        let k0 = 4 + rng.index(28);
+        let d = 1 + rng.index(8);
+        preprocess(&coo, p, k0, d)
+    }
+
+    fn assert_images_equal(a: &ScheduledMatrix, b: &ScheduledMatrix) {
+        assert_eq!(a.m, b.m);
+        assert_eq!(a.k, b.k);
+        assert_eq!(a.p, b.p);
+        assert_eq!(a.k0, b.k0);
+        assert_eq!(a.d, b.d);
+        assert_eq!(a.num_windows, b.num_windows);
+        assert_eq!(a.nnz, b.nnz);
+        assert_eq!(a.streams.len(), b.streams.len());
+        for (x, y) in a.streams.iter().zip(&b.streams) {
+            assert_eq!(x.encoded, y.encoded);
+            assert_eq!(x.q, y.q);
+            assert_eq!(x.nnz, y.nnz);
+        }
+        assert_eq!(a.window_stats.len(), b.window_stats.len());
+        for (x, y) in a.window_stats.iter().zip(&b.window_stats) {
+            assert_eq!(x.max_cycles, y.max_cycles);
+            assert_eq!(x.nnz, y.nnz);
+            assert_eq!(x.bubbles, y.bubbles);
+        }
+    }
+
+    #[test]
+    fn image_roundtrip_property() {
+        prop::check("wire_image_roundtrip", 0xD15C, 16, |rng| {
+            let sm = sample_image(rng.index(1 << 30) as u64);
+            let bytes = encode_image(&sm);
+            let back = decode_image(&bytes).map_err(|e| e.to_string())?;
+            assert_images_equal(&sm, &back);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn plan_roundtrip_property() {
+        prop::check("wire_plan_roundtrip", 0x9A7, 24, |rng| {
+            let m = 1 + rng.index(96);
+            let k = 1 + rng.index(64);
+            let coo = gen::random_uniform(m, k, 0.02 + rng.f64() * 0.2, rng);
+            let s = 1 + rng.index(8);
+            let plan = plan_shards(&coo, s);
+            let back = decode_plan(&encode_plan(&plan)).map_err(|e| e.to_string())?;
+            if back.shards != plan.shards
+                || back.assignment != plan.assignment
+                || back.shard_rows != plan.shard_rows
+                || back.shard_nnz != plan.shard_nnz
+            {
+                return Err("plan did not round-trip".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cost_roundtrip() {
+        let cost = PrepareCost {
+            wall: Duration::from_nanos(123_456_789),
+            resident_bytes: 9_876_543,
+        };
+        let back = decode_cost(&encode_cost(&cost)).unwrap();
+        assert_eq!(back.wall, cost.wall);
+        assert_eq!(back.resident_bytes, cost.resident_bytes);
+    }
+
+    #[test]
+    fn truncated_image_is_rejected_at_every_prefix() {
+        let sm = sample_image(7);
+        let bytes = encode_image(&sm);
+        // Every strict prefix must fail loudly, never panic or succeed.
+        for cut in [0, 1, 8, bytes.len() / 2, bytes.len() - 1] {
+            let err = decode_image(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(err, WireError::Truncated { .. } | WireError::Malformed(_)),
+                "prefix {cut}: unexpected {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_q_list_is_rejected() {
+        let sm = sample_image(11);
+        let mut bytes = encode_image(&sm);
+        // The first stream's Q starts right after scalars + stream nnz +
+        // encoded-words; flip its Q[0] (must be 0) to a nonzero value.
+        let q0_offset = 8 * 8 + 8 + 8 + sm.streams[0].encoded.len() * 8 + 8;
+        bytes[q0_offset] = 0xFF;
+        let err = decode_image(&bytes).unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "{err:?}");
+    }
+
+    #[test]
+    fn frame_roundtrip_over_a_buffer() {
+        let payload = vec![1u8, 2, 3, 4, 5];
+        let mut buf = Vec::new();
+        write_frame(&mut buf, Op::Execute, &payload).unwrap();
+        assert_eq!(buf.len(), HEADER_BYTES + payload.len());
+        let (op, got) = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(op, Op::Execute);
+        assert_eq!(got, payload);
+    }
+
+    #[test]
+    fn clean_eof_between_frames_is_none() {
+        let empty: &[u8] = &[];
+        assert!(read_frame_opt(&mut &*empty).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_frame_header_and_payload_are_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, Op::Ping, b"abc").unwrap();
+        // Mid-header cut.
+        let err = read_frame(&mut &buf[..6]).unwrap_err();
+        assert!(matches!(err, WireError::Truncated { .. }), "{err:?}");
+        // Mid-payload cut.
+        let err = read_frame(&mut &buf[..HEADER_BYTES + 1]).unwrap_err();
+        assert!(matches!(err, WireError::Truncated { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, Op::Ping, b"").unwrap();
+        buf[4] = (WIRE_VERSION + 1) as u8; // bump the version field
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        match err {
+            WireError::Version { got, want } => {
+                assert_eq!(got, WIRE_VERSION + 1);
+                assert_eq!(want, WIRE_VERSION);
+            }
+            other => panic!("expected version mismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_bad_opcode_are_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, Op::Ping, b"").unwrap();
+        let mut spoofed = buf.clone();
+        spoofed[0] = b'X';
+        assert!(matches!(
+            read_frame(&mut spoofed.as_slice()).unwrap_err(),
+            WireError::BadMagic(_)
+        ));
+        let mut bad_op = buf.clone();
+        bad_op[6] = 99; // not a registered opcode
+        assert!(matches!(
+            read_frame(&mut bad_op.as_slice()).unwrap_err(),
+            WireError::BadOpcode(99)
+        ));
+    }
+
+    #[test]
+    fn oversized_length_field_is_rejected_without_allocating() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, Op::Ping, b"").unwrap();
+        buf[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut buf.as_slice()).unwrap_err(),
+            WireError::TooLarge(_)
+        ));
+    }
+
+    #[test]
+    fn execute_req_roundtrip() {
+        let b = vec![1.5f32, -2.25, 0.0, 3.75];
+        let c = vec![0.5f32, -0.5];
+        let bytes = encode_execute_req(42, 2, 1.5, -0.25, &b, &c);
+        let (id, n, alpha, beta, b2, c2) = decode_execute_req(&bytes).unwrap();
+        assert_eq!((id, n, alpha, beta), (42, 2, 1.5, -0.25));
+        assert_eq!(b2, b);
+        assert_eq!(c2, c);
+        let c3 = decode_execute_ok(&encode_execute_ok(&c)).unwrap();
+        assert_eq!(c3, c);
+    }
+
+    #[test]
+    fn prepare_req_roundtrip() {
+        let sm = sample_image(3);
+        let bytes = encode_prepare_req(7, &sm);
+        let (id, back) = decode_prepare_req(&bytes).unwrap();
+        assert_eq!(id, 7);
+        assert_images_equal(&sm, &back);
+    }
+
+    #[test]
+    fn stats_roundtrip_and_trailing_garbage_rejected() {
+        let stats = WorkerStats { resident: 3, resident_bytes: 4096, executes: 17 };
+        assert_eq!(decode_stats_ok(&encode_stats_ok(&stats)).unwrap(), stats);
+        let mut bytes = encode_stats_ok(&stats);
+        bytes.push(0);
+        assert!(matches!(decode_stats_ok(&bytes).unwrap_err(), WireError::Malformed(_)));
+    }
+
+    #[test]
+    fn plan_roundtrip_and_validation() {
+        let mut rng = Rng::new(5);
+        let coo = gen::power_law_rows(64, 48, 300, 1.2, &mut rng);
+        let plan = plan_shards(&coo, 4);
+        let bytes = encode_plan(&plan);
+        let back = decode_plan(&bytes).unwrap();
+        assert_eq!(back.shards, plan.shards);
+        assert_eq!(back.assignment, plan.assignment);
+        assert_eq!(back.shard_rows, plan.shard_rows);
+        assert_eq!(back.shard_nnz, plan.shard_nnz);
+        // A row assigned to a shard >= S is rejected.
+        let mut evil = plan.clone();
+        evil.assignment[0] = 99;
+        assert!(matches!(
+            decode_plan(&encode_plan(&evil)).unwrap_err(),
+            WireError::Malformed(_)
+        ));
+    }
+}

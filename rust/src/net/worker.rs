@@ -1,0 +1,338 @@
+//! The `sextans worker` process: a socket server holding prepared shard
+//! residencies and serving prepare/execute/stats/evict RPCs.
+//!
+//! One worker is one address space of the distributed fleet. A client
+//! (the `remote:<addr>` backend) ships [`crate::sched::ScheduledMatrix`]
+//! images over the [`super::wire`] framing; the worker prepares them
+//! through its own local backend spec (any registry spec — `native:2`,
+//! `functional`, even `sharded:2:native`) and keeps the resulting
+//! [`PreparedSpmm`] handles resident under client-assigned image ids.
+//! Execute RPCs then carry only the dense operands.
+//!
+//! Concurrency model: one thread per connection, handles shared as
+//! `Arc<dyn PreparedSpmm + Send + Sync>` — the PR 5 `&self` execution
+//! contract means two connections executing against the same resident
+//! image run concurrently, exactly like in-process workers. Per-request
+//! framing plus read/write timeouts bound how long a dead or stalled peer
+//! can pin a connection thread.
+//!
+//! Every reply is a frame: [`Op::Ok`] with an op-specific payload, or
+//! [`Op::Err`] carrying the error message — a worker failure becomes a
+//! typed error on the client, never a hung socket.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::wire::{
+    self, decode_execute_req, decode_prepare_req, encode_cost, encode_execute_ok,
+    encode_stats_ok, ByteReader, ByteWriter, Op, WireError, WorkerStats,
+};
+use crate::backend::{self, PreparedSpmm};
+
+/// Worker process configuration.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// Registry spec the worker prepares images through.
+    pub backend_spec: String,
+    /// Per-connection socket read timeout (a blocked peer, not an idle
+    /// one, is the failure this bounds; an idle close is handled cleanly).
+    pub read_timeout: Duration,
+    /// Per-connection socket write timeout.
+    pub write_timeout: Duration,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig {
+            backend_spec: "native".to_string(),
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// One resident prepared image.
+struct Resident {
+    handle: Arc<dyn PreparedSpmm + Send + Sync>,
+}
+
+/// Shared state across connection threads.
+struct WorkerState {
+    spec: String,
+    resident: Mutex<HashMap<u64, Resident>>,
+    executes: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+impl WorkerState {
+    fn stats(&self) -> WorkerStats {
+        let resident = self.resident.lock().unwrap();
+        WorkerStats {
+            resident: resident.len() as u64,
+            resident_bytes: resident.values().map(|r| r.handle.resident_bytes_now()).sum(),
+            executes: self.executes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A running worker: the bound listener plus its shared state. Produced
+/// by [`Worker::bind`]; [`Worker::run`] serves until a Shutdown RPC.
+pub struct Worker {
+    listener: TcpListener,
+    state: Arc<WorkerState>,
+}
+
+impl Worker {
+    /// Bind to `addr` (`host:port`; port 0 picks a free port — the actual
+    /// address is available via [`Worker::local_addr`]).
+    pub fn bind(addr: &str, config: &WorkerConfig) -> std::io::Result<Worker> {
+        backend::create(&config.backend_spec).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidInput, e.to_string())
+        })?;
+        let listener = TcpListener::bind(addr)?;
+        Ok(Worker {
+            listener,
+            state: Arc::new(WorkerState {
+                spec: config.backend_spec.clone(),
+                resident: Mutex::new(HashMap::new()),
+                executes: AtomicU64::new(0),
+                shutdown: AtomicBool::new(false),
+            }),
+        })
+    }
+
+    /// The actually bound address (resolves port 0).
+    pub fn local_addr(&self) -> std::io::Result<std::net::SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Accept and serve connections until a Shutdown RPC arrives. Each
+    /// connection gets its own thread; a connection-level protocol error
+    /// closes that connection only.
+    pub fn run(self, config: &WorkerConfig) -> std::io::Result<()> {
+        for conn in self.listener.incoming() {
+            if self.state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let _ = stream.set_read_timeout(Some(config.read_timeout));
+            let _ = stream.set_write_timeout(Some(config.write_timeout));
+            let _ = stream.set_nodelay(true);
+            let state = Arc::clone(&self.state);
+            std::thread::spawn(move || serve_connection(stream, &state));
+            if self.state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Serve one connection's request loop until EOF, error, or shutdown.
+fn serve_connection(mut stream: TcpStream, state: &Arc<WorkerState>) {
+    loop {
+        let (op, payload) = match wire::read_frame_opt(&mut stream) {
+            Ok(Some(frame)) => frame,
+            // Clean close between frames, or a broken/timed-out peer:
+            // either way this connection is done.
+            Ok(None) | Err(_) => return,
+        };
+        // A shut-down worker stops serving standing connections too —
+        // the peer sees the close and fails over exactly as it would to
+        // a killed process.
+        if state.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let reply = handle_request(op, &payload, state);
+        let (reply_op, reply_payload) = match &reply {
+            Ok(bytes) => (Op::Ok, bytes.as_slice()),
+            Err(msg) => (Op::Err, msg.as_bytes()),
+        };
+        if wire::write_frame(&mut stream, reply_op, reply_payload).is_err() {
+            return;
+        }
+        if op == Op::Shutdown {
+            let _ = stream.flush();
+            // Unblock the accept loop so `run` observes the flag.
+            if let Ok(addr) = stream.local_addr() {
+                let _ = TcpStream::connect(addr);
+            }
+            return;
+        }
+    }
+}
+
+/// Dispatch one RPC. `Ok` carries the success payload, `Err` the message
+/// for an [`Op::Err`] reply.
+fn handle_request(op: Op, payload: &[u8], state: &Arc<WorkerState>) -> Result<Vec<u8>, String> {
+    match op {
+        Op::Ping => Ok(Vec::new()),
+        Op::Prepare => {
+            let (id, image) =
+                decode_prepare_req(payload).map_err(|e| format!("prepare: {e}"))?;
+            let handle = backend::prepare_send(&state.spec, Arc::new(image))
+                .map_err(|e| format!("prepare: {e}"))?;
+            let cost = handle.prepare_cost();
+            state
+                .resident
+                .lock()
+                .unwrap()
+                .insert(id, Resident { handle: Arc::from(handle) });
+            Ok(encode_cost(&cost))
+        }
+        Op::Execute => {
+            let (id, n, alpha, beta, b, mut c) =
+                decode_execute_req(payload).map_err(|e| format!("execute: {e}"))?;
+            // Clone the Arc out so the residency lock never covers the
+            // multiply — concurrent connections execute in parallel.
+            let handle = {
+                let resident = state.resident.lock().unwrap();
+                match resident.get(&id) {
+                    Some(r) => Arc::clone(&r.handle),
+                    None => return Err(format!("execute: image {id} is not resident")),
+                }
+            };
+            handle.execute(&b, &mut c, n, alpha, beta).map_err(|e| e.to_string())?;
+            state.executes.fetch_add(1, Ordering::Relaxed);
+            Ok(encode_execute_ok(&c))
+        }
+        Op::Stats => Ok(encode_stats_ok(&state.stats())),
+        Op::Evict => {
+            let mut r = ByteReader::new(payload);
+            let id = r.u64().map_err(|e| format!("evict: {e}"))?;
+            r.finish().map_err(|e| format!("evict: {e}"))?;
+            let found = state.resident.lock().unwrap().remove(&id).is_some();
+            let mut w = ByteWriter::new();
+            w.put_u8(found as u8);
+            Ok(w.into_bytes())
+        }
+        Op::Shutdown => {
+            state.shutdown.store(true, Ordering::SeqCst);
+            Ok(Vec::new())
+        }
+        Op::Ok | Op::Err => Err("reply opcode sent as a request".to_string()),
+    }
+}
+
+/// Client-side helper: one blocking RPC over an existing stream — write
+/// the request frame, read the reply frame, unwrap `Ok`/`Err`.
+pub fn rpc(stream: &mut TcpStream, op: Op, payload: &[u8]) -> Result<Vec<u8>, WireError> {
+    wire::write_frame(stream, op, payload)?;
+    let (reply_op, reply) = wire::read_frame(stream)?;
+    match reply_op {
+        Op::Ok => Ok(reply),
+        Op::Err => Err(WireError::Malformed(
+            String::from_utf8_lossy(&reply).into_owned(),
+        )),
+        other => Err(WireError::Malformed(format!("unexpected reply opcode {other:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::preprocess;
+    use crate::sparse::{gen, rng::Rng};
+
+    fn spawn_worker(spec: &str) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let config = WorkerConfig {
+            backend_spec: spec.to_string(),
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+        };
+        let worker = Worker::bind("127.0.0.1:0", &config).unwrap();
+        let addr = worker.local_addr().unwrap();
+        let handle = std::thread::spawn(move || worker.run(&config).unwrap());
+        (addr, handle)
+    }
+
+    fn connect(addr: std::net::SocketAddr) -> TcpStream {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.set_write_timeout(Some(Duration::from_secs(5))).unwrap();
+        s
+    }
+
+    #[test]
+    fn worker_serves_prepare_execute_stats_evict() {
+        let (addr, join) = spawn_worker("functional");
+        let mut conn = connect(addr);
+
+        assert!(rpc(&mut conn, Op::Ping, &[]).unwrap().is_empty());
+
+        let mut rng = Rng::new(21);
+        let coo = gen::random_uniform(24, 18, 0.2, &mut rng);
+        let sm = preprocess(&coo, 2, 8, 3);
+        let cost_bytes =
+            rpc(&mut conn, Op::Prepare, &wire::encode_prepare_req(5, &sm)).unwrap();
+        let _cost = wire::decode_cost(&cost_bytes).unwrap();
+
+        let n = 3;
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let reply = rpc(
+            &mut conn,
+            Op::Execute,
+            &wire::encode_execute_req(5, n, 1.5, -0.5, &b, &c0),
+        )
+        .unwrap();
+        let got = wire::decode_execute_ok(&reply).unwrap();
+        let mut want = c0.clone();
+        crate::backend::create("functional")
+            .unwrap()
+            .execute_once(&Arc::new(sm), &b, &mut want, n, 1.5, -0.5)
+            .unwrap();
+        assert_eq!(got, want, "remote execute must match local functional execute");
+
+        let stats =
+            wire::decode_stats_ok(&rpc(&mut conn, Op::Stats, &[]).unwrap()).unwrap();
+        assert_eq!(stats.resident, 1);
+        assert_eq!(stats.executes, 1);
+
+        let mut w = ByteWriter::new();
+        w.put_u64(5);
+        let evicted = rpc(&mut conn, Op::Evict, &w.into_bytes()).unwrap();
+        assert_eq!(evicted, vec![1]);
+        let err = rpc(
+            &mut conn,
+            Op::Execute,
+            &wire::encode_execute_req(5, n, 1.0, 0.0, &b, &c0),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("not resident"), "{err}");
+
+        rpc(&mut conn, Op::Shutdown, &[]).unwrap();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn worker_rejects_bad_backend_spec_at_bind() {
+        let config = WorkerConfig {
+            backend_spec: "warpdrive".to_string(),
+            ..WorkerConfig::default()
+        };
+        assert!(Worker::bind("127.0.0.1:0", &config).is_err());
+    }
+
+    #[test]
+    fn execute_against_unknown_image_is_a_typed_error() {
+        let (addr, join) = spawn_worker("functional");
+        let mut conn = connect(addr);
+        let err = rpc(
+            &mut conn,
+            Op::Execute,
+            &wire::encode_execute_req(99, 1, 1.0, 0.0, &[0.0], &[0.0]),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("image 99"), "{err}");
+        rpc(&mut conn, Op::Shutdown, &[]).unwrap();
+        join.join().unwrap();
+    }
+}

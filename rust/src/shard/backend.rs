@@ -219,7 +219,7 @@ impl PreparedSpmm for PreparedSharded {
     ) -> Result<ExecutionReport, BackendError> {
         let stats = self.executor.execute(b, c, n, alpha, beta)?;
         *self.last_stats.lock().unwrap() = Some(stats.clone());
-        Ok(ExecutionReport { skipped: 0, shard_stats: Some(stats) })
+        Ok(ExecutionReport { skipped: 0, shard_stats: Some(stats), remote: None })
     }
 
     fn execute_routed_with_report(
@@ -232,11 +232,21 @@ impl PreparedSpmm for PreparedSharded {
     ) -> Result<ExecutionReport, BackendError> {
         let (stats, skipped) = self.executor.execute_active(b, c, n, alpha, beta)?;
         *self.last_stats.lock().unwrap() = Some(stats.clone());
-        Ok(ExecutionReport { skipped, shard_stats: Some(stats) })
+        Ok(ExecutionReport { skipped, shard_stats: Some(stats), remote: None })
     }
 
     fn resident_bytes_now(&self) -> u64 {
         self.executor.resident_bytes_now()
+    }
+
+    fn trim_resident(&self, max_idle: std::time::Duration) -> u64 {
+        self.executor.trim_scratch(max_idle)
+            + self
+                .executor
+                .prepared()
+                .iter()
+                .map(|h| h.trim_resident(max_idle))
+                .sum::<u64>()
     }
 }
 

@@ -164,6 +164,18 @@ impl ShardExecutor {
         self.cost.resident_bytes.saturating_sub(static_inners) + live_inners + pooled
     }
 
+    /// Drop gather-block sets parked in the scratch pool for longer than
+    /// `max_idle` and return the bytes reclaimed. A concurrency burst
+    /// grows the pool to its peak width; this is how the pool shrinks
+    /// back once the burst passes (surfaced through
+    /// [`crate::backend::PreparedSpmm::trim_resident`] on the sharded
+    /// composite handle).
+    pub fn trim_scratch(&self, max_idle: std::time::Duration) -> u64 {
+        self.locals.trim_idle(max_idle, |set| {
+            set.iter().map(|b| (b.len() * std::mem::size_of::<f32>()) as u64).sum()
+        })
+    }
+
     /// Build-time nnz imbalance of the resident shard plan.
     pub fn imbalance(&self) -> f64 {
         self.imbalance

@@ -256,6 +256,18 @@ impl BenchRecord {
         })
     }
 
+    /// True when the snapshot carries no real measurements: every
+    /// throughput number across `results` and `scaling` is zero (or both
+    /// lists are empty). The repo seeds `BENCH_baseline.json` as an
+    /// all-zero placeholder so the schema is exercised before any machine
+    /// has measured; comparing against such a file can only ever pass, so
+    /// `sextans bench --baseline` warns (and `--strict` fails) when it
+    /// sees one.
+    pub fn is_zeroed(&self) -> bool {
+        self.results.iter().all(|r| r.gflops == 0.0)
+            && self.scaling.iter().all(|s| s.gflops == 0.0)
+    }
+
     /// Write `BENCH_<name>.json`-style pretty JSON to `path`.
     pub fn write(&self, path: &Path) -> std::io::Result<()> {
         std::fs::write(path, self.to_value().to_json_pretty())
@@ -471,6 +483,18 @@ mod tests {
         let regs = compare(&base, &cur, 0.15);
         assert_eq!(regs.len(), 1);
         assert!(regs[0].what.contains("workers"), "{}", regs[0].what);
+    }
+
+    #[test]
+    fn zeroed_placeholder_is_detected() {
+        // Empty counts as zeroed: nothing was measured.
+        assert!(BenchRecord::default().is_zeroed());
+        let mut rec = sample();
+        assert!(!rec.is_zeroed(), "real measurements are not a placeholder");
+        rec.results[0].gflops = 0.0;
+        assert!(!rec.is_zeroed(), "a nonzero scaling point still counts");
+        rec.scaling[0].gflops = 0.0;
+        assert!(rec.is_zeroed(), "all-zero throughput is the placeholder");
     }
 
     #[test]

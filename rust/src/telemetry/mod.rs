@@ -29,5 +29,6 @@ pub mod trace;
 pub use bench_record::{compare, BenchMeasurement, BenchRecord, Regression, ScalingPoint};
 pub use histogram::{Histogram, Percentiles};
 pub use trace::{
-    build_tree, render_tree, SpanNode, SpanRecord, TelemetrySink, TraceCollector,
+    build_tree, current_span_context, push_span_context, render_tree, SpanContextGuard,
+    SpanNode, SpanRecord, TelemetrySink, TraceCollector,
 };

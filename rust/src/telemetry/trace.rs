@@ -60,6 +60,44 @@ pub fn next_span_id() -> u64 {
     NEXT.fetch_add(1, Ordering::Relaxed)
 }
 
+thread_local! {
+    /// The (trace id, span id) a deeper layer should parent its child
+    /// spans under — set around an execution by the dispatch stage so
+    /// engine internals (e.g. the remote backend's per-RPC `net.rpc`
+    /// spans) land inside the request's `exec` span without the trace
+    /// context being threaded through every `execute` signature.
+    static CURRENT_SPAN: std::cell::Cell<Option<(u64, u64)>> =
+        const { std::cell::Cell::new(None) };
+}
+
+/// Set the current span context for this thread; restored to the previous
+/// value when the returned guard drops. Note the context is thread-local:
+/// an engine that fans out to scoped threads must capture
+/// [`current_span_context`] *before* spawning and pass it into the
+/// closures.
+pub fn push_span_context(trace_id: u64, span_id: u64) -> SpanContextGuard {
+    let prev = CURRENT_SPAN.with(|c| c.replace(Some((trace_id, span_id))));
+    SpanContextGuard { prev }
+}
+
+/// The (trace id, span id) deeper layers should parent under, if an
+/// enclosing stage published one via [`push_span_context`].
+pub fn current_span_context() -> Option<(u64, u64)> {
+    CURRENT_SPAN.with(|c| c.get())
+}
+
+/// RAII guard from [`push_span_context`]: restores the previous context
+/// (usually `None`) on drop, so nested pushes compose.
+pub struct SpanContextGuard {
+    prev: Option<(u64, u64)>,
+}
+
+impl Drop for SpanContextGuard {
+    fn drop(&mut self) {
+        CURRENT_SPAN.with(|c| c.set(self.prev));
+    }
+}
+
 /// One completed span: a named interval inside a request's trace.
 #[derive(Clone, Debug)]
 pub struct SpanRecord {
@@ -378,6 +416,26 @@ mod tests {
             Some(s.end_ns),
             "nanosecond timestamps survive the f64 JSON number path"
         );
+    }
+
+    #[test]
+    fn span_context_nests_and_restores() {
+        assert_eq!(current_span_context(), None);
+        {
+            let _outer = push_span_context(7, 100);
+            assert_eq!(current_span_context(), Some((7, 100)));
+            {
+                let _inner = push_span_context(7, 200);
+                assert_eq!(current_span_context(), Some((7, 200)));
+            }
+            assert_eq!(current_span_context(), Some((7, 100)), "inner pop restores outer");
+        }
+        assert_eq!(current_span_context(), None, "outer pop restores None");
+        // The context is per-thread: a fresh thread starts clean.
+        let _guard = push_span_context(9, 1);
+        std::thread::spawn(|| assert_eq!(current_span_context(), None))
+            .join()
+            .unwrap();
     }
 
     #[test]

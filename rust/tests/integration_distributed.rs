@@ -1,0 +1,262 @@
+//! Multi-process integration: the distributed worker fleet end to end.
+//!
+//! These tests spawn real `sextans worker` processes on loopback (via
+//! `CARGO_BIN_EXE_sextans`) and drive them through the `remote:<addr>`
+//! backend — the same process topology a production fleet would run, not
+//! the in-process worker threads the `net` module tests use. The
+//! acceptance contract:
+//!
+//! - `remote` over ≥ 2 worker processes is **bit-identical** to the
+//!   `functional` reference on a schedule-invariant matrix (exactly one
+//!   non-zero per row per K0 window, so every schedule accumulates each
+//!   row in the same floating-point order), and allclose on general
+//!   random matrices across alpha/beta.
+//! - Killing a worker process mid-stream triggers re-place + retry: the
+//!   answer stays correct (no zeroed rows) and the execution report
+//!   carries `retries > 0` / `replaced > 0`.
+//! - With `replicas=2`, a kill is absorbed by the surviving replica.
+
+use std::io::{BufRead, BufReader};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sextans::backend::{self, PreparedSpmm, SpmmBackend};
+use sextans::net::{worker::rpc, Op};
+use sextans::prop::assert_allclose;
+use sextans::sched::preprocess;
+use sextans::sparse::{gen, rng::Rng, Coo};
+
+/// One `sextans worker` child process, killed on drop so a failing test
+/// never leaks listeners.
+struct WorkerProc {
+    child: Child,
+    addr: String,
+}
+
+impl WorkerProc {
+    /// Spawn `sextans worker --addr 127.0.0.1:0 --backend <spec>` and
+    /// block until it prints its readiness line, returning the bound
+    /// address scraped from it.
+    fn spawn(backend_spec: &str) -> WorkerProc {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_sextans"))
+            .args(["worker", "--addr", "127.0.0.1:0", "--backend", backend_spec])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn sextans worker");
+        let stdout = child.stdout.take().expect("worker stdout is piped");
+        let mut lines = BufReader::new(stdout).lines();
+        let addr = loop {
+            let line = lines
+                .next()
+                .expect("worker exited before its readiness line")
+                .expect("read worker stdout");
+            if let Some(rest) = line.strip_prefix("worker listening on ") {
+                break rest
+                    .split_whitespace()
+                    .next()
+                    .expect("address token after 'listening on'")
+                    .to_string();
+            }
+        };
+        // Keep draining stdout so the worker can never block on a full
+        // pipe once the test stops reading.
+        std::thread::spawn(move || for _line in lines {});
+        WorkerProc { child, addr }
+    }
+
+    /// Hard-kill the process — the "host died mid-stream" failure mode.
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+
+    /// Graceful stop: shutdown RPC, bounded wait, then kill as a last
+    /// resort so the test never hangs on a wedged worker.
+    fn shutdown(&mut self) {
+        if let Ok(mut s) = TcpStream::connect(&self.addr) {
+            let _ = s.set_read_timeout(Some(Duration::from_secs(5)));
+            let _ = s.set_write_timeout(Some(Duration::from_secs(5)));
+            let _ = rpc(&mut s, Op::Shutdown, &[]);
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while Instant::now() < deadline {
+            match self.child.try_wait() {
+                Ok(Some(_)) => return,
+                Ok(None) => std::thread::sleep(Duration::from_millis(20)),
+                Err(_) => break,
+            }
+        }
+        self.kill();
+    }
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// A matrix whose SpMM result is schedule-invariant: exactly one
+/// non-zero per row per K0 window, so each row accumulates one product
+/// per window in window-ascending order no matter how slots are
+/// scheduled or rows are sharded — local and distributed execution are
+/// bit-identical, not merely allclose.
+fn schedule_invariant(m: usize, k: usize, k0: usize, seed: u64) -> Coo {
+    let mut rng = Rng::new(seed);
+    let windows = k.div_ceil(k0);
+    let mut rows = Vec::with_capacity(m * windows);
+    let mut cols = Vec::with_capacity(m * windows);
+    let mut vals = Vec::with_capacity(m * windows);
+    for r in 0..m {
+        for w in 0..windows {
+            let lo = w * k0;
+            let hi = k.min(lo + k0);
+            rows.push(r as u32);
+            cols.push((lo + rng.index(hi - lo)) as u32);
+            vals.push(rng.normal());
+        }
+    }
+    Coo::new(m, k, rows, cols, vals).unwrap()
+}
+
+#[test]
+fn remote_over_two_worker_processes_matches_functional_bit_for_bit() {
+    let mut w1 = WorkerProc::spawn("functional");
+    let mut w2 = WorkerProc::spawn("functional");
+    let spec = format!("remote:{},{}", w1.addr, w2.addr);
+
+    // Bit-identity on the schedule-invariant construction.
+    let k0 = 8;
+    let coo = schedule_invariant(48, 32, k0, 0xD157);
+    let image = Arc::new(preprocess(&coo, 4, k0, 4));
+    let n = 5;
+    let mut rng = Rng::new(0xD157 ^ 0xB0B);
+    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+    let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+
+    let functional =
+        backend::create("functional").unwrap().prepare(Arc::clone(&image)).unwrap();
+    let remote = backend::create(&spec).unwrap().prepare(Arc::clone(&image)).unwrap();
+    for (alpha, beta) in [(1.0f32, 0.0f32), (2.5, -0.5)] {
+        let mut want = c0.clone();
+        functional.execute(&b, &mut want, n, alpha, beta).unwrap();
+        let mut got = c0.clone();
+        let report = remote.execute_with_report(&b, &mut got, n, alpha, beta).unwrap();
+        assert_eq!(
+            got, want,
+            "remote must be bit-identical to functional at alpha={alpha}, beta={beta}"
+        );
+        let stats = report.remote.expect("remote handle reports fleet stats");
+        assert_eq!(stats.workers, 2);
+        assert_eq!(stats.live_workers, 2);
+        assert_eq!(stats.retries, 0, "healthy fleet must not retry");
+        assert_eq!(stats.replaced, 0);
+        assert!(stats.placements >= 2, "both shards placed: {stats:?}");
+    }
+
+    // Allclose on a general random matrix (schedules may differ).
+    let coo = gen::random_uniform(60, 44, 0.15, &mut rng);
+    let image = Arc::new(preprocess(&coo, 4, 12, 4));
+    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+    let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+    let functional =
+        backend::create("functional").unwrap().prepare(Arc::clone(&image)).unwrap();
+    let remote = backend::create(&spec).unwrap().prepare(Arc::clone(&image)).unwrap();
+    let mut want = c0.clone();
+    functional.execute(&b, &mut want, n, 1.5, -0.25).unwrap();
+    let mut got = c0.clone();
+    remote.execute(&b, &mut got, n, 1.5, -0.25).unwrap();
+    assert_allclose(&got, &want, 2e-4, 2e-4).unwrap();
+
+    w1.shutdown();
+    w2.shutdown();
+}
+
+#[test]
+fn killing_a_worker_mid_stream_replaces_the_shard_and_keeps_the_answer() {
+    let mut survivor = WorkerProc::spawn("functional");
+    let mut doomed = WorkerProc::spawn("functional");
+    let spec = format!("remote:{},{}", survivor.addr, doomed.addr);
+
+    let mut rng = Rng::new(0xFA11);
+    let coo = gen::random_uniform(64, 40, 0.2, &mut rng);
+    let image = Arc::new(preprocess(&coo, 4, 12, 4));
+    let n = 4;
+    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+
+    let functional =
+        backend::create("functional").unwrap().prepare(Arc::clone(&image)).unwrap();
+    let mut want = vec![0.0f32; coo.m * n];
+    functional.execute(&b, &mut want, n, 1.0, 0.0).unwrap();
+
+    let remote = backend::create(&spec).unwrap().prepare(Arc::clone(&image)).unwrap();
+    // Healthy first call: both workers hold a shard, nothing retries.
+    let mut c = vec![0.0f32; coo.m * n];
+    let report = remote.execute_with_report(&b, &mut c, n, 1.0, 0.0).unwrap();
+    let stats = report.remote.expect("remote stats");
+    assert_eq!((stats.retries, stats.replaced), (0, 0), "{stats:?}");
+    assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
+
+    // Kill one worker process outright: its pooled connections die, the
+    // next execute must mark it dead, re-place its shard on the
+    // survivor (re-preparing it there), retry, and still be right.
+    doomed.kill();
+    let mut c = vec![0.0f32; coo.m * n];
+    let report = remote.execute_with_report(&b, &mut c, n, 1.0, 0.0).unwrap();
+    let stats = report.remote.expect("remote stats");
+    assert!(stats.retries > 0, "a killed worker must surface as retries: {stats:?}");
+    assert!(stats.replaced > 0, "its shard must be re-placed: {stats:?}");
+    assert_eq!(stats.live_workers, 1, "{stats:?}");
+    assert_allclose(&c, &want, 2e-4, 2e-4)
+        .expect("failover answer must be complete — no zeroed rows");
+
+    // The healed placement serves follow-ups without further retries.
+    let mut c = vec![0.0f32; coo.m * n];
+    let report = remote.execute_with_report(&b, &mut c, n, 1.0, 0.0).unwrap();
+    let stats = report.remote.expect("remote stats");
+    assert_eq!((stats.retries, stats.replaced), (0, 0), "healed: {stats:?}");
+    assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
+
+    survivor.shutdown();
+}
+
+#[test]
+fn replicated_placement_absorbs_a_kill_without_replacing() {
+    let mut w1 = WorkerProc::spawn("functional");
+    let mut w2 = WorkerProc::spawn("functional");
+    let spec = format!("remote:{},{},replicas=2", w1.addr, w2.addr);
+
+    let mut rng = Rng::new(0x2E91);
+    let coo = gen::random_uniform(52, 36, 0.18, &mut rng);
+    let image = Arc::new(preprocess(&coo, 4, 12, 4));
+    let n = 3;
+    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+
+    let functional =
+        backend::create("functional").unwrap().prepare(Arc::clone(&image)).unwrap();
+    let mut want = vec![0.0f32; coo.m * n];
+    functional.execute(&b, &mut want, n, 1.0, 0.0).unwrap();
+
+    let remote = backend::create(&spec).unwrap().prepare(Arc::clone(&image)).unwrap();
+    let mut c = vec![0.0f32; coo.m * n];
+    let report = remote.execute_with_report(&b, &mut c, n, 1.0, 0.0).unwrap();
+    let stats = report.remote.expect("remote stats");
+    assert_eq!(stats.replicas, 2);
+    assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
+
+    // Every shard already has a live replica, so a kill costs retries
+    // but the answer never needs a fresh placement to be correct.
+    w2.kill();
+    let mut c = vec![0.0f32; coo.m * n];
+    let report = remote.execute_with_report(&b, &mut c, n, 1.0, 0.0).unwrap();
+    let stats = report.remote.expect("remote stats");
+    assert!(stats.retries > 0, "{stats:?}");
+    assert_eq!(stats.live_workers, 1, "{stats:?}");
+    assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
+
+    w1.shutdown();
+}
