@@ -347,7 +347,7 @@ fn worker_loop(
                 let mut root = SpanRecord {
                     trace_id: ctx.trace_id,
                     span_id: ctx.root_id,
-                    parent_id: None,
+                    parent_id: ctx.root_parent,
                     name: "request",
                     start_ns: instant_ns(seg.submitted),
                     end_ns: now_ns(),

@@ -4,6 +4,14 @@
 //! Requests flow through four focused stages, each its own module:
 //!
 //! ```text
+//!  ┌────────────────────────────────────────────────────────────────┐
+//!  │ 0 network front door (optional): serve_net::FrontDoor          │
+//!  │   `sextans serve --listen` — framed TCP, chunked register /    │
+//!  │   column-block panel streaming, typed Shed frames, and a       │
+//!  │   `net.frontend` span parenting each request's span tree       │
+//!  └────────────────────────────────────────────────────────────────┘
+//!     │ submit() per Await-able ticket
+//!     ▼
 //!  submit()                                                response
 //!     │                                                        ▲
 //!     ▼                                                        │
@@ -61,6 +69,13 @@
 //!   off dead workers, and reports placement/retry/re-place counters that
 //!   land in [`metrics::Summary`] and as `net.rpc` child spans under each
 //!   request's `exec` span.
+//! * **network front door** (optional) — [`crate::serve_net`] puts a
+//!   socket in front of `submit()`: `sextans serve --listen` accepts
+//!   framed TCP clients, stages chunked image registration and
+//!   column-block panel uploads, and forwards each completed submit into
+//!   stage 1 with a `net.frontend` span pushed as the thread-local
+//!   parent, so admission sheds come back to the client as typed `Shed`
+//!   frames and the span tree covers socket to executor.
 //!
 //! Every stage is instrumented twice over. Aggregates flow into
 //! [`metrics::Recorder`]'s fixed-memory streaming histograms (per-stage,

@@ -24,7 +24,9 @@ use super::metrics::{ConcurrencyGauge, Recorder, RequestTiming, Summary};
 use super::residency::{ReshardContext, ReshardPolicy, ResidencyManager, ResidencyPolicy};
 use crate::backend::{self, BackendError, SpmmBackend};
 use crate::sched::ScheduledMatrix;
-use crate::telemetry::trace::{next_span_id, next_trace_id, SpanRecord, TelemetrySink};
+use crate::telemetry::trace::{
+    current_span_context, next_span_id, next_trace_id, SpanRecord, TelemetrySink,
+};
 
 pub use super::batcher::BatchPolicy;
 pub use super::residency::PREPARED_CACHE_ENTRIES;
@@ -105,11 +107,15 @@ impl std::fmt::Debug for PipelineConfig {
 /// Pre-allocated trace ids carried alongside one request through every
 /// pipeline stage. The root `request` span id is reserved up front so
 /// stage spans can reference their parent before it is emitted (the root
-/// itself is written by dispatch when the response is sent).
+/// itself is written by dispatch when the response is sent). When the
+/// submitting thread carries a span context (the network front door's
+/// `net.frontend` span), the request joins that trace and the root span
+/// parents under it instead of starting a fresh trace.
 #[derive(Clone, Copy, Debug)]
 pub(crate) struct TraceCtx {
     pub(crate) trace_id: u64,
     pub(crate) root_id: u64,
+    pub(crate) root_parent: Option<u64>,
 }
 
 /// The serving coordinator facade.
@@ -256,9 +262,17 @@ impl Server {
     /// [`Summary::rejected`]).
     pub fn submit(&self, req: SpmmRequest) -> Receiver<SpmmResponse> {
         let submitted = Instant::now();
-        let trace = self.sink.as_ref().map(|_| TraceCtx {
-            trace_id: next_trace_id(),
-            root_id: next_span_id(),
+        let trace = self.sink.as_ref().map(|_| match current_span_context() {
+            Some((trace_id, parent)) => TraceCtx {
+                trace_id,
+                root_id: next_span_id(),
+                root_parent: Some(parent),
+            },
+            None => TraceCtx {
+                trace_id: next_trace_id(),
+                root_id: next_span_id(),
+                root_parent: None,
+            },
         });
         let (tx, rx) = mpsc::channel();
         let sm = &req.image.image;
@@ -359,6 +373,16 @@ impl Server {
     /// Convenience: submit and wait.
     pub fn call(&self, req: SpmmRequest) -> SpmmResponse {
         self.submit(req).recv().expect("worker dropped response")
+    }
+
+    /// Live metrics snapshot without stopping the pipeline: the
+    /// recorder's summary as of now, with the execution-concurrency
+    /// high-water mark folded in from the live gauge (it is otherwise
+    /// only recorded at shutdown).
+    pub fn snapshot(&self) -> Summary {
+        let mut s = self.recorder.lock().unwrap().summary();
+        s.exec_concurrency_peak = s.exec_concurrency_peak.max(self.exec_gauge.peak());
+        s
     }
 
     /// Drain and stop; returns the serving summary.

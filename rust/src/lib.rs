@@ -36,6 +36,7 @@
 //! | [`shard`] | §3.3 scaled up | sharded multi-accelerator execution: nnz-balanced row partitioning, resident [`shard::ShardExecutor`] pools of prepared inner handles (full or active-subset execution, `&self` with pooled gather blocks), `sharded:<S>:<inner>` composite backend |
 //! | [`net`] | §3.3 scaled out | distributed worker fleet: versioned length-prefixed wire codec for scheduled images, `sextans worker` shard servers, LPT/replicated shard placement, and the `remote:<addr>[,addr...]` backend proxying execution over pooled connections with retry + re-place |
 //! | [`runtime`] | — | PJRT client wrapping the AOT HLO artifacts (stubbed unless both `pjrt` and `xla` features are on) |
+//! | [`serve_net`] | — | network front door: framed client protocol (chunked image registration, column-block panel streaming, typed shed frames), `sextans serve --listen`, the [`serve_net::FrontClient`] library, and the open-loop `sextans loadgen` capacity harness |
 //! | [`coordinator`] | — | adaptive SpMM serving pipeline in four stages — admission (backpressure gate + per-image fairness quota), batcher (merge window + shard-aware routing), dispatch (worker pool + thread budgets + stage timings + concurrent execution over shared `Arc<dyn PreparedSpmm>` handles), residency (byte-sized cache of shared lock-free handles + re-shard-on-skew) — behind the [`coordinator::Server`] facade |
 //! | [`metrics`] | §4.2 | GFLOP/s, bandwidth utilization, energy efficiency, geomean/CDF |
 //! | [`telemetry`] | §4.2 methodology | observability: per-request span traces (sink threaded through the coordinator via `PipelineConfig`), fixed-memory streaming latency histograms behind `Summary`, hand-rolled JSON, and the persisted `BENCH_*.json` perf-trajectory schema with regression compare |
@@ -54,6 +55,7 @@ pub mod prop;
 pub mod report;
 pub mod runtime;
 pub mod sched;
+pub mod serve_net;
 pub mod shard;
 pub mod sparse;
 pub mod telemetry;

@@ -7,13 +7,20 @@
 //! sextans gen   --m M --k K --density D --out file.mtx [--seed S]
 //! sextans serve [--requests R] [--workers W] [--backend NAME] [--shards S]
 //!               [--trace-json FILE] [--metrics-json FILE]
+//!               [--listen HOST:PORT] [--max-connections C]
+//! sextans loadgen [--addr HOST:PORT] [--rate R] [--duration S]
+//!               [--mix power-law|banded|uniform] [--images I] [--hot F]
+//!               [--name NAME] [--out DIR] [--metrics-json FILE]
+//!               [--baseline FILE] [--tolerance T] [--strict] [--drain-server]
 //! sextans bench [--full] [--name NAME] [--out DIR] [--timestamp TS]
 //!               [--backend NAME] [--baseline FILE] [--tolerance T] [--strict]
+//!               [--write-baseline]
 //! sextans trace [<catalog-matrix>] [--requests R] [--workers W]
 //!               [--backend NAME] [--out FILE]
 //! sextans worker [--addr HOST:PORT] [--backend NAME]
 //!                [--read-timeout-ms T] [--write-timeout-ms T]
-//! sextans backends
+//!                [--max-resident-mb MB]
+//! sextans backends [--probe HOST:PORT]
 //! sextans info
 //! ```
 //!
@@ -45,6 +52,9 @@ use sextans::net::{self, WorkerConfig};
 use sextans::perfmodel::Platform;
 use sextans::report::{self, experiments};
 use sextans::sched::preprocess;
+use sextans::serve_net::{
+    ClientError, FrontClient, FrontDoor, FrontDoorConfig, LoadgenOptions, Mix, ShedReason,
+};
 use sextans::shard::{ShardExecutor, ShardedMatrix};
 use sextans::sparse::catalog::{self, Scale};
 use sextans::sparse::{gen, mm_io, rng::Rng, Coo};
@@ -58,14 +68,17 @@ fn main() {
         "run" => cmd_run(&cli),
         "gen" => cmd_gen(&cli),
         "serve" => cmd_serve(&cli),
+        "loadgen" => cmd_loadgen(&cli),
         "bench" => cmd_bench(&cli),
         "trace" => cmd_trace(&cli),
         "worker" => cmd_worker(&cli),
-        "backends" => cmd_backends(),
+        "backends" => cmd_backends(&cli),
         "info" | "" => cmd_info(),
         other => {
             eprintln!("unknown command {other:?}");
-            eprintln!("commands: repro, run, gen, serve, bench, trace, worker, backends, info");
+            eprintln!(
+                "commands: repro, run, gen, serve, loadgen, bench, trace, worker, backends, info"
+            );
             std::process::exit(2);
         }
     };
@@ -321,7 +334,6 @@ fn cmd_gen(cli: &Cli) -> Result<()> {
 /// request's span tree as JSON; `--metrics-json FILE` writes the shutdown
 /// summary (per-stage/per-backend/per-image p50/p95/p99 included).
 fn cmd_serve(cli: &Cli) -> Result<()> {
-    let requests = cli.get_usize("requests", 64);
     let workers = cli.get_usize("workers", 2);
     let shards = cli.get_usize("shards", 1);
     let base_spec = cli.get("backend").unwrap_or("native").to_string();
@@ -331,16 +343,6 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         base_spec
     };
     let backend_spec = backend_spec.as_str();
-    let mut rng = Rng::new(cli.get_u64("seed", 3));
-    let coo = gen::rmat(4096, 40_000, 0.57, 0.19, 0.19, &mut rng);
-    let cfg = AcceleratorConfig::sextans_u280();
-    let image = Arc::new(preprocess(&coo, cfg.p(), cfg.k0, cfg.d));
-    println!(
-        "serving matrix {}x{} nnz {} on backend {backend_spec:?}",
-        coo.m,
-        coo.k,
-        coo.nnz()
-    );
 
     let collector = cli.get("trace-json").map(|_| Arc::new(TraceCollector::new()));
     let defaults = PipelineConfig::default();
@@ -384,6 +386,52 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         net::set_telemetry_sink(Some(Arc::clone(c) as Arc<dyn TelemetrySink>));
     }
 
+    // Network mode: bind the front door and serve until a Shutdown frame.
+    if let Some(listen) = cli.get("listen") {
+        use std::io::Write as _;
+        let fd_config = FrontDoorConfig {
+            backend_spec: backend_spec.to_string(),
+            workers,
+            pipeline: config,
+            read_timeout: std::time::Duration::from_millis(
+                cli.get_u64("read-timeout-ms", 30_000),
+            ),
+            write_timeout: std::time::Duration::from_millis(
+                cli.get_u64("write-timeout-ms", 30_000),
+            ),
+            max_connections: cli.get_usize("max-connections", 256),
+            await_timeout: std::time::Duration::from_millis(
+                cli.get_u64("await-timeout-ms", 60_000),
+            ),
+        };
+        let door = FrontDoor::bind(listen, &fd_config)?;
+        // The "listening on" line is the readiness handshake: tests and
+        // the CI smoke leg parse the port out of it, so flush it.
+        println!(
+            "serve listening on {} (backend {:?})",
+            door.local_addr()?,
+            fd_config.backend_spec
+        );
+        std::io::stdout().flush()?;
+        let s = door.run(&fd_config)?;
+        net::set_telemetry_sink(None);
+        println!("front door shut down");
+        print_serve_summary(cli, &s, &collector)?;
+        return Ok(());
+    }
+
+    // Demo mode: self-generated requests against one R-MAT matrix.
+    let requests = cli.get_usize("requests", 64);
+    let mut rng = Rng::new(cli.get_u64("seed", 3));
+    let coo = gen::rmat(4096, 40_000, 0.57, 0.19, 0.19, &mut rng);
+    let cfg = AcceleratorConfig::sextans_u280();
+    let image = Arc::new(preprocess(&coo, cfg.p(), cfg.k0, cfg.d));
+    println!(
+        "serving matrix {}x{} nnz {} on backend {backend_spec:?}",
+        coo.m,
+        coo.k,
+        coo.nnz()
+    );
     let server = Server::start_backend_with(workers, config, backend_spec)?;
     let handle = server.register(image);
     let mut rxs = Vec::new();
@@ -404,6 +452,16 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     }
     let s = server.shutdown();
     net::set_telemetry_sink(None);
+    print_serve_summary(cli, &s, &collector)
+}
+
+/// Print one serving [`Summary`] (shared by `serve` demo and `--listen`
+/// modes) and honor `--metrics-json` / `--trace-json`.
+fn print_serve_summary(
+    cli: &Cli,
+    s: &sextans::coordinator::metrics::Summary,
+    collector: &Option<Arc<TraceCollector>>,
+) -> Result<()> {
     println!(
         "served {} requests in {} batches (mean batch {:.1}); p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms",
         s.requests,
@@ -479,13 +537,122 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         std::fs::write(path, s.to_value().to_json_pretty())?;
         println!("  metrics summary written to {path}");
     }
-    if let (Some(path), Some(collector)) = (cli.get("trace-json"), &collector) {
+    if let (Some(path), Some(collector)) = (cli.get("trace-json"), collector.as_ref()) {
         std::fs::write(path, collector.to_value().to_json_pretty())?;
         println!(
             "  {} spans across {} traces written to {path}",
             collector.spans().len(),
             collector.trace_ids().len()
         );
+    }
+    Ok(())
+}
+
+/// `loadgen`: open-loop load generator against a front door started with
+/// `serve --listen`. Arrivals are scheduled on the clock at `--rate`
+/// req/s for `--duration` seconds — never gated on responses, so an
+/// overloaded server shows up as sheds and latency, not a slower
+/// generator. Requests spread over `--images` matrices drawn from
+/// `--mix` (`power-law`, `banded`, `uniform`); `--hot F` aims an extra
+/// fraction F of requests at image 0 to model one hot tenant tripping
+/// the per-image quota. Reports server-side per-stage p50/p95/p99
+/// (queue/batch/prepare/exec) plus client end-to-end, typed shed counts,
+/// and the client-side concurrency peak, and persists
+/// `BENCH_serve_<name>.json` in the schema-v1 perf trajectory.
+/// `--metrics-json FILE` fetches the server's live summary after the
+/// run; `--baseline`/`--tolerance`/`--strict` gate against a previous
+/// snapshot; `--drain-server` drains the server, verifies post-drain
+/// work sheds with a typed `Draining` frame, and shuts it down.
+fn cmd_loadgen(cli: &Cli) -> Result<()> {
+    let mix_name = cli.get("mix").unwrap_or("power-law");
+    let mix = Mix::parse(mix_name)
+        .ok_or_else(|| anyhow!("unknown mix {mix_name:?} (power-law|banded|uniform)"))?;
+    let opts = LoadgenOptions {
+        addr: cli.get("addr").unwrap_or("127.0.0.1:7700").to_string(),
+        rate: f64::from(cli.get_f32("rate", 50.0)),
+        duration: std::time::Duration::from_secs_f64(f64::from(cli.get_f32("duration", 2.0))),
+        mix,
+        images: cli.get_usize("images", 4).max(1),
+        hot: f64::from(cli.get_f32("hot", 0.0)),
+        m: cli.get_usize("m", 256),
+        k: cli.get_usize("k", 256),
+        n: cli.get_usize("n", 16),
+        nnz: cli.get_usize("nnz", 4096),
+        seed: cli.get_u64("seed", 0x5EED),
+        col_block: cli.get_usize("col-block", 0),
+        senders: cli.get_usize("senders", 8).max(1),
+        timeout: std::time::Duration::from_millis(cli.get_u64("timeout-ms", 30_000)),
+    };
+    println!(
+        "loadgen: {} req/s for {:.1}s against {} ({} {} image(s), hot fraction {:.2})",
+        opts.rate,
+        opts.duration.as_secs_f64(),
+        opts.addr,
+        opts.images,
+        mix.name(),
+        opts.hot
+    );
+    let report = sextans::serve_net::loadgen::run(&opts).map_err(|e| anyhow!("loadgen: {e}"))?;
+    print!("{}", report.render());
+
+    let name = cli.get("name").unwrap_or("smoke").to_string();
+    let timestamp = cli.get("timestamp").unwrap_or("unknown");
+    let out_dir = PathBuf::from(cli.get("out").unwrap_or("."));
+    let record = report.to_bench_record(&format!("serve_{name}"), timestamp);
+    let path = out_dir.join(format!("BENCH_serve_{name}.json"));
+    record.write(&path)?;
+    println!("wrote {}", path.display());
+
+    if let Some(path) = cli.get("metrics-json") {
+        let mut client = FrontClient::connect(&opts.addr, opts.timeout)
+            .map_err(|e| anyhow!("metrics fetch: {e}"))?;
+        let json = client.metrics_json().map_err(|e| anyhow!("metrics fetch: {e}"))?;
+        std::fs::write(path, json)?;
+        println!("server metrics written to {path}");
+    }
+
+    if let Some(base_path) = cli.get("baseline") {
+        let baseline = BenchRecord::read(Path::new(base_path)).map_err(|e| anyhow!(e))?;
+        if baseline.is_zeroed() {
+            eprintln!(
+                "WARNING: baseline {base_path} is a zeroed placeholder — comparisons \
+                 against it can only ever pass."
+            );
+            if cli.flag("strict") {
+                bail!("--strict refuses the zeroed placeholder baseline {base_path}");
+            }
+        }
+        let tolerance = f64::from(cli.get_f32("tolerance", 0.15));
+        let regressions = compare(&baseline, &record, tolerance);
+        if regressions.is_empty() {
+            println!("no regressions vs {base_path} (tolerance {:.0}%)", tolerance * 100.0);
+        } else {
+            for r in &regressions {
+                println!("regression: {r}");
+            }
+            if cli.flag("strict") {
+                bail!("{} regression(s) vs {base_path}", regressions.len());
+            }
+        }
+    }
+
+    if cli.flag("drain-server") {
+        let mut client = FrontClient::connect(&opts.addr, opts.timeout)
+            .map_err(|e| anyhow!("drain: {e}"))?;
+        client.drain().map_err(|e| anyhow!("drain: {e}"))?;
+        // A draining front door must shed new work with a typed frame,
+        // not accept it and not hang — verify before shutting down.
+        let coo = gen::random_uniform(16, 16, 0.1, &mut Rng::new(1));
+        let image = sextans::serve_net::loadgen::schedule_default(&coo);
+        match client.register_image(&image, 1 << 16) {
+            Err(ClientError::Shed { reason: ShedReason::Draining, .. }) => {
+                println!("drain verified: post-drain register shed with a typed Draining frame");
+            }
+            Ok(_) => bail!("drain verification failed: post-drain register was accepted"),
+            Err(e) => bail!("drain verification failed: expected a Draining shed, got {e}"),
+        }
+        client.shutdown_server().map_err(|e| anyhow!("shutdown: {e}"))?;
+        println!("server drained and shut down");
     }
     Ok(())
 }
@@ -656,6 +823,20 @@ fn cmd_bench(cli: &Cli) -> Result<()> {
     record.write(&path)?;
     println!("\nwrote {}", path.display());
 
+    if cli.flag("write-baseline") {
+        // Write-then-rename so a crash mid-write can never leave a
+        // truncated baseline gating future runs.
+        let baseline_path = out_dir.join("BENCH_baseline.json");
+        let tmp = out_dir.join("BENCH_baseline.json.tmp");
+        record.write(&tmp)?;
+        std::fs::rename(&tmp, &baseline_path)?;
+        println!(
+            "baseline {} replaced from this run (anchored at git rev {})",
+            baseline_path.display(),
+            record.git_rev
+        );
+    }
+
     if let Some(base_path) = cli.get("baseline") {
         let baseline = BenchRecord::read(Path::new(base_path)).map_err(|e| anyhow!(e))?;
         if baseline.is_zeroed() {
@@ -755,7 +936,9 @@ fn cmd_trace(cli: &Cli) -> Result<()> {
 /// wire protocol until a shutdown RPC arrives. `--backend` picks the
 /// local engine images are prepared through (default `native`);
 /// `--read-timeout-ms`/`--write-timeout-ms` bound how long one stalled
-/// peer can pin a connection thread (default 10000).
+/// peer can pin a connection thread (default 10000);
+/// `--max-resident-mb` caps prepared-image residency (prepares over the
+/// budget are refused with a typed error; 0 = unbounded).
 fn cmd_worker(cli: &Cli) -> Result<()> {
     use std::io::Write as _;
     let addr = cli.get("addr").unwrap_or("127.0.0.1:0");
@@ -763,6 +946,16 @@ fn cmd_worker(cli: &Cli) -> Result<()> {
         backend_spec: cli.get("backend").unwrap_or("native").to_string(),
         read_timeout: std::time::Duration::from_millis(cli.get_u64("read-timeout-ms", 10_000)),
         write_timeout: std::time::Duration::from_millis(cli.get_u64("write-timeout-ms", 10_000)),
+        // `--max-resident-mb` bounds prepared-image residency with the
+        // same policy struct the coordinator's cache uses; prepares over
+        // budget come back as typed errors (0 = unbounded).
+        residency: match cli.get_u64("max-resident-mb", 0) {
+            0 => None,
+            mb => Some(ResidencyPolicy {
+                max_resident_bytes: mb * 1024 * 1024,
+                scratch_idle: None,
+            }),
+        },
     };
     let worker = net::Worker::bind(addr, &config)?;
     // The "listening on" line is the readiness handshake: tests and the
@@ -782,8 +975,11 @@ fn cmd_worker(cli: &Cli) -> Result<()> {
 /// this build, and the effective thread budget its auto-sized spec
 /// resolves to on this machine ([`backend::apply_thread_budget`] with all
 /// cores). For the sharded composite the resolved inner engine is printed
-/// too, since that is what actually executes.
-fn cmd_backends() -> Result<()> {
+/// too, since that is what actually executes. `--probe HOST:PORT`
+/// additionally probes a running front door over loopback and reports
+/// whether a backend spec is reachable through it (which spec it serves,
+/// drain state, load counters).
+fn cmd_backends(cli: &Cli) -> Result<()> {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!(
         "{:<15} {:<12} {:>7} {:>6}  {:<13} {:<10} {:<22} description",
@@ -851,6 +1047,25 @@ fn cmd_backends() -> Result<()> {
          its workers. The remote fleet is `sextans worker` processes; its \
          availability probe pings the listed addresses."
     );
+    if let Some(addr) = cli.get("probe") {
+        let timeout = std::time::Duration::from_millis(cli.get_u64("probe-timeout-ms", 2_000));
+        match FrontClient::connect(addr, timeout).and_then(|mut c| c.status()) {
+            Ok(st) => {
+                println!(
+                    "\nfront door {addr}: reachable — serving backend {:?}{}, {} image(s) \
+                     registered, {} ticket(s) open, {} request(s) completed",
+                    st.backend_spec,
+                    if st.draining { " (draining)" } else { "" },
+                    st.images,
+                    st.open_tickets,
+                    st.completed
+                );
+            }
+            Err(e) => {
+                println!("\nfront door {addr}: unreachable ({e})");
+            }
+        }
+    }
     Ok(())
 }
 

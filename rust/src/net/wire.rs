@@ -64,10 +64,52 @@ pub enum Op {
     /// Ask the worker process to exit after replying (used by tests/CI
     /// for a clean shutdown instead of a kill).
     Shutdown = 6,
+    /// Front door: open a streamed image registration. Payload: the total
+    /// encoded-image byte count. Reply: a `u64` upload token.
+    RegisterBegin = 10,
+    /// Front door: one chunk of a streamed registration (token, offset,
+    /// raw image bytes). Reply: empty.
+    RegisterChunk = 11,
+    /// Front door: finish a registration (token); the server decodes and
+    /// registers the image. Reply: image id + M + K.
+    RegisterEnd = 12,
+    /// Front door: open a submit (image id, N, alpha, beta). The B/C
+    /// panels follow in column-block chunks. Reply: a `u64` ticket.
+    Submit = 13,
+    /// Front door: one column block of the B and C panels for a pending
+    /// submit. Reply: empty.
+    SubmitChunk = 14,
+    /// Front door: all panels uploaded — enter the serving pipeline.
+    /// Reply: empty on admission; an [`Op::Shed`] frame when the
+    /// admission gate refuses the request.
+    SubmitEnd = 15,
+    /// Front door: non-blocking completion probe for a ticket. Reply: one
+    /// byte, 1 when the response is ready.
+    Poll = 16,
+    /// Front door: block until a ticket completes, then stream the C
+    /// panel back as [`Op::Chunk`] frames followed by a closing
+    /// [`Op::Ok`] frame carrying the per-stage timing.
+    Await = 17,
+    /// Front door: live serving-metrics snapshot. Reply: the summary as
+    /// JSON bytes ([`crate::coordinator::metrics::Summary`] layout).
+    Metrics = 18,
+    /// Front door: stop admitting new submits; in-flight requests finish
+    /// and new ones shed with a typed [`Op::Shed`] frame.
+    Drain = 19,
+    /// Front door: liveness/identity probe — which backend spec this
+    /// front door serves, whether it is draining, and its load counters.
+    FrontStatus = 20,
     /// Success reply; payload layout depends on the request opcode.
     Ok = 100,
     /// Failure reply; payload is a UTF-8 error message.
     Err = 101,
+    /// Streamed-reply element: one column block of a result panel; the
+    /// closing [`Op::Ok`] frame follows the last chunk.
+    Chunk = 102,
+    /// Typed load-shed reply: a one-byte reason code
+    /// ([`crate::serve_net::ShedReason`]) plus a UTF-8 message. Distinct
+    /// from [`Op::Err`] so clients can tell backpressure from failure.
+    Shed = 103,
 }
 
 impl Op {
@@ -80,8 +122,21 @@ impl Op {
             4 => Op::Stats,
             5 => Op::Evict,
             6 => Op::Shutdown,
+            10 => Op::RegisterBegin,
+            11 => Op::RegisterChunk,
+            12 => Op::RegisterEnd,
+            13 => Op::Submit,
+            14 => Op::SubmitChunk,
+            15 => Op::SubmitEnd,
+            16 => Op::Poll,
+            17 => Op::Await,
+            18 => Op::Metrics,
+            19 => Op::Drain,
+            20 => Op::FrontStatus,
             100 => Op::Ok,
             101 => Op::Err,
+            102 => Op::Chunk,
+            103 => Op::Shed,
             other => return Err(WireError::BadOpcode(other)),
         })
     }
@@ -252,7 +307,8 @@ impl<'a> ByteReader<'a> {
         Ok(())
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+    /// Read `n` raw bytes (bounds-checked, no copy).
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
         if self.remaining() < n {
             return Err(WireError::Truncated { needed: n, have: self.remaining() });
         }

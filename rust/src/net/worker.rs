@@ -32,6 +32,7 @@ use super::wire::{
     encode_stats_ok, ByteReader, ByteWriter, Op, WireError, WorkerStats,
 };
 use crate::backend::{self, PreparedSpmm};
+use crate::coordinator::ResidencyPolicy;
 
 /// Worker process configuration.
 #[derive(Clone, Debug)]
@@ -43,6 +44,13 @@ pub struct WorkerConfig {
     pub read_timeout: Duration,
     /// Per-connection socket write timeout.
     pub write_timeout: Duration,
+    /// Optional residency byte budget, sharing [`ResidencyPolicy`] with
+    /// the coordinator's in-process cache (`sextans worker
+    /// --max-resident-mb`). A prepare that would push the worker's
+    /// resident bytes past `max_resident_bytes` is refused with a typed
+    /// error — the client sees a [`WireError`], never an OOM-killed
+    /// worker. `None` (the default) leaves residency unbounded.
+    pub residency: Option<ResidencyPolicy>,
 }
 
 impl Default for WorkerConfig {
@@ -51,6 +59,7 @@ impl Default for WorkerConfig {
             backend_spec: "native".to_string(),
             read_timeout: Duration::from_secs(30),
             write_timeout: Duration::from_secs(30),
+            residency: None,
         }
     }
 }
@@ -66,6 +75,8 @@ struct WorkerState {
     resident: Mutex<HashMap<u64, Resident>>,
     executes: AtomicU64,
     shutdown: AtomicBool,
+    /// Residency byte budget ([`WorkerConfig::residency`]), if bounded.
+    max_resident_bytes: Option<u64>,
 }
 
 impl WorkerState {
@@ -101,6 +112,7 @@ impl Worker {
                 resident: Mutex::new(HashMap::new()),
                 executes: AtomicU64::new(0),
                 shutdown: AtomicBool::new(false),
+                max_resident_bytes: config.residency.as_ref().map(|r| r.max_resident_bytes),
             }),
         })
     }
@@ -180,11 +192,26 @@ fn handle_request(op: Op, payload: &[u8], state: &Arc<WorkerState>) -> Result<Ve
             let handle = backend::prepare_send(&state.spec, Arc::new(image))
                 .map_err(|e| format!("prepare: {e}"))?;
             let cost = handle.prepare_cost();
-            state
-                .resident
-                .lock()
-                .unwrap()
-                .insert(id, Resident { handle: Arc::from(handle) });
+            // Budget check and insert under one lock so two concurrent
+            // prepares cannot both squeeze past the limit. Re-preparing
+            // an id replaces the old residency, so its bytes don't count
+            // against the new handle.
+            let mut resident = state.resident.lock().unwrap();
+            if let Some(max) = state.max_resident_bytes {
+                let in_use: u64 = resident
+                    .iter()
+                    .filter(|(rid, _)| **rid != id)
+                    .map(|(_, r)| r.handle.resident_bytes_now())
+                    .sum();
+                if in_use + cost.resident_bytes > max {
+                    return Err(format!(
+                        "prepare: residency budget exceeded: image {id} needs {} B, \
+                         {in_use} of {max} B in use",
+                        cost.resident_bytes
+                    ));
+                }
+            }
+            resident.insert(id, Resident { handle: Arc::from(handle) });
             Ok(encode_cost(&cost))
         }
         Op::Execute => {
@@ -217,7 +244,12 @@ fn handle_request(op: Op, payload: &[u8], state: &Arc<WorkerState>) -> Result<Ve
             state.shutdown.store(true, Ordering::SeqCst);
             Ok(Vec::new())
         }
-        Op::Ok | Op::Err => Err("reply opcode sent as a request".to_string()),
+        Op::Ok | Op::Err | Op::Chunk | Op::Shed => {
+            Err("reply opcode sent as a request".to_string())
+        }
+        // Front-door opcodes (RegisterBegin..FrontStatus) belong to
+        // `serve_net`, not the worker tier.
+        other => Err(format!("{other:?} is a front-door opcode; this is a worker")),
     }
 }
 
@@ -246,6 +278,7 @@ mod tests {
             backend_spec: spec.to_string(),
             read_timeout: Duration::from_secs(5),
             write_timeout: Duration::from_secs(5),
+            residency: None,
         };
         let worker = Worker::bind("127.0.0.1:0", &config).unwrap();
         let addr = worker.local_addr().unwrap();
@@ -319,6 +352,35 @@ mod tests {
             ..WorkerConfig::default()
         };
         assert!(Worker::bind("127.0.0.1:0", &config).is_err());
+    }
+
+    #[test]
+    fn prepare_beyond_residency_budget_is_a_typed_error() {
+        // Native keeps decoded streams resident (>= 12 B/nnz), so any
+        // real matrix busts a 1-byte budget. (Functional would not: it
+        // holds nothing beyond the shared image, resident_bytes = 0.)
+        let config = WorkerConfig {
+            backend_spec: "native:1".to_string(),
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            residency: Some(ResidencyPolicy { max_resident_bytes: 1, scratch_idle: None }),
+        };
+        let worker = Worker::bind("127.0.0.1:0", &config).unwrap();
+        let addr = worker.local_addr().unwrap();
+        let run_config = config.clone();
+        let join = std::thread::spawn(move || worker.run(&run_config).unwrap());
+        let mut conn = connect(addr);
+
+        let mut rng = Rng::new(5);
+        let coo = gen::random_uniform(16, 16, 0.2, &mut rng);
+        let sm = preprocess(&coo, 2, 8, 3);
+        let err =
+            rpc(&mut conn, Op::Prepare, &wire::encode_prepare_req(1, &sm)).unwrap_err();
+        assert!(err.to_string().contains("residency budget exceeded"), "{err}");
+        // The refusal is a reply, not a crash: the worker keeps serving.
+        assert!(rpc(&mut conn, Op::Ping, &[]).unwrap().is_empty());
+        rpc(&mut conn, Op::Shutdown, &[]).unwrap();
+        join.join().unwrap();
     }
 
     #[test]

@@ -1,0 +1,282 @@
+//! Client library for the network front door.
+//!
+//! [`FrontClient`] wraps one connection and speaks the framed protocol:
+//! chunked image registration, chunked submit, streamed result fetch.
+//! Typed sheds ([`Op::Shed`] frames) surface as [`ClientError::Shed`]
+//! with the server's [`ShedReason`] intact — callers (the load generator
+//! above all) can count queue-full vs image-quota vs draining sheds
+//! without string matching.
+
+use std::fmt;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use super::proto::{self, AwaitOk, FrontStatus, ImageInfo, ShedReason};
+use crate::net::wire::{self, Op, WireError};
+use crate::sched::ScheduledMatrix;
+
+/// Everything a front-door call can fail with.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Transport or codec failure.
+    Wire(WireError),
+    /// The server shed the request — load, not failure.
+    Shed {
+        /// Why the server refused.
+        reason: ShedReason,
+        /// Human-readable detail from the server.
+        message: String,
+    },
+    /// The server replied with an error frame (bad request, unknown
+    /// ticket, pipeline failure, ...).
+    Server(String),
+}
+
+impl fmt::Display for ClientError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClientError::Wire(e) => write!(f, "wire: {e}"),
+            ClientError::Shed { reason, message } => write!(f, "shed ({reason}): {message}"),
+            ClientError::Server(msg) => write!(f, "server: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<WireError> for ClientError {
+    fn from(e: WireError) -> ClientError {
+        ClientError::Wire(e)
+    }
+}
+
+/// One completed request as the client sees it: the C panel plus the
+/// per-stage timing the server measured.
+#[derive(Debug)]
+pub struct FrontResponse {
+    /// C_out, row-major M × n (zero-filled when `error` is set).
+    pub c: Vec<f32>,
+    /// Server-side per-stage timing and attribution.
+    pub timing: AwaitOk,
+}
+
+/// One connection to a front door.
+pub struct FrontClient {
+    stream: TcpStream,
+}
+
+impl FrontClient {
+    /// Connect with a connect/read/write timeout.
+    pub fn connect(addr: &str, timeout: Duration) -> Result<FrontClient, ClientError> {
+        let sock_addr = addr
+            .parse()
+            .map_err(|_| ClientError::Server(format!("bad address {addr}")))?;
+        let stream = TcpStream::connect_timeout(&sock_addr, timeout)
+            .map_err(|e| ClientError::Wire(WireError::from(e)))?;
+        let _ = stream.set_read_timeout(Some(timeout));
+        let _ = stream.set_write_timeout(Some(timeout));
+        let _ = stream.set_nodelay(true);
+        Ok(FrontClient { stream })
+    }
+
+    /// One request, one reply frame; Err and Shed frames become typed
+    /// errors.
+    fn rpc(&mut self, op: Op, payload: &[u8]) -> Result<Vec<u8>, ClientError> {
+        wire::write_frame(&mut self.stream, op, payload)?;
+        self.read_reply()
+    }
+
+    fn read_reply(&mut self) -> Result<Vec<u8>, ClientError> {
+        let (op, payload) = wire::read_frame(&mut self.stream)?;
+        match op {
+            Op::Ok => Ok(payload),
+            Op::Err => Err(ClientError::Server(
+                String::from_utf8_lossy(&payload).into_owned(),
+            )),
+            Op::Shed => {
+                let (reason, message) = proto::decode_shed(&payload)?;
+                Err(ClientError::Shed { reason, message })
+            }
+            other => Err(ClientError::Wire(WireError::Malformed(format!(
+                "unexpected {other:?} reply"
+            )))),
+        }
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<(), ClientError> {
+        self.rpc(Op::Ping, &[]).map(|_| ())
+    }
+
+    /// Front-door status (served spec, drain flag, counters).
+    pub fn status(&mut self) -> Result<FrontStatus, ClientError> {
+        let payload = self.rpc(Op::FrontStatus, &[])?;
+        Ok(proto::decode_status_ok(&payload)?)
+    }
+
+    /// The coordinator's live metrics summary as pretty JSON.
+    pub fn metrics_json(&mut self) -> Result<String, ClientError> {
+        let payload = self.rpc(Op::Metrics, &[])?;
+        Ok(String::from_utf8_lossy(&payload).into_owned())
+    }
+
+    /// Register a scheduled image, streaming the encoded bytes in
+    /// `chunk_bytes`-sized pieces so arbitrarily large images never need
+    /// one giant frame.
+    pub fn register_image(
+        &mut self,
+        matrix: &ScheduledMatrix,
+        chunk_bytes: usize,
+    ) -> Result<ImageInfo, ClientError> {
+        let bytes = wire::encode_image(matrix);
+        let payload = self.rpc(Op::RegisterBegin, &proto::encode_register_begin(bytes.len() as u64))?;
+        let token = proto::decode_u64(&payload)?;
+        let step = chunk_bytes.max(1);
+        let mut offset = 0usize;
+        while offset < bytes.len() {
+            let end = (offset + step).min(bytes.len());
+            self.rpc(
+                Op::RegisterChunk,
+                &proto::encode_register_chunk(token, offset as u64, &bytes[offset..end]),
+            )?;
+            offset = end;
+        }
+        let payload = self.rpc(Op::RegisterEnd, &proto::encode_u64(token))?;
+        Ok(proto::decode_register_ok(&payload)?)
+    }
+
+    /// Open a submit and stream the B and C panels in column blocks of
+    /// `col_block` columns (0 = one block). Returns the server ticket;
+    /// the pipeline is running by the time this returns. A shed comes
+    /// back as [`ClientError::Shed`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit(
+        &mut self,
+        image: &ImageInfo,
+        n: usize,
+        alpha: f32,
+        beta: f32,
+        b: &[f32],
+        c: &[f32],
+        col_block: usize,
+    ) -> Result<u64, ClientError> {
+        let (m, k) = (image.m as usize, image.k as usize);
+        assert_eq!(b.len(), k * n, "B must be row-major K x n");
+        assert_eq!(c.len(), m * n, "C must be row-major M x n");
+        let payload = self.rpc(Op::Submit, &proto::encode_submit(image.id, n, alpha, beta))?;
+        let ticket = proto::decode_u64(&payload)?;
+        let step = if col_block == 0 { n } else { col_block.min(n) };
+        let mut col0 = 0usize;
+        while col0 < n {
+            let ncols = step.min(n - col0);
+            let b_block = gather(b, n, col0, ncols);
+            let c_block = gather(c, n, col0, ncols);
+            self.rpc(
+                Op::SubmitChunk,
+                &proto::encode_submit_chunk(ticket, col0 as u64, ncols as u64, &b_block, &c_block),
+            )?;
+            col0 += ncols;
+        }
+        self.rpc(Op::SubmitEnd, &proto::encode_u64(ticket))?;
+        Ok(ticket)
+    }
+
+    /// Non-blocking readiness check for a ticket.
+    pub fn poll(&mut self, ticket: u64) -> Result<bool, ClientError> {
+        let payload = self.rpc(Op::Poll, &proto::encode_u64(ticket))?;
+        match payload.as_slice() {
+            [done] => Ok(*done != 0),
+            _ => Err(ClientError::Wire(WireError::Malformed(
+                "poll reply is not one byte".into(),
+            ))),
+        }
+    }
+
+    /// Await a ticket and collect the streamed C panel (`m × n`,
+    /// streamed back in `chunk_cols`-column blocks; 0 = one block).
+    pub fn fetch(
+        &mut self,
+        ticket: u64,
+        m: usize,
+        n: usize,
+        chunk_cols: usize,
+    ) -> Result<FrontResponse, ClientError> {
+        wire::write_frame(
+            &mut self.stream,
+            Op::Await,
+            &proto::encode_await(ticket, chunk_cols as u64),
+        )?;
+        let mut c = vec![0.0f32; m * n];
+        loop {
+            let (op, payload) = wire::read_frame(&mut self.stream)?;
+            match op {
+                Op::Chunk => {
+                    let (col0, ncols, block) = proto::decode_result_chunk(&payload)?;
+                    let (col0, ncols) = (col0 as usize, ncols as usize);
+                    if ncols == 0 || col0 + ncols > n || block.len() != m * ncols {
+                        return Err(ClientError::Wire(WireError::Malformed(format!(
+                            "result chunk [{col0}, {}) does not fit {m} x {n}",
+                            col0 + ncols
+                        ))));
+                    }
+                    for r in 0..m {
+                        c[r * n + col0..r * n + col0 + ncols]
+                            .copy_from_slice(&block[r * ncols..(r + 1) * ncols]);
+                    }
+                }
+                Op::Ok => {
+                    let timing = proto::decode_await_ok(&payload)?;
+                    return Ok(FrontResponse { c, timing });
+                }
+                Op::Err => {
+                    return Err(ClientError::Server(
+                        String::from_utf8_lossy(&payload).into_owned(),
+                    ))
+                }
+                other => {
+                    return Err(ClientError::Wire(WireError::Malformed(format!(
+                        "unexpected {other:?} during fetch"
+                    ))))
+                }
+            }
+        }
+    }
+
+    /// Submit + fetch in one call (blocking convenience).
+    #[allow(clippy::too_many_arguments)]
+    pub fn call(
+        &mut self,
+        image: &ImageInfo,
+        n: usize,
+        alpha: f32,
+        beta: f32,
+        b: &[f32],
+        c: &[f32],
+        col_block: usize,
+    ) -> Result<FrontResponse, ClientError> {
+        let ticket = self.submit(image, n, alpha, beta, b, c, col_block)?;
+        self.fetch(ticket, image.m as usize, n, col_block)
+    }
+
+    /// Ask the server to stop accepting new work (in-flight finishes).
+    pub fn drain(&mut self) -> Result<(), ClientError> {
+        self.rpc(Op::Drain, &[]).map(|_| ())
+    }
+
+    /// Ask the server to shut down its accept loop and drain the
+    /// pipeline.
+    pub fn shutdown_server(&mut self) -> Result<(), ClientError> {
+        self.rpc(Op::Shutdown, &[]).map(|_| ())
+    }
+}
+
+/// Extract the `[col0, col0+ncols)` column block of a row-major
+/// `rows × n` panel.
+fn gather(panel: &[f32], n: usize, col0: usize, ncols: usize) -> Vec<f32> {
+    let rows = panel.len() / n;
+    let mut block = Vec::with_capacity(rows * ncols);
+    for r in 0..rows {
+        block.extend_from_slice(&panel[r * n + col0..r * n + col0 + ncols]);
+    }
+    block
+}

@@ -1,0 +1,610 @@
+//! Open-loop load generator for the network front door.
+//!
+//! **Open loop** means arrivals are scheduled on a clock (`rate` req/s
+//! over `duration`), not gated on responses — exactly the discipline that
+//! exposes queueing collapse: a closed-loop generator slows down with the
+//! server and hides the knee, an open-loop one keeps offering load and
+//! lets the admission gate do its job. What comes back is therefore a mix
+//! of completions, typed sheds, and (rarely) errors, all of which this
+//! module counts separately.
+//!
+//! The report carries exact per-stage percentiles (server-measured queue
+//! / batch / prepare / exec plus client-observed end-to-end), shed counts
+//! by [`ShedReason`], the client-side in-flight peak, and a per-image
+//! completion census — and serializes into the schema-v1
+//! [`BenchRecord`] trajectory (`BENCH_serve_<name>.json`) so serving
+//! latency regresses loudly, the same way kernel throughput does.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::client::{ClientError, FrontClient};
+use super::proto::{ImageInfo, ShedReason};
+use crate::sched::{preprocess, ScheduledMatrix};
+use crate::sparse::catalog::{Family, MatrixSpec};
+use crate::sparse::rng::Rng;
+use crate::sparse::{gen, Coo};
+use crate::telemetry::bench_record::{BenchMeasurement, BenchRecord, ScalingPoint};
+
+/// Which structural family the generated request matrices come from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mix {
+    /// Zipf row degrees ([`gen::power_law_rows`]) — a few hot rows, the
+    /// skew that trips per-PE imbalance.
+    PowerLaw,
+    /// Banded FEM-style ([`gen::banded`]).
+    Banded,
+    /// Uniform random ([`gen::random_uniform`]).
+    Uniform,
+}
+
+impl Mix {
+    /// Parse a `--mix` argument.
+    pub fn parse(s: &str) -> Option<Mix> {
+        match s {
+            "power-law" | "powerlaw" | "power_law" => Some(Mix::PowerLaw),
+            "banded" => Some(Mix::Banded),
+            "uniform" => Some(Mix::Uniform),
+            _ => None,
+        }
+    }
+
+    /// Stable name (reports, file names).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mix::PowerLaw => "power-law",
+            Mix::Banded => "banded",
+            Mix::Uniform => "uniform",
+        }
+    }
+
+    /// Catalog family this mix models.
+    pub fn family(&self) -> Family {
+        match self {
+            Mix::PowerLaw => Family::SsPowerRows,
+            Mix::Banded => Family::SsBanded,
+            Mix::Uniform => Family::SsUniform,
+        }
+    }
+
+    /// Generate one image's sparse matrix.
+    fn generate(&self, m: usize, k: usize, nnz: usize, rng: &mut Rng) -> Coo {
+        match self {
+            Mix::PowerLaw => gen::power_law_rows(m, k, nnz, 1.2, rng),
+            Mix::Banded => {
+                let n = m.min(k);
+                let row_nnz = (nnz / n.max(1)).max(1);
+                gen::banded(n, n / 16 + 1, row_nnz, rng)
+            }
+            Mix::Uniform => {
+                let density = nnz as f64 / (m as f64 * k as f64);
+                gen::random_uniform(m, k, density, rng)
+            }
+        }
+    }
+}
+
+/// Everything a loadgen run is parameterized by.
+#[derive(Clone)]
+pub struct LoadgenOptions {
+    /// Front door address (`host:port`).
+    pub addr: String,
+    /// Offered arrival rate, requests per second.
+    pub rate: f64,
+    /// How long to keep offering.
+    pub duration: Duration,
+    /// Matrix mix for the registered images.
+    pub mix: Mix,
+    /// How many distinct images to register and spread load over.
+    pub images: usize,
+    /// Fraction of requests aimed at image 0 (on top of its round-robin
+    /// share) — models one hot tenant. 0 = even spread.
+    pub hot: f64,
+    /// Rows per image.
+    pub m: usize,
+    /// Columns per image.
+    pub k: usize,
+    /// Dense columns per request.
+    pub n: usize,
+    /// Non-zeros per image.
+    pub nnz: usize,
+    /// Generator seed.
+    pub seed: u64,
+    /// Column-block width for panel upload / result download (0 = one
+    /// block).
+    pub col_block: usize,
+    /// Sender threads (each owns one connection). Bounds client-side
+    /// concurrency; an open-loop arrival finding every sender busy still
+    /// waits its turn, which the e2e percentile then reflects.
+    pub senders: usize,
+    /// Per-connection socket timeout.
+    pub timeout: Duration,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> Self {
+        LoadgenOptions {
+            addr: "127.0.0.1:7700".to_string(),
+            rate: 50.0,
+            duration: Duration::from_secs(2),
+            mix: Mix::PowerLaw,
+            images: 4,
+            hot: 0.0,
+            m: 256,
+            k: 256,
+            n: 16,
+            nnz: 4096,
+            seed: 0x5EED,
+            col_block: 0,
+            senders: 8,
+            timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Exact percentiles over one stage's samples.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageStats {
+    /// Samples.
+    pub count: usize,
+    /// Median, ns.
+    pub p50_ns: u64,
+    /// 95th percentile, ns.
+    pub p95_ns: u64,
+    /// 99th percentile, ns.
+    pub p99_ns: u64,
+}
+
+impl StageStats {
+    fn from_samples(mut ns: Vec<u64>) -> StageStats {
+        if ns.is_empty() {
+            return StageStats::default();
+        }
+        ns.sort_unstable();
+        let pct = |q: f64| ns[((ns.len() - 1) as f64 * q).round() as usize];
+        StageStats { count: ns.len(), p50_ns: pct(0.50), p95_ns: pct(0.95), p99_ns: pct(0.99) }
+    }
+}
+
+/// What one loadgen run observed.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Requests the open loop offered.
+    pub offered: usize,
+    /// Requests that completed with a result.
+    pub completed: usize,
+    /// Typed sheds by reason, `[queue_full, image_quota, draining,
+    /// connection_limit]`.
+    pub sheds: [usize; 4],
+    /// Non-shed failures.
+    pub errors: usize,
+    /// Server-measured admission→batch wait.
+    pub queue: StageStats,
+    /// Server-measured batch→worker wait.
+    pub batch: StageStats,
+    /// Server-measured residency/prepare time.
+    pub prepare: StageStats,
+    /// Server-measured executor time.
+    pub exec: StageStats,
+    /// Client-observed submit→result latency.
+    pub e2e: StageStats,
+    /// Peak simultaneously outstanding requests, client side.
+    pub concurrency_peak: usize,
+    /// Completions per image id, sorted by id.
+    pub completed_by_image: Vec<(u64, usize)>,
+    /// Mean FLOP per completed request (for throughput conversion).
+    pub flops_per_request: f64,
+    /// Wall-clock of the offering window plus drain.
+    pub wall: Duration,
+    /// The image specs this run generated (for the bench record).
+    pub matrices: Vec<MatrixSpec>,
+    /// Mix name (for the bench record).
+    pub mix: &'static str,
+    /// Dense columns per request (for the bench record).
+    pub n: usize,
+}
+
+impl LoadReport {
+    /// Total sheds across all reasons.
+    pub fn shed_total(&self) -> usize {
+        self.sheds.iter().sum()
+    }
+
+    /// The five stage rows, named.
+    pub fn stage_rows(&self) -> [(&'static str, &StageStats); 5] {
+        [
+            ("queue", &self.queue),
+            ("batch", &self.batch),
+            ("prepare", &self.prepare),
+            ("exec", &self.exec),
+            ("e2e", &self.e2e),
+        ]
+    }
+
+    /// Human-readable summary block.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "offered {} | completed {} | shed {} (queue {}, quota {}, drain {}, conn {}) | errors {}\n",
+            self.offered,
+            self.completed,
+            self.shed_total(),
+            self.sheds[0],
+            self.sheds[1],
+            self.sheds[2],
+            self.sheds[3],
+            self.errors,
+        ));
+        out.push_str(&format!(
+            "concurrency peak {} | wall {:.2}s\n",
+            self.concurrency_peak,
+            self.wall.as_secs_f64()
+        ));
+        out.push_str("stage      p50          p95          p99\n");
+        for (name, s) in self.stage_rows() {
+            out.push_str(&format!(
+                "{name:<9} {:>10.3}ms {:>10.3}ms {:>10.3}ms\n",
+                s.p50_ns as f64 / 1e6,
+                s.p95_ns as f64 / 1e6,
+                s.p99_ns as f64 / 1e6,
+            ));
+        }
+        for (id, count) in &self.completed_by_image {
+            out.push_str(&format!("image {id}: {count} completed\n"));
+        }
+        out
+    }
+
+    /// Serialize into the schema-v1 perf trajectory. Stage rows land in
+    /// `results` as `serve/<stage>` with GFLOP/s derived from the stage
+    /// p50 (nonzero whenever anything completed, so the zeroed-baseline
+    /// guard still bites); shed counts ride in `scaling` under
+    /// `serve/sheds` where self-comparison never flags them.
+    pub fn to_bench_record(&self, name: &str, timestamp: &str) -> BenchRecord {
+        let matrix = format!("mix:{}", self.mix);
+        let results = self
+            .stage_rows()
+            .iter()
+            .map(|(stage, s)| BenchMeasurement {
+                bench: format!("serve/{stage}"),
+                matrix: matrix.clone(),
+                n: self.n,
+                // FLOP / ns == GFLOP/s; stages with a ~0 p50 (cache-hit
+                // prepare) get clamped to 1 ns rather than dividing by 0.
+                gflops: if s.count == 0 {
+                    0.0
+                } else {
+                    self.flops_per_request / s.p50_ns.max(1) as f64
+                },
+                median_ns: s.p50_ns as f64,
+                p50_ns: s.p50_ns as f64,
+                p95_ns: s.p95_ns as f64,
+                p99_ns: s.p99_ns as f64,
+            })
+            .collect();
+        let goodput = self.completed as f64 / (self.offered.max(1)) as f64;
+        let scaling = vec![
+            ScalingPoint {
+                bench: "serve/concurrency".to_string(),
+                workers: self.concurrency_peak.max(1),
+                gflops: self.flops_per_request * self.completed as f64
+                    / self.wall.as_nanos().max(1) as f64,
+                efficiency: goodput,
+            },
+            ScalingPoint {
+                bench: "serve/sheds".to_string(),
+                workers: 1,
+                gflops: self.shed_total() as f64,
+                // Constant so a strict self-compare can never flag this
+                // row; the shed count itself lives in gflops, which
+                // compare() ignores for scaling points.
+                efficiency: 1.0,
+            },
+        ];
+        BenchRecord {
+            name: name.to_string(),
+            git_rev: crate::telemetry::bench_record::git_rev(),
+            timestamp: timestamp.to_string(),
+            host_threads: std::thread::available_parallelism().map_or(1, |p| p.get()),
+            matrices: self.matrices.clone(),
+            results,
+            scaling,
+        }
+    }
+}
+
+/// One scheduled arrival.
+struct Job {
+    due: Instant,
+    image_idx: usize,
+}
+
+/// One finished arrival.
+enum Outcome {
+    Done { image: u64, queue_ns: u64, batch_ns: u64, prepare_ns: u64, exec_ns: u64, e2e_ns: u64, flops: u64 },
+    Shed(ShedReason),
+    Error,
+}
+
+/// Client-side in-flight gauge (current + high-water mark).
+#[derive(Default)]
+struct Gauge {
+    current: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl Gauge {
+    fn enter(&self) {
+        let now = self.current.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak.fetch_max(now, Ordering::SeqCst);
+    }
+    fn exit(&self) {
+        self.current.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Generate + register the image set; returns (infos, specs, panels).
+#[allow(clippy::type_complexity)]
+fn build_images(
+    control: &mut FrontClient,
+    opts: &LoadgenOptions,
+) -> Result<(Vec<ImageInfo>, Vec<MatrixSpec>, Vec<(Vec<f32>, Vec<f32>)>), ClientError> {
+    let mut infos = Vec::with_capacity(opts.images);
+    let mut specs = Vec::with_capacity(opts.images);
+    let mut panels = Vec::with_capacity(opts.images);
+    for i in 0..opts.images {
+        let seed = opts.seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        let coo = opts.mix.generate(opts.m, opts.k, opts.nnz, &mut rng);
+        let image = schedule_default(&coo);
+        let info = control.register_image(&image, 1 << 16)?;
+        let (k, m) = (info.k as usize, info.m as usize);
+        let b: Vec<f32> = (0..k * opts.n).map(|_| rng.normal()).collect();
+        let c: Vec<f32> = (0..m * opts.n).map(|_| rng.normal()).collect();
+        specs.push(MatrixSpec {
+            name: format!("loadgen-{}-{i}", opts.mix.name()),
+            family: opts.mix.family(),
+            m: coo.m,
+            k: coo.k,
+            nnz: coo.nnz(),
+            seed,
+        });
+        infos.push(info);
+        panels.push((b, c));
+    }
+    Ok((infos, specs, panels))
+}
+
+/// The default schedule shape loadgen registers images with (P=8 PEs,
+/// K0=64 column windows, distance-4 hazard window).
+pub fn schedule_default(coo: &Coo) -> ScheduledMatrix {
+    preprocess(coo, 8, 64, 4)
+}
+
+/// Run one open-loop load test against a front door.
+pub fn run(opts: &LoadgenOptions) -> Result<LoadReport, ClientError> {
+    let mut control = FrontClient::connect(&opts.addr, opts.timeout)?;
+    let (infos, specs, panels) = build_images(&mut control, opts)?;
+    let infos = Arc::new(infos);
+    let panels = Arc::new(panels);
+
+    let total = ((opts.rate * opts.duration.as_secs_f64()).ceil() as usize).max(1);
+    let (job_tx, job_rx) = mpsc::channel::<Job>();
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let (out_tx, out_rx) = mpsc::channel::<Outcome>();
+    let gauge = Arc::new(Gauge::default());
+
+    let mut senders = Vec::with_capacity(opts.senders);
+    for _ in 0..opts.senders.max(1) {
+        let job_rx = Arc::clone(&job_rx);
+        let out_tx = out_tx.clone();
+        let gauge = Arc::clone(&gauge);
+        let infos = Arc::clone(&infos);
+        let panels = Arc::clone(&panels);
+        let opts = opts.clone();
+        senders.push(std::thread::spawn(move || {
+            let mut client = match FrontClient::connect(&opts.addr, opts.timeout) {
+                Ok(c) => c,
+                Err(_) => return,
+            };
+            loop {
+                let job = match job_rx.lock().unwrap().recv() {
+                    Ok(j) => j,
+                    Err(_) => return,
+                };
+                let now = Instant::now();
+                if job.due > now {
+                    std::thread::sleep(job.due - now);
+                }
+                let info = &infos[job.image_idx];
+                let (b, c) = &panels[job.image_idx];
+                gauge.enter();
+                let t0 = Instant::now();
+                let result =
+                    client.call(info, opts.n, 1.0, 0.5, b, c, opts.col_block);
+                let e2e_ns = t0.elapsed().as_nanos() as u64;
+                gauge.exit();
+                let outcome = match result {
+                    Ok(resp) => match resp.timing.error {
+                        None => Outcome::Done {
+                            image: info.id,
+                            queue_ns: resp.timing.queue_ns,
+                            batch_ns: resp.timing.batch_ns,
+                            prepare_ns: resp.timing.prepare_ns,
+                            exec_ns: resp.timing.exec_ns,
+                            e2e_ns,
+                            flops: resp.timing.flops,
+                        },
+                        Some(_) => Outcome::Error,
+                    },
+                    Err(ClientError::Shed { reason, .. }) => Outcome::Shed(reason),
+                    Err(_) => Outcome::Error,
+                };
+                if out_tx.send(outcome).is_err() {
+                    return;
+                }
+            }
+        }));
+    }
+    drop(out_tx);
+
+    // The open loop: arrivals on the clock, regardless of what came back.
+    let t0 = Instant::now();
+    let mut hot_credit = 0.0f64;
+    for i in 0..total {
+        let image_idx = {
+            // `hot` extra fraction to image 0, remainder round-robin.
+            hot_credit += opts.hot;
+            if hot_credit >= 1.0 {
+                hot_credit -= 1.0;
+                0
+            } else {
+                i % infos.len()
+            }
+        };
+        let due = t0 + Duration::from_secs_f64(i as f64 / opts.rate.max(0.001));
+        if job_tx.send(Job { due, image_idx }).is_err() {
+            break;
+        }
+    }
+    drop(job_tx);
+    for s in senders {
+        let _ = s.join();
+    }
+    let wall = t0.elapsed();
+
+    // Aggregate.
+    let (mut queue, mut batch, mut prepare, mut exec, mut e2e) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    let mut sheds = [0usize; 4];
+    let mut errors = 0usize;
+    let mut flops_sum = 0u128;
+    let mut by_image: Vec<(u64, usize)> = Vec::new();
+    for outcome in out_rx.iter() {
+        match outcome {
+            Outcome::Done { image, queue_ns, batch_ns, prepare_ns, exec_ns, e2e_ns, flops } => {
+                queue.push(queue_ns);
+                batch.push(batch_ns);
+                prepare.push(prepare_ns);
+                exec.push(exec_ns);
+                e2e.push(e2e_ns);
+                flops_sum += flops as u128;
+                match by_image.iter_mut().find(|(id, _)| *id == image) {
+                    Some((_, count)) => *count += 1,
+                    None => by_image.push((image, 1)),
+                }
+            }
+            Outcome::Shed(reason) => sheds[reason as usize] += 1,
+            Outcome::Error => errors += 1,
+        }
+    }
+    by_image.sort_by_key(|&(id, _)| id);
+    let completed = e2e.len();
+    Ok(LoadReport {
+        offered: total,
+        completed,
+        sheds,
+        errors,
+        queue: StageStats::from_samples(queue),
+        batch: StageStats::from_samples(batch),
+        prepare: StageStats::from_samples(prepare),
+        exec: StageStats::from_samples(exec),
+        e2e: StageStats::from_samples(e2e),
+        concurrency_peak: gauge.peak.load(Ordering::SeqCst),
+        completed_by_image: by_image,
+        flops_per_request: flops_sum as f64 / completed.max(1) as f64,
+        wall,
+        matrices: specs,
+        mix: opts.mix.name(),
+        n: opts.n,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_parses_and_names_round_trip() {
+        for mix in [Mix::PowerLaw, Mix::Banded, Mix::Uniform] {
+            assert_eq!(Mix::parse(mix.name()), Some(mix));
+        }
+        assert_eq!(Mix::parse("power_law"), Some(Mix::PowerLaw));
+        assert_eq!(Mix::parse("bogus"), None);
+    }
+
+    #[test]
+    fn stage_stats_exact_percentiles() {
+        let s = StageStats::from_samples((1..=100).collect());
+        assert_eq!(s.count, 100);
+        assert_eq!(s.p50_ns, 51, "round((100-1)*0.5) = 50 -> sorted[50] = 51");
+        assert_eq!(s.p95_ns, 95);
+        assert_eq!(s.p99_ns, 99);
+        assert_eq!(StageStats::from_samples(Vec::new()).count, 0);
+    }
+
+    #[test]
+    fn bench_record_is_schema_v1_and_not_zeroed() {
+        let report = LoadReport {
+            offered: 10,
+            completed: 8,
+            sheds: [2, 0, 0, 0],
+            errors: 0,
+            queue: StageStats { count: 8, p50_ns: 100, p95_ns: 200, p99_ns: 300 },
+            batch: StageStats { count: 8, p50_ns: 100, p95_ns: 200, p99_ns: 300 },
+            prepare: StageStats { count: 8, p50_ns: 0, p95_ns: 0, p99_ns: 0 },
+            exec: StageStats { count: 8, p50_ns: 5_000, p95_ns: 9_000, p99_ns: 9_500 },
+            e2e: StageStats { count: 8, p50_ns: 20_000, p95_ns: 40_000, p99_ns: 50_000 },
+            concurrency_peak: 3,
+            completed_by_image: vec![(1, 8)],
+            flops_per_request: 1.0e6,
+            wall: Duration::from_secs(1),
+            matrices: vec![MatrixSpec {
+                name: "loadgen-power-law-0".into(),
+                family: Family::SsPowerRows,
+                m: 64,
+                k: 64,
+                nnz: 512,
+                seed: 7,
+            }],
+            mix: "power-law",
+            n: 8,
+        };
+        let record = report.to_bench_record("unit", "2026-01-01T00:00:00Z");
+        assert!(!record.is_zeroed(), "completed runs must not look like placeholders");
+        // Round-trip through the schema-v1 parser.
+        let parsed =
+            BenchRecord::from_value(&record.to_value()).expect("schema v1 round-trip");
+        assert_eq!(parsed.results.len(), 5);
+        assert_eq!(parsed.scaling.len(), 2);
+        let sheds = parsed.scaling.iter().find(|s| s.bench == "serve/sheds").unwrap();
+        assert_eq!(sheds.gflops, 2.0, "shed count rides in the scaling gflops column");
+        // A strict self-compare never flags its own sheds row.
+        assert!(crate::telemetry::bench_record::compare(&record, &record, 0.0).is_empty());
+        // The zero-p50 prepare stage must not divide by zero.
+        let prep = parsed.results.iter().find(|r| r.bench == "serve/prepare").unwrap();
+        assert!(prep.gflops.is_finite());
+    }
+
+    #[test]
+    fn hot_fraction_routes_extra_load_to_image_zero() {
+        // Reproduce the router loop's arithmetic: 50% hot over 8 images.
+        let (mut hot_credit, mut zero) = (0.0f64, 0usize);
+        let total = 1000;
+        for i in 0..total {
+            hot_credit += 0.5;
+            let idx = if hot_credit >= 1.0 {
+                hot_credit -= 1.0;
+                0
+            } else {
+                i % 8
+            };
+            if idx == 0 {
+                zero += 1;
+            }
+        }
+        assert!(zero > total / 2, "image 0 gets its round-robin share plus the hot half");
+    }
+}

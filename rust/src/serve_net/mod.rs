@@ -1,0 +1,50 @@
+//! Network front door for the serving pipeline.
+//!
+//! Where [`crate::net`] is the *back* of the deployment — workers holding
+//! matrix shards, driven by the `remote:` backend — this module is the
+//! *front*: the socket clients connect to. It reuses the same framed
+//! binary protocol ([`crate::net::wire`]: `SXTN` magic, version gate,
+//! length-prefixed frames) with a client-facing opcode set layered on
+//! top:
+//!
+//! ```text
+//!                         clients (FrontClient / sextans loadgen)
+//!                               │ framed TCP, Op 10..20
+//!                               ▼
+//!  ┌───────────────────── serve_net::FrontDoor ─────────────────────┐
+//!  │ accept gate (AdmissionGate)   thread per connection            │
+//!  │ chunked register / submit     streamed result chunks           │
+//!  │ net.frontend spans            typed Shed frames                │
+//!  └──────────────────────────────┬─────────────────────────────────┘
+//!                                 ▼
+//!                    coordinator::Server (4-stage pipeline)
+//! ```
+//!
+//! Three design rules, all load-bearing:
+//!
+//! 1. **Panels stream in column blocks.** B and C upload (and C_out
+//!    downloads) move in `[col0, col0+ncols)` blocks, so transfer
+//!    overlaps compute and no frame ever needs the full panel — the
+//!    paper's streaming discipline applied to the serving edge.
+//! 2. **Backpressure is typed, end to end.** Accept-gate overflow,
+//!    pipeline admission sheds, per-image quota trips, and draining all
+//!    come back as [`proto::ShedReason`]-tagged `Shed` frames; an
+//!    overloaded front door sheds, it never queues unboundedly.
+//! 3. **The network edge is in the trace.** Each submit opens a
+//!    `net.frontend` span and parents the pipeline's `request` span
+//!    under it via the thread-local span context, so one trace covers
+//!    socket to executor.
+//!
+//! [`loadgen`] drives all of this open-loop for capacity measurement
+//! (`sextans loadgen`), persisting `BENCH_serve_*.json` snapshots in the
+//! same schema-v1 trajectory the kernel benches use.
+
+pub mod client;
+pub mod loadgen;
+pub mod proto;
+pub mod server;
+
+pub use client::{ClientError, FrontClient, FrontResponse};
+pub use loadgen::{LoadReport, LoadgenOptions, Mix};
+pub use proto::{AwaitOk, FrontStatus, ImageInfo, ShedReason};
+pub use server::{FrontDoor, FrontDoorConfig};

@@ -1,0 +1,448 @@
+//! Payload codecs for the front-door opcodes (`Op::RegisterBegin` through
+//! `Op::FrontStatus`, plus the `Chunk`/`Shed` reply frames).
+//!
+//! Layered on [`crate::net::wire`]'s framing and byte primitives — the
+//! magic/version gate, the length-prefixed frames, and the bounds-checked
+//! [`ByteWriter`]/[`ByteReader`] pair — so the front door speaks the same
+//! wire dialect as the worker fleet and inherits its hostile-bytes
+//! guarantees (truncation, trailing garbage, and bad enum values are all
+//! typed [`WireError`]s, never panics).
+//!
+//! Panels cross the wire in **column blocks**: a block of `ncols` columns
+//! starting at `col0`, laid out row-major within the block (`value(r,
+//! col0 + j)` at index `r * ncols + j`). Registration streams the encoded
+//! [`crate::sched::ScheduledMatrix`] image as raw byte ranges for the
+//! same reason — no single frame need hold the whole artifact.
+
+use crate::net::wire::{ByteReader, ByteWriter, WireError};
+
+/// Why the front door refused work — the one-byte reason code carried in
+/// an `Op::Shed` frame. Distinct from `Op::Err`: a shed is backpressure
+/// (retry later, against the same healthy server), not failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ShedReason {
+    /// The admission gate's global in-flight bound is full.
+    QueueFull = 0,
+    /// The target image is at its per-image fairness quota.
+    ImageQuota = 1,
+    /// The server is draining: in-flight requests finish, new ones shed.
+    Draining = 2,
+    /// The accept-side connection gate is full.
+    ConnectionLimit = 3,
+}
+
+impl ShedReason {
+    /// Decode a reason code, rejecting unknown values.
+    pub fn from_u8(v: u8) -> Result<ShedReason, WireError> {
+        Ok(match v {
+            0 => ShedReason::QueueFull,
+            1 => ShedReason::ImageQuota,
+            2 => ShedReason::Draining,
+            3 => ShedReason::ConnectionLimit,
+            other => {
+                return Err(WireError::Malformed(format!("unknown shed reason {other}")))
+            }
+        })
+    }
+
+    /// Stable label used in logs and reports.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::ImageQuota => "image_quota",
+            ShedReason::Draining => "draining",
+            ShedReason::ConnectionLimit => "connection_limit",
+        }
+    }
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Encode an `Op::Shed` reply: reason code + message.
+pub fn encode_shed(reason: ShedReason, message: &str) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u8(reason as u8);
+    w.put_str(message);
+    w.into_bytes()
+}
+
+/// Decode an `Op::Shed` reply.
+pub fn decode_shed(bytes: &[u8]) -> Result<(ShedReason, String), WireError> {
+    let mut r = ByteReader::new(bytes);
+    let reason = ShedReason::from_u8(r.u8()?)?;
+    let message = r.str()?;
+    r.finish()?;
+    Ok((reason, message))
+}
+
+// ---------------------------------------------------------------------------
+// Streamed image registration
+// ---------------------------------------------------------------------------
+
+/// Encode a RegisterBegin request: total encoded-image byte count.
+pub fn encode_register_begin(total_bytes: u64) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(total_bytes);
+    w.into_bytes()
+}
+
+/// Decode a RegisterBegin request.
+pub fn decode_register_begin(bytes: &[u8]) -> Result<u64, WireError> {
+    let mut r = ByteReader::new(bytes);
+    let total = r.u64()?;
+    r.finish()?;
+    Ok(total)
+}
+
+/// Encode a RegisterChunk request: upload token, byte offset, raw image
+/// bytes (the chunk runs to the end of the payload).
+pub fn encode_register_chunk(token: u64, offset: u64, chunk: &[u8]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(token);
+    w.put_u64(offset);
+    let mut bytes = w.into_bytes();
+    bytes.extend_from_slice(chunk);
+    bytes
+}
+
+/// Decode a RegisterChunk request into (token, offset, chunk bytes).
+pub fn decode_register_chunk(bytes: &[u8]) -> Result<(u64, u64, &[u8]), WireError> {
+    let mut r = ByteReader::new(bytes);
+    let token = r.u64()?;
+    let offset = r.u64()?;
+    let chunk = r.take(r.remaining())?;
+    Ok((token, offset, chunk))
+}
+
+/// A registered image as the front door reports it back: the id to submit
+/// against plus the dimensions the client needs to shape B/C panels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ImageInfo {
+    /// Server-assigned image id.
+    pub id: u64,
+    /// Rows of A (C has `m` rows).
+    pub m: u64,
+    /// Columns of A (B has `k` rows).
+    pub k: u64,
+}
+
+/// Encode a RegisterEnd success reply.
+pub fn encode_register_ok(info: &ImageInfo) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(info.id);
+    w.put_u64(info.m);
+    w.put_u64(info.k);
+    w.into_bytes()
+}
+
+/// Decode a RegisterEnd success reply.
+pub fn decode_register_ok(bytes: &[u8]) -> Result<ImageInfo, WireError> {
+    let mut r = ByteReader::new(bytes);
+    let info = ImageInfo { id: r.u64()?, m: r.u64()?, k: r.u64()? };
+    r.finish()?;
+    Ok(info)
+}
+
+// ---------------------------------------------------------------------------
+// Chunked submit
+// ---------------------------------------------------------------------------
+
+/// Encode a Submit request: image id, N, scalars. Panels follow in
+/// SubmitChunk frames.
+pub fn encode_submit(image_id: u64, n: usize, alpha: f32, beta: f32) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(image_id);
+    w.put_u64(n as u64);
+    w.put_f32(alpha);
+    w.put_f32(beta);
+    w.into_bytes()
+}
+
+/// Decode a Submit request into (image id, n, alpha, beta).
+pub fn decode_submit(bytes: &[u8]) -> Result<(u64, usize, f32, f32), WireError> {
+    let mut r = ByteReader::new(bytes);
+    let id = r.u64()?;
+    let n = r.len64()?;
+    let alpha = r.f32()?;
+    let beta = r.f32()?;
+    r.finish()?;
+    Ok((id, n, alpha, beta))
+}
+
+/// Encode a SubmitChunk request: one column block of the B and C panels.
+/// `b_block` is `k × ncols` and `c_block` is `m × ncols`, both row-major
+/// within the block.
+pub fn encode_submit_chunk(
+    ticket: u64,
+    col0: u64,
+    ncols: u64,
+    b_block: &[f32],
+    c_block: &[f32],
+) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(ticket);
+    w.put_u64(col0);
+    w.put_u64(ncols);
+    w.put_f32_slice(b_block);
+    w.put_f32_slice(c_block);
+    w.into_bytes()
+}
+
+/// Decode a SubmitChunk request into (ticket, col0, ncols, b, c).
+#[allow(clippy::type_complexity)]
+pub fn decode_submit_chunk(
+    bytes: &[u8],
+) -> Result<(u64, u64, u64, Vec<f32>, Vec<f32>), WireError> {
+    let mut r = ByteReader::new(bytes);
+    let ticket = r.u64()?;
+    let col0 = r.u64()?;
+    let ncols = r.u64()?;
+    let b = r.f32_slice()?;
+    let c = r.f32_slice()?;
+    r.finish()?;
+    Ok((ticket, col0, ncols, b, c))
+}
+
+/// Encode a one-`u64` payload (SubmitEnd / Poll tickets, Submit's ticket
+/// reply, RegisterBegin's token reply).
+pub fn encode_u64(v: u64) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(v);
+    w.into_bytes()
+}
+
+/// Decode a one-`u64` payload.
+pub fn decode_u64(bytes: &[u8]) -> Result<u64, WireError> {
+    let mut r = ByteReader::new(bytes);
+    let v = r.u64()?;
+    r.finish()?;
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Streamed response
+// ---------------------------------------------------------------------------
+
+/// Encode an Await request: ticket + the column-block size the client
+/// wants the result streamed in (0 = one chunk).
+pub fn encode_await(ticket: u64, chunk_cols: u64) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(ticket);
+    w.put_u64(chunk_cols);
+    w.into_bytes()
+}
+
+/// Decode an Await request into (ticket, chunk_cols).
+pub fn decode_await(bytes: &[u8]) -> Result<(u64, u64), WireError> {
+    let mut r = ByteReader::new(bytes);
+    let ticket = r.u64()?;
+    let chunk_cols = r.u64()?;
+    r.finish()?;
+    Ok((ticket, chunk_cols))
+}
+
+/// Encode an `Op::Chunk` reply element: one column block of the result C
+/// panel (`m × ncols`, row-major within the block).
+pub fn encode_result_chunk(col0: u64, ncols: u64, c_block: &[f32]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(col0);
+    w.put_u64(ncols);
+    w.put_f32_slice(c_block);
+    w.into_bytes()
+}
+
+/// Decode an `Op::Chunk` reply element into (col0, ncols, c block).
+pub fn decode_result_chunk(bytes: &[u8]) -> Result<(u64, u64, Vec<f32>), WireError> {
+    let mut r = ByteReader::new(bytes);
+    let col0 = r.u64()?;
+    let ncols = r.u64()?;
+    let c = r.f32_slice()?;
+    r.finish()?;
+    Ok((col0, ncols, c))
+}
+
+/// The closing frame of an Await reply: the pipeline's per-stage timing
+/// for the request (nanoseconds, stamped from the same `Instant`s as the
+/// server-side `RequestTiming`), plus the backend that served it and the
+/// pipeline error if it failed (the C chunks are then absent).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AwaitOk {
+    /// Queue-stage nanoseconds.
+    pub queue_ns: u64,
+    /// Batch-stage nanoseconds.
+    pub batch_ns: u64,
+    /// Prepare-stage nanoseconds.
+    pub prepare_ns: u64,
+    /// Execute-stage nanoseconds.
+    pub exec_ns: u64,
+    /// FLOPs the request performed.
+    pub flops: u64,
+    /// Backend name that served the request.
+    pub backend: String,
+    /// Pipeline failure, if any.
+    pub error: Option<String>,
+}
+
+/// Encode the closing Await `Op::Ok` frame.
+pub fn encode_await_ok(ok: &AwaitOk) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(ok.queue_ns);
+    w.put_u64(ok.batch_ns);
+    w.put_u64(ok.prepare_ns);
+    w.put_u64(ok.exec_ns);
+    w.put_u64(ok.flops);
+    w.put_str(&ok.backend);
+    match &ok.error {
+        None => w.put_u8(0),
+        Some(e) => {
+            w.put_u8(1);
+            w.put_str(e);
+        }
+    }
+    w.into_bytes()
+}
+
+/// Decode the closing Await `Op::Ok` frame.
+pub fn decode_await_ok(bytes: &[u8]) -> Result<AwaitOk, WireError> {
+    let mut r = ByteReader::new(bytes);
+    let mut ok = AwaitOk {
+        queue_ns: r.u64()?,
+        batch_ns: r.u64()?,
+        prepare_ns: r.u64()?,
+        exec_ns: r.u64()?,
+        flops: r.u64()?,
+        backend: r.str()?,
+        error: None,
+    };
+    if r.u8()? != 0 {
+        ok.error = Some(r.str()?);
+    }
+    r.finish()?;
+    Ok(ok)
+}
+
+// ---------------------------------------------------------------------------
+// Status
+// ---------------------------------------------------------------------------
+
+/// What a FrontStatus probe reports: identity and load of the listening
+/// front door.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FrontStatus {
+    /// Backend spec the coordinator behind this front door executes on.
+    pub backend_spec: String,
+    /// True once a Drain was received: new submits shed.
+    pub draining: bool,
+    /// Images registered so far.
+    pub images: u64,
+    /// Tickets currently open (submitted, not yet fetched).
+    pub open_tickets: u64,
+    /// Requests whose responses have been streamed back.
+    pub completed: u64,
+}
+
+/// Encode a FrontStatus success reply.
+pub fn encode_status_ok(s: &FrontStatus) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_str(&s.backend_spec);
+    w.put_u8(s.draining as u8);
+    w.put_u64(s.images);
+    w.put_u64(s.open_tickets);
+    w.put_u64(s.completed);
+    w.into_bytes()
+}
+
+/// Decode a FrontStatus success reply.
+pub fn decode_status_ok(bytes: &[u8]) -> Result<FrontStatus, WireError> {
+    let mut r = ByteReader::new(bytes);
+    let s = FrontStatus {
+        backend_spec: r.str()?,
+        draining: r.u8()? != 0,
+        images: r.u64()?,
+        open_tickets: r.u64()?,
+        completed: r.u64()?,
+    };
+    r.finish()?;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shed_roundtrip_and_bad_reason_rejected() {
+        let bytes = encode_shed(ShedReason::ImageQuota, "image 3 at quota 2");
+        let (reason, msg) = decode_shed(&bytes).unwrap();
+        assert_eq!(reason, ShedReason::ImageQuota);
+        assert_eq!(msg, "image 3 at quota 2");
+        let mut evil = bytes.clone();
+        evil[0] = 99;
+        assert!(matches!(decode_shed(&evil).unwrap_err(), WireError::Malformed(_)));
+    }
+
+    #[test]
+    fn register_codecs_roundtrip() {
+        assert_eq!(decode_register_begin(&encode_register_begin(4096)).unwrap(), 4096);
+        let (token, offset, chunk) =
+            decode_register_chunk(&encode_register_chunk(7, 128, &[1, 2, 3])).unwrap();
+        assert_eq!((token, offset, chunk), (7, 128, &[1u8, 2, 3][..]));
+        let info = ImageInfo { id: 5, m: 48, k: 32 };
+        assert_eq!(decode_register_ok(&encode_register_ok(&info)).unwrap(), info);
+    }
+
+    #[test]
+    fn submit_codecs_roundtrip() {
+        let (id, n, alpha, beta) = decode_submit(&encode_submit(9, 4, 1.5, -0.5)).unwrap();
+        assert_eq!((id, n, alpha, beta), (9, 4, 1.5, -0.5));
+        let b = vec![1.0f32, 2.0, 3.0, 4.0];
+        let c = vec![-1.0f32, -2.0];
+        let (t, col0, ncols, b2, c2) =
+            decode_submit_chunk(&encode_submit_chunk(11, 2, 2, &b, &c)).unwrap();
+        assert_eq!((t, col0, ncols), (11, 2, 2));
+        assert_eq!(b2, b);
+        assert_eq!(c2, c);
+        assert_eq!(decode_u64(&encode_u64(u64::MAX)).unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn await_codecs_roundtrip() {
+        assert_eq!(decode_await(&encode_await(3, 8)).unwrap(), (3, 8));
+        let (col0, ncols, c) =
+            decode_result_chunk(&encode_result_chunk(4, 2, &[0.5, -0.5])).unwrap();
+        assert_eq!((col0, ncols), (4, 2));
+        assert_eq!(c, vec![0.5, -0.5]);
+        let ok = AwaitOk {
+            queue_ns: 1,
+            batch_ns: 2,
+            prepare_ns: 3,
+            exec_ns: 4,
+            flops: 1000,
+            backend: "functional".into(),
+            error: None,
+        };
+        assert_eq!(decode_await_ok(&encode_await_ok(&ok)).unwrap(), ok);
+        let failed = AwaitOk { error: Some("boom".into()), ..ok };
+        assert_eq!(decode_await_ok(&encode_await_ok(&failed)).unwrap(), failed);
+    }
+
+    #[test]
+    fn status_roundtrip_and_trailing_garbage_rejected() {
+        let s = FrontStatus {
+            backend_spec: "native:4".into(),
+            draining: true,
+            images: 3,
+            open_tickets: 2,
+            completed: 41,
+        };
+        assert_eq!(decode_status_ok(&encode_status_ok(&s)).unwrap(), s);
+        let mut bytes = encode_status_ok(&s);
+        bytes.push(0);
+        assert!(matches!(decode_status_ok(&bytes).unwrap_err(), WireError::Malformed(_)));
+    }
+}

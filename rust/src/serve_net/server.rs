@@ -1,0 +1,667 @@
+//! The network front door: a socket server in front of
+//! [`crate::coordinator::Server`].
+//!
+//! One [`FrontDoor`] owns a listener plus a full four-stage serving
+//! pipeline. Connections get a thread each (the [`crate::net::worker`]
+//! model); within a connection, clients stream image registrations and
+//! B/C panels in column-block chunks, submit SpMMs, and fetch results as
+//! streamed [`Op::Chunk`] frames.
+//!
+//! Backpressure is wired end to end and always **typed**:
+//!
+//! * the accept loop itself runs behind an [`AdmissionGate`] — a full
+//!   connection gate sheds with an [`Op::Shed`] frame
+//!   ([`ShedReason::ConnectionLimit`]) instead of queueing accepts;
+//! * a submit the pipeline's admission stage refuses comes back as an
+//!   [`Op::Shed`] frame carrying [`ShedReason::QueueFull`] or
+//!   [`ShedReason::ImageQuota`] — never an unbounded queue, never a
+//!   generic error;
+//! * a drained server ([`Op::Drain`]) finishes in-flight work and sheds
+//!   new submits with [`ShedReason::Draining`].
+//!
+//! Every submit opens a `net.frontend` span (submit-begin to
+//! response-streamed) and installs it as the submitting thread's span
+//! context, so the pipeline's `request` root — and through it every stage
+//! span — parents under the network edge that carried the request.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use super::proto::{self, AwaitOk, FrontStatus, ImageInfo, ShedReason};
+use crate::coordinator::admission::{Admit, AdmissionGate, AdmissionPolicy};
+use crate::coordinator::metrics::Summary;
+use crate::coordinator::server::{
+    ImageHandle, PipelineConfig, Server, SpmmRequest, SpmmResponse,
+};
+use crate::net::wire::{self, Op, WireError};
+use crate::telemetry::trace::{
+    next_span_id, next_trace_id, push_span_context, SpanRecord, TelemetrySink,
+};
+
+/// Front-door configuration: the pipeline it fronts plus socket policy.
+#[derive(Clone)]
+pub struct FrontDoorConfig {
+    /// Registry spec the coordinator executes on.
+    pub backend_spec: String,
+    /// Coordinator worker threads.
+    pub workers: usize,
+    /// Every pipeline stage's policy (admission bound, per-image quota,
+    /// batching window, residency budget, telemetry sink, ...). The sink
+    /// here also receives the `net.frontend` spans.
+    pub pipeline: PipelineConfig,
+    /// Per-connection socket read timeout.
+    pub read_timeout: Duration,
+    /// Per-connection socket write timeout.
+    pub write_timeout: Duration,
+    /// Accept-side gate: concurrent connections beyond this shed with a
+    /// typed [`ShedReason::ConnectionLimit`] frame at accept.
+    pub max_connections: usize,
+    /// How long one Await may block on an in-flight request before the
+    /// server replies "still running" (the ticket stays fetchable).
+    pub await_timeout: Duration,
+}
+
+impl Default for FrontDoorConfig {
+    fn default() -> Self {
+        FrontDoorConfig {
+            backend_spec: "native".to_string(),
+            workers: 2,
+            pipeline: PipelineConfig::default(),
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(30),
+            max_connections: 256,
+            await_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// One submitted request awaiting pickup: the pipeline's response channel
+/// plus the trace/time bookkeeping the `net.frontend` span needs.
+struct Ticket {
+    rx: Receiver<SpmmResponse>,
+    cached: Option<SpmmResponse>,
+    trace: Option<(u64, u64)>,
+    t_begin: Instant,
+    image: u64,
+    n: usize,
+}
+
+/// Shared state across connection threads.
+struct FrontState {
+    /// The coordinator lives behind an `Option` so shutdown can take it
+    /// by value ([`Server::shutdown`] consumes) after the accept loop
+    /// exits; requests hold the read side only for the brief submit call.
+    server: RwLock<Option<Server>>,
+    spec: String,
+    conn_gate: AdmissionGate,
+    draining: AtomicBool,
+    shutdown: AtomicBool,
+    next_token: AtomicU64,
+    next_ticket: AtomicU64,
+    images: Mutex<HashMap<u64, ImageHandle>>,
+    tickets: Mutex<HashMap<u64, Ticket>>,
+    completed: AtomicU64,
+    sink: Option<Arc<dyn TelemetrySink>>,
+}
+
+/// A running front door: the bound listener plus its shared state.
+/// Produced by [`FrontDoor::bind`]; [`FrontDoor::run`] serves until a
+/// Shutdown frame arrives, then drains the pipeline and returns its
+/// serving [`Summary`].
+pub struct FrontDoor {
+    listener: TcpListener,
+    state: Arc<FrontState>,
+}
+
+impl FrontDoor {
+    /// Start the coordinator pipeline and bind the listener (`host:port`;
+    /// port 0 picks a free port — see [`FrontDoor::local_addr`]).
+    pub fn bind(addr: &str, config: &FrontDoorConfig) -> std::io::Result<FrontDoor> {
+        let sink = config.pipeline.sink.clone();
+        let server = Server::start_backend_with(
+            config.workers,
+            config.pipeline.clone(),
+            &config.backend_spec,
+        )
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e.to_string()))?;
+        let listener = TcpListener::bind(addr)?;
+        Ok(FrontDoor {
+            listener,
+            state: Arc::new(FrontState {
+                server: RwLock::new(Some(server)),
+                spec: config.backend_spec.clone(),
+                conn_gate: AdmissionGate::new(AdmissionPolicy {
+                    max_in_flight: config.max_connections,
+                    per_image_quota: 0,
+                }),
+                draining: AtomicBool::new(false),
+                shutdown: AtomicBool::new(false),
+                next_token: AtomicU64::new(1),
+                next_ticket: AtomicU64::new(1),
+                images: Mutex::new(HashMap::new()),
+                tickets: Mutex::new(HashMap::new()),
+                completed: AtomicU64::new(0),
+                sink,
+            }),
+        })
+    }
+
+    /// The actually bound address (resolves port 0).
+    pub fn local_addr(&self) -> std::io::Result<std::net::SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Accept and serve connections until a Shutdown frame arrives, then
+    /// drain the pipeline and return its serving summary. Connections
+    /// beyond the gate shed at accept with a typed frame; a protocol
+    /// error closes that connection only.
+    pub fn run(self, config: &FrontDoorConfig) -> std::io::Result<Summary> {
+        for conn in self.listener.incoming() {
+            if self.state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let mut stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let _ = stream.set_read_timeout(Some(config.read_timeout));
+            let _ = stream.set_write_timeout(Some(config.write_timeout));
+            let _ = stream.set_nodelay(true);
+            match self.state.conn_gate.try_admit(0) {
+                Admit::Admitted => {
+                    let state = Arc::clone(&self.state);
+                    let config = config.clone();
+                    std::thread::spawn(move || {
+                        serve_connection(stream, &state, &config);
+                        state.conn_gate.release(0);
+                    });
+                }
+                _ => {
+                    // Typed shed at the socket edge: the peer learns it
+                    // was load, not failure, and the thread budget stays
+                    // bounded.
+                    let _ = wire::write_frame(
+                        &mut stream,
+                        Op::Shed,
+                        &proto::encode_shed(
+                            ShedReason::ConnectionLimit,
+                            &format!(
+                                "connection limit: {} connections in flight (max {})",
+                                self.state.conn_gate.in_flight(),
+                                config.max_connections
+                            ),
+                        ),
+                    );
+                }
+            }
+            if self.state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+        }
+        let server = self
+            .state
+            .server
+            .write()
+            .unwrap()
+            .take()
+            .expect("front door owns the coordinator until shutdown");
+        Ok(server.shutdown())
+    }
+}
+
+/// A partially uploaded image registration (connection-local: a dead
+/// client's half-sent image vanishes with its connection thread).
+struct PendingRegister {
+    total: usize,
+    buf: Vec<u8>,
+}
+
+/// A partially uploaded submit: staged panels plus column coverage.
+struct PendingSubmit {
+    image: ImageHandle,
+    n: usize,
+    alpha: f32,
+    beta: f32,
+    b: Vec<f32>,
+    c: Vec<f32>,
+    covered: Vec<bool>,
+    t_begin: Instant,
+}
+
+/// Per-connection staging for streamed uploads.
+#[derive(Default)]
+struct ConnStaging {
+    regs: HashMap<u64, PendingRegister>,
+    subs: HashMap<u64, PendingSubmit>,
+}
+
+/// One reply frame.
+enum Reply {
+    Ok(Vec<u8>),
+    Err(String),
+    Shed(ShedReason, String),
+}
+
+impl Reply {
+    fn frame(&self) -> (Op, Vec<u8>) {
+        match self {
+            Reply::Ok(bytes) => (Op::Ok, bytes.clone()),
+            Reply::Err(msg) => (Op::Err, msg.clone().into_bytes()),
+            Reply::Shed(reason, msg) => (Op::Shed, proto::encode_shed(*reason, msg)),
+        }
+    }
+}
+
+/// Serve one connection's request loop until EOF, error, or shutdown.
+fn serve_connection(mut stream: TcpStream, state: &Arc<FrontState>, config: &FrontDoorConfig) {
+    let mut staging = ConnStaging::default();
+    loop {
+        let (op, payload) = match wire::read_frame_opt(&mut stream) {
+            Ok(Some(frame)) => frame,
+            Ok(None) | Err(_) => return,
+        };
+        if state.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        if op == Op::Await {
+            // Await streams its reply (Chunk frames + closing Ok) itself.
+            if !handle_await(&mut stream, &payload, state, config) {
+                return;
+            }
+            continue;
+        }
+        let reply = handle_request(op, &payload, state, &mut staging);
+        let (reply_op, reply_payload) = reply.frame();
+        if wire::write_frame(&mut stream, reply_op, &reply_payload).is_err() {
+            return;
+        }
+        if op == Op::Shutdown {
+            let _ = stream.flush();
+            // Unblock the accept loop so `run` observes the flag.
+            if let Ok(addr) = stream.local_addr() {
+                let _ = TcpStream::connect(addr);
+            }
+            return;
+        }
+    }
+}
+
+/// Dispatch one single-reply request.
+fn handle_request(
+    op: Op,
+    payload: &[u8],
+    state: &Arc<FrontState>,
+    staging: &mut ConnStaging,
+) -> Reply {
+    match run_request(op, payload, state, staging) {
+        Ok(reply) => reply,
+        Err(e) => Reply::Err(e.to_string()),
+    }
+}
+
+fn run_request(
+    op: Op,
+    payload: &[u8],
+    state: &Arc<FrontState>,
+    staging: &mut ConnStaging,
+) -> Result<Reply, WireError> {
+    match op {
+        Op::Ping => Ok(Reply::Ok(Vec::new())),
+        Op::FrontStatus => {
+            let status = FrontStatus {
+                backend_spec: state.spec.clone(),
+                draining: state.draining.load(Ordering::SeqCst),
+                images: state.images.lock().unwrap().len() as u64,
+                open_tickets: state.tickets.lock().unwrap().len() as u64,
+                completed: state.completed.load(Ordering::Relaxed),
+            };
+            Ok(Reply::Ok(proto::encode_status_ok(&status)))
+        }
+        Op::Metrics => {
+            let guard = state.server.read().unwrap();
+            let server = guard.as_ref().ok_or_else(shutting_down)?;
+            let json = server.snapshot().to_value().to_json_pretty();
+            Ok(Reply::Ok(json.into_bytes()))
+        }
+        Op::Drain => {
+            state.draining.store(true, Ordering::SeqCst);
+            Ok(Reply::Ok(Vec::new()))
+        }
+        Op::Shutdown => {
+            state.shutdown.store(true, Ordering::SeqCst);
+            Ok(Reply::Ok(Vec::new()))
+        }
+        Op::RegisterBegin => {
+            if state.draining.load(Ordering::SeqCst) {
+                return Ok(shed_draining());
+            }
+            let total = proto::decode_register_begin(payload)?;
+            if total > wire::MAX_FRAME_BYTES as u64 {
+                return Err(WireError::TooLarge(total));
+            }
+            let token = state.next_token.fetch_add(1, Ordering::Relaxed);
+            staging
+                .regs
+                .insert(token, PendingRegister { total: total as usize, buf: Vec::new() });
+            Ok(Reply::Ok(proto::encode_u64(token)))
+        }
+        Op::RegisterChunk => {
+            let (token, offset, chunk) = proto::decode_register_chunk(payload)?;
+            let reg = staging.regs.get_mut(&token).ok_or_else(|| {
+                WireError::Malformed(format!("register: unknown upload token {token}"))
+            })?;
+            if offset as usize != reg.buf.len() {
+                return Err(WireError::Malformed(format!(
+                    "register: chunk at offset {offset}, expected {}",
+                    reg.buf.len()
+                )));
+            }
+            if reg.buf.len() + chunk.len() > reg.total {
+                return Err(WireError::Malformed(format!(
+                    "register: upload overruns the declared {} bytes",
+                    reg.total
+                )));
+            }
+            reg.buf.extend_from_slice(chunk);
+            Ok(Reply::Ok(Vec::new()))
+        }
+        Op::RegisterEnd => {
+            let token = proto::decode_u64(payload)?;
+            let reg = staging.regs.remove(&token).ok_or_else(|| {
+                WireError::Malformed(format!("register: unknown upload token {token}"))
+            })?;
+            if reg.buf.len() != reg.total {
+                return Err(WireError::Truncated {
+                    needed: reg.total - reg.buf.len(),
+                    have: reg.buf.len(),
+                });
+            }
+            let image = Arc::new(wire::decode_image(&reg.buf)?);
+            let (m, k) = (image.m as u64, image.k as u64);
+            let guard = state.server.read().unwrap();
+            let server = guard.as_ref().ok_or_else(shutting_down)?;
+            let handle = server.register(image);
+            let id = handle.id;
+            drop(guard);
+            state.images.lock().unwrap().insert(id, handle);
+            Ok(Reply::Ok(proto::encode_register_ok(&ImageInfo { id, m, k })))
+        }
+        Op::Submit => {
+            if state.draining.load(Ordering::SeqCst) {
+                return Ok(shed_draining());
+            }
+            let (image_id, n, alpha, beta) = proto::decode_submit(payload)?;
+            let image = state
+                .images
+                .lock()
+                .unwrap()
+                .get(&image_id)
+                .cloned()
+                .ok_or_else(|| {
+                    WireError::Malformed(format!("submit: image {image_id} is not registered"))
+                })?;
+            if n == 0 {
+                return Err(WireError::Malformed("submit: N must be positive".into()));
+            }
+            let (m, k) = (image.image.m, image.image.k);
+            let ticket = state.next_ticket.fetch_add(1, Ordering::Relaxed);
+            staging.subs.insert(
+                ticket,
+                PendingSubmit {
+                    image,
+                    n,
+                    alpha,
+                    beta,
+                    b: vec![0.0; k * n],
+                    c: vec![0.0; m * n],
+                    covered: vec![false; n],
+                    t_begin: Instant::now(),
+                },
+            );
+            Ok(Reply::Ok(proto::encode_u64(ticket)))
+        }
+        Op::SubmitChunk => {
+            let (ticket, col0, ncols, b, c) = proto::decode_submit_chunk(payload)?;
+            let sub = staging.subs.get_mut(&ticket).ok_or_else(|| {
+                WireError::Malformed(format!("submit: unknown ticket {ticket}"))
+            })?;
+            let (col0, ncols) = (col0 as usize, ncols as usize);
+            let (m, k, n) = (sub.image.image.m, sub.image.image.k, sub.n);
+            if ncols == 0 || col0 + ncols > n {
+                return Err(WireError::Malformed(format!(
+                    "submit: column block [{col0}, {}) outside N = {n}",
+                    col0 + ncols
+                )));
+            }
+            if b.len() != k * ncols || c.len() != m * ncols {
+                return Err(WireError::Malformed(format!(
+                    "submit: block carries {} B / {} C elements (expected {} / {})",
+                    b.len(),
+                    c.len(),
+                    k * ncols,
+                    m * ncols
+                )));
+            }
+            scatter(&b, &mut sub.b, n, col0, ncols);
+            scatter(&c, &mut sub.c, n, col0, ncols);
+            for covered in &mut sub.covered[col0..col0 + ncols] {
+                *covered = true;
+            }
+            Ok(Reply::Ok(Vec::new()))
+        }
+        Op::SubmitEnd => {
+            let ticket = proto::decode_u64(payload)?;
+            let sub = staging.subs.remove(&ticket).ok_or_else(|| {
+                WireError::Malformed(format!("submit: unknown ticket {ticket}"))
+            })?;
+            if let Some(col) = sub.covered.iter().position(|c| !c) {
+                return Err(WireError::Malformed(format!(
+                    "submit: column {col} never uploaded"
+                )));
+            }
+            if state.draining.load(Ordering::SeqCst) {
+                return Ok(shed_draining());
+            }
+            Ok(enter_pipeline(ticket, sub, state))
+        }
+        Op::Poll => {
+            let ticket = proto::decode_u64(payload)?;
+            let mut tickets = state.tickets.lock().unwrap();
+            let t = tickets.get_mut(&ticket).ok_or_else(|| {
+                WireError::Malformed(format!("poll: unknown ticket {ticket}"))
+            })?;
+            if t.cached.is_none() {
+                if let Ok(resp) = t.rx.try_recv() {
+                    t.cached = Some(resp);
+                }
+            }
+            Ok(Reply::Ok(vec![t.cached.is_some() as u8]))
+        }
+        // Worker-tier opcodes have no meaning at the front door.
+        Op::Prepare | Op::Execute | Op::Stats | Op::Evict => {
+            Err(WireError::Malformed(format!("{op:?} is a worker opcode, not a front-door one")))
+        }
+        Op::Await | Op::Ok | Op::Err | Op::Chunk | Op::Shed => {
+            Err(WireError::Malformed(format!("{op:?} sent as a single-reply request")))
+        }
+    }
+}
+
+fn shutting_down() -> WireError {
+    WireError::Malformed("server is shutting down".into())
+}
+
+fn shed_draining() -> Reply {
+    Reply::Shed(ShedReason::Draining, "server is draining: not accepting new work".into())
+}
+
+/// Scatter a row-major `rows × ncols` column block into the full
+/// row-major `rows × n` panel at column `col0`.
+fn scatter(block: &[f32], panel: &mut [f32], n: usize, col0: usize, ncols: usize) {
+    let rows = block.len() / ncols;
+    for r in 0..rows {
+        panel[r * n + col0..r * n + col0 + ncols]
+            .copy_from_slice(&block[r * ncols..(r + 1) * ncols]);
+    }
+}
+
+/// Gather the `[col0, col0+ncols)` column block out of a row-major
+/// `rows × n` panel.
+fn gather(panel: &[f32], n: usize, col0: usize, ncols: usize) -> Vec<f32> {
+    let rows = panel.len() / n;
+    let mut block = Vec::with_capacity(rows * ncols);
+    for r in 0..rows {
+        block.extend_from_slice(&panel[r * n + col0..r * n + col0 + ncols]);
+    }
+    block
+}
+
+/// Hand a fully staged submit to the pipeline. Opens the `net.frontend`
+/// span context around the coordinator submit so the request's `request`
+/// root parents under it; an admission shed surfaces immediately as a
+/// typed frame (the coordinator answers sheds synchronously).
+fn enter_pipeline(ticket: u64, sub: PendingSubmit, state: &Arc<FrontState>) -> Reply {
+    let trace = state
+        .sink
+        .as_ref()
+        .map(|_| (next_trace_id(), next_span_id()));
+    let (n, image_id) = (sub.n, sub.image.id);
+    let guard = state.server.read().unwrap();
+    let Some(server) = guard.as_ref() else {
+        return Reply::Err(shutting_down().to_string());
+    };
+    let rx = {
+        let _ctx = trace.map(|(tid, sid)| push_span_context(tid, sid));
+        server.submit(SpmmRequest {
+            image: sub.image,
+            b: sub.b,
+            c: sub.c,
+            n: sub.n,
+            alpha: sub.alpha,
+            beta: sub.beta,
+        })
+    };
+    drop(guard);
+    // The coordinator answers admission sheds synchronously, so a
+    // rejection is already waiting here — turn it into a typed frame
+    // instead of parking a doomed ticket.
+    let cached = rx.try_recv().ok();
+    if let Some(resp) = &cached {
+        if resp.timing.backend == "rejected" {
+            let msg = resp.error.clone().unwrap_or_else(|| "admission rejected".into());
+            let reason = if msg.contains("per-image quota") {
+                Some(ShedReason::ImageQuota)
+            } else if msg.contains("admission rejected") {
+                Some(ShedReason::QueueFull)
+            } else {
+                // Pre-pipeline refusals that are not load (shape
+                // mismatch) stay plain errors.
+                None
+            };
+            let Some(reason) = reason else {
+                emit_frontend_span(state, trace, sub.t_begin, image_id, Some("error"));
+                return Reply::Err(msg);
+            };
+            emit_frontend_span(state, trace, sub.t_begin, image_id, Some(reason.as_str()));
+            return Reply::Shed(reason, msg);
+        }
+    }
+    state.tickets.lock().unwrap().insert(
+        ticket,
+        Ticket { rx, cached, trace, t_begin: sub.t_begin, image: image_id, n },
+    );
+    Reply::Ok(Vec::new())
+}
+
+/// Emit the `net.frontend` root span for one request.
+fn emit_frontend_span(
+    state: &Arc<FrontState>,
+    trace: Option<(u64, u64)>,
+    t_begin: Instant,
+    image: u64,
+    outcome: Option<&str>,
+) {
+    if let (Some(sink), Some((trace_id, span_id))) = (state.sink.as_ref(), trace) {
+        let mut span = SpanRecord::from_instants(trace_id, None, "net.frontend", t_begin, Instant::now());
+        span.span_id = span_id;
+        span = span.tag("image", image.to_string());
+        if let Some(outcome) = outcome {
+            span = span.tag("outcome", outcome.to_string());
+        }
+        sink.emit(span);
+    }
+}
+
+/// Serve one Await: block (bounded) for the ticket's response, stream the
+/// C panel back in column-block Chunk frames, close with the timing
+/// frame, and emit the request's `net.frontend` span. Returns false when
+/// the connection is no longer writable.
+fn handle_await(
+    stream: &mut TcpStream,
+    payload: &[u8],
+    state: &Arc<FrontState>,
+    config: &FrontDoorConfig,
+) -> bool {
+    let (ticket_id, chunk_cols) = match proto::decode_await(payload) {
+        Ok(v) => v,
+        Err(e) => {
+            return wire::write_frame(stream, Op::Err, format!("await: {e}").as_bytes()).is_ok()
+        }
+    };
+    let ticket = state.tickets.lock().unwrap().remove(&ticket_id);
+    let Some(mut ticket) = ticket else {
+        let msg = format!("await: unknown ticket {ticket_id}");
+        return wire::write_frame(stream, Op::Err, msg.as_bytes()).is_ok();
+    };
+    let resp = match ticket.cached.take() {
+        Some(resp) => resp,
+        None => match ticket.rx.recv_timeout(config.await_timeout) {
+            Ok(resp) => resp,
+            Err(RecvTimeoutError::Timeout) => {
+                // Still running: park the ticket again, tell the client.
+                let msg = format!("await: ticket {ticket_id} still running");
+                state.tickets.lock().unwrap().insert(ticket_id, ticket);
+                return wire::write_frame(stream, Op::Err, msg.as_bytes()).is_ok();
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                let msg = format!("await: pipeline dropped ticket {ticket_id}");
+                return wire::write_frame(stream, Op::Err, msg.as_bytes()).is_ok();
+            }
+        },
+    };
+    let ok = AwaitOk {
+        queue_ns: resp.timing.queue.as_nanos() as u64,
+        batch_ns: resp.timing.batch.as_nanos() as u64,
+        prepare_ns: resp.timing.prepare.as_nanos() as u64,
+        exec_ns: resp.timing.exec.as_nanos() as u64,
+        flops: resp.timing.flops,
+        backend: resp.timing.backend.to_string(),
+        error: resp.error.clone(),
+    };
+    // Stream the result panel only on success; a failed request's C is
+    // not a result.
+    if ok.error.is_none() {
+        let n = ticket.n;
+        let step = if chunk_cols == 0 { n } else { (chunk_cols as usize).min(n) };
+        let mut col0 = 0usize;
+        while col0 < n {
+            let ncols = step.min(n - col0);
+            let block = gather(&resp.c, n, col0, ncols);
+            let payload = proto::encode_result_chunk(col0 as u64, ncols as u64, &block);
+            if wire::write_frame(stream, Op::Chunk, &payload).is_err() {
+                return false;
+            }
+            col0 += ncols;
+        }
+    }
+    let alive = wire::write_frame(stream, Op::Ok, &proto::encode_await_ok(&ok)).is_ok();
+    state.completed.fetch_add(1, Ordering::Relaxed);
+    let outcome = ok.error.as_deref().map(|_| "error");
+    emit_frontend_span(state, ticket.trace, ticket.t_begin, ticket.image, outcome);
+    alive
+}

@@ -1,0 +1,444 @@
+//! Network front door end to end: real sockets, real processes.
+//!
+//! The acceptance contract for the serving edge:
+//!
+//! - A result fetched through the loopback front door is **bit-identical**
+//!   to the `functional` reference executing the same scheduled image
+//!   locally (chunked register, chunked panels, streamed result chunks —
+//!   transport must never touch the numbers).
+//! - An over-quota burst against one hot image sheds through the
+//!   pipeline's admission stage as typed `Shed` frames, surfaces as
+//!   `rejected > 0` / `image_sheds > 0` in the metrics summary, and other
+//!   images keep completing.
+//! - A client killed mid-stream (half a header, half an image upload,
+//!   half a panel) costs its own connection only; the server keeps
+//!   serving.
+//! - Each request's `net.frontend` span parents the pipeline's `request`
+//!   span tree, and the `exec` span's duration equals the wire-reported
+//!   `exec_ns` exactly.
+//! - `sextans loadgen` against a spawned `sextans serve --listen` emits a
+//!   parseable schema-v1 `BENCH_serve_*.json`, and `--drain-server`
+//!   drains and stops the server cleanly.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sextans::backend::{self, SpmmBackend};
+use sextans::coordinator::metrics::Summary;
+use sextans::coordinator::{AdmissionPolicy, BatchPolicy, PipelineConfig};
+use sextans::net::wire::{self, Op};
+use sextans::sched::preprocess;
+use sextans::serve_net::{
+    loadgen, proto, FrontClient, FrontDoor, FrontDoorConfig, LoadgenOptions, Mix, ShedReason,
+};
+use sextans::sparse::{rng::Rng, Coo};
+use sextans::telemetry::bench_record::BenchRecord;
+use sextans::telemetry::trace::{TelemetrySink, TraceCollector};
+
+const TIMEOUT: Duration = Duration::from_secs(20);
+
+/// Start an in-process front door on a free loopback port; returns the
+/// bound address and the join handle carrying the serving summary.
+fn start_door(config: FrontDoorConfig) -> (String, std::thread::JoinHandle<Summary>) {
+    let door = FrontDoor::bind("127.0.0.1:0", &config).expect("bind front door");
+    let addr = door.local_addr().expect("bound address").to_string();
+    let handle = std::thread::spawn(move || door.run(&config).expect("front door run"));
+    (addr, handle)
+}
+
+/// One `sextans serve --listen` child process, killed on drop so a
+/// failing test never leaks listeners.
+struct ServeProc {
+    child: Child,
+    addr: String,
+}
+
+impl ServeProc {
+    /// Spawn on port 0 and scrape the bound address from the readiness
+    /// line.
+    fn spawn(extra: &[&str]) -> ServeProc {
+        let mut args =
+            vec!["serve", "--listen", "127.0.0.1:0", "--backend", "functional", "--workers", "2"];
+        args.extend_from_slice(extra);
+        let mut child = Command::new(env!("CARGO_BIN_EXE_sextans"))
+            .args(&args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn sextans serve");
+        let stdout = child.stdout.take().expect("serve stdout is piped");
+        let mut lines = BufReader::new(stdout).lines();
+        let addr = loop {
+            let line = lines
+                .next()
+                .expect("serve exited before its readiness line")
+                .expect("read serve stdout");
+            if let Some(rest) = line.strip_prefix("serve listening on ") {
+                break rest
+                    .split_whitespace()
+                    .next()
+                    .expect("address token after 'listening on'")
+                    .to_string();
+            }
+        };
+        // Keep draining stdout so the server can never block on a full
+        // pipe once the test stops reading.
+        std::thread::spawn(move || for _line in lines {});
+        ServeProc { child, addr }
+    }
+
+    /// Bounded wait for a clean exit (the graceful-drain assertion).
+    fn wait_for_exit(&mut self) -> std::process::ExitStatus {
+        let deadline = Instant::now() + TIMEOUT;
+        while Instant::now() < deadline {
+            match self.child.try_wait() {
+                Ok(Some(status)) => return status,
+                Ok(None) => std::thread::sleep(Duration::from_millis(20)),
+                Err(e) => panic!("wait on serve process: {e}"),
+            }
+        }
+        panic!("serve process did not exit within {TIMEOUT:?}");
+    }
+}
+
+impl Drop for ServeProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// A matrix whose SpMM result is schedule-invariant: exactly one
+/// non-zero per row per K0 window, so every schedule accumulates each
+/// row in the same floating-point order — local and networked execution
+/// are bit-identical, not merely allclose.
+fn schedule_invariant(m: usize, k: usize, k0: usize, seed: u64) -> Coo {
+    let mut rng = Rng::new(seed);
+    let windows = k.div_ceil(k0);
+    let mut rows = Vec::with_capacity(m * windows);
+    let mut cols = Vec::with_capacity(m * windows);
+    let mut vals = Vec::with_capacity(m * windows);
+    for r in 0..m {
+        for w in 0..windows {
+            let lo = w * k0;
+            let hi = k.min(lo + k0);
+            rows.push(r as u32);
+            cols.push((lo + rng.index(hi - lo)) as u32);
+            vals.push(rng.normal());
+        }
+    }
+    Coo::new(m, k, rows, cols, vals).unwrap()
+}
+
+#[test]
+fn loopback_front_door_is_bit_identical_to_functional() {
+    let mut serve = ServeProc::spawn(&[]);
+    let k0 = 8;
+    let coo = schedule_invariant(48, 32, k0, 0xF40D);
+    let image = Arc::new(preprocess(&coo, 4, k0, 4));
+    let n = 5;
+    let mut rng = Rng::new(0xF40D ^ 0xB0B);
+    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+    let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+
+    let functional =
+        backend::create("functional").unwrap().prepare(Arc::clone(&image)).unwrap();
+
+    let mut client = FrontClient::connect(&serve.addr, TIMEOUT).expect("connect front door");
+    // 512-byte chunks force a genuinely multi-frame image upload.
+    let info = client.register_image(&image, 512).expect("register image");
+    assert_eq!((info.m as usize, info.k as usize), (coo.m, coo.k));
+
+    for (alpha, beta) in [(1.0f32, 0.0f32), (2.5, -0.5)] {
+        let mut want = c0.clone();
+        functional.execute(&b, &mut want, n, alpha, beta).unwrap();
+        // col_block 2 streams B/C up and C_out down in [2, 2, 1] blocks.
+        let resp = client.call(&info, n, alpha, beta, &b, &c0, 2).expect("front-door call");
+        assert!(resp.timing.error.is_none(), "{:?}", resp.timing.error);
+        assert!(resp.timing.flops > 0);
+        assert_eq!(
+            resp.c, want,
+            "front door must be bit-identical to functional at alpha={alpha}, beta={beta}"
+        );
+    }
+
+    client.shutdown_server().expect("shutdown");
+    assert!(serve.wait_for_exit().success(), "serve must exit cleanly after Shutdown");
+}
+
+#[test]
+fn hot_image_burst_sheds_via_admission_while_others_complete() {
+    let config = FrontDoorConfig {
+        backend_spec: "functional".to_string(),
+        workers: 2,
+        pipeline: PipelineConfig {
+            // One in-flight request per image, and a batch window long
+            // enough that a hot image's next arrival always finds its
+            // quota taken.
+            admission: AdmissionPolicy { max_in_flight: 4096, per_image_quota: 1 },
+            batch: BatchPolicy {
+                window: Duration::from_millis(30),
+                ..PipelineConfig::default().batch
+            },
+            ..PipelineConfig::default()
+        },
+        ..FrontDoorConfig::default()
+    };
+    let (addr, door) = start_door(config);
+
+    let opts = LoadgenOptions {
+        addr: addr.clone(),
+        rate: 400.0,
+        duration: Duration::from_millis(500),
+        mix: Mix::Uniform,
+        images: 3,
+        hot: 0.7,
+        m: 64,
+        k: 64,
+        n: 4,
+        nnz: 512,
+        seed: 0x407,
+        senders: 8,
+        timeout: TIMEOUT,
+        ..LoadgenOptions::default()
+    };
+    let report = loadgen::run(&opts).expect("loadgen run");
+
+    assert!(report.completed > 0, "some requests must complete: {report:?}");
+    assert!(
+        report.sheds[ShedReason::ImageQuota as usize] > 0,
+        "the hot image must trip its quota: {report:?}"
+    );
+    assert!(
+        report.completed_by_image.iter().filter(|&&(_, count)| count > 0).count() >= 2,
+        "images besides the hot one must keep completing: {:?}",
+        report.completed_by_image
+    );
+
+    // The server's own metrics agree with the client-observed sheds.
+    let mut client = FrontClient::connect(&addr, TIMEOUT).expect("connect for metrics");
+    let metrics = client.metrics_json().expect("metrics json");
+    assert!(metrics.contains("image_sheds"), "summary JSON carries image_sheds: {metrics}");
+    client.shutdown_server().expect("shutdown");
+    let summary = door.join().expect("front door thread");
+    assert!(summary.rejected > 0, "pipeline admission must have shed: {summary:?}");
+    let shed_max =
+        summary.image_sheds.iter().map(|&(_, count)| count).max().unwrap_or(0);
+    assert!(shed_max > 0, "per-image quota sheds must be attributed: {:?}", summary.image_sheds);
+}
+
+#[test]
+fn killing_a_client_mid_stream_leaves_the_server_serving() {
+    let config = FrontDoorConfig {
+        backend_spec: "functional".to_string(),
+        ..FrontDoorConfig::default()
+    };
+    let (addr, door) = start_door(config);
+
+    // (a) Die inside the frame header.
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    s.write_all(b"SX").expect("write half a magic");
+    drop(s);
+
+    // (b) Die mid image upload: begin + one chunk, never end.
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    wire::write_frame(&mut s, Op::RegisterBegin, &proto::encode_register_begin(1_000_000))
+        .expect("register begin");
+    let (op, payload) = wire::read_frame(&mut s).expect("token reply");
+    assert_eq!(op, Op::Ok);
+    let token = proto::decode_u64(&payload).expect("token");
+    wire::write_frame(
+        &mut s,
+        Op::RegisterChunk,
+        &proto::encode_register_chunk(token, 0, &[0u8; 128]),
+    )
+    .expect("one chunk");
+    let _ = wire::read_frame(&mut s);
+    drop(s);
+
+    // (c) Die mid panel upload: a registered image, a submit, one column
+    // block, never SubmitEnd.
+    let coo = schedule_invariant(24, 16, 8, 0xDEAD);
+    let image = Arc::new(preprocess(&coo, 4, 8, 4));
+    let n = 4;
+    let mut client = FrontClient::connect(&addr, TIMEOUT).expect("connect");
+    let info = client.register_image(&image, 4096).expect("register");
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    wire::write_frame(&mut s, Op::Submit, &proto::encode_submit(info.id, n, 1.0, 0.0))
+        .expect("submit");
+    let (op, payload) = wire::read_frame(&mut s).expect("ticket reply");
+    assert_eq!(op, Op::Ok);
+    let ticket = proto::decode_u64(&payload).expect("ticket");
+    let b_block = vec![0.25f32; coo.k];
+    let c_block = vec![0.5f32; coo.m];
+    wire::write_frame(
+        &mut s,
+        Op::SubmitChunk,
+        &proto::encode_submit_chunk(ticket, 0, 1, &b_block, &c_block),
+    )
+    .expect("one column");
+    let _ = wire::read_frame(&mut s);
+    drop(s);
+
+    // The server is unbothered: a full register + call still works and
+    // is still exact.
+    let mut rng = Rng::new(0xDEAD ^ 0xB0B);
+    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+    let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+    let functional =
+        backend::create("functional").unwrap().prepare(Arc::clone(&image)).unwrap();
+    let mut want = c0.clone();
+    functional.execute(&b, &mut want, n, 1.0, 0.0).unwrap();
+    let resp = client.call(&info, n, 1.0, 0.0, &b, &c0, 0).expect("call after dead clients");
+    assert_eq!(resp.c, want, "survivor requests stay bit-identical");
+
+    client.shutdown_server().expect("shutdown");
+    let summary = door.join().expect("front door thread");
+    assert!(summary.requests >= 1, "{summary:?}");
+}
+
+#[test]
+fn frontend_span_parents_the_pipeline_trace_and_reconciles_with_timing() {
+    let collector = Arc::new(TraceCollector::new());
+    let config = FrontDoorConfig {
+        backend_spec: "functional".to_string(),
+        pipeline: PipelineConfig {
+            sink: Some(Arc::clone(&collector) as Arc<dyn TelemetrySink>),
+            ..PipelineConfig::default()
+        },
+        ..FrontDoorConfig::default()
+    };
+    let (addr, door) = start_door(config);
+
+    let coo = schedule_invariant(32, 16, 8, 0x59A2);
+    let image = Arc::new(preprocess(&coo, 4, 8, 4));
+    let n = 3;
+    let mut rng = Rng::new(0x59A2 ^ 0xB0B);
+    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+    let c0 = vec![0.0f32; coo.m * n];
+
+    let mut client = FrontClient::connect(&addr, TIMEOUT).expect("connect");
+    let info = client.register_image(&image, 4096).expect("register");
+    let resp = client.call(&info, n, 1.0, 0.0, &b, &c0, 0).expect("call");
+    assert!(resp.timing.error.is_none());
+
+    // The net.frontend span is emitted just after the reply frame is
+    // written, so the client can observe the response first — wait.
+    let deadline = Instant::now() + TIMEOUT;
+    let spans = loop {
+        let spans = collector.spans();
+        if spans.iter().any(|s| s.name == "net.frontend")
+            && spans.iter().any(|s| s.name == "request")
+        {
+            break spans;
+        }
+        assert!(Instant::now() < deadline, "spans never arrived: {:?}", collector.spans());
+        std::thread::sleep(Duration::from_millis(10));
+    };
+
+    let front = spans.iter().find(|s| s.name == "net.frontend").expect("frontend span");
+    let request = spans
+        .iter()
+        .find(|s| s.name == "request" && s.trace_id == front.trace_id)
+        .expect("pipeline request root in the same trace");
+    assert_eq!(
+        request.parent_id,
+        Some(front.span_id),
+        "the pipeline root must parent under the network edge"
+    );
+    assert!(
+        front.start_ns <= request.start_ns && request.end_ns <= front.end_ns,
+        "the frontend span must cover the pipeline: {front:?} vs {request:?}"
+    );
+    for name in ["admission", "queue", "batch", "prepare", "exec"] {
+        let stage = spans
+            .iter()
+            .find(|s| s.name == name && s.trace_id == front.trace_id)
+            .unwrap_or_else(|| panic!("stage span {name} missing from the trace"));
+        if name != "admission" {
+            assert_eq!(stage.parent_id, Some(request.span_id), "{name} parents the root");
+        }
+    }
+    // Spans and the wire-reported timing are stamped from the same
+    // Instants, so they reconcile exactly, not approximately.
+    let exec = spans
+        .iter()
+        .find(|s| s.name == "exec" && s.trace_id == front.trace_id)
+        .expect("exec span");
+    assert_eq!(
+        exec.end_ns - exec.start_ns,
+        resp.timing.exec_ns,
+        "exec span duration must equal the AwaitOk exec_ns"
+    );
+
+    client.shutdown_server().expect("shutdown");
+    let _ = door.join().expect("front door thread");
+}
+
+#[test]
+fn loadgen_cli_emits_schema_v1_bench_and_drains_the_server() {
+    let mut serve = ServeProc::spawn(&[]);
+    let out_dir = std::env::temp_dir().join(format!("sextans-serve-itest-{}", std::process::id()));
+    std::fs::create_dir_all(&out_dir).expect("create out dir");
+    let metrics_path = out_dir.join("serve_metrics.json");
+
+    let output = Command::new(env!("CARGO_BIN_EXE_sextans"))
+        .args([
+            "loadgen",
+            "--addr",
+            &serve.addr,
+            "--rate",
+            "40",
+            "--duration",
+            "0.5",
+            "--mix",
+            "banded",
+            "--images",
+            "2",
+            "--m",
+            "64",
+            "--k",
+            "64",
+            "--n",
+            "4",
+            "--nnz",
+            "512",
+            "--name",
+            "itest",
+            "--out",
+            out_dir.to_str().unwrap(),
+            "--metrics-json",
+            metrics_path.to_str().unwrap(),
+            "--drain-server",
+        ])
+        .output()
+        .expect("run sextans loadgen");
+    assert!(
+        output.status.success(),
+        "loadgen failed:\n{}\n{}",
+        String::from_utf8_lossy(&output.stdout),
+        String::from_utf8_lossy(&output.stderr)
+    );
+
+    // The persisted snapshot parses as schema v1 and is a real
+    // measurement, not a zeroed placeholder.
+    let bench_path = out_dir.join("BENCH_serve_itest.json");
+    let record = BenchRecord::read(&bench_path).expect("parse BENCH_serve_itest.json");
+    assert_eq!(record.name, "serve_itest");
+    assert_eq!(record.results.len(), 5, "one row per stage: {:?}", record.results);
+    assert!(!record.is_zeroed(), "a completed run must not look like a placeholder");
+    assert!(
+        record.results.iter().any(|r| r.bench == "serve/e2e" && r.gflops > 0.0),
+        "{:?}",
+        record.results
+    );
+    let metrics = std::fs::read_to_string(&metrics_path).expect("metrics json written");
+    assert!(metrics.contains("\"requests\""), "{metrics}");
+
+    // --drain-server shut the server down; the process must exit cleanly.
+    assert!(serve.wait_for_exit().success(), "serve must exit cleanly after drain + shutdown");
+    let _ = std::fs::remove_dir_all(&out_dir);
+}
