@@ -302,7 +302,12 @@ fn worker_loop(
                 image: job.image.id,
             };
             recorder.lock().unwrap().record(timing);
-            let _ = seg.respond.send(SpmmResponse { c, timing, error: error.clone() });
+            let _ = seg.respond.send(SpmmResponse {
+                c,
+                timing,
+                error: error.clone(),
+                rejected: None,
+            });
             gate.release(job.image.id);
             // Stage spans share the `Instant`s the timing above was built
             // from, so the tree's durations reconcile with it exactly. The

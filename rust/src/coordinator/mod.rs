@@ -104,5 +104,5 @@ pub use admission::AdmissionPolicy;
 pub use batcher::BatchPolicy;
 pub use residency::{ReshardPolicy, ResidencyPolicy};
 pub use server::{
-    ImageHandle, PipelineConfig, Server, SpmmRequest, SpmmResponse,
+    ImageHandle, PipelineConfig, RejectKind, Server, SpmmRequest, SpmmResponse,
 };

@@ -58,6 +58,20 @@ pub struct SpmmRequest {
     pub beta: f32,
 }
 
+/// Why a submit was refused before entering the pipeline. Carried on
+/// [`SpmmResponse::rejected`] so callers (the network front door above
+/// all) can classify refusals without matching error-message text.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectKind {
+    /// B/C buffer lengths do not match the image shape and `n` — a bad
+    /// request, not load.
+    ShapeMismatch,
+    /// The admission gate's global in-flight bound is full.
+    QueueFull,
+    /// The target image is at its per-image fairness quota.
+    ImageQuota,
+}
+
 /// Completed response.
 pub struct SpmmResponse {
     /// C_out, row-major M × n. Zero-filled when the pipeline failed
@@ -69,6 +83,10 @@ pub struct SpmmResponse {
     pub timing: RequestTiming,
     /// Why the pipeline failed, if it did; `c` is then not a result.
     pub error: Option<String>,
+    /// Set when the request was refused before entering the pipeline
+    /// (`error` then carries the human-readable detail); `None` for
+    /// served requests and mid-pipeline failures.
+    pub rejected: Option<RejectKind>,
 }
 
 /// Every pipeline stage's policy in one place. `Default` matches the
@@ -289,6 +307,7 @@ impl Server {
                     req.c.len(),
                     sm.m * req.n
                 )),
+                rejected: Some(RejectKind::ShapeMismatch),
             });
             return rx;
         }
@@ -305,6 +324,7 @@ impl Server {
                         self.gate.in_flight(),
                         self.gate.policy().max_in_flight
                     )),
+                    rejected: Some(RejectKind::QueueFull),
                 });
                 return rx;
             }
@@ -322,6 +342,7 @@ impl Server {
                         req.image.id,
                         self.gate.policy().per_image_quota
                     )),
+                    rejected: Some(RejectKind::ImageQuota),
                 });
                 return rx;
             }
@@ -606,6 +627,7 @@ mod tests {
         let err = resp.error.expect("shed requests must carry an error");
         assert!(err.contains("admission rejected"), "{err}");
         assert_eq!(resp.timing.backend, "rejected");
+        assert_eq!(resp.rejected, Some(RejectKind::QueueFull));
         let summary = server.shutdown();
         assert_eq!(summary.rejected, 1);
         assert_eq!(summary.requests, 0, "rejected requests are never served");
@@ -637,10 +659,15 @@ mod tests {
         let mut served = 0usize;
         let mut shed = 0usize;
         for rx in rxs {
-            match rx.recv().unwrap().error {
-                None => served += 1,
+            let resp = rx.recv().unwrap();
+            match resp.error {
+                None => {
+                    assert_eq!(resp.rejected, None, "served requests carry no reject kind");
+                    served += 1;
+                }
                 Some(e) => {
                     assert!(e.contains("per-image quota"), "{e}");
+                    assert_eq!(resp.rejected, Some(RejectKind::ImageQuota));
                     shed += 1;
                 }
             }

@@ -400,8 +400,11 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
                 cli.get_u64("write-timeout-ms", 30_000),
             ),
             max_connections: cli.get_usize("max-connections", 256),
+            // Default below --read-timeout-ms so an Await answers
+            // ("still running") before a default client read times out
+            // and abandons the connection mid-reply.
             await_timeout: std::time::Duration::from_millis(
-                cli.get_u64("await-timeout-ms", 60_000),
+                cli.get_u64("await-timeout-ms", 15_000),
             ),
         };
         let door = FrontDoor::bind(listen, &fd_config)?;

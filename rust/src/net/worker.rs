@@ -46,10 +46,13 @@ pub struct WorkerConfig {
     pub write_timeout: Duration,
     /// Optional residency byte budget, sharing [`ResidencyPolicy`] with
     /// the coordinator's in-process cache (`sextans worker
-    /// --max-resident-mb`). A prepare that would push the worker's
-    /// resident bytes past `max_resident_bytes` is refused with a typed
-    /// error — the client sees a [`WireError`], never an OOM-killed
-    /// worker. `None` (the default) leaves residency unbounded.
+    /// --max-resident-mb`). Enforced twice: before `prepare`, against a
+    /// conservative estimate from the decoded image's stream footprint
+    /// (so the prepare transient itself cannot spike far past the
+    /// budget), and after `prepare`, against the handle's exact retained
+    /// bytes. Either refusal is a typed error — the client sees a
+    /// [`WireError`], never an OOM-killed worker. `None` (the default)
+    /// leaves residency unbounded.
     pub residency: Option<ResidencyPolicy>,
 }
 
@@ -80,6 +83,19 @@ struct WorkerState {
 }
 
 impl WorkerState {
+    /// Resident bytes across all images except `id` — re-preparing an id
+    /// replaces its old residency, so its bytes don't count against the
+    /// incoming prepare.
+    fn resident_bytes_excluding(&self, id: u64) -> u64 {
+        self.resident
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(rid, _)| **rid != id)
+            .map(|(_, r)| r.handle.resident_bytes_now())
+            .sum()
+    }
+
     fn stats(&self) -> WorkerStats {
         let resident = self.resident.lock().unwrap();
         WorkerStats {
@@ -189,6 +205,22 @@ fn handle_request(op: Op, payload: &[u8], state: &Arc<WorkerState>) -> Result<Ve
         Op::Prepare => {
             let (id, image) =
                 decode_prepare_req(payload).map_err(|e| format!("prepare: {e}"))?;
+            // Refuse before materializing when the image's own stream
+            // footprint already busts the budget: prepare pins at least
+            // the decoded streams, so checking only after prepare_send
+            // would let peak memory spike far past --max-resident-mb
+            // before the typed refusal. The exact retained-bytes check
+            // below still decides the final residency.
+            if let Some(max) = state.max_resident_bytes {
+                let estimate = image.a_stream_bytes();
+                let in_use = state.resident_bytes_excluding(id);
+                if in_use.saturating_add(estimate) > max {
+                    return Err(format!(
+                        "prepare: residency budget exceeded: image {id} streams \
+                         {estimate} B before prepare, {in_use} of {max} B in use"
+                    ));
+                }
+            }
             let handle = backend::prepare_send(&state.spec, Arc::new(image))
                 .map_err(|e| format!("prepare: {e}"))?;
             let cost = handle.prepare_cost();
@@ -377,6 +409,37 @@ mod tests {
         let err =
             rpc(&mut conn, Op::Prepare, &wire::encode_prepare_req(1, &sm)).unwrap_err();
         assert!(err.to_string().contains("residency budget exceeded"), "{err}");
+        // The refusal is a reply, not a crash: the worker keeps serving.
+        assert!(rpc(&mut conn, Op::Ping, &[]).unwrap().is_empty());
+        rpc(&mut conn, Op::Shutdown, &[]).unwrap();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn prepare_estimate_refuses_before_materializing() {
+        // Functional retains nothing after prepare (resident_bytes = 0),
+        // so only the pre-prepare stream-footprint estimate can refuse
+        // here — pinning that the budget also bounds the prepare
+        // transient, not just retained bytes.
+        let config = WorkerConfig {
+            backend_spec: "functional".to_string(),
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            residency: Some(ResidencyPolicy { max_resident_bytes: 1, scratch_idle: None }),
+        };
+        let worker = Worker::bind("127.0.0.1:0", &config).unwrap();
+        let addr = worker.local_addr().unwrap();
+        let run_config = config.clone();
+        let join = std::thread::spawn(move || worker.run(&run_config).unwrap());
+        let mut conn = connect(addr);
+
+        let mut rng = Rng::new(6);
+        let coo = gen::random_uniform(16, 16, 0.2, &mut rng);
+        let sm = preprocess(&coo, 2, 8, 3);
+        let err =
+            rpc(&mut conn, Op::Prepare, &wire::encode_prepare_req(1, &sm)).unwrap_err();
+        assert!(err.to_string().contains("residency budget exceeded"), "{err}");
+        assert!(err.to_string().contains("before prepare"), "{err}");
         // The refusal is a reply, not a crash: the worker keeps serving.
         assert!(rpc(&mut conn, Op::Ping, &[]).unwrap().is_empty());
         rpc(&mut conn, Op::Shutdown, &[]).unwrap();

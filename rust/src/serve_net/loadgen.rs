@@ -405,10 +405,7 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadReport, ClientError> {
         let panels = Arc::clone(&panels);
         let opts = opts.clone();
         senders.push(std::thread::spawn(move || {
-            let mut client = match FrontClient::connect(&opts.addr, opts.timeout) {
-                Ok(c) => c,
-                Err(_) => return,
-            };
+            let mut client = FrontClient::connect(&opts.addr, opts.timeout).ok();
             loop {
                 let job = match job_rx.lock().unwrap().recv() {
                     Ok(j) => j,
@@ -418,14 +415,32 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadReport, ClientError> {
                 if job.due > now {
                     std::thread::sleep(job.due - now);
                 }
+                if client.is_none() {
+                    client = FrontClient::connect(&opts.addr, opts.timeout).ok();
+                }
+                let Some(conn) = client.as_mut() else {
+                    if out_tx.send(Outcome::Error).is_err() {
+                        return;
+                    }
+                    continue;
+                };
                 let info = &infos[job.image_idx];
                 let (b, c) = &panels[job.image_idx];
                 gauge.enter();
                 let t0 = Instant::now();
                 let result =
-                    client.call(info, opts.n, 1.0, 0.5, b, c, opts.col_block);
+                    conn.call(info, opts.n, 1.0, 0.5, b, c, opts.col_block);
                 let e2e_ns = t0.elapsed().as_nanos() as u64;
                 gauge.exit();
+                // A transport error leaves the framed stream at an
+                // unknown position — e.g. a read timeout mid-Await whose
+                // reply frames the server writes later. Reusing the
+                // connection would read those frames as the next rpc's
+                // reply and silently desync, so drop it and reconnect
+                // before the next job.
+                if matches!(result, Err(ClientError::Wire(_))) {
+                    client = None;
+                }
                 let outcome = match result {
                     Ok(resp) => match resp.timing.error {
                         None => Outcome::Done {

@@ -36,7 +36,7 @@ use super::proto::{self, AwaitOk, FrontStatus, ImageInfo, ShedReason};
 use crate::coordinator::admission::{Admit, AdmissionGate, AdmissionPolicy};
 use crate::coordinator::metrics::Summary;
 use crate::coordinator::server::{
-    ImageHandle, PipelineConfig, Server, SpmmRequest, SpmmResponse,
+    ImageHandle, PipelineConfig, RejectKind, Server, SpmmRequest, SpmmResponse,
 };
 use crate::net::wire::{self, Op, WireError};
 use crate::telemetry::trace::{
@@ -63,6 +63,9 @@ pub struct FrontDoorConfig {
     pub max_connections: usize,
     /// How long one Await may block on an in-flight request before the
     /// server replies "still running" (the ticket stays fetchable).
+    /// Keep this strictly below the clients' read timeout: a client that
+    /// gives up mid-Await abandons a connection the server will still
+    /// write Chunk/Ok frames to, desyncing any later rpc on it.
     pub await_timeout: Duration,
 }
 
@@ -75,7 +78,10 @@ impl Default for FrontDoorConfig {
             read_timeout: Duration::from_secs(30),
             write_timeout: Duration::from_secs(30),
             max_connections: 256,
-            await_timeout: Duration::from_secs(60),
+            // Strictly below the 30 s read timeouts (here and in the
+            // default clients) so an Await always answers before the
+            // peer can time out and abandon the connection mid-reply.
+            await_timeout: Duration::from_secs(15),
         }
     }
 }
@@ -177,8 +183,18 @@ impl FrontDoor {
                     let state = Arc::clone(&self.state);
                     let config = config.clone();
                     std::thread::spawn(move || {
+                        // Return the slot from a Drop guard so a panic in
+                        // serve_connection cannot leak it — leaked slots
+                        // would walk the gate down until every accept
+                        // sheds with ConnectionLimit.
+                        struct SlotGuard(Arc<FrontState>);
+                        impl Drop for SlotGuard {
+                            fn drop(&mut self) {
+                                self.0.conn_gate.release(0);
+                            }
+                        }
+                        let _slot = SlotGuard(Arc::clone(&state));
                         serve_connection(stream, &state, &config);
-                        state.conn_gate.release(0);
                     });
                 }
                 _ => {
@@ -409,6 +425,13 @@ fn run_request(
                 return Err(WireError::Malformed("submit: N must be positive".into()));
             }
             let (m, k) = (image.image.m, image.image.k);
+            // `n` arrives from the wire, so bound every staged allocation
+            // (B, C, covered) before making it — a hostile Submit frame
+            // must cost a typed refusal, not a multi-petabyte alloc or a
+            // wrapped `k * n`.
+            let b_elems = staged_elems(k, n)?;
+            let c_elems = staged_elems(m, n)?;
+            let covered_elems = staged_elems(1, n)?;
             let ticket = state.next_ticket.fetch_add(1, Ordering::Relaxed);
             staging.subs.insert(
                 ticket,
@@ -417,9 +440,9 @@ fn run_request(
                     n,
                     alpha,
                     beta,
-                    b: vec![0.0; k * n],
-                    c: vec![0.0; m * n],
-                    covered: vec![false; n],
+                    b: vec![0.0; b_elems],
+                    c: vec![0.0; c_elems],
+                    covered: vec![false; covered_elems],
                     t_begin: Instant::now(),
                 },
             );
@@ -492,6 +515,27 @@ fn run_request(
     }
 }
 
+/// Largest per-panel staging buffer `Op::Submit` will allocate on a
+/// client's behalf, in f32 elements — the frame cap reused as a memory
+/// cap, so the staged panel is never bigger than the largest frame that
+/// could legally carry it.
+const MAX_PANEL_ELEMS: usize = wire::MAX_FRAME_BYTES as usize / std::mem::size_of::<f32>();
+
+/// Checked `rows * n` staging size; overflow or anything past
+/// [`MAX_PANEL_ELEMS`] is a typed [`WireError::TooLarge`], never an
+/// allocation.
+fn staged_elems(rows: usize, n: usize) -> Result<usize, WireError> {
+    rows.checked_mul(n)
+        .filter(|&elems| elems <= MAX_PANEL_ELEMS)
+        .ok_or_else(|| {
+            WireError::TooLarge(
+                (rows as u64)
+                    .saturating_mul(n as u64)
+                    .saturating_mul(std::mem::size_of::<f32>() as u64),
+            )
+        })
+}
+
 fn shutting_down() -> WireError {
     WireError::Malformed("server is shutting down".into())
 }
@@ -552,16 +596,14 @@ fn enter_pipeline(ticket: u64, sub: PendingSubmit, state: &Arc<FrontState>) -> R
     // instead of parking a doomed ticket.
     let cached = rx.try_recv().ok();
     if let Some(resp) = &cached {
-        if resp.timing.backend == "rejected" {
+        if let Some(kind) = resp.rejected {
             let msg = resp.error.clone().unwrap_or_else(|| "admission rejected".into());
-            let reason = if msg.contains("per-image quota") {
-                Some(ShedReason::ImageQuota)
-            } else if msg.contains("admission rejected") {
-                Some(ShedReason::QueueFull)
-            } else {
+            let reason = match kind {
+                RejectKind::QueueFull => Some(ShedReason::QueueFull),
+                RejectKind::ImageQuota => Some(ShedReason::ImageQuota),
                 // Pre-pipeline refusals that are not load (shape
                 // mismatch) stay plain errors.
-                None
+                RejectKind::ShapeMismatch => None,
             };
             let Some(reason) = reason else {
                 emit_frontend_span(state, trace, sub.t_begin, image_id, Some("error"));

@@ -231,6 +231,43 @@ fn hot_image_burst_sheds_via_admission_while_others_complete() {
 }
 
 #[test]
+fn hostile_submit_n_is_refused_without_allocating() {
+    let config = FrontDoorConfig {
+        backend_spec: "functional".to_string(),
+        ..FrontDoorConfig::default()
+    };
+    let (addr, door) = start_door(config);
+
+    let coo = schedule_invariant(24, 16, 8, 0xB16);
+    let image = Arc::new(preprocess(&coo, 4, 8, 4));
+    let mut client = FrontClient::connect(&addr, TIMEOUT).expect("connect");
+    let info = client.register_image(&image, 4096).expect("register");
+
+    // One small Submit frame asking for ~2^44-element staging panels: if
+    // the server tried to honor it, the allocation (tens of TiB) would
+    // abort the process — the contract is a typed refusal instead.
+    let mut s = TcpStream::connect(&addr).expect("connect raw");
+    wire::write_frame(&mut s, Op::Submit, &proto::encode_submit(info.id, 1 << 40, 1.0, 0.0))
+        .expect("hostile submit");
+    let (op, payload) = wire::read_frame(&mut s).expect("refusal reply");
+    assert_eq!(op, Op::Err, "hostile n must be refused, not served");
+    let msg = String::from_utf8_lossy(&payload);
+    assert!(msg.contains("exceeds"), "refusal names the cap: {msg}");
+    drop(s);
+
+    // The refusal cost nothing: the same server still serves real work.
+    let n = 3;
+    let mut rng = Rng::new(0xB16 ^ 0xB0B);
+    let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+    let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+    let resp = client.call(&info, n, 1.0, 0.0, &b, &c0, 0).expect("call after hostile submit");
+    assert!(resp.timing.error.is_none(), "{:?}", resp.timing.error);
+
+    client.shutdown_server().expect("shutdown");
+    let _ = door.join().expect("front door thread");
+}
+
+#[test]
 fn killing_a_client_mid_stream_leaves_the_server_serving() {
     let config = FrontDoorConfig {
         backend_spec: "functional".to_string(),
