@@ -1,12 +1,15 @@
-//! Backend benchmarks: native engine (1/2/4/8 threads) vs the functional
-//! simulator on synthetic catalog shapes, in GFLOP/s of served SpMM.
+//! Backend benchmarks: native engine (1/2/4/8 threads) and the adaptive
+//! column-blocked variant vs the functional simulator on synthetic catalog
+//! shapes, in GFLOP/s of served SpMM, plus a microbench of the SIMD
+//! kernel layer itself per available ISA.
 //!
 //! All engines run through the prepare/execute contract: one prepared
 //! handle per (engine, matrix), timed over repeated executes — the
 //! steady-state serving shape. The acceptance bar for the native engine is
 //! to beat the functional backend at >= 4 threads on every shape (it
-//! should already win at 1 thread thanks to the 8-lane chunked inner
-//! loop).
+//! should already win at 1 thread thanks to the 8-lane vectorized inner
+//! loop). Run with `SEXTANS_SIMD=scalar` to measure the scalar fallback —
+//! the before/after pair in `BENCH_simd_*.json` is exactly that toggle.
 
 //! Set `BENCH_OUT=<file>` to additionally write the measurements as a
 //! `BENCH_*.json` snapshot (schema: `sextans::telemetry::bench_record`);
@@ -17,6 +20,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use sextans::arch::simulator::problem_flops;
+use sextans::backend::simd::{self, Isa};
 use sextans::backend::{FunctionalBackend, NativeBackend, PreparedSpmm, SpmmBackend};
 use sextans::bench_util::{bench, black_box, section};
 use sextans::sched::preprocess;
@@ -29,6 +33,12 @@ fn pick(specs: &[MatrixSpec], name_prefix: &str) -> Option<MatrixSpec> {
 }
 
 fn main() {
+    println!(
+        "simd isa: {} (avx2 {}, L2 {} KiB)",
+        simd::active().name(),
+        if simd::avx2_available() { "available" } else { "absent" },
+        simd::l2_cache_bytes() / 1024
+    );
     let specs = catalog(Scale::Ci);
     // A graph, a banded FEM matrix, and the Table 1 crystm03 stand-in.
     let shapes: Vec<MatrixSpec> = [
@@ -108,6 +118,70 @@ fn main() {
                 p99_ns: r.p99_ns,
             });
         }
+
+        // The adaptive column-blocked variant: its width resolves per
+        // matrix from the distinct-B-row count and the detected L2.
+        let blocked = NativeBackend::blocked(8).build(Arc::clone(&sm));
+        let width = blocked.col_block();
+        let r = bench(
+            "backend/native-blocked:8",
+            1,
+            6,
+            Duration::from_millis(400),
+            || {
+                c.copy_from_slice(&c0);
+                blocked.execute(&b, &mut c, n, 1.0, 0.5).unwrap();
+                black_box(&c);
+            },
+        );
+        let gflops = r.throughput(flops) / 1e9;
+        println!("    -> {gflops:.2} GFLOP/s (adaptive block width {width})");
+        results.push(BenchMeasurement {
+            bench: "backend/native-blocked:8".into(),
+            matrix: spec.name.clone(),
+            n,
+            gflops,
+            median_ns: r.median_ns,
+            p50_ns: r.p50_ns,
+            p95_ns: r.p95_ns,
+            p99_ns: r.p99_ns,
+        });
+    }
+
+    // SIMD kernel layer in isolation: the N-wide AXPY inner step on a
+    // resident working set, per ISA the host can run — the dispatch-level
+    // speedup the engine numbers above are built from.
+    section("simd kernels (axpy over 64Ki f32, per ISA)");
+    let len = 65_536usize;
+    let x: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+    let mut y = vec![0f32; len];
+    let mut kernel_isas = vec![Isa::Scalar];
+    if simd::avx2_available() {
+        kernel_isas.push(Isa::Avx2);
+    }
+    for isa in kernel_isas {
+        let r = bench(
+            &format!("kernel/axpy:{}", isa.name()),
+            1,
+            6,
+            Duration::from_millis(200),
+            || {
+                simd::axpy(isa, &mut y, &x, 1.000001);
+                black_box(&y);
+            },
+        );
+        let gflops = r.throughput(2.0 * len as f64) / 1e9;
+        println!("    -> {gflops:.2} GFLOP/s");
+        results.push(BenchMeasurement {
+            bench: format!("kernel/axpy:{}", isa.name()),
+            matrix: format!("dense_{len}"),
+            n: 1,
+            gflops,
+            median_ns: r.median_ns,
+            p50_ns: r.p50_ns,
+            p95_ns: r.p95_ns,
+            p99_ns: r.p99_ns,
+        });
     }
 
     if let Ok(path) = std::env::var("BENCH_OUT") {

@@ -67,10 +67,11 @@ fn main() {
     let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
 
     section(&format!(
-        "shared-handle concurrency ({}x{}, nnz {}, N={n}, engine native:1)",
+        "shared-handle concurrency ({}x{}, nnz {}, N={n}, engine native:1, isa {})",
         coo.m,
         coo.k,
-        coo.nnz()
+        coo.nnz(),
+        sextans::backend::simd::active().name()
     ));
 
     let handle: Arc<dyn PreparedSpmm + Send + Sync> = Arc::from(

@@ -8,8 +8,11 @@
 //!
 //! * [`native::NativeBackend`] — multi-threaded host engine. Its handle
 //!   pre-decodes every PE stream (bubbles dropped, window-local columns
-//!   resolved to global) and pre-sizes the per-worker C-scratch tiles, so
-//!   steady-state execution is pure axpy + Comp-C.
+//!   resolved to global), condenses it into per-output-row SoA segments,
+//!   and pre-sizes the per-worker aligned accumulators, so steady-state
+//!   execution is pure vectorized axpy + Comp-C through the [`simd`]
+//!   kernel layer (runtime-dispatched AVX2 with a bit-identical scalar
+//!   fallback; `SEXTANS_SIMD=scalar` forces the portable path).
 //! * [`functional::FunctionalBackend`] — the functional simulator
 //!   ([`crate::arch::functional`]); the always-available reference
 //!   semantics.
@@ -45,11 +48,12 @@ pub mod functional;
 pub mod native;
 pub mod pjrt;
 pub mod scratch;
+pub mod simd;
 
 pub use functional::FunctionalBackend;
 pub use native::NativeBackend;
 pub use pjrt::PjrtBackend;
-pub use scratch::{Scratch, ScratchPool};
+pub use scratch::{AlignedVec, Scratch, ScratchPool, SCRATCH_ALIGN};
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -445,8 +449,8 @@ pub fn registry() -> Vec<BackendInfo> {
         BackendInfo {
             name: "native-blocked",
             available: true,
-            description: "native engine with a column-blocked inner loop for wide N \
-                          (accepts native-blocked:<threads>)",
+            description: "native engine with an adaptive (L2-sized) column-blocked sweep \
+                          for wide N (accepts native-blocked:<threads>)",
         },
         BackendInfo {
             name: "functional",

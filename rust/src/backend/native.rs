@@ -1,94 +1,141 @@
 //! Native multi-threaded SpMM engine over scheduled images, in two-phase
-//! prepare/execute form.
+//! prepare/execute form — now vectorized end to end via the
+//! [`super::simd`] kernel layer.
 //!
 //! The paper's hardware runs P PEs in parallel, each consuming its own
 //! scheduled slot stream and owning the output rows `r ≡ pe (mod P)` in its
 //! C scratchpad. That row partition is exactly what makes a host
 //! parallelization safe: the prepared handle assigns the P streams
 //! round-robin to worker threads (`std::thread::scope`), each worker
-//! accumulates a PE's rows into a reusable private scratch tile (the
-//! scratchpad analogue), and the Comp-C stage writes each PE's disjoint row
-//! set straight into C.
+//! accumulates one output row at a time into a private accumulator (the
+//! scratchpad analogue), and the Comp-C stage writes each PE's disjoint
+//! row set straight into C.
 //!
-//! **Prepare** ([`SpmmBackend::prepare`]) decodes every PE stream once:
-//! bubbles are dropped, window-local columns are resolved to global B rows,
-//! and the result is stored as flat `(row, col, val)` triples in slot-issue
-//! order. Steady-state execution therefore never touches the 64-bit
-//! encoding again — it is pure axpy + Comp-C over pre-sized scratch, which
-//! is the point of the A-resident serving contract.
+//! **Prepare** ([`SpmmBackend::prepare`]) decodes every PE stream once —
+//! bubbles are dropped and window-local columns resolve to global B rows —
+//! then **condenses** it (SpArch-style): a stable counting sort groups the
+//! stream into per-output-row segments in an 8-byte/non-zero SoA layout
+//! (`row_ptr` / `cols` / `vals`). Within each row the slot-issue order is
+//! preserved, so per output element the accumulation order is untouched;
+//! across rows the engine gains sequential segment scans, one-row
+//! accumulator locality, and a natural place for software prefetch of the
+//! upcoming B rows. Steady-state execution never touches the 64-bit
+//! encoding again.
 //!
 //! Numerics are bit-identical to [`crate::arch::functional::execute`]: per
 //! output element, the accumulation order is the PE's slot issue order in
-//! both implementations (dropping bubbles removes only zero contributions),
-//! and the final `alpha * C_AB + beta * C_in` is the same expression. The
-//! inner loop is chunked to [`LANES`] = 8 columns — the paper's N0 = 8 SIMD
-//! float lanes — which vectorizes cleanly without changing the per-element
-//! order of adds.
+//! both implementations (dropping bubbles removes only zero
+//! contributions), and the final `alpha * C_AB + beta * C_in` is the same
+//! expression. The [`super::simd`] kernels keep that contract on every
+//! ISA — mul + add per contribution, never FMA — so `SEXTANS_SIMD=scalar`
+//! and the AVX2 path produce the same bits (see the kernel module docs).
 //!
 //! Hot-path allocation is zero after warm-up: the handle keeps a
-//! [`ScratchPool`] of per-call scratch *sets* (one tile per worker), each
-//! execution checks one set out, and tiles only grow (never shrink) across
-//! requests; the blocked variant seeds a fully pre-sized set at prepare
-//! time. Because the decoded streams are read-only and all mutable state
-//! is pooled, `execute` takes `&self` — any number of threads may drive
-//! one handle concurrently, each on its own scratch set.
+//! [`ScratchPool`] of per-call scratch *sets* (one 32-byte-aligned
+//! accumulator per worker, [`super::scratch::AlignedVec`]), each execution
+//! checks one set out, and buffers only grow across requests. Because the
+//! condensed streams are read-only and all mutable state is pooled,
+//! `execute` takes `&self` — any number of threads may drive one handle
+//! concurrently, each on its own scratch set.
 //!
 //! **Column blocking** ([`NativeBackend::blocked`], registry name
-//! `"native-blocked"`): for N well beyond [`COL_BLOCK`], the B window rows
-//! and C tile of one request stop fitting in cache, so the blocked variant
-//! sweeps the same streams once per [`COL_BLOCK`]-wide column slice. It
-//! re-reads the decoded A triples per slice (12 B/nnz, streams linearly) in
-//! exchange for keeping the random-access B/C working set cache-resident —
-//! the host mirror of the paper's N/N0 outer loop (Eq. 2). Per output
-//! element the accumulation order is unchanged, so `native-blocked` is
-//! bit-identical to `native`.
+//! `"native-blocked"`): for wide N the B rows and C row of one request
+//! stop fitting in cache, so the blocked variant sweeps the same streams
+//! once per column slice, re-reading the condensed segments (8 B/nnz,
+//! streams linearly) in exchange for keeping the random-access B working
+//! set cache-resident — the host mirror of the paper's N/N0 outer loop
+//! (Eq. 2). The width is no longer a constant: [`adaptive_col_block`]
+//! sizes it at prepare time from the matrix's distinct B-row count and the
+//! detected L2 ([`super::simd::l2_cache_bytes`]), and **narrow requests
+//! (N ≤ [`LANES`]) skip blocking entirely** — each output row lives in one
+//! masked vector register start to finish. Per output element the
+//! accumulation order is unchanged, so `native-blocked` stays bit-identical
+//! to `native`.
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use super::scratch::AlignedVec;
+use super::simd::{self, Isa};
 use super::{
     check_shapes, BackendError, Capability, PrepareCost, PreparedSpmm, ScratchPool, SpmmBackend,
 };
 use crate::sched::{decode, ScheduledMatrix};
 
-/// Inner-loop chunk width — the paper's N0 (8 PUs per PE).
-pub const LANES: usize = 8;
+pub use super::simd::LANES;
 
-/// Column-block width of the `native-blocked` variant (8 LANES-wide
-/// chunks; sized so one B window row slice + C tile stays L1/L2-resident).
+/// The pre-adaptive fixed column-block width, kept as a reference point
+/// for tuning experiments and the fixed-width tests
+/// ([`NativeBackend::with_block`] still accepts any width).
 pub const COL_BLOCK: usize = 64;
 
+/// Upper clamp on [`adaptive_col_block`]: beyond this width the per-slice
+/// segment re-scan overhead is already negligible and wider slices only
+/// grow the accumulator.
+pub const MAX_COL_BLOCK: usize = 512;
+
+/// Choose a column-block width from the matrix's distinct B-row count and
+/// the L2 budget: the largest multiple of [`LANES`] such that the touched
+/// B rows of one slice (`distinct_b_rows × width × 4` bytes) fill at most
+/// half the L2 (the other half is left for C rows, the streams, and the
+/// other hyperthread), clamped to `[LANES, MAX_COL_BLOCK]`.
+pub fn adaptive_col_block(distinct_b_rows: usize, l2_bytes: usize) -> usize {
+    let budget = l2_bytes / 2;
+    let per_col_bytes = 4 * distinct_b_rows.max(1);
+    let w = (budget / per_col_bytes) / LANES * LANES;
+    w.clamp(LANES, MAX_COL_BLOCK)
+}
+
+/// How a backend instance chooses its column-block width at prepare time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BlockPolicy {
+    /// Unblocked: one full-width sweep (the plain `native` engine).
+    Off,
+    /// A caller-fixed width (tuning experiments, tests).
+    Fixed(usize),
+    /// Resolve per matrix via [`adaptive_col_block`] at prepare time.
+    Adaptive,
+}
+
 /// Multi-threaded native backend factory. Stateless: per-matrix state
-/// (decoded streams, scratch) lives in the [`PreparedNative`] handles it
+/// (condensed streams, scratch) lives in the [`PreparedNative`] handles it
 /// produces.
 pub struct NativeBackend {
     /// Resolved worker-thread count (>= 1).
     threads: usize,
-    /// Column-block width; 0 = unblocked (the plain `native` engine).
-    block_n: usize,
+    /// Column-blocking policy, resolved to a width at prepare time.
+    block: BlockPolicy,
 }
 
 impl NativeBackend {
     /// `threads == 0` auto-sizes to the machine's available parallelism.
     pub fn new(threads: usize) -> NativeBackend {
-        Self::with_block(threads, 0)
+        let threads = Self::resolve_threads(threads);
+        NativeBackend { threads, block: BlockPolicy::Off }
     }
 
-    /// The `native-blocked` variant: sweeps columns in [`COL_BLOCK`]-wide
-    /// slices for wide-N workloads. Same numerics, different cache story.
+    /// The `native-blocked` variant: sweeps columns in cache-sized slices
+    /// for wide-N workloads, with the width chosen per matrix at prepare
+    /// time ([`adaptive_col_block`]). Same numerics, different cache story.
     pub fn blocked(threads: usize) -> NativeBackend {
-        Self::with_block(threads, COL_BLOCK)
+        let threads = Self::resolve_threads(threads);
+        NativeBackend { threads, block: BlockPolicy::Adaptive }
     }
 
     /// Explicit column-block width (`0` = unblocked); exposed for tuning
     /// experiments and the bench harness.
     pub fn with_block(threads: usize, block_n: usize) -> NativeBackend {
-        let threads = if threads == 0 {
+        let threads = Self::resolve_threads(threads);
+        let block = if block_n == 0 { BlockPolicy::Off } else { BlockPolicy::Fixed(block_n) };
+        NativeBackend { threads, block }
+    }
+
+    fn resolve_threads(threads: usize) -> usize {
+        if threads == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             threads
-        };
-        NativeBackend { threads, block_n }
+        }
     }
 
     /// The resolved worker-thread count.
@@ -96,9 +143,14 @@ impl NativeBackend {
         self.threads
     }
 
-    /// Column-block width (0 = unblocked).
+    /// Configured fixed column-block width; `0` both for the unblocked
+    /// engine and for the adaptive variant, whose width only exists per
+    /// prepared matrix ([`PreparedNative::col_block`]).
     pub fn block_width(&self) -> usize {
-        self.block_n
+        match self.block {
+            BlockPolicy::Fixed(w) => w,
+            BlockPolicy::Off | BlockPolicy::Adaptive => 0,
+        }
     }
 
     /// Concrete-typed prepare: identical to [`SpmmBackend::prepare`] but
@@ -106,14 +158,20 @@ impl NativeBackend {
     /// inherent accessors (the scratch-pool sizing tests, benches).
     pub fn build(&self, image: Arc<ScheduledMatrix>) -> PreparedNative {
         let t0 = Instant::now();
-        // Decode every PE stream once: drop bubbles, resolve window-local
-        // columns to global B rows, keep slot-issue order (the accumulation
-        // order contract).
-        let streams: Vec<Vec<(u32, u32, f32)>> = image
+        let rows_per_pe = image.rows_per_pe();
+        // Decode every PE stream once (drop bubbles, resolve window-local
+        // columns to global B rows, keep slot-issue order), counting the
+        // distinct B rows for the adaptive block width, then condense into
+        // per-output-row segments.
+        let mut touched = vec![false; image.k];
+        let mut distinct_b_rows = 0usize;
+        let streams: Vec<CondensedStream> = image
             .streams
             .iter()
             .map(|stream| {
-                let mut out = Vec::with_capacity(stream.nnz);
+                let mut rows = Vec::with_capacity(stream.nnz);
+                let mut cols = Vec::with_capacity(stream.nnz);
+                let mut vals = Vec::with_capacity(stream.nnz);
                 for j in 0..image.num_windows {
                     let col_base = (j * image.k0) as u32;
                     for &word in &stream.encoded[stream.q.window_range(j)] {
@@ -121,29 +179,41 @@ impl NativeBackend {
                         if nz.val == 0.0 {
                             continue; // bubble (or explicit zero: same arithmetic)
                         }
-                        out.push((nz.row, col_base + nz.col, nz.val));
+                        let gc = col_base + nz.col;
+                        if !touched[gc as usize] {
+                            touched[gc as usize] = true;
+                            distinct_b_rows += 1;
+                        }
+                        rows.push(nz.row);
+                        cols.push(gc);
+                        vals.push(nz.val);
                     }
                 }
-                out
+                CondensedStream::condense(rows_per_pe, &rows, &cols, &vals)
             })
             .collect();
         let workers = self.threads.min(image.p).max(1);
-        // Seed the scratch pool with one per-call set (one tile per
-        // worker). Blocked tiles are fully pre-sized here (their width is
-        // fixed); unblocked tiles size themselves to N on first execute
-        // and are grow-only afterwards. Additional sets are created only
-        // by *concurrent* executions, one per simultaneous caller.
-        let seed: Vec<Vec<f32>> = if self.block_n > 0 {
-            (0..workers).map(|_| vec![0.0; image.rows_per_pe() * self.block_n]).collect()
-        } else {
-            (0..workers).map(|_| Vec::new()).collect()
+        let block = match self.block {
+            BlockPolicy::Off => 0,
+            BlockPolicy::Fixed(w) => w,
+            BlockPolicy::Adaptive => adaptive_col_block(distinct_b_rows, simd::l2_cache_bytes()),
         };
-        let triple_bytes = std::mem::size_of::<(u32, u32, f32)>() as u64;
-        let resident_bytes = streams.iter().map(|s| s.len() as u64 * triple_bytes).sum::<u64>()
-            + seed.iter().map(|s| s.len() as u64 * 4).sum::<u64>();
+        // Seed the scratch pool with one per-call set (one aligned
+        // accumulator per worker). Blocked accumulators are fully
+        // pre-sized here; unblocked ones size themselves to N on first
+        // execute and are grow-only afterwards. Additional sets are
+        // created only by *concurrent* executions, one per simultaneous
+        // caller. Narrow requests (N <= LANES) never touch them.
+        let seed: Vec<AlignedVec> = if block > 0 {
+            (0..workers).map(|_| AlignedVec::zeroed(block)).collect()
+        } else {
+            (0..workers).map(|_| AlignedVec::new()).collect()
+        };
+        let resident_bytes = streams.iter().map(CondensedStream::resident_bytes).sum::<u64>()
+            + seed.iter().map(|t| t.len() as u64 * 4).sum::<u64>();
         PreparedNative {
             image,
-            block_n: self.block_n,
+            block,
             workers,
             streams,
             scratch: ScratchPool::with_seed(seed),
@@ -154,10 +224,9 @@ impl NativeBackend {
 
 impl SpmmBackend for NativeBackend {
     fn name(&self) -> &'static str {
-        if self.block_n == 0 {
-            "native"
-        } else {
-            "native-blocked"
+        match self.block {
+            BlockPolicy::Off => "native",
+            BlockPolicy::Fixed(_) | BlockPolicy::Adaptive => "native-blocked",
         }
     }
 
@@ -182,25 +251,69 @@ impl SpmmBackend for NativeBackend {
     }
 }
 
-/// A matrix resident on the native engine: decoded per-PE streams (shared,
-/// read-only) plus a pool of per-call scratch sets, ready for any number
-/// of — including concurrent — (B, n, alpha, beta).
+/// One PE's decoded stream, condensed at prepare time: CSR-like
+/// per-output-row segments in an SoA layout (8 bytes per non-zero vs 12
+/// for the old `(row, col, val)` triples). Built by a *stable* counting
+/// sort, so within each output row the slot-issue order — the
+/// accumulation-order half of the bit-identity contract — is preserved
+/// exactly.
+struct CondensedStream {
+    /// Segment bounds per local output row: row `t`'s non-zeros are
+    /// `cols[row_ptr[t] as usize..row_ptr[t + 1] as usize]` (and the same
+    /// range of `vals`), in slot-issue order. Length `rows_per_pe + 1`.
+    row_ptr: Vec<u32>,
+    /// Global B-row index of each non-zero, grouped by local output row.
+    cols: Vec<u32>,
+    /// Non-zero values, parallel to `cols`.
+    vals: Vec<f32>,
+}
+
+impl CondensedStream {
+    /// Stable counting sort of issue-order triples by local output row.
+    fn condense(rows_per_pe: usize, rows: &[u32], cols: &[u32], vals: &[f32]) -> CondensedStream {
+        debug_assert!(rows.len() < u32::MAX as usize, "per-PE stream exceeds u32 indexing");
+        let mut row_ptr = vec![0u32; rows_per_pe + 1];
+        for &r in rows {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for t in 0..rows_per_pe {
+            row_ptr[t + 1] += row_ptr[t];
+        }
+        let mut out_cols = vec![0u32; cols.len()];
+        let mut out_vals = vec![0f32; vals.len()];
+        let mut cursor: Vec<u32> = row_ptr[..rows_per_pe].to_vec();
+        for ((&r, &gc), &v) in rows.iter().zip(cols).zip(vals) {
+            let slot = cursor[r as usize] as usize;
+            out_cols[slot] = gc;
+            out_vals[slot] = v;
+            cursor[r as usize] += 1;
+        }
+        CondensedStream { row_ptr, cols: out_cols, vals: out_vals }
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        (self.row_ptr.len() as u64 + self.cols.len() as u64 + self.vals.len() as u64) * 4
+    }
+}
+
+/// A matrix resident on the native engine: condensed per-PE streams
+/// (shared, read-only) plus a pool of per-call scratch sets, ready for any
+/// number of — including concurrent — (B, n, alpha, beta).
 pub struct PreparedNative {
     image: Arc<ScheduledMatrix>,
-    /// Column-block width; 0 = unblocked.
-    block_n: usize,
+    /// Resolved column-block width; 0 = unblocked.
+    block: usize,
     /// Worker-thread count (<= P, >= 1), fixed at prepare.
     workers: usize,
-    /// Per-PE decoded slot streams in issue order: (local row, global col,
-    /// value); bubbles dropped. Read-only after prepare — the shared half
-    /// of the `&self` execution contract.
-    streams: Vec<Vec<(u32, u32, f32)>>,
-    /// Pool of per-call scratch sets — one C_AB tile per worker
-    /// (`rows_per_pe * block width`), tiles reused across requests and
-    /// across the PEs a worker owns. One set is checked out per execution,
-    /// so the pool holds at most as many sets as there are concurrent
-    /// callers.
-    scratch: ScratchPool<Vec<Vec<f32>>>,
+    /// Per-PE condensed streams (per-output-row segments in issue order,
+    /// bubbles dropped). Read-only after prepare — the shared half of the
+    /// `&self` execution contract.
+    streams: Vec<CondensedStream>,
+    /// Pool of per-call scratch sets — one 32-byte-aligned block-width
+    /// accumulator per worker, reused across requests and across the PEs
+    /// a worker owns. One set is checked out per execution, so the pool
+    /// holds at most as many sets as there are concurrent callers.
+    scratch: ScratchPool<Vec<AlignedVec>>,
     cost: PrepareCost,
 }
 
@@ -217,22 +330,13 @@ impl PreparedNative {
     pub fn scratch_sets(&self) -> usize {
         self.scratch.idle()
     }
-}
 
-/// `y[..] += a * x[..]`, chunked to [`LANES`] so LLVM vectorizes the body.
-/// Element order is unchanged (each output lane is independent).
-#[inline]
-fn axpy(y: &mut [f32], x: &[f32], a: f32) {
-    debug_assert_eq!(y.len(), x.len());
-    let mut yc = y.chunks_exact_mut(LANES);
-    let mut xc = x.chunks_exact(LANES);
-    for (yl, xl) in (&mut yc).zip(&mut xc) {
-        for l in 0..LANES {
-            yl[l] += a * xl[l];
-        }
-    }
-    for (yl, xl) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
-        *yl += a * xl;
+    /// The column-block width this matrix resolved to at prepare time
+    /// (0 = unblocked). For [`NativeBackend::blocked`] this is the
+    /// [`adaptive_col_block`] choice; narrow requests (N ≤ [`LANES`])
+    /// bypass it at execute time.
+    pub fn col_block(&self) -> usize {
+        self.block
     }
 }
 
@@ -247,57 +351,54 @@ unsafe impl Send for CPtr {}
 unsafe impl Sync for CPtr {}
 
 /// Process every PE in `pe0, pe0 + stride, ...` for the column slice
-/// `[col0, col0 + cols)` of B/C: accumulate the PE's decoded stream into
-/// `ab` (a `rows_per_pe x cols` tile, cleared per PE), then Comp-C its rows
-/// of the shared C buffer. The unblocked engine passes one full-width
-/// slice; the blocked engine calls once per [`COL_BLOCK`]-wide slice.
+/// `[col0, col0 + cols)` of B/C, one output row at a time: accumulate the
+/// row's condensed segment into `acc` (narrow requests: straight into a
+/// masked vector register) and Comp-C it into the shared C buffer. The
+/// unblocked engine passes one full-width slice; the blocked engine calls
+/// once per block-wide slice.
 #[allow(clippy::too_many_arguments)]
 fn run_pes(
     sm: &ScheduledMatrix,
-    streams: &[Vec<(u32, u32, f32)>],
+    streams: &[CondensedStream],
     b: &[f32],
     c: CPtr,
     n: usize,
     alpha: f32,
     beta: f32,
-    ab: &mut [f32],
+    isa: Isa,
+    acc: &mut [f32],
     pe0: usize,
     stride: usize,
     col0: usize,
     cols: usize,
 ) {
     let rows_per_pe = sm.rows_per_pe();
-    debug_assert_eq!(ab.len(), rows_per_pe * cols);
+    let narrow = n <= LANES;
     debug_assert!(col0 + cols <= n);
+    debug_assert!(if narrow { col0 == 0 && cols == n } else { acc.len() == cols });
     let mut pe = pe0;
     while pe < sm.p {
-        ab.fill(0.0);
-        for &(r, gc, val) in &streams[pe] {
-            let r = r as usize;
-            let gc = gc as usize;
-            debug_assert!(r < rows_per_pe && gc < sm.k);
-            axpy(
-                &mut ab[r * cols..(r + 1) * cols],
-                &b[gc * n + col0..gc * n + col0 + cols],
-                val,
-            );
-        }
-        // Comp-C for this PE's (disjoint) rows of the shared C.
+        let cs = &streams[pe];
         for t in 0..rows_per_pe {
             let gr = t * sm.p + pe;
             if gr >= sm.m {
                 break;
             }
-            let ab_row = &ab[t * cols..(t + 1) * cols];
-            for (q, &v) in ab_row.iter().enumerate() {
-                // SAFETY: rows `gr ≡ pe (mod P)` are written only by the
-                // worker owning `pe` (see CPtr), and `gr < m`,
-                // `col0 + q < n`, so the index is in bounds of the `m * n`
-                // buffer.
-                unsafe {
-                    let slot = c.0.add(gr * n + col0 + q);
-                    *slot = alpha * v + beta * *slot;
-                }
+            let lo = cs.row_ptr[t] as usize;
+            let hi = cs.row_ptr[t + 1] as usize;
+            // SAFETY: rows `gr ≡ pe (mod P)` are written only by the
+            // worker owning `pe` (see CPtr), `gr < m` and
+            // `col0 + cols <= n`, so this row slice is in bounds of the
+            // `m * n` buffer and disjoint from every other worker's
+            // slices.
+            let c_row = unsafe { std::slice::from_raw_parts_mut(c.0.add(gr * n + col0), cols) };
+            let seg_cols = &cs.cols[lo..hi];
+            let seg_vals = &cs.vals[lo..hi];
+            if narrow {
+                simd::row_narrow(isa, seg_cols, seg_vals, b, n, c_row, alpha, beta);
+            } else {
+                simd::row_block(isa, seg_cols, seg_vals, b, n, col0, acc);
+                simd::comp_c(isa, c_row, acc, alpha, beta);
             }
         }
         pe += stride;
@@ -306,7 +407,7 @@ fn run_pes(
 
 impl PreparedSpmm for PreparedNative {
     fn backend_name(&self) -> &'static str {
-        if self.block_n == 0 {
+        if self.block == 0 {
             "native"
         } else {
             "native-blocked"
@@ -318,24 +419,20 @@ impl PreparedSpmm for PreparedNative {
     }
 
     fn resident_bytes_now(&self) -> u64 {
-        // Decoded streams are fixed at prepare; the scratch pool grows with
-        // request width (tiles are grow-only) and with peak concurrency
-        // (one set per simultaneous caller), so it is measured live.
-        let triple_bytes = std::mem::size_of::<(u32, u32, f32)>() as u64;
-        let streams: u64 =
-            self.streams.iter().map(|s| s.len() as u64 * triple_bytes).sum();
-        let pooled = self
-            .scratch
-            .measure(|set| set.iter().map(|tile| tile.len() as u64 * 4).sum());
+        // Condensed streams are fixed at prepare; the scratch pool grows
+        // with request width (accumulators are grow-only) and with peak
+        // concurrency (one set per simultaneous caller), so it is
+        // measured live.
+        let streams: u64 = self.streams.iter().map(CondensedStream::resident_bytes).sum();
+        let pooled = self.scratch.measure(|set| set.iter().map(|tile| tile.len() as u64 * 4).sum());
         streams + pooled
     }
 
     fn trim_resident(&self, max_idle: std::time::Duration) -> u64 {
-        // The decoded streams are the handle's reason to exist; only the
+        // The condensed streams are the handle's reason to exist; only the
         // pooled scratch sets (sized by peak concurrency and request
         // width) are reclaimable.
-        self.scratch
-            .trim_idle(max_idle, |set| set.iter().map(|tile| tile.len() as u64 * 4).sum())
+        self.scratch.trim_idle(max_idle, |set| set.iter().map(|tile| tile.len() as u64 * 4).sum())
     }
 
     fn execute(
@@ -352,30 +449,43 @@ impl PreparedSpmm for PreparedNative {
             return Ok(());
         }
         let workers = self.workers;
-        // Block width: full N when unblocked, else COL_BLOCK-capped slices.
-        let block = if self.block_n == 0 { n } else { self.block_n.min(n) };
-        let rows_per_pe = sm.rows_per_pe();
-        let tile = rows_per_pe * block;
+        let isa = simd::active();
+        // Narrow requests keep each output row in one masked register:
+        // no blocking, no scratch. Otherwise: full width when unblocked,
+        // else the prepared block width.
+        let narrow = n <= LANES;
+        let block = if narrow || self.block == 0 { n } else { self.block.min(n) };
         // Per-call mutable state: check one scratch set out of the pool
         // (concurrent callers each get their own; the lock covers only
         // this checkout and the drop at the end, never the multiply).
-        let mut set = self.scratch.checkout(|| vec![Vec::new(); workers]);
-        for buf in &mut set[..workers] {
-            if buf.len() < tile {
-                buf.resize(tile, 0.0);
+        let mut set = self.scratch.checkout(|| (0..workers).map(|_| AlignedVec::new()).collect());
+        if !narrow {
+            for buf in &mut set[..workers] {
+                buf.ensure_len(block);
             }
         }
-        let streams: &[Vec<(u32, u32, f32)>] = &self.streams;
+        let streams: &[CondensedStream] = &self.streams;
         let cptr = CPtr(c.as_mut_ptr());
         if workers == 1 {
             let buf = &mut set[0];
             let mut col0 = 0;
             while col0 < n {
                 let cols = block.min(n - col0);
+                let acc_len = if narrow { 0 } else { cols };
                 run_pes(
-                    sm, streams, b, cptr, n, alpha, beta,
-                    &mut buf[..rows_per_pe * cols],
-                    0, 1, col0, cols,
+                    sm,
+                    streams,
+                    b,
+                    cptr,
+                    n,
+                    alpha,
+                    beta,
+                    isa,
+                    &mut buf[..acc_len],
+                    0,
+                    1,
+                    col0,
+                    cols,
                 );
                 col0 += cols;
             }
@@ -388,10 +498,21 @@ impl PreparedSpmm for PreparedNative {
                     let mut col0 = 0;
                     while col0 < n {
                         let cols = block.min(n - col0);
+                        let acc_len = if narrow { 0 } else { cols };
                         run_pes(
-                            sm, streams, b, worker_c, n, alpha, beta,
-                            &mut buf[..rows_per_pe * cols],
-                            w, workers, col0, cols,
+                            sm,
+                            streams,
+                            b,
+                            worker_c,
+                            n,
+                            alpha,
+                            beta,
+                            isa,
+                            &mut buf[..acc_len],
+                            w,
+                            workers,
+                            col0,
+                            cols,
                         );
                         col0 += cols;
                     }
@@ -442,6 +563,25 @@ mod tests {
     }
 
     #[test]
+    fn narrow_n_fast_path_matches_functional_bitwise() {
+        // Every N on the register-resident path (N <= LANES), including
+        // the masked widths, must still match the reference bit for bit.
+        let mut rng = Rng::new(17);
+        let a = gen::power_law_rows(100, 90, 1_500, 1.0, &mut rng);
+        let sm = Arc::new(preprocess(&a, 8, 16, 6));
+        for n in 1..=LANES {
+            let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
+            let c0: Vec<f32> = (0..a.m * n).map(|_| rng.normal()).collect();
+            let mut want = c0.clone();
+            functional::execute(&sm, &b, &mut want, n, -0.75, 1.25);
+            for threads in [1, 3] {
+                let got = run_native(threads, &sm, &b, &c0, n, -0.75, 1.25);
+                assert_eq!(got, want, "n = {n}, threads = {threads}");
+            }
+        }
+    }
+
+    #[test]
     fn thread_count_does_not_change_bits() {
         let mut rng = Rng::new(2);
         let a = gen::power_law_rows(150, 120, 2_000, 1.0, &mut rng);
@@ -486,9 +626,9 @@ mod tests {
         let sm = Arc::new(preprocess(&a, 4, 16, 4));
         let handle = NativeBackend::new(2).build(Arc::clone(&sm));
         let cost = handle.prepare_cost();
-        // 12 bytes per decoded non-zero at minimum.
-        assert!(cost.resident_bytes >= 12 * a.nnz() as u64, "{cost:?}");
-        // Blocked variant additionally pre-sizes its tiles.
+        // 8 bytes per condensed non-zero at minimum (SoA cols + vals).
+        assert!(cost.resident_bytes >= 8 * a.nnz() as u64, "{cost:?}");
+        // Blocked variant additionally pre-sizes its accumulators.
         let blocked = NativeBackend::blocked(2).build(Arc::clone(&sm));
         assert!(blocked.prepare_cost().resident_bytes > cost.resident_bytes);
     }
@@ -505,15 +645,16 @@ mod tests {
             at_prepare,
             "before any execution the live footprint is the prepare estimate"
         );
-        // A wide request grows the (unblocked) tiles well past the empty
-        // seed; the live measurement must see it, the static one cannot.
+        // A wide request grows the (unblocked) accumulators well past the
+        // empty seed; the live measurement must see it, the static one
+        // cannot.
         let n = 200;
         let b = vec![1.0f32; a.k * n];
         let mut c = vec![0.0f32; a.m * n];
         handle.execute(&b, &mut c, n, 1.0, 0.0).unwrap();
         assert!(
             handle.resident_bytes_now() > at_prepare,
-            "grown scratch tiles missing from the live footprint: {} <= {at_prepare}",
+            "grown scratch missing from the live footprint: {} <= {at_prepare}",
             handle.resident_bytes_now()
         );
         assert_eq!(handle.prepare_cost().resident_bytes, at_prepare);
@@ -535,8 +676,7 @@ mod tests {
         let sm = Arc::new(preprocess(&a, 2, 2, 2));
         let b = vec![0.0; 7]; // not k * n
         let mut c = vec![0.0; 8];
-        let err =
-            NativeBackend::new(1).build(sm).execute(&b, &mut c, 2, 1.0, 0.0).unwrap_err();
+        let err = NativeBackend::new(1).build(sm).execute(&b, &mut c, 2, 1.0, 0.0).unwrap_err();
         assert!(matches!(err, BackendError::Shape(_)));
     }
 
@@ -555,11 +695,28 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_width_is_clamped_and_lane_aligned() {
+        // A tiny working set saturates at the upper clamp.
+        assert_eq!(adaptive_col_block(1, 2 * 1024 * 1024), MAX_COL_BLOCK);
+        // A huge working set floors at one vector register.
+        assert_eq!(adaptive_col_block(10_000_000, 256 * 1024), LANES);
+        // In between: lane-aligned and monotone in the L2 budget.
+        let narrow_l2 = adaptive_col_block(2_000, 256 * 1024);
+        let wide_l2 = adaptive_col_block(2_000, 4 * 1024 * 1024);
+        assert_eq!(narrow_l2 % LANES, 0);
+        assert_eq!(wide_l2 % LANES, 0);
+        assert!(narrow_l2 <= wide_l2);
+        assert!((LANES..=MAX_COL_BLOCK).contains(&narrow_l2));
+        // distinct_b_rows = 0 (empty matrix) must not divide by zero.
+        assert!(adaptive_col_block(0, 1024 * 1024) >= LANES);
+    }
+
+    #[test]
     fn blocked_is_bit_identical_to_native() {
         // Column blocking reorders nothing per output element, so the
-        // blocked engine must match the plain one bitwise — including N
-        // that is smaller than, equal to, and far beyond COL_BLOCK, and N
-        // not a multiple of the block width.
+        // blocked engine — adaptive or any fixed width — must match the
+        // plain one bitwise, including N below, at, and far beyond the
+        // width, and N not a multiple of it.
         let mut rng = Rng::new(11);
         let a = gen::power_law_rows(120, 100, 1_800, 1.0, &mut rng);
         let sm = Arc::new(preprocess(&a, 8, 32, 6));
@@ -568,10 +725,16 @@ mod tests {
             let c0: Vec<f32> = (0..a.m * n).map(|_| rng.normal()).collect();
             for threads in [1usize, 4] {
                 let plain = run_native(threads, &sm, &b, &c0, n, 1.5, -0.25);
-                let blocked = NativeBackend::blocked(threads).build(Arc::clone(&sm));
+                let adaptive = NativeBackend::blocked(threads).build(Arc::clone(&sm));
                 let mut c = c0.clone();
-                blocked.execute(&b, &mut c, n, 1.5, -0.25).unwrap();
-                assert_eq!(c, plain, "n = {n}, threads = {threads}");
+                adaptive.execute(&b, &mut c, n, 1.5, -0.25).unwrap();
+                assert_eq!(c, plain, "adaptive: n = {n}, threads = {threads}");
+                for width in [LANES, COL_BLOCK, 100] {
+                    let fixed = NativeBackend::with_block(threads, width).build(Arc::clone(&sm));
+                    let mut c = c0.clone();
+                    fixed.execute(&b, &mut c, n, 1.5, -0.25).unwrap();
+                    assert_eq!(c, plain, "width = {width}, n = {n}, threads = {threads}");
+                }
             }
         }
     }
@@ -585,9 +748,13 @@ mod tests {
         let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
         let backend = NativeBackend::blocked(2);
         assert_eq!(backend.name(), "native-blocked");
-        assert_eq!(backend.block_width(), COL_BLOCK);
+        assert_eq!(backend.block_width(), 0, "adaptive width resolves per matrix at prepare");
+        assert_eq!(NativeBackend::with_block(2, COL_BLOCK).block_width(), COL_BLOCK);
         let handle = backend.build(Arc::clone(&sm));
         assert_eq!(handle.backend_name(), "native-blocked");
+        let width = handle.col_block();
+        assert!((LANES..=MAX_COL_BLOCK).contains(&width), "resolved width {width}");
+        assert_eq!(width % LANES, 0, "resolved width {width} not lane-aligned");
         let mut first = vec![0f32; a.m * n];
         handle.execute(&b, &mut first, n, 1.0, 0.0).unwrap();
         // Dirty scratch from the first request must not leak into the next.

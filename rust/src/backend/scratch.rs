@@ -30,6 +30,118 @@ use std::ops::{Deref, DerefMut};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+/// Guaranteed alignment (bytes) of [`AlignedVec`] storage — one full
+/// 256-bit AVX2 register, so vector loads/stores on scratch tiles are
+/// never split across cache lines by an unlucky allocator.
+pub const SCRATCH_ALIGN: usize = 32;
+
+/// A grow-only f32 buffer whose storage is always [`SCRATCH_ALIGN`]-byte
+/// aligned — the scratch currency of the SIMD-era native engine.
+/// `Vec<f32>` only guarantees 4-byte alignment, which splits 256-bit
+/// accumulator loads across cache lines often enough to show up in
+/// `bench_backend`; this keeps the hot C_AB tiles register-friendly.
+///
+/// Deliberately minimal: it derefs to `[f32]` of its current logical
+/// length, and [`AlignedVec::ensure_len`] grows (never shrinks) the
+/// buffer, zero-filling any newly exposed region. Contents are otherwise
+/// scratch — callers overwrite them per use.
+#[derive(Debug, Default)]
+pub struct AlignedVec {
+    ptr: Option<std::ptr::NonNull<f32>>,
+    /// Current logical (and allocated) length in f32 elements.
+    len: usize,
+}
+
+// SAFETY: AlignedVec uniquely owns its allocation; it is a plain buffer
+// of f32 with no interior mutability or thread affinity.
+unsafe impl Send for AlignedVec {}
+unsafe impl Sync for AlignedVec {}
+
+impl AlignedVec {
+    /// An empty buffer; storage is allocated by [`AlignedVec::ensure_len`].
+    pub fn new() -> AlignedVec {
+        AlignedVec { ptr: None, len: 0 }
+    }
+
+    /// A zero-filled buffer of `len` elements, allocated up front (the
+    /// prepare-time seeding path).
+    pub fn zeroed(len: usize) -> AlignedVec {
+        let mut v = AlignedVec::new();
+        v.ensure_len(len);
+        v
+    }
+
+    /// Current length in f32 elements.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the buffer holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn layout(len: usize) -> std::alloc::Layout {
+        std::alloc::Layout::from_size_align(len * 4, SCRATCH_ALIGN)
+            .expect("scratch tile layout within address-space bounds")
+    }
+
+    /// Grow to at least `len` elements (no-op when already large enough);
+    /// new storage is zero-filled and the old contents are preserved.
+    pub fn ensure_len(&mut self, len: usize) {
+        if len <= self.len {
+            return;
+        }
+        // SAFETY: the layout is non-zero-sized (len > self.len >= 0), the
+        // old pointer (when present) came from the same allocator with
+        // its own length's layout, and the copy stays within both
+        // allocations.
+        unsafe {
+            let raw = std::alloc::alloc_zeroed(Self::layout(len)) as *mut f32;
+            let ptr = std::ptr::NonNull::new(raw)
+                .unwrap_or_else(|| std::alloc::handle_alloc_error(Self::layout(len)));
+            if let Some(old) = self.ptr.take() {
+                std::ptr::copy_nonoverlapping(old.as_ptr(), ptr.as_ptr(), self.len);
+                std::alloc::dealloc(old.as_ptr() as *mut u8, Self::layout(self.len));
+            }
+            self.ptr = Some(ptr);
+            self.len = len;
+        }
+    }
+}
+
+impl Drop for AlignedVec {
+    fn drop(&mut self) {
+        if let Some(ptr) = self.ptr.take() {
+            // SAFETY: allocated by ensure_len with exactly this layout.
+            unsafe { std::alloc::dealloc(ptr.as_ptr() as *mut u8, Self::layout(self.len)) }
+        }
+    }
+}
+
+impl Deref for AlignedVec {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        match self.ptr {
+            // SAFETY: `len` elements were allocated and zero-initialized.
+            Some(ptr) => unsafe { std::slice::from_raw_parts(ptr.as_ptr(), self.len) },
+            None => &[],
+        }
+    }
+}
+
+impl DerefMut for AlignedVec {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        match self.ptr {
+            // SAFETY: `len` elements were allocated and zero-initialized;
+            // `&mut self` guarantees exclusive access.
+            Some(ptr) => unsafe { std::slice::from_raw_parts_mut(ptr.as_ptr(), self.len) },
+            None => &mut [],
+        }
+    }
+}
+
 /// One parked slot plus the moment it was returned — the idle clock
 /// [`ScratchPool::trim_idle`] reads.
 #[derive(Debug)]
@@ -255,6 +367,47 @@ mod tests {
             pool.trim_idle(std::time::Duration::from_millis(10), |s| s.len() as u64);
         assert_eq!(reclaimed, 256, "only the stale slot is reclaimed");
         assert_eq!(pool.idle(), 1);
+    }
+
+    #[test]
+    fn aligned_vec_guarantees_alignment_across_growth() {
+        let mut v = AlignedVec::new();
+        assert!(v.is_empty());
+        for len in [1usize, 7, 8, 64, 1000] {
+            v.ensure_len(len);
+            assert_eq!(v.len(), len);
+            assert_eq!(
+                v.as_ptr() as usize % SCRATCH_ALIGN,
+                0,
+                "storage unaligned at len {len}"
+            );
+        }
+        // Grow-only: a smaller request keeps the larger buffer.
+        v.ensure_len(3);
+        assert_eq!(v.len(), 1000);
+    }
+
+    #[test]
+    fn aligned_vec_zero_fills_and_preserves_contents() {
+        let mut v = AlignedVec::zeroed(4);
+        assert_eq!(&v[..], &[0.0; 4]);
+        v[0] = 1.5;
+        v[3] = -2.0;
+        v.ensure_len(10);
+        assert_eq!(v[0], 1.5);
+        assert_eq!(v[3], -2.0);
+        assert_eq!(&v[4..], &[0.0; 6], "newly exposed region must be zeroed");
+    }
+
+    #[test]
+    fn aligned_vec_pools_like_any_scratch() {
+        let pool: ScratchPool<AlignedVec> = ScratchPool::with_seed(AlignedVec::zeroed(16));
+        {
+            let mut s = pool.checkout(AlignedVec::new);
+            assert_eq!(s.len(), 16);
+            s.ensure_len(32);
+        }
+        assert_eq!(pool.measure(|v| v.len() as u64 * 4), 128, "grown tile parked back");
     }
 
     #[test]

@@ -1,0 +1,583 @@
+//! Runtime-dispatched SIMD kernel layer for the native engine family — the
+//! CPU analogue of the paper's 8-lane II=1 PE datapath (§4).
+//!
+//! Every kernel comes in two implementations behind one safe entry point:
+//! a portable scalar loop (shaped so LLVM can autovectorize it) and an
+//! explicit AVX2 path using 256-bit `std::arch` intrinsics. Callers pass
+//! the [`Isa`] to use; [`active`] resolves the process-wide choice once
+//! from `is_x86_feature_detected!("avx2")` and the `SEXTANS_SIMD`
+//! environment override. Passing [`Isa::Avx2`] on a host without AVX2 is
+//! safe — dispatch re-checks feature support and falls back to scalar, so
+//! the unsafe intrinsics never run unguarded.
+//!
+//! ## Numerics contract (bit-identity)
+//!
+//! The native engines are pinned **bitwise** to
+//! [`crate::arch::functional::execute`], so both implementations of every
+//! kernel must perform, per output element, the *same sequence of
+//! roundings in the same order*:
+//!
+//! * accumulation is `acc[l] += val * b[l]` — one f32 multiply rounding
+//!   then one add rounding per contribution, in slot-issue order;
+//! * Comp-C is `c = alpha * ab + beta * c` — two multiply roundings and
+//!   one add rounding.
+//!
+//! That is why the AVX2 paths use `_mm256_mul_ps` + `_mm256_add_ps` and
+//! **never FMA**: a fused multiply-add rounds once where the scalar
+//! reference rounds twice, which would break the bit-identity tests. SIMD
+//! here buys *width* (8 independent output columns per instruction), not
+//! reassociation — each lane is an independent output element, so the
+//! per-element operation order is untouched.
+//!
+//! ## Prefetch
+//!
+//! The condensed streams built at prepare time
+//! ([`crate::backend::NativeBackend`]) touch B rows in a data-dependent
+//! order. The AVX2 row kernels issue `_mm_prefetch` (T0) for the B row
+//! [`PREFETCH_DISTANCE`] non-zeros ahead — far enough to cover DRAM
+//! latency at the observed per-non-zero cost, near enough not to thrash
+//! L1. On non-x86 targets prefetch compiles to nothing.
+
+use std::sync::OnceLock;
+
+/// Vector width in f32 lanes — the paper's N0 (8 PUs per PE), which is
+/// also exactly one 256-bit AVX2 register.
+pub const LANES: usize = 8;
+
+/// How many non-zeros ahead the row kernels prefetch the B row of — one
+/// pipelined L2/DRAM fetch roughly every [`LANES`] accumulations.
+pub const PREFETCH_DISTANCE: usize = 8;
+
+/// Fallback L2 size when neither `SEXTANS_L2_KB` nor sysfs yields one.
+const DEFAULT_L2_BYTES: usize = 1024 * 1024;
+
+/// Instruction set a kernel call executes with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar loops (still shaped for autovectorization).
+    Scalar,
+    /// Explicit 256-bit AVX2 intrinsics (x86_64 only).
+    Avx2,
+}
+
+impl Isa {
+    /// Short stable name for logs, bench records, and test labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+        }
+    }
+}
+
+/// True when the running CPU supports the AVX2 kernels.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Pure dispatch policy: resolve the [`Isa`] from an optional
+/// `SEXTANS_SIMD` preference string and the detected AVX2 support.
+/// `"scalar"`, `"off"`, `"0"`, and `"false"` force the scalar fallback;
+/// anything else (including unset) auto-detects. Split out from [`active`]
+/// so the policy is unit-testable without touching process environment.
+pub fn detect_with(pref: Option<&str>, avx2: bool) -> Isa {
+    if let Some(p) = pref {
+        let p = p.trim().to_ascii_lowercase();
+        if p == "scalar" || p == "off" || p == "0" || p == "false" {
+            return Isa::Scalar;
+        }
+    }
+    if avx2 {
+        Isa::Avx2
+    } else {
+        Isa::Scalar
+    }
+}
+
+/// The process-wide kernel [`Isa`]: AVX2 when the CPU supports it, unless
+/// the `SEXTANS_SIMD` environment variable (`scalar`/`off`/`0`/`false`)
+/// forces the scalar fallback — the toggle CI uses to keep the portable
+/// path green on AVX2 hosts. Resolved once and cached.
+pub fn active() -> Isa {
+    static ACTIVE: OnceLock<Isa> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let pref = std::env::var("SEXTANS_SIMD").ok();
+        detect_with(pref.as_deref(), avx2_available())
+    })
+}
+
+/// Parse a sysfs cache size string (`"2048K"`, `"2M"`, `"512"`) to bytes.
+fn parse_cache_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    let (digits, mult) = match s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1024),
+        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        b'G' | b'g' => (&s[..s.len() - 1], 1024 * 1024 * 1024),
+        _ => (s, 1),
+    };
+    digits.trim().parse::<usize>().ok().map(|v| v * mult)
+}
+
+/// Read cpu0's unified/data L2 size from sysfs, if the platform has one.
+fn sysfs_l2_bytes() -> Option<usize> {
+    let base = std::path::Path::new("/sys/devices/system/cpu/cpu0/cache");
+    for entry in std::fs::read_dir(base).ok()?.flatten() {
+        let dir = entry.path();
+        let level = match std::fs::read_to_string(dir.join("level")) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        if level.trim() != "2" {
+            continue;
+        }
+        let kind = std::fs::read_to_string(dir.join("type")).unwrap_or_default();
+        let kind = kind.trim();
+        if kind != "Unified" && kind != "Data" {
+            continue;
+        }
+        if let Ok(size) = std::fs::read_to_string(dir.join("size")) {
+            if let Some(bytes) = parse_cache_size(&size) {
+                return Some(bytes);
+            }
+        }
+    }
+    None
+}
+
+/// Per-core L2 cache size in bytes — the budget the adaptive column
+/// blocking sizes its B working set against. `SEXTANS_L2_KB` (kibibytes)
+/// overrides detection; otherwise cpu0's sysfs cache topology is read,
+/// with a 1 MiB fallback on platforms that expose neither. Resolved once
+/// and cached.
+pub fn l2_cache_bytes() -> usize {
+    static BYTES: OnceLock<usize> = OnceLock::new();
+    *BYTES.get_or_init(|| {
+        if let Ok(kb) = std::env::var("SEXTANS_L2_KB") {
+            if let Ok(kb) = kb.trim().parse::<usize>() {
+                if kb > 0 {
+                    return kb * 1024;
+                }
+            }
+        }
+        sysfs_l2_bytes().unwrap_or(DEFAULT_L2_BYTES)
+    })
+}
+
+/// `y[..] += a * x[..]` — the N-wide AXPY inner step. Each lane is an
+/// independent output element: per element the operation is one multiply
+/// rounding then one add rounding on both ISAs.
+pub fn axpy(isa: Isa, y: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(y.len(), x.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 if avx2_available() => unsafe { axpy_avx2(y, x, a) },
+        _ => axpy_scalar(y, x, a),
+    }
+}
+
+/// `c[..] = alpha * ab[..] + beta * c[..]` — the Comp-C stage, two
+/// multiply roundings and one add rounding per element on both ISAs.
+pub fn comp_c(isa: Isa, c: &mut [f32], ab: &[f32], alpha: f32, beta: f32) {
+    debug_assert_eq!(c.len(), ab.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 if avx2_available() => unsafe { comp_c_avx2(c, ab, alpha, beta) },
+        _ => comp_c_scalar(c, ab, alpha, beta),
+    }
+}
+
+/// Accumulate one output row's condensed non-zero segment into a zeroed
+/// column-block accumulator: `acc[q] += vals[i] * B[cols[i], col0 + q]`
+/// for every segment entry in order, over the slice `[col0, col0 +
+/// acc.len())` of B's `n` columns. The AVX2 path prefetches the B row
+/// [`PREFETCH_DISTANCE`] entries ahead.
+pub fn row_block(
+    isa: Isa,
+    cols: &[u32],
+    vals: &[f32],
+    b: &[f32],
+    n: usize,
+    col0: usize,
+    acc: &mut [f32],
+) {
+    debug_assert_eq!(cols.len(), vals.len());
+    debug_assert!(col0 + acc.len() <= n);
+    acc.fill(0.0);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 if avx2_available() => unsafe { row_block_avx2(cols, vals, b, n, col0, acc) },
+        _ => {
+            let w = acc.len();
+            for (&gc, &val) in cols.iter().zip(vals) {
+                let base = gc as usize * n + col0;
+                axpy_scalar(acc, &b[base..base + w], val);
+            }
+        }
+    }
+}
+
+/// Narrow-N fast path (`n <= LANES`): one output row start to finish with
+/// the accumulator held in registers — `c_row[q] = alpha * sum_i(vals[i] *
+/// B[cols[i], q]) + beta * c_row[q]`. No scratch, no blocking; the AVX2
+/// path keeps the whole row in one masked 256-bit register. `c_row` must
+/// be exactly `n` long.
+#[allow(clippy::too_many_arguments)]
+pub fn row_narrow(
+    isa: Isa,
+    cols: &[u32],
+    vals: &[f32],
+    b: &[f32],
+    n: usize,
+    c_row: &mut [f32],
+    alpha: f32,
+    beta: f32,
+) {
+    debug_assert!(n <= LANES);
+    debug_assert_eq!(c_row.len(), n);
+    debug_assert_eq!(cols.len(), vals.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 if avx2_available() => unsafe {
+            row_narrow_avx2(cols, vals, b, n, c_row, alpha, beta)
+        },
+        _ => row_narrow_scalar(cols, vals, b, n, c_row, alpha, beta),
+    }
+}
+
+fn axpy_scalar(y: &mut [f32], x: &[f32], a: f32) {
+    // Chunked to LANES so LLVM vectorizes the body; element order is
+    // unchanged (each lane is independent).
+    let mut yc = y.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (yl, xl) in (&mut yc).zip(&mut xc) {
+        for l in 0..LANES {
+            yl[l] += a * xl[l];
+        }
+    }
+    for (yl, xl) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *yl += a * xl;
+    }
+}
+
+fn comp_c_scalar(c: &mut [f32], ab: &[f32], alpha: f32, beta: f32) {
+    let mut cc = c.chunks_exact_mut(LANES);
+    let mut ac = ab.chunks_exact(LANES);
+    for (cl, al) in (&mut cc).zip(&mut ac) {
+        for l in 0..LANES {
+            cl[l] = alpha * al[l] + beta * cl[l];
+        }
+    }
+    for (cl, al) in cc.into_remainder().iter_mut().zip(ac.remainder()) {
+        *cl = alpha * al + beta * *cl;
+    }
+}
+
+fn row_narrow_scalar(
+    cols: &[u32],
+    vals: &[f32],
+    b: &[f32],
+    n: usize,
+    c_row: &mut [f32],
+    alpha: f32,
+    beta: f32,
+) {
+    let mut acc = [0f32; LANES];
+    for (&gc, &val) in cols.iter().zip(vals) {
+        let base = gc as usize * n;
+        let x = &b[base..base + n];
+        for (a, &xv) in acc[..n].iter_mut().zip(x) {
+            *a += val * xv;
+        }
+    }
+    for (cv, &av) in c_row.iter_mut().zip(acc[..n].iter()) {
+        *cv = alpha * av + beta * *cv;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{LANES, PREFETCH_DISTANCE};
+    use std::arch::x86_64::*;
+
+    /// Lane mask with the low `n` lanes active (for masked loads/stores).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn lane_mask(n: usize) -> __m256i {
+        let mut lanes = [0i32; LANES];
+        for (l, slot) in lanes.iter_mut().enumerate() {
+            if l < n {
+                *slot = -1;
+            }
+        }
+        _mm256_loadu_si256(lanes.as_ptr() as *const __m256i)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_avx2(y: &mut [f32], x: &[f32], a: f32) {
+        let n = y.len();
+        let va = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + LANES <= n {
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            // mul + add, never FMA: see the module-level numerics contract.
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(vy, _mm256_mul_ps(va, vx)));
+            i += LANES;
+        }
+        while i < n {
+            *y.get_unchecked_mut(i) += a * *x.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn comp_c_avx2(c: &mut [f32], ab: &[f32], alpha: f32, beta: f32) {
+        let n = c.len();
+        let valpha = _mm256_set1_ps(alpha);
+        let vbeta = _mm256_set1_ps(beta);
+        let mut i = 0;
+        while i + LANES <= n {
+            let vab = _mm256_loadu_ps(ab.as_ptr().add(i));
+            let vc = _mm256_loadu_ps(c.as_ptr().add(i));
+            let out = _mm256_add_ps(_mm256_mul_ps(valpha, vab), _mm256_mul_ps(vbeta, vc));
+            _mm256_storeu_ps(c.as_mut_ptr().add(i), out);
+            i += LANES;
+        }
+        while i < n {
+            let slot = c.get_unchecked_mut(i);
+            *slot = alpha * *ab.get_unchecked(i) + beta * *slot;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn row_block_avx2(
+        cols: &[u32],
+        vals: &[f32],
+        b: &[f32],
+        n: usize,
+        col0: usize,
+        acc: &mut [f32],
+    ) {
+        let w = acc.len();
+        let len = cols.len();
+        for idx in 0..len {
+            if idx + PREFETCH_DISTANCE < len {
+                let pbase = *cols.get_unchecked(idx + PREFETCH_DISTANCE) as usize * n + col0;
+                if pbase < b.len() {
+                    _mm_prefetch::<_MM_HINT_T0>(b.as_ptr().add(pbase) as *const i8);
+                }
+            }
+            let val = *vals.get_unchecked(idx);
+            let base = *cols.get_unchecked(idx) as usize * n + col0;
+            // Bounds-checked slice: the soundness gate for the raw loads.
+            let x = &b[base..base + w];
+            let va = _mm256_set1_ps(val);
+            let mut i = 0;
+            while i + LANES <= w {
+                let vacc = _mm256_loadu_ps(acc.as_ptr().add(i));
+                let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+                _mm256_storeu_ps(
+                    acc.as_mut_ptr().add(i),
+                    _mm256_add_ps(vacc, _mm256_mul_ps(va, vx)),
+                );
+                i += LANES;
+            }
+            while i < w {
+                *acc.get_unchecked_mut(i) += val * *x.get_unchecked(i);
+                i += 1;
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn row_narrow_avx2(
+        cols: &[u32],
+        vals: &[f32],
+        b: &[f32],
+        n: usize,
+        c_row: &mut [f32],
+        alpha: f32,
+        beta: f32,
+    ) {
+        let mask = lane_mask(n);
+        let mut acc = _mm256_setzero_ps();
+        let len = cols.len();
+        for idx in 0..len {
+            if idx + PREFETCH_DISTANCE < len {
+                let pbase = *cols.get_unchecked(idx + PREFETCH_DISTANCE) as usize * n;
+                if pbase < b.len() {
+                    _mm_prefetch::<_MM_HINT_T0>(b.as_ptr().add(pbase) as *const i8);
+                }
+            }
+            let base = *cols.get_unchecked(idx) as usize * n;
+            // Bounds-checked slice; the masked load reads only its first
+            // `n` lanes, which the slice guarantees are in bounds.
+            let x = &b[base..base + n];
+            let vx = _mm256_maskload_ps(x.as_ptr(), mask);
+            let vv = _mm256_set1_ps(*vals.get_unchecked(idx));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(vv, vx));
+        }
+        let vc = _mm256_maskload_ps(c_row.as_ptr(), mask);
+        let out = _mm256_add_ps(
+            _mm256_mul_ps(_mm256_set1_ps(alpha), acc),
+            _mm256_mul_ps(_mm256_set1_ps(beta), vc),
+        );
+        _mm256_maskstore_ps(c_row.as_mut_ptr(), mask, out);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+use avx2::{axpy_avx2, comp_c_avx2, row_block_avx2, row_narrow_avx2};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_policy_honors_override_and_detection() {
+        assert_eq!(detect_with(None, true), Isa::Avx2);
+        assert_eq!(detect_with(None, false), Isa::Scalar);
+        for force in ["scalar", "off", "0", "false", " SCALAR ", "Off"] {
+            assert_eq!(detect_with(Some(force), true), Isa::Scalar, "{force:?}");
+        }
+        // Unknown / affirmative values fall through to detection.
+        for pass in ["", "auto", "avx2", "on", "1"] {
+            assert_eq!(detect_with(Some(pass), true), Isa::Avx2, "{pass:?}");
+            assert_eq!(detect_with(Some(pass), false), Isa::Scalar, "{pass:?}");
+        }
+    }
+
+    #[test]
+    fn isa_names_are_stable() {
+        assert_eq!(Isa::Scalar.name(), "scalar");
+        assert_eq!(Isa::Avx2.name(), "avx2");
+    }
+
+    #[test]
+    fn cache_size_strings_parse() {
+        assert_eq!(parse_cache_size("2048K"), Some(2048 * 1024));
+        assert_eq!(parse_cache_size(" 512K\n"), Some(512 * 1024));
+        assert_eq!(parse_cache_size("2M"), Some(2 * 1024 * 1024));
+        assert_eq!(parse_cache_size("1G"), Some(1024 * 1024 * 1024));
+        assert_eq!(parse_cache_size("65536"), Some(65536));
+        assert_eq!(parse_cache_size(""), None);
+        assert_eq!(parse_cache_size("lots"), None);
+    }
+
+    #[test]
+    fn l2_detection_yields_a_sane_budget() {
+        let bytes = l2_cache_bytes();
+        assert!(
+            (64 * 1024..=1024 * 1024 * 1024).contains(&bytes),
+            "implausible L2 size {bytes}"
+        );
+    }
+
+    /// Every ISA the host can actually run.
+    fn isas() -> Vec<Isa> {
+        let mut v = vec![Isa::Scalar];
+        if avx2_available() {
+            v.push(Isa::Avx2);
+        }
+        v
+    }
+
+    fn pattern(len: usize, seed: u32) -> Vec<f32> {
+        (0..len).map(|i| ((i as f32 + seed as f32) * 0.37).sin() * 3.0).collect()
+    }
+
+    #[test]
+    fn axpy_isas_are_bit_identical() {
+        for len in [0usize, 1, 7, 8, 9, 31, 100] {
+            let x = pattern(len, 1);
+            let y0 = pattern(len, 2);
+            let mut want = y0.clone();
+            axpy(Isa::Scalar, &mut want, &x, -1.75);
+            for isa in isas() {
+                let mut got = y0.clone();
+                axpy(isa, &mut got, &x, -1.75);
+                assert_eq!(got, want, "len = {len}, isa = {}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn comp_c_isas_are_bit_identical_including_nan() {
+        for len in [0usize, 1, 8, 13, 40] {
+            let mut ab = pattern(len, 3);
+            let c0 = pattern(len, 4);
+            if len > 2 {
+                ab[1] = f32::NAN;
+                ab[2] = f32::INFINITY;
+            }
+            for (alpha, beta) in [(0.0f32, 1.0f32), (1.0, 0.0), (-2.5, 0.75)] {
+                let mut want = c0.clone();
+                comp_c(Isa::Scalar, &mut want, &ab, alpha, beta);
+                for isa in isas() {
+                    let mut got = c0.clone();
+                    comp_c(isa, &mut got, &ab, alpha, beta);
+                    assert_eq!(
+                        got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "len = {len}, alpha = {alpha}, beta = {beta}, isa = {}",
+                        isa.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_kernels_match_scalar_on_short_segments() {
+        // 4 B rows, segment touching them out of order with repeats.
+        let n = 5usize;
+        let b = pattern(4 * n, 7);
+        let cols = [2u32, 0, 3, 2, 1, 3];
+        let vals = [1.5f32, -0.25, 2.0, 0.5, -1.0, 3.0];
+        let c0 = pattern(n, 9);
+        let mut want = c0.clone();
+        row_narrow(Isa::Scalar, &cols, &vals, &b, n, &mut want, 1.5, -0.25);
+        for isa in isas() {
+            let mut got = c0.clone();
+            row_narrow(isa, &cols, &vals, &b, n, &mut got, 1.5, -0.25);
+            assert_eq!(got, want, "isa = {}", isa.name());
+        }
+        // Empty segment: pure alpha*0 + beta*c.
+        for isa in isas() {
+            let mut got = c0.clone();
+            row_narrow(isa, &[], &[], &b, n, &mut got, 2.0, 0.5);
+            let want: Vec<f32> = c0.iter().map(|&c| 2.0f32 * 0.0 + 0.5 * c).collect();
+            assert_eq!(got, want, "isa = {}", isa.name());
+        }
+    }
+
+    #[test]
+    fn row_block_slices_compose_to_full_width() {
+        let n = 13usize;
+        let b = pattern(6 * n, 11);
+        let cols = [5u32, 1, 4, 1, 0];
+        let vals = [0.5f32, 2.0, -1.5, 1.0, -0.75];
+        let mut full = vec![0f32; n];
+        row_block(Isa::Scalar, &cols, &vals, &b, n, 0, &mut full);
+        for isa in isas() {
+            let mut stitched = vec![0f32; n];
+            let mut col0 = 0;
+            while col0 < n {
+                let w = 4.min(n - col0);
+                let mut acc = vec![0f32; w];
+                row_block(isa, &cols, &vals, &b, n, col0, &mut acc);
+                stitched[col0..col0 + w].copy_from_slice(&acc);
+                col0 += w;
+            }
+            assert_eq!(stitched, full, "isa = {}", isa.name());
+        }
+    }
+}

@@ -32,7 +32,7 @@
 //! | [`arch`] | §3.1, §3.2, §3.5, §3.6.2 | cycle-level streaming simulator, functional simulator, resource model |
 //! | [`perfmodel`] | §3.6.1, §4.1 | Eq. 6–10 closed form, GPU baselines, platform constants, energy |
 //! | [`hflex`] | §3.4 | the HFlex runtime contract: one fixed accelerator, arbitrary SpMMs; [`hflex::HFlexAccelerator::load`] returns an A-resident [`hflex::LoadedMatrix`] |
-//! | [`backend`] | §3.4, §4.2 | two-phase prepare/execute engines: [`backend::SpmmBackend`] factories produce matrix-resident [`backend::PreparedSpmm`] handles (prepare A once, execute many — *concurrently*: `execute` takes `&self`, per-call scratch comes from [`backend::ScratchPool`]s) — native multi-threaded CPU (plain + column-blocked), functional reference, PJRT adapter, sharded composite — selected by name |
+//! | [`backend`] | §3.4, §4.2 | two-phase prepare/execute engines: [`backend::SpmmBackend`] factories produce matrix-resident [`backend::PreparedSpmm`] handles (prepare A once, execute many — *concurrently*: `execute` takes `&self`, per-call scratch comes from [`backend::ScratchPool`]s) — native multi-threaded CPU over condensed per-PE streams and the runtime-dispatched [`backend::simd`] kernel layer (AVX2 or bit-identical scalar fallback; plain + adaptively column-blocked), functional reference, PJRT adapter, sharded composite — selected by name |
 //! | [`shard`] | §3.3 scaled up | sharded multi-accelerator execution: nnz-balanced row partitioning, resident [`shard::ShardExecutor`] pools of prepared inner handles (full or active-subset execution, `&self` with pooled gather blocks), `sharded:<S>:<inner>` composite backend |
 //! | [`net`] | §3.3 scaled out | distributed worker fleet: versioned length-prefixed wire codec for scheduled images, `sextans worker` shard servers, LPT/replicated shard placement, and the `remote:<addr>[,addr...]` backend proxying execution over pooled connections with retry + re-place |
 //! | [`runtime`] | — | PJRT client wrapping the AOT HLO artifacts (stubbed unless both `pjrt` and `xla` features are on) |

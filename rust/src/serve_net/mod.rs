@@ -37,14 +37,19 @@
 //!
 //! [`loadgen`] drives all of this open-loop for capacity measurement
 //! (`sextans loadgen`), persisting `BENCH_serve_*.json` snapshots in the
-//! same schema-v1 trajectory the kernel benches use.
+//! same schema-v1 trajectory the kernel benches use. [`retry`] gives
+//! clients a bounded, jittered-backoff retry policy that reconnects on
+//! transport errors and — deliberately — never retries typed `Shed`
+//! backpressure by default.
 
 pub mod client;
 pub mod loadgen;
 pub mod proto;
+pub mod retry;
 pub mod server;
 
 pub use client::{ClientError, FrontClient, FrontResponse};
 pub use loadgen::{LoadReport, LoadgenOptions, Mix};
 pub use proto::{AwaitOk, FrontStatus, ImageInfo, ShedReason};
+pub use retry::{call_with_retry, retry_loop, RetryPolicy};
 pub use server::{FrontDoor, FrontDoorConfig};

@@ -1,0 +1,295 @@
+//! Client-side retry/backoff policy for [`FrontClient`] calls.
+//!
+//! Transport can flake (connection refused during a rolling restart, a
+//! dropped socket mid-frame); a *shed* cannot — it is the server's typed,
+//! deliberate answer. The policy encodes that asymmetry:
+//!
+//! * [`ClientError::Wire`] (connect/transport/codec failures) is retried
+//!   up to [`RetryPolicy::max_retries`] times with capped exponential
+//!   backoff, **reconnecting first** — after a wire error the connection
+//!   state is unknowable, so the old socket is discarded.
+//! * [`ClientError::Shed`] is **not** retried by default: the admission
+//!   gate already decided the deployment is saturated, and a hot retry
+//!   loop is exactly the traffic it is shedding. Callers that want to
+//!   wait out a drain can opt in via [`RetryPolicy::retry_sheds`] (the
+//!   backoff still applies, so opted-in retries arrive decorrelated).
+//! * [`ClientError::Server`] is never retried — the request itself is
+//!   wrong, and resending it cannot help.
+//!
+//! Backoff is "decorrelated-half" jitter: retry `i` sleeps a duration
+//! drawn deterministically (splitmix64 over [`RetryPolicy::seed`] and the
+//! attempt index) from `[d/2, d]`, where `d = min(base · 2^i, max)`.
+//! Determinism keeps the schedule unit-testable and reproducible in
+//! traces while still decorrelating a fleet of clients with distinct
+//! seeds.
+//!
+//! SpMM requests are pure reads of a registered image, so re-submitting
+//! after a wire error is semantically safe — at worst the server computes
+//! a panel twice.
+
+use std::time::Duration;
+
+use super::client::{ClientError, FrontClient, FrontResponse};
+use super::proto::ImageInfo;
+
+/// Bounded-retry policy with capped, jittered exponential backoff.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (0 disables retrying; the first
+    /// attempt always runs).
+    pub max_retries: u32,
+    /// Delay scale for the first retry.
+    pub base_delay: Duration,
+    /// Ceiling on any single backoff delay.
+    pub max_delay: Duration,
+    /// Also retry typed [`ClientError::Shed`] responses. Off by default —
+    /// sheds are deliberate backpressure, not failures.
+    pub retry_sheds: bool,
+    /// Jitter seed; give each client its own to decorrelate a fleet.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 3,
+            base_delay: Duration::from_millis(25),
+            max_delay: Duration::from_secs(1),
+            retry_sheds: false,
+            seed: 0x5EC7_A115,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The backoff before retry `attempt` (0-based): deterministic jitter
+    /// in `[d/2, d]` with `d = min(base · 2^attempt, max)`.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let base = self.base_delay.as_nanos() as u64;
+        let cap = self.max_delay.as_nanos() as u64;
+        let exp = attempt.min(20); // 2^20 · base already dwarfs any sane cap
+        let full = base.saturating_mul(1u64 << exp).min(cap).max(1);
+        let half = full / 2;
+        let r = splitmix64(self.seed ^ u64::from(attempt).wrapping_mul(0xA24B_AED4_963E_E407));
+        Duration::from_nanos(half + r % (full - half + 1))
+    }
+
+    /// Whether `err` warrants retry number `attempt` (0-based).
+    pub fn should_retry(&self, err: &ClientError, attempt: u32) -> bool {
+        if attempt >= self.max_retries {
+            return false;
+        }
+        match err {
+            ClientError::Wire(_) => true,
+            ClientError::Shed { .. } => self.retry_sheds,
+            ClientError::Server(_) => false,
+        }
+    }
+}
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Drive `op` against a connection under `policy`. `connect` builds (and
+/// after a wire error, rebuilds) the connection; `sleep` performs the
+/// backoff waits — injected so the schedule is unit-testable without
+/// sockets or clocks. Generic over the connection type for the same
+/// reason; production callers pass [`FrontClient`] closures (see
+/// [`call_with_retry`]).
+pub fn retry_loop<Conn, T>(
+    policy: &RetryPolicy,
+    mut connect: impl FnMut() -> Result<Conn, ClientError>,
+    mut op: impl FnMut(&mut Conn) -> Result<T, ClientError>,
+    mut sleep: impl FnMut(Duration),
+) -> Result<T, ClientError> {
+    let mut conn: Option<Conn> = None;
+    let mut attempt = 0u32;
+    loop {
+        let result = if let Some(c) = conn.as_mut() {
+            op(c)
+        } else {
+            match connect() {
+                Ok(c) => {
+                    conn = Some(c);
+                    op(conn.as_mut().expect("just connected"))
+                }
+                Err(e) => Err(e),
+            }
+        };
+        match result {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                if !policy.should_retry(&e, attempt) {
+                    return Err(e);
+                }
+                if matches!(e, ClientError::Wire(_)) {
+                    // Transport state is unknowable: reconnect.
+                    conn = None;
+                }
+                sleep(policy.backoff(attempt));
+                attempt += 1;
+            }
+        }
+    }
+}
+
+/// Submit + fetch one request with retries: each attempt connects fresh
+/// if needed and runs [`FrontClient::call`]. Safe to retry because SpMM
+/// requests are pure reads of the registered image.
+#[allow(clippy::too_many_arguments)]
+pub fn call_with_retry(
+    policy: &RetryPolicy,
+    addr: &str,
+    timeout: Duration,
+    image: &ImageInfo,
+    n: usize,
+    alpha: f32,
+    beta: f32,
+    b: &[f32],
+    c: &[f32],
+    col_block: usize,
+) -> Result<FrontResponse, ClientError> {
+    retry_loop(
+        policy,
+        || FrontClient::connect(addr, timeout),
+        |client| client.call(image, n, alpha, beta, b, c, col_block),
+        std::thread::sleep,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::wire::WireError;
+    use crate::serve_net::proto::ShedReason;
+
+    fn wire_err() -> ClientError {
+        ClientError::Wire(WireError::Malformed("boom".into()))
+    }
+
+    fn shed_err() -> ClientError {
+        ClientError::Shed { reason: ShedReason::QueueFull, message: "full".into() }
+    }
+
+    #[test]
+    fn backoff_schedule_doubles_jitters_and_caps() {
+        let p = RetryPolicy::default();
+        for attempt in 0..8 {
+            let full = Duration::from_millis(25 * (1 << attempt)).min(p.max_delay);
+            let d = p.backoff(attempt);
+            assert!(
+                d >= full / 2 && d <= full,
+                "attempt {attempt}: {d:?} outside [{:?}, {full:?}]",
+                full / 2
+            );
+            assert_eq!(d, p.backoff(attempt), "schedule must be deterministic");
+        }
+        // Far attempts stay at the cap.
+        assert!(p.backoff(40) <= p.max_delay);
+        assert!(p.backoff(40) >= p.max_delay / 2);
+        // Different seeds decorrelate.
+        let other = RetryPolicy { seed: 1, ..RetryPolicy::default() };
+        assert_ne!(p.backoff(3), other.backoff(3));
+    }
+
+    #[test]
+    fn classification_wire_yes_shed_opt_in_server_never() {
+        let p = RetryPolicy::default();
+        assert!(p.should_retry(&wire_err(), 0));
+        assert!(!p.should_retry(&wire_err(), p.max_retries), "budget exhausted");
+        assert!(!p.should_retry(&shed_err(), 0), "sheds are backpressure, not failures");
+        assert!(!p.should_retry(&ClientError::Server("bad".into()), 0));
+        let opted = RetryPolicy { retry_sheds: true, ..RetryPolicy::default() };
+        assert!(opted.should_retry(&shed_err(), 0));
+        assert!(!opted.should_retry(&ClientError::Server("bad".into()), 0));
+    }
+
+    #[test]
+    fn wire_errors_reconnect_and_succeed_within_budget() {
+        let p = RetryPolicy::default();
+        let mut connects = 0u32;
+        let mut calls = 0u32;
+        let mut sleeps: Vec<Duration> = Vec::new();
+        let out = retry_loop(
+            &p,
+            || {
+                connects += 1;
+                Ok(connects)
+            },
+            |conn| {
+                calls += 1;
+                if calls <= 2 {
+                    Err(wire_err())
+                } else {
+                    Ok(*conn)
+                }
+            },
+            |d| sleeps.push(d),
+        )
+        .unwrap();
+        assert_eq!(calls, 3);
+        assert_eq!(connects, 3, "every wire error must force a reconnect");
+        assert_eq!(out, 3, "the successful call ran on the freshest connection");
+        assert_eq!(sleeps, vec![p.backoff(0), p.backoff(1)]);
+    }
+
+    #[test]
+    fn exhausted_budget_returns_the_last_error() {
+        let p = RetryPolicy { max_retries: 2, ..RetryPolicy::default() };
+        let mut calls = 0u32;
+        let mut sleeps = 0u32;
+        let err = retry_loop(
+            &p,
+            || Ok(()),
+            |_conn: &mut ()| -> Result<(), ClientError> {
+                calls += 1;
+                Err(wire_err())
+            },
+            |_| sleeps += 1,
+        )
+        .unwrap_err();
+        assert!(matches!(err, ClientError::Wire(_)));
+        assert_eq!(calls, 1 + p.max_retries, "first attempt plus max_retries");
+        assert_eq!(sleeps, p.max_retries);
+    }
+
+    #[test]
+    fn sheds_fail_fast_by_default_and_connect_errors_retry() {
+        let p = RetryPolicy::default();
+        let mut calls = 0u32;
+        let err = retry_loop(
+            &p,
+            || Ok(()),
+            |_conn: &mut ()| -> Result<(), ClientError> {
+                calls += 1;
+                Err(shed_err())
+            },
+            |_| panic!("a default-policy shed must not back off"),
+        )
+        .unwrap_err();
+        assert!(matches!(err, ClientError::Shed { .. }));
+        assert_eq!(calls, 1);
+        // Failures in connect() itself consume the same retry budget.
+        let mut connects = 0u32;
+        let mut sleeps = 0u32;
+        let out: Result<u32, _> = retry_loop(
+            &p,
+            || {
+                connects += 1;
+                if connects < 3 {
+                    Err(wire_err())
+                } else {
+                    Ok(connects)
+                }
+            },
+            |conn| Ok(*conn),
+            |_| sleeps += 1,
+        );
+        assert_eq!(out.unwrap(), 3);
+        assert_eq!(sleeps, 2);
+    }
+}

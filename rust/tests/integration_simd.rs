@@ -1,0 +1,194 @@
+//! Integration: the SIMD kernel layer's bit-identity contract.
+//!
+//! The native engines dispatch between an AVX2 path and a portable scalar
+//! fallback at runtime; the whole design rests on the two producing the
+//! *same bits* (mul + add per contribution, never FMA — see
+//! `backend::simd`). This suite pins that contract at the kernel level,
+//! across the widths the satellite spec calls out (N ∈ {1, LANES−1,
+//! LANES, LANES+1, 3·LANES+7}), degenerate alpha/beta, empty rows, and
+//! NaN/inf propagation — and it runs the scalar path explicitly on every
+//! host, so both dispatch arms are exercised regardless of the machine's
+//! ISA (CI additionally re-runs the whole suite under
+//! `SEXTANS_SIMD=scalar` to pin the engine-level toggle).
+
+use std::sync::Arc;
+
+use sextans::arch::functional;
+use sextans::backend::simd::{self, Isa, LANES};
+use sextans::backend::{NativeBackend, PreparedSpmm, SpmmBackend};
+use sextans::prop;
+use sextans::sched::preprocess;
+use sextans::sparse::{gen, rng::Rng};
+
+/// The satellite's width set: 1, LANES−1, LANES, LANES+1, 3·LANES+7.
+const WIDTHS: [usize; 5] = [1, LANES - 1, LANES, LANES + 1, 3 * LANES + 7];
+
+/// Scalar/vector coefficient pairs the spec calls out.
+const COEFFS: [(f32, f32); 4] = [(0.0, 1.0), (1.0, 0.0), (-2.5, 1.0), (-2.5, -2.5)];
+
+/// Every ISA this host can actually execute. Scalar is always present, so
+/// the fallback arm is exercised on every machine; the AVX2 arm joins in
+/// whenever the CPU has it (all of CI's fleet).
+fn isas() -> Vec<Isa> {
+    let mut v = vec![Isa::Scalar];
+    if simd::avx2_available() {
+        v.push(Isa::Avx2);
+    }
+    v
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn axpy_and_comp_c_bit_identical_across_isas_property() {
+    prop::check("simd_axpy_comp_c_bit_identity", 0x51D0_0001, 40, |rng| {
+        let len = rng.index(4 * LANES + 8);
+        let x: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+        let y0: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+        let a = rng.range_f32(-3.0, 3.0);
+        let mut want = y0.clone();
+        simd::axpy(Isa::Scalar, &mut want, &x, a);
+        for isa in isas() {
+            let mut got = y0.clone();
+            simd::axpy(isa, &mut got, &x, a);
+            if bits(&got) != bits(&want) {
+                return Err(format!("axpy diverged on {} at len {len}", isa.name()));
+            }
+        }
+        for (alpha, beta) in COEFFS {
+            let mut want = y0.clone();
+            simd::comp_c(Isa::Scalar, &mut want, &x, alpha, beta);
+            for isa in isas() {
+                let mut got = y0.clone();
+                simd::comp_c(isa, &mut got, &x, alpha, beta);
+                if bits(&got) != bits(&want) {
+                    return Err(format!(
+                        "comp_c diverged on {} at len {len}, alpha {alpha}, beta {beta}",
+                        isa.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn row_kernels_bit_identical_across_isas_property() {
+    prop::check("simd_row_kernel_bit_identity", 0x51D0_0002, 30, |rng| {
+        let b_rows = 1 + rng.index(40);
+        let nnz = rng.index(60); // 0 = the empty-row case
+        let cols: Vec<u32> = (0..nnz).map(|_| rng.index(b_rows) as u32).collect();
+        let vals: Vec<f32> = (0..nnz).map(|_| rng.normal()).collect();
+        for n in WIDTHS {
+            let b: Vec<f32> = (0..b_rows * n).map(|_| rng.normal()).collect();
+            for (alpha, beta) in COEFFS {
+                if n <= LANES {
+                    let c0: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+                    let mut want = c0.clone();
+                    simd::row_narrow(Isa::Scalar, &cols, &vals, &b, n, &mut want, alpha, beta);
+                    for isa in isas() {
+                        let mut got = c0.clone();
+                        simd::row_narrow(isa, &cols, &vals, &b, n, &mut got, alpha, beta);
+                        if bits(&got) != bits(&want) {
+                            return Err(format!(
+                                "row_narrow diverged on {} at n {n}, nnz {nnz}",
+                                isa.name()
+                            ));
+                        }
+                    }
+                }
+                // Blocked path: accumulate a random slice, then Comp-C it.
+                let col0 = rng.index(n);
+                let w = 1 + rng.index(n - col0);
+                let mut want_acc = vec![0f32; w];
+                simd::row_block(Isa::Scalar, &cols, &vals, &b, n, col0, &mut want_acc);
+                for isa in isas() {
+                    let mut acc = vec![f32::NAN; w]; // kernel must overwrite
+                    simd::row_block(isa, &cols, &vals, &b, n, col0, &mut acc);
+                    if bits(&acc) != bits(&want_acc) {
+                        return Err(format!(
+                            "row_block diverged on {} at n {n}, col0 {col0}, w {w}",
+                            isa.name()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn nan_and_inf_propagate_identically() {
+    // Specials must flow through both paths to the same bit patterns —
+    // packed and scalar x86 mul/add agree on NaN/inf semantics, and
+    // nothing in the kernels may short-circuit them away.
+    let n = LANES - 1; // masked narrow path
+    let mut b = vec![1.0f32; 4 * n];
+    b[0] = f32::NAN;
+    b[n] = f32::INFINITY;
+    b[2 * n] = f32::NEG_INFINITY;
+    let cols = [0u32, 1, 2, 3];
+    let vals = [2.0f32, -1.0, 0.5, 3.0];
+    let c0: Vec<f32> = (0..n).map(|i| i as f32 - 2.0).collect();
+    for (alpha, beta) in [(1.0f32, 1.0f32), (0.0, 1.0), (-2.5, 0.0)] {
+        let mut want = c0.clone();
+        simd::row_narrow(Isa::Scalar, &cols, &vals, &b, n, &mut want, alpha, beta);
+        for isa in isas() {
+            let mut got = c0.clone();
+            simd::row_narrow(isa, &cols, &vals, &b, n, &mut got, alpha, beta);
+            assert_eq!(
+                bits(&got),
+                bits(&want),
+                "row_narrow specials diverged on {} (alpha {alpha}, beta {beta})",
+                isa.name()
+            );
+        }
+        let mut want_acc = vec![0f32; n];
+        simd::row_block(Isa::Scalar, &cols, &vals, &b, n, 0, &mut want_acc);
+        for isa in isas() {
+            let mut acc = vec![0f32; n];
+            simd::row_block(isa, &cols, &vals, &b, n, 0, &mut acc);
+            assert_eq!(
+                bits(&acc),
+                bits(&want_acc),
+                "row_block specials diverged on {}",
+                isa.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn native_engine_matches_functional_bitwise_across_satellite_widths() {
+    // End to end through whatever ISA `simd::active()` resolved — under
+    // the CI scalar leg this pins the fallback engine, on AVX2 hosts the
+    // vector engine; functional is the ISA-independent reference either
+    // way.
+    let mut rng = Rng::new(0x51D3);
+    let a = gen::power_law_rows(140, 110, 2_200, 1.0, &mut rng);
+    let sm = Arc::new(preprocess(&a, 8, 32, 6));
+    for n in WIDTHS {
+        let b: Vec<f32> = (0..a.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..a.m * n).map(|_| rng.normal()).collect();
+        for (alpha, beta) in COEFFS {
+            let mut want = c0.clone();
+            functional::execute(&sm, &b, &mut want, n, alpha, beta);
+            for backend in [NativeBackend::new(3), NativeBackend::blocked(3)] {
+                let handle = backend.build(Arc::clone(&sm));
+                let mut got = c0.clone();
+                handle.execute(&b, &mut got, n, alpha, beta).unwrap();
+                assert_eq!(
+                    bits(&got),
+                    bits(&want),
+                    "{} != functional at n {n}, alpha {alpha}, beta {beta} (isa {})",
+                    backend.name(),
+                    simd::active().name()
+                );
+            }
+        }
+    }
+}

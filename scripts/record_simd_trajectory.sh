@@ -1,0 +1,50 @@
+#!/usr/bin/env bash
+# Record the SIMD perf trajectory as a before/after snapshot pair:
+#
+#   BENCH_simd_before.json  — native:8 with SEXTANS_SIMD=scalar (the
+#                             portable fallback every host can run)
+#   BENCH_simd_after.json   — native:8 with runtime SIMD dispatch (AVX2
+#                             on hosts that have it)
+#
+# then checks the geomean speedup across matched measurement cells
+# against the acceptance floor (default 1.5x; override with
+# SIMD_TRAJECTORY_MIN, set it to 0 to record without gating — e.g. on a
+# host without AVX2, where before == after by construction), and finally
+# refreshes BENCH_baseline.json from a full-catalog run so the committed
+# baseline is anchored at this revision.
+#
+# Usage: scripts/record_simd_trajectory.sh [out_dir]   (default: repo root)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT="${1:-.}"
+STAMP="${BENCH_TIMESTAMP:-$(git rev-parse --short HEAD 2>/dev/null || echo unknown)}"
+MIN="${SIMD_TRAJECTORY_MIN:-1.5}"
+RUN=(cargo run --release -p sextans --)
+
+echo "== before: scalar fallback (SEXTANS_SIMD=scalar, native:8) =="
+SEXTANS_SIMD=scalar "${RUN[@]}" bench \
+  --backend native:8 --name simd_before --out "$OUT" --timestamp "$STAMP"
+
+echo
+echo "== after: runtime-dispatched SIMD (native:8) =="
+"${RUN[@]}" bench \
+  --backend native:8 --name simd_after --out "$OUT" --timestamp "$STAMP" \
+  --baseline "$OUT/BENCH_simd_before.json"
+
+# Geomean of after/before across measurement cells. The two snapshots
+# run the identical command, so the pretty-JSON "gflops" lines pair up
+# positionally.
+gf() { grep -oE '"gflops": *[0-9.eE+-]+' "$1" | grep -oE '[0-9.eE+-]+$'; }
+GEOMEAN=$(paste <(gf "$OUT/BENCH_simd_after.json") <(gf "$OUT/BENCH_simd_before.json") |
+  awk '$2 > 0 { s += log($1 / $2); n++ } END { if (n) printf "%.3f", exp(s / n); else print "nan" }')
+echo
+echo "simd-vs-scalar geomean speedup: ${GEOMEAN}x (floor ${MIN}x)"
+awk -v g="$GEOMEAN" -v m="$MIN" 'BEGIN { exit !(g >= m) }' || {
+  echo "FAIL: geomean ${GEOMEAN}x below the ${MIN}x acceptance floor" >&2
+  exit 1
+}
+
+echo
+echo "== refresh BENCH_baseline.json (full catalog) =="
+"${RUN[@]}" bench --full --write-baseline --out "$OUT" --timestamp "$STAMP"
