@@ -154,7 +154,8 @@ pub struct ExecutionReport {
 pub struct RemoteStats {
     /// Workers in the fleet (reachable or not).
     pub workers: usize,
-    /// Workers not marked dead after this call.
+    /// Workers whose supervised liveness is Live after this call
+    /// (Suspect and Dead workers are excluded).
     pub live_workers: usize,
     /// Shard placements currently live across the fleet (replicas
     /// included).
@@ -166,6 +167,15 @@ pub struct RemoteStats {
     pub retries: usize,
     /// Shards re-placed (re-prepared on a fresh worker) during this call.
     pub replaced: usize,
+    /// Circuit-breaker trips (closed → open edges) since the handle was
+    /// prepared.
+    pub breaker_trips: usize,
+    /// Liveness transitions (any direction) observed by the heartbeat
+    /// supervisor since the handle was prepared.
+    pub transitions: usize,
+    /// Placements proactively re-placed by membership-driven rebalancing
+    /// since the handle was prepared.
+    pub rebalanced: usize,
 }
 
 /// A matrix-resident execution handle: one preprocessed A, arbitrarily many

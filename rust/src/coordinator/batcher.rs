@@ -25,8 +25,9 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::metrics::Recorder;
-use super::server::{ImageHandle, SpmmRequest, SpmmResponse, TraceCtx};
+use super::admission::AdmissionGate;
+use super::metrics::{DeadlineStage, Recorder, RequestTiming};
+use super::server::{ImageHandle, RejectKind, SpmmRequest, SpmmResponse, TraceCtx};
 use crate::telemetry::trace::{SpanRecord, TelemetrySink};
 
 /// Batching policy knobs.
@@ -82,6 +83,8 @@ pub(crate) struct Segment {
     pub(crate) admitted: Instant,
     pub(crate) respond: Sender<SpmmResponse>,
     pub(crate) trace: Option<TraceCtx>,
+    /// The request's absolute deadline, re-checked at dispatch pickup.
+    pub(crate) deadline: Option<Instant>,
 }
 
 /// A batch-merged job handed to the dispatch stage.
@@ -131,6 +134,7 @@ pub(crate) fn merge_group(group: Vec<PendingReq>, policy: &BatchPolicy) -> Optio
             admitted: p.admitted,
             respond: p.respond,
             trace: p.trace,
+            deadline: req.deadline,
         });
         col += req.n;
     }
@@ -146,14 +150,45 @@ pub(crate) fn merge_group(group: Vec<PendingReq>, policy: &BatchPolicy) -> Optio
     })
 }
 
+/// Send the typed response for a request whose deadline expired while it
+/// sat in the batcher, and release its admission slot. The timing carries
+/// the real queue/batch waits so the shed still shows up in stage
+/// histograms under the `"deadline"` backend label.
+fn shed_expired(p: PendingReq, gate: &AdmissionGate, recorder: &Arc<Mutex<Recorder>>) {
+    let now = Instant::now();
+    let mut rec = recorder.lock().unwrap();
+    rec.record_deadline(DeadlineStage::Batch);
+    drop(rec);
+    gate.release(p.req.image.id);
+    let _ = p.respond.send(SpmmResponse {
+        c: Vec::new(),
+        timing: RequestTiming {
+            queue: p.admitted.duration_since(p.submitted),
+            batch: now.duration_since(p.admitted),
+            prepare: Duration::ZERO,
+            exec: Duration::ZERO,
+            flops: 0,
+            backend: "deadline",
+            image: p.req.image.id,
+        },
+        error: Some("deadline exceeded while waiting in the batch queue".to_string()),
+        rejected: Some(RejectKind::DeadlineExceeded),
+    });
+}
+
 /// The batching loop: group pending requests by (image id, α bits, β bits),
 /// flush a group when it reaches [`BatchPolicy::max_columns`] or the merge
-/// window expires, and hand merged jobs to the dispatch stage.
+/// window expires, and hand merged jobs to the dispatch stage. At every
+/// flush, requests whose absolute deadline already passed are peeled off
+/// first — they get a typed [`RejectKind::DeadlineExceeded`] response and
+/// their admission slot back instead of burning a worker on a result
+/// nobody is waiting for.
 pub(crate) fn batcher_loop(
     rx: Receiver<Msg>,
     job_tx: Sender<MergedJob>,
     policy: BatchPolicy,
     recorder: Arc<Mutex<Recorder>>,
+    gate: Arc<AdmissionGate>,
     sink: Option<Arc<dyn TelemetrySink>>,
 ) {
     type Key = (u64, u32, u32);
@@ -163,8 +198,15 @@ pub(crate) fn batcher_loop(
     let flush = |group: Vec<PendingReq>,
                  job_tx: &Sender<MergedJob>,
                  recorder: &Arc<Mutex<Recorder>>| {
-        let len = group.len();
-        if let Some(job) = merge_group(group, &policy) {
+        let now = Instant::now();
+        let (live, expired): (Vec<PendingReq>, Vec<PendingReq>) = group
+            .into_iter()
+            .partition(|p| p.req.deadline.map_or(true, |d| now < d));
+        for p in expired {
+            shed_expired(p, &gate, recorder);
+        }
+        let len = live.len();
+        if let Some(job) = merge_group(live, &policy) {
             recorder.lock().unwrap().record_batch(len);
             let _ = job_tx.send(job);
         }
@@ -248,6 +290,7 @@ mod tests {
                 n,
                 alpha: 1.0,
                 beta: 0.0,
+                deadline: None,
             },
             respond: tx,
             submitted: now,
@@ -284,6 +327,41 @@ mod tests {
             assert_eq!(&job.c_cat[row * 5..row * 5 + 2], &[10.0, 10.0]);
             assert_eq!(&job.c_cat[row * 5 + 2..row * 5 + 5], &[20.0, 20.0, 20.0]);
         }
+    }
+
+    #[test]
+    fn expired_requests_are_shed_at_flush_with_slot_released() {
+        use super::super::admission::{Admit, AdmissionGate, AdmissionPolicy};
+        use super::super::server::RejectKind;
+
+        let img = handle(3);
+        let gate = Arc::new(AdmissionGate::new(AdmissionPolicy::default()));
+        assert!(matches!(gate.try_admit(img.id), Admit::Admitted));
+        let recorder = Arc::new(Mutex::new(Recorder::default()));
+        let (msg_tx, msg_rx) = mpsc::channel();
+        let (job_tx, job_rx) = mpsc::channel();
+        let batcher = {
+            let recorder = Arc::clone(&recorder);
+            let gate = Arc::clone(&gate);
+            std::thread::spawn(move || {
+                batcher_loop(msg_rx, job_tx, BatchPolicy::default(), recorder, gate, None)
+            })
+        };
+        let mut p = pending(&img, 2, 1.0, 0.0);
+        p.req.deadline = Some(Instant::now() - Duration::from_millis(1));
+        let (resp_tx, resp_rx) = mpsc::channel();
+        msg_tx
+            .send(Msg::Request(p.req, resp_tx, p.submitted, None))
+            .unwrap();
+        let resp = resp_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.rejected, Some(RejectKind::DeadlineExceeded));
+        assert!(resp.error.as_deref().unwrap_or("").contains("deadline"));
+        assert!(resp.c.is_empty(), "a shed request must not pay an M x n allocation");
+        msg_tx.send(Msg::Shutdown).unwrap();
+        batcher.join().unwrap();
+        assert!(job_rx.try_recv().is_err(), "the expired request must not become a job");
+        assert_eq!(gate.in_flight(), 0, "the admission slot is released at shed");
+        assert_eq!(recorder.lock().unwrap().summary().deadline_batch, 1);
     }
 
     #[test]

@@ -43,10 +43,10 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use super::admission::AdmissionGate;
-use super::batcher::MergedJob;
-use super::metrics::{ConcurrencyGauge, Recorder, RequestTiming};
+use super::batcher::{MergedJob, Segment};
+use super::metrics::{ConcurrencyGauge, DeadlineStage, Recorder, RequestTiming};
 use super::residency::{Resolution, ResidencyManager, PREPARED_CACHE_ENTRIES};
-use super::server::SpmmResponse;
+use super::server::{RejectKind, SpmmResponse};
 use crate::arch::simulator::problem_flops;
 use crate::backend::{ExecutionReport, PreparedSpmm, RemoteStats, SpmmBackend};
 use crate::shard::ShardRunStats;
@@ -139,6 +139,50 @@ fn worker_loop(
         let Ok(mut job) = job else { break };
         let picked = Instant::now();
 
+        // Deadline re-check at pickup: peel off segments that already
+        // expired in the dispatch queue and answer them with a typed
+        // reject instead of paying an execute. Column offsets of the
+        // survivors still index the merged buffers, so a partially
+        // expired job executes unchanged and only live segments split
+        // results back out.
+        let (live, expired): (Vec<Segment>, Vec<Segment>) = job
+            .segments
+            .drain(..)
+            .partition(|s| s.deadline.map_or(true, |d| picked < d));
+        job.segments = live;
+        for seg in expired {
+            recorder.lock().unwrap().record_deadline(DeadlineStage::Dispatch);
+            gate.release(job.image.id);
+            let _ = seg.respond.send(SpmmResponse {
+                c: Vec::new(),
+                timing: RequestTiming {
+                    queue: seg.admitted.duration_since(seg.submitted),
+                    batch: picked.duration_since(seg.admitted),
+                    prepare: std::time::Duration::ZERO,
+                    exec: std::time::Duration::ZERO,
+                    flops: 0,
+                    backend: "deadline",
+                    image: job.image.id,
+                },
+                error: Some("deadline exceeded at dispatch pickup".to_string()),
+                rejected: Some(RejectKind::DeadlineExceeded),
+            });
+        }
+        if job.segments.is_empty() {
+            continue;
+        }
+        // When every surviving segment carries a deadline, propagate the
+        // loosest one to fleet RPCs below the execute (a replica chain
+        // must not outlive the last caller still waiting on it). A mixed
+        // batch propagates nothing: an undeadlined segment is entitled to
+        // the full execute.
+        let fleet_deadline: Option<Instant> =
+            if job.segments.iter().all(|s| s.deadline.is_some()) {
+                job.segments.iter().filter_map(|s| s.deadline).max()
+            } else {
+                None
+            };
+
         // Pre-allocate the first traced segment's `prepare` span id so a
         // residency miss can parent its `backend.prepare` span under it
         // before the `prepare` span itself is emitted below.
@@ -188,6 +232,8 @@ fn worker_loop(
                     let _in_exec = exec_gauge.enter();
                     let _span_ctx =
                         exec_span.map(|(trace_id, id)| push_span_context(trace_id, id));
+                    let _deadline_ctx =
+                        fleet_deadline.map(crate::net::remote::push_call_deadline);
                     run_job(&*shared, &mut job)
                 };
                 let exec_end = Instant::now();
@@ -243,6 +289,8 @@ fn worker_loop(
                             let _in_exec = exec_gauge.enter();
                             let _span_ctx = exec_span
                                 .map(|(trace_id, id)| push_span_context(trace_id, id));
+                            let _deadline_ctx =
+                                fleet_deadline.map(crate::net::remote::push_call_deadline);
                             run_job(handle, &mut job)
                         };
                         match r {

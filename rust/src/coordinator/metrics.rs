@@ -67,6 +67,19 @@ impl Drop for ConcurrencyGuard<'_> {
     }
 }
 
+/// Which pipeline stage observed an expired request deadline. Every
+/// deadline shed is counted at exactly one stage, so the three counters
+/// in [`Summary`] partition the total.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeadlineStage {
+    /// Expired at submit, before an admission slot was consumed.
+    Admission,
+    /// Expired while waiting in the batcher (slot released at flush).
+    Batch,
+    /// Expired at dispatch pickup, just before execute (slot released).
+    Dispatch,
+}
+
 /// One served request's timing, decomposed by pipeline stage.
 #[derive(Clone, Copy, Debug)]
 pub struct RequestTiming {
@@ -139,6 +152,9 @@ pub struct Recorder {
     batches: usize,
     batched_requests: usize,
     rejected: usize,
+    deadline_admission: usize,
+    deadline_batch: usize,
+    deadline_dispatch: usize,
     /// Per-image-quota sheds, keyed by image id (insertion order).
     image_sheds: Vec<(u64, usize)>,
     exec_concurrency_peak: usize,
@@ -213,6 +229,18 @@ impl Recorder {
     /// Record one request shed by the admission gate (never queued).
     pub fn record_reject(&mut self) {
         self.rejected += 1;
+    }
+
+    /// Record one request shed because its absolute deadline expired,
+    /// attributed to the pipeline stage that noticed it. Deadline sheds
+    /// are *not* folded into [`Summary::rejected`] — an expired request
+    /// is the caller's budget running out, not the server shedding load.
+    pub fn record_deadline(&mut self, stage: DeadlineStage) {
+        match stage {
+            DeadlineStage::Admission => self.deadline_admission += 1,
+            DeadlineStage::Batch => self.deadline_batch += 1,
+            DeadlineStage::Dispatch => self.deadline_dispatch += 1,
+        }
     }
 
     /// Record one request shed by the *per-image* quota (also counted in
@@ -311,6 +339,9 @@ impl Recorder {
                 self.batched_requests as f64 / self.batches as f64
             },
             rejected: self.rejected,
+            deadline_admission: self.deadline_admission,
+            deadline_batch: self.deadline_batch,
+            deadline_dispatch: self.deadline_dispatch,
             image_sheds: {
                 let mut sheds = self.image_sheds.clone();
                 sheds.sort_by_key(|&(id, _)| id);
@@ -375,6 +406,9 @@ impl Recorder {
             remote_live_workers: self.remote_fleet.map_or(0, |f| f.live_workers),
             remote_placements: self.remote_fleet.map_or(0, |f| f.placements),
             remote_replicas: self.remote_fleet.map_or(0, |f| f.replicas),
+            remote_breaker_trips: self.remote_fleet.map_or(0, |f| f.breaker_trips),
+            remote_transitions: self.remote_fleet.map_or(0, |f| f.transitions),
+            remote_rebalanced: self.remote_fleet.map_or(0, |f| f.rebalanced),
         }
     }
 }
@@ -390,6 +424,15 @@ pub struct Summary {
     pub mean_batch: f64,
     /// Requests shed by the admission gate (not counted in `requests`).
     pub rejected: usize,
+    /// Requests whose deadline expired at submit, before consuming an
+    /// admission slot (not counted in `requests` or `rejected`).
+    pub deadline_admission: usize,
+    /// Requests whose deadline expired waiting in the batcher; their
+    /// admission slot was released at flush.
+    pub deadline_batch: usize,
+    /// Requests whose deadline expired at dispatch pickup, just before
+    /// execute; their admission slot was released.
+    pub deadline_dispatch: usize,
     /// Of `rejected`, sheds caused by the per-image in-flight quota,
     /// attributed to the image that was over quota — (image id, count),
     /// sorted by id. Empty when the quota is off or never tripped.
@@ -488,6 +531,17 @@ pub struct Summary {
     pub remote_placements: usize,
     /// Configured replication factor of the serving fleet (gauge).
     pub remote_replicas: usize,
+    /// Circuit-breaker trips (closed → open edges) observed by the fleet
+    /// supervisor, as of the most recent distributed execution (gauge —
+    /// the fleet counter is cumulative since prepare).
+    pub remote_breaker_trips: usize,
+    /// Worker liveness transitions (Live/Suspect/Dead edges, any
+    /// direction) observed by the heartbeat supervisor, as of the most
+    /// recent distributed execution (gauge).
+    pub remote_transitions: usize,
+    /// Shard placements proactively moved by membership-driven
+    /// rebalancing, as of the most recent distributed execution (gauge).
+    pub remote_rebalanced: usize,
 }
 
 fn percentiles_value(p: &Percentiles) -> Value {
@@ -516,6 +570,14 @@ impl Summary {
             ("batches", json::num(self.batches as f64)),
             ("mean_batch", json::num(self.mean_batch)),
             ("rejected", json::num(self.rejected as f64)),
+            (
+                "deadline",
+                json::obj(vec![
+                    ("admission", json::num(self.deadline_admission as f64)),
+                    ("batch", json::num(self.deadline_batch as f64)),
+                    ("dispatch", json::num(self.deadline_dispatch as f64)),
+                ]),
+            ),
             (
                 "image_sheds",
                 Value::Arr(
@@ -610,6 +672,9 @@ impl Summary {
                     ("live_workers", json::num(self.remote_live_workers as f64)),
                     ("placements", json::num(self.remote_placements as f64)),
                     ("replicas", json::num(self.remote_replicas as f64)),
+                    ("breaker_trips", json::num(self.remote_breaker_trips as f64)),
+                    ("transitions", json::num(self.remote_transitions as f64)),
+                    ("rebalanced", json::num(self.remote_rebalanced as f64)),
                 ]),
             ),
         ])
@@ -738,6 +803,9 @@ mod tests {
         assert_eq!(s.stage_exec_s, 0.0);
         assert_eq!(s.stage_exec_pct, Percentiles::default());
         assert_eq!(s.rejected, 0);
+        assert_eq!(s.deadline_admission, 0);
+        assert_eq!(s.deadline_batch, 0);
+        assert_eq!(s.deadline_dispatch, 0);
         assert!(s.image_sheds.is_empty());
         assert_eq!(s.exec_concurrency_peak, 0);
         assert_eq!(s.routed_jobs, 0);
@@ -760,6 +828,9 @@ mod tests {
             replicas: 2,
             retries: 1,
             replaced: 0,
+            breaker_trips: 0,
+            transitions: 0,
+            rebalanced: 0,
         });
         r.record_remote(&RemoteStats {
             workers: 3,
@@ -768,6 +839,9 @@ mod tests {
             replicas: 2,
             retries: 2,
             replaced: 1,
+            breaker_trips: 1,
+            transitions: 2,
+            rebalanced: 3,
         });
         let s = r.summary();
         assert_eq!(s.remote_execs, 2);
@@ -777,11 +851,16 @@ mod tests {
         assert_eq!(s.remote_live_workers, 2, "fleet shape is last-wins");
         assert_eq!(s.remote_placements, 5);
         assert_eq!(s.remote_replicas, 2);
+        assert_eq!(s.remote_breaker_trips, 1, "supervision gauges are last-wins");
+        assert_eq!(s.remote_transitions, 2);
+        assert_eq!(s.remote_rebalanced, 3);
         let v = s.to_value();
         let parsed = crate::telemetry::json::parse(&v.to_json_pretty()).unwrap();
         let remote = parsed.get("remote").unwrap();
         assert_eq!(remote.get("retries").and_then(Value::as_u64), Some(3));
         assert_eq!(remote.get("live_workers").and_then(Value::as_u64), Some(2));
+        assert_eq!(remote.get("breaker_trips").and_then(Value::as_u64), Some(1));
+        assert_eq!(remote.get("rebalanced").and_then(Value::as_u64), Some(3));
     }
 
     #[test]
@@ -851,6 +930,25 @@ mod tests {
         assert_eq!(s.shards_skipped, 5);
         assert_eq!(s.reshards, 1);
         assert_eq!(s.last_reshard, Some((8, 4)));
+    }
+
+    #[test]
+    fn deadline_sheds_count_per_stage_and_export() {
+        let mut r = Recorder::default();
+        r.record_deadline(DeadlineStage::Admission);
+        r.record_deadline(DeadlineStage::Admission);
+        r.record_deadline(DeadlineStage::Batch);
+        r.record_deadline(DeadlineStage::Dispatch);
+        let s = r.summary();
+        assert_eq!(s.deadline_admission, 2);
+        assert_eq!(s.deadline_batch, 1);
+        assert_eq!(s.deadline_dispatch, 1);
+        assert_eq!(s.rejected, 0, "deadline sheds are not admission rejects");
+        let parsed = crate::telemetry::json::parse(&s.to_value().to_json_pretty()).unwrap();
+        let d = parsed.get("deadline").unwrap();
+        assert_eq!(d.get("admission").and_then(Value::as_u64), Some(2));
+        assert_eq!(d.get("batch").and_then(Value::as_u64), Some(1));
+        assert_eq!(d.get("dispatch").and_then(Value::as_u64), Some(1));
     }
 
     #[test]

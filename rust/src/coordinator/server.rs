@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 use super::admission::{Admit, AdmissionGate, AdmissionPolicy};
 use super::batcher::{batcher_loop, Msg};
 use super::dispatch;
-use super::metrics::{ConcurrencyGauge, Recorder, RequestTiming, Summary};
+use super::metrics::{ConcurrencyGauge, DeadlineStage, Recorder, RequestTiming, Summary};
 use super::residency::{ReshardContext, ReshardPolicy, ResidencyManager, ResidencyPolicy};
 use crate::backend::{self, BackendError, SpmmBackend};
 use crate::sched::ScheduledMatrix;
@@ -56,6 +56,12 @@ pub struct SpmmRequest {
     pub alpha: f32,
     /// Scalar β.
     pub beta: f32,
+    /// Absolute deadline stamped at the front door (`None` = no
+    /// deadline). Checked at admission, batcher dequeue, and dispatch
+    /// pickup; an expired request gets a typed
+    /// [`RejectKind::DeadlineExceeded`] response instead of an execute,
+    /// and its admission slot is released immediately.
+    pub deadline: Option<Instant>,
 }
 
 /// Why a submit was refused before entering the pipeline. Carried on
@@ -70,6 +76,9 @@ pub enum RejectKind {
     QueueFull,
     /// The target image is at its per-image fairness quota.
     ImageQuota,
+    /// The request's absolute deadline passed before an execute could
+    /// run — shed at admission, batch dequeue, or dispatch pickup.
+    DeadlineExceeded,
 }
 
 /// Completed response.
@@ -241,7 +250,8 @@ impl Server {
             let recorder = Arc::clone(&recorder);
             let policy = config.batch;
             let sink = sink.clone();
-            std::thread::spawn(move || batcher_loop(rx, job_tx, policy, recorder, sink))
+            let gate = Arc::clone(&gate);
+            std::thread::spawn(move || batcher_loop(rx, job_tx, policy, recorder, gate, sink))
         };
         let workers = dispatch::spawn_workers(
             n_workers,
@@ -310,6 +320,19 @@ impl Server {
                 rejected: Some(RejectKind::ShapeMismatch),
             });
             return rx;
+        }
+        if let Some(deadline) = req.deadline {
+            if Instant::now() >= deadline {
+                self.recorder.lock().unwrap().record_deadline(DeadlineStage::Admission);
+                self.emit_admission(trace, submitted, req.image.id, "deadline_exceeded");
+                let _ = tx.send(SpmmResponse {
+                    c: Vec::new(),
+                    timing: Self::rejected_timing(),
+                    error: Some("deadline exceeded before admission".to_string()),
+                    rejected: Some(RejectKind::DeadlineExceeded),
+                });
+                return rx;
+            }
         }
         match self.gate.try_admit(req.image.id) {
             Admit::Admitted => {}
@@ -511,6 +534,7 @@ mod tests {
             n,
             alpha: 1.5,
             beta: 0.5,
+            deadline: None,
         });
         assert!(resp.error.is_none());
         prop::assert_allclose(&resp.c, &want, 1e-4, 1e-4).unwrap();
@@ -540,6 +564,7 @@ mod tests {
                 n,
                 alpha: 1.0,
                 beta: 0.5,
+                deadline: None,
             });
             assert!(resp.error.is_none());
             prop::assert_allclose(&resp.c, &want, 1e-4, 1e-4).unwrap();
@@ -568,6 +593,7 @@ mod tests {
                 n,
                 alpha: 1.0,
                 beta: 0.0,
+                deadline: None,
             });
             assert!(resp.error.is_none());
         }
@@ -593,6 +619,7 @@ mod tests {
                     n,
                     alpha: 1.0,
                     beta: 0.0,
+                    deadline: None,
                 })
             })
             .collect();
@@ -623,6 +650,7 @@ mod tests {
             n: 2,
             alpha: 1.0,
             beta: 0.0,
+            deadline: None,
         });
         let err = resp.error.expect("shed requests must carry an error");
         assert!(err.contains("admission rejected"), "{err}");
@@ -654,6 +682,7 @@ mod tests {
             n,
             alpha: 1.0,
             beta: 0.0,
+            deadline: None,
         };
         let rxs: Vec<_> = (0..8).map(|_| server.submit(mk())).collect();
         let mut served = 0usize;
@@ -698,6 +727,7 @@ mod tests {
                     n,
                     alpha: 1.0,
                     beta: 0.0,
+                    deadline: None,
                 })
             })
             .collect();
@@ -731,6 +761,7 @@ mod tests {
             n: 2,
             alpha: 1.0,
             beta: 0.0,
+            deadline: None,
         });
         let err = resp.error.expect("bad shapes must be refused");
         assert!(err.contains("shape mismatch"), "{err}");
@@ -747,6 +778,7 @@ mod tests {
             n,
             alpha: 1.0,
             beta: 0.0,
+            deadline: None,
         });
         assert!(resp.error.is_none());
         prop::assert_allclose(&resp.c, &want, 1e-4, 1e-4).unwrap();
@@ -766,6 +798,7 @@ mod tests {
             n: 2,
             alpha: 1.0,
             beta: 0.0,
+            deadline: None,
         });
         let err = resp.error.expect("failure must be surfaced");
         assert!(err.contains("injected failure"), "{err}");
@@ -807,6 +840,7 @@ mod tests {
             n: 2,
             alpha: 1.0,
             beta: 0.0,
+            deadline: None,
         });
         let err = resp.error.expect("prepare failure must be surfaced");
         assert!(err.contains("no artifacts here"), "{err}");
@@ -844,6 +878,7 @@ mod tests {
                 n,
                 alpha: 2.0,
                 beta: -1.0,
+                deadline: None,
             }));
         }
         for (rx, want) in rxs.into_iter().zip(wants) {
@@ -879,6 +914,7 @@ mod tests {
             n: 2,
             alpha,
             beta: 0.0,
+            deadline: None,
         };
         let r1 = server.submit(mk(1.0));
         let r2 = server.submit(mk(2.0));
@@ -904,7 +940,15 @@ mod tests {
         let c: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
         let mut want = c.clone();
         coo.spmm_reference(&b, &mut want, n, 1.5, 0.5);
-        let resp = server.call(SpmmRequest { image: handle, b, c, n, alpha: 1.5, beta: 0.5 });
+        let resp = server.call(SpmmRequest {
+            image: handle,
+            b,
+            c,
+            n,
+            alpha: 1.5,
+            beta: 0.5,
+            deadline: None,
+        });
         assert!(resp.error.is_none(), "{:?}", resp.error);
         prop::assert_allclose(&resp.c, &want, 2e-4, 2e-4).unwrap();
         assert_eq!(resp.timing.backend, "sharded");
@@ -957,6 +1001,7 @@ mod tests {
             n: 2,
             alpha: 1.0,
             beta: 0.0,
+            deadline: None,
         });
         let err = resp.error.expect("shard failure must surface");
         assert!(err.contains("shard 1 of 2"), "{err}");
@@ -985,6 +1030,7 @@ mod tests {
                     n,
                     alpha: 1.0,
                     beta: 0.0,
+                    deadline: None,
                 })
             })
             .collect();

@@ -19,7 +19,9 @@
 //!               [--backend NAME] [--out FILE]
 //! sextans worker [--addr HOST:PORT] [--backend NAME]
 //!                [--read-timeout-ms T] [--write-timeout-ms T]
-//!                [--max-resident-mb MB]
+//!                [--max-resident-mb MB] [--fault SPEC]
+//! sextans chaos [--workers N] [--duration S] [--senders T] [--seed S]
+//!               [--name NAME] [--out DIR] [--timestamp TS]
 //! sextans backends [--probe HOST:PORT]
 //! sextans info
 //! ```
@@ -48,12 +50,13 @@ use sextans::coordinator::{
     SpmmRequest,
 };
 use sextans::hflex::{HFlexAccelerator, SpmmProblem};
-use sextans::net::{self, WorkerConfig};
+use sextans::net::{self, FaultSpec, WorkerConfig};
 use sextans::perfmodel::Platform;
 use sextans::report::{self, experiments};
 use sextans::sched::preprocess;
 use sextans::serve_net::{
-    ClientError, FrontClient, FrontDoor, FrontDoorConfig, LoadgenOptions, Mix, ShedReason,
+    proto, ClientError, FrontClient, FrontDoor, FrontDoorConfig, LoadgenOptions, Mix,
+    ShedReason,
 };
 use sextans::shard::{ShardExecutor, ShardedMatrix};
 use sextans::sparse::catalog::{self, Scale};
@@ -72,12 +75,14 @@ fn main() {
         "bench" => cmd_bench(&cli),
         "trace" => cmd_trace(&cli),
         "worker" => cmd_worker(&cli),
+        "chaos" => cmd_chaos(&cli),
         "backends" => cmd_backends(&cli),
         "info" | "" => cmd_info(),
         other => {
             eprintln!("unknown command {other:?}");
             eprintln!(
-                "commands: repro, run, gen, serve, loadgen, bench, trace, worker, backends, info"
+                "commands: repro, run, gen, serve, loadgen, bench, trace, worker, chaos, \
+                 backends, info"
             );
             std::process::exit(2);
         }
@@ -448,6 +453,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             n,
             alpha: 1.0,
             beta: 0.0,
+            deadline: None,
         }));
     }
     for rx in rxs {
@@ -534,6 +540,20 @@ fn print_serve_summary(
             s.remote_replicas,
             s.remote_retries,
             s.remote_replaced
+        );
+    }
+    if s.remote_transitions + s.remote_breaker_trips + s.remote_rebalanced > 0 {
+        println!(
+            "  supervision: {} liveness transitions, {} breaker trips, {} placements \
+             rebalanced onto the live set",
+            s.remote_transitions, s.remote_breaker_trips, s.remote_rebalanced
+        );
+    }
+    if s.deadline_admission + s.deadline_batch + s.deadline_dispatch > 0 {
+        println!(
+            "  deadlines: {} expired at admission, {} in the batch queue, {} at dispatch \
+             pickup (typed DeadlineExceeded, not counted as load sheds)",
+            s.deadline_admission, s.deadline_batch, s.deadline_dispatch
         );
     }
     if let Some(path) = cli.get("metrics-json") {
@@ -914,6 +934,7 @@ fn cmd_trace(cli: &Cli) -> Result<()> {
             n,
             alpha: 1.0,
             beta: 0.0,
+            deadline: None,
         }));
     }
     for rx in rxs {
@@ -942,6 +963,9 @@ fn cmd_trace(cli: &Cli) -> Result<()> {
 /// peer can pin a connection thread (default 10000);
 /// `--max-resident-mb` caps prepared-image residency (prepares over the
 /// budget are refused with a typed error; 0 = unbounded).
+/// `--fault SPEC` installs a seeded fault plan (e.g.
+/// `seed=7,trickle=256:2,corrupt=0.05,refuse=0.1`) so chaos runs can
+/// inject reproducible failures; see [`sextans::net::FaultSpec`].
 fn cmd_worker(cli: &Cli) -> Result<()> {
     use std::io::Write as _;
     let addr = cli.get("addr").unwrap_or("127.0.0.1:0");
@@ -959,6 +983,11 @@ fn cmd_worker(cli: &Cli) -> Result<()> {
                 scratch_idle: None,
             }),
         },
+        fault: cli
+            .get("fault")
+            .map(FaultSpec::parse)
+            .transpose()
+            .map_err(|e| anyhow!("--fault: {e}"))?,
     };
     let worker = net::Worker::bind(addr, &config)?;
     // The "listening on" line is the readiness handshake: tests and the
@@ -971,6 +1000,447 @@ fn cmd_worker(cli: &Cli) -> Result<()> {
     std::io::stdout().flush()?;
     worker.run(&config)?;
     println!("worker shut down");
+    Ok(())
+}
+
+/// Bounded scrape of a child process's readiness line: read stdout until
+/// a line starting with `prefix` appears, return the first whitespace
+/// token after it, and leave a drain thread on the rest of the stream.
+/// On timeout or child exit the child is killed and an error returned —
+/// a wedged spawn can never hang the chaos harness.
+fn scrape_readiness(
+    child: &mut std::process::Child,
+    prefix: &str,
+    timeout: std::time::Duration,
+) -> Result<String> {
+    use std::io::{BufRead as _, BufReader};
+    let stdout = child
+        .stdout
+        .take()
+        .ok_or_else(|| anyhow!("child stdout is not piped"))?;
+    let (tx, rx) = std::sync::mpsc::channel::<String>();
+    std::thread::spawn(move || {
+        for line in BufReader::new(stdout).lines() {
+            let Ok(line) = line else { break };
+            if tx.send(line).is_err() {
+                break;
+            }
+        }
+    });
+    let deadline = std::time::Instant::now() + timeout;
+    loop {
+        let left = deadline.saturating_duration_since(std::time::Instant::now());
+        match rx.recv_timeout(left) {
+            Ok(line) => {
+                if let Some(rest) = line.strip_prefix(prefix) {
+                    let token = rest
+                        .split_whitespace()
+                        .next()
+                        .unwrap_or_default()
+                        .to_string();
+                    // Keep draining stdout so the child can never block
+                    // on a full pipe.
+                    std::thread::spawn(move || for _line in rx {});
+                    return Ok(token);
+                }
+            }
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                bail!("child never printed a {prefix:?} readiness line ({e})");
+            }
+        }
+    }
+}
+
+/// Spawn one `sextans worker` child (this same binary) for the chaos
+/// harness and scrape its bound address from the readiness line.
+fn spawn_chaos_worker(addr: &str, fault: Option<&str>) -> Result<(std::process::Child, String)> {
+    let exe = std::env::current_exe()?;
+    let mut cmd = std::process::Command::new(exe);
+    cmd.args(["worker", "--addr", addr, "--backend", "functional"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null());
+    if let Some(fault) = fault {
+        cmd.args(["--fault", fault]);
+    }
+    let mut child = cmd.spawn()?;
+    let bound = scrape_readiness(
+        &mut child,
+        "worker listening on ",
+        std::time::Duration::from_secs(10),
+    )?;
+    Ok((child, bound))
+}
+
+/// Raw-frame deadline probe: submit with a 1 ms budget, let it expire
+/// while the panels are still uploading (upload time counts against the
+/// deadline), and require the typed `Shed(DeadlineExceeded)` answer at
+/// SubmitEnd — the request must die at admission, never reach a fleet
+/// execute, and never come back as an untyped error string.
+fn chaos_deadline_probe(
+    addr: &str,
+    image_id: u64,
+    n: usize,
+    b: &[f32],
+    c0: &[f32],
+) -> Result<()> {
+    use sextans::net::{wire, Op};
+    let mut s = std::net::TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+    s.set_write_timeout(Some(std::time::Duration::from_secs(10)))?;
+    wire::write_frame(&mut s, Op::Submit, &proto::encode_submit(image_id, n, 1.0, 0.5, 1))?;
+    let (op, payload) = wire::read_frame(&mut s)?;
+    if op != Op::Ok {
+        bail!("deadline probe: Submit answered {op:?}, expected a ticket");
+    }
+    let ticket = proto::decode_u64(&payload)?;
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    wire::write_frame(
+        &mut s,
+        Op::SubmitChunk,
+        &proto::encode_submit_chunk(ticket, 0, n as u64, b, c0),
+    )?;
+    let (op, _) = wire::read_frame(&mut s)?;
+    if op != Op::Ok {
+        bail!("deadline probe: SubmitChunk answered {op:?}");
+    }
+    wire::write_frame(&mut s, Op::SubmitEnd, &proto::encode_u64(ticket))?;
+    let (op, payload) = wire::read_frame(&mut s)?;
+    if op != Op::Shed {
+        bail!("deadline probe: expired submit answered {op:?}, expected a typed Shed frame");
+    }
+    let (reason, msg) = proto::decode_shed(&payload)?;
+    if reason != ShedReason::DeadlineExceeded {
+        bail!("deadline probe: shed reason {reason:?} ({msg}), expected DeadlineExceeded");
+    }
+    println!("deadline probe: typed DeadlineExceeded at admission ({msg})");
+    Ok(())
+}
+
+/// Cumulative request outcomes across the chaos run's sender threads.
+#[derive(Default)]
+struct ChaosCounters {
+    offered: std::sync::atomic::AtomicUsize,
+    done: std::sync::atomic::AtomicUsize,
+    shed: std::sync::atomic::AtomicUsize,
+    errors: std::sync::atomic::AtomicUsize,
+    wrong: std::sync::atomic::AtomicUsize,
+}
+
+/// `chaos`: a seeded fault-injection soak against a self-spawned fleet.
+/// Spawns `--workers` `sextans worker` processes (the last one under a
+/// seeded `--fault` plan: trickled and corrupted replies, refused
+/// accepts, delayed reads), binds an in-process front door over
+/// `remote:<fleet>` with a fast heartbeat, and drives verifying load for
+/// `--duration` seconds while a scripted schedule hard-kills the clean
+/// worker at 25% and revives it on the same port at 50%. Every completed
+/// answer is compared bitwise against the local `functional` reference.
+/// Afterwards a 1 ms-deadline probe must come back as a typed
+/// `DeadlineExceeded` shed, and the run fails unless: zero wrong
+/// answers, every request accounted (offered = done + shed + errors),
+/// liveness transitions ≥ 1, breaker trips ≥ 1, and a post-recovery
+/// call succeeds. Writes a schema-v1 `BENCH_chaos_<name>.json`
+/// degradation report.
+fn cmd_chaos(cli: &Cli) -> Result<()> {
+    use std::sync::atomic::Ordering;
+    use std::time::{Duration, Instant};
+
+    let workers = cli.get_usize("workers", 2).max(2);
+    let duration =
+        Duration::from_secs_f64(f64::from(cli.get_f32("duration", 6.0)).max(1.0));
+    let senders = cli.get_usize("senders", 4).max(1);
+    let seed = cli.get_u64("seed", 0xC4A05);
+    let name = cli.get("name").unwrap_or("smoke").to_string();
+    let out_dir = PathBuf::from(cli.get("out").unwrap_or("."));
+    let timestamp = cli.get("timestamp").unwrap_or("unknown").to_string();
+
+    // A schedule-invariant matrix (exactly one non-zero per row per K0
+    // window) accumulates each row in the same floating-point order no
+    // matter how shards, retries, or re-placements shuffle execution —
+    // so every fleet answer is bitwise-comparable to the local
+    // functional reference, and "no wrong answers" is exact, not
+    // approximate.
+    let (m, k, k0, n) = (48usize, 32usize, 8usize, 5usize);
+    let mut rng = Rng::new(seed);
+    let windows = k.div_ceil(k0);
+    let (mut rows, mut cols, mut vals) = (Vec::new(), Vec::new(), Vec::new());
+    for r in 0..m {
+        for w in 0..windows {
+            let lo = w * k0;
+            let hi = k.min(lo + k0);
+            rows.push(r as u32);
+            cols.push((lo + rng.index(hi - lo)) as u32);
+            vals.push(rng.normal());
+        }
+    }
+    let coo = Coo::new(m, k, rows, cols, vals)?;
+    let image = Arc::new(preprocess(&coo, 4, k0, 4));
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+    let c0: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+    let (alpha, beta) = (1.0f32, 0.5f32);
+    let functional = backend::create("functional")?.prepare(Arc::clone(&image))?;
+    let mut want = c0.clone();
+    functional.execute(&b, &mut want, n, alpha, beta)?;
+
+    // Fleet: the last worker runs under a seeded fault plan; the first
+    // is clean and will be hard-killed and revived by the schedule.
+    let fault_spec = format!("seed={seed},trickle=256:2,corrupt=0.05,refuse=0.1,delay-read=5:0.2");
+    let mut children = Vec::new();
+    let mut addrs = Vec::new();
+    for w in 0..workers {
+        let fault = (w == workers - 1).then_some(fault_spec.as_str());
+        let (child, bound) = spawn_chaos_worker("127.0.0.1:0", fault)?;
+        println!(
+            "chaos: worker {w} on {bound}{}",
+            if fault.is_some() { " (faulty)" } else { "" }
+        );
+        children.push(child);
+        addrs.push(bound);
+    }
+    let victim_addr = addrs[0].clone();
+
+    // Fast heartbeat so Live -> Suspect -> Dead transitions and the
+    // breaker trip land well inside the kill window.
+    let fleet_spec =
+        format!("remote:{},timeout_ms=2000,heartbeat_ms=100", addrs.join(","));
+    let fd_config = FrontDoorConfig {
+        backend_spec: fleet_spec.clone(),
+        workers: 2,
+        ..FrontDoorConfig::default()
+    };
+    let door = FrontDoor::bind("127.0.0.1:0", &fd_config)?;
+    let door_addr = door.local_addr()?.to_string();
+    let door_thread = std::thread::spawn(move || door.run(&fd_config));
+    println!("chaos: front door on {door_addr} over {fleet_spec}");
+
+    let timeout = Duration::from_secs(10);
+    let mut control = FrontClient::connect(&door_addr, timeout)
+        .map_err(|e| anyhow!("connect front door: {e}"))?;
+    let info = control
+        .register_image(&image, 1 << 16)
+        .map_err(|e| anyhow!("register image: {e}"))?;
+
+    let counters = ChaosCounters::default();
+    let e2e_ns = std::sync::Mutex::new(Vec::<u64>::new());
+    let t_end = Instant::now() + duration;
+    let mut revived = false;
+
+    std::thread::scope(|scope| -> Result<()> {
+        for _ in 0..senders {
+            let (door_addr, info) = (door_addr.clone(), info.clone());
+            let (counters, e2e_ns) = (&counters, &e2e_ns);
+            let (b, c0, want) = (&b, &c0, &want);
+            scope.spawn(move || {
+                let mut client: Option<FrontClient> = None;
+                while Instant::now() < t_end {
+                    if client.is_none() {
+                        client = FrontClient::connect(&door_addr, timeout).ok();
+                    }
+                    let Some(conn) = client.as_mut() else {
+                        counters.offered.fetch_add(1, Ordering::Relaxed);
+                        counters.errors.fetch_add(1, Ordering::Relaxed);
+                        std::thread::sleep(Duration::from_millis(50));
+                        continue;
+                    };
+                    counters.offered.fetch_add(1, Ordering::Relaxed);
+                    let t0 = Instant::now();
+                    match conn.call(&info, n, alpha, beta, b, c0, 0) {
+                        Ok(resp) if resp.timing.error.is_none() => {
+                            if resp.c == *want {
+                                counters.done.fetch_add(1, Ordering::Relaxed);
+                                e2e_ns
+                                    .lock()
+                                    .unwrap()
+                                    .push(t0.elapsed().as_nanos() as u64);
+                            } else {
+                                counters.wrong.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Ok(_) => {
+                            // Pipeline-level failure (e.g. the whole
+                            // fleet briefly unreachable) — typed error
+                            // text, never a silent wrong answer.
+                            counters.errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(ClientError::Shed { .. }) => {
+                            counters.shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            counters.errors.fetch_add(1, Ordering::Relaxed);
+                            if matches!(e.terminal(), ClientError::Wire(_)) {
+                                // Transport state unknowable: reconnect.
+                                client = None;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+
+        // The scripted fault schedule, on this thread: hard-kill the
+        // clean worker a quarter in, revive it on the same port at the
+        // halfway mark.
+        std::thread::sleep(duration.mul_f64(0.25));
+        println!("chaos: killing worker 0 ({victim_addr})");
+        let _ = children[0].kill();
+        let _ = children[0].wait();
+        std::thread::sleep(duration.mul_f64(0.25));
+        // The freed port can linger in TIME_WAIT briefly; retry the
+        // rebind until the revival succeeds.
+        for attempt in 0..40 {
+            match spawn_chaos_worker(&victim_addr, None) {
+                Ok((child, bound)) => {
+                    println!("chaos: revived worker 0 on {bound} (attempt {attempt})");
+                    children[0] = child;
+                    revived = true;
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(250)),
+            }
+        }
+        Ok(())
+    })?;
+    if !revived {
+        bail!("chaos: could not revive worker 0 on {victim_addr}");
+    }
+
+    // Let the heartbeat rediscover the revived worker (Dead -> Live) and
+    // the breaker close, then require a verified post-recovery answer.
+    std::thread::sleep(Duration::from_secs(1));
+    let mut recovered = false;
+    for _ in 0..5 {
+        let Ok(mut conn) = FrontClient::connect(&door_addr, timeout) else {
+            std::thread::sleep(Duration::from_millis(200));
+            continue;
+        };
+        match conn.call(&info, n, alpha, beta, &b, &c0, 0) {
+            Ok(resp) if resp.timing.error.is_none() && resp.c == want => {
+                recovered = true;
+                break;
+            }
+            _ => std::thread::sleep(Duration::from_millis(200)),
+        }
+    }
+    if !recovered {
+        bail!("chaos: no bitwise-correct answer after reviving worker 0");
+    }
+    println!("chaos: post-recovery call verified bitwise");
+
+    chaos_deadline_probe(&door_addr, info.id, n, &b, &c0)?;
+
+    control.shutdown_server().map_err(|e| anyhow!("shutdown: {e}"))?;
+    let summary = door_thread
+        .join()
+        .map_err(|_| anyhow!("front door thread panicked"))??;
+    for mut child in children {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+
+    let (offered, done, shed, errors, wrong) = (
+        counters.offered.load(Ordering::Relaxed),
+        counters.done.load(Ordering::Relaxed),
+        counters.shed.load(Ordering::Relaxed),
+        counters.errors.load(Ordering::Relaxed),
+        counters.wrong.load(Ordering::Relaxed),
+    );
+    println!(
+        "chaos: offered {offered} | verified {done} | shed {shed} | errors {errors} | \
+         wrong {wrong}"
+    );
+    print_serve_summary(cli, &summary, &None)?;
+
+    // Degradation report: schema-v1 bench record, e2e latency as the
+    // measurement row, outcome and supervision counters riding in the
+    // scaling rows' gflops column (the same idiom `serve/sheds` uses).
+    let mut samples = e2e_ns.lock().unwrap().clone();
+    samples.sort_unstable();
+    let pct = |q: f64| -> f64 {
+        if samples.is_empty() {
+            0.0
+        } else {
+            samples[((q * (samples.len() - 1) as f64).round() as usize).min(samples.len() - 1)]
+                as f64
+        }
+    };
+    let flops = problem_flops(coo.nnz(), coo.m, n) as f64;
+    let record = BenchRecord {
+        name: format!("chaos_{name}"),
+        git_rev: sextans::telemetry::bench_record::git_rev(),
+        timestamp,
+        host_threads: std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+        matrices: vec![catalog::MatrixSpec {
+            name: "chaos_invariant".into(),
+            family: catalog::Family::SsUniform,
+            m,
+            k,
+            nnz: coo.nnz(),
+            seed,
+        }],
+        results: vec![BenchMeasurement {
+            bench: "chaos/e2e".into(),
+            matrix: "chaos_invariant".into(),
+            n,
+            gflops: flops / pct(0.5).max(1.0),
+            median_ns: pct(0.5),
+            p50_ns: pct(0.5),
+            p95_ns: pct(0.95),
+            p99_ns: pct(0.99),
+        }],
+        scaling: [
+            ("chaos/offered", offered),
+            ("chaos/verified", done),
+            ("chaos/shed", shed),
+            ("chaos/errors", errors),
+            ("chaos/wrong", wrong),
+            ("chaos/retries", summary.remote_retries),
+            ("chaos/replaced", summary.remote_replaced),
+            ("chaos/rebalanced", summary.remote_rebalanced),
+            ("chaos/breaker_trips", summary.remote_breaker_trips),
+            ("chaos/transitions", summary.remote_transitions),
+            ("chaos/deadline_sheds", summary.deadline_admission),
+        ]
+        .into_iter()
+        .map(|(bench, count)| ScalingPoint {
+            bench: bench.into(),
+            workers,
+            gflops: count as f64,
+            efficiency: 0.0,
+        })
+        .collect(),
+    };
+    let path = out_dir.join(format!("BENCH_chaos_{name}.json"));
+    record.write(&path)?;
+    println!("wrote {}", path.display());
+
+    // The invariants: wrong answers are forbidden outright, every offered
+    // request must be accounted for, the supervisor must have observed
+    // the kill (transitions + breaker), and the probe's deadline shed
+    // must be visible in the server's own counters.
+    if wrong > 0 {
+        bail!("chaos: {wrong} wrong answer(s) — transport or failover corrupted a result");
+    }
+    if offered != done + shed + errors + wrong {
+        bail!("chaos: lost tickets — offered {offered} != {done} + {shed} + {errors} + {wrong}");
+    }
+    if done == 0 {
+        bail!("chaos: no request completed — the fleet never served");
+    }
+    if summary.remote_transitions == 0 {
+        bail!("chaos: the supervisor never observed a liveness transition");
+    }
+    if summary.remote_breaker_trips == 0 {
+        bail!("chaos: the killed worker never tripped its circuit breaker");
+    }
+    if summary.deadline_admission == 0 {
+        bail!("chaos: the deadline probe's shed is missing from the admission counters");
+    }
+    println!(
+        "chaos: invariants hold — 0 wrong answers, {} transitions, {} breaker trips, \
+         {} admission deadline shed(s)",
+        summary.remote_transitions, summary.remote_breaker_trips, summary.deadline_admission
+    );
     Ok(())
 }
 

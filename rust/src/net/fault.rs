@@ -1,0 +1,537 @@
+//! Deterministic fault injection for the distributed tier.
+//!
+//! A [`FaultSpec`] is a tiny comma-separated grammar describing which
+//! failure modes to inject and how often; a [`FaultPlan`] turns the spec
+//! into concrete per-event decisions driven by counter-indexed
+//! splitmix64 — the same seed always yields the same schedule of
+//! delays, drops, and corruptions, so every chaos run is reproducible
+//! bit for bit. Two installation points:
+//!
+//! * **Server side** (`sextans worker --fault <spec>`): the worker wraps
+//!   every accepted connection in a [`FaultStream`], refuses a fraction
+//!   of accepts, and fails every nth RPC with a typed error reply.
+//! * **Client side**: [`install_client_plan`] installs a plan for the
+//!   current thread; the [`super::wire`] framing functions consult it on
+//!   every frame written or read. Thread-local on purpose — a fault plan
+//!   in one test can never leak into concurrently running tests.
+//!
+//! Corruption only ever touches the first eight header bytes (magic,
+//! version, opcode) of a frame, never the length field or the payload:
+//! every corrupt frame is *detectably* corrupt (a typed
+//! [`super::wire::WireError`]), so chaos runs can assert "no wrong
+//! answers ever" — payload integrity is TCP's job, and a flipped payload
+//! byte would silently produce wrong floats instead of a typed error.
+//!
+//! Spec grammar (`,`-separated, every directive optional but at least
+//! one required):
+//!
+//! ```text
+//! seed=<u64>              decision-stream seed (default 0xFA017)
+//! delay-read=<ms>[:<p>]   sleep <ms> before a read, with probability p (default 1)
+//! drop=<p>                abort the connection before a read, with probability p
+//! corrupt=<p>             flip one header byte of a written frame, with probability p
+//! trickle=<bytes>:<ms>    write in <bytes>-sized pieces, sleeping <ms> between them
+//! refuse=<p>              close an accepted connection immediately, with probability p
+//! fail-nth=<n>            server only: every nth RPC replies with an injected error
+//! ```
+//!
+//! Example: `seed=7,corrupt=0.1,trickle=64:1` corrupts ~10% of frames
+//! and slow-trickles every write in 64-byte pieces with 1 ms pauses.
+
+use std::cell::RefCell;
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::wire::HEADER_BYTES;
+
+/// Default decision-stream seed when the spec does not carry `seed=`.
+pub const DEFAULT_FAULT_SEED: u64 = 0xFA017;
+
+/// Parsed fault-injection directives. See the module docs for the spec
+/// grammar. All directives are optional; [`FaultSpec::parse`] rejects an
+/// empty spec so a typo'd `--fault` flag cannot silently inject nothing.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    /// Seed for every probabilistic decision stream.
+    pub seed: u64,
+    /// Sleep this long before a read, with the given probability.
+    pub delay_read: Option<(Duration, f64)>,
+    /// Probability of aborting the connection before a read.
+    pub drop_conn: Option<f64>,
+    /// Probability of flipping one header byte of a written frame.
+    pub corrupt: Option<f64>,
+    /// Write in pieces of this many bytes, sleeping between pieces.
+    pub trickle: Option<(usize, Duration)>,
+    /// Probability of refusing (immediately closing) an accepted
+    /// connection. Server side only.
+    pub refuse_accept: Option<f64>,
+    /// Fail every nth RPC served with an injected error reply. Server
+    /// side only.
+    pub fail_nth_rpc: Option<u64>,
+}
+
+impl FaultSpec {
+    /// Parse the `--fault` spec grammar. Errors name the offending
+    /// directive; an empty spec is an error.
+    pub fn parse(spec: &str) -> Result<FaultSpec, String> {
+        let mut out = FaultSpec { seed: DEFAULT_FAULT_SEED, ..FaultSpec::default() };
+        let mut directives = 0usize;
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(format!("empty directive in fault spec {spec:?}"));
+            }
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault directive {part:?} is not key=value"))?;
+            match key {
+                "seed" => {
+                    out.seed = value
+                        .parse::<u64>()
+                        .map_err(|_| format!("seed= needs a u64, got {value:?}"))?;
+                    // A bare seed is not a fault; require a real directive.
+                    continue;
+                }
+                "delay-read" => {
+                    let (ms, prob) = match value.split_once(':') {
+                        Some((ms, p)) => (ms, parse_prob("delay-read", p)?),
+                        None => (value, 1.0),
+                    };
+                    let ms = ms
+                        .parse::<u64>()
+                        .map_err(|_| format!("delay-read= needs <ms>[:<prob>], got {value:?}"))?;
+                    out.delay_read = Some((Duration::from_millis(ms), prob));
+                }
+                "drop" => out.drop_conn = Some(parse_prob("drop", value)?),
+                "corrupt" => out.corrupt = Some(parse_prob("corrupt", value)?),
+                "trickle" => {
+                    let (bytes, ms) = value
+                        .split_once(':')
+                        .ok_or_else(|| format!("trickle= needs <bytes>:<ms>, got {value:?}"))?;
+                    let bytes = bytes
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&b| b >= 1)
+                        .ok_or_else(|| format!("trickle= needs bytes >= 1, got {value:?}"))?;
+                    let ms = ms
+                        .parse::<u64>()
+                        .map_err(|_| format!("trickle= needs <bytes>:<ms>, got {value:?}"))?;
+                    out.trickle = Some((bytes, Duration::from_millis(ms)));
+                }
+                "refuse" => out.refuse_accept = Some(parse_prob("refuse", value)?),
+                "fail-nth" => {
+                    out.fail_nth_rpc = Some(
+                        value
+                            .parse::<u64>()
+                            .ok()
+                            .filter(|&n| n >= 1)
+                            .ok_or_else(|| format!("fail-nth= needs n >= 1, got {value:?}"))?,
+                    );
+                }
+                other => return Err(format!("unknown fault directive {other:?}")),
+            }
+            directives += 1;
+        }
+        if directives == 0 {
+            return Err(format!("fault spec {spec:?} has no fault directive"));
+        }
+        Ok(out)
+    }
+}
+
+fn parse_prob(key: &str, value: &str) -> Result<f64, String> {
+    value
+        .parse::<f64>()
+        .ok()
+        .filter(|p| (0.0..=1.0).contains(p))
+        .ok_or_else(|| format!("{key}= needs a probability in [0, 1], got {value:?}"))
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+// Distinct decision streams per fault kind, so `corrupt=` decisions
+// never shift when `drop=` is added to the same spec.
+const SALT_DELAY: u64 = 0xDE1A;
+const SALT_DROP: u64 = 0xD209;
+const SALT_CORRUPT: u64 = 0xC022;
+const SALT_REFUSE: u64 = 0x2EF5;
+
+/// A live fault plan: the parsed spec plus the per-event counters that
+/// index its decision streams. Shared (`Arc`) across the connections of
+/// one worker so the event counters — and therefore the injected
+/// schedule — are process-wide and reproducible from the seed.
+pub struct FaultPlan {
+    spec: FaultSpec,
+    reads: AtomicU64,
+    frames: AtomicU64,
+    accepts: AtomicU64,
+    rpcs: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Build a plan over a parsed spec with all event counters at zero.
+    pub fn new(spec: FaultSpec) -> FaultPlan {
+        FaultPlan {
+            spec,
+            reads: AtomicU64::new(0),
+            frames: AtomicU64::new(0),
+            accepts: AtomicU64::new(0),
+            rpcs: AtomicU64::new(0),
+        }
+    }
+
+    /// The spec this plan executes.
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Deterministic uniform sample in `[0, 1)` for event `i` of the
+    /// `salt` decision stream.
+    fn unit(&self, salt: u64, i: u64) -> f64 {
+        let bits = splitmix64(self.spec.seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ i);
+        (bits >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Should this accepted connection be refused (closed immediately)?
+    /// Consumes one accept event.
+    pub fn refuse_accept(&self) -> bool {
+        let Some(prob) = self.spec.refuse_accept else { return false };
+        let i = self.accepts.fetch_add(1, Ordering::Relaxed);
+        self.unit(SALT_REFUSE, i) < prob
+    }
+
+    /// Should this RPC be failed with an injected error reply? Counts
+    /// RPCs from 1, so `fail-nth=3` fails RPCs 3, 6, 9, ...
+    pub fn fail_rpc(&self) -> bool {
+        let Some(n) = self.spec.fail_nth_rpc else { return false };
+        let i = self.rpcs.fetch_add(1, Ordering::Relaxed);
+        (i + 1) % n == 0
+    }
+
+    /// Apply pre-read faults: delay-before-read, then drop-connection
+    /// (an injected `ConnectionReset`). Consumes one read event.
+    pub fn before_read(&self) -> std::io::Result<()> {
+        let i = self.reads.fetch_add(1, Ordering::Relaxed);
+        if let Some((delay, prob)) = self.spec.delay_read {
+            if self.unit(SALT_DELAY, i) < prob {
+                std::thread::sleep(delay);
+            }
+        }
+        if let Some(prob) = self.spec.drop_conn {
+            if self.unit(SALT_DROP, i) < prob {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::ConnectionReset,
+                    "fault: connection dropped by plan",
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Corruption decision for the next frame: `Some(byte)` with the
+    /// header byte index (always < 8 — magic/version/opcode, never the
+    /// length field or payload, so corruption is always detectable).
+    /// Consumes one frame event.
+    pub fn corrupt_decision(&self) -> Option<usize> {
+        let prob = self.spec.corrupt?;
+        let i = self.frames.fetch_add(1, Ordering::Relaxed);
+        if self.unit(SALT_CORRUPT, i) < prob {
+            Some((splitmix64(self.spec.seed ^ SALT_CORRUPT ^ i.wrapping_mul(31)) % 8) as usize)
+        } else {
+            None
+        }
+    }
+
+    /// Flip one detectable header byte of a frame about to be written,
+    /// when this frame's corruption decision says so. Returns whether
+    /// the header was corrupted.
+    pub fn corrupt_frame_header(&self, header: &mut [u8]) -> bool {
+        match self.corrupt_decision() {
+            Some(at) if at < header.len() => {
+                // XOR always changes the byte; 0x40 maps every valid
+                // magic/version/opcode value onto an invalid one.
+                header[at] ^= 0x40;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// The slow-byte-trickle directive, if any: (piece bytes, pause).
+    pub fn trickle(&self) -> Option<(usize, Duration)> {
+        self.spec.trickle
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client-path injection hook (consulted by `wire::write_frame` /
+// `wire::read_frame_opt`)
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static CLIENT_PLAN: RefCell<Option<Arc<FaultPlan>>> = const { RefCell::new(None) };
+}
+
+/// Install `plan` as this thread's client-side fault plan; the wire
+/// framing functions consult it on every frame until the returned guard
+/// drops (restoring whatever was installed before). Thread-local so a
+/// plan in one test cannot leak into concurrently running tests.
+pub fn install_client_plan(plan: Arc<FaultPlan>) -> ClientPlanGuard {
+    let prev = CLIENT_PLAN.with(|c| c.replace(Some(plan)));
+    ClientPlanGuard { prev }
+}
+
+/// The fault plan installed on this thread, if any.
+pub fn client_plan() -> Option<Arc<FaultPlan>> {
+    CLIENT_PLAN.with(|c| c.borrow().clone())
+}
+
+/// RAII restore for [`install_client_plan`].
+pub struct ClientPlanGuard {
+    prev: Option<Arc<FaultPlan>>,
+}
+
+impl Drop for ClientPlanGuard {
+    fn drop(&mut self) {
+        CLIENT_PLAN.with(|c| *c.borrow_mut() = self.prev.take());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FaultStream
+// ---------------------------------------------------------------------------
+
+/// A `Read + Write` wrapper injecting the plan's stream-level faults:
+/// delay-before-read and drop-connection on the read side; corrupt-frame
+/// and slow-byte-trickle on the write side. The write side tracks frame
+/// boundaries (header + declared payload length) across arbitrarily
+/// segmented writes, so corruption lands on exactly one header byte per
+/// corrupted frame no matter how the caller chunks its writes.
+pub struct FaultStream<S> {
+    inner: S,
+    plan: Arc<FaultPlan>,
+    /// Byte offset within the current outgoing frame.
+    pos: usize,
+    /// Accumulated (uncorrupted) header of the current outgoing frame.
+    header: [u8; HEADER_BYTES],
+    /// Payload length parsed from the header (valid once `pos` >=
+    /// [`HEADER_BYTES`]).
+    payload_len: usize,
+    /// Header byte to flip in the current frame, when corrupting.
+    corrupt_at: Option<usize>,
+}
+
+impl<S> FaultStream<S> {
+    /// Wrap `inner` under `plan`.
+    pub fn new(inner: S, plan: Arc<FaultPlan>) -> FaultStream<S> {
+        FaultStream {
+            inner,
+            plan,
+            pos: 0,
+            header: [0u8; HEADER_BYTES],
+            payload_len: 0,
+            corrupt_at: None,
+        }
+    }
+
+    /// Walk `out` through the frame-boundary tracker, flipping the
+    /// corrupted header byte in place when this frame's decision hit.
+    fn track_frames(&mut self, out: &mut [u8]) {
+        for idx in 0..out.len() {
+            if self.pos == 0 {
+                self.corrupt_at = self.plan.corrupt_decision();
+            }
+            if self.pos < HEADER_BYTES {
+                self.header[self.pos] = out[idx];
+                if self.corrupt_at == Some(self.pos) {
+                    out[idx] ^= 0x40;
+                }
+                if self.pos == HEADER_BYTES - 1 {
+                    self.payload_len =
+                        u32::from_le_bytes(self.header[8..12].try_into().unwrap()) as usize;
+                }
+            }
+            self.pos += 1;
+            if self.pos >= HEADER_BYTES && self.pos == HEADER_BYTES + self.payload_len {
+                self.pos = 0;
+            }
+        }
+    }
+}
+
+impl<S: Read> Read for FaultStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.plan.before_read()?;
+        self.inner.read(buf)
+    }
+}
+
+impl<S: Write> Write for FaultStream<S> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let mut out = buf.to_vec();
+        self.track_frames(&mut out);
+        match self.plan.trickle() {
+            Some((piece, pause)) => {
+                for chunk in out.chunks(piece.max(1)) {
+                    self.inner.write_all(chunk)?;
+                    std::thread::sleep(pause);
+                }
+            }
+            None => self.inner.write_all(&out)?,
+        }
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::wire::{self, Op, WireError};
+
+    #[test]
+    fn spec_parsing_accepts_the_grammar_and_rejects_garbage() {
+        let spec =
+            FaultSpec::parse("seed=7,delay-read=5:0.5,drop=0.25,corrupt=0.1,trickle=64:1")
+                .unwrap();
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.delay_read, Some((Duration::from_millis(5), 0.5)));
+        assert_eq!(spec.drop_conn, Some(0.25));
+        assert_eq!(spec.corrupt, Some(0.1));
+        assert_eq!(spec.trickle, Some((64, Duration::from_millis(1))));
+
+        let spec = FaultSpec::parse("refuse=1,fail-nth=3").unwrap();
+        assert_eq!(spec.refuse_accept, Some(1.0));
+        assert_eq!(spec.fail_nth_rpc, Some(3));
+        assert_eq!(spec.seed, DEFAULT_FAULT_SEED);
+
+        for bad in [
+            "", "seed=7", "bogus=1", "drop=1.5", "drop=x", "trickle=64", "trickle=0:1",
+            "fail-nth=0", "delay-read=abc", "corrupt",
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic_from_the_seed() {
+        let mk = || FaultPlan::new(FaultSpec::parse("seed=11,refuse=0.5,corrupt=0.5").unwrap());
+        let (a, b) = (mk(), mk());
+        let seq_a: Vec<(bool, Option<usize>)> =
+            (0..64).map(|_| (a.refuse_accept(), a.corrupt_decision())).collect();
+        let seq_b: Vec<(bool, Option<usize>)> =
+            (0..64).map(|_| (b.refuse_accept(), b.corrupt_decision())).collect();
+        assert_eq!(seq_a, seq_b, "same seed, same schedule");
+        assert!(seq_a.iter().any(|(r, _)| *r), "p=0.5 over 64 events must fire");
+        assert!(seq_a.iter().any(|(r, _)| !*r), "p=0.5 over 64 events must also pass");
+    }
+
+    #[test]
+    fn fail_nth_fails_exactly_every_nth_rpc() {
+        let plan = FaultPlan::new(FaultSpec::parse("fail-nth=3").unwrap());
+        let got: Vec<bool> = (0..9).map(|_| plan.fail_rpc()).collect();
+        assert_eq!(got, vec![false, false, true, false, false, true, false, false, true]);
+    }
+
+    #[test]
+    fn corrupted_frames_are_always_detected_never_misparsed() {
+        // corrupt=1: every frame written through the stream is corrupted,
+        // and every one must surface as a typed WireError — header-only
+        // corruption can never silently alter a payload.
+        let plan = Arc::new(FaultPlan::new(FaultSpec::parse("seed=3,corrupt=1").unwrap()));
+        for round in 0u8..16 {
+            let mut fs = FaultStream::new(Vec::new(), Arc::clone(&plan));
+            let payload = vec![round; 5];
+            wire::write_frame(&mut fs, Op::Execute, &payload).unwrap();
+            let buf = fs.inner;
+            let err = wire::read_frame(&mut buf.as_slice()).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    WireError::BadMagic(_) | WireError::Version { .. } | WireError::BadOpcode(_)
+                ),
+                "round {round}: corrupt frame must be typed-rejected, got {err:?}"
+            );
+            // The payload bytes themselves are untouched.
+            assert_eq!(&buf[HEADER_BYTES..], &payload[..]);
+        }
+    }
+
+    #[test]
+    fn trickled_frames_roundtrip_bit_identical() {
+        let plan = Arc::new(FaultPlan::new(FaultSpec::parse("trickle=3:0").unwrap()));
+        let mut fs = FaultStream::new(Vec::new(), Arc::clone(&plan));
+        let payload: Vec<u8> = (0..37).collect();
+        wire::write_frame(&mut fs, Op::Stats, &payload).unwrap();
+        wire::write_frame(&mut fs, Op::Ping, &[]).unwrap();
+        let buf = fs.inner;
+        let mut r = buf.as_slice();
+        let (op, got) = wire::read_frame(&mut r).unwrap();
+        assert_eq!((op, got), (Op::Stats, payload));
+        let (op, got) = wire::read_frame(&mut r).unwrap();
+        assert_eq!((op, got), (Op::Ping, Vec::new()));
+    }
+
+    #[test]
+    fn frame_tracking_survives_byte_at_a_time_writes() {
+        // Write two frames one byte per write() call: corruption must
+        // still land on exactly one header byte of each frame.
+        let plan = Arc::new(FaultPlan::new(FaultSpec::parse("seed=5,corrupt=1").unwrap()));
+        let mut encoded = Vec::new();
+        wire::write_frame(&mut encoded, Op::Ping, b"abc").unwrap();
+        wire::write_frame(&mut encoded, Op::Stats, b"").unwrap();
+        let mut fs = FaultStream::new(Vec::new(), Arc::clone(&plan));
+        for &b in &encoded {
+            fs.write_all(std::slice::from_ref(&b)).unwrap();
+        }
+        let buf = fs.inner;
+        assert_eq!(buf.len(), encoded.len());
+        let flipped: Vec<usize> =
+            (0..buf.len()).filter(|&i| buf[i] != encoded[i]).collect();
+        assert_eq!(flipped.len(), 2, "one flipped byte per frame: {flipped:?}");
+        let frame2 = HEADER_BYTES + 3;
+        assert!(flipped[0] < 8, "first flip inside frame 1 header: {flipped:?}");
+        assert!(
+            (frame2..frame2 + 8).contains(&flipped[1]),
+            "second flip inside frame 2 header: {flipped:?}"
+        );
+    }
+
+    #[test]
+    fn drop_connection_surfaces_as_a_read_error() {
+        let plan = Arc::new(FaultPlan::new(FaultSpec::parse("drop=1").unwrap()));
+        let mut encoded = Vec::new();
+        wire::write_frame(&mut encoded, Op::Ping, b"").unwrap();
+        let mut fs = FaultStream::new(encoded.as_slice(), plan);
+        let err = wire::read_frame(&mut fs).unwrap_err();
+        assert!(matches!(err, WireError::Io(_)), "{err:?}");
+    }
+
+    #[test]
+    fn client_hook_injects_on_this_thread_only_and_restores() {
+        let plan = Arc::new(FaultPlan::new(FaultSpec::parse("seed=9,corrupt=1").unwrap()));
+        {
+            let _guard = install_client_plan(Arc::clone(&plan));
+            assert!(client_plan().is_some());
+            let mut buf = Vec::new();
+            wire::write_frame(&mut buf, Op::Ping, b"x").unwrap();
+            assert!(wire::read_frame(&mut buf.as_slice()).is_err(), "hook must corrupt");
+            // Another thread sees no plan.
+            std::thread::spawn(|| assert!(client_plan().is_none())).join().unwrap();
+        }
+        assert!(client_plan().is_none(), "guard drop restores");
+        let mut buf = Vec::new();
+        wire::write_frame(&mut buf, Op::Ping, b"x").unwrap();
+        assert!(wire::read_frame(&mut buf.as_slice()).is_ok(), "no hook, clean frame");
+    }
+}

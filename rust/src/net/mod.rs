@@ -16,21 +16,30 @@
 //!   ping/prepare/execute/stats/evict/shutdown RPCs with per-request
 //!   framing and read/write timeouts.
 //! * [`placer`] — LPT shard placement across the fleet with R-way
-//!   replication on distinct workers.
+//!   replication on distinct workers, plus minimal-movement rebalancing
+//!   onto the current live set.
 //! * [`remote`] — the client side: the `remote:<addr>[,addr...]` backend
 //!   whose [`crate::backend::PreparedSpmm`] handle proxies shard
 //!   executions over pooled connections, retries across replicas, and
-//!   re-places shards off dead workers mid-stream.
+//!   re-places shards off dead workers mid-stream. Fleet liveness is
+//!   supervised by a heartbeat-fed [`remote::Membership`] table
+//!   (Live → Suspect → Dead → recovered Live) with a per-worker circuit
+//!   breaker.
+//! * [`fault`] — seeded, deterministic fault injection (delays, drops,
+//!   corrupt frames, trickle, refused accepts, failed RPCs) installable
+//!   on a worker (`--fault`) or the client framing path.
 //!
 //! Failure semantics mirror the in-process executor: "shard i of S on
 //! host h failed" with C untouched — never silently zeroed rows.
 
+pub mod fault;
 pub mod placer;
 pub mod remote;
 pub mod wire;
 pub mod worker;
 
-pub use placer::{place, FleetPlan};
-pub use remote::{set_telemetry_sink, PreparedRemote, RemoteBackend};
+pub use fault::{FaultPlan, FaultSpec, FaultStream};
+pub use placer::{place, rebalance, FleetPlan};
+pub use remote::{set_telemetry_sink, Liveness, Membership, PreparedRemote, RemoteBackend};
 pub use wire::{Op, WireError, WorkerStats, MAX_FRAME_BYTES, WIRE_VERSION};
 pub use worker::{Worker, WorkerConfig};

@@ -68,6 +68,58 @@ pub fn place(weights: &[u64], workers: usize, replicas: usize) -> FleetPlan {
     FleetPlan { assignments, replicas }
 }
 
+/// Rebalance an existing assignment onto the current live set with
+/// minimal movement: every still-live holder of a shard keeps it, and
+/// only shards whose live replica count fell below
+/// `min(replicas, live workers)` gain new placements — on the least
+/// loaded live workers not already holding them (heaviest shard first,
+/// index tie-break, so rebalancing is as deterministic as [`place`]).
+///
+/// A shard that never lost a live replica comes back *identical*
+/// (same workers, same order), which is what makes recovery cheap:
+/// re-adding a worker to the live set moves nothing, and removing one
+/// relocates only the shards it held.
+pub fn rebalance(
+    prev: &[Vec<usize>],
+    weights: &[u64],
+    live: &[bool],
+    replicas: usize,
+) -> Vec<Vec<usize>> {
+    assert_eq!(prev.len(), weights.len(), "one weight per shard");
+    let live_count = live.iter().filter(|&&l| l).count();
+    if live_count == 0 {
+        // Nowhere to move anything; keep the old map for when workers
+        // come back.
+        return prev.to_vec();
+    }
+    let want = replicas.clamp(1, live_count);
+    let mut assignments: Vec<Vec<usize>> = prev
+        .iter()
+        .map(|ws| ws.iter().copied().filter(|&w| live.get(w) == Some(&true)).collect())
+        .collect();
+    let mut load = vec![0u64; live.len()];
+    for (shard, ws) in assignments.iter().enumerate() {
+        for &w in ws {
+            load[w] += weights[shard];
+        }
+    }
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(weights[i]));
+    for &shard in &order {
+        while assignments[shard].len() < want {
+            let Some(w) = (0..live.len())
+                .filter(|&w| live[w] && !assignments[shard].contains(&w))
+                .min_by_key(|&w| (load[w], w))
+            else {
+                break;
+            };
+            load[w] += weights[shard];
+            assignments[shard].push(w);
+        }
+    }
+    assignments
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +162,67 @@ mod tests {
         }
         let (lo, hi) = (load.iter().min().unwrap(), load.iter().max().unwrap());
         assert!(hi - lo <= 4, "loads {load:?}");
+    }
+
+    #[test]
+    fn rebalance_moves_minimum_and_preserves_replication() {
+        prop::check("placer_rebalance", 0xBA1A, 48, |rng| {
+            let shards = 1 + rng.index(10);
+            let workers = 2 + rng.index(5);
+            let replicas = 1 + rng.index(3);
+            let weights: Vec<u64> = (0..shards).map(|_| 1 + rng.index(1000) as u64).collect();
+            let plan = place(&weights, workers, replicas);
+            let dead = rng.index(workers);
+            let mut live = vec![true; workers];
+            live[dead] = false;
+            let next = rebalance(&plan.assignments, &weights, &live, plan.replicas);
+            let want_r = plan.replicas.min(workers - 1);
+            for (shard, (old, new)) in plan.assignments.iter().zip(&next).enumerate() {
+                if new.iter().any(|&w| w == dead) {
+                    return Err(format!("shard {shard} still placed on dead worker {dead}"));
+                }
+                let mut sorted = new.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                if sorted.len() != new.len() {
+                    return Err(format!("shard {shard}: duplicate worker in {new:?}"));
+                }
+                if new.len() != want_r {
+                    return Err(format!(
+                        "shard {shard}: {} replicas after rebalance, want {want_r}",
+                        new.len()
+                    ));
+                }
+                // Minimal movement: survivors keep every placement, and a
+                // shard that never touched the dead worker is unchanged.
+                let survivors: Vec<usize> =
+                    old.iter().copied().filter(|&w| w != dead).collect();
+                if !survivors.iter().all(|w| new.contains(w)) {
+                    return Err(format!(
+                        "shard {shard}: surviving placement dropped ({old:?} -> {new:?})"
+                    ));
+                }
+                if !old.contains(&dead) && new != old {
+                    return Err(format!(
+                        "shard {shard} moved without losing a replica ({old:?} -> {new:?})"
+                    ));
+                }
+            }
+            // Re-adding the worker moves nothing: every shard already has
+            // its full live replica count.
+            let restored = rebalance(&next, &weights, &vec![true; workers], want_r);
+            if restored != next {
+                return Err("re-adding a worker must not relocate shards".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rebalance_with_no_live_workers_keeps_the_old_map() {
+        let prev = vec![vec![0usize], vec![1]];
+        let got = rebalance(&prev, &[3, 4], &[false, false], 1);
+        assert_eq!(got, prev);
     }
 
     #[test]

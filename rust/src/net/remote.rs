@@ -16,22 +16,40 @@
 //! Failure handling per shard, in order: retry the next replica
 //! (placement order), then **re-place** — re-prepare the shard on any
 //! live worker that does not hold it and execute there, updating the
-//! placement map for subsequent calls. Transport errors mark a worker
-//! dead (skipped until the handle is rebuilt); worker-side errors (an
-//! evicted residency, an execution refusal) leave it live so a
-//! re-prepare can heal it. Retry/re-place/placement counts flow out
-//! through [`ExecutionReport::remote`] into the serving metrics, and
-//! every RPC emits a `net.rpc` child span when a telemetry sink is
-//! installed ([`set_telemetry_sink`]) and the executing thread carries a
-//! span context ([`crate::telemetry::trace::push_span_context`]).
+//! placement map for subsequent calls. Worker-side errors (an evicted
+//! residency, an execution refusal) leave a worker live so a re-prepare
+//! can heal it. Retry/re-place/placement counts flow out through
+//! [`ExecutionReport::remote`] into the serving metrics, and every RPC
+//! emits a `net.rpc` child span when a telemetry sink is installed
+//! ([`set_telemetry_sink`]) and the executing thread carries a span
+//! context ([`crate::telemetry::trace::push_span_context`]).
+//!
+//! Liveness is supervised, not inferred once and stuck: a [`Membership`]
+//! table, fed by a background heartbeat thread, moves each worker
+//! Live → Suspect (first failure) → Dead ([`BREAKER_THRESHOLD`]
+//! consecutive failures) → back to Live when a heartbeat succeeds again.
+//! A revived worker is reused directly — its placements were never
+//! discarded, so images it still holds need no re-registration. Each
+//! worker also carries a circuit breaker: after the failure threshold
+//! the breaker opens and RPCs fail fast (no timeout burned) until the
+//! [`BREAKER_COOLDOWN`] elapses and one half-open probe is admitted.
+//! When membership changes, placements rebalance onto the current live
+//! set ([`super::placer::rebalance`]) *before* the next execution needs
+//! to fail over, restoring replica counts proactively.
+//!
+//! Deadlines: a dispatch worker can install an absolute deadline for the
+//! current thread ([`push_call_deadline`]); the shard fan-out checks it
+//! before every fleet RPC, so an expired request stops issuing executes
+//! mid-flight instead of riding every retry to its timeout.
 //!
 //! Connections are pooled per worker (stale pooled connections fall back
 //! to one fresh reconnect), and all sockets run with read/write timeouts
 //! so a hung peer becomes an error, not a stuck request.
 
+use std::cell::Cell;
 use std::net::{TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
 use std::time::{Duration, Instant};
 
 use super::placer::{self, FleetPlan};
@@ -46,6 +64,17 @@ use crate::telemetry::trace::{self, SpanRecord, TelemetrySink};
 
 /// Default per-socket read/write/connect timeout (`timeout_ms=` overrides).
 const DEFAULT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Default heartbeat ping interval (`heartbeat_ms=` overrides).
+const DEFAULT_HEARTBEAT: Duration = Duration::from_millis(250);
+
+/// Consecutive failures that mark a worker Dead and open its circuit
+/// breaker.
+pub const BREAKER_THRESHOLD: u32 = 3;
+
+/// How long an open breaker rejects RPCs outright before admitting one
+/// half-open probe.
+pub const BREAKER_COOLDOWN: Duration = Duration::from_millis(500);
 
 /// Install (or clear) the process-wide sink that receives `net.rpc` spans.
 /// The serving CLI points this at the same collector as
@@ -70,6 +99,245 @@ fn current_sink() -> Option<Arc<dyn TelemetrySink>> {
 fn next_image_id() -> u64 {
     static NEXT: AtomicU64 = AtomicU64::new(1);
     NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// Deadline propagation
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static CALL_DEADLINE: Cell<Option<Instant>> = const { Cell::new(None) };
+}
+
+/// Install an absolute deadline for remote executes issued from this
+/// thread; the shard fan-out checks it before every fleet RPC and stops
+/// retrying once it passes. Restored (to the previous value) when the
+/// returned guard drops. The dispatch stage installs this around each
+/// job whose segments all carry deadlines.
+pub fn push_call_deadline(deadline: Instant) -> CallDeadlineGuard {
+    let prev = CALL_DEADLINE.with(|c| c.replace(Some(deadline)));
+    CallDeadlineGuard { prev }
+}
+
+/// The deadline installed on this thread, if any.
+pub fn current_call_deadline() -> Option<Instant> {
+    CALL_DEADLINE.with(|c| c.get())
+}
+
+/// RAII restore for [`push_call_deadline`].
+pub struct CallDeadlineGuard {
+    prev: Option<Instant>,
+}
+
+impl Drop for CallDeadlineGuard {
+    fn drop(&mut self) {
+        CALL_DEADLINE.with(|c| c.set(self.prev));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet membership + circuit breaking
+// ---------------------------------------------------------------------------
+
+/// Liveness of one fleet worker as seen by the supervising heartbeat.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Liveness {
+    /// Answering; RPCs flow normally.
+    Live,
+    /// At least one recent failure but under the death threshold —
+    /// still tried, on notice.
+    Suspect,
+    /// [`BREAKER_THRESHOLD`] consecutive failures; skipped by placement
+    /// until a heartbeat succeeds and revives it.
+    Dead,
+}
+
+/// Supervision state for one worker.
+struct MemberState {
+    /// 0 = Live, 1 = Suspect, 2 = Dead.
+    liveness: AtomicU8,
+    /// Consecutive failures since the last success.
+    failures: AtomicU32,
+    /// `Some(until)` while the circuit breaker is open; RPCs fail fast
+    /// until `until`, then one half-open probe is admitted.
+    breaker_open_until: Mutex<Option<Instant>>,
+}
+
+/// The fleet liveness table: one row per worker, written by RPC
+/// outcomes and by the background heartbeat thread, read by placement
+/// and the per-worker circuit breaker. State machine per worker:
+/// Live → Suspect on the first failure, → Dead at
+/// [`BREAKER_THRESHOLD`] consecutive failures (which also opens the
+/// breaker), → Live again on any success (heartbeat or RPC) — so a
+/// revived worker rejoins without a handle rebuild, keeping whatever
+/// residencies it still holds.
+pub struct Membership {
+    addrs: Vec<String>,
+    states: Vec<MemberState>,
+    timeout: Duration,
+    /// Bumped on every liveness transition; consumers compare epochs to
+    /// decide when to rebalance placements.
+    epoch: AtomicU64,
+    /// Total liveness transitions (any direction) since construction.
+    transitions: AtomicU64,
+    /// Times a worker's breaker tripped open (closed → open edges only).
+    breaker_trips: AtomicU64,
+}
+
+impl Membership {
+    fn new(addrs: Vec<String>, timeout: Duration) -> Arc<Membership> {
+        let states = addrs
+            .iter()
+            .map(|_| MemberState {
+                liveness: AtomicU8::new(0),
+                failures: AtomicU32::new(0),
+                breaker_open_until: Mutex::new(None),
+            })
+            .collect();
+        Arc::new(Membership {
+            addrs,
+            states,
+            timeout,
+            epoch: AtomicU64::new(0),
+            transitions: AtomicU64::new(0),
+            breaker_trips: AtomicU64::new(0),
+        })
+    }
+
+    /// Build a table and start its background heartbeat thread. The
+    /// thread holds only a `Weak` reference and exits when the last
+    /// owner (the prepared handle) drops.
+    fn with_heartbeat(
+        addrs: Vec<String>,
+        timeout: Duration,
+        interval: Duration,
+    ) -> Arc<Membership> {
+        let membership = Membership::new(addrs, timeout);
+        let weak = Arc::downgrade(&membership);
+        std::thread::spawn(move || heartbeat_loop(weak, interval));
+        membership
+    }
+
+    /// Current liveness of worker `w`.
+    pub fn liveness(&self, w: usize) -> Liveness {
+        match self.states[w].liveness.load(Ordering::Relaxed) {
+            0 => Liveness::Live,
+            1 => Liveness::Suspect,
+            _ => Liveness::Dead,
+        }
+    }
+
+    /// Liveness transitions (any direction) since construction.
+    pub fn transitions(&self) -> u64 {
+        self.transitions.load(Ordering::Relaxed)
+    }
+
+    /// Closed → open breaker trips since construction.
+    pub fn breaker_trips(&self) -> u64 {
+        self.breaker_trips.load(Ordering::Relaxed)
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    fn set_liveness(&self, w: usize, next: Liveness) {
+        let code = match next {
+            Liveness::Live => 0u8,
+            Liveness::Suspect => 1,
+            Liveness::Dead => 2,
+        };
+        let prev = self.states[w].liveness.swap(code, Ordering::Relaxed);
+        if prev != code {
+            self.transitions.fetch_add(1, Ordering::Relaxed);
+            self.epoch.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A successful exchange with worker `w` (RPC reply — even an error
+    /// reply proves liveness — or heartbeat): reset failures, close the
+    /// breaker, revive.
+    fn record_ok(&self, w: usize) {
+        self.states[w].failures.store(0, Ordering::Relaxed);
+        *self.states[w].breaker_open_until.lock().unwrap() = None;
+        self.set_liveness(w, Liveness::Live);
+    }
+
+    /// A transport failure against worker `w`: escalate liveness and,
+    /// at the threshold, open (or re-arm) the breaker.
+    fn record_failure(&self, w: usize) {
+        let n = self.states[w].failures.fetch_add(1, Ordering::Relaxed) + 1;
+        if n >= BREAKER_THRESHOLD {
+            self.set_liveness(w, Liveness::Dead);
+            let mut open = self.states[w].breaker_open_until.lock().unwrap();
+            if open.is_none() {
+                self.breaker_trips.fetch_add(1, Ordering::Relaxed);
+            }
+            *open = Some(Instant::now() + BREAKER_COOLDOWN);
+        } else {
+            self.set_liveness(w, Liveness::Suspect);
+        }
+    }
+
+    /// Read-only breaker check: false while `w`'s breaker is cooling
+    /// down. Used by placement loops to skip doomed workers without
+    /// consuming the half-open probe.
+    fn would_admit(&self, w: usize) -> bool {
+        match *self.states[w].breaker_open_until.lock().unwrap() {
+            Some(until) => Instant::now() >= until,
+            None => true,
+        }
+    }
+
+    /// Gate one RPC to worker `w`: rejected while the breaker cools;
+    /// once the cooldown elapses the caller is admitted as the one
+    /// half-open probe (the window is pushed out so concurrent callers
+    /// keep failing fast until the probe resolves).
+    fn admit_rpc(&self, w: usize) -> bool {
+        let mut open = self.states[w].breaker_open_until.lock().unwrap();
+        match *open {
+            None => true,
+            Some(until) if Instant::now() < until => false,
+            Some(_) => {
+                *open = Some(Instant::now() + BREAKER_COOLDOWN);
+                true
+            }
+        }
+    }
+
+    /// One heartbeat ping: a fresh short-timeout connection and a Ping
+    /// RPC. Any reply frame counts as alive.
+    fn ping(&self, w: usize) {
+        let timeout = self.timeout.min(Duration::from_secs(1));
+        let ok = (|| -> Result<(), String> {
+            let sock_addr = self.addrs[w]
+                .to_socket_addrs()
+                .map_err(|e| e.to_string())?
+                .next()
+                .ok_or_else(|| "no address".to_string())?;
+            let mut stream =
+                TcpStream::connect_timeout(&sock_addr, timeout).map_err(|e| e.to_string())?;
+            let _ = stream.set_read_timeout(Some(timeout));
+            let _ = stream.set_write_timeout(Some(timeout));
+            rpc_on(&mut stream, Op::Ping, &[]).map_err(|e| e.to_string())?;
+            Ok(())
+        })();
+        match ok {
+            Ok(()) => self.record_ok(w),
+            Err(_) => self.record_failure(w),
+        }
+    }
+}
+
+fn heartbeat_loop(weak: Weak<Membership>, interval: Duration) {
+    loop {
+        let Some(membership) = weak.upgrade() else { return };
+        for w in 0..membership.addrs.len() {
+            membership.ping(w);
+        }
+        drop(membership);
+        std::thread::sleep(interval);
+    }
 }
 
 /// Why one RPC attempt failed.
@@ -107,26 +375,40 @@ fn rpc_on(
 }
 
 /// One worker in the fleet: its address, a pool of warm connections, and
-/// a death mark set on transport failure.
+/// its row in the shared [`Membership`] table (liveness + breaker).
 struct WorkerLink {
     addr: String,
     pool: Mutex<Vec<TcpStream>>,
-    dead: AtomicBool,
+    member: Arc<Membership>,
+    /// This worker's row in `member`.
+    index: usize,
     timeout: Duration,
 }
 
 impl WorkerLink {
+    /// A standalone link with its own single-row membership table and no
+    /// heartbeat — used for probes and one-off RPCs outside a fleet.
     fn new(addr: String, timeout: Duration) -> WorkerLink {
-        WorkerLink {
-            addr,
-            pool: Mutex::new(Vec::new()),
-            dead: AtomicBool::new(false),
-            timeout,
-        }
+        let member = Membership::new(vec![addr.clone()], timeout);
+        WorkerLink { addr, pool: Mutex::new(Vec::new()), member, index: 0, timeout }
+    }
+
+    /// A link sharing a fleet-wide membership table.
+    fn in_fleet(
+        addr: String,
+        timeout: Duration,
+        member: Arc<Membership>,
+        index: usize,
+    ) -> WorkerLink {
+        WorkerLink { addr, pool: Mutex::new(Vec::new()), member, index, timeout }
+    }
+
+    fn liveness(&self) -> Liveness {
+        self.member.liveness(self.index)
     }
 
     fn is_dead(&self) -> bool {
-        self.dead.load(Ordering::Relaxed)
+        self.liveness() == Liveness::Dead
     }
 
     fn connect(&self) -> Result<TcpStream, String> {
@@ -145,15 +427,27 @@ impl WorkerLink {
     }
 
     /// One RPC over a pooled connection; a stale pooled connection gets
-    /// exactly one fresh reconnect before the worker is declared dead.
+    /// exactly one fresh reconnect before the failure is recorded.
+    ///
+    /// The call is gated by the worker's circuit breaker: while it is
+    /// open (cooling down after [`BREAKER_THRESHOLD`] consecutive
+    /// failures), the RPC fails fast with a typed transport error
+    /// instead of burning a connect timeout. A breaker rejection does
+    /// **not** count as another failure.
     fn call(&self, op: Op, payload: &[u8]) -> Result<Vec<u8>, RpcError> {
+        if !self.member.admit_rpc(self.index) {
+            return Err(RpcError::Transport(format!("circuit breaker open to {}", self.addr)));
+        }
         if let Some(mut stream) = self.pool.lock().unwrap().pop() {
             match rpc_on(&mut stream, op, payload) {
                 Ok(Ok(bytes)) => {
+                    self.member.record_ok(self.index);
                     self.pool.lock().unwrap().push(stream);
                     return Ok(bytes);
                 }
                 Ok(Err(msg)) => {
+                    // An error *reply* still proves the worker is alive.
+                    self.member.record_ok(self.index);
                     self.pool.lock().unwrap().push(stream);
                     return Err(RpcError::Remote(msg));
                 }
@@ -163,20 +457,22 @@ impl WorkerLink {
             }
         }
         let mut stream = self.connect().map_err(|e| {
-            self.dead.store(true, Ordering::Relaxed);
+            self.member.record_failure(self.index);
             RpcError::Transport(e)
         })?;
         match rpc_on(&mut stream, op, payload) {
             Ok(Ok(bytes)) => {
+                self.member.record_ok(self.index);
                 self.pool.lock().unwrap().push(stream);
                 Ok(bytes)
             }
             Ok(Err(msg)) => {
+                self.member.record_ok(self.index);
                 self.pool.lock().unwrap().push(stream);
                 Err(RpcError::Remote(msg))
             }
             Err(e) => {
-                self.dead.store(true, Ordering::Relaxed);
+                self.member.record_failure(self.index);
                 Err(RpcError::Transport(format!("rpc to {} failed: {e}", self.addr)))
             }
         }
@@ -214,24 +510,26 @@ impl WorkerLink {
 }
 
 /// Factory for distributed execution over a `sextans worker` fleet.
-/// Spec: `remote:<addr>[,addr...][,replicas=R][,timeout_ms=T]`.
+/// Spec: `remote:<addr>[,addr...][,replicas=R][,timeout_ms=T][,heartbeat_ms=H]`.
 pub struct RemoteBackend {
     addrs: Vec<String>,
     replicas: usize,
     timeout: Duration,
+    heartbeat: Duration,
 }
 
 impl RemoteBackend {
     /// Parse the spec argument (everything after `remote:`).
     pub fn from_spec(arg: Option<&str>) -> Result<RemoteBackend, BackendError> {
-        let usage = "remote:<addr>[,addr...][,replicas=R][,timeout_ms=T] needs at least \
-                     one <host:port> worker address";
+        let usage = "remote:<addr>[,addr...][,replicas=R][,timeout_ms=T][,heartbeat_ms=H] \
+                     needs at least one <host:port> worker address";
         let Some(arg) = arg.filter(|a| !a.is_empty()) else {
             return Err(BackendError::InvalidSpec(usage.to_string()));
         };
         let mut addrs = Vec::new();
         let mut replicas = 1usize;
         let mut timeout = DEFAULT_TIMEOUT;
+        let mut heartbeat = DEFAULT_HEARTBEAT;
         for part in arg.split(',') {
             let part = part.trim();
             if part.is_empty() {
@@ -258,10 +556,18 @@ impl RemoteBackend {
                         })?;
                         timeout = Duration::from_millis(ms.max(1));
                     }
+                    "heartbeat_ms" => {
+                        let ms = value.parse::<u64>().map_err(|_| {
+                            BackendError::InvalidSpec(format!(
+                                "heartbeat_ms= needs an integer, got {value:?}"
+                            ))
+                        })?;
+                        heartbeat = Duration::from_millis(ms.max(1));
+                    }
                     other => {
                         return Err(BackendError::InvalidSpec(format!(
-                            "unknown remote option {other:?} (expected replicas= or \
-                             timeout_ms=)"
+                            "unknown remote option {other:?} (expected replicas=, \
+                             timeout_ms=, or heartbeat_ms=)"
                         )));
                     }
                 }
@@ -280,7 +586,7 @@ impl RemoteBackend {
         if addrs.is_empty() {
             return Err(BackendError::InvalidSpec(usage.to_string()));
         }
-        Ok(RemoteBackend { addrs, replicas, timeout })
+        Ok(RemoteBackend { addrs, replicas, timeout, heartbeat })
     }
 
     /// The configured worker addresses.
@@ -317,10 +623,20 @@ impl RemoteBackend {
         let resident_bytes = sharded.resident_bytes();
         let weights: Vec<u64> = sharded.shards.iter().map(|sh| sh.image.nnz as u64).collect();
         let fleet: FleetPlan = placer::place(&weights, fleet_size, self.replicas);
+        let membership =
+            Membership::with_heartbeat(self.addrs.clone(), self.timeout, self.heartbeat);
         let workers: Vec<Arc<WorkerLink>> = self
             .addrs
             .iter()
-            .map(|a| Arc::new(WorkerLink::new(a.clone(), self.timeout)))
+            .enumerate()
+            .map(|(w, a)| {
+                Arc::new(WorkerLink::in_fleet(
+                    a.clone(),
+                    self.timeout,
+                    Arc::clone(&membership),
+                    w,
+                ))
+            })
             .collect();
         let shards: Vec<RemoteShard> = sharded
             .shards
@@ -371,10 +687,13 @@ impl RemoteBackend {
             }
         }
 
+        let last_epoch = membership.epoch();
         Ok(PreparedRemote {
             image,
             shards,
             workers,
+            membership,
+            last_epoch: AtomicU64::new(last_epoch),
             placements: Mutex::new(placements),
             replicas: fleet.replicas,
             imbalance,
@@ -383,6 +702,7 @@ impl RemoteBackend {
             cost: PrepareCost { wall: t0.elapsed(), resident_bytes },
             retries_total: AtomicU64::new(0),
             replaced_total: AtomicU64::new(0),
+            rebalanced_total: AtomicU64::new(0),
         })
     }
 }
@@ -436,8 +756,14 @@ pub struct PreparedRemote {
     image: Arc<ScheduledMatrix>,
     shards: Vec<RemoteShard>,
     workers: Vec<Arc<WorkerLink>>,
+    /// The fleet liveness table (heartbeat-fed) shared by every link.
+    membership: Arc<Membership>,
+    /// The membership epoch placements were last rebalanced against.
+    last_epoch: AtomicU64,
     /// `placements[shard]` = worker indices holding it, preference order.
-    /// Mutated by re-placement.
+    /// Mutated by re-placement and rebalancing; dead holders sink to the
+    /// back of each list but are kept, so a revived worker is reused
+    /// without re-registering images it still holds.
     placements: Mutex<Vec<Vec<usize>>>,
     replicas: usize,
     imbalance: f64,
@@ -447,6 +773,7 @@ pub struct PreparedRemote {
     cost: PrepareCost,
     retries_total: AtomicU64,
     replaced_total: AtomicU64,
+    rebalanced_total: AtomicU64,
 }
 
 impl PreparedRemote {
@@ -468,18 +795,66 @@ impl PreparedRemote {
         let placements: usize = self.placements.lock().unwrap().iter().map(Vec::len).sum();
         RemoteStats {
             workers: self.workers.len(),
-            live_workers: self.workers.iter().filter(|w| !w.is_dead()).count(),
+            live_workers: self
+                .workers
+                .iter()
+                .filter(|w| w.liveness() == Liveness::Live)
+                .count(),
             placements,
             replicas: self.replicas,
             retries,
             replaced,
+            breaker_trips: self.membership.breaker_trips() as usize,
+            transitions: self.membership.transitions() as usize,
+            rebalanced: self.rebalanced_total.load(Ordering::Relaxed) as usize,
         }
+    }
+
+    /// React to membership changes since the last execution: when the
+    /// liveness epoch moved, recompute placements onto the current live
+    /// set ([`placer::rebalance`]) and prepare any newly assigned
+    /// holders, *before* the fan-out has to fail over reactively.
+    /// Returns how many shards gained a placement.
+    fn maybe_rebalance(&self, ctx: Option<(u64, u64)>) -> usize {
+        let epoch = self.membership.epoch();
+        if self.last_epoch.swap(epoch, Ordering::Relaxed) == epoch {
+            return 0;
+        }
+        let live: Vec<bool> = (0..self.workers.len())
+            .map(|w| self.membership.liveness(w) != Liveness::Dead)
+            .collect();
+        if !live.iter().any(|&l| l) {
+            return 0;
+        }
+        let weights: Vec<u64> = self.shards.iter().map(|sh| sh.image.nnz as u64).collect();
+        let mut moved = 0usize;
+        let mut placements = self.placements.lock().unwrap();
+        let desired = placer::rebalance(&placements, &weights, &live, self.replicas);
+        for (i, want) in desired.iter().enumerate() {
+            for &w in want {
+                if placements[i].contains(&w) {
+                    continue;
+                }
+                let payload =
+                    wire::encode_prepare_req(self.shards[i].image_id, &self.shards[i].image);
+                if self.workers[w].call_traced(Op::Prepare, &payload, "prepare", i, ctx).is_ok() {
+                    placements[i].insert(0, w);
+                    moved += 1;
+                }
+            }
+        }
+        if moved > 0 {
+            self.rebalanced_total.fetch_add(moved as u64, Ordering::Relaxed);
+        }
+        moved
     }
 
     /// Run one shard: standing replicas in placement order, then
     /// re-place onto any live worker (preferring workers that do not
     /// already hold the shard, then re-preparing on live holders — which
-    /// heals an evicted residency).
+    /// heals an evicted residency). `deadline`, when set, is checked
+    /// before every attempt so an expired request stops issuing fleet
+    /// RPCs instead of riding each retry to its timeout.
     #[allow(clippy::too_many_arguments)]
     fn run_shard(
         &self,
@@ -491,10 +866,20 @@ impl PreparedRemote {
         beta: f32,
         order: &[usize],
         ctx: Option<(u64, u64)>,
+        deadline: Option<Instant>,
     ) -> Result<ShardOutcome, String> {
         let t0 = Instant::now();
         let shard = &self.shards[i];
         let total = self.shards.len();
+        let expired = |last_err: &str| -> Option<String> {
+            match deadline {
+                Some(d) if Instant::now() >= d => Some(format!(
+                    "shard {i} of {total} deadline exceeded before completion \
+                     (last error: {last_err})"
+                )),
+                _ => None,
+            }
+        };
         let payload = wire::encode_execute_req(shard.image_id, n, alpha, beta, b, block);
         let mut retries = 0usize;
         let mut last_err = String::from("no replica placed");
@@ -523,6 +908,9 @@ impl PreparedRemote {
             if self.workers[w].is_dead() {
                 continue;
             }
+            if let Some(msg) = expired(&last_err) {
+                return Err(msg);
+            }
             match attempt(w) {
                 Ok(rows) => {
                     *block = rows;
@@ -537,13 +925,18 @@ impl PreparedRemote {
         }
 
         // Re-place: fresh workers first, then live current holders (a
-        // re-prepare on a holder heals an evicted residency).
-        let mut candidates: Vec<usize> = (0..self.workers.len())
-            .filter(|w| !order.contains(w) && !self.workers[*w].is_dead())
-            .collect();
-        candidates.extend(order.iter().copied().filter(|&w| !self.workers[w].is_dead()));
+        // re-prepare on a holder heals an evicted residency). Workers
+        // whose breaker is cooling down are skipped without consuming
+        // the half-open probe.
+        let usable = |w: &usize| !self.workers[*w].is_dead() && self.membership.would_admit(*w);
+        let mut candidates: Vec<usize> =
+            (0..self.workers.len()).filter(|w| !order.contains(w)).filter(usable).collect();
+        candidates.extend(order.iter().copied().filter(|w| usable(w)));
         let prepare_payload = wire::encode_prepare_req(shard.image_id, &shard.image);
         for w in candidates {
+            if let Some(msg) = expired(&last_err) {
+                return Err(msg);
+            }
             if let Err(e) =
                 self.workers[w].call_traced(Op::Prepare, &prepare_payload, "prepare", i, ctx)
             {
@@ -581,6 +974,17 @@ impl PreparedRemote {
     ) -> Result<ExecutionReport, BackendError> {
         check_shapes(&self.image, b, c, n)?;
         let ctx = trace::current_span_context();
+        // Scoped threads do not inherit thread-locals: read the caller's
+        // deadline here and hand the Copy value to every shard thread.
+        let deadline = current_call_deadline();
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                return Err(BackendError::Execution(
+                    "deadline exceeded before remote dispatch".to_string(),
+                ));
+            }
+        }
+        self.maybe_rebalance(ctx);
         let s = self.shards.len();
 
         let mut blocks = self.scratch.checkout(Vec::new);
@@ -602,7 +1006,7 @@ impl PreparedRemote {
                 .map(|(i, block)| {
                     let order_i = &order[i];
                     scope.spawn(move || {
-                        self.run_shard(i, block, b, n, alpha, beta, order_i, ctx)
+                        self.run_shard(i, block, b, n, alpha, beta, order_i, ctx, deadline)
                     })
                 })
                 .collect();
@@ -631,15 +1035,18 @@ impl PreparedRemote {
         }
 
         // Record re-placements so subsequent calls go straight to the
-        // new holders (dead holders are dropped from the list).
+        // new holders. Dead holders sink to the back of the list instead
+        // of being dropped: if the worker revives, its residency is
+        // reused without a re-register.
         let retries: usize = run.iter().map(|o| o.retries).sum();
         let replaced: usize = run.iter().filter(|o| o.replaced.is_some()).count();
         if replaced > 0 {
             let mut placements = self.placements.lock().unwrap();
             for (i, outcome) in run.iter().enumerate() {
                 if let Some(w) = outcome.replaced {
-                    placements[i].retain(|&old| old != w && !self.workers[old].is_dead());
+                    placements[i].retain(|&old| old != w);
                     placements[i].insert(0, w);
+                    placements[i].sort_by_key(|&old| self.workers[old].is_dead());
                 }
             }
         }
@@ -758,6 +1165,7 @@ mod tests {
             backend_spec: spec.to_string(),
             read_timeout: Duration::from_secs(5),
             write_timeout: Duration::from_secs(5),
+            ..WorkerConfig::default()
         };
         let worker = Worker::bind("127.0.0.1:0", &config).unwrap();
         let addr = worker.local_addr().unwrap().to_string();
@@ -782,6 +1190,9 @@ mod tests {
         let be =
             RemoteBackend::from_spec(Some("h1:1,timeout_ms=250")).unwrap();
         assert_eq!(be.timeout, Duration::from_millis(250));
+        let be = RemoteBackend::from_spec(Some("h1:1,heartbeat_ms=40")).unwrap();
+        assert_eq!(be.heartbeat, Duration::from_millis(40));
+        assert!(RemoteBackend::from_spec(Some("h1:1,heartbeat_ms=soon")).is_err());
         assert!(RemoteBackend::from_spec(None).is_err());
         assert!(RemoteBackend::from_spec(Some("")).is_err());
         assert!(RemoteBackend::from_spec(Some("replicas=2")).is_err());
@@ -870,6 +1281,7 @@ mod tests {
             backend_spec: "functional".to_string(),
             read_timeout: Duration::from_secs(5),
             write_timeout: Duration::from_secs(5),
+            ..WorkerConfig::default()
         };
         let doomed = Worker::bind("127.0.0.1:0", &doomed_config).unwrap();
         let doomed_addr = doomed.local_addr().unwrap().to_string();
@@ -878,7 +1290,10 @@ mod tests {
             std::thread::spawn(move || doomed.run(&cfg).unwrap())
         };
 
-        let spec = format!("{live},{doomed_addr},timeout_ms=2000");
+        // A long heartbeat keeps the test deterministic: liveness moves
+        // only through the execute path's own failures, never racing the
+        // background pinger.
+        let spec = format!("{live},{doomed_addr},timeout_ms=2000,heartbeat_ms=60000");
         let be = RemoteBackend::from_spec(Some(&spec)).unwrap();
         let mut rng = Rng::new(42);
         let coo = gen::random_uniform(40, 30, 0.2, &mut rng);
@@ -927,6 +1342,7 @@ mod tests {
             backend_spec: "functional".to_string(),
             read_timeout: Duration::from_secs(2),
             write_timeout: Duration::from_secs(2),
+            ..WorkerConfig::default()
         };
         let worker = Worker::bind("127.0.0.1:0", &cfg).unwrap();
         let addr = worker.local_addr().unwrap().to_string();
@@ -934,7 +1350,7 @@ mod tests {
             let cfg = cfg.clone();
             std::thread::spawn(move || worker.run(&cfg).unwrap())
         };
-        let spec = format!("{addr},timeout_ms=1000");
+        let spec = format!("{addr},timeout_ms=1000,heartbeat_ms=60000");
         let be = RemoteBackend::from_spec(Some(&spec)).unwrap();
         let mut rng = Rng::new(43);
         let coo = gen::random_uniform(20, 16, 0.25, &mut rng);
@@ -954,6 +1370,191 @@ mod tests {
         let msg = err.to_string();
         assert!(msg.contains("shard 0 of 1 on host"), "{msg}");
         assert_eq!(c, c0, "failed execution must leave C untouched");
+    }
+
+    #[test]
+    fn membership_tracks_liveness_and_breaker_transitions() {
+        let mb = Membership::new(vec!["127.0.0.1:1".into()], Duration::from_millis(100));
+        assert_eq!(mb.liveness(0), Liveness::Live);
+        assert!(mb.would_admit(0));
+        mb.record_failure(0);
+        assert_eq!(mb.liveness(0), Liveness::Suspect);
+        assert!(mb.would_admit(0), "suspect workers are still tried");
+        mb.record_failure(0);
+        mb.record_failure(0);
+        assert_eq!(mb.liveness(0), Liveness::Dead);
+        assert_eq!(mb.breaker_trips(), 1);
+        assert!(!mb.would_admit(0), "an open breaker rejects while cooling down");
+        assert!(!mb.admit_rpc(0));
+        mb.record_failure(0);
+        assert_eq!(mb.breaker_trips(), 1, "re-arming an open breaker is not a new trip");
+        mb.record_ok(0);
+        assert_eq!(mb.liveness(0), Liveness::Live);
+        assert!(mb.would_admit(0), "success closes the breaker");
+        assert_eq!(mb.transitions(), 3, "Live -> Suspect -> Dead -> Live");
+        assert_eq!(mb.epoch(), 3);
+    }
+
+    #[test]
+    fn breaker_fails_fast_on_an_unreachable_worker() {
+        // A port that refuses connections: bind a listener, note the
+        // address, drop it.
+        let refused = {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            listener.local_addr().unwrap().to_string()
+        };
+        let link = WorkerLink::new(refused, Duration::from_millis(200));
+        for _ in 0..BREAKER_THRESHOLD {
+            let err = link.call(Op::Ping, &[]).err().expect("unreachable worker must fail");
+            assert!(
+                !err.message().contains("circuit breaker"),
+                "pre-threshold calls reach the socket: {}",
+                err.message()
+            );
+        }
+        assert_eq!(link.liveness(), Liveness::Dead);
+        let err = link.call(Op::Ping, &[]).err().expect("breaker must reject");
+        assert!(
+            err.message().contains("circuit breaker open"),
+            "post-threshold calls fail fast: {}",
+            err.message()
+        );
+    }
+
+    #[test]
+    fn revived_worker_is_reused_without_re_register() {
+        let addrs = vec![spawn_worker("functional"), spawn_worker("functional")];
+        let be = RemoteBackend::from_spec(Some(&fleet_spec(
+            &addrs,
+            "timeout_ms=2000,heartbeat_ms=25",
+        )))
+        .unwrap();
+        let mut rng = Rng::new(45);
+        let coo = gen::random_uniform(30, 20, 0.2, &mut rng);
+        let image = Arc::new(preprocess(&coo, 2, 8, 3));
+        let handle = be.build(Arc::clone(&image)).unwrap();
+
+        // Falsely declare worker 1 dead. The worker is in fact alive, so
+        // the heartbeat must revive it — and because its placements were
+        // never discarded, the next execute reuses the residency it
+        // still holds with no re-prepare. (The loop guards against a
+        // heartbeat success interleaving with the injected failures.)
+        for _ in 0..100 {
+            handle.membership.record_failure(1);
+            handle.membership.record_failure(1);
+            handle.membership.record_failure(1);
+            if handle.membership.breaker_trips() >= 1 {
+                break;
+            }
+        }
+        assert!(handle.membership.breaker_trips() >= 1, "injected failures must trip");
+        let mut revived = false;
+        for _ in 0..400 {
+            if handle.membership.liveness(1) == Liveness::Live {
+                revived = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(revived, "heartbeat must revive a falsely-dead worker");
+
+        let n = 2;
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let mut got = c0.clone();
+        let report = handle.execute_with_report(&b, &mut got, n, 1.0, 0.0).unwrap();
+        let mut want = c0.clone();
+        coo.spmm_reference(&b, &mut want, n, 1.0, 0.0);
+        assert_allclose(&got, &want, 2e-4, 2e-4).unwrap();
+
+        let remote = report.remote.unwrap();
+        assert_eq!(remote.retries, 0, "revived worker serves its old residency: {remote:?}");
+        assert_eq!(remote.replaced, 0, "{remote:?}");
+        assert_eq!(remote.rebalanced, 0, "nothing to move, nothing re-registered: {remote:?}");
+        assert_eq!(remote.live_workers, 2, "{remote:?}");
+        assert!(remote.transitions >= 2, "{remote:?}");
+        assert!(remote.breaker_trips >= 1, "{remote:?}");
+    }
+
+    #[test]
+    fn heartbeat_death_rebalances_placements_proactively() {
+        let addrs = vec![spawn_worker("functional"), spawn_worker("functional")];
+        let be = RemoteBackend::from_spec(Some(&fleet_spec(
+            &addrs,
+            "timeout_ms=2000,heartbeat_ms=25",
+        )))
+        .unwrap();
+        let mut rng = Rng::new(46);
+        let coo = gen::random_uniform(40, 30, 0.2, &mut rng);
+        let image = Arc::new(preprocess(&coo, 2, 8, 3));
+        let handle = be.build(Arc::clone(&image)).unwrap();
+        assert_eq!(handle.shards.len(), 2, "one shard per worker");
+
+        // Kill worker 1 and wait for the heartbeat to notice.
+        {
+            let link = WorkerLink::new(addrs[1].clone(), Duration::from_secs(2));
+            link.call(Op::Shutdown, &[]).unwrap();
+        }
+        let mut dead = false;
+        for _ in 0..400 {
+            if handle.membership.liveness(1) == Liveness::Dead {
+                dead = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(dead, "heartbeat must mark a killed worker dead");
+
+        // The next execute rebalances the orphaned shard onto the
+        // survivor *before* fan-out, so no execute-path retry is needed.
+        let n = 2;
+        let b: Vec<f32> = (0..coo.k * n).map(|_| rng.normal()).collect();
+        let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let mut got = c0.clone();
+        let report = handle.execute_with_report(&b, &mut got, n, 2.0, -1.0).unwrap();
+        let mut want = c0.clone();
+        coo.spmm_reference(&b, &mut want, n, 2.0, -1.0);
+        assert_allclose(&got, &want, 2e-4, 2e-4).unwrap();
+
+        let remote = report.remote.unwrap();
+        assert!(remote.rebalanced >= 1, "orphaned shard re-placed proactively: {remote:?}");
+        assert_eq!(remote.retries, 0, "rebalance beats reactive failover: {remote:?}");
+        assert_eq!(remote.replaced, 0, "{remote:?}");
+        assert_eq!(remote.live_workers, 1, "{remote:?}");
+        assert!(remote.breaker_trips >= 1, "{remote:?}");
+        assert!(remote.transitions >= 2, "{remote:?}");
+    }
+
+    #[test]
+    fn expired_deadline_short_circuits_before_fleet_rpcs() {
+        let addrs = vec![spawn_worker("functional")];
+        let be =
+            RemoteBackend::from_spec(Some(&fleet_spec(&addrs, "heartbeat_ms=60000"))).unwrap();
+        let mut rng = Rng::new(47);
+        let coo = gen::random_uniform(20, 16, 0.25, &mut rng);
+        let image = Arc::new(preprocess(&coo, 2, 8, 3));
+        let handle = be.build(Arc::clone(&image)).unwrap();
+
+        let n = 2;
+        let b = vec![1.0f32; coo.k * n];
+        let c0: Vec<f32> = (0..coo.m * n).map(|_| rng.normal()).collect();
+        let mut c = c0.clone();
+        {
+            let _guard = push_call_deadline(Instant::now());
+            assert!(current_call_deadline().is_some());
+            let err = handle.execute(&b, &mut c, n, 1.0, 0.0).unwrap_err();
+            assert!(
+                err.to_string().contains("deadline exceeded"),
+                "typed deadline error, got: {err}"
+            );
+            assert_eq!(c, c0, "expired request must leave C untouched");
+        }
+        // Guard dropped: the deadline is gone and the same call runs.
+        assert!(current_call_deadline().is_none());
+        handle.execute(&b, &mut c, n, 1.0, 0.0).unwrap();
+        let mut want = c0.clone();
+        coo.spmm_reference(&b, &mut want, n, 1.0, 0.0);
+        assert_allclose(&c, &want, 2e-4, 2e-4).unwrap();
     }
 
     #[test]

@@ -391,6 +391,12 @@ impl<'a> ByteReader<'a> {
 
 /// Write one frame: header ([`MAGIC`], [`WIRE_VERSION`], opcode, length)
 /// followed by the payload, then flush.
+///
+/// Fault-injection hook: when a [`super::fault::FaultPlan`] is installed
+/// on this thread ([`super::fault::install_client_plan`]), its
+/// corrupt-frame decision may flip one header byte and its trickle
+/// directive slices the payload write — the client-side counterpart of
+/// wrapping a worker's sockets in [`super::fault::FaultStream`].
 pub fn write_frame(w: &mut impl Write, op: Op, payload: &[u8]) -> Result<(), WireError> {
     if payload.len() as u64 > MAX_FRAME_BYTES as u64 {
         return Err(WireError::TooLarge(payload.len() as u64));
@@ -400,8 +406,21 @@ pub fn write_frame(w: &mut impl Write, op: Op, payload: &[u8]) -> Result<(), Wir
     header[4..6].copy_from_slice(&WIRE_VERSION.to_le_bytes());
     header[6..8].copy_from_slice(&(op as u16).to_le_bytes());
     header[8..12].copy_from_slice(&(payload.len() as u32).to_le_bytes());
-    w.write_all(&header)?;
-    w.write_all(payload)?;
+    if let Some(plan) = super::fault::client_plan() {
+        plan.corrupt_frame_header(&mut header);
+        w.write_all(&header)?;
+        if let Some((piece, pause)) = plan.trickle() {
+            for chunk in payload.chunks(piece.max(1)) {
+                w.write_all(chunk)?;
+                std::thread::sleep(pause);
+            }
+        } else {
+            w.write_all(payload)?;
+        }
+    } else {
+        w.write_all(&header)?;
+        w.write_all(payload)?;
+    }
     w.flush()?;
     Ok(())
 }
@@ -409,7 +428,14 @@ pub fn write_frame(w: &mut impl Write, op: Op, payload: &[u8]) -> Result<(), Wir
 /// Read one frame, returning `None` on a clean EOF *between* frames (the
 /// peer closed an idle connection). EOF mid-header or mid-payload is a
 /// [`WireError::Truncated`].
+///
+/// Fault-injection hook: a thread-installed
+/// [`super::fault::FaultPlan`]'s delay-before-read and drop-connection
+/// directives run before the header read.
 pub fn read_frame_opt(r: &mut impl Read) -> Result<Option<(Op, Vec<u8>)>, WireError> {
+    if let Some(plan) = super::fault::client_plan() {
+        plan.before_read()?;
+    }
     let mut header = [0u8; HEADER_BYTES];
     let mut filled = 0;
     while filled < HEADER_BYTES {

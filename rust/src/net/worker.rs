@@ -21,12 +21,13 @@
 //! typed error on the client, never a hung socket.
 
 use std::collections::HashMap;
-use std::io::Write;
-use std::net::{TcpListener, TcpStream};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use super::fault::{FaultPlan, FaultSpec, FaultStream};
 use super::wire::{
     self, decode_execute_req, decode_prepare_req, encode_cost, encode_execute_ok,
     encode_stats_ok, ByteReader, ByteWriter, Op, WireError, WorkerStats,
@@ -54,6 +55,11 @@ pub struct WorkerConfig {
     /// [`WireError`], never an OOM-killed worker. `None` (the default)
     /// leaves residency unbounded.
     pub residency: Option<ResidencyPolicy>,
+    /// Optional seeded fault plan (`sextans worker --fault <spec>`):
+    /// refused accepts, delayed/dropped reads, corrupted reply headers,
+    /// trickled replies, and injected per-RPC failures — all
+    /// deterministic from the spec's seed so chaos runs reproduce.
+    pub fault: Option<FaultSpec>,
 }
 
 impl Default for WorkerConfig {
@@ -63,6 +69,7 @@ impl Default for WorkerConfig {
             read_timeout: Duration::from_secs(30),
             write_timeout: Duration::from_secs(30),
             residency: None,
+            fault: None,
         }
     }
 }
@@ -140,8 +147,10 @@ impl Worker {
 
     /// Accept and serve connections until a Shutdown RPC arrives. Each
     /// connection gets its own thread; a connection-level protocol error
-    /// closes that connection only.
+    /// closes that connection only. A configured fault plan wraps every
+    /// accepted stream (and may refuse the accept outright).
     pub fn run(self, config: &WorkerConfig) -> std::io::Result<()> {
+        let plan = config.fault.as_ref().map(|spec| Arc::new(FaultPlan::new(spec.clone())));
         for conn in self.listener.incoming() {
             if self.state.shutdown.load(Ordering::SeqCst) {
                 break;
@@ -150,11 +159,31 @@ impl Worker {
                 Ok(s) => s,
                 Err(_) => continue,
             };
+            if let Some(plan) = &plan {
+                if plan.refuse_accept() {
+                    // Injected refusal: close the connection before any
+                    // frame flows — the client sees a clean reset.
+                    drop(stream);
+                    continue;
+                }
+            }
             let _ = stream.set_read_timeout(Some(config.read_timeout));
             let _ = stream.set_write_timeout(Some(config.write_timeout));
             let _ = stream.set_nodelay(true);
             let state = Arc::clone(&self.state);
-            std::thread::spawn(move || serve_connection(stream, &state));
+            let plan = plan.clone();
+            std::thread::spawn(move || {
+                // The shutdown self-connect needs the raw address, which
+                // a wrapped stream no longer exposes: capture it first.
+                let self_addr = stream.local_addr().ok();
+                match plan {
+                    Some(p) => {
+                        let faulty = FaultStream::new(stream, Arc::clone(&p));
+                        serve_connection(faulty, &state, Some(&p), self_addr)
+                    }
+                    None => serve_connection(stream, &state, None, self_addr),
+                }
+            });
             if self.state.shutdown.load(Ordering::SeqCst) {
                 break;
             }
@@ -164,7 +193,14 @@ impl Worker {
 }
 
 /// Serve one connection's request loop until EOF, error, or shutdown.
-fn serve_connection(mut stream: TcpStream, state: &Arc<WorkerState>) {
+/// Generic over the stream so a [`FaultStream`]-wrapped connection runs
+/// the exact same protocol loop as a clean [`TcpStream`].
+fn serve_connection<S: Read + Write>(
+    mut stream: S,
+    state: &Arc<WorkerState>,
+    plan: Option<&FaultPlan>,
+    self_addr: Option<SocketAddr>,
+) {
     loop {
         let (op, payload) = match wire::read_frame_opt(&mut stream) {
             Ok(Some(frame)) => frame,
@@ -178,7 +214,14 @@ fn serve_connection(mut stream: TcpStream, state: &Arc<WorkerState>) {
         if state.shutdown.load(Ordering::SeqCst) {
             return;
         }
-        let reply = handle_request(op, &payload, state);
+        // Injected per-RPC failure: the request is decoded fine but the
+        // worker answers with a typed error instead of doing the work.
+        let reply = match plan {
+            Some(p) if p.fail_rpc() => {
+                Err(format!("injected fault: {op:?} failed by plan"))
+            }
+            _ => handle_request(op, &payload, state),
+        };
         let (reply_op, reply_payload) = match &reply {
             Ok(bytes) => (Op::Ok, bytes.as_slice()),
             Err(msg) => (Op::Err, msg.as_bytes()),
@@ -189,7 +232,7 @@ fn serve_connection(mut stream: TcpStream, state: &Arc<WorkerState>) {
         if op == Op::Shutdown {
             let _ = stream.flush();
             // Unblock the accept loop so `run` observes the flag.
-            if let Ok(addr) = stream.local_addr() {
+            if let Some(addr) = self_addr {
                 let _ = TcpStream::connect(addr);
             }
             return;
@@ -310,7 +353,7 @@ mod tests {
             backend_spec: spec.to_string(),
             read_timeout: Duration::from_secs(5),
             write_timeout: Duration::from_secs(5),
-            residency: None,
+            ..WorkerConfig::default()
         };
         let worker = Worker::bind("127.0.0.1:0", &config).unwrap();
         let addr = worker.local_addr().unwrap();
@@ -396,6 +439,7 @@ mod tests {
             read_timeout: Duration::from_secs(5),
             write_timeout: Duration::from_secs(5),
             residency: Some(ResidencyPolicy { max_resident_bytes: 1, scratch_idle: None }),
+            ..WorkerConfig::default()
         };
         let worker = Worker::bind("127.0.0.1:0", &config).unwrap();
         let addr = worker.local_addr().unwrap();
@@ -426,6 +470,7 @@ mod tests {
             read_timeout: Duration::from_secs(5),
             write_timeout: Duration::from_secs(5),
             residency: Some(ResidencyPolicy { max_resident_bytes: 1, scratch_idle: None }),
+            ..WorkerConfig::default()
         };
         let worker = Worker::bind("127.0.0.1:0", &config).unwrap();
         let addr = worker.local_addr().unwrap();
@@ -444,6 +489,60 @@ mod tests {
         assert!(rpc(&mut conn, Op::Ping, &[]).unwrap().is_empty());
         rpc(&mut conn, Op::Shutdown, &[]).unwrap();
         join.join().unwrap();
+    }
+
+    #[test]
+    fn injected_fail_nth_fails_exactly_every_nth_rpc() {
+        let config = WorkerConfig {
+            backend_spec: "functional".to_string(),
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            fault: Some(FaultSpec::parse("seed=7,fail-nth=2").unwrap()),
+            ..WorkerConfig::default()
+        };
+        let worker = Worker::bind("127.0.0.1:0", &config).unwrap();
+        let addr = worker.local_addr().unwrap();
+        let run_config = config.clone();
+        let join = std::thread::spawn(move || worker.run(&run_config).unwrap());
+        let mut conn = connect(addr);
+
+        assert!(rpc(&mut conn, Op::Ping, &[]).is_ok(), "rpc 1 passes");
+        let err = rpc(&mut conn, Op::Ping, &[]).unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "rpc 2 injected: {err}");
+        assert!(rpc(&mut conn, Op::Ping, &[]).is_ok(), "rpc 3 passes");
+        let err = rpc(&mut conn, Op::Ping, &[]).unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "rpc 4 injected: {err}");
+
+        rpc(&mut conn, Op::Shutdown, &[]).unwrap();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn corrupting_worker_replies_surfaces_as_typed_wire_errors() {
+        // corrupt=1 flips a header byte in every reply frame the worker
+        // writes; the client must always get a typed WireError, never a
+        // misparsed payload.
+        let config = WorkerConfig {
+            backend_spec: "functional".to_string(),
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            fault: Some(FaultSpec::parse("seed=9,corrupt=1").unwrap()),
+            ..WorkerConfig::default()
+        };
+        let worker = Worker::bind("127.0.0.1:0", &config).unwrap();
+        let addr = worker.local_addr().unwrap();
+        let run_config = config.clone();
+        std::thread::spawn(move || worker.run(&run_config).unwrap());
+        let mut conn = connect(addr);
+
+        let err = rpc(&mut conn, Op::Ping, &[]).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                WireError::BadMagic(_) | WireError::Version { .. } | WireError::BadOpcode(_)
+            ),
+            "corrupted header must decode to a typed frame error, got {err:?}"
+        );
     }
 
     #[test]

@@ -30,6 +30,21 @@ pub enum ClientError {
     /// The server replied with an error frame (bad request, unknown
     /// ticket, pipeline failure, ...).
     Server(String),
+    /// A retry loop gave up: every attempt failed and the budget ran
+    /// out. Carries the retry telemetry the final attempt alone cannot —
+    /// how many attempts ran, how long the loop slept between them, and
+    /// the last address that failed (when known).
+    RetriesExhausted {
+        /// Total attempts made (the first try plus every retry).
+        attempts: u32,
+        /// Total backoff slept across all retries.
+        total_backoff: std::time::Duration,
+        /// Address of the last failing attempt, when the caller retried
+        /// against a known endpoint.
+        last_addr: Option<String>,
+        /// The final attempt's error.
+        last: Box<ClientError>,
+    },
 }
 
 impl fmt::Display for ClientError {
@@ -38,6 +53,29 @@ impl fmt::Display for ClientError {
             ClientError::Wire(e) => write!(f, "wire: {e}"),
             ClientError::Shed { reason, message } => write!(f, "shed ({reason}): {message}"),
             ClientError::Server(msg) => write!(f, "server: {msg}"),
+            ClientError::RetriesExhausted { attempts, total_backoff, last_addr, last } => {
+                write!(
+                    f,
+                    "retries exhausted after {attempts} attempts ({:.0} ms backoff",
+                    total_backoff.as_secs_f64() * 1e3,
+                )?;
+                if let Some(addr) = last_addr {
+                    write!(f, ", last addr {addr}")?;
+                }
+                write!(f, "): {last}")
+            }
+        }
+    }
+}
+
+impl ClientError {
+    /// The terminal failure for classification: a
+    /// [`ClientError::RetriesExhausted`] unwraps to its final attempt's
+    /// error, everything else is itself.
+    pub fn terminal(&self) -> &ClientError {
+        match self {
+            ClientError::RetriesExhausted { last, .. } => last.terminal(),
+            other => other,
         }
     }
 }
@@ -160,10 +198,34 @@ impl FrontClient {
         c: &[f32],
         col_block: usize,
     ) -> Result<u64, ClientError> {
+        self.submit_deadline(image, n, alpha, beta, b, c, col_block, 0)
+    }
+
+    /// [`FrontClient::submit`] with a deadline budget in milliseconds
+    /// (`0` = no deadline). The server stamps an absolute deadline when
+    /// the Submit frame arrives; a request still queued when it expires
+    /// comes back as [`ClientError::Shed`] with
+    /// [`ShedReason::DeadlineExceeded`] (at admission) or as a pipeline
+    /// error naming the stage that shed it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_deadline(
+        &mut self,
+        image: &ImageInfo,
+        n: usize,
+        alpha: f32,
+        beta: f32,
+        b: &[f32],
+        c: &[f32],
+        col_block: usize,
+        deadline_ms: u64,
+    ) -> Result<u64, ClientError> {
         let (m, k) = (image.m as usize, image.k as usize);
         assert_eq!(b.len(), k * n, "B must be row-major K x n");
         assert_eq!(c.len(), m * n, "C must be row-major M x n");
-        let payload = self.rpc(Op::Submit, &proto::encode_submit(image.id, n, alpha, beta))?;
+        let payload = self.rpc(
+            Op::Submit,
+            &proto::encode_submit(image.id, n, alpha, beta, deadline_ms),
+        )?;
         let ticket = proto::decode_u64(&payload)?;
         let step = if col_block == 0 { n } else { col_block.min(n) };
         let mut col0 = 0usize;
@@ -233,6 +295,12 @@ impl FrontClient {
                         String::from_utf8_lossy(&payload).into_owned(),
                     ))
                 }
+                Op::Shed => {
+                    // Post-admission shed (deadline expiry in the batcher
+                    // or at dispatch pickup) — typed, not a server error.
+                    let (reason, message) = proto::decode_shed(&payload)?;
+                    return Err(ClientError::Shed { reason, message });
+                }
                 other => {
                     return Err(ClientError::Wire(WireError::Malformed(format!(
                         "unexpected {other:?} during fetch"
@@ -255,6 +323,25 @@ impl FrontClient {
         col_block: usize,
     ) -> Result<FrontResponse, ClientError> {
         let ticket = self.submit(image, n, alpha, beta, b, c, col_block)?;
+        self.fetch(ticket, image.m as usize, n, col_block)
+    }
+
+    /// [`FrontClient::call`] with a deadline budget in milliseconds
+    /// (`0` = no deadline).
+    #[allow(clippy::too_many_arguments)]
+    pub fn call_deadline(
+        &mut self,
+        image: &ImageInfo,
+        n: usize,
+        alpha: f32,
+        beta: f32,
+        b: &[f32],
+        c: &[f32],
+        col_block: usize,
+        deadline_ms: u64,
+    ) -> Result<FrontResponse, ClientError> {
+        let ticket =
+            self.submit_deadline(image, n, alpha, beta, b, c, col_block, deadline_ms)?;
         self.fetch(ticket, image.m as usize, n, col_block)
     }
 

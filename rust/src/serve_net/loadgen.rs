@@ -176,8 +176,8 @@ pub struct LoadReport {
     /// Requests that completed with a result.
     pub completed: usize,
     /// Typed sheds by reason, `[queue_full, image_quota, draining,
-    /// connection_limit]`.
-    pub sheds: [usize; 4],
+    /// connection_limit, deadline_exceeded]`.
+    pub sheds: [usize; 5],
     /// Non-shed failures.
     pub errors: usize,
     /// Server-measured admission→batch wait.
@@ -227,7 +227,8 @@ impl LoadReport {
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "offered {} | completed {} | shed {} (queue {}, quota {}, drain {}, conn {}) | errors {}\n",
+            "offered {} | completed {} | shed {} (queue {}, quota {}, drain {}, conn {}, \
+             deadline {}) | errors {}\n",
             self.offered,
             self.completed,
             self.shed_total(),
@@ -235,6 +236,7 @@ impl LoadReport {
             self.sheds[1],
             self.sheds[2],
             self.sheds[3],
+            self.sheds[4],
             self.errors,
         ));
         out.push_str(&format!(
@@ -493,7 +495,7 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadReport, ClientError> {
     // Aggregate.
     let (mut queue, mut batch, mut prepare, mut exec, mut e2e) =
         (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
-    let mut sheds = [0usize; 4];
+    let mut sheds = [0usize; 5];
     let mut errors = 0usize;
     let mut flops_sum = 0u128;
     let mut by_image: Vec<(u64, usize)> = Vec::new();
@@ -565,7 +567,7 @@ mod tests {
         let report = LoadReport {
             offered: 10,
             completed: 8,
-            sheds: [2, 0, 0, 0],
+            sheds: [2, 0, 0, 0, 0],
             errors: 0,
             queue: StageStats { count: 8, p50_ns: 100, p95_ns: 200, p99_ns: 300 },
             batch: StageStats { count: 8, p50_ns: 100, p95_ns: 200, p99_ns: 300 },

@@ -30,6 +30,9 @@ pub enum ShedReason {
     Draining = 2,
     /// The accept-side connection gate is full.
     ConnectionLimit = 3,
+    /// The request's absolute deadline passed before an execute could
+    /// run — shed at admission, batch dequeue, or dispatch pickup.
+    DeadlineExceeded = 4,
 }
 
 impl ShedReason {
@@ -40,6 +43,7 @@ impl ShedReason {
             1 => ShedReason::ImageQuota,
             2 => ShedReason::Draining,
             3 => ShedReason::ConnectionLimit,
+            4 => ShedReason::DeadlineExceeded,
             other => {
                 return Err(WireError::Malformed(format!("unknown shed reason {other}")))
             }
@@ -53,6 +57,7 @@ impl ShedReason {
             ShedReason::ImageQuota => "image_quota",
             ShedReason::Draining => "draining",
             ShedReason::ConnectionLimit => "connection_limit",
+            ShedReason::DeadlineExceeded => "deadline_exceeded",
         }
     }
 }
@@ -152,26 +157,37 @@ pub fn decode_register_ok(bytes: &[u8]) -> Result<ImageInfo, WireError> {
 // Chunked submit
 // ---------------------------------------------------------------------------
 
-/// Encode a Submit request: image id, N, scalars. Panels follow in
+/// Encode a Submit request: image id, N, scalars, and the request's
+/// deadline budget in milliseconds (`0` = no deadline). The server stamps
+/// an absolute deadline at receipt and the pipeline checks it at
+/// admission, batch dequeue, and dispatch pickup. Panels follow in
 /// SubmitChunk frames.
-pub fn encode_submit(image_id: u64, n: usize, alpha: f32, beta: f32) -> Vec<u8> {
+pub fn encode_submit(
+    image_id: u64,
+    n: usize,
+    alpha: f32,
+    beta: f32,
+    deadline_ms: u64,
+) -> Vec<u8> {
     let mut w = ByteWriter::new();
     w.put_u64(image_id);
     w.put_u64(n as u64);
     w.put_f32(alpha);
     w.put_f32(beta);
+    w.put_u64(deadline_ms);
     w.into_bytes()
 }
 
-/// Decode a Submit request into (image id, n, alpha, beta).
-pub fn decode_submit(bytes: &[u8]) -> Result<(u64, usize, f32, f32), WireError> {
+/// Decode a Submit request into (image id, n, alpha, beta, deadline_ms).
+pub fn decode_submit(bytes: &[u8]) -> Result<(u64, usize, f32, f32, u64), WireError> {
     let mut r = ByteReader::new(bytes);
     let id = r.u64()?;
     let n = r.len64()?;
     let alpha = r.f32()?;
     let beta = r.f32()?;
+    let deadline_ms = r.u64()?;
     r.finish()?;
-    Ok((id, n, alpha, beta))
+    Ok((id, n, alpha, beta, deadline_ms))
 }
 
 /// Encode a SubmitChunk request: one column block of the B and C panels.
@@ -398,8 +414,9 @@ mod tests {
 
     #[test]
     fn submit_codecs_roundtrip() {
-        let (id, n, alpha, beta) = decode_submit(&encode_submit(9, 4, 1.5, -0.5)).unwrap();
-        assert_eq!((id, n, alpha, beta), (9, 4, 1.5, -0.5));
+        let (id, n, alpha, beta, deadline_ms) =
+            decode_submit(&encode_submit(9, 4, 1.5, -0.5, 250)).unwrap();
+        assert_eq!((id, n, alpha, beta, deadline_ms), (9, 4, 1.5, -0.5, 250));
         let b = vec![1.0f32, 2.0, 3.0, 4.0];
         let c = vec![-1.0f32, -2.0];
         let (t, col0, ncols, b2, c2) =

@@ -83,6 +83,8 @@ impl RetryPolicy {
             ClientError::Wire(_) => true,
             ClientError::Shed { .. } => self.retry_sheds,
             ClientError::Server(_) => false,
+            // Never nest retry loops: an exhausted budget is final.
+            ClientError::RetriesExhausted { .. } => false,
         }
     }
 }
@@ -100,6 +102,13 @@ fn splitmix64(x: u64) -> u64 {
 /// sockets or clocks. Generic over the connection type for the same
 /// reason; production callers pass [`FrontClient`] closures (see
 /// [`call_with_retry`]).
+///
+/// A failure on the very first attempt (nothing retried — a typed shed
+/// under the default policy, a server error) returns that error raw.
+/// Once at least one retry ran, giving up returns
+/// [`ClientError::RetriesExhausted`] instead, carrying the attempt
+/// count, the total backoff slept, and the final error — the telemetry a
+/// caller needs to distinguish "down hard" from "flaked once".
 pub fn retry_loop<Conn, T>(
     policy: &RetryPolicy,
     mut connect: impl FnMut() -> Result<Conn, ClientError>,
@@ -108,6 +117,7 @@ pub fn retry_loop<Conn, T>(
 ) -> Result<T, ClientError> {
     let mut conn: Option<Conn> = None;
     let mut attempt = 0u32;
+    let mut total_backoff = Duration::ZERO;
     loop {
         let result = if let Some(c) = conn.as_mut() {
             op(c)
@@ -124,13 +134,24 @@ pub fn retry_loop<Conn, T>(
             Ok(v) => return Ok(v),
             Err(e) => {
                 if !policy.should_retry(&e, attempt) {
-                    return Err(e);
+                    return Err(if attempt == 0 {
+                        e
+                    } else {
+                        ClientError::RetriesExhausted {
+                            attempts: attempt + 1,
+                            total_backoff,
+                            last_addr: None,
+                            last: Box::new(e),
+                        }
+                    });
                 }
                 if matches!(e, ClientError::Wire(_)) {
                     // Transport state is unknowable: reconnect.
                     conn = None;
                 }
-                sleep(policy.backoff(attempt));
+                let backoff = policy.backoff(attempt);
+                total_backoff += backoff;
+                sleep(backoff);
                 attempt += 1;
             }
         }
@@ -139,7 +160,9 @@ pub fn retry_loop<Conn, T>(
 
 /// Submit + fetch one request with retries: each attempt connects fresh
 /// if needed and runs [`FrontClient::call`]. Safe to retry because SpMM
-/// requests are pure reads of the registered image.
+/// requests are pure reads of the registered image. An exhausted budget
+/// comes back as [`ClientError::RetriesExhausted`] with `addr` stamped
+/// as the last failing address.
 #[allow(clippy::too_many_arguments)]
 pub fn call_with_retry(
     policy: &RetryPolicy,
@@ -159,6 +182,17 @@ pub fn call_with_retry(
         |client| client.call(image, n, alpha, beta, b, c, col_block),
         std::thread::sleep,
     )
+    .map_err(|e| match e {
+        ClientError::RetriesExhausted { attempts, total_backoff, last, .. } => {
+            ClientError::RetriesExhausted {
+                attempts,
+                total_backoff,
+                last_addr: Some(addr.to_string()),
+                last,
+            }
+        }
+        other => other,
+    })
 }
 
 #[cfg(test)]
@@ -238,7 +272,7 @@ mod tests {
     }
 
     #[test]
-    fn exhausted_budget_returns_the_last_error() {
+    fn exhausted_budget_returns_retry_telemetry_with_the_last_error() {
         let p = RetryPolicy { max_retries: 2, ..RetryPolicy::default() };
         let mut calls = 0u32;
         let mut sleeps = 0u32;
@@ -252,8 +286,16 @@ mod tests {
             |_| sleeps += 1,
         )
         .unwrap_err();
-        assert!(matches!(err, ClientError::Wire(_)));
-        assert_eq!(calls, 1 + p.max_retries, "first attempt plus max_retries");
+        let ClientError::RetriesExhausted { attempts, total_backoff, last_addr, last } = err
+        else {
+            panic!("an exhausted retry budget must carry its telemetry");
+        };
+        assert_eq!(attempts, 1 + p.max_retries, "first attempt plus max_retries");
+        assert_eq!(total_backoff, p.backoff(0) + p.backoff(1));
+        assert_eq!(last_addr, None, "retry_loop is address-agnostic");
+        assert!(matches!(*last, ClientError::Wire(_)));
+        assert!(matches!(last.terminal(), ClientError::Wire(_)));
+        assert_eq!(calls, 1 + p.max_retries);
         assert_eq!(sleeps, p.max_retries);
     }
 

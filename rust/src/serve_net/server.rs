@@ -247,6 +247,10 @@ struct PendingSubmit {
     c: Vec<f32>,
     covered: Vec<bool>,
     t_begin: Instant,
+    /// Absolute deadline stamped at Submit receipt from the frame's
+    /// `deadline_ms` budget (`None` when the budget was 0). The upload
+    /// time of the panel chunks counts against it.
+    deadline: Option<Instant>,
 }
 
 /// Per-connection staging for streamed uploads.
@@ -411,7 +415,7 @@ fn run_request(
             if state.draining.load(Ordering::SeqCst) {
                 return Ok(shed_draining());
             }
-            let (image_id, n, alpha, beta) = proto::decode_submit(payload)?;
+            let (image_id, n, alpha, beta, deadline_ms) = proto::decode_submit(payload)?;
             let image = state
                 .images
                 .lock()
@@ -444,6 +448,8 @@ fn run_request(
                     c: vec![0.0; c_elems],
                     covered: vec![false; covered_elems],
                     t_begin: Instant::now(),
+                    deadline: (deadline_ms > 0)
+                        .then(|| Instant::now() + Duration::from_millis(deadline_ms)),
                 },
             );
             Ok(Reply::Ok(proto::encode_u64(ticket)))
@@ -588,6 +594,7 @@ fn enter_pipeline(ticket: u64, sub: PendingSubmit, state: &Arc<FrontState>) -> R
             n: sub.n,
             alpha: sub.alpha,
             beta: sub.beta,
+            deadline: sub.deadline,
         })
     };
     drop(guard);
@@ -601,6 +608,7 @@ fn enter_pipeline(ticket: u64, sub: PendingSubmit, state: &Arc<FrontState>) -> R
             let reason = match kind {
                 RejectKind::QueueFull => Some(ShedReason::QueueFull),
                 RejectKind::ImageQuota => Some(ShedReason::ImageQuota),
+                RejectKind::DeadlineExceeded => Some(ShedReason::DeadlineExceeded),
                 // Pre-pipeline refusals that are not load (shape
                 // mismatch) stay plain errors.
                 RejectKind::ShapeMismatch => None,
@@ -676,6 +684,31 @@ fn handle_await(
             }
         },
     };
+    // A request shed after admission (deadline expiry in the batcher or
+    // at dispatch pickup) surfaces as a typed Shed frame, same as a
+    // synchronous admission shed — never as a generic error string.
+    if let Some(kind) = resp.rejected {
+        let reason = match kind {
+            RejectKind::QueueFull => Some(ShedReason::QueueFull),
+            RejectKind::ImageQuota => Some(ShedReason::ImageQuota),
+            RejectKind::DeadlineExceeded => Some(ShedReason::DeadlineExceeded),
+            RejectKind::ShapeMismatch => None,
+        };
+        if let Some(reason) = reason {
+            let msg = resp.error.clone().unwrap_or_else(|| "request shed".into());
+            let alive = wire::write_frame(stream, Op::Shed, &proto::encode_shed(reason, &msg))
+                .is_ok();
+            state.completed.fetch_add(1, Ordering::Relaxed);
+            emit_frontend_span(
+                state,
+                ticket.trace,
+                ticket.t_begin,
+                ticket.image,
+                Some(reason.as_str()),
+            );
+            return alive;
+        }
+    }
     let ok = AwaitOk {
         queue_ns: resp.timing.queue.as_nanos() as u64,
         batch_ns: resp.timing.batch.as_nanos() as u64,

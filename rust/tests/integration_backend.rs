@@ -147,6 +147,7 @@ fn coordinator_serves_native_backend_without_artifacts() {
         n,
         alpha: 1.25,
         beta: -0.75,
+        deadline: None,
     });
     assert!(resp.error.is_none());
     assert_allclose(&resp.c, &want, 2e-4, 2e-4).unwrap();

@@ -28,6 +28,62 @@ use sextans::prop::assert_allclose;
 use sextans::sched::preprocess;
 use sextans::sparse::{gen, rng::Rng, Coo};
 
+/// Bound on any single child-process readiness wait.
+const READY_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// Read the child's stdout until a line starting with `prefix` appears,
+/// bounded by [`READY_TIMEOUT`]. On timeout or stdout EOF (the child
+/// died or never became ready) the child is killed and the test panics
+/// with whatever it wrote to stderr — a wedged spawn can never strand
+/// the suite in a silent infinite wait. Returns the first whitespace
+/// token after the prefix plus the live line channel (keep draining it
+/// so the child can never block on a full pipe).
+fn await_readiness(
+    child: &mut Child,
+    prefix: &str,
+) -> (String, std::sync::mpsc::Receiver<String>) {
+    let stdout = child.stdout.take().expect("child stdout is piped");
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        for line in BufReader::new(stdout).lines() {
+            let Ok(line) = line else { break };
+            if tx.send(line).is_err() {
+                break;
+            }
+        }
+    });
+    let deadline = Instant::now() + READY_TIMEOUT;
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(left) {
+            Ok(line) => {
+                if let Some(rest) = line.strip_prefix(prefix) {
+                    let token = rest
+                        .split_whitespace()
+                        .next()
+                        .expect("token after the readiness prefix")
+                        .to_string();
+                    return (token, rx);
+                }
+            }
+            Err(_) => {
+                // Timeout, or the child exited before its readiness line.
+                let _ = child.kill();
+                let mut err = String::new();
+                if let Some(stderr) = child.stderr.take() {
+                    use std::io::Read;
+                    let _ = std::io::BufReader::new(stderr).read_to_string(&mut err);
+                }
+                let _ = child.wait();
+                panic!(
+                    "child never printed a {prefix:?} line within {READY_TIMEOUT:?}; \
+                     stderr:\n{err}"
+                );
+            }
+        }
+    }
+}
+
 /// One `sextans worker` child process, killed on drop so a failing test
 /// never leaks listeners.
 struct WorkerProc {
@@ -37,33 +93,22 @@ struct WorkerProc {
 
 impl WorkerProc {
     /// Spawn `sextans worker --addr 127.0.0.1:0 --backend <spec>` and
-    /// block until it prints its readiness line, returning the bound
-    /// address scraped from it.
+    /// block (bounded) until it prints its readiness line, returning the
+    /// bound address scraped from it.
     fn spawn(backend_spec: &str) -> WorkerProc {
         let mut child = Command::new(env!("CARGO_BIN_EXE_sextans"))
             .args(["worker", "--addr", "127.0.0.1:0", "--backend", backend_spec])
             .stdout(Stdio::piped())
-            .stderr(Stdio::null())
+            .stderr(Stdio::piped())
             .spawn()
             .expect("spawn sextans worker");
-        let stdout = child.stdout.take().expect("worker stdout is piped");
-        let mut lines = BufReader::new(stdout).lines();
-        let addr = loop {
-            let line = lines
-                .next()
-                .expect("worker exited before its readiness line")
-                .expect("read worker stdout");
-            if let Some(rest) = line.strip_prefix("worker listening on ") {
-                break rest
-                    .split_whitespace()
-                    .next()
-                    .expect("address token after 'listening on'")
-                    .to_string();
-            }
-        };
-        // Keep draining stdout so the worker can never block on a full
-        // pipe once the test stops reading.
+        let (addr, lines) = await_readiness(&mut child, "worker listening on ");
+        // Keep draining stdout and stderr so the worker can never block
+        // on a full pipe once the test stops reading.
         std::thread::spawn(move || for _line in lines {});
+        if let Some(stderr) = child.stderr.take() {
+            std::thread::spawn(move || for _line in BufReader::new(stderr).lines() {});
+        }
         WorkerProc { child, addr }
     }
 
@@ -180,7 +225,10 @@ fn remote_over_two_worker_processes_matches_functional_bit_for_bit() {
 fn killing_a_worker_mid_stream_replaces_the_shard_and_keeps_the_answer() {
     let mut survivor = WorkerProc::spawn("functional");
     let mut doomed = WorkerProc::spawn("functional");
-    let spec = format!("remote:{},{}", survivor.addr, doomed.addr);
+    // A long heartbeat keeps the background supervisor out of this test:
+    // the kill must be discovered by the execute itself (retry +
+    // re-place), not raced by a heartbeat-driven rebalance.
+    let spec = format!("remote:{},{},heartbeat_ms=60000", survivor.addr, doomed.addr);
 
     let mut rng = Rng::new(0xFA11);
     let coo = gen::random_uniform(64, 40, 0.2, &mut rng);
@@ -228,7 +276,9 @@ fn killing_a_worker_mid_stream_replaces_the_shard_and_keeps_the_answer() {
 fn replicated_placement_absorbs_a_kill_without_replacing() {
     let mut w1 = WorkerProc::spawn("functional");
     let mut w2 = WorkerProc::spawn("functional");
-    let spec = format!("remote:{},{},replicas=2", w1.addr, w2.addr);
+    // heartbeat_ms=60000: see the kill test above — the execute, not the
+    // background heartbeat, must absorb the kill deterministically.
+    let spec = format!("remote:{},{},replicas=2,heartbeat_ms=60000", w1.addr, w2.addr);
 
     let mut rng = Rng::new(0x2E91);
     let coo = gen::random_uniform(52, 36, 0.18, &mut rng);

@@ -68,7 +68,15 @@ fn server_survives_heterogeneous_load() {
         let mut want = c.clone();
         coo.spmm_reference(&b, &mut want, n, 1.0, 1.0);
         expected.push(want);
-        rxs.push(server.submit(SpmmRequest { image: h, b, c, n, alpha: 1.0, beta: 1.0 }));
+        rxs.push(server.submit(SpmmRequest {
+            image: h,
+            b,
+            c,
+            n,
+            alpha: 1.0,
+            beta: 1.0,
+            deadline: None,
+        }));
     }
     for (rx, want) in rxs.into_iter().zip(expected) {
         let resp = rx.recv().unwrap();

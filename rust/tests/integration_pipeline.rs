@@ -101,6 +101,7 @@ fn small_n_requests_execute_on_a_shard_subset() {
             n,
             alpha: 1.5,
             beta: -0.5,
+            deadline: None,
         });
         assert!(resp.error.is_none(), "{:?}", resp.error);
         // Same engine per shard, complete rows per shard: the routed
@@ -120,6 +121,7 @@ fn small_n_requests_execute_on_a_shard_subset() {
         n: n_wide,
         alpha: 1.5,
         beta: -0.5,
+        deadline: None,
     });
     assert!(resp.error.is_none());
 
@@ -157,6 +159,7 @@ fn routed_and_unrouted_paths_are_bit_identical() {
             n,
             alpha: 2.0,
             beta: 0.75,
+            deadline: None,
         });
         assert!(resp.error.is_none(), "{:?}", resp.error);
         let summary = server.shutdown();
@@ -207,6 +210,7 @@ fn skewed_workload_triggers_exactly_one_reshard() {
             n,
             alpha: 1.25,
             beta: 0.5,
+            deadline: None,
         });
         assert!(resp.error.is_none(), "{:?}", resp.error);
         assert_allclose(&resp.c, &want, 2e-4, 2e-4).unwrap();
@@ -249,6 +253,7 @@ fn stage_breakdown_decomposes_request_latency() {
             n,
             alpha: 1.0,
             beta: 0.0,
+            deadline: None,
         });
         assert!(resp.error.is_none());
         // The four stages decompose each request's end-to-end latency.
@@ -448,6 +453,7 @@ fn admission_backpressure_sheds_and_recovers() {
         n,
         alpha: 1.0,
         beta: 0.0,
+        deadline: None,
     });
     let err = resp.error.expect("a zero-depth gate rejects everything");
     assert!(err.contains("admission rejected"), "{err}");

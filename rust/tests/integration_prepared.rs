@@ -159,6 +159,7 @@ fn serving_e2e_prepared_cache_hit_rate_is_positive() {
             n,
             alpha: 1.5,
             beta: 0.5,
+            deadline: None,
         });
         assert!(resp.error.is_none(), "{:?}", resp.error);
         assert_allclose(&resp.c, &want, 2e-4, 2e-4).unwrap();

@@ -40,6 +40,58 @@ use sextans::telemetry::trace::{TelemetrySink, TraceCollector};
 
 const TIMEOUT: Duration = Duration::from_secs(20);
 
+/// Read the child's stdout until a line starting with `prefix` appears,
+/// bounded by [`TIMEOUT`]. On timeout or stdout EOF (the child died or
+/// never became ready) the child is killed and the test panics with
+/// whatever it wrote to stderr — a wedged spawn can never strand the
+/// suite in a silent infinite wait. Returns the first whitespace token
+/// after the prefix plus the live line channel (keep draining it so the
+/// child can never block on a full pipe).
+fn await_readiness(
+    child: &mut Child,
+    prefix: &str,
+) -> (String, std::sync::mpsc::Receiver<String>) {
+    let stdout = child.stdout.take().expect("child stdout is piped");
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        for line in BufReader::new(stdout).lines() {
+            let Ok(line) = line else { break };
+            if tx.send(line).is_err() {
+                break;
+            }
+        }
+    });
+    let deadline = Instant::now() + TIMEOUT;
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(left) {
+            Ok(line) => {
+                if let Some(rest) = line.strip_prefix(prefix) {
+                    let token = rest
+                        .split_whitespace()
+                        .next()
+                        .expect("token after the readiness prefix")
+                        .to_string();
+                    return (token, rx);
+                }
+            }
+            Err(_) => {
+                // Timeout, or the child exited before its readiness line.
+                let _ = child.kill();
+                let mut err = String::new();
+                if let Some(stderr) = child.stderr.take() {
+                    use std::io::Read;
+                    let _ = std::io::BufReader::new(stderr).read_to_string(&mut err);
+                }
+                let _ = child.wait();
+                panic!(
+                    "child never printed a {prefix:?} line within {TIMEOUT:?}; stderr:\n{err}"
+                );
+            }
+        }
+    }
+}
+
 /// Start an in-process front door on a free loopback port; returns the
 /// bound address and the join handle carrying the serving summary.
 fn start_door(config: FrontDoorConfig) -> (String, std::thread::JoinHandle<Summary>) {
@@ -66,27 +118,16 @@ impl ServeProc {
         let mut child = Command::new(env!("CARGO_BIN_EXE_sextans"))
             .args(&args)
             .stdout(Stdio::piped())
-            .stderr(Stdio::null())
+            .stderr(Stdio::piped())
             .spawn()
             .expect("spawn sextans serve");
-        let stdout = child.stdout.take().expect("serve stdout is piped");
-        let mut lines = BufReader::new(stdout).lines();
-        let addr = loop {
-            let line = lines
-                .next()
-                .expect("serve exited before its readiness line")
-                .expect("read serve stdout");
-            if let Some(rest) = line.strip_prefix("serve listening on ") {
-                break rest
-                    .split_whitespace()
-                    .next()
-                    .expect("address token after 'listening on'")
-                    .to_string();
-            }
-        };
-        // Keep draining stdout so the server can never block on a full
-        // pipe once the test stops reading.
+        let (addr, lines) = await_readiness(&mut child, "serve listening on ");
+        // Keep draining stdout and stderr so the server can never block
+        // on a full pipe once the test stops reading.
         std::thread::spawn(move || for _line in lines {});
+        if let Some(stderr) = child.stderr.take() {
+            std::thread::spawn(move || for _line in BufReader::new(stderr).lines() {});
+        }
         ServeProc { child, addr }
     }
 
@@ -247,7 +288,7 @@ fn hostile_submit_n_is_refused_without_allocating() {
     // the server tried to honor it, the allocation (tens of TiB) would
     // abort the process — the contract is a typed refusal instead.
     let mut s = TcpStream::connect(&addr).expect("connect raw");
-    wire::write_frame(&mut s, Op::Submit, &proto::encode_submit(info.id, 1 << 40, 1.0, 0.0))
+    wire::write_frame(&mut s, Op::Submit, &proto::encode_submit(info.id, 1 << 40, 1.0, 0.0, 0))
         .expect("hostile submit");
     let (op, payload) = wire::read_frame(&mut s).expect("refusal reply");
     assert_eq!(op, Op::Err, "hostile n must be refused, not served");
@@ -304,7 +345,7 @@ fn killing_a_client_mid_stream_leaves_the_server_serving() {
     let mut client = FrontClient::connect(&addr, TIMEOUT).expect("connect");
     let info = client.register_image(&image, 4096).expect("register");
     let mut s = TcpStream::connect(&addr).expect("connect");
-    wire::write_frame(&mut s, Op::Submit, &proto::encode_submit(info.id, n, 1.0, 0.0))
+    wire::write_frame(&mut s, Op::Submit, &proto::encode_submit(info.id, n, 1.0, 0.0, 0))
         .expect("submit");
     let (op, payload) = wire::read_frame(&mut s).expect("ticket reply");
     assert_eq!(op, Op::Ok);

@@ -132,6 +132,7 @@ fn coordinator_serves_sharded_backend_with_metrics() {
             n,
             alpha: 1.25,
             beta: -0.75,
+            deadline: None,
         }));
     }
     for (rx, want) in rxs.into_iter().zip(wants) {

@@ -79,6 +79,7 @@ fn span_tree_reconciles_with_request_timing() {
             n,
             alpha: 1.0,
             beta: 0.5,
+            deadline: None,
         });
         assert!(resp.error.is_none(), "{:?}", resp.error);
         timings.push(resp.timing);
@@ -162,6 +163,7 @@ fn rejected_requests_trace_as_a_lone_admission_span() {
         n,
         alpha: 1.0,
         beta: 0.0,
+        deadline: None,
     });
     assert!(resp.error.is_some(), "zero-depth gate must reject");
     server.shutdown();
@@ -198,6 +200,7 @@ fn metrics_summary_json_carries_stage_percentiles() {
             n,
             alpha: 1.0,
             beta: 0.0,
+            deadline: None,
         });
         assert!(resp.error.is_none());
     }
